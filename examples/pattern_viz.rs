@@ -1,0 +1,145 @@
+//! Figure 1 + Figure 3 regenerator: train the dense phase for a few steps
+//! on real task data, pull the per-layer head-averaged attention score
+//! matrices A^s out of the training artifact, and render (a) the score
+//! heatmaps and (b) the patterns each SPION variant extracts from them.
+//!
+//! Run: `cargo run --release --example pattern_viz -- --preset tiny --steps 15`
+
+use anyhow::Result;
+use spion::config::types::{default_block, preset};
+use spion::coordinator::trainer::split_scores;
+use spion::data::{batcher::Batcher, make_task};
+use spion::pattern::spion::PatternConfig;
+use spion::pattern::{generate_pattern, SpionVariant};
+use spion::runtime::executor::lit;
+use spion::runtime::{ArtifactSet, Runtime};
+use spion::tensor::Mat;
+use spion::util::cli::Args;
+
+/// ASCII heatmap of a (downsampled) matrix: ' ' (low) → '█' (high).
+fn heatmap(m: &Mat, target: usize) -> String {
+    let ramp: Vec<char> = " .:-=+*#%@█".chars().collect();
+    let step = (m.rows / target).max(1);
+    let cells = m.rows / step;
+    // Downsample by block mean.
+    let mut vals = vec![0.0f32; cells * cells];
+    for i in 0..cells {
+        for j in 0..cells {
+            let mut s = 0.0;
+            for di in 0..step {
+                for dj in 0..step {
+                    s += m.at(i * step + di, j * step + dj);
+                }
+            }
+            vals[i * cells + j] = s / (step * step) as f32;
+        }
+    }
+    let max = vals.iter().cloned().fold(f32::MIN, f32::max).max(1e-9);
+    let mut out = String::new();
+    for i in 0..cells {
+        for j in 0..cells {
+            let t = (vals[i * cells + j] / max * (ramp.len() - 1) as f32) as usize;
+            out.push(ramp[t.min(ramp.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.help_if_requested(
+        "Render per-layer A^s heatmaps (Fig. 1) and SPION patterns (Fig. 3)",
+        &[
+            ("preset <name>", "model preset (default tiny)"),
+            ("steps <n>", "dense warmup steps (default 15)"),
+            ("alpha <f>", "pattern threshold quantile (default 0.9)"),
+            ("out <dir>", "output dir (default results/pattern_viz)"),
+        ],
+    );
+    let preset_name = args.str_or("preset", "tiny");
+    let steps = args.usize_or("steps", 15);
+    let alpha = args.f64_or("alpha", 0.9);
+    let out_dir = args.str_or("out", "results/pattern_viz");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let (task, model) = preset(&preset_name).expect("unknown preset");
+    let rt = Runtime::cpu()?;
+    let artifacts = ArtifactSet::open("artifacts", &preset_name)?;
+    let m = &artifacts.manifest;
+    let init = rt.load(&artifacts.path("init"))?;
+    let dense_step = rt.load(&artifacts.path("dense_step"))?;
+
+    // Dense warmup on real task data, keeping the last scores.
+    let mut params = init.run(&[lit::scalar_u32(42)])?;
+    let zeros: Vec<xla::Literal> = m
+        .params
+        .iter()
+        .map(|p| {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            lit::f32_vec(&vec![0.0; p.elements()], &dims).unwrap()
+        })
+        .collect();
+    let (mut adam_m, mut adam_v) = (zeros.clone(), zeros);
+    let mut batcher = Batcher::new(make_task(task, m.seq_len, m.vocab, m.classes), m.batch, 1);
+    let mut scores = Vec::new();
+    for step in 0..steps {
+        let batch = batcher.next_batch();
+        let mut inputs = Vec::new();
+        inputs.extend(params.iter().cloned());
+        inputs.extend(adam_m.iter().cloned());
+        inputs.extend(adam_v.iter().cloned());
+        inputs.push(lit::i32_vec(&batch.x, &[m.batch as i64, m.seq_len as i64])?);
+        inputs.push(lit::i32_vec(&batch.y, &[m.batch as i64])?);
+        inputs.push(lit::scalar_i32(step as i32 + 1));
+        inputs.push(lit::scalar_f32(1e-3));
+        let mut out = dense_step.run(&inputs)?;
+        let p = m.param_count();
+        let scores_lit = out.pop().unwrap();
+        let _acc = out.pop();
+        let loss = lit::scalar_to_f32(&out.pop().unwrap())?;
+        adam_v = out.split_off(2 * p);
+        adam_m = out.split_off(p);
+        params = out;
+        if step + 1 == steps {
+            scores = split_scores(&scores_lit, m.layers, m.seq_len)?;
+        }
+        if step % 5 == 0 {
+            println!("warmup step {step}: loss {loss:.4}");
+        }
+    }
+
+    // Fig. 1: per-layer A^s heatmaps.
+    let block = default_block(&model);
+    for (n, a_s) in scores.iter().enumerate() {
+        println!("\n=== layer {n}: head-averaged A^s (downsampled) ===");
+        let hm = heatmap(a_s, 32);
+        println!("{hm}");
+        std::fs::write(format!("{out_dir}/{preset_name}_l{n}_scores.txt"), hm)?;
+        // Full-resolution grayscale image of A^s (the actual Fig. 1 artifact).
+        spion::util::pgm::save_pgm(a_s, &format!("{out_dir}/{preset_name}_l{n}_scores.pgm"))?;
+
+        // Fig. 3: patterns per variant.
+        for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+            let cfg = PatternConfig { variant, block, filter: 7, alpha };
+            let mask = generate_pattern(a_s, &cfg);
+            println!(
+                "layer {n} {}: density {:.3} ({}/{} blocks)",
+                variant.name(),
+                mask.density(),
+                mask.nnz_blocks(),
+                mask.lb * mask.lb
+            );
+            let render = mask.render();
+            if variant == SpionVariant::CF {
+                println!("{render}");
+            }
+            std::fs::write(
+                format!("{out_dir}/{preset_name}_l{n}_{}.txt", variant.name().to_lowercase()),
+                render,
+            )?;
+        }
+    }
+    println!("wrote renders to {out_dir}/");
+    Ok(())
+}

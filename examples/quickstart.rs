@@ -1,0 +1,73 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. Load the AOT artifacts for the `tiny` preset (build with
+//!    `make artifacts`).
+//! 2. Initialize parameters on the PJRT CPU client.
+//! 3. Run one dense forward pass.
+//! 4. Generate a SPION-CF sparsity pattern from synthetic attention scores
+//!    and run the same batch through the sparse forward artifact.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use spion::config::types::preset;
+use spion::coordinator::trainer::{generate_masks_for, masks_to_literal};
+use spion::config::types::SparsityConfig;
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::data::{batcher::Batcher, make_task};
+use spion::pattern::SpionVariant;
+use spion::runtime::executor::lit;
+use spion::runtime::Runtime;
+use spion::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let (task, model) = preset("tiny").expect("tiny preset");
+    let exp = ExperimentConfig {
+        task,
+        model: model.clone(),
+        train: TrainConfig::default(),
+        // Block size must match the artifact-baked mask shape (manifest
+        // `pattern_block`); `for_model` mirrors the AOT side.
+        sparsity: SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model),
+        artifacts_dir: "artifacts".into(),
+    };
+
+    // --- runtime + artifacts ---
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let artifacts = spion::runtime::ArtifactSet::open("artifacts", "tiny")?;
+    artifacts.manifest.check_against(&model)?;
+    let init = rt.load(&artifacts.path("init"))?;
+    let dense_fwd = rt.load(&artifacts.path("dense_fwd"))?;
+    let sparse_fwd = rt.load(&artifacts.path("sparse_fwd"))?;
+
+    // --- params + one batch ---
+    let params = init.run(&[lit::scalar_u32(42)])?;
+    println!("initialized {} parameter tensors", params.len());
+    let mut batcher = Batcher::new(make_task(task, model.seq_len, model.vocab, model.classes), model.batch, 0);
+    let batch = batcher.next_batch();
+    let x = lit::i32_vec(&batch.x, &[model.batch as i64, model.seq_len as i64])?;
+
+    // --- dense forward ---
+    let mut inputs = params.clone();
+    inputs.push(x.clone());
+    let logits = lit::to_f32_vec(&dense_fwd.run(&inputs)?[0])?;
+    println!("dense logits[0]  = {:?}", &logits[..model.classes]);
+
+    // --- SPION-CF pattern + sparse forward ---
+    let mut rng = Rng::new(7);
+    let scores: Vec<_> = (0..model.layers)
+        .map(|_| spion::pattern::spion::synth_attention_scores(model.seq_len, 1.0, 0.2, &[40], 0.05, &mut rng))
+        .collect();
+    let masks = generate_masks_for(&exp, &scores)?;
+    for (n, m) in masks.iter().enumerate() {
+        println!("layer {n}: pattern density {:.3} ({} of {} blocks)", m.density(), m.nnz_blocks(), m.lb * m.lb);
+    }
+    let mut inputs = params;
+    inputs.push(x);
+    inputs.push(masks_to_literal(&masks, model.layers, masks[0].lb)?);
+    let slogits = lit::to_f32_vec(&sparse_fwd.run(&inputs)?[0])?;
+    println!("sparse logits[0] = {:?}", &slogits[..model.classes]);
+    println!("quickstart OK");
+    Ok(())
+}

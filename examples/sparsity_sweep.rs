@@ -1,0 +1,83 @@
+//! Figure 7 regenerator (accuracy axis): SPION-C training across sparsity
+//! ratios on the ListOps task — training time per step vs final quality.
+//! (The pure-timing axis is `cargo bench --bench fig7_sparsity_sweep`;
+//! this example produces the accuracy trade-off, which needs real runs.)
+//!
+//! Run: `cargo run --release --example sparsity_sweep -- --preset tiny \
+//!        --steps 120 --ratios 0.70,0.80,0.90,0.96,0.99`
+
+use anyhow::Result;
+use spion::config::types::{preset, SparsityConfig};
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::coordinator::Trainer;
+use spion::metrics::Phase;
+use spion::pattern::SpionVariant;
+use spion::runtime::Runtime;
+use spion::util::bench::Report;
+use spion::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.help_if_requested(
+        "Fig. 7: sparsity-ratio sweep for SPION-C (training time + accuracy)",
+        &[
+            ("preset <name>", "model preset (default tiny)"),
+            ("steps <n>", "steps per ratio (default 120)"),
+            ("ratios <csv>", "sparsity ratios (default 0.70,0.80,0.90,0.96,0.99)"),
+            ("out <path>", "CSV output (default results/fig7_accuracy.csv)"),
+        ],
+    );
+    let preset_name = args.str_or("preset", "tiny");
+    let (task, model) = preset(&preset_name).expect("unknown preset");
+    let steps = args.usize_or("steps", 120);
+    let ratios: Vec<f64> = args
+        .str_or("ratios", "0.70,0.80,0.90,0.96,0.99")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad ratio"))
+        .collect();
+
+    let rt = Runtime::cpu()?;
+    let mut report = Report::new(
+        &format!("Fig. 7 — SPION-C sparsity sweep ({preset_name}, {steps} steps)"),
+        &["sparsity ratio", "pattern density", "sparse step (ms)", "final loss", "eval acc"],
+    );
+
+    for &ratio in &ratios {
+        let mut train = TrainConfig::default();
+        train.steps = steps;
+        train.max_dense_steps = 30;
+        train.min_dense_steps = 10;
+        let exp = ExperimentConfig {
+            task,
+            model: model.clone(),
+            train,
+            sparsity: {
+                let mut s =
+                    SparsityConfig::for_model(PatternKind::Spion(SpionVariant::C), task, &model);
+                s.pattern.alpha = ratio;
+                s
+            },
+            artifacts_dir: args.str_or("artifacts", "artifacts"),
+        };
+        let trainer = Trainer::new(&rt, exp)?;
+        let outcome = trainer.run()?;
+        let m = &outcome.metrics;
+        let density =
+            m.pattern_density.iter().sum::<f64>() / m.pattern_density.len().max(1) as f64;
+        println!(
+            "ratio {ratio:.2}: density {density:.3}, final loss {:.4}, eval acc {:.4}",
+            m.final_loss().unwrap_or(f32::NAN),
+            m.eval_accuracy.unwrap_or(f64::NAN)
+        );
+        report.row(vec![
+            format!("{:.0}%", ratio * 100.0),
+            format!("{density:.3}"),
+            format!("{:.1}", m.mean_step_ms(Phase::Sparse).unwrap_or(f64::NAN)),
+            format!("{:.4}", m.final_loss().unwrap_or(f32::NAN)),
+            format!("{:.4}", m.eval_accuracy.unwrap_or(f64::NAN)),
+        ]);
+    }
+    report.print();
+    report.save_csv(&args.str_or("out", "results/fig7_accuracy.csv"));
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end driver (the DESIGN.md §6 validation run): full three-phase
+//! SPION training on a real synthetic workload through the AOT/PJRT stack,
+//! logging the loss curve and recording the run for EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example train_e2e -- --preset listops \
+//!        --kind cf --steps 300 --out results/train_e2e`
+//!
+//! The dense phase runs until the Frobenius criterion (Eq. 2) fires, the
+//! per-layer patterns are generated with the convolutional flood fill, and
+//! the sparse phase continues to the step budget. Output: metrics CSV,
+//! pattern renders, a checkpoint, and a summary JSON.
+
+use anyhow::Result;
+use spion::config::types::{preset, SparsityConfig};
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::coordinator::Trainer;
+use spion::runtime::Runtime;
+use spion::util::cli::Args;
+use spion::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.help_if_requested(
+        "End-to-end three-phase SPION training",
+        &[
+            ("preset <name>", "model preset (tiny|image|listops|retrieval)"),
+            ("kind <k>", "dense|bigbird|reformer|c|f|cf (default cf)"),
+            ("steps <n>", "total training steps (default 300)"),
+            ("lr <f>", "Adam learning rate (default 1e-3)"),
+            ("seed <n>", "run seed (default 42)"),
+            ("out <dir>", "output directory (default results/train_e2e)"),
+        ],
+    );
+    let preset_name = args.str_or("preset", "listops");
+    let (task, model) = preset(&preset_name).expect("unknown preset");
+    let kind = PatternKind::parse(&args.str_or("kind", "cf")).expect("bad --kind");
+    let mut train = TrainConfig::default();
+    train.steps = args.usize_or("steps", 300);
+    train.lr = args.f64_or("lr", 1e-3);
+    train.seed = args.u64_or("seed", 42);
+    train.max_dense_steps = args.usize_or("max-dense-steps", 60);
+    let mut sparsity = SparsityConfig::for_model(kind, task, &model);
+    sparsity.pattern.block = args.usize_or("block", sparsity.pattern.block);
+    sparsity.pattern.alpha = args.f64_or("alpha", sparsity.pattern.alpha);
+    sparsity.pattern.filter = args.usize_or("filter", sparsity.pattern.filter);
+    let exp = ExperimentConfig {
+        task,
+        model: model.clone(),
+        train,
+        sparsity,
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+    };
+    let out_dir = args.str_or("out", "results/train_e2e");
+    std::fs::create_dir_all(&out_dir)?;
+
+    println!(
+        "== train_e2e: preset={} kind={} steps={} L={} D={} H={} N={} batch={} ==",
+        model.preset,
+        exp.sparsity.kind.name(),
+        exp.train.steps,
+        model.seq_len,
+        model.d_model,
+        model.heads,
+        model.layers,
+        model.batch
+    );
+
+    let rt = Runtime::cpu()?;
+    let trainer = Trainer::new(&rt, exp)?.verbose(true);
+    let t0 = std::time::Instant::now();
+    let outcome = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- outputs ---
+    let kind_tag = trainer.exp.sparsity.kind.name().to_lowercase().replace('-', "_");
+    let csv_path = format!("{out_dir}/{}_{kind_tag}_loss.csv", model.preset);
+    outcome.metrics.save(&csv_path)?;
+    if let Some(masks) = &outcome.masks {
+        for (n, m) in masks.iter().enumerate() {
+            std::fs::write(format!("{out_dir}/{}_{kind_tag}_pattern_l{n}.txt", model.preset), m.render())?;
+        }
+    }
+    let ck_path = format!("{out_dir}/{}_{kind_tag}.ckpt", model.preset);
+    trainer.save_checkpoint(&outcome, &ck_path)?;
+
+    let m = &outcome.metrics;
+    let summary = Json::obj(vec![
+        ("preset", Json::Str(model.preset.clone())),
+        ("kind", Json::Str(trainer.exp.sparsity.kind.name().into())),
+        ("steps", Json::Num(trainer.exp.train.steps as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("transition_step", m.transition_step.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
+        ("pattern_density", Json::arr_f64(&m.pattern_density)),
+        ("first_loss", Json::Num(m.records.first().map(|r| r.loss as f64).unwrap_or(f64::NAN))),
+        ("final_loss", Json::Num(m.final_loss().unwrap_or(f32::NAN) as f64)),
+        ("eval_accuracy", Json::Num(m.eval_accuracy.unwrap_or(f64::NAN))),
+        (
+            "dense_step_ms",
+            m.mean_step_ms(spion::metrics::Phase::Dense).map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "sparse_step_ms",
+            m.mean_step_ms(spion::metrics::Phase::Sparse).map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ]);
+    let summary_path = format!("{out_dir}/{}_{kind_tag}_summary.json", model.preset);
+    std::fs::write(&summary_path, summary.to_string_pretty())?;
+
+    println!("\n== summary ==");
+    println!("{}", summary.to_string_pretty());
+    println!("\nloss curve  → {csv_path}");
+    println!("checkpoint  → {ck_path}");
+    println!("summary     → {summary_path}");
+    Ok(())
+}

@@ -1,0 +1,231 @@
+"""AOT pass: lower the L2 model (with the L1 Pallas kernel inside) to HLO
+TEXT artifacts the rust runtime loads via `HloModuleProto::from_text_file`.
+
+HLO *text*, not `.serialize()`: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per preset `<p>` this writes
+    artifacts/<p>/init.hlo.txt          (seed:u32[]) → params
+    artifacts/<p>/dense_step.hlo.txt    params,m,v,x,y,step,lr → …,loss,acc,scores
+    artifacts/<p>/sparse_step.hlo.txt   … + masks → …,loss,acc
+    artifacts/<p>/dense_fwd.hlo.txt     params,x → logits
+    artifacts/<p>/sparse_fwd.hlo.txt    params,x,masks → logits
+    artifacts/<p>/manifest.json         shapes + input/output orders (the ABI)
+and once globally
+    artifacts/golden/pattern_golden.json    python↔rust pattern parity cases
+    artifacts/golden/attention_golden.json  sparse-MHA engine parity cases
+
+Usage: python -m compile.aot [--out DIR] [--presets a,b,c] [--force]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, pattern_ref
+from .kernels import ref as kref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _example_args(cfg: configs.ModelConfig):
+    p = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in configs.param_specs(cfg)]
+    m = list(p)
+    v = list(p)
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    y = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    masks = jax.ShapeDtypeStruct((cfg.layers, cfg.lb, cfg.lb), jnp.float32)
+    return p, m, v, x, y, step, lr, masks
+
+
+def manifest(cfg: configs.ModelConfig) -> dict:
+    specs = configs.param_specs(cfg)
+    return {
+        "preset": cfg.preset,
+        "task": cfg.task,
+        "seq_len": cfg.seq_len,
+        "d_model": cfg.d_model,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "ffn_dim": cfg.ffn_dim,
+        "vocab": cfg.vocab,
+        "classes": cfg.classes,
+        "batch": cfg.batch,
+        "pattern_block": cfg.pattern_block(),
+        "lb": cfg.lb,
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "io": {
+            "init": {"inputs": ["seed:u32[]"], "outputs": ["params*"]},
+            "dense_step": {
+                "inputs": ["params*", "m*", "v*", "x:i32[batch,L]", "y:i32[batch]", "step:i32[]", "lr:f32[]"],
+                "outputs": ["params*", "m*", "v*", "loss:f32[]", "acc:f32[]", "scores:f32[layers,L,L]"],
+            },
+            "sparse_step": {
+                "inputs": [
+                    "params*", "m*", "v*", "x:i32[batch,L]", "y:i32[batch]",
+                    "step:i32[]", "lr:f32[]", "masks:f32[layers,lb,lb]",
+                ],
+                "outputs": ["params*", "m*", "v*", "loss:f32[]", "acc:f32[]"],
+            },
+            "dense_fwd": {"inputs": ["params*", "x:i32[batch,L]"], "outputs": ["logits:f32[batch,classes]"]},
+            "sparse_fwd": {
+                "inputs": ["params*", "x:i32[batch,L]", "masks:f32[layers,lb,lb]"],
+                "outputs": ["logits:f32[batch,classes]"],
+            },
+        },
+    }
+
+
+def emit_preset(cfg: configs.ModelConfig, out_dir: str, force: bool) -> None:
+    pdir = os.path.join(out_dir, cfg.preset)
+    os.makedirs(pdir, exist_ok=True)
+    fns = model.jitted(cfg)
+    p, m, v, x, y, step, lr, masks = _example_args(cfg)
+    plans = {
+        "init": (fns["init"], (jax.ShapeDtypeStruct((), jnp.uint32),)),
+        "dense_step": (fns["dense_step"], (p, m, v, x, y, step, lr)),
+        "sparse_step": (fns["sparse_step"], (p, m, v, x, y, step, lr, masks)),
+        "dense_fwd": (fns["dense_fwd"], (p, x)),
+        "sparse_fwd": (fns["sparse_fwd"], (p, x, masks)),
+    }
+    for name, (fn, args) in plans.items():
+        path = os.path.join(pdir, f"{name}.hlo.txt")
+        if os.path.exists(path) and not force:
+            print(f"[aot] keep {path}")
+            continue
+        text = to_hlo_text(fn.lower(*args))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {path} ({len(text) / 1e6:.2f} MB)")
+    mpath = os.path.join(pdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(cfg), f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath}")
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (python ↔ rust parity)
+# ---------------------------------------------------------------------------
+
+
+def pattern_golden_cases() -> dict:
+    cases = []
+    specs = [
+        # (l, block, filt, alpha, variant, shape args)
+        (64, 8, 5, 0.90, "CF", dict(diag=1.0, vert=0.0, cols=[], noise=0.05, seed=11)),
+        (64, 8, 5, 0.90, "C", dict(diag=1.0, vert=0.0, cols=[], noise=0.05, seed=12)),
+        (64, 8, 1, 0.85, "F", dict(diag=0.3, vert=1.0, cols=[17, 18], noise=0.02, seed=13)),
+        (128, 16, 7, 0.95, "CF", dict(diag=0.8, vert=0.6, cols=[40], noise=0.05, seed=14)),
+        (96, 8, 31, 0.92, "CF", dict(diag=0.5, vert=0.0, cols=[5], noise=0.10, seed=15)),
+    ]
+    for l, block, filt, alpha, variant, s in specs:
+        a = pattern_ref.synth_scores(l, s["diag"], s["vert"], s["cols"], s["noise"], s["seed"])
+        conv = a if variant == "F" else pattern_ref.conv_diag(a, pattern_ref.diagonal_filter(filt))
+        pool = pattern_ref.avg_pool(conv, block)
+        t = pattern_ref.quantile(pool, alpha)
+        mask = pattern_ref.generate_pattern(a, variant, block, filt, alpha)
+        fl_from_pool = (
+            pattern_ref.flood_fill_all(pool, t) if variant in ("F", "CF") else None
+        )
+        cases.append(
+            {
+                "l": l,
+                "block": block,
+                "filter": filt,
+                "alpha": alpha,
+                "variant": variant,
+                "scores": [round(float(x), 8) for x in a.ravel()],
+                "conv_out": [round(float(x), 8) for x in conv.ravel()],
+                "pool_out": [round(float(x), 8) for x in pool.ravel()],
+                "threshold": float(t),
+                "mask": [int(x) for x in mask.ravel()],
+                "flood_from_pool": None
+                if fl_from_pool is None
+                else [int(x) for x in fl_from_pool.ravel()],
+            }
+        )
+    return {"cases": cases}
+
+
+def attention_golden_cases() -> dict:
+    cases = []
+    rng = np.random.default_rng(7)
+    for (l, dh, block, keep) in [(32, 8, 8, 0.5), (64, 16, 16, 0.2), (48, 4, 8, 1.0)]:
+        lb = l // block
+        q = rng.standard_normal((l, dh), dtype=np.float32)
+        k = rng.standard_normal((l, dh), dtype=np.float32)
+        v = rng.standard_normal((l, dh), dtype=np.float32)
+        bm = (rng.random((lb, lb)) < keep).astype(np.float32)
+        np.fill_diagonal(bm, 1.0)
+        scale = 1.0 / np.sqrt(dh)
+        p = np.asarray(kref.upsample_mask(jnp.asarray(bm), block))
+        out, s = kref.sparse_attention_scores_ref(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(p), scale
+        )
+        dense_out, _ = kref.dense_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), scale)
+        cases.append(
+            {
+                "l": l,
+                "dh": dh,
+                "block": block,
+                "scale": float(scale),
+                "q": q.ravel().tolist(),
+                "k": k.ravel().tolist(),
+                "v": v.ravel().tolist(),
+                "block_mask": bm.astype(int).ravel().tolist(),
+                "out": np.asarray(out).ravel().tolist(),
+                "s_sparse": np.asarray(s).ravel().tolist(),
+                "dense_out": np.asarray(dense_out).ravel().tolist(),
+            }
+        )
+    return {"cases": cases}
+
+
+def emit_golden(out_dir: str) -> None:
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    for name, payload in [
+        ("pattern_golden.json", pattern_golden_cases()),
+        ("attention_golden.json", attention_golden_cases()),
+    ]:
+        path = os.path.join(gdir, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        print(f"[aot] wrote {path}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(configs.DEFAULT_PRESETS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.presets.split(",") if n.strip()]
+    for name in names:
+        cfg = configs.BY_NAME.get(name)
+        if cfg is None:
+            print(f"[aot] unknown preset {name!r}", file=sys.stderr)
+            return 1
+        emit_preset(cfg, args.out, args.force)
+    emit_golden(args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Model/task presets — MUST mirror `rust/src/config/types.rs::presets()`.
+
+The AOT pass bakes these shapes into the HLO artifacts; the rust launcher
+looks artifacts up by preset name and checks the manifest against its own
+copy of the preset table (rust/tests/artifact_manifest.rs).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    preset: str
+    task: str
+    seq_len: int
+    d_model: int
+    heads: int
+    layers: int
+    ffn_dim: int
+    vocab: int
+    classes: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+    def pattern_block(self) -> int:
+        """Default pattern block size (mirrors config::types::default_block)."""
+        return max(8, min(64, self.seq_len // 16))
+
+    @property
+    def lb(self) -> int:
+        b = self.pattern_block()
+        assert self.seq_len % b == 0
+        return self.seq_len // b
+
+
+PRESETS = [
+    ModelConfig("tiny", "listops", 128, 32, 2, 2, 64, 20, 10, 8),
+    ModelConfig("image", "image", 256, 64, 2, 2, 128, 256, 10, 16),
+    ModelConfig("listops", "listops", 256, 64, 2, 2, 128, 20, 10, 16),
+    ModelConfig("retrieval", "retrieval", 512, 64, 2, 2, 128, 64, 2, 8),
+    ModelConfig("image-paper", "image", 1024, 64, 2, 4, 128, 256, 10, 4),
+    ModelConfig("listops-paper", "listops", 2048, 64, 2, 4, 128, 20, 10, 2),
+    ModelConfig("retrieval-paper", "retrieval", 4096, 64, 2, 4, 128, 64, 2, 1),
+]
+
+BY_NAME = {c.preset: c for c in PRESETS}
+
+#: presets compiled by default (`make artifacts`); the -paper shapes are
+#: compile-heavy and built on demand (`make artifacts-paper`).
+DEFAULT_PRESETS = ["tiny", "image", "listops", "retrieval"]
+
+
+def param_specs(cfg: ModelConfig):
+    """Flat parameter layout: [(name, shape), …] — the single source of truth
+    for both the python model and the rust checkpoint format."""
+    d, f = cfg.d_model, cfg.ffn_dim
+    specs = [("embed", (cfg.vocab, d)), ("pos", (cfg.seq_len, d))]
+    for n in range(cfg.layers):
+        specs += [
+            (f"l{n}.ln1_g", (d,)),
+            (f"l{n}.ln1_b", (d,)),
+            (f"l{n}.wq", (d, d)),
+            (f"l{n}.wk", (d, d)),
+            (f"l{n}.wv", (d, d)),
+            (f"l{n}.wo", (d, d)),
+            (f"l{n}.ln2_g", (d,)),
+            (f"l{n}.ln2_b", (d,)),
+            (f"l{n}.wf", (d, f)),
+            (f"l{n}.bf", (f,)),
+            (f"l{n}.we", (f, d)),
+            (f"l{n}.be", (d,)),
+        ]
+    specs += [("cls_w", (d, cfg.classes)), ("cls_b", (cfg.classes,))]
+    return specs

@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracle for the SPION block-sparse attention.
+
+Semantics (paper Eq. 5 + Algorithm 6): pruned logits are imputed as ZERO in
+the softmax denominator (not -inf) — Algorithm 6 line 15 adds
+``exp(0 - max) * (L - b_cnt)`` — and pruned positions carry no output mass.
+The dense-equivalent closed form is
+
+    S^s = softmax((Q Kᵀ · scale) ⊙ P) ⊙ P
+    out = S^s V
+
+which is what this oracle computes. Both the Pallas kernel
+(`spion_attention.py`) and the rust block-CSR engine are validated against
+this module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def upsample_mask(block_mask, block: int):
+    """Nearest-neighbor upsample of an (LB, LB) 0/1 block mask to (L, L)."""
+    m = jnp.repeat(block_mask, block, axis=0)
+    return jnp.repeat(m, block, axis=1)
+
+
+def sparse_attention_ref(q, k, v, p, scale):
+    """Single-head reference.
+
+    q, k, v: (L, dh); p: (L, L) 0/1 mask; returns (L, dh).
+    """
+    logits = (q @ k.T) * scale
+    masked = logits * p  # pruned → exactly 0 (paper semantics, NOT -inf)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    s = (e / denom) * p  # pruned positions carry no output mass
+    return s @ v
+
+
+def sparse_attention_scores_ref(q, k, v, p, scale):
+    """Reference that also returns S^s (for engine-level golden vectors)."""
+    logits = (q @ k.T) * scale
+    masked = logits * p
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    s = (e / denom) * p
+    return s @ v, s
+
+
+def dense_attention_ref(q, k, v, scale):
+    """Dense single-head reference (Algorithm 1 lines 6–8).
+
+    Returns (out, scores)."""
+    logits = (q @ k.T) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = e / jnp.sum(e, axis=-1, keepdims=True)
+    return s @ v, s
+
+
+def mha_sparse_ref(q, k, v, block_mask, block, scale):
+    """Multi-head batched reference. q,k,v: (BH, L, dh); block_mask (LB,LB)."""
+    p = upsample_mask(block_mask, block)
+    return jax.vmap(lambda qq, kk, vv: sparse_attention_ref(qq, kk, vv, p, scale))(q, k, v)

@@ -1,0 +1,151 @@
+"""L1 — Pallas block-sparse attention kernel (SDDMM → sparse-softmax → SpMM
+fused, flash-attention style) with the paper's implicit-zero softmax.
+
+TPU mapping of the paper's CUDA kernels (DESIGN.md §Hardware-Adaptation):
+
+* CUDA threadblock-per-row + warp reductions (Alg. 6)  →  Pallas grid over
+  (batch·head, row-block); each program owns a (B × dh) Q tile in VMEM and
+  streams K/V column-blocks through VMEM, carrying a running (max, denom,
+  acc) — the row-wise max/sum reductions are vectorized over the tile
+  instead of warp-shuffled.
+* cuSPARSE SDDMM block skip  →  the block-level mask row weights each
+  column block; on real TPU the loop body would sit under `@pl.when(mj > 0)`
+  to skip the DMA + MXU work entirely. Under `interpret=True` (the only
+  mode the CPU PJRT plugin can execute) both sides of the predicate are
+  evaluated, so we fold the mask in arithmetically — identical numerics,
+  and the *structural* op saving is measured in the rust engine instead.
+* Alg. 6 line 15 (`sum += exp(-max)·(L - b_cnt)`)  →  the `n_pruned`
+  correction applied after the streaming pass.
+
+The kernel MUST be lowered with interpret=True for CPU-PJRT execution —
+real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _row_block_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, block, lb, scale):
+    """One (batch·head, row-block) program.
+
+    q_ref: (1, block, dh) VMEM tile; k_ref/v_ref: (1, L, dh); m_ref: (1, lb)
+    block-mask row; o_ref: (1, block, dh).
+    """
+    q = q_ref[0]  # (block, dh)
+    k = k_ref[0]  # (L, dh)
+    v = v_ref[0]  # (L, dh)
+    mask_row = m_ref[0]  # (lb,)
+    dh = q.shape[-1]
+
+    def body(j, carry):
+        m_run, l_run, acc, n_pruned = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block, block, axis=0)  # (block, dh)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block, block, axis=0)
+        w = mask_row[j]  # 0.0 or 1.0
+        s = (q @ kj.T) * scale  # (block, block) logits
+        # Active block: include logits in the running softmax.
+        # Pruned block: contributes only to the pruned-entry count.
+        blk_max = jnp.where(w > 0, jnp.max(s, axis=-1, keepdims=True), -jnp.inf)
+        m_new = jnp.maximum(m_run, blk_max)
+        # Rescale previous accumulators to the new max. Guard the -inf − -inf
+        # (no active block seen yet) and exp(s − -inf) (pruned block) cases —
+        # the accumulators are all zero there, so 0 is the correct factor.
+        corr = jnp.where(jnp.isfinite(m_new), jnp.exp(m_run - m_new), 0.0)
+        p = jnp.where(
+            jnp.isfinite(m_new) & (w > 0), jnp.exp(s - m_new), 0.0
+        )  # (block, block); 0 where pruned
+        l_new = l_run * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + p @ vj
+        n_new = n_pruned + (1.0 - w) * block
+        return m_new, l_new, acc_new, n_new
+
+    m0 = jnp.full((block, 1), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block, 1), dtype=jnp.float32)
+    a0 = jnp.zeros((block, dh), dtype=jnp.float32)
+    m_run, l_run, acc, n_pruned = jax.lax.fori_loop(0, lb, body, (m0, l0, a0, 0.0))
+
+    # Implicit-zero correction (Alg. 6 line 15): pruned logits are 0, so the
+    # true row max is max(m_run, 0) whenever any entry was pruned, and the
+    # denominator gains n_pruned · exp(0 − max).
+    has_pruned = n_pruned > 0
+    m_fin = jnp.where(has_pruned, jnp.maximum(m_run, 0.0), m_run)
+    corr = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_fin), 0.0)
+    l_fin = l_run * corr + n_pruned * jnp.exp(-m_fin)
+    acc_fin = acc * corr
+    o_ref[0] = acc_fin / l_fin
+
+
+@functools.partial(jax.jit, static_argnames=("block", "scale"))
+def _pallas_fwd(q, k, v, block_mask, *, block, scale):
+    """q, k, v: (BH, L, dh) f32; block_mask: (LB, LB) f32 0/1."""
+    bh, l, dh = q.shape
+    lb = l // block
+    kernel = functools.partial(_row_block_kernel, block=block, lb=lb, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, lb),
+        in_specs=[
+            pl.BlockSpec((1, block, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, l, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, l, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, lb), lambda b, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, dh), jnp.float32),
+        interpret=True,  # CPU-PJRT requirement; see module docstring
+    )(q, k, v, block_mask)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward + hand-derived jnp backward.
+# Pallas kernels have no automatic transpose rule; the VJP of the masked
+# softmax-attention is derived below (standard attention backward with the
+# mask folded into both the logits and the probability matrix).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def block_sparse_attention(q, k, v, block_mask, block, scale):
+    """Differentiable SPION attention. q,k,v: (BH, L, dh); mask (LB, LB)."""
+    return _pallas_fwd(q, k, v, block_mask, block=block, scale=scale)
+
+
+def _bsa_fwd(q, k, v, block_mask, block, scale):
+    out = _pallas_fwd(q, k, v, block_mask, block=block, scale=scale)
+    return out, (q, k, v, block_mask)
+
+
+def _bsa_bwd(block, scale, res, d_out):
+    q, k, v, block_mask = res
+    p = _ref.upsample_mask(block_mask, block)  # (L, L)
+
+    def one_head(qh, kh, vh, doh):
+        logits = (qh @ kh.T) * scale
+        masked = logits * p
+        m = jnp.max(masked, axis=-1, keepdims=True)
+        e = jnp.exp(masked - m)
+        denom = jnp.sum(e, axis=-1, keepdims=True)
+        a = e / denom  # full-row softmax incl. implicit zeros
+        s = a * p  # S^s
+        dv = s.T @ doh
+        ds = doh @ vh.T  # (L, L)
+        da = ds * p
+        # softmax backward: dZ = A ⊙ (dA − rowsum(dA ⊙ A))
+        dz = a * (da - jnp.sum(da * a, axis=-1, keepdims=True))
+        # Z = logits ⊙ P ⇒ d(logits) = dZ ⊙ P
+        dl = dz * p * scale
+        dq = dl @ kh
+        dk = dl.T @ qh
+        return dq, dk, dv
+
+    dq, dk, dv = jax.vmap(one_head)(q, k, v, d_out)
+    # block_mask is data, not a trainable parameter: zero cotangent.
+    return dq, dk, dv, jnp.zeros_like(block_mask)
+
+
+block_sparse_attention.defvjp(_bsa_fwd, _bsa_bwd)

@@ -1,0 +1,228 @@
+"""L2 — the encoder-only Transformer (Algorithm 1) in JAX, with the SPION
+sparse MHA (Algorithm 5) wired to the L1 Pallas kernel, plus Adam training
+steps. Build-time only: `aot.py` lowers the jitted functions to HLO text;
+nothing in this package is imported at run time.
+
+Parameters travel as a FLAT LIST ordered by `configs.param_specs` — the rust
+coordinator treats them as opaque buffers and round-trips them between steps,
+so ordering is the ABI and is recorded in the artifact manifest.
+
+Dropout is rate-0 (identity): the reproduction runs few-hundred-step budgets
+where regularization is irrelevant, and determinism across the
+python-reference / rust-runtime boundary is worth more (DESIGN.md §3).
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import ref as kref
+from .kernels.spion_attention import block_sparse_attention
+
+LN_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: configs.ModelConfig, seed):
+    """Flat param list in `param_specs` order. `seed` may be a traced u32."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, (name, shape) in enumerate(configs.param_specs(cfg)):
+        k = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base.startswith("ln") or base in ("bf", "be", "cls_b"):
+            # LayerNorm gains start at 1, biases at 0.
+            init = jnp.ones(shape) if base.endswith("_g") or base == "ln1_g" else jnp.zeros(shape)
+            if base in ("ln1_g", "ln2_g"):
+                init = jnp.ones(shape)
+            params.append(init.astype(jnp.float32))
+        elif len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            params.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return params
+
+
+def _unpack(cfg: configs.ModelConfig, params):
+    """Flat list → (embed, pos, [layer dicts], cls_w, cls_b)."""
+    it = iter(params)
+    embed = next(it)
+    pos = next(it)
+    layers = []
+    names = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "wf", "bf", "we", "be"]
+    for _ in range(cfg.layers):
+        layers.append({n: next(it) for n in names})
+    cls_w = next(it)
+    cls_b = next(it)
+    return embed, pos, layers, cls_w, cls_b
+
+
+# ---------------------------------------------------------------------------
+# Forward (Algorithm 1 / Algorithm 5)
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def _split_heads(x, heads):
+    """(B, L, D) → (B·H, L, D/H)."""
+    b, l, d = x.shape
+    x = x.reshape(b, l, heads, d // heads).transpose(0, 2, 1, 3)
+    return x.reshape(b * heads, l, d // heads)
+
+
+def _merge_heads(x, batch, heads):
+    bh, l, dh = x.shape
+    x = x.reshape(batch, heads, l, dh).transpose(0, 2, 1, 3)
+    return x.reshape(batch, l, heads * dh)
+
+
+def _dense_mha(q, k, v, heads):
+    """Returns (context (B,L,D), head-and-batch-averaged scores (L,L))."""
+    b = q.shape[0]
+    qh, kh, vh = (_split_heads(t, heads) for t in (q, k, v))
+    scale = 1.0 / jnp.sqrt(jnp.float32(qh.shape[-1]))
+    out, scores = jax.vmap(lambda qq, kk, vv: kref.dense_attention_ref(qq, kk, vv, scale))(qh, kh, vh)
+    return _merge_heads(out, b, heads), scores.mean(axis=0)
+
+
+#: Sparse-attention lowering choice (build-time env `SPION_SPARSE_IMPL`):
+#: * "pallas" (default) — the L1 kernel: streaming row-block schedule with
+#:   the BlockSpec structure a real TPU would execute. Under interpret=True
+#:   on CPU the emitted while-loop HLO is slower than one fused formula.
+#: * "ref" — the dense-equivalent closed form (kernels.ref); XLA fuses it
+#:   into a handful of kernels, ~1.9× faster per CPU training step
+#:   (EXPERIMENTS.md §Perf). Numerics are identical (pytest asserts
+#:   kernel==ref to 1e-5), so this is a pure lowering choice.
+SPARSE_IMPL = os.environ.get("SPION_SPARSE_IMPL", "pallas")
+
+
+def _sparse_mha(q, k, v, heads, block_mask, block):
+    b = q.shape[0]
+    qh, kh, vh = (_split_heads(t, heads) for t in (q, k, v))
+    scale = float(1.0 / (qh.shape[-1] ** 0.5))
+    if SPARSE_IMPL == "ref":
+        out = kref.mha_sparse_ref(qh, kh, vh, block_mask, block, scale)
+    else:
+        out = block_sparse_attention(qh, kh, vh, block_mask, block, scale)
+    return _merge_heads(out, b, heads)
+
+
+def forward(cfg: configs.ModelConfig, params, x, masks=None):
+    """Encoder forward.
+
+    x: (batch, L) int32 tokens. masks: None for dense, or (layers, LB, LB)
+    f32 block masks for the sparse phase. Returns (logits, scores) where
+    scores is (layers, L, L) — head/batch-averaged A^s per layer (zeros in
+    the sparse phase, where the coordinator no longer needs them).
+    """
+    embed, pos, layers, cls_w, cls_b = _unpack(cfg, params)
+    e = embed[x] + pos[None, :, :]  # (B, L, D)
+    score_list = []
+    for n, p in enumerate(layers):
+        xn = _layernorm(e, p["ln1_g"], p["ln1_b"])
+        q = xn @ p["wq"]
+        k = xn @ p["wk"]
+        v = xn @ p["wv"]
+        if masks is None:
+            a, scores = _dense_mha(q, k, v, cfg.heads)
+            score_list.append(scores)
+        else:
+            a = _sparse_mha(q, k, v, cfg.heads, masks[n], cfg.pattern_block())
+            score_list.append(jnp.zeros((cfg.seq_len, cfg.seq_len), jnp.float32))
+        o = a @ p["wo"] + e
+        f = jax.nn.relu(_layernorm(o, p["ln2_g"], p["ln2_b"]) @ p["wf"] + p["bf"])
+        e = f @ p["we"] + p["be"] + o
+    pooled = e.mean(axis=1)
+    logits = pooled @ cls_w + cls_b
+    return logits, jnp.stack(score_list)
+
+
+def loss_fn(cfg, params, x, y, masks=None):
+    logits, scores = forward(cfg, params, x, masks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, axis=-1) == y).mean()
+    return loss, (scores, acc)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+B1, B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """step: i32 (1-based); returns (params', m', v')."""
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - B1**t
+    bc2 = 1.0 - B2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = B1 * mi + (1.0 - B1) * g
+        vi = B2 * vi + (1.0 - B2) * g * g
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Train / eval entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def dense_step(cfg, params, m, v, x, y, step, lr):
+    """One dense-phase training step.
+
+    Returns (params', m', v', loss, acc, scores)."""
+    (loss, (scores, acc)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y, None), has_aux=True
+    )(params)
+    params, m, v = adam_update(params, grads, m, v, step, lr)
+    return params, m, v, loss, acc, scores
+
+
+def sparse_step(cfg, params, m, v, x, y, step, lr, masks):
+    """One sparse-phase training step. Returns (params', m', v', loss, acc)."""
+    (loss, (_, acc)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y, masks), has_aux=True
+    )(params)
+    params, m, v = adam_update(params, grads, m, v, step, lr)
+    return params, m, v, loss, acc
+
+
+def dense_fwd(cfg, params, x):
+    logits, _ = forward(cfg, params, x, None)
+    return logits
+
+
+def sparse_fwd(cfg, params, x, masks):
+    logits, _ = forward(cfg, params, x, masks)
+    return logits
+
+
+# jit wrappers used by aot.py and the python tests
+def jitted(cfg: configs.ModelConfig):
+    return {
+        "init": jax.jit(functools.partial(init_params, cfg)),
+        "dense_step": jax.jit(functools.partial(dense_step, cfg)),
+        "sparse_step": jax.jit(functools.partial(sparse_step, cfg)),
+        "dense_fwd": jax.jit(functools.partial(dense_fwd, cfg)),
+        "sparse_fwd": jax.jit(functools.partial(sparse_fwd, cfg)),
+    }

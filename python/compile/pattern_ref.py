@@ -1,0 +1,104 @@
+"""Python reference of the convolutional flood-fill pattern generator
+(Algorithms 3+4) — mirrors `rust/src/pattern/` operation-for-operation.
+
+Purpose: cross-language golden vectors. `aot.py` dumps randomized cases
+through this module into `artifacts/golden/pattern_golden.json`; the rust
+test `rust/tests/golden_parity.rs` replays them through the rust
+implementation and demands identical masks (and allclose intermediates).
+"""
+
+import numpy as np
+
+
+def diagonal_filter(f: int) -> np.ndarray:
+    return np.full(f, 1.0 / f, dtype=np.float32)
+
+
+def conv_diag(a: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    """Diagonal convolution, zero-padded 'same' (Eq. 3), centered."""
+    l = a.shape[0]
+    f = len(weights)
+    half = f // 2
+    out = np.zeros_like(a, dtype=np.float32)
+    for fi, w in enumerate(weights):
+        off = fi - half
+        if off >= 0:
+            src = a[off:l, off:l]
+            out[: l - off, : l - off] += w * src
+        else:
+            src = a[: l + off, : l + off]
+            out[-off:, -off:] += w * src
+    return out
+
+
+def avg_pool(a: np.ndarray, block: int) -> np.ndarray:
+    l = a.shape[0]
+    assert l % block == 0
+    lb = l // block
+    return a.reshape(lb, block, lb, block).mean(axis=(1, 3)).astype(np.float32)
+
+
+def quantile(values: np.ndarray, q: float) -> float:
+    """numpy linear-interpolation quantile over f32 values (matches
+    rust/src/pattern/quantile.rs)."""
+    return float(np.quantile(values.astype(np.float32).ravel(), q))
+
+
+def flood_fill_from(pool_out: np.ndarray, r: int, c: int, fl_out: np.ndarray, t: float):
+    """Iterative Algorithm 4 walk (same worklist semantics as rust)."""
+    lb = pool_out.shape[0]
+    stack = [(r, c)]
+    while stack:
+        r, c = stack.pop()
+        if r + 1 >= lb or c + 1 >= lb:
+            continue
+        right = pool_out[r, c + 1]
+        below = pool_out[r + 1, c]
+        diag = pool_out[r + 1, c + 1]
+        m = max(right, below, diag)
+        for nr, nc, val in ((r + 1, c, below), (r, c + 1, right), (r + 1, c + 1, diag)):
+            if val == m and fl_out[nr, nc] == 0 and val > t:
+                fl_out[nr, nc] = 1
+                stack.append((nr, nc))
+
+
+def flood_fill_all(pool_out: np.ndarray, t: float) -> np.ndarray:
+    lb = pool_out.shape[0]
+    fl = np.zeros((lb, lb), dtype=np.float32)
+    for i in range(lb):
+        flood_fill_from(pool_out, 0, i, fl, t)
+    for j in range(lb):
+        flood_fill_from(pool_out, j, 0, fl, t)
+    np.fill_diagonal(fl, 1.0)
+    return fl
+
+
+def generate_pattern(a_s: np.ndarray, variant: str, block: int, filt: int, alpha: float) -> np.ndarray:
+    """Algorithm 3. Returns the (LB, LB) 0/1 block mask (pre-upsampling)."""
+    a_s = a_s.astype(np.float32)
+    conv_out = a_s if variant == "F" else conv_diag(a_s, diagonal_filter(filt))
+    pool_out = avg_pool(conv_out, block)
+    t = quantile(pool_out, alpha)
+    if variant == "C":
+        fl = (pool_out > t).astype(np.float32)
+        np.fill_diagonal(fl, 1.0)
+    elif variant in ("F", "CF"):
+        fl = flood_fill_all(pool_out, t)
+    else:
+        raise ValueError(f"unknown variant {variant}")
+    return fl
+
+
+def synth_scores(l: int, diag_strength: float, vert_strength: float, vert_cols, noise: float, seed: int) -> np.ndarray:
+    """Synthetic A^s with controllable shape (NOT required to match the rust
+    synth generator — golden cases store the matrix itself)."""
+    rng = np.random.default_rng(seed)
+    a = rng.random((l, l), dtype=np.float32) * noise
+    for i in range(l):
+        for w in range(3):
+            for j in {max(i - w, 0), min(i + w, l - 1)}:
+                a[i, j] += diag_strength / (1.0 + w)
+        for c in vert_cols:
+            a[i, c] += vert_strength
+    a /= np.maximum(a.sum(axis=1, keepdims=True), 1e-9)
+    return a.astype(np.float32)

@@ -1,0 +1,79 @@
+"""AOT pass tests: HLO text is emitted, parseable-looking, and the manifest
+ABI is self-consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = configs.ModelConfig("unit-aot", "listops", 64, 16, 2, 1, 32, 12, 4, 2)
+
+
+def test_hlo_text_smoke():
+    fns = model.jitted(CFG)
+    lowered = fns["dense_fwd"].lower(
+        [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in configs.param_specs(CFG)],
+        jax.ShapeDtypeStruct((CFG.batch, CFG.seq_len), jnp.int32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: the root instruction is a tuple.
+    assert "tuple(" in text
+
+
+def test_manifest_io_contract():
+    m = aot.manifest(CFG)
+    assert m["preset"] == CFG.preset
+    assert len(m["params"]) == 2 + 12 * CFG.layers + 2
+    for art in ["init", "dense_step", "sparse_step", "dense_fwd", "sparse_fwd"]:
+        assert art in m["io"], art
+    assert m["lb"] * m["pattern_block"] == m["seq_len"]
+    # JSON-serializable
+    json.dumps(m)
+
+
+def test_emit_preset_writes_files(tmp_path):
+    aot.emit_preset(CFG, str(tmp_path), force=True)
+    pdir = tmp_path / CFG.preset
+    for art in ["init", "dense_step", "sparse_step", "dense_fwd", "sparse_fwd"]:
+        f = pdir / f"{art}.hlo.txt"
+        assert f.exists() and f.stat().st_size > 1000, art
+    manifest = json.loads((pdir / "manifest.json").read_text())
+    assert manifest["seq_len"] == CFG.seq_len
+
+
+def test_emit_preset_is_incremental(tmp_path):
+    aot.emit_preset(CFG, str(tmp_path), force=True)
+    f = tmp_path / CFG.preset / "init.hlo.txt"
+    t0 = f.stat().st_mtime_ns
+    aot.emit_preset(CFG, str(tmp_path), force=False)
+    assert f.stat().st_mtime_ns == t0, "unchanged artifacts must not be rewritten"
+
+
+def test_golden_payloads_shape():
+    pg = aot.pattern_golden_cases()
+    assert len(pg["cases"]) >= 4
+    for c in pg["cases"]:
+        lb = c["l"] // c["block"]
+        assert len(c["mask"]) == lb * lb
+        assert len(c["pool_out"]) == lb * lb
+        assert len(c["scores"]) == c["l"] ** 2
+        # mask diagonal on
+        m = np.array(c["mask"]).reshape(lb, lb)
+        assert (np.diag(m) == 1).all()
+    ag = aot.attention_golden_cases()
+    for c in ag["cases"]:
+        assert len(c["out"]) == c["l"] * c["dh"]
+        assert len(c["s_sparse"]) == c["l"] * c["l"]
+
+
+def test_default_presets_exist():
+    for name in configs.DEFAULT_PRESETS:
+        assert name in configs.BY_NAME

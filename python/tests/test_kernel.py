@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas block-sparse attention vs the pure-jnp oracle.
+
+The CORE correctness signal of the compile path: hypothesis sweeps shapes,
+densities and scales; every case must match `kernels.ref` to float32
+tolerance, including the implicit-zero softmax semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spion_attention import _pallas_fwd, block_sparse_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _mk_case(seed, bh, lb, block, dh, keep):
+    rng = np.random.default_rng(seed)
+    l = lb * block
+    q = rng.standard_normal((bh, l, dh), dtype=np.float32)
+    k = rng.standard_normal((bh, l, dh), dtype=np.float32)
+    v = rng.standard_normal((bh, l, dh), dtype=np.float32)
+    mask = (rng.random((lb, lb)) < keep).astype(np.float32)
+    np.fill_diagonal(mask, 1.0)
+    return q, k, v, mask
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bh=st.integers(1, 4),
+    lb=st.integers(1, 6),
+    block=st.sampled_from([4, 8, 16]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    keep=st.floats(0.0, 1.0),
+)
+def test_pallas_matches_ref_sweep(seed, bh, lb, block, dh, keep):
+    q, k, v, mask = _mk_case(seed, bh, lb, block, dh, keep)
+    scale = 1.0 / np.sqrt(dh)
+    got = _pallas_fwd(q, k, v, mask, block=block, scale=scale)
+    expect = ref.mha_sparse_ref(q, k, v, mask, block, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), **TOL)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_full_mask_equals_dense():
+    q, k, v, _ = _mk_case(0, 2, 4, 8, 8, 1.0)
+    mask = np.ones((4, 4), np.float32)
+    scale = 1.0 / np.sqrt(8)
+    got = _pallas_fwd(q, k, v, mask, block=8, scale=scale)
+    dense = jax.vmap(lambda a, b, c: ref.dense_attention_ref(a, b, c, scale)[0])(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), **TOL)
+
+
+def test_diagonal_only_mask():
+    q, k, v, _ = _mk_case(3, 1, 4, 8, 8, 0.0)
+    mask = np.eye(4, dtype=np.float32)
+    scale = 0.35
+    got = _pallas_fwd(q, k, v, mask, block=8, scale=scale)
+    expect = ref.mha_sparse_ref(q, k, v, mask, 8, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), **TOL)
+
+
+def test_zero_imputation_differs_from_neg_inf_masking():
+    """The paper's semantics (pruned logit = 0) is NOT the common -inf
+    masking; the kernel must implement the former."""
+    q, k, v, mask = _mk_case(5, 1, 4, 8, 8, 0.4)
+    scale = 1.0 / np.sqrt(8)
+    got = np.asarray(_pallas_fwd(q, k, v, mask, block=8, scale=scale))
+
+    p = np.asarray(ref.upsample_mask(jnp.asarray(mask), 8))
+
+    def neg_inf_attention(qh, kh, vh):
+        logits = (qh @ kh.T) * scale
+        logits = np.where(p > 0, logits, -np.inf)
+        m = logits.max(-1, keepdims=True)
+        e = np.exp(logits - m)
+        s = e / e.sum(-1, keepdims=True)
+        return s @ vh
+
+    neg_inf = np.stack([neg_inf_attention(q[i], k[i], v[i]) for i in range(q.shape[0])])
+    # They must differ (unless the mask is full, which 0.4 keep is not).
+    assert np.abs(got - neg_inf).max() > 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), keep=st.floats(0.1, 1.0))
+def test_custom_vjp_matches_ref_grad(seed, keep):
+    q, k, v, mask = _mk_case(seed, 1, 3, 8, 8, keep)
+    scale = 1.0 / np.sqrt(8)
+    rng = np.random.default_rng(seed + 1)
+    cot = rng.standard_normal(q.shape, dtype=np.float32)
+
+    def f_kernel(q, k, v):
+        return (block_sparse_attention(q, k, v, mask, 8, scale) * cot).sum()
+
+    def f_ref(q, k, v):
+        return (ref.mha_sparse_ref(q, k, v, mask, 8, scale) * cot).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_row_mass_conservation():
+    """Stored probability + implicit-zero mass must sum to 1 per row: check
+    through the oracle's S^s plus reconstructed implicit mass."""
+    rng = np.random.default_rng(11)
+    l, dh, block = 32, 8, 8
+    lb = l // block
+    q = rng.standard_normal((l, dh), dtype=np.float32)
+    k = rng.standard_normal((l, dh), dtype=np.float32)
+    v = rng.standard_normal((l, dh), dtype=np.float32)
+    bm = (rng.random((lb, lb)) < 0.5).astype(np.float32)
+    np.fill_diagonal(bm, 1.0)
+    p = np.asarray(ref.upsample_mask(jnp.asarray(bm), block))
+    scale = 1.0 / np.sqrt(dh)
+    _, s = ref.sparse_attention_scores_ref(q, k, v, p, scale)
+    s = np.asarray(s)
+    logits = (q @ k.T) * scale * p
+    m = logits.max(-1, keepdims=True)
+    denom = np.exp(logits - m).sum(-1, keepdims=True)
+    implicit = (np.exp(-m) * (p == 0).sum(-1, keepdims=True) / denom).squeeze(-1)
+    # stored + implicit-zero = 1 exactly: the pruned entries' exp(0-max)
+    # terms were already counted inside denom because masked logits are 0.
+    stored = s.sum(-1)
+    np.testing.assert_allclose(stored + implicit, np.ones(l), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [4, 8])
+def test_kernel_is_deterministic(block):
+    q, k, v, mask = _mk_case(9, 2, 4, block, 8, 0.5)
+    scale = 0.2
+    a = np.asarray(_pallas_fwd(q, k, v, mask, block=block, scale=scale))
+    b = np.asarray(_pallas_fwd(q, k, v, mask, block=block, scale=scale))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,92 @@
+"""Tests for the python pattern-generation reference (Algorithms 3+4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pattern_ref as pr
+
+
+def test_fig4_walkthrough_diagonal_band():
+    pool = np.array(
+        [
+            [0.9, 0.1, 0.0, 0.0],
+            [0.1, 0.8, 0.1, 0.0],
+            [0.0, 0.1, 0.7, 0.1],
+            [0.0, 0.0, 0.1, 0.9],
+        ],
+        dtype=np.float32,
+    )
+    fl = np.zeros((4, 4), dtype=np.float32)
+    pr.flood_fill_from(pool, 0, 0, fl, 0.5)
+    assert fl[1, 1] == 1 and fl[2, 2] == 1 and fl[3, 3] == 1
+    assert fl[0, 1] == 0 and fl[1, 0] == 0
+
+
+def test_flood_threshold_blocks_all():
+    pool = np.full((6, 6), 0.3, dtype=np.float32)
+    fl = pr.flood_fill_all(pool, 0.9)
+    assert (fl == np.eye(6)).all()
+
+
+def test_conv_identity():
+    a = np.arange(25, dtype=np.float32).reshape(5, 5)
+    out = pr.conv_diag(a, np.array([1.0], dtype=np.float32))
+    np.testing.assert_allclose(out, a)
+
+
+def test_conv_diagonal_amplification():
+    l = 16
+    a = np.zeros((l, l), dtype=np.float32)
+    np.fill_diagonal(a, 1.0)
+    a[2, 9] = 1.0
+    out = pr.conv_diag(a, pr.diagonal_filter(5))
+    assert out[8, 8] > 2 * out[2, 9]
+
+
+def test_avg_pool_known():
+    a = np.array([[1, 2], [3, 4]], dtype=np.float32)
+    assert pr.avg_pool(a, 2)[0, 0] == 2.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    lb=st.integers(2, 8),
+    block=st.sampled_from([2, 4, 8]),
+    alpha=st.floats(0.5, 0.99),
+    variant=st.sampled_from(["C", "F", "CF"]),
+)
+def test_pattern_invariants(seed, lb, block, alpha, variant):
+    rng = np.random.default_rng(seed)
+    l = lb * block
+    a = rng.random((l, l), dtype=np.float32)
+    mask = pr.generate_pattern(a, variant, block, 5, alpha)
+    assert mask.shape == (lb, lb)
+    assert set(np.unique(mask)).issubset({0.0, 1.0})
+    assert (np.diag(mask) == 1).all(), "diagonal forced on"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), t1=st.floats(0, 1), t2=st.floats(0, 1))
+def test_flood_monotone_in_threshold(seed, t1, t2):
+    rng = np.random.default_rng(seed)
+    pool = rng.random((8, 8)).astype(np.float32)
+    lo, hi = min(t1, t2), max(t1, t2)
+    fl_lo = pr.flood_fill_all(pool, lo)
+    fl_hi = pr.flood_fill_all(pool, hi)
+    assert (fl_lo >= fl_hi).all()
+
+
+def test_spion_c_density_tracks_alpha():
+    a = pr.synth_scores(128, 0.8, 0.2, [30], 0.05, 3)
+    m_dense = pr.generate_pattern(a, "C", 16, 5, 0.70)
+    m_sparse = pr.generate_pattern(a, "C", 16, 5, 0.95)
+    assert m_dense.sum() >= m_sparse.sum()
+
+
+def test_quantile_matches_numpy():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(100).astype(np.float32)
+    for q in [0.0, 0.25, 0.5, 0.9, 1.0]:
+        assert pr.quantile(v, q) == pytest.approx(float(np.quantile(v, q)), rel=1e-6)

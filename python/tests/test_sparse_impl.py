@@ -1,0 +1,55 @@
+"""The `SPION_SPARSE_IMPL` lowering knob (EXPERIMENTS.md §Perf L2) must be a
+pure performance choice: pallas-kernel and fused-ref lowerings of the sparse
+model must produce identical numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = configs.ModelConfig("impl", "listops", 64, 16, 2, 2, 32, 12, 4, 2)
+
+
+def _fixture(seed=0):
+    params = model.init_params(CFG, np.uint32(seed))
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    y = rng.integers(0, CFG.classes, (CFG.batch,)).astype(np.int32)
+    masks = (rng.random((CFG.layers, CFG.lb, CFG.lb)) < 0.5).astype(np.float32)
+    for n in range(CFG.layers):
+        np.fill_diagonal(masks[n], 1.0)
+    return params, x, y, masks
+
+
+def _with_impl(impl, fn):
+    old = model.SPARSE_IMPL
+    model.SPARSE_IMPL = impl
+    try:
+        return fn()
+    finally:
+        model.SPARSE_IMPL = old
+
+
+def test_fwd_lowerings_agree():
+    params, x, _, masks = _fixture()
+    a = _with_impl("pallas", lambda: model.sparse_fwd(CFG, params, x, masks))
+    b = _with_impl("ref", lambda: model.sparse_fwd(CFG, params, x, masks))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_lowerings_agree():
+    params, x, y, masks = _fixture(1)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+
+    def step():
+        return model.sparse_step(CFG, params, m, v, x, y, jnp.int32(1), jnp.float32(1e-3), masks)
+
+    pa = _with_impl("pallas", step)
+    rb = _with_impl("ref", step)
+    np.testing.assert_allclose(float(pa[3]), float(rb[3]), rtol=1e-5)  # loss
+    for t_p, t_r in zip(pa[0], rb[0]):  # updated params
+        np.testing.assert_allclose(np.asarray(t_p), np.asarray(t_r), rtol=1e-3, atol=1e-5)

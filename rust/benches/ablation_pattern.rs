@@ -1,0 +1,115 @@
+//! Ablations over the pattern-generation design choices DESIGN.md calls
+//! out: block size B, filter size F, threshold α, variant (C/F/CF), and the
+//! implicit-zero softmax correction. For each setting we report pattern
+//! density, *captured attention mass* (Σ of A^s over retained entries —
+//! the quality proxy: how much of the true attention distribution the
+//! pattern keeps), pattern-generation latency, and engine step time.
+//!
+//! Run: cargo bench --bench ablation_pattern
+
+mod common;
+
+use common::{qkv, scores_for, task_shapes};
+use spion::attention::{sparse_attention_head, SparseWorkspace};
+use spion::pattern::spion::PatternConfig;
+use spion::pattern::{generate_pattern, BlockMask, SpionVariant};
+use spion::tensor::Mat;
+use spion::util::bench::{bench, Report};
+use spion::util::rng::Rng;
+
+/// Fraction of total A^s mass covered by the pattern.
+fn captured_mass(scores: &Mat, mask: &BlockMask) -> f64 {
+    let b = mask.block;
+    let mut kept = 0.0f64;
+    let mut total = 0.0f64;
+    for i in 0..scores.rows {
+        for j in 0..scores.cols {
+            let v = scores.at(i, j) as f64;
+            total += v;
+            if mask.get(i / b, j / b) {
+                kept += v;
+            }
+        }
+    }
+    kept / total.max(1e-12)
+}
+
+fn main() {
+    let mut rng = Rng::new(0xAB1A);
+    let shape = task_shapes().remove(0); // image shape
+    let scores = scores_for(&shape, &mut rng);
+    let (q, k, v) = qkv(&shape, &mut rng);
+    let scale = 1.0 / (shape.dh as f32).sqrt();
+
+    let mut report = Report::new(
+        &format!("Ablation — pattern design choices ({})", shape.name),
+        &["setting", "density", "captured mass", "gen time", "step time"],
+    );
+
+    let mut row = |label: String, cfg: &PatternConfig| {
+        let gen_t = bench("gen", || {
+            let m = generate_pattern(&scores, cfg);
+            std::hint::black_box(&m);
+        });
+        let mask = generate_pattern(&scores, cfg);
+        let mut ws = SparseWorkspace::new(&mask, shape.dh);
+        let step_t = bench("step", || {
+            let o = sparse_attention_head(&q, &k, &v, scale, &mut ws);
+            std::hint::black_box(&o);
+        });
+        report.row(vec![
+            label,
+            format!("{:.3}", mask.density()),
+            format!("{:.3}", captured_mass(&scores, &mask)),
+            format!("{:.3} ms", gen_t.median_ms),
+            format!("{:.3} ms", step_t.median_ms),
+        ]);
+    };
+
+    let base = PatternConfig {
+        variant: SpionVariant::CF,
+        block: shape.block,
+        filter: common::scaled_filter(shape.l),
+        alpha: shape.alpha,
+    };
+
+    // Variant ablation (the SPION-C / -F / -CF comparison of Table 2).
+    for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+        row(format!("variant {}", variant.name()), &PatternConfig { variant, ..base.clone() });
+    }
+    // Block size B.
+    for blk in [8, 16, 32, 64] {
+        if shape.l % blk == 0 && shape.l / blk >= 4 {
+            row(format!("block B={blk}"), &PatternConfig { block: blk, ..base.clone() });
+        }
+    }
+    // Filter size F (paper fixes 31).
+    for f in [1, 7, 15, 31] {
+        row(format!("filter F={f}"), &PatternConfig { filter: f, ..base.clone() });
+    }
+    // Threshold α.
+    for a in [0.80, 0.90, 0.96, 0.99] {
+        row(format!("alpha={a}"), &PatternConfig { alpha: a, ..base.clone() });
+    }
+    report.print();
+    report.save_csv("results/ablation_pattern.csv");
+
+    // Implicit-zero correction ablation: numeric effect on the output.
+    let mask = generate_pattern(&scores, &base);
+    let mut ws_on = SparseWorkspace::new(&mask, shape.dh);
+    let mut ws_off = SparseWorkspace::new(&mask, shape.dh);
+    ws_off.zero_correction = false;
+    let on = sparse_attention_head(&q, &k, &v, scale, &mut ws_on).clone();
+    let off = sparse_attention_head(&q, &k, &v, scale, &mut ws_off).clone();
+    let mut diff = 0.0f64;
+    let mut norm = 0.0f64;
+    for (a, b) in on.data.iter().zip(&off.data) {
+        diff += ((a - b) as f64).powi(2);
+        norm += (*a as f64).powi(2);
+    }
+    println!(
+        "\nimplicit-zero correction (Alg. 6 line 15): relative output shift {:.4} — \
+         dropping it changes the trained model, which is why it is kept on.",
+        (diff / norm.max(1e-12)).sqrt()
+    );
+}

@@ -1,0 +1,88 @@
+#![allow(dead_code)]
+//! Shared fixtures for the paper-figure benches: per-task attention shapes
+//! (paper §5 dimensions, scaled presets by default, paper scale with
+//! SPION_BENCH_PAPER=1) and pattern construction for every compared model.
+
+use spion::config::types::SparsityConfig;
+use spion::config::PatternKind;
+use spion::pattern::spion::{synth_attention_scores, PatternConfig};
+use spion::pattern::{bigbird, lsh, BlockMask, SpionVariant};
+use spion::tensor::Mat;
+use spion::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TaskShape {
+    pub name: &'static str,
+    /// Sequence length L.
+    pub l: usize,
+    /// Per-head dim (paper: D = 64, split over H heads → 32; we bench one
+    /// head at the paper's D/H).
+    pub dh: usize,
+    /// Pattern block size B.
+    pub block: usize,
+    /// Threshold quantile α (paper §5).
+    pub alpha: f64,
+}
+
+/// The three evaluation tasks. Paper scale: L = 1024 / 2048 / 4096, B = 32 /
+/// 64 / 64. Scaled default keeps the B : L ratio and α ordering.
+pub fn task_shapes() -> Vec<TaskShape> {
+    let paper = std::env::var("SPION_BENCH_PAPER").ok().as_deref() == Some("1");
+    if paper {
+        vec![
+            TaskShape { name: "image (L=1024)", l: 1024, dh: 32, block: 32, alpha: 0.96 },
+            TaskShape { name: "listops (L=2048)", l: 2048, dh: 32, block: 64, alpha: 0.98 },
+            TaskShape { name: "retrieval (L=4096)", l: 4096, dh: 32, block: 64, alpha: 0.99 },
+        ]
+    } else {
+        vec![
+            TaskShape { name: "image (L=256)", l: 256, dh: 32, block: 16, alpha: 0.90 },
+            TaskShape { name: "listops (L=512)", l: 512, dh: 32, block: 32, alpha: 0.92 },
+            TaskShape { name: "retrieval (L=1024)", l: 1024, dh: 32, block: 64, alpha: 0.94 },
+        ]
+    }
+}
+
+/// Realistic synthetic A^s (diagonal + vertical mixture, Fig. 1 shapes).
+pub fn scores_for(shape: &TaskShape, rng: &mut Rng) -> Mat {
+    synth_attention_scores(shape.l, 1.0, 0.3, &[shape.l / 3, 2 * shape.l / 3], 0.05, rng)
+}
+
+/// Build the block pattern each compared model uses on this task.
+pub fn pattern_for(kind: PatternKind, shape: &TaskShape, scores: &Mat, rng: &mut Rng) -> BlockMask {
+    let lb = shape.l / shape.block;
+    match kind {
+        PatternKind::Dense => BlockMask::full(lb, shape.block),
+        PatternKind::BigBird => bigbird::bigbird(lb, shape.block, &Default::default(), rng),
+        PatternKind::Reformer => lsh::lsh_pattern(scores, shape.block, &Default::default(), rng),
+        PatternKind::Spion(variant) => spion::pattern::generate_pattern(
+            scores,
+            &PatternConfig { variant, block: shape.block, filter: scaled_filter(shape.l), alpha: shape.alpha },
+        ),
+    }
+}
+
+/// QKV fixtures for one head.
+pub fn qkv(shape: &TaskShape, rng: &mut Rng) -> (Mat, Mat, Mat) {
+    (
+        Mat::random_normal(shape.l, shape.dh, 1.0, rng),
+        Mat::random_normal(shape.l, shape.dh, 1.0, rng),
+        Mat::random_normal(shape.l, shape.dh, 1.0, rng),
+    )
+}
+
+/// Scale-aware diagonal-filter size (mirrors config::types::default_filter).
+pub fn scaled_filter(l: usize) -> usize {
+    let f = (l / 32).clamp(3, 31);
+    if f % 2 == 0 { f + 1 } else { f }
+}
+
+#[allow(dead_code)]
+pub fn spion_cf() -> PatternKind {
+    PatternKind::Spion(SpionVariant::CF)
+}
+
+#[allow(dead_code)]
+pub fn sparsity_cfg(kind: PatternKind, shape: &TaskShape) -> SparsityConfig {
+    SparsityConfig::new(kind, shape.block, shape.alpha)
+}

@@ -1,0 +1,102 @@
+//! Fig. 5 regenerator: per-step training time, attention memory footprint,
+//! and per-request inference time for the six compared models on the three
+//! tasks.
+//!
+//! What is measured where (DESIGN.md §2): the *attention core* — the only
+//! part that differs between models — runs on the rust block-CSR engine.
+//! "Train step" = real forward + real backward (`sparse::backward`, same
+//! block structure as the forward, finite-difference-validated). Dense rows
+//! are the Original-Transformer baseline. Memory is the score-matrix
+//! working set (`metrics::attention_bytes_*`).
+//!
+//! Paper reference: SPION-CF 1.66× / 2.21× / 3.08× step speedup and 4.62× /
+//! 7.23× / 9.64× memory reduction on image / listops / retrieval.
+//!
+//! Run: cargo bench --bench fig5_train_step
+
+mod common;
+
+use common::{pattern_for, qkv, scores_for, task_shapes, TaskShape};
+use spion::attention::dense::{dense_attention_head, dense_attention_train};
+use spion::attention::{sparse_attention_head, sparse_attention_train, SparseWorkspace, TrainWorkspace};
+use spion::config::PatternKind;
+use spion::metrics::{attention_bytes_dense, attention_bytes_sparse};
+use spion::pattern::BlockMask;
+use spion::util::bench::{bench, BenchStats, Report};
+use spion::util::human_bytes;
+use spion::util::rng::Rng;
+
+fn bench_model(
+    kind: PatternKind,
+    shape: &TaskShape,
+    mask: &BlockMask,
+    q: &spion::tensor::Mat,
+    k: &spion::tensor::Mat,
+    v: &spion::tensor::Mat,
+    cot: &spion::tensor::Mat,
+) -> (BenchStats, BenchStats, usize) {
+    let scale = 1.0 / (shape.dh as f32).sqrt();
+    if matches!(kind, PatternKind::Dense) {
+        let train = bench("train", || {
+            let g = dense_attention_train(q, k, v, scale, cot);
+            std::hint::black_box(&g);
+        });
+        let infer = bench("infer", || {
+            let (o, _) = dense_attention_head(q, k, v, scale);
+            std::hint::black_box(&o);
+        });
+        (train, infer, attention_bytes_dense(1, 1, shape.l))
+    } else {
+        let mut ws = TrainWorkspace::new(mask, shape.dh);
+        let train = bench("train", || {
+            sparse_attention_train(q, k, v, scale, cot, &mut ws);
+            std::hint::black_box(&ws.dq);
+        });
+        let mut ws2 = SparseWorkspace::new(mask, shape.dh);
+        let infer = bench("infer", || {
+            let o = sparse_attention_head(q, k, v, scale, &mut ws2);
+            std::hint::black_box(&o);
+        });
+        let mem = attention_bytes_sparse(1, 1, mask.nnz_elements(), mask.nnz_blocks(), mask.lb);
+        (train, infer, mem)
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xF15);
+    let mut report = Report::new(
+        "Fig. 5 — training step time / attention memory / inference time (attention core, per head)",
+        &["task", "model", "density", "train step", "vs dense", "memory", "mem red.", "infer", "vs dense"],
+    );
+
+    for shape in task_shapes() {
+        let scores = scores_for(&shape, &mut rng);
+        let (q, k, v) = qkv(&shape, &mut rng);
+        let cot = spion::tensor::Mat::random_normal(shape.l, shape.dh, 1.0, &mut rng);
+        let mut dense_train = None;
+        let mut dense_mem = 0usize;
+        let mut dense_infer = None;
+        for kind in PatternKind::all() {
+            let mask = pattern_for(kind, &shape, &scores, &mut rng);
+            let (train, infer, mem) = bench_model(kind, &shape, &mask, &q, &k, &v, &cot);
+            if matches!(kind, PatternKind::Dense) {
+                dense_train = Some(train.median_ms);
+                dense_infer = Some(infer.median_ms);
+                dense_mem = mem;
+            }
+            report.row(vec![
+                shape.name.to_string(),
+                kind.name().to_string(),
+                format!("{:.3}", mask.density()),
+                format!("{:.2} ms", train.median_ms),
+                format!("{:.2}x", dense_train.unwrap() / train.median_ms),
+                human_bytes(mem),
+                format!("{:.2}x", dense_mem as f64 / mem as f64),
+                format!("{:.2} ms", infer.median_ms),
+                format!("{:.2}x", dense_infer.unwrap() / infer.median_ms),
+            ]);
+        }
+    }
+    report.print();
+    report.save_csv("results/fig5_train_step.csv");
+}

@@ -1,0 +1,59 @@
+//! Fig. 7 regenerator (timing axis): SPION-C attention-core step time and
+//! operation counts across sparsity ratios 70–99% on the ListOps shape.
+//! Paper reference: 96% vs 70% sparsity → 3.26× step speedup.
+//! (The accuracy axis requires real training → `examples/sparsity_sweep.rs`.)
+//!
+//! Run: cargo bench --bench fig7_sparsity_sweep
+
+mod common;
+
+use common::{qkv, scores_for, task_shapes};
+use spion::attention::{sparse_attention_head, SparseWorkspace};
+use spion::pattern::spion::PatternConfig;
+use spion::pattern::{generate_pattern, SpionVariant};
+use spion::sparse::ops::sparse_total_closed;
+use spion::util::bench::{bench, Report};
+use spion::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xF17);
+    let shape = task_shapes().remove(1); // listops
+    let scores = scores_for(&shape, &mut rng);
+    let (q, k, v) = qkv(&shape, &mut rng);
+    let scale = 1.0 / (shape.dh as f32).sqrt();
+
+    let mut report = Report::new(
+        &format!("Fig. 7 — SPION-C sparsity-ratio sweep ({})", shape.name),
+        &["sparsity ratio", "density", "attention ops", "step time", "speedup vs 70%"],
+    );
+
+    let ratios = [0.70, 0.80, 0.90, 0.96, 0.99];
+    let mut base_ms = None;
+    for &ratio in &ratios {
+        let cfg = PatternConfig {
+            variant: SpionVariant::C,
+            block: shape.block,
+            filter: common::scaled_filter(shape.l),
+            alpha: ratio,
+        };
+        let mask = generate_pattern(&scores, &cfg);
+        let mut ws = SparseWorkspace::new(&mask, shape.dh);
+        let t = bench(&format!("ratio{ratio}"), || {
+            let o = sparse_attention_head(&q, &k, &v, scale, &mut ws);
+            std::hint::black_box(&o);
+        });
+        if base_ms.is_none() {
+            base_ms = Some(t.median_ms);
+        }
+        let ops = sparse_total_closed(shape.l as u64, shape.dh as u64, mask.nnz_elements() as u64);
+        report.row(vec![
+            format!("{:.0}%", ratio * 100.0),
+            format!("{:.3}", mask.density()),
+            format!("{ops}"),
+            format!("{:.3} ms", t.median_ms),
+            format!("{:.2}x", base_ms.unwrap() / t.median_ms),
+        ]);
+    }
+    report.print();
+    report.save_csv("results/fig7_sparsity_sweep.csv");
+}

@@ -1,0 +1,83 @@
+//! Table 2 regenerator: classification accuracy of the six compared models,
+//! trained end-to-end through the PJRT stack on the synthetic LRA tasks.
+//!
+//! Scaled protocol (single-core CPU; DESIGN.md §3): by default trains each
+//! model for `SPION_TAB2_STEPS` (default 150) steps on the `tiny` preset,
+//! one seed. Set SPION_TAB2_PRESETS=tiny,image,listops,retrieval and/or
+//! SPION_TAB2_SEEDS=3 for the fuller (slow) protocol of the recorded run.
+//! Absolute accuracy is not comparable to the paper's multi-epoch LRA runs;
+//! the claim under test is the ORDERING (SPION-CF ≥ others) and that
+//! sparsification does not collapse quality.
+//!
+//! Run: cargo bench --bench tab2_accuracy
+
+use spion::config::types::{preset, SparsityConfig};
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::coordinator::Trainer;
+use spion::runtime::Runtime;
+use spion::util::bench::Report;
+
+fn env_or(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let presets: Vec<String> =
+        env_or("SPION_TAB2_PRESETS", "tiny").split(',').map(|s| s.trim().to_string()).collect();
+    let steps: usize = env_or("SPION_TAB2_STEPS", "150").parse().unwrap();
+    let seeds: u64 = env_or("SPION_TAB2_SEEDS", "1").parse().unwrap();
+
+    let rt = Runtime::cpu().expect("PJRT client");
+    let mut report = Report::new(
+        &format!("Table 2 — accuracy ({steps} steps, {seeds} seed(s); scaled protocol)"),
+        &["model", "preset", "eval acc", "final loss", "transition", "mean density"],
+    );
+
+    for preset_name in &presets {
+        let (task, model) = preset(preset_name).expect("unknown preset");
+        for kind in PatternKind::all() {
+            let mut accs = Vec::new();
+            let mut losses = Vec::new();
+            let mut transition = None;
+            let mut density = f64::NAN;
+            for seed in 0..seeds {
+                let mut train = TrainConfig::default();
+                train.steps = steps;
+                train.seed = 42 + seed;
+                // Dense warmup ≈ 20% of the budget (the paper trains dense
+                // "for a few epochs" before sparsifying).
+                train.max_dense_steps = (steps / 4).max(20);
+                train.min_dense_steps = (steps / 5).max(10);
+                let exp = ExperimentConfig {
+                    task,
+                    model: model.clone(),
+                    train,
+                    sparsity: SparsityConfig::for_model(kind, task, &model),
+                    artifacts_dir: "artifacts".into(),
+                };
+                let trainer = Trainer::new(&rt, exp).expect("trainer");
+                let outcome = trainer.run().expect("train run");
+                let m = outcome.metrics;
+                accs.push(m.eval_accuracy.unwrap_or(f64::NAN));
+                losses.push(m.final_loss().unwrap_or(f32::NAN));
+                transition = m.transition_step;
+                if !m.pattern_density.is_empty() {
+                    density = m.pattern_density.iter().sum::<f64>() / m.pattern_density.len() as f64;
+                }
+            }
+            let acc = accs.iter().sum::<f64>() / accs.len() as f64;
+            let loss = losses.iter().sum::<f32>() / losses.len() as f32;
+            println!("[tab2] {preset_name}/{}: acc {acc:.4} loss {loss:.4}", kind.name());
+            report.row(vec![
+                kind.name().to_string(),
+                preset_name.clone(),
+                format!("{acc:.4}"),
+                format!("{loss:.4}"),
+                transition.map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
+                if density.is_nan() { "-".into() } else { format!("{density:.3}") },
+            ]);
+        }
+    }
+    report.print();
+    report.save_csv("results/tab2_accuracy.csv");
+}

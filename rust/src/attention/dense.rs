@@ -1,0 +1,164 @@
+//! Dense attention (the Original-Transformer baseline): the two GEMMs and
+//! dense softmax of Algorithm 1 lines 6–8.
+
+use crate::tensor::ops::softmax_rows;
+use crate::tensor::Mat;
+
+/// One head: `A^c = softmax(QKᵀ·scale) V`. Returns (A^c, A^s) — the score
+/// matrix is needed by the coordinator for transition detection and pattern
+/// generation.
+pub fn dense_attention_head(q: &Mat, k: &Mat, v: &Mat, scale: f32) -> (Mat, Mat) {
+    let mut scores = q.matmul_nt(k);
+    scores.scale(scale);
+    softmax_rows(&mut scores);
+    let out = scores.matmul(v);
+    (out, scores)
+}
+
+/// Full MHA over concatenated Q,K,V (each L×D) with H heads; returns the
+/// concatenated context (L×D) and the head-averaged score matrix A^s (L×L)
+/// as used in §3 ("we averaged the attention score matrices across multiple
+/// heads in each encoder layer").
+pub fn dense_mha(q: &Mat, k: &Mat, v: &Mat, heads: usize) -> (Mat, Mat) {
+    let d = q.cols;
+    assert!(d % heads == 0, "D={d} not divisible by H={heads}");
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let l = q.rows;
+    let mut out = Mat::zeros(l, d);
+    let mut avg_scores = Mat::zeros(l, l);
+    for h in 0..heads {
+        let (c0, c1) = (h * dh, (h + 1) * dh);
+        let (ctx, scores) =
+            dense_attention_head(&q.col_slice(c0, c1), &k.col_slice(c0, c1), &v.col_slice(c0, c1), scale);
+        out.set_col_slice(c0, &ctx);
+        avg_scores.add_assign(&scores);
+    }
+    avg_scores.scale(1.0 / heads as f32);
+    (out, avg_scores)
+}
+
+/// One full dense-attention training pass (fwd + bwd) — the Original-
+/// Transformer baseline for the Fig. 5 step-time comparison. Returns
+/// (dQ, dK, dV).
+pub fn dense_attention_train(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    d_out: &Mat,
+) -> (Mat, Mat, Mat) {
+    // Forward.
+    let mut w = q.matmul_nt(k);
+    w.scale(scale);
+    softmax_rows(&mut w);
+    let _o = w.matmul(v);
+    // Backward (standard attention gradients). Transpose-free products
+    // (`matmul_tn`) keep every access streaming row-major — see the perf
+    // log in EXPERIMENTS.md §Perf (L3).
+    let dv = w.matmul_tn(d_out);
+    let dw = d_out.matmul_nt(v);
+    let l = w.rows;
+    let mut dz = Mat::zeros(l, l);
+    for i in 0..l {
+        let wrow = w.row(i);
+        let dwrow = dw.row(i);
+        let r: f32 = wrow.iter().zip(dwrow).map(|(a, b)| a * b).sum();
+        let zrow = dz.row_mut(i);
+        for j in 0..l {
+            zrow[j] = wrow[j] * (dwrow[j] - r);
+        }
+    }
+    let mut dq = dz.matmul(k);
+    dq.scale(scale);
+    let mut dk = dz.matmul_tn(q);
+    dk.scale(scale);
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scores_are_row_stochastic() {
+        let mut rng = Rng::new(1);
+        let q = Mat::random_normal(16, 8, 1.0, &mut rng);
+        let k = Mat::random_normal(16, 8, 1.0, &mut rng);
+        let v = Mat::random_normal(16, 8, 1.0, &mut rng);
+        let (_, s) = dense_attention_head(&q, &k, &v, 1.0 / 8f32.sqrt());
+        for i in 0..16 {
+            let mass: f32 = s.row(i).iter().sum();
+            assert!((mass - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_v() {
+        // Q=0 ⇒ scores uniform ⇒ context = column means of V.
+        let mut rng = Rng::new(2);
+        let l = 12;
+        let q = Mat::zeros(l, 4);
+        let k = Mat::random_normal(l, 4, 1.0, &mut rng);
+        let v = Mat::random_normal(l, 4, 1.0, &mut rng);
+        let (ctx, _) = dense_attention_head(&q, &k, &v, 0.5);
+        let mean = crate::tensor::ops::mean_rows(&v);
+        for i in 0..l {
+            assert_allclose(ctx.row(i), &mean, 1e-4, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn mha_single_head_equals_head_fn() {
+        let mut rng = Rng::new(3);
+        let q = Mat::random_normal(10, 8, 1.0, &mut rng);
+        let k = Mat::random_normal(10, 8, 1.0, &mut rng);
+        let v = Mat::random_normal(10, 8, 1.0, &mut rng);
+        let (a, s_a) = dense_mha(&q, &k, &v, 1);
+        let (b, s_b) = dense_attention_head(&q, &k, &v, 1.0 / 8f32.sqrt());
+        assert_allclose(&a.data, &b.data, 1e-5, 1e-6).unwrap();
+        assert_allclose(&s_a.data, &s_b.data, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn dense_train_matches_sparse_full_mask() {
+        // The dense backward and the block-CSR backward must agree on a
+        // full mask (cross-validates both implementations).
+        let mut rng = Rng::new(6);
+        let (lb, block, dh) = (3, 4, 5);
+        let l = lb * block;
+        let q = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let k = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let v = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let cot = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let scale = 0.4;
+        let (dq, dk, dv) = dense_attention_train(&q, &k, &v, scale, &cot);
+        let mask = crate::pattern::BlockMask::full(lb, block);
+        let mut ws = crate::attention::sparse::TrainWorkspace::new(&mask, dh);
+        crate::attention::sparse::sparse_attention_train(&q, &k, &v, scale, &cot, &mut ws);
+        assert_allclose(&dq.data, &ws.dq.data, 1e-3, 1e-4).unwrap();
+        assert_allclose(&dk.data, &ws.dk.data, 1e-3, 1e-4).unwrap();
+        assert_allclose(&dv.data, &ws.dv.data, 1e-3, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn mha_avg_scores_stochastic_property() {
+        QuickCheck::new().cases(15).run("mha avg scores", |rng| {
+            let heads = [1, 2, 4][rng.below(3)];
+            let l = 4 + rng.below(20);
+            let d = heads * (1 + rng.below(6));
+            let q = Mat::random_normal(l, d, 1.0, rng);
+            let k = Mat::random_normal(l, d, 1.0, rng);
+            let v = Mat::random_normal(l, d, 1.0, rng);
+            let (out, s) = dense_mha(&q, &k, &v, heads);
+            crate::qc_assert!(out.rows == l && out.cols == d, "shape");
+            for i in 0..l {
+                let mass: f32 = s.row(i).iter().sum();
+                crate::qc_assert!((mass - 1.0).abs() < 1e-4, "row {i} mass {mass}");
+            }
+            Ok(())
+        });
+    }
+}

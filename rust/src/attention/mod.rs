@@ -1,0 +1,11 @@
+//! Multi-head attention forward paths in Rust: the dense baseline
+//! (Algorithm 1 lines 5–8) and the sparse path (Algorithm 5). These are the
+//! measured kernels behind Figs. 5/6/7 and the rust-native inference engine.
+
+pub mod dense;
+pub mod sparse;
+
+pub use dense::{dense_attention_head, dense_attention_train, dense_mha};
+pub use sparse::{
+    sparse_attention_head, sparse_attention_train, sparse_mha, SparseWorkspace, TrainWorkspace,
+};

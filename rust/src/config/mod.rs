@@ -1,0 +1,7 @@
+//! Configuration system: a TOML-subset parser plus typed configs and the
+//! task presets used by the launcher, examples and benches.
+
+pub mod toml;
+pub mod types;
+
+pub use types::{ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind, TrainConfig};

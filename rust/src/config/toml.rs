@@ -1,0 +1,195 @@
+//! TOML-subset parser (the `toml` crate is not in the vendored set).
+//!
+//! Supported grammar — everything the repo's config files use:
+//! `[section]` headers, `key = value` with string / integer / float / bool /
+//! flat arrays, `#` comments, blank lines. Nested tables and multi-line
+//! values are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value. Keys before any `[section]` land in section "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(input: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+        let value = parse_value(v.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\n", "\n").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<_>, _> = split_top_level(inner).iter().map(|s| parse_value(s.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if let Ok(i) = v.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {v:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+name = "spion"           # trailing comment
+[model]
+layers = 4
+lr = 3e-4
+sparse = true
+dims = [64, 128]
+labels = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("spion"));
+        assert_eq!(doc["model"]["layers"].as_int(), Some(4));
+        assert_eq!(doc["model"]["lr"].as_float(), Some(3e-4));
+        assert_eq!(doc["model"]["sparse"].as_bool(), Some(true));
+        match &doc["model"]["dims"] {
+            TomlValue::Array(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc[""]["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = parse("[model]\nbroken line").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse("x = @").is_err());
+    }
+
+    #[test]
+    fn underscored_ints_and_hash_in_string() {
+        let doc = parse("n = 1_000_000\ns = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["n"].as_int(), Some(1_000_000));
+        assert_eq!(doc[""]["s"].as_str(), Some("a#b"));
+    }
+}

@@ -1,0 +1,402 @@
+//! Typed experiment configuration + task presets.
+//!
+//! A preset fully determines the artifact set (`artifacts/<preset>/…`) the
+//! python AOT pass emits: model shapes are baked into the HLO, so rust and
+//! python must agree — `python/compile/configs.py` mirrors `presets()` and
+//! the parity is checked by `rust/tests/artifact_manifest.rs`.
+
+use super::toml::{parse, TomlDoc};
+use crate::pattern::spion::PatternConfig;
+use crate::pattern::SpionVariant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Pixel-sequence image classification (CIFAR-10 stand-in).
+    Image,
+    /// ListOps expression evaluation (10-way classification).
+    ListOps,
+    /// Document-pair retrieval (binary classification).
+    Retrieval,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "image" | "cifar" => Some(Self::Image),
+            "listops" => Some(Self::ListOps),
+            "retrieval" | "aan" => Some(Self::Retrieval),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Image => "image",
+            Self::ListOps => "listops",
+            Self::Retrieval => "retrieval",
+        }
+    }
+}
+
+/// Which attention-sparsification policy a run uses (Table 2 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatternKind {
+    /// Dense attention for the entire run (Original Transformer).
+    Dense,
+    BigBird,
+    Reformer,
+    Spion(SpionVariant),
+}
+
+impl PatternKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "original" => Some(Self::Dense),
+            "bigbird" => Some(Self::BigBird),
+            "reformer" | "lsh" => Some(Self::Reformer),
+            other => SpionVariant::parse(other).map(Self::Spion),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Dense => "Original",
+            Self::BigBird => "BigBird",
+            Self::Reformer => "Reformer",
+            Self::Spion(v) => v.name(),
+        }
+    }
+    pub fn all() -> [PatternKind; 6] {
+        [
+            Self::Dense,
+            Self::BigBird,
+            Self::Reformer,
+            Self::Spion(SpionVariant::C),
+            Self::Spion(SpionVariant::F),
+            Self::Spion(SpionVariant::CF),
+        ]
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Preset name — also the artifact subdirectory.
+    pub preset: String,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+    /// Flat parameter-tensor count (mirrors python/compile/model.py).
+    pub fn param_tensor_count(&self) -> usize {
+        2 + 12 * self.layers + 2
+    }
+    /// Block count per side at pattern block size `b`.
+    pub fn lb(&self, b: usize) -> usize {
+        assert_eq!(self.seq_len % b, 0);
+        self.seq_len / b
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// Frobenius transition threshold α of Eq. 2 / Algorithm 2.
+    pub transition_threshold: f64,
+    /// Earliest step at which a transition may fire (Algorithm 2 needs two
+    /// previous snapshots; real runs also want a short grace period).
+    pub min_dense_steps: usize,
+    /// Cap on dense-phase length: transition is forced at this step if the
+    /// Frobenius criterion has not fired (paper trains "a few epochs" dense).
+    pub max_dense_steps: usize,
+    /// Steps between A^s snapshots for the transition detector.
+    pub snapshot_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            lr: 1e-3,
+            seed: 42,
+            transition_threshold: 0.05,
+            min_dense_steps: 10,
+            max_dense_steps: 60,
+            snapshot_every: 5,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SparsityConfig {
+    pub kind: PatternKind,
+    pub pattern: PatternConfig,
+    /// BigBird knobs (used when kind == BigBird).
+    pub bigbird: crate::pattern::bigbird::BigBirdConfig,
+    /// Reformer/LSH knobs (used when kind == Reformer).
+    pub lsh: crate::pattern::lsh::LshConfig,
+}
+
+impl SparsityConfig {
+    pub fn new(kind: PatternKind, block: usize, alpha: f64) -> Self {
+        let variant = match kind {
+            PatternKind::Spion(v) => v,
+            _ => SpionVariant::CF,
+        };
+        Self {
+            kind,
+            // Filter 31 is the paper's value for L ≥ 1024; callers with
+            // smaller L should override with `default_filter`.
+            pattern: PatternConfig { variant, block, filter: 31, alpha },
+            bigbird: Default::default(),
+            lsh: Default::default(),
+        }
+    }
+
+    /// Preset-aware construction: block, α and filter all scaled to the
+    /// model (the constructor most callers want).
+    pub fn for_model(kind: PatternKind, task: TaskKind, model: &ModelConfig) -> Self {
+        let paper = model.preset.ends_with("-paper");
+        let mut s = Self::new(kind, default_block(model), default_alpha(task, paper));
+        s.pattern.filter = default_filter(model);
+        s
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub task: TaskKind,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub sparsity: SparsityConfig,
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn artifact_path(&self, name: &str) -> String {
+        format!("{}/{}/{}.hlo.txt", self.artifacts_dir, self.model.preset, name)
+    }
+    pub fn manifest_path(&self) -> String {
+        format!("{}/{}/manifest.json", self.artifacts_dir, self.model.preset)
+    }
+}
+
+/// The presets the AOT pass compiles. `tiny` is the CI/test config; the task
+/// presets are the scaled LRA stand-ins; `*-paper` are the paper-scale
+/// shapes (compile-heavy — built on demand with `make artifacts-paper`).
+pub fn presets() -> Vec<(TaskKind, ModelConfig)> {
+    let mk = |preset: &str, seq_len, d_model, heads, layers, ffn_dim, vocab, classes, batch| ModelConfig {
+        preset: preset.to_string(),
+        seq_len,
+        d_model,
+        heads,
+        layers,
+        ffn_dim,
+        vocab,
+        classes,
+        batch,
+    };
+    vec![
+        (TaskKind::ListOps, mk("tiny", 128, 32, 2, 2, 64, 20, 10, 8)),
+        (TaskKind::Image, mk("image", 256, 64, 2, 2, 128, 256, 10, 16)),
+        (TaskKind::ListOps, mk("listops", 256, 64, 2, 2, 128, 20, 10, 16)),
+        (TaskKind::Retrieval, mk("retrieval", 512, 64, 2, 2, 128, 64, 2, 8)),
+        // Paper-scale shapes (L from §5; D=64; batch scaled to CPU memory).
+        (TaskKind::Image, mk("image-paper", 1024, 64, 2, 4, 128, 256, 10, 4)),
+        (TaskKind::ListOps, mk("listops-paper", 2048, 64, 2, 4, 128, 20, 10, 2)),
+        (TaskKind::Retrieval, mk("retrieval-paper", 4096, 64, 2, 4, 128, 64, 2, 1)),
+    ]
+}
+
+pub fn preset(name: &str) -> Option<(TaskKind, ModelConfig)> {
+    presets().into_iter().find(|(_, m)| m.preset == name)
+}
+
+/// Paper block size per task (§5: 32 for image, 64 for ListOps/retrieval),
+/// scaled with sequence length for the reduced presets so LB stays ≥ 8.
+pub fn default_block(model: &ModelConfig) -> usize {
+    let target = model.seq_len / 16;
+    target.clamp(8, 64)
+}
+
+/// Paper α per task (§5: 96 image / 98 listops / 99 retrieval at paper
+/// scale). The reduced presets keep the ordering but relax the quantile:
+/// at small L the forced diagonal already occupies several percent of the
+/// blocks, and the paper-scale quantiles leave almost nothing else —
+/// empirically (EXPERIMENTS.md) the scaled tasks need ≈15% density to
+/// retain quality, which these values produce.
+pub fn default_alpha(task: TaskKind, paper_scale: bool) -> f64 {
+    match (task, paper_scale) {
+        (TaskKind::Image, true) => 0.96,
+        (TaskKind::ListOps, true) => 0.98,
+        (TaskKind::Retrieval, true) => 0.99,
+        (TaskKind::Image, false) => 0.84,
+        (TaskKind::ListOps, false) => 0.86,
+        (TaskKind::Retrieval, false) => 0.88,
+    }
+}
+
+/// Diagonal-filter size. The paper fixes F = 31 for its L = 1024–4096
+/// tasks (0.7–3% of L); a fixed 31 at the scaled L = 128–512 covers up to
+/// 24% of the sequence and smears all structure onto the diagonal
+/// (collapsing accuracy — see EXPERIMENTS.md §Table-2 notes). Scale-aware
+/// default: F ≈ L/32, odd, capped at the paper's 31.
+pub fn default_filter(model: &ModelConfig) -> usize {
+    let f = (model.seq_len / 32).clamp(3, 31);
+    if f % 2 == 0 {
+        f + 1
+    } else {
+        f
+    }
+}
+
+/// Load an `ExperimentConfig` from a TOML file (see `configs/*.toml`).
+pub fn load_experiment(path: &str) -> Result<ExperimentConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    experiment_from_toml(&text)
+}
+
+pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
+    let doc: TomlDoc = parse(text)?;
+    let root = doc.get("").cloned().unwrap_or_default();
+    let preset_name = root
+        .get("preset")
+        .and_then(|v| v.as_str().map(String::from))
+        .ok_or("missing `preset`")?;
+    let (task, model) = preset(&preset_name).ok_or(format!("unknown preset {preset_name}"))?;
+
+    let mut train = TrainConfig::default();
+    if let Some(t) = doc.get("train") {
+        if let Some(v) = t.get("steps").and_then(|v| v.as_int()) {
+            train.steps = v as usize;
+        }
+        if let Some(v) = t.get("lr").and_then(|v| v.as_float()) {
+            train.lr = v;
+        }
+        if let Some(v) = t.get("seed").and_then(|v| v.as_int()) {
+            train.seed = v as u64;
+        }
+        if let Some(v) = t.get("transition_threshold").and_then(|v| v.as_float()) {
+            train.transition_threshold = v;
+        }
+        if let Some(v) = t.get("max_dense_steps").and_then(|v| v.as_int()) {
+            train.max_dense_steps = v as usize;
+        }
+        if let Some(v) = t.get("min_dense_steps").and_then(|v| v.as_int()) {
+            train.min_dense_steps = v as usize;
+        }
+        if let Some(v) = t.get("snapshot_every").and_then(|v| v.as_int()) {
+            train.snapshot_every = v as usize;
+        }
+    }
+
+    let mut sparsity =
+        SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model);
+    if let Some(s) = doc.get("sparsity") {
+        if let Some(v) = s.get("kind").and_then(|v| v.as_str()) {
+            sparsity.kind = PatternKind::parse(v).ok_or(format!("unknown sparsity kind {v}"))?;
+            if let PatternKind::Spion(var) = sparsity.kind {
+                sparsity.pattern.variant = var;
+            }
+        }
+        if let Some(v) = s.get("block").and_then(|v| v.as_int()) {
+            sparsity.pattern.block = v as usize;
+        }
+        if let Some(v) = s.get("filter").and_then(|v| v.as_int()) {
+            sparsity.pattern.filter = v as usize;
+        }
+        if let Some(v) = s.get("alpha").and_then(|v| v.as_float()) {
+            sparsity.pattern.alpha = v;
+        }
+    }
+
+    let artifacts_dir = root
+        .get("artifacts_dir")
+        .and_then(|v| v.as_str().map(String::from))
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    Ok(ExperimentConfig { task, model, train, sparsity, artifacts_dir })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        for (_, m) in presets() {
+            assert_eq!(m.d_model % m.heads, 0, "{}", m.preset);
+            let b = default_block(&m);
+            assert_eq!(m.seq_len % b, 0, "{}: L={} B={b}", m.preset, m.seq_len);
+            assert!(m.lb(b) >= 4, "{}: lb too small", m.preset);
+            assert!(m.param_tensor_count() > 0);
+        }
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(preset("tiny").is_some());
+        assert!(preset("nope").is_none());
+        let (task, m) = preset("retrieval-paper").unwrap();
+        assert_eq!(task, TaskKind::Retrieval);
+        assert_eq!(m.seq_len, 4096, "paper AAN length");
+    }
+
+    #[test]
+    fn default_filter_scales_with_l() {
+        let (_, tiny) = preset("tiny").unwrap(); // L=128
+        let (_, retrieval_paper) = preset("retrieval-paper").unwrap(); // L=4096
+        let f_tiny = default_filter(&tiny);
+        let f_paper = default_filter(&retrieval_paper);
+        assert!(f_tiny % 2 == 1 && f_tiny < 10, "F={f_tiny} at L=128");
+        assert_eq!(f_paper, 31, "paper value at paper scale");
+        // Filter never exceeds ~5% of L for any preset.
+        for (_, m) in presets() {
+            assert!(default_filter(&m) * 16 <= m.seq_len, "{}", m.preset);
+        }
+    }
+
+    #[test]
+    fn paper_alpha_ordering() {
+        // §5: image 96 < listops 98 < retrieval 99.
+        assert!(default_alpha(TaskKind::Image, true) < default_alpha(TaskKind::ListOps, true));
+        assert!(default_alpha(TaskKind::ListOps, true) < default_alpha(TaskKind::Retrieval, true));
+    }
+
+    #[test]
+    fn experiment_from_toml_roundtrip() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[train]
+steps = 50
+lr = 5e-4
+[sparsity]
+kind = "bigbird"
+block = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model.preset, "tiny");
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.sparsity.kind, PatternKind::BigBird);
+        assert_eq!(cfg.sparsity.pattern.block, 16);
+        assert_eq!(cfg.artifact_path("init"), "artifacts/tiny/init.hlo.txt");
+    }
+
+    #[test]
+    fn pattern_kind_parse_all() {
+        for k in PatternKind::all() {
+            assert_eq!(PatternKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Parameter checkpoints: flat binary format (magic, tensor count, per-tensor
+//! rank/dims/f32 data) so the rust-native inference engine and the serving
+//! example can load weights trained through the PJRT path.
+
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"SPIONCK1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub step: u64,
+    pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let name = self.preset.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (shape, data) in &self.tensors {
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!("tensor shape {shape:?} != data len {}", data.len()));
+            }
+            for &v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("{path}: not a SPION checkpoint"));
+        }
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut step = [0u8; 8];
+        f.read_exact(&mut step)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut d = [0u8; 8];
+                f.read_exact(&mut d)?;
+                shape.push(u64::from_le_bytes(d) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut bytes = vec![0u8; count * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push((shape, data));
+        }
+        Ok(Self {
+            preset: String::from_utf8(name)?,
+            step: u64::from_le_bytes(step),
+            tensors,
+        })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 123,
+            tensors: vec![
+                (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                (vec![4], vec![-1.0, 0.0, 1.0, 2.5]),
+            ],
+        };
+        let path = std::env::temp_dir().join("spion_ck_test.bin");
+        let path = path.to_str().unwrap();
+        ck.save(path).unwrap();
+        let back = Checkpoint::load(path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let ck = Checkpoint {
+            preset: "x".into(),
+            step: 0,
+            tensors: vec![(vec![2, 2], vec![1.0])],
+        };
+        let path = std::env::temp_dir().join("spion_ck_bad.bin");
+        assert!(ck.save(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = std::env::temp_dir().join("spion_ck_magic.bin");
+        std::fs::write(&path, b"NOTSPION____").unwrap();
+        assert!(Checkpoint::load(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator — the paper's system contribution: the three-phase
+//! training orchestration of Algorithm 2 (dense MHA → Frobenius-distance
+//! transition → per-layer pattern generation → sparse MHA until
+//! convergence), plus pattern dispatch for the baseline policies.
+
+pub mod checkpoint;
+pub mod phase;
+pub mod trainer;
+
+pub use phase::TransitionDetector;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,144 @@
+//! Dense→sparse transition detection (paper Eq. 2 + Algorithm 2 lines 7–11).
+//!
+//! Per snapshot i the detector computes, per layer,
+//! `distance_i = |‖A^s_{i−1}‖_F − ‖A^s_i‖_F|` and fires when
+//! `|distance_{i−1} − distance_i| < α` — i.e. when the score matrices'
+//! energy has stopped drifting. Layers are aggregated by mean (the paper is
+//! written for a single A^s stream; per-layer streams stabilize together in
+//! practice and a single switch point keeps the phase structure of Fig. 2).
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone)]
+pub struct TransitionDetector {
+    threshold: f64,
+    min_snapshots: usize,
+    /// ‖A^s‖_F of the previous snapshot, per layer.
+    prev_norm: Option<Vec<f64>>,
+    /// distance_{i-1}, per layer.
+    prev_distance: Option<Vec<f64>>,
+    snapshots_seen: usize,
+    fired: bool,
+}
+
+impl TransitionDetector {
+    pub fn new(threshold: f64) -> Self {
+        Self {
+            threshold,
+            min_snapshots: 3, // need two distances ⇒ three snapshots
+            prev_norm: None,
+            prev_distance: None,
+            snapshots_seen: 0,
+            fired: false,
+        }
+    }
+
+    pub fn fired(&self) -> bool {
+        self.fired
+    }
+
+    /// Feed one snapshot of per-layer score matrices; returns true exactly
+    /// once, at the snapshot where the criterion first holds.
+    pub fn observe(&mut self, scores: &[Mat]) -> bool {
+        if self.fired {
+            return false;
+        }
+        self.snapshots_seen += 1;
+        let norms: Vec<f64> = scores.iter().map(|m| m.frobenius_norm()).collect();
+        let distance: Option<Vec<f64>> = self
+            .prev_norm
+            .as_ref()
+            .map(|prev| prev.iter().zip(&norms).map(|(a, b)| (a - b).abs()).collect());
+        let fire = match (&self.prev_distance, &distance) {
+            (Some(d0), Some(d1)) if self.snapshots_seen >= self.min_snapshots => {
+                let delta: f64 =
+                    d0.iter().zip(d1).map(|(a, b)| (a - b).abs()).sum::<f64>() / d0.len() as f64;
+                delta < self.threshold
+            }
+            _ => false,
+        };
+        self.prev_norm = Some(norms);
+        if let Some(d) = distance {
+            self.prev_distance = Some(d);
+        }
+        if fire {
+            self.fired = true;
+        }
+        fire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+    use crate::util::rng::Rng;
+
+    fn scores_with_norm(l: usize, scale: f32) -> Vec<Mat> {
+        vec![Mat::filled(l, l, scale)]
+    }
+
+    #[test]
+    fn fires_when_norms_stabilize() {
+        let mut det = TransitionDetector::new(0.05);
+        // Accelerating drift: distances 8, 16 → |Δd| = 8, no fire.
+        assert!(!det.observe(&scores_with_norm(8, 1.0)));
+        assert!(!det.observe(&scores_with_norm(8, 2.0)));
+        assert!(!det.observe(&scores_with_norm(8, 4.0)));
+        // Flat: distances 0, 0 → |Δd| first 16 (no fire), then 0 → fire.
+        assert!(!det.observe(&scores_with_norm(8, 4.0)));
+        assert!(det.observe(&scores_with_norm(8, 4.0)));
+        assert!(det.fired());
+        // Never fires again.
+        assert!(!det.observe(&scores_with_norm(8, 4.0)));
+    }
+
+    #[test]
+    fn does_not_fire_while_drifting() {
+        let mut det = TransitionDetector::new(0.01);
+        let mut fired = false;
+        // Accelerating drift: distances keep changing.
+        for (i, s) in [1.0f32, 2.0, 4.0, 8.0, 16.0].iter().enumerate() {
+            fired |= det.observe(&scores_with_norm(4, *s));
+            assert!(!fired, "fired at snapshot {i}");
+        }
+    }
+
+    #[test]
+    fn fires_exactly_once_property() {
+        QuickCheck::new().cases(30).run("detector single fire", |rng| {
+            let mut det = TransitionDetector::new(0.5);
+            let mut fires = 0;
+            let layers = 1 + rng.below(4);
+            for _ in 0..20 {
+                let scores: Vec<Mat> = (0..layers)
+                    .map(|_| Mat::random_normal(6, 6, rng.f32() + 0.1, rng))
+                    .collect();
+                if det.observe(&scores) {
+                    fires += 1;
+                }
+            }
+            crate::qc_assert!(fires <= 1, "fired {fires} times");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn needs_three_snapshots_minimum() {
+        let mut det = TransitionDetector::new(1e9); // threshold never binds
+        assert!(!det.observe(&scores_with_norm(4, 1.0)));
+        assert!(!det.observe(&scores_with_norm(4, 1.0)));
+        // Third snapshot: two distances exist, threshold huge → fires now.
+        assert!(det.observe(&scores_with_norm(4, 1.0)));
+    }
+
+    #[test]
+    fn identical_matrices_fire_at_third_snapshot() {
+        let mut rng = Rng::new(1);
+        let m = Mat::random_normal(8, 8, 1.0, &mut rng);
+        let mut det = TransitionDetector::new(0.05);
+        assert!(!det.observe(std::slice::from_ref(&m)));
+        assert!(!det.observe(std::slice::from_ref(&m)));
+        assert!(det.observe(std::slice::from_ref(&m)));
+    }
+}

@@ -1,0 +1,221 @@
+//! ListOps (Nangia & Bowman 2018) generator + ground-truth evaluator.
+//!
+//! Expressions are prefix-notation trees over MIN / MAX / MED / SM
+//! (sum-mod-10) with digit leaves, e.g. `[MAX 2 9 [MIN 4 7] 0]`; the label
+//! is the evaluated value 0–9. Token ids (vocab = 20):
+//! 0 PAD, 1–10 digits 0–9, 11 MIN, 12 MAX, 13 MED, 14 SM, 15 `[`, 16 `]`.
+
+use super::Task;
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const DIGIT0: i32 = 1;
+pub const MIN: i32 = 11;
+pub const MAX: i32 = 12;
+pub const MED: i32 = 13;
+pub const SM: i32 = 14;
+pub const OPEN: i32 = 15;
+pub const CLOSE: i32 = 16;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Digit(u8),
+    Op(u8, Vec<Expr>), // op in {0:MIN, 1:MAX, 2:MED, 3:SM}
+}
+
+impl Expr {
+    pub fn eval(&self) -> u8 {
+        match self {
+            Expr::Digit(d) => *d,
+            Expr::Op(op, args) => {
+                let vals: Vec<u8> = args.iter().map(|a| a.eval()).collect();
+                match op {
+                    0 => *vals.iter().min().unwrap(),
+                    1 => *vals.iter().max().unwrap(),
+                    2 => {
+                        let mut v = vals.clone();
+                        v.sort_unstable();
+                        v[v.len() / 2]
+                    }
+                    3 => (vals.iter().map(|&v| v as u32).sum::<u32>() % 10) as u8,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Token length of the serialized form.
+    pub fn token_len(&self) -> usize {
+        match self {
+            Expr::Digit(_) => 1,
+            Expr::Op(_, args) => 3 + args.iter().map(|a| a.token_len()).sum::<usize>(),
+        }
+    }
+
+    pub fn tokens(&self, out: &mut Vec<i32>) {
+        match self {
+            Expr::Digit(d) => out.push(DIGIT0 + *d as i32),
+            Expr::Op(op, args) => {
+                out.push(OPEN);
+                out.push(MIN + *op as i32);
+                for a in args {
+                    a.tokens(out);
+                }
+                out.push(CLOSE);
+            }
+        }
+    }
+}
+
+/// Generate a random expression with bounded depth and token budget.
+pub fn gen_expr(rng: &mut Rng, depth: usize, budget: usize) -> Expr {
+    if depth == 0 || budget < 6 || rng.chance(0.35) {
+        return Expr::Digit(rng.below(10) as u8);
+    }
+    let op = rng.below(4) as u8;
+    let arity = 2 + rng.below(3); // 2..=4 args
+    let mut args = Vec::with_capacity(arity);
+    let mut remaining = budget - 3;
+    for i in 0..arity {
+        let share = remaining / (arity - i);
+        let child = gen_expr(rng, depth - 1, share);
+        remaining = remaining.saturating_sub(child.token_len());
+        args.push(child);
+    }
+    Expr::Op(op, args)
+}
+
+pub struct ListOpsTask {
+    seq_len: usize,
+    vocab: usize,
+    classes: usize,
+}
+
+impl ListOpsTask {
+    pub fn new(seq_len: usize, vocab: usize, classes: usize) -> Self {
+        assert!(vocab >= 17, "listops needs vocab ≥ 17");
+        assert_eq!(classes, 10, "listops labels are digits");
+        Self { seq_len, vocab, classes }
+    }
+}
+
+impl Task for ListOpsTask {
+    fn sample(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        // Depth scales gently with L, as in LRA's long-sequence setting.
+        let depth = 3 + (self.seq_len / 128).min(5);
+        let expr = gen_expr(rng, depth, self.seq_len);
+        let mut toks = Vec::with_capacity(self.seq_len);
+        expr.tokens(&mut toks);
+        toks.truncate(self.seq_len);
+        let label = expr.eval() as i32;
+        toks.resize(self.seq_len, PAD);
+        (toks, label)
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    /// Brute-force evaluator over the token stream (independent
+    /// implementation used to cross-check `Expr::eval`).
+    fn eval_tokens(toks: &[i32]) -> Option<u8> {
+        fn parse(toks: &[i32], i: &mut usize) -> Option<u8> {
+            match toks.get(*i)? {
+                &d if (DIGIT0..DIGIT0 + 10).contains(&d) => {
+                    *i += 1;
+                    Some((d - DIGIT0) as u8)
+                }
+                &OPEN => {
+                    *i += 1;
+                    let op = *toks.get(*i)?;
+                    *i += 1;
+                    let mut vals = Vec::new();
+                    while *toks.get(*i)? != CLOSE {
+                        vals.push(parse(toks, i)?);
+                    }
+                    *i += 1;
+                    Some(match op {
+                        MIN => *vals.iter().min()?,
+                        MAX => *vals.iter().max()?,
+                        MED => {
+                            let mut v = vals.clone();
+                            v.sort_unstable();
+                            v[v.len() / 2]
+                        }
+                        SM => (vals.iter().map(|&v| v as u32).sum::<u32>() % 10) as u8,
+                        _ => return None,
+                    })
+                }
+                _ => None,
+            }
+        }
+        let mut i = 0;
+        parse(toks, &mut i)
+    }
+
+    #[test]
+    fn eval_known_expression() {
+        // [MAX 2 9 [MIN 4 7] 0] = 9
+        let e = Expr::Op(
+            1,
+            vec![Expr::Digit(2), Expr::Digit(9), Expr::Op(0, vec![Expr::Digit(4), Expr::Digit(7)]), Expr::Digit(0)],
+        );
+        assert_eq!(e.eval(), 9);
+        // [SM 5 6] = 1
+        assert_eq!(Expr::Op(3, vec![Expr::Digit(5), Expr::Digit(6)]).eval(), 1);
+        // [MED 3 1 9] = 3
+        assert_eq!(Expr::Op(2, vec![Expr::Digit(3), Expr::Digit(1), Expr::Digit(9)]).eval(), 3);
+    }
+
+    #[test]
+    fn tokens_roundtrip_eval_property() {
+        QuickCheck::new().cases(100).run("listops eval parity", |rng| {
+            let e = gen_expr(rng, 4, 200);
+            let mut toks = Vec::new();
+            e.tokens(&mut toks);
+            crate::qc_assert!(toks.len() == e.token_len(), "token_len mismatch");
+            let parsed = eval_tokens(&toks);
+            crate::qc_assert!(parsed == Some(e.eval()), "{toks:?}: {parsed:?} != {}", e.eval());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_never_out_of_vocab() {
+        let task = ListOpsTask::new(64, 20, 10);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..200 {
+            let (x, y) = task.sample(&mut rng);
+            assert_eq!(x.len(), 64);
+            assert!(x.iter().all(|&t| (0..17).contains(&t)));
+            assert!((0..10).contains(&y));
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_digits() {
+        let task = ListOpsTask::new(128, 20, 10);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..500 {
+            let (_, y) = task.sample(&mut rng);
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 9, "{seen:?}");
+    }
+}

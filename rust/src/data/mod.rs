@@ -1,0 +1,65 @@
+//! Synthetic LRA-style task data (DESIGN.md §3 records the substitution of
+//! the paper's CIFAR-10 / ListOps / AAN datasets with in-repo generators
+//! that exercise the identical code paths at CPU-feasible scale).
+//!
+//! Every generator is deterministic from a `u64` seed and emits
+//! `(tokens: Vec<i32>, label: i32)` samples padded to the preset's L.
+
+pub mod batcher;
+pub mod image;
+pub mod listops;
+pub mod retrieval;
+
+use crate::config::TaskKind;
+use crate::util::rng::Rng;
+
+/// A classification task producing fixed-length token sequences.
+pub trait Task: Send {
+    /// (tokens of length seq_len, label in [0, classes)).
+    fn sample(&self, rng: &mut Rng) -> (Vec<i32>, i32);
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn classes(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate the task matching a preset's manifest dimensions.
+pub fn make_task(kind: TaskKind, seq_len: usize, vocab: usize, classes: usize) -> Box<dyn Task> {
+    match kind {
+        TaskKind::ListOps => Box::new(listops::ListOpsTask::new(seq_len, vocab, classes)),
+        TaskKind::Image => Box::new(image::ImageTask::new(seq_len, vocab, classes)),
+        TaskKind::Retrieval => Box::new(retrieval::RetrievalTask::new(seq_len, vocab, classes)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_produce_valid_samples() {
+        for kind in [TaskKind::ListOps, TaskKind::Image, TaskKind::Retrieval] {
+            let (seq, vocab, classes) = match kind {
+                TaskKind::ListOps => (128, 20, 10),
+                TaskKind::Image => (256, 256, 10),
+                TaskKind::Retrieval => (128, 64, 2),
+            };
+            let task = make_task(kind, seq, vocab, classes);
+            let mut rng = Rng::new(1);
+            for _ in 0..20 {
+                let (x, y) = task.sample(&mut rng);
+                assert_eq!(x.len(), seq, "{kind:?}");
+                assert!(x.iter().all(|&t| (0..vocab as i32).contains(&t)), "{kind:?} token range");
+                assert!((0..classes as i32).contains(&y), "{kind:?} label range");
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        let task = make_task(TaskKind::ListOps, 128, 20, 10);
+        let a = task.sample(&mut Rng::new(9));
+        let b = task.sample(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,150 @@
+//! Document-pair retrieval (AAN stand-in): binary classification of whether
+//! two documents are related.
+//!
+//! Each "document" is a bag-of-topics token stream: a topic defines a
+//! Zipf-ish distribution over a token subrange. A positive pair shares its
+//! topic (with lexical noise); a negative pair draws two distinct topics.
+//! Sequence layout: `[CLS] doc1 [SEP] doc2`, padded to L — one encoder over
+//! the concatenated pair, as in LRA's retrieval formulation.
+
+use super::Task;
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+const CONTENT0: i32 = 4;
+
+pub struct RetrievalTask {
+    seq_len: usize,
+    vocab: usize,
+    classes: usize,
+    topics: usize,
+}
+
+impl RetrievalTask {
+    pub fn new(seq_len: usize, vocab: usize, classes: usize) -> Self {
+        assert_eq!(classes, 2, "retrieval is binary");
+        assert!(vocab >= 16);
+        Self { seq_len, vocab, classes, topics: 8 }
+    }
+
+    /// Sample one document's tokens under a topic.
+    fn doc(&self, topic: usize, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let content = self.vocab as i32 - CONTENT0;
+        let span = content / self.topics as i32; // tokens "owned" by a topic
+        let base = CONTENT0 + topic as i32 * span;
+        (0..len)
+            .map(|_| {
+                if rng.chance(0.75) {
+                    // Topic token, geometric-ish rank distribution.
+                    let r = (rng.f64() * rng.f64() * span as f64) as i32;
+                    base + r.min(span - 1)
+                } else {
+                    // Background noise token from the whole content range.
+                    CONTENT0 + rng.below(content as usize) as i32
+                }
+            })
+            .collect()
+    }
+}
+
+impl Task for RetrievalTask {
+    fn sample(&self, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let doc_len = (self.seq_len - 2) / 2;
+        let label = rng.chance(0.5);
+        let t1 = rng.below(self.topics);
+        let t2 = if label {
+            t1
+        } else {
+            // distinct topic
+            let mut t = rng.below(self.topics - 1);
+            if t >= t1 {
+                t += 1;
+            }
+            t
+        };
+        let mut toks = Vec::with_capacity(self.seq_len);
+        toks.push(CLS);
+        toks.extend(self.doc(t1, doc_len, rng));
+        toks.push(SEP);
+        toks.extend(self.doc(t2, doc_len, rng));
+        toks.resize(self.seq_len, PAD);
+        (toks, label as i32)
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_markers_present() {
+        let task = RetrievalTask::new(128, 64, 2);
+        let mut rng = Rng::new(1);
+        let (x, _) = task.sample(&mut rng);
+        assert_eq!(x[0], CLS);
+        assert_eq!(x.iter().filter(|&&t| t == SEP).count(), 1);
+    }
+
+    #[test]
+    fn positive_pairs_share_vocabulary() {
+        // Token-histogram cosine similarity — the signal a mean-pooled
+        // encoder actually sees — must separate positives from negatives.
+        let task = RetrievalTask::new(256, 64, 2);
+        let mut rng = Rng::new(2);
+        let hist = |toks: &[i32]| {
+            let mut h = vec![0.0f64; 64];
+            for &t in toks {
+                if t >= CONTENT0 {
+                    h[t as usize] += 1.0;
+                }
+            }
+            h
+        };
+        let cosine = |a: &[f64], b: &[f64]| {
+            let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+            dot / (na * nb).max(1e-12)
+        };
+        let (mut pos, mut neg) = (0.0, 0.0);
+        let (mut npos, mut nneg) = (0, 0);
+        for _ in 0..200 {
+            let (x, y) = task.sample(&mut rng);
+            let sep = x.iter().position(|&t| t == SEP).unwrap();
+            let sim = cosine(&hist(&x[1..sep]), &hist(&x[sep + 1..]));
+            if y == 1 {
+                pos += sim;
+                npos += 1;
+            } else {
+                neg += sim;
+                nneg += 1;
+            }
+        }
+        let pos = pos / npos as f64;
+        let neg = neg / nneg as f64;
+        assert!(pos > neg + 0.15, "pos {pos} vs neg {neg} — task not learnable");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let task = RetrievalTask::new(128, 64, 2);
+        let mut rng = Rng::new(3);
+        let ones: i32 = (0..400).map(|_| task.sample(&mut rng).1).sum();
+        assert!((120..=280).contains(&ones), "{ones}/400");
+    }
+}

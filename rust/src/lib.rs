@@ -1,0 +1,24 @@
+//! SPION: layer-wise sparse training of Transformers via convolutional
+//! flood filling — Rust + JAX + Pallas (AOT via HLO text / PJRT) stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): three-phase training coordinator, pattern generation
+//!   (Algorithms 3+4), block-CSR sparse MHA engine (Algorithms 5+6),
+//!   synthetic LRA data, PJRT runtime, serving.
+//! * L2 (`python/compile/model.py`): JAX encoder fwd/bwd + Adam, AOT-lowered
+//!   to `artifacts/*.hlo.txt`.
+//! * L1 (`python/compile/kernels/`): Pallas block-sparse attention kernel
+//!   (interpret=True), lowered inside the L2 HLO.
+
+pub mod util;
+pub mod tensor;
+pub mod config;
+pub mod pattern;
+pub mod sparse;
+pub mod attention;
+pub mod model;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod serve;
+pub mod metrics;

@@ -1,0 +1,279 @@
+//! `spion` — launcher CLI for the SPION reproduction.
+//!
+//! Subcommands:
+//!   train     three-phase SPION training on a preset (Algorithm 2)
+//!   pattern   generate + render a sparsity pattern from synthetic scores
+//!   ops       print the §4.4 operation-count analysis
+//!   data      sample and display task data
+//!   serve     batched inference over a trained checkpoint
+//!   presets   list available presets / artifact status
+
+use anyhow::Result;
+use spion::config::types::{preset, presets};
+use spion::config::types::SparsityConfig;
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::coordinator::Trainer;
+use spion::runtime::Runtime;
+use spion::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "train" => run_train(&args),
+        "pattern" => run_pattern(&args),
+        "ops" => run_ops(&args),
+        "data" => run_data(&args),
+        "serve" => run_serve(&args),
+        "presets" => run_presets(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "spion — layer-wise sparse Transformer training (SPION reproduction)\n\n\
+         USAGE: spion <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n\
+         \x20 train     --preset tiny --kind cf --steps 200 --lr 1e-3 [--config file.toml]\n\
+         \x20 pattern   --variant cf --l 256 --block 16 --alpha 0.9\n\
+         \x20 ops       --l 4096 --d 64 --density 0.1\n\
+         \x20 data      --task listops --n 3\n\
+         \x20 serve     --preset tiny --checkpoint ck.bin [--kind cf] --requests 64\n\
+         \x20 presets\n"
+    );
+}
+
+/// Build an [`ExperimentConfig`] from CLI flags (or a `--config` TOML file).
+pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
+    if let Some(path) = args.get("config") {
+        return spion::config::types::load_experiment(path).map_err(|e| anyhow::anyhow!(e));
+    }
+    let preset_name = args.str_or("preset", "tiny");
+    let (task, model) =
+        preset(&preset_name).ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
+    let kind = PatternKind::parse(&args.str_or("kind", "cf"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --kind"))?;
+    let mut sparsity = SparsityConfig::for_model(kind, task, &model);
+    sparsity.pattern.block = args.usize_or("block", sparsity.pattern.block);
+    sparsity.pattern.alpha = args.f64_or("alpha", sparsity.pattern.alpha);
+    sparsity.pattern.filter = args.usize_or("filter", sparsity.pattern.filter);
+    let mut train = TrainConfig::default();
+    train.steps = args.usize_or("steps", train.steps);
+    train.lr = args.f64_or("lr", train.lr);
+    train.seed = args.u64_or("seed", train.seed);
+    train.max_dense_steps = args.usize_or("max-dense-steps", train.max_dense_steps);
+    train.min_dense_steps = args.usize_or("min-dense-steps", train.min_dense_steps);
+    train.transition_threshold = args.f64_or("transition-threshold", train.transition_threshold);
+    Ok(ExperimentConfig {
+        task,
+        model,
+        train,
+        sparsity,
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+    })
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    println!(
+        "training preset={} task={:?} kind={} steps={} (L={}, D={}, H={}, N={})",
+        exp.model.preset,
+        exp.task,
+        exp.sparsity.kind.name(),
+        exp.train.steps,
+        exp.model.seq_len,
+        exp.model.d_model,
+        exp.model.heads,
+        exp.model.layers
+    );
+    let rt = Runtime::cpu()?;
+    let trainer = Trainer::new(&rt, exp)?.verbose(true);
+    let outcome = trainer.run()?;
+    if let Some(csv) = args.get("metrics-out") {
+        outcome.metrics.save(csv)?;
+        println!("metrics written to {csv}");
+    }
+    if let Some(ck) = args.get("checkpoint-out") {
+        trainer.save_checkpoint(&outcome, ck)?;
+        println!("checkpoint written to {ck}");
+    }
+    println!(
+        "done: final loss {:.4}, eval acc {:.4}, transition at {:?}",
+        outcome.metrics.final_loss().unwrap_or(f32::NAN),
+        outcome.metrics.eval_accuracy.unwrap_or(f64::NAN),
+        outcome.metrics.transition_step
+    );
+    Ok(())
+}
+
+fn run_pattern(args: &Args) -> Result<()> {
+    use spion::pattern::spion::{synth_attention_scores, PatternConfig};
+    use spion::pattern::SpionVariant;
+    let l = args.usize_or("l", 256);
+    let block = args.usize_or("block", 16);
+    let variant = SpionVariant::parse(&args.str_or("variant", "cf"))
+        .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+    let cfg = PatternConfig {
+        variant,
+        block,
+        filter: args.usize_or("filter", 7),
+        alpha: args.f64_or("alpha", 0.9),
+    };
+    let mut rng = spion::util::rng::Rng::new(args.u64_or("seed", 1));
+    let scores = synth_attention_scores(
+        l,
+        args.f64_or("diag", 1.0) as f32,
+        args.f64_or("vert", 0.3) as f32,
+        &[l / 3],
+        0.05,
+        &mut rng,
+    );
+    let mask = spion::pattern::generate_pattern(&scores, &cfg);
+    println!(
+        "{} pattern: L={l} B={block} → {}×{} blocks, density {:.3} (sparsity {:.1}%)",
+        variant.name(),
+        mask.lb,
+        mask.lb,
+        mask.density(),
+        100.0 * mask.sparsity()
+    );
+    println!("{}", mask.render());
+    Ok(())
+}
+
+fn run_ops(args: &Args) -> Result<()> {
+    use spion::sparse::ops::{dense_total_closed, sparse_total_closed};
+    let l = args.usize_or("l", 4096) as u64;
+    let d = args.usize_or("d", 64) as u64;
+    let density = args.f64_or("density", 0.1);
+    let c = ((l * l) as f64 * density) as u64;
+    let dense = dense_total_closed(l, d);
+    let sparse = sparse_total_closed(l, d, c);
+    println!("L={l} D={d} C={c} ({:.0}% of L²)", density * 100.0);
+    println!("dense MHA ops : {dense}");
+    println!("sparse MHA ops: {sparse}");
+    println!("reduction     : {:.2}×", dense as f64 / sparse as f64);
+    Ok(())
+}
+
+fn run_data(args: &Args) -> Result<()> {
+    let kind = spion::config::TaskKind::parse(&args.str_or("task", "listops"))
+        .ok_or_else(|| anyhow::anyhow!("bad --task"))?;
+    let (seq, vocab, classes) = match kind {
+        spion::config::TaskKind::ListOps => (128, 20, 10),
+        spion::config::TaskKind::Image => (256, 256, 10),
+        spion::config::TaskKind::Retrieval => (128, 64, 2),
+    };
+    let task = spion::data::make_task(kind, seq, vocab, classes);
+    let mut rng = spion::util::rng::Rng::new(args.u64_or("seed", 0));
+    for _ in 0..args.usize_or("n", 3) {
+        let (x, y) = task.sample(&mut rng);
+        println!("label={y} tokens={:?}…", &x[..24.min(x.len())]);
+    }
+    Ok(())
+}
+
+/// Batched inference serving over a trained checkpoint (rust-native engine;
+/// dense by default, SPION-sparse with `--kind cf` — pattern regenerated
+/// from synthetic scores unless the checkpoint came with pattern renders).
+fn run_serve(args: &Args) -> Result<()> {
+    use spion::model::{Encoder, ModelParams};
+    use spion::serve::{BatchPolicy, InferenceServer};
+    let preset_name = args.str_or("preset", "tiny");
+    let (task, model) =
+        preset(&preset_name).ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
+    let params = if let Some(ck_path) = args.get("checkpoint") {
+        let ck = spion::coordinator::checkpoint::Checkpoint::load(ck_path)?;
+        println!("loaded checkpoint {ck_path} (step {})", ck.step);
+        ModelParams::from_checkpoint(&ck, model.layers)?
+    } else {
+        anyhow::bail!("--checkpoint required (train one with `spion train --checkpoint-out ...`)");
+    };
+    let kind = PatternKind::parse(&args.str_or("kind", "dense"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --kind"))?;
+    let encoder = match kind {
+        PatternKind::Dense => Encoder::new(params, model.heads),
+        _ => {
+            let exp = ExperimentConfig {
+                task,
+                model: model.clone(),
+                train: TrainConfig::default(),
+                sparsity: SparsityConfig::for_model(kind, task, &model),
+                artifacts_dir: args.str_or("artifacts", "artifacts"),
+            };
+            let mut rng = spion::util::rng::Rng::new(11);
+            let scores: Vec<_> = (0..model.layers)
+                .map(|_| {
+                    spion::pattern::spion::synth_attention_scores(
+                        model.seq_len, 1.0, 0.3, &[model.seq_len / 3], 0.05, &mut rng,
+                    )
+                })
+                .collect();
+            let masks = spion::coordinator::trainer::generate_masks_for(&exp, &scores)?;
+            let d: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
+            println!("serving with {} pattern, mean density {d:.3}", kind.name());
+            Encoder::new(params, model.heads).with_masks(masks)
+        }
+    };
+    let server = InferenceServer::start(
+        encoder,
+        BatchPolicy {
+            max_batch: args.usize_or("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 5)),
+        },
+    );
+    // Drive a synthetic workload through concurrent clients.
+    let n = args.usize_or("requests", 64);
+    let conc = args.usize_or("concurrency", 4);
+    let gen = spion::data::make_task(task, model.seq_len, model.vocab, model.classes);
+    let mut batcher = spion::data::batcher::Batcher::new(gen, 1, 99);
+    let work: Vec<Vec<i32>> = (0..n).map(|_| batcher.next_batch().x).collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for chunk in work.chunks(n.div_ceil(conc)) {
+        let client = server.client();
+        let chunk = chunk.to_vec();
+        handles.push(std::thread::spawn(move || {
+            chunk.into_iter().filter_map(|t| client.infer(t)).count()
+        }));
+    }
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = t0.elapsed();
+    println!(
+        "served {served}/{n} | mean latency {:.2} ms | max {:.2} ms | {:.1} req/s | mean batch {:.1}",
+        server.stats.mean_latency_ms(),
+        server.stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
+        server.stats.throughput_rps(elapsed),
+        server.stats.mean_batch(),
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn run_presets(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    println!("{:<16} {:>6} {:>5} {:>3} {:>3} {:>6} artifacts", "preset", "L", "D", "H", "N", "batch");
+    for (task, m) in presets() {
+        let built = std::path::Path::new(&format!("{dir}/{}/manifest.json", m.preset)).exists();
+        println!(
+            "{:<16} {:>6} {:>5} {:>3} {:>3} {:>6} {} ({:?})",
+            m.preset,
+            m.seq_len,
+            m.d_model,
+            m.heads,
+            m.layers,
+            m.batch,
+            if built { "built" } else { "missing" },
+            task,
+        );
+    }
+    Ok(())
+}

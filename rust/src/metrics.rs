@@ -1,0 +1,169 @@
+//! Training/serving metrics: loss curves, step timings, op counts, memory
+//! estimates; CSV/JSON emission for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Dense,
+    Sparse,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Dense => "dense",
+            Phase::Sparse => "sparse",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub phase: Phase,
+    pub loss: f32,
+    pub acc: f32,
+    pub step_ms: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TrainMetrics {
+    pub records: Vec<StepRecord>,
+    /// Step index at which the dense→sparse transition fired (Algorithm 2).
+    pub transition_step: Option<usize>,
+    /// Per-layer pattern density after generation.
+    pub pattern_density: Vec<f64>,
+    pub eval_accuracy: Option<f64>,
+}
+
+impl TrainMetrics {
+    pub fn record(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn mean_step_ms(&self, phase: Phase) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.phase == phase)
+            .map(|r| r.step_ms)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+        }
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Loss-curve CSV (step, phase, loss, acc, ms).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,phase,loss,acc,step_ms\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.4},{:.3}\n",
+                r.step,
+                r.phase.name(),
+                r.loss,
+                r.acc,
+                r.step_ms
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("transition_step", match self.transition_step {
+                Some(s) => Json::Num(s as f64),
+                None => Json::Null,
+            }),
+            ("pattern_density", Json::arr_f64(&self.pattern_density)),
+            ("eval_accuracy", match self.eval_accuracy {
+                Some(a) => Json::Num(a),
+                None => Json::Null,
+            }),
+            (
+                "loss",
+                Json::arr_f32(&self.records.iter().map(|r| r.loss).collect::<Vec<_>>()),
+            ),
+            (
+                "step_ms",
+                Json::arr_f64(&self.records.iter().map(|r| r.step_ms).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, csv_path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(csv_path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(csv_path, self.to_csv())
+    }
+}
+
+/// Attention-memory model behind the paper's Fig. 5 footprint comparison:
+/// dense stores L² score floats per head, sparse stores C plus block-CSR
+/// indices. Counts the per-step working set of the MHA score matrices
+/// (batch × heads instances).
+pub fn attention_bytes_dense(batch: usize, heads: usize, l: usize) -> usize {
+    batch * heads * l * l * std::mem::size_of::<f32>()
+}
+
+pub fn attention_bytes_sparse(
+    batch: usize,
+    heads: usize,
+    nnz_elements: usize,
+    nnz_blocks: usize,
+    lb: usize,
+) -> usize {
+    let values = nnz_elements * std::mem::size_of::<f32>();
+    let idx = nnz_blocks * std::mem::size_of::<u32>() + (lb + 1) * std::mem::size_of::<u32>();
+    batch * heads * (values + idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_means() {
+        let mut m = TrainMetrics::default();
+        m.record(StepRecord { step: 0, phase: Phase::Dense, loss: 2.0, acc: 0.1, step_ms: 10.0 });
+        m.record(StepRecord { step: 1, phase: Phase::Sparse, loss: 1.5, acc: 0.2, step_ms: 4.0 });
+        m.record(StepRecord { step: 2, phase: Phase::Sparse, loss: 1.2, acc: 0.3, step_ms: 6.0 });
+        assert_eq!(m.mean_step_ms(Phase::Dense), Some(10.0));
+        assert_eq!(m.mean_step_ms(Phase::Sparse), Some(5.0));
+        assert_eq!(m.final_loss(), Some(1.2));
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.contains("1,sparse,1.5"));
+    }
+
+    #[test]
+    fn memory_model_ratio_matches_density() {
+        // 10% density ⇒ ≈10× memory reduction (indices are second order).
+        let l = 4096;
+        let lb = 64;
+        let nnz_blocks = lb * lb / 10;
+        let nnz = nnz_blocks * 64 * 64;
+        let dense = attention_bytes_dense(1, 1, l);
+        let sparse = attention_bytes_sparse(1, 1, nnz, nnz_blocks, lb);
+        let ratio = dense as f64 / sparse as f64;
+        assert!((8.0..12.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut m = TrainMetrics::default();
+        m.transition_step = Some(5);
+        m.pattern_density = vec![0.1, 0.2];
+        let j = m.to_json();
+        assert_eq!(j.get("transition_step").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("pattern_density").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`],
+//! with either dense MHA or the block-sparse engine (Algorithm 5).
+
+use crate::attention::{dense_mha, sparse_mha, SparseWorkspace};
+use crate::pattern::BlockMask;
+use crate::tensor::ops::{add_bias, layernorm, mean_rows, relu};
+use crate::tensor::Mat;
+
+use super::ModelParams;
+
+const LN_EPS: f32 = 1e-6; // matches python/compile/model.py
+
+pub struct Encoder {
+    pub params: ModelParams,
+    pub heads: usize,
+    /// Per-layer sparse workspaces; None = dense attention.
+    sparse: Option<Vec<Vec<SparseWorkspace>>>,
+    masks: Option<Vec<BlockMask>>,
+}
+
+impl Encoder {
+    pub fn new(params: ModelParams, heads: usize) -> Self {
+        assert_eq!(params.d_model() % heads, 0);
+        Self { params, heads, sparse: None, masks: None }
+    }
+
+    /// Switch to sparse attention with per-layer masks.
+    pub fn with_masks(mut self, masks: Vec<BlockMask>) -> Self {
+        assert_eq!(masks.len(), self.params.layers.len());
+        let dh = self.params.d_model() / self.heads;
+        self.sparse = Some(
+            masks
+                .iter()
+                .map(|m| (0..self.heads).map(|_| SparseWorkspace::new(m, dh)).collect())
+                .collect(),
+        );
+        self.masks = Some(masks);
+        self
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.sparse.is_some()
+    }
+
+    /// Forward one sequence of tokens; returns (logits, per-layer A^s for
+    /// the dense path — empty when sparse).
+    pub fn forward(&mut self, tokens: &[i32]) -> (Vec<f32>, Vec<Mat>) {
+        let p = &self.params;
+        let l = p.seq_len();
+        assert_eq!(tokens.len(), l, "expected {l} tokens");
+        let d = p.d_model();
+        // E = embed[x] + pos
+        let mut e = Mat::zeros(l, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
+            let prow = p.pos.row(i);
+            for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
+                *o = a + b;
+            }
+        }
+        let mut scores_out = Vec::new();
+        for (n, lp) in p.layers.iter().enumerate() {
+            let x = layernorm(&e, &lp.ln1_g, &lp.ln1_b, LN_EPS);
+            let q = x.matmul(&lp.wq);
+            let k = x.matmul(&lp.wk);
+            let v = x.matmul(&lp.wv);
+            let a = match &mut self.sparse {
+                None => {
+                    let (a, s) = dense_mha(&q, &k, &v, self.heads);
+                    scores_out.push(s);
+                    a
+                }
+                Some(ws) => sparse_mha(&q, &k, &v, self.heads, &mut ws[n]),
+            };
+            let mut o = a.matmul(&lp.wo);
+            o.add_assign(&e);
+            let mut f = layernorm(&o, &lp.ln2_g, &lp.ln2_b, LN_EPS).matmul(&lp.wf);
+            add_bias(&mut f, &lp.bf);
+            relu(&mut f);
+            let mut e_new = f.matmul(&lp.we);
+            add_bias(&mut e_new, &lp.be);
+            e_new.add_assign(&o);
+            e = e_new;
+        }
+        let pooled = mean_rows(&e);
+        let pooled_mat = Mat::from_vec(1, d, pooled);
+        let mut logits = pooled_mat.matmul(&p.cls_w);
+        add_bias(&mut logits, &p.cls_b);
+        (logits.data, scores_out)
+    }
+
+    /// Forward a batch (row-major tokens, batch × L); returns logits
+    /// (batch × classes).
+    pub fn forward_batch(&mut self, tokens: &[i32], batch: usize) -> Mat {
+        let l = self.params.seq_len();
+        assert_eq!(tokens.len(), batch * l);
+        let classes = self.params.classes();
+        let mut out = Mat::zeros(batch, classes);
+        for b in 0..batch {
+            let (logits, _) = self.forward(&tokens[b * l..(b + 1) * l]);
+            out.row_mut(b).copy_from_slice(&logits);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::ModelParams;
+    use crate::pattern::BlockMask;
+    use crate::util::quickcheck::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn mk_encoder(rng: &mut Rng) -> Encoder {
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, rng);
+        Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2)
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mut rng = Rng::new(1);
+        let mut enc = mk_encoder(&mut rng);
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        let (a, scores) = enc.forward(&toks);
+        let (b, _) = enc.forward(&toks);
+        assert_eq!(a.len(), 4);
+        assert_eq!(scores.len(), 2);
+        assert_eq!(scores[0].rows, 16);
+        assert_allclose(&a, &b, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn sparse_full_mask_matches_dense() {
+        let mut rng = Rng::new(2);
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let toks: Vec<i32> = (0..16).map(|i| ((i * 5) % 12) as i32).collect();
+        let mut dense = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2);
+        let (ld, _) = dense.forward(&toks);
+        let full = vec![BlockMask::full(4, 4), BlockMask::full(4, 4)];
+        let mut sparse =
+            Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2).with_masks(full);
+        let (ls, _) = sparse.forward(&toks);
+        assert_allclose(&ld, &ls, 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn batch_forward_matches_single() {
+        let mut rng = Rng::new(3);
+        let mut enc = mk_encoder(&mut rng);
+        let toks: Vec<i32> = (0..32).map(|i| (i % 12) as i32).collect();
+        let batch = enc.forward_batch(&toks, 2);
+        let (one, _) = enc.forward(&toks[16..32]);
+        assert_allclose(batch.row(1), &one, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn scores_row_stochastic() {
+        let mut rng = Rng::new(4);
+        let mut enc = mk_encoder(&mut rng);
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        let (_, scores) = enc.forward(&toks);
+        for s in &scores {
+            for i in 0..s.rows {
+                let mass: f32 = s.row(i).iter().sum();
+                assert!((mass - 1.0).abs() < 1e-4, "row {i}: {mass}");
+            }
+        }
+    }
+}

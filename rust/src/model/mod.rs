@@ -1,0 +1,13 @@
+//! Rust-native encoder inference engine.
+//!
+//! Mirrors the L2 JAX model exactly (same param layout, LN eps, masking
+//! semantics) so weights trained through the PJRT path can be served with
+//! zero python *and* zero XLA on the request path — this is the engine the
+//! serving router uses, and it is cross-validated against the `dense_fwd`
+//! artifact in `rust/tests/e2e_tiny.rs`.
+
+pub mod encoder;
+pub mod params;
+
+pub use encoder::Encoder;
+pub use params::ModelParams;

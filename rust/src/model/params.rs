@@ -1,0 +1,153 @@
+//! Typed view over the flat parameter list (manifest order — the ABI shared
+//! with `python/compile/configs.py::param_specs`).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub wf: Mat,
+    pub bf: Vec<f32>,
+    pub we: Mat,
+    pub be: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub embed: Mat,
+    pub pos: Mat,
+    pub layers: Vec<LayerParams>,
+    pub cls_w: Mat,
+    pub cls_b: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Assemble from flat `(shape, data)` tensors in manifest order.
+    pub fn from_flat(tensors: &[(Vec<usize>, Vec<f32>)], layers: usize) -> Result<Self> {
+        let expect = 2 + 12 * layers + 2;
+        if tensors.len() != expect {
+            return Err(anyhow!("expected {expect} tensors for {layers} layers, got {}", tensors.len()));
+        }
+        let mat = |t: &(Vec<usize>, Vec<f32>)| -> Result<Mat> {
+            if t.0.len() != 2 {
+                return Err(anyhow!("expected rank-2 tensor, got shape {:?}", t.0));
+            }
+            Ok(Mat::from_vec(t.0[0], t.0[1], t.1.clone()))
+        };
+        let vec1 = |t: &(Vec<usize>, Vec<f32>)| -> Result<Vec<f32>> {
+            if t.0.len() != 1 {
+                return Err(anyhow!("expected rank-1 tensor, got shape {:?}", t.0));
+            }
+            Ok(t.1.clone())
+        };
+        let mut it = tensors.iter();
+        let mut next = || it.next().unwrap();
+        let embed = mat(next())?;
+        let pos = mat(next())?;
+        let mut layer_params = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            layer_params.push(LayerParams {
+                ln1_g: vec1(next())?,
+                ln1_b: vec1(next())?,
+                wq: mat(next())?,
+                wk: mat(next())?,
+                wv: mat(next())?,
+                wo: mat(next())?,
+                ln2_g: vec1(next())?,
+                ln2_b: vec1(next())?,
+                wf: mat(next())?,
+                bf: vec1(next())?,
+                we: mat(next())?,
+                be: vec1(next())?,
+            });
+        }
+        let cls_w = mat(next())?;
+        let cls_b = vec1(next())?;
+        Ok(Self { embed, pos, layers: layer_params, cls_w, cls_b })
+    }
+
+    pub fn from_checkpoint(ck: &Checkpoint, layers: usize) -> Result<Self> {
+        Self::from_flat(&ck.tensors, layers)
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.embed.cols
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.pos.rows
+    }
+
+    pub fn classes(&self) -> usize {
+        self.cls_w.cols
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn random_flat(
+        vocab: usize,
+        l: usize,
+        d: usize,
+        ffn: usize,
+        layers: usize,
+        classes: usize,
+        rng: &mut Rng,
+    ) -> Vec<(Vec<usize>, Vec<f32>)> {
+        let mut t: Vec<(Vec<usize>, Vec<f32>)> = Vec::new();
+        let mut mat = |r: usize, c: usize, rng: &mut Rng, std: f32| {
+            let m = Mat::random_normal(r, c, std, rng);
+            (vec![r, c], m.data)
+        };
+        t.push(mat(vocab, d, rng, 0.1));
+        t.push(mat(l, d, rng, 0.1));
+        for _ in 0..layers {
+            t.push((vec![d], vec![1.0; d]));
+            t.push((vec![d], vec![0.0; d]));
+            for _ in 0..4 {
+                t.push(mat(d, d, rng, (1.0 / d as f32).sqrt()));
+            }
+            t.push((vec![d], vec![1.0; d]));
+            t.push((vec![d], vec![0.0; d]));
+            t.push(mat(d, ffn, rng, (1.0 / d as f32).sqrt()));
+            t.push((vec![ffn], vec![0.0; ffn]));
+            t.push(mat(ffn, d, rng, (1.0 / ffn as f32).sqrt()));
+            t.push((vec![d], vec![0.0; d]));
+        }
+        t.push(mat(d, classes, rng, 0.1));
+        t.push((vec![classes], vec![0.0; classes]));
+        t
+    }
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let mut rng = Rng::new(1);
+        let flat = random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let p = ModelParams::from_flat(&flat, 2).unwrap();
+        assert_eq!(p.embed.rows, 12);
+        assert_eq!(p.layers.len(), 2);
+        assert_eq!(p.d_model(), 8);
+        assert_eq!(p.seq_len(), 16);
+        assert_eq!(p.classes(), 4);
+    }
+
+    #[test]
+    fn rejects_wrong_count() {
+        let mut rng = Rng::new(1);
+        let flat = random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        assert!(ModelParams::from_flat(&flat, 3).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! BigBird baseline pattern (Zaheer et al. 2020): sliding window + global
+//! tokens + random blocks. Evaluated in the paper with block size 64 and
+//! 3 random blocks (§5 "Models Compared").
+
+use super::fixed;
+use super::mask::BlockMask;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BigBirdConfig {
+    /// Window half-width in blocks.
+    pub window: usize,
+    /// Number of global block rows/cols.
+    pub global: usize,
+    /// Random blocks per block-row (paper: 3).
+    pub random: usize,
+}
+
+impl Default for BigBirdConfig {
+    fn default() -> Self {
+        Self { window: 1, global: 1, random: 3 }
+    }
+}
+
+pub fn bigbird(lb: usize, block: usize, cfg: &BigBirdConfig, rng: &mut Rng) -> BlockMask {
+    let mut m = fixed::sliding_window(lb, block, cfg.window)
+        .union(&fixed::global(lb, block, cfg.global));
+    // Random attention: `random` distinct off-window blocks per row.
+    for i in 0..lb {
+        let candidates: Vec<usize> = (0..lb).filter(|&j| !m.get(i, j)).collect();
+        let k = cfg.random.min(candidates.len());
+        if k == 0 {
+            continue;
+        }
+        for idx in rng.sample_distinct(candidates.len(), k) {
+            m.set(i, candidates[idx], true);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    #[test]
+    fn contains_window_global_random() {
+        let mut rng = Rng::new(1);
+        let cfg = BigBirdConfig { window: 1, global: 1, random: 3 };
+        let m = bigbird(16, 8, &cfg, &mut rng);
+        for i in 0..16 {
+            assert!(m.get(i, i), "diag");
+            assert!(m.get(i, 0) && m.get(0, i), "global");
+        }
+        // Each row has window(≤3) + global(≤1) + 3 random blocks.
+        for i in 2..15 {
+            let cnt = m.row_blocks(i).count();
+            assert!(cnt >= 6 && cnt <= 8, "row {i} has {cnt}");
+        }
+    }
+
+    #[test]
+    fn random_blocks_deterministic_per_seed() {
+        let cfg = BigBirdConfig::default();
+        let a = bigbird(20, 4, &cfg, &mut Rng::new(7));
+        let b = bigbird(20, 4, &cfg, &mut Rng::new(7));
+        let c = bigbird(20, 4, &cfg, &mut Rng::new(8));
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different seeds should (almost surely) differ");
+    }
+
+    #[test]
+    fn row_budget_property() {
+        QuickCheck::new().cases(25).run("bigbird row budget", |rng| {
+            let lb = 4 + rng.below(24);
+            let cfg = BigBirdConfig { window: rng.below(3), global: rng.below(3), random: rng.below(5) };
+            let m = bigbird(lb, 8, &cfg, rng);
+            let budget = (2 * cfg.window + 1) + cfg.global + cfg.random;
+            for i in cfg.global..lb {
+                let cnt = m.row_blocks(i).count();
+                crate::qc_assert!(cnt <= budget + 1, "row {i}: {cnt} > budget {budget}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Fixed sparsity patterns from the prior work the paper compares against
+//! (§2.3): sliding window (Sparse Transformer / Longformer), dilated
+//! windows (Longformer) and global attention rows/columns (ETC).
+
+use super::mask::BlockMask;
+
+/// Sliding-window attention: each block-row attends to the `window` nearest
+/// block-columns on each side (inclusive of the diagonal).
+pub fn sliding_window(lb: usize, block: usize, window: usize) -> BlockMask {
+    let mut m = BlockMask::empty(lb, block);
+    for i in 0..lb {
+        let lo = i.saturating_sub(window);
+        let hi = (i + window).min(lb - 1);
+        for j in lo..=hi {
+            m.set(i, j, true);
+        }
+    }
+    m
+}
+
+/// Dilated sliding window: window positions with stride `dilation`
+/// (Longformer's receptive-field extension).
+pub fn dilated_window(lb: usize, block: usize, window: usize, dilation: usize) -> BlockMask {
+    assert!(dilation >= 1);
+    let mut m = BlockMask::empty(lb, block);
+    for i in 0..lb {
+        m.set(i, i, true);
+        for w in 1..=window {
+            let off = w * dilation;
+            if i >= off {
+                m.set(i, i - off, true);
+            }
+            if i + off < lb {
+                m.set(i, i + off, true);
+            }
+        }
+    }
+    m
+}
+
+/// Global attention: the first `g` block-rows and block-columns are fully
+/// connected (ETC/BigBird global tokens).
+pub fn global(lb: usize, block: usize, g: usize) -> BlockMask {
+    let mut m = BlockMask::empty(lb, block);
+    for i in 0..lb {
+        for j in 0..lb {
+            if i < g || j < g {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    #[test]
+    fn sliding_window_band() {
+        let m = sliding_window(6, 4, 1);
+        assert!(m.get(2, 1) && m.get(2, 2) && m.get(2, 3));
+        assert!(!m.get(2, 0) && !m.get(2, 4));
+        assert!(m.get(0, 0) && m.get(0, 1) && !m.get(0, 2));
+    }
+
+    #[test]
+    fn sliding_window_symmetric_property() {
+        QuickCheck::new().cases(30).run("window symmetric", |rng| {
+            let lb = 1 + rng.below(20);
+            let w = rng.below(lb + 2);
+            let m = sliding_window(lb, 8, w);
+            for i in 0..lb {
+                for j in 0..lb {
+                    crate::qc_assert!(m.get(i, j) == m.get(j, i), "asymmetric at ({i},{j})");
+                    crate::qc_assert!(m.get(i, j) == (i.abs_diff(j) <= w), "band wrong at ({i},{j})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dilated_skips() {
+        let m = dilated_window(10, 4, 2, 2);
+        assert!(m.get(5, 5) && m.get(5, 3) && m.get(5, 7) && m.get(5, 1) && m.get(5, 9));
+        assert!(!m.get(5, 4) && !m.get(5, 6));
+    }
+
+    #[test]
+    fn global_rows_cols() {
+        let m = global(5, 4, 1);
+        for k in 0..5 {
+            assert!(m.get(0, k) && m.get(k, 0));
+        }
+        assert!(!m.get(2, 3));
+        assert_eq!(m.nnz_blocks(), 5 + 5 - 1);
+    }
+}

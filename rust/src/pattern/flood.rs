@@ -1,0 +1,201 @@
+//! Directional flood fill over the pooled block map — paper Algorithm 4.
+//!
+//! From each seed the walk inspects only the three forward neighbors
+//! (right, below, diagonally below), marks a neighbor when it is (a) the
+//! max of the three, (b) unvisited, and (c) above the threshold `t`, and
+//! continues the walk from every marked neighbor.
+//!
+//! The paper presents the walk recursively; at paper scale (L/B = 64 and the
+//! recursion re-entered from L/B seeds) the recursion depth is bounded by the
+//! number of marked cells, which can reach (L/B)² — deep enough to overflow a
+//! thread stack. We use an explicit worklist: the marked set is identical
+//! because marking is monotone (a cell is only ever flipped 0→1 and the
+//! max test reads the immutable `pool_out`), so the closure reached is
+//! order-independent.
+
+use crate::tensor::Mat;
+
+/// One flood-fill walk from seed `(r, c)`, mutating the marked map
+/// `fl_out` (0.0 = unvisited, 1.0 = marked). Faithful iterative form of
+/// Algorithm 4.
+pub fn flood_fill_from(pool_out: &Mat, r: usize, c: usize, fl_out: &mut Mat, t: f32) {
+    let lb = pool_out.rows;
+    debug_assert_eq!(pool_out.rows, pool_out.cols);
+    debug_assert_eq!(fl_out.rows, lb);
+    let mut stack: Vec<(usize, usize)> = vec![(r, c)];
+    while let Some((r, c)) = stack.pop() {
+        // Line 1: stop at the last row/column.
+        if r + 1 >= lb || c + 1 >= lb {
+            continue;
+        }
+        // Line 3: the forward-neighbor maximum.
+        let right = pool_out.at(r, c + 1);
+        let below = pool_out.at(r + 1, c);
+        let diag = pool_out.at(r + 1, c + 1);
+        let m = below.max(right).max(diag);
+        // Lines 4–15: each neighbor equal to the max, unvisited, above t.
+        let neighbors = [(r + 1, c, below), (r, c + 1, right), (r + 1, c + 1, diag)];
+        for (nr, nc, val) in neighbors {
+            if val == m && fl_out.at(nr, nc) == 0.0 && val > t {
+                *fl_out.at_mut(nr, nc) = 1.0;
+                stack.push((nr, nc));
+            }
+        }
+    }
+}
+
+/// Algorithm 3 lines 4–10: run the walk from every first-row and
+/// first-column seed, then force the diagonal on.
+pub fn flood_fill_all(pool_out: &Mat, t: f32) -> Mat {
+    let lb = pool_out.rows;
+    let mut fl_out = Mat::zeros(lb, lb);
+    for i in 0..lb {
+        flood_fill_from(pool_out, 0, i, &mut fl_out, t);
+    }
+    for j in 0..lb {
+        flood_fill_from(pool_out, j, 0, &mut fl_out, t);
+    }
+    for k in 0..lb {
+        *fl_out.at_mut(k, k) = 1.0;
+    }
+    fl_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    /// Recursive transliteration of Algorithm 4 — used only to check the
+    /// iterative form computes the identical closure.
+    fn flood_fill_recursive(pool_out: &Mat, r: usize, c: usize, fl_out: &mut Mat, t: f32) {
+        let lb = pool_out.rows;
+        if r + 1 >= lb || c + 1 >= lb {
+            return;
+        }
+        let right = pool_out.at(r, c + 1);
+        let below = pool_out.at(r + 1, c);
+        let diag = pool_out.at(r + 1, c + 1);
+        let m = below.max(right).max(diag);
+        if below == m && fl_out.at(r + 1, c) == 0.0 && below > t {
+            *fl_out.at_mut(r + 1, c) = 1.0;
+            flood_fill_recursive(pool_out, r + 1, c, fl_out, t);
+        }
+        if right == m && fl_out.at(r, c + 1) == 0.0 && right > t {
+            *fl_out.at_mut(r, c + 1) = 1.0;
+            flood_fill_recursive(pool_out, r, c + 1, fl_out, t);
+        }
+        if diag == m && fl_out.at(r + 1, c + 1) == 0.0 && diag > t {
+            *fl_out.at_mut(r + 1, c + 1) = 1.0;
+            flood_fill_recursive(pool_out, r + 1, c + 1, fl_out, t);
+        }
+    }
+
+    #[test]
+    fn fig4_walkthrough() {
+        // A hand-made pool_out where a clear diagonal band exists; the walk
+        // from (0,0) must follow the band (the Fig. 4 behaviour).
+        #[rustfmt::skip]
+        let pool = Mat::from_vec(4, 4, vec![
+            0.9, 0.1, 0.0, 0.0,
+            0.1, 0.8, 0.1, 0.0,
+            0.0, 0.1, 0.7, 0.1,
+            0.0, 0.0, 0.1, 0.9,
+        ]);
+        let mut fl = Mat::zeros(4, 4);
+        flood_fill_from(&pool, 0, 0, &mut fl, 0.5);
+        // Diagonal cells (1,1), (2,2), (3,3) marked; off-diagonals not.
+        assert_eq!(fl.at(1, 1), 1.0);
+        assert_eq!(fl.at(2, 2), 1.0);
+        assert_eq!(fl.at(3, 3), 1.0);
+        assert_eq!(fl.at(0, 1), 0.0);
+        assert_eq!(fl.at(1, 0), 0.0);
+    }
+
+    #[test]
+    fn vertical_column_walk() {
+        // Strong column 2 → walk seeded at (0,1)/(0,2) should descend col 2.
+        let lb = 5;
+        let mut pool = Mat::zeros(lb, lb);
+        for i in 0..lb {
+            *pool.at_mut(i, 2) = 1.0;
+        }
+        let fl = flood_fill_all(&pool, 0.5);
+        for i in 1..lb {
+            assert_eq!(fl.at(i, 2), 1.0, "col cell {i} marked");
+        }
+    }
+
+    #[test]
+    fn threshold_blocks_everything() {
+        let pool = Mat::filled(6, 6, 0.3);
+        let fl = flood_fill_all(&pool, 0.9);
+        // Only the forced diagonal survives.
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(fl.at(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn iterative_equals_recursive_property() {
+        QuickCheck::new().cases(60).run("flood iter=rec", |rng| {
+            let lb = 2 + rng.below(12);
+            let pool = Mat::from_fn(lb, lb, |_, _| rng.f32());
+            let t = rng.f32();
+            let mut a = Mat::zeros(lb, lb);
+            let mut b = Mat::zeros(lb, lb);
+            let (sr, sc) = (rng.below(lb), rng.below(lb));
+            flood_fill_from(&pool, sr, sc, &mut a, t);
+            flood_fill_recursive(&pool, sr, sc, &mut b, t);
+            crate::qc_assert!(a == b, "closures differ (lb={lb}, seed=({sr},{sc}), t={t})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_in_threshold_property() {
+        // Lower threshold ⇒ superset of marked cells.
+        QuickCheck::new().cases(40).run("flood monotone t", |rng| {
+            let lb = 2 + rng.below(10);
+            let pool = Mat::from_fn(lb, lb, |_, _| rng.f32());
+            let t1 = rng.f32();
+            let t2 = rng.f32();
+            let (lo, hi) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+            let fl_lo = flood_fill_all(&pool, lo);
+            let fl_hi = flood_fill_all(&pool, hi);
+            for (a, b) in fl_lo.data.iter().zip(&fl_hi.data) {
+                crate::qc_assert!(*a >= *b, "t={lo} not a superset of t={hi}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn output_is_binary_property() {
+        QuickCheck::new().cases(30).run("flood binary", |rng| {
+            let lb = 2 + rng.below(10);
+            let pool = Mat::from_fn(lb, lb, |_, _| rng.f32());
+            let fl = flood_fill_all(&pool, rng.f32());
+            crate::qc_assert!(
+                fl.data.iter().all(|&v| v == 0.0 || v == 1.0),
+                "non-binary output"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deep_band_no_stack_overflow() {
+        // Paper-scale worst case: L/B = 512 with a full band → the recursive
+        // form would recurse ~512 deep per walk, the closure covers the whole
+        // band; the iterative form must handle it comfortably.
+        let lb = 512;
+        let pool = Mat::from_fn(lb, lb, |i, j| {
+            if i.abs_diff(j) <= 1 { 1.0 } else { 0.0 }
+        });
+        let fl = flood_fill_all(&pool, 0.5);
+        assert!(fl.data.iter().filter(|&&v| v == 1.0).count() >= lb);
+    }
+}

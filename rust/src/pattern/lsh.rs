@@ -1,0 +1,172 @@
+//! Reformer-style LSH attention baseline (Kitaev et al. 2020), realized at
+//! block granularity so it feeds the same block-sparse engine as every other
+//! model in the comparison (DESIGN.md §3 records this substitution).
+//!
+//! Rows are bucketed by random-hyperplane hashing of their content vectors;
+//! a block pair (i, j) is attended when any hash round assigns block i and
+//! block j the same bucket. The paper evaluates Reformer with bucket size 32
+//! and 2 hashes — we default to 2 rounds and derive the bucket count from
+//! the requested bucket size.
+
+use super::mask::BlockMask;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LshConfig {
+    /// Number of independent hash rounds (paper: 2).
+    pub n_hashes: usize,
+    /// Number of sign-bit hyperplanes per round (2^bits buckets).
+    pub n_bits: usize,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        Self { n_hashes: 2, n_bits: 3 }
+    }
+}
+
+/// Bucket ids for each row of `x` under one round of random hyperplanes.
+fn hash_round(x: &Mat, planes: &Mat) -> Vec<u32> {
+    let mut out = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        let mut code = 0u32;
+        for p in 0..planes.rows {
+            let dot = crate::tensor::mat::dot(x.row(i), planes.row(p));
+            if dot >= 0.0 {
+                code |= 1 << p;
+            }
+        }
+        out.push(code);
+    }
+    out
+}
+
+/// Block-level mean of row vectors: (L×d) → (L/B × d).
+fn block_means(x: &Mat, block: usize) -> Mat {
+    assert_eq!(x.rows % block, 0);
+    let lb = x.rows / block;
+    let mut out = Mat::zeros(lb, x.cols);
+    for i in 0..x.rows {
+        let bi = i / block;
+        for (o, v) in out.row_mut(bi).iter_mut().zip(x.row(i)) {
+            *o += v;
+        }
+    }
+    out.scale(1.0 / block as f32);
+    out
+}
+
+/// Build the LSH block pattern from content `x` (e.g. the Q projection of
+/// the current layer, L×d).
+///
+/// Features are centered (per-column mean subtracted) before hashing:
+/// random hyperplanes through the origin only split data that straddles
+/// the origin — uncentered, near-identical block means (e.g. attention-row
+/// profiles early in training) all land in one bucket and the pattern
+/// degenerates to dense.
+pub fn lsh_pattern(x: &Mat, block: usize, cfg: &LshConfig, rng: &mut Rng) -> BlockMask {
+    let mut means = block_means(x, block);
+    let lb = means.rows;
+    // Center columns.
+    for j in 0..means.cols {
+        let mu: f32 = (0..lb).map(|i| means.at(i, j)).sum::<f32>() / lb as f32;
+        for i in 0..lb {
+            *means.at_mut(i, j) -= mu;
+        }
+    }
+    let mut mask = BlockMask::empty(lb, block);
+    for _round in 0..cfg.n_hashes {
+        let planes = Mat::random_normal(cfg.n_bits, x.cols, 1.0, rng);
+        let buckets = hash_round(&means, &planes);
+        for i in 0..lb {
+            for j in 0..lb {
+                if buckets[i] == buckets[j] {
+                    mask.set(i, j, true);
+                }
+            }
+        }
+    }
+    mask.set_diagonal();
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    #[test]
+    fn identical_blocks_always_attend() {
+        let mut rng = Rng::new(1);
+        // All rows identical → single bucket → full mask.
+        let x = Mat::filled(32, 8, 1.0);
+        let m = lsh_pattern(&x, 4, &LshConfig::default(), &mut rng);
+        assert_eq!(m.nnz_blocks(), m.lb * m.lb);
+    }
+
+    #[test]
+    fn pattern_is_symmetric_property() {
+        QuickCheck::new().cases(25).run("lsh symmetric", |rng| {
+            let lb = 2 + rng.below(10);
+            let b = 4;
+            let x = Mat::random_normal(lb * b, 8, 1.0, rng);
+            let m = lsh_pattern(&x, b, &LshConfig::default(), rng);
+            for i in 0..lb {
+                crate::qc_assert!(m.get(i, i), "diag {i}");
+                for j in 0..lb {
+                    crate::qc_assert!(m.get(i, j) == m.get(j, i), "asym ({i},{j})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bits_sparser_property() {
+        QuickCheck::new().cases(10).run("lsh bits sparsify", |rng| {
+            let x = Mat::random_normal(64, 16, 1.0, rng);
+            let mut r1 = rng.fork(1);
+            let mut r2 = r1.clone();
+            let coarse = lsh_pattern(&x, 8, &LshConfig { n_hashes: 1, n_bits: 1 }, &mut r1);
+            let fine = lsh_pattern(&x, 8, &LshConfig { n_hashes: 1, n_bits: 6 }, &mut r2);
+            // Not guaranteed per-seed, but statistically: allow equality.
+            crate::qc_assert!(
+                fine.nnz_blocks() <= coarse.nnz_blocks() + 8,
+                "fine {} >> coarse {}",
+                fine.nnz_blocks(),
+                coarse.nnz_blocks()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn separated_clusters_rarely_mix() {
+        let mut rng = Rng::new(5);
+        // Two well-separated clusters of block means.
+        let lb = 8;
+        let b = 4;
+        let x = Mat::from_fn(lb * b, 8, |i, j| {
+            let cluster = if (i / b) < lb / 2 { 10.0 } else { -10.0 };
+            cluster + if j == 0 { 1.0 } else { 0.1 }
+        });
+        let m = lsh_pattern(&x, b, &LshConfig { n_hashes: 2, n_bits: 4 }, &mut rng);
+        // Cross-cluster attendance should be far below within-cluster.
+        let mut within = 0;
+        let mut cross = 0;
+        for i in 0..lb {
+            for j in 0..lb {
+                if m.get(i, j) && i != j {
+                    if (i < lb / 2) == (j < lb / 2) {
+                        within += 1;
+                    } else {
+                        cross += 1;
+                    }
+                }
+            }
+        }
+        assert!(within > 0, "clusters attend internally");
+        assert!(cross <= within, "cross {cross} > within {within}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Block-level sparsity pattern matrix `P` (paper §4.2).
+//!
+//! A `BlockMask` is the (L/B)×(L/B) boolean block map; `to_dense` performs
+//! the nearest-neighbor upsampling of Algorithm 3 line 11 producing the
+//! L×L 0/1 matrix the sparse MHA consumes.
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockMask {
+    /// Number of blocks per side (L/B).
+    pub lb: usize,
+    /// Block edge size B.
+    pub block: usize,
+    /// Row-major block bitmap.
+    pub bits: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn empty(lb: usize, block: usize) -> Self {
+        Self { lb, block, bits: vec![false; lb * lb] }
+    }
+
+    pub fn full(lb: usize, block: usize) -> Self {
+        Self { lb, block, bits: vec![true; lb * lb] }
+    }
+
+    /// Sequence length this mask upsamples to.
+    pub fn seq_len(&self) -> usize {
+        self.lb * self.block
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.lb + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.lb + j] = v;
+    }
+
+    /// Force the block diagonal on (Algorithm 3 lines 9–10).
+    pub fn set_diagonal(&mut self) {
+        for k in 0..self.lb {
+            self.set(k, k, true);
+        }
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of blocks that are active.
+    pub fn density(&self) -> f64 {
+        self.nnz_blocks() as f64 / (self.lb * self.lb) as f64
+    }
+
+    /// Sparsity ratio in the paper's sense (fraction of *pruned* entries).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Number of retained scalar entries C in the L×L attention matrix.
+    pub fn nnz_elements(&self) -> usize {
+        self.nnz_blocks() * self.block * self.block
+    }
+
+    pub fn union(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.lb, self.block), (other.lb, other.block));
+        let bits = self.bits.iter().zip(&other.bits).map(|(a, b)| *a || *b).collect();
+        BlockMask { lb: self.lb, block: self.block, bits }
+    }
+
+    /// Nearest-neighbor upsample to the dense L×L 0/1 matrix P.
+    pub fn to_dense(&self) -> Mat {
+        let l = self.seq_len();
+        let mut p = Mat::zeros(l, l);
+        for bi in 0..self.lb {
+            for bj in 0..self.lb {
+                if self.get(bi, bj) {
+                    for i in bi * self.block..(bi + 1) * self.block {
+                        let row = p.row_mut(i);
+                        for v in &mut row[bj * self.block..(bj + 1) * self.block] {
+                            *v = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    /// Active blocks of row-block `i`, in column order (BCSR building).
+    pub fn row_blocks(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.lb).filter(move |&j| self.get(i, j))
+    }
+
+    /// Per-row count of retained scalar entries (b_cnt of Algorithm 6 — every
+    /// row inside row-block i shares it).
+    pub fn row_nnz_elements(&self, block_row: usize) -> usize {
+        self.row_blocks(block_row).count() * self.block
+    }
+
+    /// ASCII heat rendering for `examples/pattern_viz.rs` and Fig. 1.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity((self.lb + 1) * (self.lb + 3));
+        for i in 0..self.lb {
+            for j in 0..self.lb {
+                out.push(if self.get(i, j) { '#' } else { '.' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Build from a dense 0/1 matrix (inverse of `to_dense`; a block is
+    /// active if any entry in it is nonzero).
+    pub fn from_dense(p: &Mat, block: usize) -> BlockMask {
+        assert_eq!(p.rows, p.cols);
+        assert_eq!(p.rows % block, 0, "L must be divisible by B");
+        let lb = p.rows / block;
+        let mut m = BlockMask::empty(lb, block);
+        for bi in 0..lb {
+            for bj in 0..lb {
+                'blk: for i in bi * block..(bi + 1) * block {
+                    for j in bj * block..(bj + 1) * block {
+                        if p.at(i, j) != 0.0 {
+                            m.set(bi, bj, true);
+                            break 'blk;
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    #[test]
+    fn density_and_sparsity() {
+        let mut m = BlockMask::empty(4, 8);
+        m.set_diagonal();
+        assert_eq!(m.nnz_blocks(), 4);
+        assert!((m.density() - 0.25).abs() < 1e-12);
+        assert!((m.sparsity() - 0.75).abs() < 1e-12);
+        assert_eq!(m.nnz_elements(), 4 * 64);
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        QuickCheck::new().cases(40).run("mask dense roundtrip", |rng| {
+            let lb = 1 + rng.below(12);
+            let block = [1, 2, 4, 8][rng.below(4)];
+            let mut m = BlockMask::empty(lb, block);
+            for b in m.bits.iter_mut() {
+                *b = rng.chance(0.3);
+            }
+            let back = BlockMask::from_dense(&m.to_dense(), block);
+            crate::qc_assert!(back == m, "roundtrip mismatch lb={lb} block={block}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn upsample_block_structure() {
+        let mut m = BlockMask::empty(2, 3);
+        m.set(0, 1, true);
+        let d = m.to_dense();
+        assert_eq!(d.rows, 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = i < 3 && j >= 3;
+                assert_eq!(d.at(i, j) != 0.0, expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn union_and_row_iter() {
+        let mut a = BlockMask::empty(3, 2);
+        a.set(0, 0, true);
+        let mut b = BlockMask::empty(3, 2);
+        b.set(0, 2, true);
+        let u = a.union(&b);
+        assert_eq!(u.row_blocks(0).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(u.row_nnz_elements(0), 4);
+        assert_eq!(u.row_nnz_elements(1), 0);
+    }
+
+    #[test]
+    fn render_shape() {
+        let mut m = BlockMask::empty(2, 1);
+        m.set_diagonal();
+        assert_eq!(m.render(), "#.\n.#\n");
+    }
+}

@@ -1,0 +1,25 @@
+//! Sparsity-pattern generation — the paper's core contribution.
+//!
+//! * [`conv`] — diagonal convolution filter over the attention-score matrix
+//!   (Eq. 3), detecting whether energy lies on the diagonal or in columns.
+//! * [`pool`] — B×B average pooling to block resolution (Eq. 4) and
+//!   nearest-neighbor upsampling back to L×L.
+//! * [`flood`] — the directional flood-fill over the pooled block map
+//!   (Algorithm 4), iterative worklist formulation.
+//! * [`spion`] — Algorithm 3 glue: the SPION-C / SPION-F / SPION-CF variants.
+//! * [`fixed`], [`bigbird`], [`lsh`] — baseline pattern generators
+//!   (sliding window / dilated / global, BigBird, Reformer-style LSH) that
+//!   feed the same block-sparse attention engine.
+
+pub mod mask;
+pub mod conv;
+pub mod pool;
+pub mod quantile;
+pub mod flood;
+pub mod spion;
+pub mod fixed;
+pub mod bigbird;
+pub mod lsh;
+
+pub use mask::BlockMask;
+pub use spion::{generate_pattern, SpionVariant};

@@ -1,0 +1,90 @@
+//! Average pooling to block resolution (Eq. 4) and nearest-neighbor
+//! upsampling (Algorithm 3 lines 3 and 11).
+
+use crate::tensor::Mat;
+
+/// Non-overlapping B×B average pooling: (L×L) → (L/B × L/B).
+pub fn avg_pool(a: &Mat, block: usize) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    assert!(block > 0 && a.rows % block == 0, "L={} must be divisible by B={}", a.rows, block);
+    let lb = a.rows / block;
+    let inv = 1.0 / (block * block) as f32;
+    let mut out = Mat::zeros(lb, lb);
+    for i in 0..a.rows {
+        let bi = i / block;
+        let row = a.row(i);
+        let orow = out.row_mut(bi);
+        for (j, &v) in row.iter().enumerate() {
+            orow[j / block] += v;
+        }
+    }
+    out.scale(inv);
+    out
+}
+
+/// Nearest-neighbor upsample: (n×n) → (n·B × n·B).
+pub fn upsample(a: &Mat, block: usize) -> Mat {
+    let l = a.rows * block;
+    let mut out = Mat::zeros(l, a.cols * block);
+    for i in 0..l {
+        let srow = a.row(i / block);
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = srow[j / block];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    #[test]
+    fn pool_constant_is_identity_value() {
+        let a = Mat::filled(8, 8, 3.5);
+        let p = avg_pool(&a, 4);
+        assert_eq!(p.rows, 2);
+        assert!(p.data.iter().all(|&v| (v - 3.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pool_known_blocks() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = avg_pool(&a, 2);
+        assert_eq!(p.data, vec![2.5]);
+    }
+
+    #[test]
+    fn pool_then_upsample_preserves_mean_property() {
+        QuickCheck::new().cases(30).run("pool/upsample mean", |rng| {
+            let lb = 1 + rng.below(8);
+            let b = [1, 2, 4][rng.below(3)];
+            let a = Mat::random_normal(lb * b, lb * b, 1.0, rng);
+            let up = upsample(&avg_pool(&a, b), b);
+            let mean_a: f32 = a.data.iter().sum::<f32>() / a.data.len() as f32;
+            let mean_u: f32 = up.data.iter().sum::<f32>() / up.data.len() as f32;
+            assert_allclose(&[mean_a], &[mean_u], 1e-3, 1e-4)
+        });
+    }
+
+    #[test]
+    fn upsample_pool_identity_on_block_constant() {
+        QuickCheck::new().cases(20).run("up∘pool id on blocky", |rng| {
+            let lb = 1 + rng.below(6);
+            let b = 1 + rng.below(5);
+            let small = Mat::random_normal(lb, lb, 1.0, rng);
+            let up = upsample(&small, b);
+            let back = avg_pool(&up, b);
+            assert_allclose(&back.data, &small.data, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn pool_rejects_indivisible() {
+        let a = Mat::zeros(6, 6);
+        avg_pool(&a, 4);
+    }
+}

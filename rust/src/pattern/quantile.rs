@@ -1,0 +1,70 @@
+//! α%-quantile threshold used by the flood fill (paper §4.2: "the threshold
+//! t is determined by calculating the α% quantile of pool_out").
+
+/// Quantile with linear interpolation (matches `numpy.quantile` default so
+//  the python golden vectors agree bit-for-bit within f32 tolerance).
+pub fn quantile(values: &[f32], q: f64) -> f32 {
+    assert!(!values.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of [0,1]");
+    let mut sorted: Vec<f32> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    #[test]
+    fn known_quantiles() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+        assert_eq!(quantile(&v, 0.5), 2.5);
+        assert!((quantile(&v, 0.25) - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn singleton() {
+        assert_eq!(quantile(&[7.0], 0.3), 7.0);
+    }
+
+    #[test]
+    fn monotone_in_q_property() {
+        QuickCheck::new().cases(40).run("quantile monotone", |rng| {
+            let n = 1 + rng.below(100);
+            let v: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            let q1 = rng.f64();
+            let q2 = rng.f64();
+            let (lo, hi) = if q1 <= q2 { (q1, q2) } else { (q2, q1) };
+            crate::qc_assert!(
+                quantile(&v, lo) <= quantile(&v, hi) + 1e-6,
+                "q({lo}) > q({hi})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bounded_by_min_max_property() {
+        QuickCheck::new().cases(40).run("quantile bounded", |rng| {
+            let n = 1 + rng.below(50);
+            let v: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            let q = rng.f64();
+            let t = quantile(&v, q);
+            let min = v.iter().copied().fold(f32::INFINITY, f32::min);
+            let max = v.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            crate::qc_assert!(t >= min && t <= max, "t={t} outside [{min},{max}]");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! Algorithm 3 — `generate_pattern()`: the SPION-C / SPION-F / SPION-CF
+//! variants evaluated in §5.
+
+use super::conv::{conv_diag, diagonal_filter};
+use super::flood::flood_fill_all;
+use super::mask::BlockMask;
+use super::pool::avg_pool;
+use super::quantile::quantile;
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpionVariant {
+    /// Convolution + top-(1−α) block selection; sparsity ratio adjustable
+    /// (the Fig. 7 sweep model).
+    C,
+    /// Flood fill directly on the pooled map (no convolution).
+    F,
+    /// Convolution + flood fill — the headline SPION-CF.
+    CF,
+}
+
+impl SpionVariant {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "c" | "spion-c" => Some(Self::C),
+            "f" | "spion-f" => Some(Self::F),
+            "cf" | "spion-cf" => Some(Self::CF),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::C => "SPION-C",
+            Self::F => "SPION-F",
+            Self::CF => "SPION-CF",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PatternConfig {
+    pub variant: SpionVariant,
+    /// Pooling / upsampling block size B (paper: 32 for image, 64 otherwise).
+    pub block: usize,
+    /// Diagonal convolution filter size F (paper: 31).
+    pub filter: usize,
+    /// Threshold quantile α in [0,1] (paper: 0.96–0.99). For SPION-C this is
+    /// the target sparsity ratio; for F/CF it is the flood-fill threshold
+    /// quantile.
+    pub alpha: f64,
+}
+
+impl Default for PatternConfig {
+    fn default() -> Self {
+        Self { variant: SpionVariant::CF, block: 32, filter: 31, alpha: 0.96 }
+    }
+}
+
+/// Algorithm 3 over one head-averaged attention score matrix `A^s` (L×L).
+/// Returns the block-level pattern (upsampling to the dense L×L `P` is
+/// [`BlockMask::to_dense`], kept separate because the sparse engine consumes
+/// the block form directly).
+pub fn generate_pattern(a_s: &Mat, cfg: &PatternConfig) -> BlockMask {
+    assert_eq!(a_s.rows, a_s.cols, "A^s must be square");
+    assert!(a_s.rows % cfg.block == 0, "L={} not divisible by B={}", a_s.rows, cfg.block);
+
+    // Lines 1–2: diagonal convolution (skipped by SPION-F).
+    let conv_out = match cfg.variant {
+        SpionVariant::F => a_s.clone(),
+        _ => conv_diag(a_s, &diagonal_filter(cfg.filter)),
+    };
+
+    // Line 3: average pooling to block resolution.
+    let pool_out = avg_pool(&conv_out, cfg.block);
+
+    let fl_out = match cfg.variant {
+        SpionVariant::C => {
+            // Variant C: top-(1−α) blocks by value — adjustable sparsity.
+            let t = quantile(&pool_out.data, cfg.alpha);
+            let mut fl = Mat::zeros(pool_out.rows, pool_out.cols);
+            for (o, &v) in fl.data.iter_mut().zip(&pool_out.data) {
+                if v > t {
+                    *o = 1.0;
+                }
+            }
+            // Diagonal forced on, as in Algorithm 3 lines 9–10.
+            for k in 0..fl.rows {
+                *fl.at_mut(k, k) = 1.0;
+            }
+            fl
+        }
+        SpionVariant::F | SpionVariant::CF => {
+            // Lines 4–10: flood fill with t = α-quantile of pool_out.
+            let t = quantile(&pool_out.data, cfg.alpha);
+            flood_fill_all(&pool_out, t)
+        }
+    };
+
+    let lb = fl_out.rows;
+    let mut mask = BlockMask::empty(lb, cfg.block);
+    for i in 0..lb {
+        for j in 0..lb {
+            if fl_out.at(i, j) != 0.0 {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+/// Convenience: generate per-layer patterns from per-layer score matrices.
+pub fn generate_layerwise(scores: &[Mat], cfg: &PatternConfig) -> Vec<BlockMask> {
+    scores.iter().map(|a_s| generate_pattern(a_s, cfg)).collect()
+}
+
+/// Synthesize a head-averaged `A^s` with a given structure — used by tests,
+/// examples and benches to exercise pattern generation without a training
+/// run. `diag_strength`/`vert_strength` mirror the two shapes of Fig. 1.
+pub fn synth_attention_scores(
+    l: usize,
+    diag_strength: f32,
+    vert_strength: f32,
+    vert_cols: &[usize],
+    noise: f32,
+    rng: &mut crate::util::rng::Rng,
+) -> Mat {
+    let mut a = Mat::from_fn(l, l, |_, _| rng.f32() * noise);
+    for i in 0..l {
+        for w in 0..3usize {
+            for &jo in &[i.saturating_sub(w), (i + w).min(l - 1)] {
+                *a.at_mut(i, jo) += diag_strength / (1.0 + w as f32);
+            }
+        }
+        for &c in vert_cols {
+            *a.at_mut(i, c) += vert_strength;
+        }
+    }
+    // Normalize rows to probability-like mass (A^s is a softmax output).
+    for i in 0..l {
+        let s: f32 = a.row(i).iter().sum();
+        let inv = 1.0 / s.max(1e-9);
+        for v in a.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+    use crate::util::rng::Rng;
+
+    fn cfg(variant: SpionVariant, block: usize, filter: usize, alpha: f64) -> PatternConfig {
+        PatternConfig { variant, block, filter, alpha }
+    }
+
+    #[test]
+    fn diagonal_input_yields_diagonal_pattern() {
+        let mut rng = Rng::new(1);
+        let a = synth_attention_scores(128, 1.0, 0.0, &[], 0.02, &mut rng);
+        for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+            let m = generate_pattern(&a, &cfg(variant, 16, 7, 0.9));
+            // All diagonal blocks on.
+            for k in 0..m.lb {
+                assert!(m.get(k, k), "{variant:?} diag block {k}");
+            }
+            // Pattern is sparse overall.
+            assert!(m.density() < 0.6, "{variant:?} density {}", m.density());
+        }
+    }
+
+    #[test]
+    fn vertical_input_yields_vertical_pattern() {
+        let mut rng = Rng::new(2);
+        let l = 128;
+        let a = synth_attention_scores(l, 0.05, 1.0, &[40, 41, 42, 43], 0.01, &mut rng);
+        let m = generate_pattern(&a, &cfg(SpionVariant::CF, 16, 7, 0.9));
+        // The block column containing cols 40..43 (block 2) should be dense.
+        let hits = (0..m.lb).filter(|&i| m.get(i, 2)).count();
+        assert!(hits >= m.lb / 2, "vertical column captured in {hits}/{} rows", m.lb);
+    }
+
+    #[test]
+    fn spion_c_sparsity_tracks_alpha() {
+        let mut rng = Rng::new(3);
+        let a = synth_attention_scores(256, 0.7, 0.3, &[100], 0.05, &mut rng);
+        let m90 = generate_pattern(&a, &cfg(SpionVariant::C, 32, 7, 0.90));
+        let m70 = generate_pattern(&a, &cfg(SpionVariant::C, 32, 7, 0.70));
+        // Lower alpha (less sparse) keeps more blocks.
+        assert!(m70.nnz_blocks() >= m90.nnz_blocks());
+        // Requested sparsity is honored within block-diagonal forcing slack.
+        assert!(m90.sparsity() >= 0.80, "sparsity {}", m90.sparsity());
+    }
+
+    #[test]
+    fn properties_hold_for_all_variants() {
+        QuickCheck::new().cases(25).run("pattern invariants", |rng| {
+            let lb = 2 + rng.below(8);
+            let b = [8, 16][rng.below(2)];
+            let l = lb * b;
+            let a = synth_attention_scores(
+                l,
+                rng.f32(),
+                rng.f32(),
+                &[rng.below(l)],
+                0.05,
+                rng,
+            );
+            let variant = [SpionVariant::C, SpionVariant::F, SpionVariant::CF][rng.below(3)];
+            let alpha = 0.5 + 0.49 * rng.f64();
+            let m = generate_pattern(&a, &cfg(variant, b, 1 + 2 * rng.below(8), alpha));
+            crate::qc_assert!(m.lb == lb, "lb mismatch");
+            for k in 0..lb {
+                crate::qc_assert!(m.get(k, k), "diag block {k} off ({variant:?})");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cf_monotone_in_alpha_property() {
+        QuickCheck::new().cases(20).run("cf monotone alpha", |rng| {
+            let l = 64;
+            let a = synth_attention_scores(l, rng.f32(), rng.f32(), &[5], 0.05, rng);
+            let a1 = 0.5 + 0.4 * rng.f64();
+            let a2 = (a1 + 0.1).min(0.99);
+            let m_lo = generate_pattern(&a, &cfg(SpionVariant::CF, 8, 5, a1));
+            let m_hi = generate_pattern(&a, &cfg(SpionVariant::CF, 8, 5, a2));
+            crate::qc_assert!(
+                m_lo.nnz_blocks() >= m_hi.nnz_blocks(),
+                "alpha {a1} kept {} < alpha {a2} kept {}",
+                m_lo.nnz_blocks(),
+                m_hi.nnz_blocks()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(SpionVariant::parse("cf"), Some(SpionVariant::CF));
+        assert_eq!(SpionVariant::parse("SPION-C"), Some(SpionVariant::C));
+        assert_eq!(SpionVariant::parse("nope"), None);
+    }
+}

@@ -1,0 +1,184 @@
+//! Artifact manifest (`artifacts/<preset>/manifest.json`) — the ABI between
+//! the python AOT pass and the rust runtime: parameter order/shapes and the
+//! input/output layout of every lowered function.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub task: String,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub pattern_block: usize,
+    pub lb: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let get = |k: &str| j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("manifest missing {k}"));
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ParamSpec { name, shape })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            preset: j
+                .get("preset")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("manifest missing preset"))?
+                .to_string(),
+            task: j
+                .get("task")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            seq_len: get("seq_len")?,
+            d_model: get("d_model")?,
+            heads: get("heads")?,
+            layers: get("layers")?,
+            ffn_dim: get("ffn_dim")?,
+            vocab: get("vocab")?,
+            classes: get("classes")?,
+            batch: get("batch")?,
+            pattern_block: get("pattern_block")?,
+            lb: get("lb")?,
+            params,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path} (run `make artifacts`?)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Cross-check against the rust preset table (defense against the two
+    /// sides drifting apart).
+    pub fn check_against(&self, m: &crate::config::ModelConfig) -> Result<()> {
+        let same = self.seq_len == m.seq_len
+            && self.d_model == m.d_model
+            && self.heads == m.heads
+            && self.layers == m.layers
+            && self.ffn_dim == m.ffn_dim
+            && self.vocab == m.vocab
+            && self.classes == m.classes
+            && self.batch == m.batch
+            && self.param_count() == m.param_tensor_count();
+        if !same {
+            return Err(anyhow!(
+                "manifest/preset mismatch for {}: manifest L={} D={} H={} N={} vs preset L={} D={} H={} N={} — \
+                 python/compile/configs.py and rust/src/config/types.rs disagree",
+                self.preset,
+                self.seq_len,
+                self.d_model,
+                self.heads,
+                self.layers,
+                m.seq_len,
+                m.d_model,
+                m.heads,
+                m.layers
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Paths of one preset's artifact set.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: String,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    pub fn open(artifacts_dir: &str, preset: &str) -> Result<Self> {
+        let dir = format!("{artifacts_dir}/{preset}");
+        let manifest = Manifest::load(&format!("{dir}/manifest.json"))?;
+        Ok(Self { dir, manifest })
+    }
+
+    pub fn path(&self, name: &str) -> String {
+        format!("{}/{name}.hlo.txt", self.dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "unit", "task": "listops", "seq_len": 64, "d_model": 16,
+      "heads": 2, "layers": 1, "ffn_dim": 32, "vocab": 12, "classes": 4,
+      "batch": 2, "pattern_block": 8, "lb": 8,
+      "params": [
+        {"name": "embed", "shape": [12, 16]},
+        {"name": "pos", "shape": [64, 16]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "unit");
+        assert_eq!(m.seq_len, 64);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elements(), 12 * 16);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn check_against_detects_drift() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut cfg = crate::config::types::preset("tiny").unwrap().1;
+        cfg.preset = "unit".into();
+        assert!(m.check_against(&cfg).is_err(), "shapes differ → error");
+    }
+}

@@ -1,0 +1,46 @@
+//! PJRT client wrapper + executable compilation cache.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+use super::executor::Executable;
+
+/// Owns the PJRT CPU client and a cache of compiled executables keyed by
+/// artifact path (compilation of a training step takes ~seconds; every
+/// caller shares the compiled module).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO-text artifact and compile it (cached).
+    pub fn load(&self, path: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        let exe = std::sync::Arc::new(Executable::new(path.to_string(), exe));
+        self.cache.lock().unwrap().insert(path.to_string(), exe.clone());
+        Ok(exe)
+    }
+}

@@ -1,0 +1,76 @@
+//! Executable wrapper: literal marshaling around `PjRtLoadedExecutable`.
+//!
+//! All artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal that we decompose into its elements.
+
+use anyhow::{anyhow, Context, Result};
+
+pub struct Executable {
+    path: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn new(path: String, exe: xla::PjRtLoadedExecutable) -> Self {
+        Self { path, exe }
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.path))?;
+        lit.to_tuple().map_err(|e| anyhow!("decomposing result tuple of {}: {e}", self.path))
+    }
+
+    /// Execute with device-resident buffers (hot path: keeps params on
+    /// device between steps, avoiding a host round-trip per step).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing (buffers) {}", self.path))?;
+        Ok(result.remove(0))
+    }
+}
+
+/// Literal helpers shared by trainer/serving code.
+pub mod lit {
+    use anyhow::Result;
+
+    pub fn f32_vec(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn i32_vec(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn scalar_i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn scalar_u32(v: u32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+
+    pub fn scalar_to_f32(l: &xla::Literal) -> Result<f32> {
+        Ok(l.to_vec::<f32>()?[0])
+    }
+}

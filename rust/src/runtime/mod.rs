@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has been built.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactSet, Manifest, ParamSpec};
+pub use client::Runtime;
+pub use executor::Executable;

@@ -1,0 +1,109 @@
+//! Dynamic batching: collect requests until `max_batch` or `max_wait`,
+//! whichever first (the vLLM-router-style policy, reduced to classification
+//! workloads: no KV cache, so batching is pure throughput/latency trade).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    policy: BatchPolicy,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Self { rx, policy }
+    }
+
+    /// Block for the next batch. Returns None when all senders are dropped
+    /// and the queue is drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block for the first element.
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (tx, rx) = channel();
+        let b = DynamicBatcher::new(
+            rx,
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(200) },
+        );
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(2).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(3).unwrap();
+        });
+        let batch = b.next_batch().unwrap();
+        sender.join().unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+    }
+}

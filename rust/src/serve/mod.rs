@@ -1,0 +1,14 @@
+//! Serving: a request router with dynamic batching over a trained model.
+//!
+//! The inference analogue of the paper's Fig. 5 right column (inference
+//! time): requests are classified sequences; the batcher groups them up to
+//! `max_batch` or `max_wait`, a worker thread runs either the rust-native
+//! [`crate::model::Encoder`] (dense or sparse) and replies through per-
+//! request channels. Thread-based (std::sync::mpsc) — the vendored crate
+//! set has no tokio, and a single worker matches the single-core testbed.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use server::{InferenceServer, Request, Response, ServerStats};

@@ -1,0 +1,220 @@
+//! Inference server: router thread + batched worker over an [`Encoder`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::Encoder;
+use crate::tensor::ops::argmax;
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// Router messages: requests + an explicit shutdown sentinel (client clones
+/// keep the channel alive, so disconnect alone cannot signal shutdown).
+enum Message {
+    Req(Request),
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    pub max_latency_us: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.served.load(Ordering::Relaxed).max(1);
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.served.load(Ordering::Relaxed) as f64 / b as f64
+    }
+    pub fn throughput_rps(&self, elapsed: Duration) -> f64 {
+        self.served.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Handle for submitting requests; clones share the router queue.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Message>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit and block for the response. None if the server has shut down.
+    pub fn infer(&self, tokens: Vec<i32>) -> Option<Response> {
+        let (reply_tx, reply_rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Message::Req(Request { id, tokens, submitted: Instant::now(), reply: reply_tx }))
+            .ok()?;
+        reply_rx.recv().ok()
+    }
+}
+
+pub struct InferenceServer {
+    tx: Sender<Message>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: Arc<AtomicU64>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl InferenceServer {
+    /// Start the worker thread around an encoder (dense or sparse).
+    pub fn start(encoder: Encoder, policy: BatchPolicy) -> Self {
+        let (tx, rx) = channel::<Message>();
+        let stats = Arc::new(ServerStats::default());
+        let worker_stats = stats.clone();
+        let worker = std::thread::spawn(move || {
+            let mut enc = encoder;
+            let batcher = DynamicBatcher::new(rx, policy);
+            'outer: while let Some(batch) = batcher.next_batch() {
+                let mut requests = Vec::with_capacity(batch.len());
+                let mut shutdown = false;
+                for msg in batch {
+                    match msg {
+                        Message::Req(r) => requests.push(r),
+                        Message::Shutdown => shutdown = true,
+                    }
+                }
+                let bsz = requests.len();
+                for req in requests {
+                    let (logits, _) = enc.forward(&req.tokens);
+                    let latency = req.submitted.elapsed();
+                    worker_stats.served.fetch_add(1, Ordering::Relaxed);
+                    worker_stats
+                        .total_latency_us
+                        .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+                    worker_stats
+                        .max_latency_us
+                        .fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        class: argmax(&logits),
+                        logits,
+                        latency,
+                        batch_size: bsz,
+                    });
+                }
+                if bsz > 0 {
+                    worker_stats.batches.fetch_add(1, Ordering::Relaxed);
+                }
+                if shutdown {
+                    break 'outer;
+                }
+            }
+        });
+        Self { tx, worker: Some(worker), next_id: Arc::new(AtomicU64::new(0)), stats }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone(), next_id: self.next_id.clone() }
+    }
+
+    /// Signal the worker to finish its current batch and exit, then join.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests::random_flat;
+    use crate::model::ModelParams;
+    use crate::pattern::BlockMask;
+    use crate::util::rng::Rng;
+
+    fn mk_encoder(sparse: bool) -> Encoder {
+        let mut rng = Rng::new(7);
+        let flat = random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let enc = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2);
+        if sparse {
+            let mut m = BlockMask::empty(4, 4);
+            m.set_diagonal();
+            enc.with_masks(vec![m.clone(), m])
+        } else {
+            enc
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_shuts_down() {
+        let server = InferenceServer::start(mk_encoder(false), BatchPolicy::default());
+        let client = server.client();
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        let r = client.infer(toks.clone()).unwrap();
+        assert_eq!(r.logits.len(), 4);
+        let r2 = client.infer(toks).unwrap();
+        assert_eq!(r.class, r2.class, "deterministic");
+        assert!(server.stats.served.load(Ordering::Relaxed) >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn infer_after_shutdown_returns_none() {
+        let server = InferenceServer::start(mk_encoder(false), BatchPolicy::default());
+        let client = server.client();
+        server.shutdown();
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        assert!(client.infer(toks).is_none());
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_answers() {
+        let server = InferenceServer::start(
+            mk_encoder(true),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+        );
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let client = server.client();
+            handles.push(std::thread::spawn(move || {
+                let toks: Vec<i32> = (0..16).map(|i| ((i + t) % 12) as i32).collect();
+                client.infer(toks).unwrap()
+            }));
+        }
+        let responses: Vec<Response> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(responses.len(), 8);
+        let ids: std::collections::HashSet<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 8, "all distinct requests answered");
+        assert!(server.stats.mean_batch() >= 1.0);
+        server.shutdown();
+    }
+}

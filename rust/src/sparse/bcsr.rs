@@ -1,0 +1,176 @@
+//! Block-CSR storage for the sparsified attention score matrix `S^r`/`S^s`.
+
+use crate::pattern::BlockMask;
+use crate::tensor::Mat;
+
+/// Block-CSR matrix over an (lb·B)×(lb·B) logical matrix. Nonzero structure
+/// is fixed by the pattern; `values` holds each active block as a dense
+/// row-major B×B tile, blocks ordered row-block-major.
+#[derive(Debug, Clone)]
+pub struct Bcsr {
+    pub lb: usize,
+    pub block: usize,
+    /// CSR row pointer over block rows: len lb+1.
+    pub row_ptr: Vec<usize>,
+    /// Block column index per stored block: len nnz_blocks.
+    pub col_idx: Vec<usize>,
+    /// Dense B×B tiles, len nnz_blocks · B².
+    pub values: Vec<f32>,
+}
+
+impl Bcsr {
+    /// Allocate zeroed storage with the structure of `mask`.
+    pub fn from_mask(mask: &BlockMask) -> Self {
+        let lb = mask.lb;
+        let mut row_ptr = Vec::with_capacity(lb + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for i in 0..lb {
+            for j in mask.row_blocks(i) {
+                col_idx.push(j);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let values = vec![0.0; col_idx.len() * mask.block * mask.block];
+        Self { lb, block: mask.block, row_ptr, col_idx, values }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.lb * self.block
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn nnz_elements(&self) -> usize {
+        self.nnz_blocks() * self.block * self.block
+    }
+
+    /// Number of stored blocks in block-row `i`.
+    pub fn row_nnz_blocks(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Stored tile `b` as a mutable slice (B² values).
+    #[inline]
+    pub fn block_mut(&mut self, b: usize) -> &mut [f32] {
+        let bb = self.block * self.block;
+        &mut self.values[b * bb..(b + 1) * bb]
+    }
+
+    #[inline]
+    pub fn block_at(&self, b: usize) -> &[f32] {
+        let bb = self.block * self.block;
+        &self.values[b * bb..(b + 1) * bb]
+    }
+
+    /// Densify (testing / small-scale debugging only).
+    pub fn to_dense(&self) -> Mat {
+        let l = self.seq_len();
+        let mut out = Mat::zeros(l, l);
+        for bi in 0..self.lb {
+            for b in self.row_ptr[bi]..self.row_ptr[bi + 1] {
+                let bj = self.col_idx[b];
+                let tile = self.block_at(b);
+                for r in 0..self.block {
+                    for c in 0..self.block {
+                        *out.at_mut(bi * self.block + r, bj * self.block + c) =
+                            tile[r * self.block + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather from a dense matrix into this structure (testing).
+    pub fn fill_from_dense(&mut self, dense: &Mat) {
+        assert_eq!(dense.rows, self.seq_len());
+        for bi in 0..self.lb {
+            for b in self.row_ptr[bi]..self.row_ptr[bi + 1] {
+                let bj = self.col_idx[b];
+                let block = self.block;
+                let tile = self.block_mut(b);
+                for r in 0..block {
+                    for c in 0..block {
+                        tile[r * block + c] = dense.at(bi * block + r, bj * block + c);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Memory footprint of the sparse representation in bytes (values +
+    /// indices) — the quantity behind the paper's Fig. 5 memory comparison.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f32>()
+            + self.col_idx.len() * std::mem::size_of::<usize>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+    use crate::util::rng::Rng;
+
+    fn random_mask(rng: &mut Rng, lb: usize, block: usize, p: f64) -> BlockMask {
+        let mut m = BlockMask::empty(lb, block);
+        for b in m.bits.iter_mut() {
+            *b = rng.chance(p);
+        }
+        m.set_diagonal();
+        m
+    }
+
+    #[test]
+    fn structure_matches_mask() {
+        let mut rng = Rng::new(1);
+        let mask = random_mask(&mut rng, 6, 4, 0.3);
+        let s = Bcsr::from_mask(&mask);
+        assert_eq!(s.nnz_blocks(), mask.nnz_blocks());
+        assert_eq!(s.row_ptr.len(), 7);
+        for i in 0..6 {
+            assert_eq!(s.row_nnz_blocks(i), mask.row_blocks(i).count());
+        }
+        // col_idx sorted within each row (row_blocks iterates in order).
+        for i in 0..6 {
+            let cols = &s.col_idx[s.row_ptr[i]..s.row_ptr[i + 1]];
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        QuickCheck::new().cases(30).run("bcsr roundtrip", |rng| {
+            let lb = 1 + rng.below(8);
+            let block = [1, 2, 4][rng.below(3)];
+            let p = rng.f64();
+            let mask = random_mask(rng, lb, block, p);
+            let mut s = Bcsr::from_mask(&mask);
+            // Random dense matrix, but only pattern-covered entries survive.
+            let dense = Mat::random_normal(lb * block, lb * block, 1.0, rng);
+            s.fill_from_dense(&dense);
+            let back = s.to_dense();
+            let pmask = mask.to_dense();
+            for i in 0..dense.rows {
+                for j in 0..dense.cols {
+                    let expect = if pmask.at(i, j) != 0.0 { dense.at(i, j) } else { 0.0 };
+                    crate::qc_assert!(back.at(i, j) == expect, "({i},{j})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bytes_scale_with_nnz() {
+        let full = Bcsr::from_mask(&BlockMask::full(8, 8));
+        let mut diag = BlockMask::empty(8, 8);
+        diag.set_diagonal();
+        let sparse = Bcsr::from_mask(&diag);
+        assert!(full.bytes() > 7 * sparse.bytes());
+    }
+}

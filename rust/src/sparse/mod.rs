@@ -1,0 +1,18 @@
+//! Block-sparse attention compute engine — the CPU stand-in for the paper's
+//! cuSPARSE/CUDA kernels (Algorithm 5: SDDMM → SparseSoftmax → SpMM).
+//!
+//! Storage is block-CSR ([`bcsr::Bcsr`]) built from the pattern matrix `P`
+//! (a [`crate::pattern::BlockMask`]): the paper converts `P` to CSR for
+//! cuSPARSE; block-CSR is the same layout at the block granularity the
+//! paper's `P` already has, and keeps every stored block a dense B×B tile
+//! (cache/SIMD-friendly — the CPU analogue of the coalesced accesses the
+//! paper gets from blocked `P`).
+
+pub mod bcsr;
+pub mod sddmm;
+pub mod softmax;
+pub mod spmm;
+pub mod ops;
+pub mod backward;
+
+pub use bcsr::Bcsr;

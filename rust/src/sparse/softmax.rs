@@ -1,0 +1,197 @@
+//! Sparse softmax over block-CSR `S^r` — CPU realization of the paper's
+//! warp-level GPU kernel (Algorithm 6).
+//!
+//! Faithful semantic detail: the paper treats pruned logits as **zero, not
+//! −∞** — Algorithm 6 line 15 adds `exp(0 − max) · (L − b_cnt)` to the
+//! denominator for the `L − b_cnt` entries each row does not store. We keep
+//! that implicit-zero correction (configurably, for the ablation bench),
+//! because it changes the probability mass assigned to retained entries and
+//! therefore the trained model.
+//!
+//! Mapping from the GPU kernel: one warp per row → one loop iteration per
+//! row; `warp_reduce_max/sum` shuffles → straight-line reductions over the
+//! row's stored entries (the stored entries of a row sit at stride B inside
+//! each of the row-block's tiles).
+
+use super::bcsr::Bcsr;
+
+/// In-place sparse softmax. `scale` is applied to each stored logit first
+/// when `apply_scale` — the GPU kernel folds scaling here (Alg. 6 line 8);
+/// our SDDMM already scales, so the engine calls this with scale=1.
+pub fn sparse_softmax(s: &mut Bcsr, scale: f32, implicit_zero_correction: bool) {
+    let b = s.block;
+    let l = s.seq_len();
+    for bi in 0..s.lb {
+        let blocks = s.row_ptr[bi]..s.row_ptr[bi + 1];
+        let b_cnt = (blocks.end - blocks.start) * b; // stored entries per row
+        for r in 0..b {
+            // Pass 1: scale + max (Alg. 6 lines 7–11).
+            let mut max = f32::NEG_INFINITY;
+            for blk in blocks.clone() {
+                let tile = &mut s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                for v in tile.iter_mut() {
+                    *v *= scale;
+                    if *v > max {
+                        max = *v;
+                    }
+                }
+            }
+            if b_cnt == 0 {
+                continue;
+            }
+            // Pass 2: exp-sum (lines 12–14) + implicit-zero term (line 15).
+            let mut sum = 0.0f32;
+            for blk in blocks.clone() {
+                let tile = &s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                for &v in tile {
+                    sum += (v - max).exp();
+                }
+            }
+            if implicit_zero_correction {
+                sum += (-max).exp() * (l - b_cnt) as f32;
+            }
+            // Pass 3: normalize (lines 16–17).
+            let inv = 1.0 / sum;
+            for blk in blocks.clone() {
+                let tile = &mut s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                for v in tile.iter_mut() {
+                    *v = (*v - max).exp() * inv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::BlockMask;
+    use crate::sparse::bcsr::Bcsr;
+    use crate::tensor::ops::softmax_rows;
+    use crate::tensor::Mat;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    fn random_bcsr(rng: &mut crate::util::rng::Rng, lb: usize, block: usize) -> (BlockMask, Bcsr) {
+        let mut mask = BlockMask::empty(lb, block);
+        for bit in mask.bits.iter_mut() {
+            *bit = rng.chance(0.4);
+        }
+        mask.set_diagonal();
+        let mut s = Bcsr::from_mask(&mask);
+        for v in s.values.iter_mut() {
+            *v = rng.gauss() as f32;
+        }
+        (mask, s)
+    }
+
+    #[test]
+    fn full_mask_no_correction_equals_dense_softmax() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mask = BlockMask::full(3, 4);
+        let mut s = Bcsr::from_mask(&mask);
+        let dense_in = Mat::random_normal(12, 12, 2.0, &mut rng);
+        s.fill_from_dense(&dense_in);
+        sparse_softmax(&mut s, 1.0, false);
+        let mut expect = dense_in.clone();
+        softmax_rows(&mut expect);
+        assert_allclose(&s.to_dense().data, &expect.data, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn full_mask_correction_is_noop() {
+        // With b_cnt == L the correction term vanishes.
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mask = BlockMask::full(2, 4);
+        let mut a = Bcsr::from_mask(&mask);
+        for v in a.values.iter_mut() {
+            *v = rng.gauss() as f32;
+        }
+        let mut b = a.clone();
+        sparse_softmax(&mut a, 1.0, true);
+        sparse_softmax(&mut b, 1.0, false);
+        assert_allclose(&a.values, &b.values, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn row_mass_with_implicit_zeros_is_one_property() {
+        // Stored mass + (L−b_cnt)·exp(−max)/denominator must equal 1 —
+        // i.e. the kernel computes softmax over the row with zeros imputed.
+        QuickCheck::new().cases(30).run("sparse softmax mass", |rng| {
+            let lb = 1 + rng.below(6);
+            let block = [2, 4][rng.below(2)];
+            let (_, mut s) = random_bcsr(rng, lb, block);
+            let before = s.clone();
+            sparse_softmax(&mut s, 1.0, true);
+            let l = s.seq_len();
+            let b = s.block;
+            for bi in 0..s.lb {
+                let blocks = s.row_ptr[bi]..s.row_ptr[bi + 1];
+                let b_cnt = (blocks.end - blocks.start) * b;
+                for r in 0..b {
+                    let mut stored = 0.0f64;
+                    let mut max = f32::NEG_INFINITY;
+                    for blk in blocks.clone() {
+                        let tile = &s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                        let orig = &before.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                        stored += tile.iter().map(|&v| v as f64).sum::<f64>();
+                        max = orig.iter().fold(max, |m, &v| m.max(v));
+                    }
+                    // Reconstruct the implicit-zero mass from the originals.
+                    let mut denom = 0.0f64;
+                    for blk in blocks.clone() {
+                        let orig = &before.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                        denom += orig.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>();
+                    }
+                    denom += ((-max) as f64).exp() * (l - b_cnt) as f64;
+                    let implicit = ((-max) as f64).exp() * (l - b_cnt) as f64 / denom;
+                    let total = stored + implicit;
+                    crate::qc_assert!(
+                        (total - 1.0).abs() < 1e-4,
+                        "row ({bi},{r}): mass {total}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn outputs_are_probabilities_property() {
+        QuickCheck::new().cases(25).run("sparse softmax range", |rng| {
+            let lb = 1 + rng.below(5);
+            let (_, mut s) = random_bcsr(rng, lb, 4);
+            sparse_softmax(&mut s, 1.0 / 8.0f32.sqrt(), true);
+            crate::qc_assert!(
+                s.values.iter().all(|&v| (0.0..=1.0).contains(&v)),
+                "value outside [0,1]"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_dense_softmax_with_zero_imputation() {
+        // Gold semantics: densify S^r with zeros at pruned positions, run a
+        // dense softmax, compare at stored positions.
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (mask, mut s) = random_bcsr(&mut rng, 4, 4);
+        let dense_logits = s.to_dense(); // pruned = 0.0 exactly
+        sparse_softmax(&mut s, 1.0, true);
+        let mut expect = dense_logits;
+        softmax_rows(&mut expect);
+        let got = s.to_dense();
+        let p = mask.to_dense();
+        for i in 0..got.rows {
+            for j in 0..got.cols {
+                if p.at(i, j) != 0.0 {
+                    assert!(
+                        (got.at(i, j) - expect.at(i, j)).abs() < 1e-5,
+                        "({i},{j}): {} vs {}",
+                        got.at(i, j),
+                        expect.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+}

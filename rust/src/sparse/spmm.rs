@@ -1,0 +1,82 @@
+//! SpMM: `A^c = S^s × V` (Algorithm 5 line 7) over block-CSR.
+
+use super::bcsr::Bcsr;
+use crate::tensor::Mat;
+
+/// out = S × V, where S is block-CSR (L×L) and V is dense (L×d).
+pub fn spmm(s: &Bcsr, v: &Mat, out: &mut Mat) {
+    let b = s.block;
+    assert_eq!(v.rows, s.seq_len());
+    assert_eq!((out.rows, out.cols), (v.rows, v.cols));
+    out.data.fill(0.0);
+    let d = v.cols;
+    for bi in 0..s.lb {
+        for blk in s.row_ptr[bi]..s.row_ptr[bi + 1] {
+            let bj = s.col_idx[blk];
+            let base = blk * b * b;
+            // Tile-dense multiply: (B×B) tile × (B×d) V panel → (B×d) out panel.
+            for r in 0..b {
+                let srow = &s.values[base + r * b..base + (r + 1) * b];
+                let orow = &mut out.data[(bi * b + r) * d..(bi * b + r + 1) * d];
+                for (c, &sv) in srow.iter().enumerate() {
+                    if sv == 0.0 {
+                        continue;
+                    }
+                    let vrow = v.row(bj * b + c);
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += sv * vv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub fn spmm_alloc(s: &Bcsr, v: &Mat) -> Mat {
+    let mut out = Mat::zeros(v.rows, v.cols);
+    spmm(s, v, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::BlockMask;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    #[test]
+    fn matches_dense_matmul_property() {
+        QuickCheck::new().cases(30).run("spmm=dense", |rng| {
+            let lb = 1 + rng.below(6);
+            let block = [2, 4][rng.below(2)];
+            let d = 1 + rng.below(12);
+            let mut mask = BlockMask::empty(lb, block);
+            for bit in mask.bits.iter_mut() {
+                *bit = rng.chance(0.4);
+            }
+            mask.set_diagonal();
+            let mut s = Bcsr::from_mask(&mask);
+            for val in s.values.iter_mut() {
+                *val = rng.gauss() as f32;
+            }
+            let v = Mat::random_normal(lb * block, d, 1.0, rng);
+            let got = spmm_alloc(&s, &v);
+            let expect = s.to_dense().matmul(&v);
+            assert_allclose(&got.data, &expect.data, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn empty_rows_produce_zero_rows() {
+        let mut mask = BlockMask::empty(3, 2);
+        mask.set(0, 0, true); // row-blocks 1,2 empty
+        let mut s = Bcsr::from_mask(&mask);
+        s.values.fill(1.0);
+        let v = Mat::filled(6, 4, 2.0);
+        let out = spmm_alloc(&s, &v);
+        assert!(out.row(0).iter().all(|&x| x == 4.0));
+        for i in 2..6 {
+            assert!(out.row(i).iter().all(|&x| x == 0.0), "row {i}");
+        }
+    }
+}

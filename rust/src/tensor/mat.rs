@@ -1,0 +1,312 @@
+//! Row-major f32 matrix.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Tiled transpose for cache friendliness on large L×L score matrices.
+        const T: usize = 32;
+        for ib in (0..self.rows).step_by(T) {
+            for jb in (0..self.cols).step_by(T) {
+                for i in ib..(ib + T).min(self.rows) {
+                    for j in jb..(jb + T).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A × B (cache-blocked i-k-j loop ordering).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch: {}x{} × {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut out = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut out);
+        out
+    }
+
+    /// C = Aᵀ × B without materializing the transpose (k-outer
+    /// accumulation: row k of A scales row k of B into the accumulator —
+    /// all accesses stream row-major). Perf-pass addition: the dense
+    /// attention backward needs Wᵀ·dO and dZᵀ·Q; `transpose().matmul()`
+    /// cost an extra O(L²) materialization + strided reads.
+    pub fn matmul_tn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        let (m, n) = (self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aki * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A × Bᵀ without materializing the transpose.
+    pub fn matmul_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        let (m, n, k) = (self.rows, b.rows, self.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot(arow, b.row(j));
+            }
+        }
+        let _ = k;
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Slice of columns [c0, c1) as a new matrix (used for head splitting).
+    pub fn col_slice(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into columns [c0, c0+src.cols) (used for head concat).
+    pub fn set_col_slice(&mut self, c0: usize, src: &Mat) {
+        assert_eq!(self.rows, src.rows);
+        assert!(c0 + src.cols <= self.cols);
+        for i in 0..self.rows {
+            let cols = self.cols;
+            self.data[i * cols + c0..i * cols + c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation; the compiler autovectorizes this shape.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C += A × B with i-k-j ordering (B rows stream through cache).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        QuickCheck::new().cases(30).run("matmul=naive", |rng| {
+            let m = 1 + rng.below(17);
+            let k = 1 + rng.below(17);
+            let n = 1 + rng.below(17);
+            let a = Mat::random_normal(m, k, 1.0, rng);
+            let b = Mat::random_normal(k, n, 1.0, rng);
+            assert_allclose(&a.matmul(&b).data, &naive_matmul(&a, &b).data, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        QuickCheck::new().cases(30).run("tn=explicit-T", |rng| {
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(12);
+            let n = 1 + rng.below(12);
+            let a = Mat::random_normal(k, m, 1.0, rng);
+            let b = Mat::random_normal(k, n, 1.0, rng);
+            assert_allclose(&a.matmul_tn(&b).data, &a.transpose().matmul(&b).data, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        QuickCheck::new().cases(30).run("nt=explicit-T", |rng| {
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(12);
+            let n = 1 + rng.below(12);
+            let a = Mat::random_normal(m, k, 1.0, rng);
+            let b = Mat::random_normal(n, k, 1.0, rng);
+            assert_allclose(&a.matmul_nt(&b).data, &a.matmul(&b.transpose()).data, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        QuickCheck::new().cases(20).run("T∘T=id", |rng| {
+            let m = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let a = Mat::random_normal(m, n, 1.0, rng);
+            crate::qc_assert!(a.transpose().transpose() == a, "T(T(a)) != a");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn col_slice_roundtrip() {
+        let a = Mat::from_fn(3, 6, |i, j| (i * 6 + j) as f32);
+        let s = a.col_slice(2, 5);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.cols, 3);
+        assert_eq!(s.at(1, 0), a.at(1, 2));
+        let mut b = Mat::zeros(3, 6);
+        b.set_col_slice(2, &s);
+        assert_eq!(b.at(2, 4), a.at(2, 4));
+        assert_eq!(b.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn frobenius_known() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frobenius_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::random_normal(5, 5, 1.0, &mut rng);
+        let i = Mat::eye(5);
+        assert_allclose(&a.matmul(&i).data, &a.data, 1e-6, 1e-7).unwrap();
+    }
+}

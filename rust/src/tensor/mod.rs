@@ -1,0 +1,8 @@
+//! Dense f32 matrix kernels used by the Rust-side compute engine
+//! (pattern generation, the dense-MHA baseline, the rust-native inference
+//! path). Row-major `Mat` plus cache-blocked matmul variants.
+
+pub mod mat;
+pub mod ops;
+
+pub use mat::Mat;

@@ -1,0 +1,147 @@
+//! Neural-net elementwise / normalization ops over [`Mat`], mirroring the
+//! L2 JAX model so the rust-native inference path (`model::encoder`) matches
+//! the AOT artifacts bit-for-bit up to float tolerance.
+
+use super::Mat;
+
+/// Row-wise numerically-stable dense softmax (Algorithm 1, line 7).
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise LayerNorm with learned scale/shift (eps matches jax default 1e-6
+/// used in the L2 model).
+pub fn layernorm(x: &Mat, gamma: &[f32], beta: &[f32], eps: f32) -> Mat {
+    assert_eq!(gamma.len(), x.cols);
+    assert_eq!(beta.len(), x.cols);
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..x.cols {
+            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+pub fn relu(m: &mut Mat) {
+    for v in &mut m.data {
+        *v = v.max(0.0);
+    }
+}
+
+/// x + bias (bias broadcast over rows).
+pub fn add_bias(m: &mut Mat, bias: &[f32]) {
+    assert_eq!(bias.len(), m.cols);
+    for i in 0..m.rows {
+        for (v, b) in m.row_mut(i).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Mean over rows → vector of length cols (used for mean-pooled classifier).
+pub fn mean_rows(m: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols];
+    for i in 0..m.rows {
+        for (o, v) in out.iter_mut().zip(m.row(i)) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / m.rows as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// argmax of a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        QuickCheck::new().cases(25).run("softmax-mass", |rng| {
+            let m = 1 + rng.below(8);
+            let n = 1 + rng.below(64);
+            let mut a = Mat::random_normal(m, n, 3.0, rng);
+            softmax_rows(&mut a);
+            for i in 0..m {
+                let s: f32 = a.row(i).iter().sum();
+                crate::qc_assert!((s - 1.0).abs() < 1e-5, "row {i} mass {s}");
+                crate::qc_assert!(a.row(i).iter().all(|&v| v >= 0.0), "negative prob");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let mut b = Mat::from_vec(1, 3, vec![1001.0, 1002.0, 1003.0]);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        assert_allclose(&a.data, &b.data, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let x = Mat::random_normal(6, 32, 2.0, &mut rng);
+        let g = vec![1.0f32; 32];
+        let b = vec![0.0f32; 32];
+        let y = layernorm(&x, &g, &b, 1e-6);
+        for i in 0..y.rows {
+            let mean: f32 = y.row(i).iter().sum::<f32>() / 32.0;
+            let var: f32 = y.row(i).iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let mut m = Mat::from_vec(2, 2, vec![-1.0, 2.0, -3.0, 4.0]);
+        relu(&mut m);
+        assert_eq!(m.data, vec![0.0, 2.0, 0.0, 4.0]);
+        add_bias(&mut m, &[1.0, -1.0]);
+        assert_eq!(m.data, vec![1.0, 1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn mean_rows_and_argmax() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 3.0, 2.0, 1.0]);
+        assert_eq!(mean_rows(&m), vec![2.0, 2.0, 2.0]);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+}

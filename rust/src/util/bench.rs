@@ -1,0 +1,239 @@
+//! Criterion-style benchmark harness (criterion itself is not vendored).
+//!
+//! Every `cargo bench` target uses `harness = false` and drives this module:
+//! warmup, fixed-duration or fixed-iteration sampling, robust statistics,
+//! and a markdown/CSV reporter so each bench regenerates one paper
+//! table/figure as text.
+
+use crate::util::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub stddev_ms: f64,
+}
+
+impl BenchStats {
+    pub fn per_iter_human(&self) -> String {
+        format_ms(self.median_ms)
+    }
+}
+
+pub fn format_ms(ms: f64) -> String {
+    if ms < 1e-3 {
+        format!("{:.1} ns", ms * 1e6)
+    } else if ms < 1.0 {
+        format!("{:.1} µs", ms * 1e3)
+    } else if ms < 1000.0 {
+        format!("{ms:.2} ms")
+    } else {
+        format!("{:.2} s", ms / 1e3)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup_s: f64,
+    /// Measurement wall-clock budget.
+    pub measure_s: f64,
+    /// Hard cap on measured iterations (0 = unlimited).
+    pub max_iters: usize,
+    /// Minimum measured iterations even if over budget.
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // SPION_BENCH_FAST=1 shrinks budgets ~10x so `cargo bench` finishes
+        // quickly in CI; full budgets for the recorded runs.
+        let fast = std::env::var("SPION_BENCH_FAST").ok().as_deref() == Some("1");
+        if fast {
+            Self { warmup_s: 0.05, measure_s: 0.25, max_iters: 50, min_iters: 3 }
+        } else {
+            Self { warmup_s: 0.3, measure_s: 2.0, max_iters: 500, min_iters: 5 }
+        }
+    }
+}
+
+/// Time `f` under `cfg`, returning robust statistics.
+pub fn bench_with<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchStats {
+    // Warmup.
+    let sw = Stopwatch::start();
+    while sw.elapsed_s() < cfg.warmup_s {
+        f();
+    }
+    // Measure.
+    let mut samples_ms: Vec<f64> = Vec::new();
+    let sw = Stopwatch::start();
+    loop {
+        let it = Stopwatch::start();
+        f();
+        samples_ms.push(it.elapsed_ms());
+        let enough_time = sw.elapsed_s() >= cfg.measure_s && samples_ms.len() >= cfg.min_iters;
+        let enough_iters = cfg.max_iters > 0 && samples_ms.len() >= cfg.max_iters;
+        if enough_time || enough_iters {
+            break;
+        }
+    }
+    stats_from_samples(name, &samples_ms)
+}
+
+/// Default-config convenience wrapper.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench_with(name, &BenchConfig::default(), f)
+}
+
+pub fn stats_from_samples(name: &str, samples_ms: &[f64]) -> BenchStats {
+    assert!(!samples_ms.is_empty());
+    let mut sorted = samples_ms.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ms: mean,
+        median_ms: sorted[n / 2],
+        p95_ms: sorted[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ms: sorted[0],
+        stddev_ms: var.sqrt(),
+    }
+}
+
+/// Markdown table reporter shared by all bench binaries.
+pub struct Report {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+
+    /// Also emit CSV next to the markdown (for plotting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &str) {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(path, self.to_csv()).expect("write csv");
+        println!("[report] wrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats_from_samples("t", &[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.median_ms, 3.0);
+        assert_eq!(s.min_ms, 1.0);
+        assert!(s.mean_ms > s.median_ms, "outlier pulls mean up");
+    }
+
+    #[test]
+    fn bench_runs() {
+        let cfg = BenchConfig { warmup_s: 0.0, measure_s: 0.01, max_iters: 10, min_iters: 2 };
+        let mut x = 0u64;
+        let s = bench_with("noop", &cfg, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(s.iters >= 2);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let md = r.to_markdown();
+        assert!(md.contains("## T"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut r = Report::new("T", &["a,b", "c"]);
+        r.row(vec!["x\"y".into(), "z".into()]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn format_ms_ranges() {
+        assert!(format_ms(0.0000005).ends_with("ns"));
+        assert!(format_ms(0.5).ends_with("µs"));
+        assert!(format_ms(5.0).ends_with("ms"));
+        assert!(format_ms(5000.0).ends_with("s"));
+    }
+}

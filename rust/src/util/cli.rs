@@ -1,0 +1,134 @@
+//! Tiny command-line flag parser (clap is not in the vendored crate set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Every binary/example in the repo declares its options through
+//! this to get consistent `--help` output.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    program: String,
+}
+
+impl Args {
+    /// Parse from process args.
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv)
+    }
+
+    /// Parse from an explicit argv (argv[0] = program name).
+    pub fn parse(argv: &[String]) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let program = argv.first().cloned().unwrap_or_default();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { flags, positional, program }
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+
+    /// Print a help block and exit if `--help` was given.
+    pub fn help_if_requested(&self, about: &str, options: &[(&str, &str)]) {
+        if self.has("help") {
+            println!("{about}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:", self.program);
+            for (flag, desc) in options {
+                println!("  --{flag:<24} {desc}");
+            }
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog").chain(s.iter().copied()).map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        // NOTE: a bare `--flag` greedily binds the next non-`--` token, so
+        // boolean flags must use `--flag=true` or come after positionals.
+        let a = Args::parse(&argv(&["--x", "3", "--y=4", "pos1", "pos2", "--verbose"]));
+        assert_eq!(a.usize_or("x", 0), 3);
+        assert_eq!(a.usize_or("y", 0), 4);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]));
+        assert_eq!(a.f64_or("alpha", 0.96), 0.96);
+        assert_eq!(a.str_or("task", "listops"), "listops");
+        assert!(!a.bool_or("flag", false));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // "--lr -0.5" — note "-0.5" does not start with "--" so it binds.
+        let a = Args::parse(&argv(&["--lr", "-0.5"]));
+        assert_eq!(a.f64_or("lr", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,49 @@
+//! Minimal PGM (portable graymap) writer — real image files for the Fig. 1
+//! attention-heatmap renders without any image-crate dependency.
+
+use crate::tensor::Mat;
+
+/// Render a matrix as an 8-bit PGM, normalizing to [min, max].
+pub fn mat_to_pgm(m: &Mat) -> Vec<u8> {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in &m.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut out = format!("P5\n{} {}\n255\n", m.cols, m.rows).into_bytes();
+    out.extend(m.data.iter().map(|&v| (((v - lo) / span) * 255.0) as u8));
+    out
+}
+
+pub fn save_pgm(m: &Mat, path: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, mat_to_pgm(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_payload() {
+        let m = Mat::from_vec(2, 3, vec![0.0, 0.5, 1.0, 1.0, 0.5, 0.0]);
+        let pgm = mat_to_pgm(&m);
+        let header = b"P5\n3 2\n255\n";
+        assert_eq!(&pgm[..header.len()], header);
+        assert_eq!(pgm.len(), header.len() + 6);
+        // Extremes map to 0 and 255.
+        assert_eq!(pgm[header.len()], 0);
+        assert_eq!(pgm[header.len() + 2], 255);
+    }
+
+    #[test]
+    fn constant_matrix_does_not_divide_by_zero() {
+        let m = Mat::filled(4, 4, 7.0);
+        let pgm = mat_to_pgm(&m);
+        assert!(pgm.ends_with(&[0u8; 16]));
+    }
+}

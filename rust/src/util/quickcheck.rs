@@ -1,0 +1,115 @@
+//! Mini property-testing framework (proptest is not in the vendored set).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it for
+//! `cases` independent seeds and, on failure, reports the failing seed so the
+//! case is reproducible with `SPION_QC_SEED=<seed>`. Generators are free
+//! functions over `Rng` — composition is ordinary Rust.
+
+use crate::util::rng::Rng;
+
+pub struct QuickCheck {
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Default for QuickCheck {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuickCheck {
+    pub fn new() -> Self {
+        let base_seed = std::env::var("SPION_QC_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("SPION_QC_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self { cases, base_seed }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run `prop` for each seed; panic with the failing seed on error.
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property '{name}' failed on case {case} (reproduce with SPION_QC_SEED={}): {msg}",
+                    self.base_seed.wrapping_add(case as u64)
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! qc_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float equality with relative + absolute tolerance.
+pub fn approx_eq(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Assert two slices approximately equal; returns Err with the first
+/// offending index for property-test style reporting.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !approx_eq(x, y, rtol, atol) {
+            return Err(format!("mismatch at {i}: {x} vs {y} (|d|={})", (x - y).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        QuickCheck::new().cases(10).run("trivial", |rng| {
+            count += 1;
+            let x = rng.f64();
+            qc_assert!((0.0..1.0).contains(&x), "out of range");
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        QuickCheck::new().cases(5).run("fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_reports_index() {
+        let e = assert_allclose(&[1.0, 2.0], &[1.0, 2.5], 1e-3, 1e-3).unwrap_err();
+        assert!(e.contains("mismatch at 1"), "{e}");
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-4, 1e-5).is_ok());
+    }
+}

@@ -1,0 +1,197 @@
+//! Integration tests over the AOT artifacts + PJRT runtime (tiny preset).
+//! Skipped with a notice when artifacts are missing (`make artifacts`).
+//!
+//! These are the compose-proof tests: python-lowered HLO executed from
+//! rust, three-phase training, and rust-native-engine ↔ XLA parity.
+
+use spion::config::types::{preset, SparsityConfig};
+use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::coordinator::Trainer;
+use spion::metrics::Phase;
+use spion::model::{Encoder, ModelParams};
+use spion::pattern::SpionVariant;
+use spion::runtime::executor::lit;
+use spion::runtime::{ArtifactSet, Runtime};
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new("artifacts/tiny/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
+    let (task, model) = preset("tiny").unwrap();
+    let mut train = TrainConfig::default();
+    train.steps = steps;
+    train.min_dense_steps = 6;
+    train.max_dense_steps = 12;
+    train.snapshot_every = 3;
+    ExperimentConfig {
+        task,
+        model,
+        train,
+        sparsity: SparsityConfig::new(kind, 16, 0.9),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn three_phase_training_reduces_loss_and_generates_patterns() {
+    if !artifacts_available() {
+        return;
+    }
+    std::env::set_var("SPION_EVAL_BATCHES", "2");
+    let rt = Runtime::cpu().unwrap();
+    let exp = tiny_exp(PatternKind::Spion(SpionVariant::CF), 30);
+    let outcome = Trainer::new(&rt, exp).unwrap().run().unwrap();
+    let m = &outcome.metrics;
+
+    // Phase structure (Fig. 2): dense prefix, sparse suffix, one transition.
+    let t = m.transition_step.expect("transition fired");
+    assert!(t >= 6 && t <= 12, "transition at {t}");
+    assert!(m.records.iter().take(t).all(|r| r.phase == Phase::Dense));
+    assert!(m.records.iter().skip(t + 1).all(|r| r.phase == Phase::Sparse));
+
+    // Patterns: per layer, block-sparse, diagonal present.
+    let masks = outcome.masks.as_ref().expect("masks generated");
+    assert_eq!(masks.len(), 2);
+    for mask in masks {
+        assert!(mask.density() < 0.5, "density {}", mask.density());
+        for k in 0..mask.lb {
+            assert!(mask.get(k, k), "diagonal block {k}");
+        }
+    }
+
+    // Optimization signal: loss at end below loss at start.
+    let first = m.records.first().unwrap().loss;
+    let last_avg: f32 =
+        m.records.iter().rev().take(5).map(|r| r.loss).sum::<f32>() / 5.0;
+    assert!(last_avg < first, "loss did not decrease: {first} → {last_avg}");
+    assert!(m.eval_accuracy.unwrap() >= 0.0);
+}
+
+#[test]
+fn dense_baseline_never_transitions() {
+    if !artifacts_available() {
+        return;
+    }
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let rt = Runtime::cpu().unwrap();
+    let exp = tiny_exp(PatternKind::Dense, 16);
+    let outcome = Trainer::new(&rt, exp).unwrap().run().unwrap();
+    assert!(outcome.metrics.transition_step.is_none());
+    assert!(outcome.masks.is_none());
+    assert!(outcome.metrics.records.iter().all(|r| r.phase == Phase::Dense));
+}
+
+#[test]
+fn all_baseline_kinds_train() {
+    if !artifacts_available() {
+        return;
+    }
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let rt = Runtime::cpu().unwrap();
+    for kind in [
+        PatternKind::BigBird,
+        PatternKind::Reformer,
+        PatternKind::Spion(SpionVariant::C),
+        PatternKind::Spion(SpionVariant::F),
+    ] {
+        let exp = tiny_exp(kind, 14);
+        let outcome = Trainer::new(&rt, exp).unwrap().run().unwrap();
+        assert!(
+            outcome.metrics.transition_step.is_some(),
+            "{} did not transition",
+            kind.name()
+        );
+        assert!(outcome.metrics.final_loss().unwrap().is_finite(), "{}", kind.name());
+    }
+}
+
+#[test]
+fn rust_native_encoder_matches_xla_dense_fwd() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let artifacts = ArtifactSet::open("artifacts", "tiny").unwrap();
+    let m = &artifacts.manifest;
+    let init = rt.load(&artifacts.path("init")).unwrap();
+    let dense_fwd = rt.load(&artifacts.path("dense_fwd")).unwrap();
+
+    let params = init.run(&[lit::scalar_u32(3)]).unwrap();
+    // Batch through XLA.
+    let (task, model) = preset("tiny").unwrap();
+    let gen = spion::data::make_task(task, m.seq_len, m.vocab, m.classes);
+    let mut batcher = spion::data::batcher::Batcher::new(gen, m.batch, 5);
+    let batch = batcher.next_batch();
+    let mut inputs = params.clone();
+    inputs.push(lit::i32_vec(&batch.x, &[m.batch as i64, m.seq_len as i64]).unwrap());
+    let xla_logits = lit::to_f32_vec(&dense_fwd.run(&inputs).unwrap()[0]).unwrap();
+
+    // Same batch through the rust-native engine.
+    let flat: Vec<(Vec<usize>, Vec<f32>)> = params
+        .iter()
+        .zip(&m.params)
+        .map(|(l, spec)| (spec.shape.clone(), lit::to_f32_vec(l).unwrap()))
+        .collect();
+    let mut enc = Encoder::new(ModelParams::from_flat(&flat, m.layers).unwrap(), model.heads);
+    let native = enc.forward_batch(&batch.x, m.batch);
+
+    // Parity: same argmax everywhere, logits close.
+    for b in 0..m.batch {
+        let xrow = &xla_logits[b * m.classes..(b + 1) * m.classes];
+        let nrow = native.row(b);
+        let xa = spion::tensor::ops::argmax(xrow);
+        let na = spion::tensor::ops::argmax(nrow);
+        assert_eq!(xa, na, "batch {b}: argmax differs: {xrow:?} vs {nrow:?}");
+        for (x, n) in xrow.iter().zip(nrow) {
+            assert!((x - n).abs() < 2e-2 + 0.05 * x.abs(), "batch {b}: {xrow:?} vs {nrow:?}");
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_rust_presets() {
+    // For every built preset, the python-emitted manifest must agree with
+    // the rust preset table (ABI drift check).
+    let mut checked = 0;
+    for (_, model) in spion::config::types::presets() {
+        let path = format!("artifacts/{}/manifest.json", model.preset);
+        if !std::path::Path::new(&path).exists() {
+            continue;
+        }
+        let m = spion::runtime::Manifest::load(&path).unwrap();
+        m.check_against(&model).unwrap_or_else(|e| panic!("{e}"));
+        checked += 1;
+    }
+    if checked == 0 {
+        eprintln!("SKIP: no artifacts built");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_encoder() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let exp = tiny_exp(PatternKind::Spion(SpionVariant::CF), 10);
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let outcome = trainer.run().unwrap();
+    let path = std::env::temp_dir().join("spion_e2e_ck.bin");
+    let path = path.to_str().unwrap();
+    trainer.save_checkpoint(&outcome, path).unwrap();
+    let ck = spion::coordinator::checkpoint::Checkpoint::load(path).unwrap();
+    assert_eq!(ck.preset, "tiny");
+    let params = ModelParams::from_checkpoint(&ck, 2).unwrap();
+    let mut enc = Encoder::new(params, 2);
+    let toks: Vec<i32> = (0..128).map(|i| (i % 17) as i32).collect();
+    let (logits, _) = enc.forward(&toks);
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,138 @@
+//! Python ↔ Rust golden-vector parity.
+//!
+//! `make artifacts` dumps randomized cases through the python reference
+//! (`python/compile/pattern_ref.py`, `kernels/ref.py`) into
+//! `artifacts/golden/*.json`; these tests replay them through the rust
+//! implementations and demand equality (exact for masks, allclose for
+//! float intermediates). Skipped with a notice if artifacts are missing.
+
+use spion::pattern::conv::{conv_diag, diagonal_filter};
+use spion::pattern::flood::flood_fill_all;
+use spion::pattern::pool::avg_pool;
+use spion::pattern::spion::{generate_pattern, PatternConfig};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::sparse::bcsr::Bcsr;
+use spion::sparse::sddmm::sddmm;
+use spion::sparse::softmax::sparse_softmax;
+use spion::sparse::spmm::spmm_alloc;
+use spion::tensor::Mat;
+use spion::util::json::Json;
+use spion::util::quickcheck::assert_allclose;
+
+fn load_golden(name: &str) -> Option<Json> {
+    let path = format!("artifacts/golden/{name}");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("SKIP: {path} missing — run `make artifacts`");
+            return None;
+        }
+    };
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+fn f32s(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key).unwrap_or(&Json::Null).as_f32_vec().unwrap_or_else(|| panic!("{key} missing"))
+}
+
+#[test]
+fn pattern_golden_parity() {
+    let Some(golden) = load_golden("pattern_golden.json") else { return };
+    let cases = golden.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 4);
+    for (idx, case) in cases.iter().enumerate() {
+        let l = case.get("l").unwrap().as_usize().unwrap();
+        let block = case.get("block").unwrap().as_usize().unwrap();
+        let filter = case.get("filter").unwrap().as_usize().unwrap();
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap();
+        let variant = match case.get("variant").unwrap().as_str().unwrap() {
+            "C" => SpionVariant::C,
+            "F" => SpionVariant::F,
+            "CF" => SpionVariant::CF,
+            other => panic!("unknown variant {other}"),
+        };
+        let scores = Mat::from_vec(l, l, f32s(case, "scores"));
+
+        // Stage parity: conv.
+        let conv_expect = f32s(case, "conv_out");
+        let conv_got = if variant == SpionVariant::F {
+            scores.clone()
+        } else {
+            conv_diag(&scores, &diagonal_filter(filter))
+        };
+        assert_allclose(&conv_got.data, &conv_expect, 1e-3, 1e-5)
+            .unwrap_or_else(|e| panic!("case {idx}: conv mismatch: {e}"));
+
+        // Stage parity: pool.
+        let pool_expect = f32s(case, "pool_out");
+        let pool_got = avg_pool(&conv_got, block);
+        assert_allclose(&pool_got.data, &pool_expect, 1e-3, 1e-5)
+            .unwrap_or_else(|e| panic!("case {idx}: pool mismatch: {e}"));
+
+        // Stage parity: flood fill over the PYTHON pool values with the
+        // PYTHON threshold — identical comparisons on identical f32 inputs
+        // ⇒ exact mask equality required.
+        if let Some(fl_expect) = case.get("flood_from_pool").filter(|v| !matches!(v, Json::Null)) {
+            let t = case.get("threshold").unwrap().as_f64().unwrap() as f32;
+            let lb = l / block;
+            let pool_py = Mat::from_vec(lb, lb, pool_expect.clone());
+            let fl = flood_fill_all(&pool_py, t);
+            let expect: Vec<f32> = fl_expect.as_f32_vec().unwrap();
+            assert_eq!(fl.data, expect, "case {idx}: flood fill mask differs");
+        }
+
+        // End-to-end parity (exact mask match).
+        let cfg = PatternConfig { variant, block, filter, alpha };
+        let mask = generate_pattern(&scores, &cfg);
+        let expect_bits: Vec<bool> =
+            f32s(case, "mask").iter().map(|&v| v != 0.0).collect();
+        assert_eq!(
+            mask.bits, expect_bits,
+            "case {idx} ({variant:?}, l={l}, block={block}): end-to-end mask differs"
+        );
+    }
+}
+
+#[test]
+fn attention_engine_golden_parity() {
+    let Some(golden) = load_golden("attention_golden.json") else { return };
+    let cases = golden.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 3);
+    for (idx, case) in cases.iter().enumerate() {
+        let l = case.get("l").unwrap().as_usize().unwrap();
+        let dh = case.get("dh").unwrap().as_usize().unwrap();
+        let block = case.get("block").unwrap().as_usize().unwrap();
+        let scale = case.get("scale").unwrap().as_f64().unwrap() as f32;
+        let lb = l / block;
+        let q = Mat::from_vec(l, dh, f32s(case, "q"));
+        let k = Mat::from_vec(l, dh, f32s(case, "k"));
+        let v = Mat::from_vec(l, dh, f32s(case, "v"));
+        let bits: Vec<bool> = f32s(case, "block_mask").iter().map(|&x| x != 0.0).collect();
+        let mask = BlockMask { lb, block, bits };
+
+        // Engine pipeline: SDDMM → sparse softmax → SpMM.
+        let mut s = Bcsr::from_mask(&mask);
+        sddmm(&q, &k, &mut s, scale);
+        sparse_softmax(&mut s, 1.0, true);
+
+        // S^s parity at stored positions (jnp computed the dense-equivalent
+        // closed form).
+        let s_expect = Mat::from_vec(l, l, f32s(case, "s_sparse"));
+        let s_got = s.to_dense();
+        assert_allclose(&s_got.data, &s_expect.data, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("case {idx}: S^s mismatch: {e}"));
+
+        // Output parity.
+        let out_expect = f32s(case, "out");
+        let out_got = spmm_alloc(&s, &v);
+        assert_allclose(&out_got.data, &out_expect, 1e-3, 1e-4)
+            .unwrap_or_else(|e| panic!("case {idx}: output mismatch: {e}"));
+
+        // Full-density case must equal the dense reference too.
+        if mask.density() == 1.0 {
+            let dense_expect = f32s(case, "dense_out");
+            assert_allclose(&out_got.data, &dense_expect, 1e-3, 1e-4)
+                .unwrap_or_else(|e| panic!("case {idx}: dense parity: {e}"));
+        }
+    }
+}

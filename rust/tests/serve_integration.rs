@@ -1,0 +1,134 @@
+//! Serving-layer integration + property tests (pure rust; no artifacts
+//! needed): router/batcher invariants under random load, and the
+//! checkpoint → encoder → server path.
+
+use spion::model::{Encoder, ModelParams};
+use spion::pattern::BlockMask;
+use spion::serve::{BatchPolicy, DynamicBatcher, InferenceServer};
+use spion::util::quickcheck::QuickCheck;
+use spion::util::rng::Rng;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+fn random_params(rng: &mut Rng, layers: usize) -> ModelParams {
+    // Mirror of the manifest layout at a small shape.
+    let (vocab, l, d, ffn, classes) = (12usize, 16usize, 8usize, 32usize, 4usize);
+    let mut flat: Vec<(Vec<usize>, Vec<f32>)> = Vec::new();
+    let mut mat = |r: usize, c: usize, rng: &mut Rng| {
+        let mut data = vec![0.0f32; r * c];
+        rng.fill_normal(&mut data, 0.3);
+        (vec![r, c], data)
+    };
+    flat.push(mat(vocab, d, rng));
+    flat.push(mat(l, d, rng));
+    for _ in 0..layers {
+        flat.push((vec![d], vec![1.0; d]));
+        flat.push((vec![d], vec![0.0; d]));
+        for _ in 0..4 {
+            flat.push(mat(d, d, rng));
+        }
+        flat.push((vec![d], vec![1.0; d]));
+        flat.push((vec![d], vec![0.0; d]));
+        flat.push(mat(d, ffn, rng));
+        flat.push((vec![ffn], vec![0.0; ffn]));
+        flat.push(mat(ffn, d, rng));
+        flat.push((vec![d], vec![0.0; d]));
+    }
+    flat.push(mat(d, classes, rng));
+    flat.push((vec![classes], vec![0.0; classes]));
+    ModelParams::from_flat(&flat, layers).unwrap()
+}
+
+#[test]
+fn batcher_conserves_items_property() {
+    QuickCheck::new().cases(20).run("batcher conservation", |rng| {
+        let n = 1 + rng.below(200);
+        let max_batch = 1 + rng.below(16);
+        let (tx, rx) = channel();
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            qc_assert_len(&batch, max_batch)?;
+            seen.extend(batch);
+        }
+        if seen != (0..n).collect::<Vec<_>>() {
+            return Err(format!("items lost/reordered: {} of {n}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Property helper: batch sizes must lie in (0, max_batch].
+fn qc_assert_len(batch: &[usize], max_batch: usize) -> Result<(), String> {
+    if batch.is_empty() || batch.len() > max_batch {
+        return Err(format!("batch size {} violates (0, {max_batch}]", batch.len()));
+    }
+    Ok(())
+}
+
+#[test]
+fn server_end_to_end_dense_and_sparse_agree_on_full_mask() {
+    let mut rng = Rng::new(3);
+    let params = random_params(&mut rng, 2);
+    let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+
+    let dense = InferenceServer::start(Encoder::new(params.clone(), 2), BatchPolicy::default());
+    let full = vec![BlockMask::full(4, 4), BlockMask::full(4, 4)];
+    let sparse = InferenceServer::start(
+        Encoder::new(params, 2).with_masks(full),
+        BatchPolicy::default(),
+    );
+    let rd = dense.client().infer(toks.clone()).unwrap();
+    let rs = sparse.client().infer(toks).unwrap();
+    assert_eq!(rd.class, rs.class);
+    for (a, b) in rd.logits.iter().zip(&rs.logits) {
+        assert!((a - b).abs() < 1e-3, "{:?} vs {:?}", rd.logits, rs.logits);
+    }
+    dense.shutdown();
+    sparse.shutdown();
+}
+
+#[test]
+fn server_under_concurrent_load_serves_everything() {
+    let mut rng = Rng::new(9);
+    let params = random_params(&mut rng, 2);
+    let mut mask = BlockMask::empty(4, 4);
+    mask.set_diagonal();
+    let server = InferenceServer::start(
+        Encoder::new(params, 2).with_masks(vec![mask.clone(), mask]),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+    );
+    let n_threads = 6;
+    let per_thread = 25;
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t as u64);
+            let mut ok = 0;
+            for _ in 0..per_thread {
+                let toks: Vec<i32> = (0..16).map(|_| rng.below(12) as i32).collect();
+                if client.infer(toks).is_some() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, n_threads * per_thread);
+    assert_eq!(
+        server.stats.served.load(std::sync::atomic::Ordering::Relaxed) as usize,
+        total
+    );
+    // Batching actually batched under concurrency.
+    assert!(server.stats.mean_batch() > 1.0, "mean batch {}", server.stats.mean_batch());
+    server.shutdown();
+}

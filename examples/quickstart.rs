@@ -29,6 +29,7 @@ fn main() -> Result<()> {
         // Block size must match the artifact-baked mask shape (manifest
         // `pattern_block`); `for_model` mirrors the AOT side.
         sparsity: SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model),
+        exec: Default::default(),
         artifacts_dir: "artifacts".into(),
     };
 

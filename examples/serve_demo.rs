@@ -49,10 +49,12 @@ fn run_load(
     tokens: &[Vec<i32>],
     concurrency: usize,
     max_batch: usize,
+    workers: usize,
 ) -> Result<(f64, f64)> {
-    let server = InferenceServer::start(
+    let server = InferenceServer::start_with_workers(
         encoder,
         BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        workers,
     );
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -95,6 +97,7 @@ fn main() -> Result<()> {
             ("requests <n>", "total requests (default 64)"),
             ("concurrency <n>", "client threads (default 8)"),
             ("max-batch <n>", "batcher max batch (default 8)"),
+            ("workers <n>", "server pool workers (0 = all cores; default 1)"),
             ("alpha <f>", "SPION-CF threshold quantile (default 0.9)"),
         ],
     );
@@ -103,6 +106,8 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 64);
     let concurrency = args.usize_or("concurrency", 8);
     let max_batch = args.usize_or("max-batch", 8);
+    let workers =
+        spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)).resolved_workers();
 
     let params = load_params(&args, &preset_name, model.layers)?;
 
@@ -112,13 +117,13 @@ fn main() -> Result<()> {
     let tokens: Vec<Vec<i32>> = (0..n_requests).map(|_| batcher.next_batch().x).collect();
 
     println!(
-        "== serve_demo: preset={preset_name} L={} D={} requests={n_requests} concurrency={concurrency} ==",
+        "== serve_demo: preset={preset_name} L={} D={} requests={n_requests} concurrency={concurrency} workers={workers} ==",
         model.seq_len, model.d_model
     );
 
     // Dense serving.
     let dense_enc = Encoder::new(params.clone(), model.heads);
-    let (lat_d, rps_d) = run_load("dense", dense_enc, &tokens, concurrency, max_batch)?;
+    let (lat_d, rps_d) = run_load("dense", dense_enc, &tokens, concurrency, max_batch, workers)?;
 
     // SPION-CF sparse serving: pattern from synthetic diagonal+vertical
     // scores (or from the checkpointed run's structure in a real pipeline).
@@ -132,6 +137,7 @@ fn main() -> Result<()> {
             s.pattern.alpha = args.f64_or("alpha", s.pattern.alpha);
             s
         },
+        exec: Default::default(),
         artifacts_dir: "artifacts".into(),
     };
     let mut rng = spion::util::rng::Rng::new(5);
@@ -143,7 +149,8 @@ fn main() -> Result<()> {
     let masks = generate_masks_for(&exp, &scores)?;
     let density: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
     let sparse_enc = Encoder::new(params, model.heads).with_masks(masks);
-    let (lat_s, rps_s) = run_load("spion-cf", sparse_enc, &tokens, concurrency, max_batch)?;
+    let (lat_s, rps_s) =
+        run_load("spion-cf", sparse_enc, &tokens, concurrency, max_batch, workers)?;
 
     println!(
         "\nsparse pattern density {density:.3} → latency {:.2}× lower, throughput {:.2}× higher",

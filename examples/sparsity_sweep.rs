@@ -57,6 +57,7 @@ fn main() -> Result<()> {
                 s.pattern.alpha = ratio;
                 s
             },
+            exec: spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)),
             artifacts_dir: args.str_or("artifacts", "artifacts"),
         };
         let trainer = Trainer::new(&rt, exp)?;

@@ -28,6 +28,7 @@ fn main() -> Result<()> {
             ("steps <n>", "total training steps (default 300)"),
             ("lr <f>", "Adam learning rate (default 1e-3)"),
             ("seed <n>", "run seed (default 42)"),
+            ("workers <n>", "exec workers (0 = all cores; default 1 = serial)"),
             ("out <dir>", "output directory (default results/train_e2e)"),
         ],
     );
@@ -43,18 +44,23 @@ fn main() -> Result<()> {
     sparsity.pattern.block = args.usize_or("block", sparsity.pattern.block);
     sparsity.pattern.alpha = args.f64_or("alpha", sparsity.pattern.alpha);
     sparsity.pattern.filter = args.usize_or("filter", sparsity.pattern.filter);
+    let exec = spion::exec::ExecConfig {
+        workers: args.usize_or("workers", 1),
+        ..Default::default()
+    };
     let exp = ExperimentConfig {
         task,
         model: model.clone(),
         train,
         sparsity,
+        exec,
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     };
     let out_dir = args.str_or("out", "results/train_e2e");
     std::fs::create_dir_all(&out_dir)?;
 
     println!(
-        "== train_e2e: preset={} kind={} steps={} L={} D={} H={} N={} batch={} ==",
+        "== train_e2e: preset={} kind={} steps={} L={} D={} H={} N={} batch={} workers={} ==",
         model.preset,
         exp.sparsity.kind.name(),
         exp.train.steps,
@@ -62,7 +68,8 @@ fn main() -> Result<()> {
         model.d_model,
         model.heads,
         model.layers,
-        model.batch
+        model.batch,
+        exp.exec.resolved_workers()
     );
 
     let rt = Runtime::cpu()?;

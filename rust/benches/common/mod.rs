@@ -71,6 +71,28 @@ pub fn qkv(shape: &TaskShape, rng: &mut Rng) -> (Mat, Mat, Mat) {
     )
 }
 
+/// The exec-workers axis for the scaling benches. Priority: `-- --workers
+/// 1,2,4` on the bench command line, then `SPION_BENCH_WORKERS`, then the
+/// default sweep [1, 2, 4] (`0` entries mean "all cores").
+pub fn worker_counts() -> Vec<usize> {
+    let from_args = spion::util::cli::Args::from_env()
+        .get("workers")
+        .map(|s| s.to_string());
+    let spec = from_args
+        .or_else(|| std::env::var("SPION_BENCH_WORKERS").ok())
+        .unwrap_or_else(|| "1,2,4".to_string());
+    let counts: Vec<usize> = spec
+        .split(',')
+        .map(|s| {
+            let w: usize = s.trim().parse().unwrap_or_else(|_| panic!("bad workers entry {s:?}"));
+            // Same 0-means-all-cores resolution the engine applies.
+            spion::exec::ExecConfig::with_workers(w).resolved_workers()
+        })
+        .collect();
+    assert!(!counts.is_empty(), "empty workers axis");
+    counts
+}
+
 /// Scale-aware diagonal-filter size (mirrors config::types::default_filter).
 pub fn scaled_filter(l: usize) -> usize {
     let f = (l / 32).clamp(3, 31);

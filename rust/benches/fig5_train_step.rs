@@ -1,6 +1,8 @@
 //! Fig. 5 regenerator: per-step training time, attention memory footprint,
 //! and per-request inference time for the six compared models on the three
-//! tasks.
+//! tasks — with a **workers axis**: the sparse models are re-measured at
+//! each `exec` worker count, recording the parallel runtime's scaling curve
+//! for the full fwd+bwd step (the dense baseline is single-threaded).
 //!
 //! What is measured where (DESIGN.md §2): the *attention core* — the only
 //! part that differs between models — runs on the rust block-CSR engine.
@@ -12,24 +14,29 @@
 //! Paper reference: SPION-CF 1.66× / 2.21× / 3.08× step speedup and 4.62× /
 //! 7.23× / 9.64× memory reduction on image / listops / retrieval.
 //!
-//! Run: cargo bench --bench fig5_train_step
+//! Run: cargo bench --bench fig5_train_step [-- --workers 1,2,4]
 
 mod common;
 
-use common::{pattern_for, qkv, scores_for, task_shapes, TaskShape};
+use common::{pattern_for, qkv, scores_for, task_shapes, worker_counts, TaskShape};
 use spion::attention::dense::{dense_attention_head, dense_attention_train};
-use spion::attention::{sparse_attention_head, sparse_attention_train, SparseWorkspace, TrainWorkspace};
+use spion::attention::{
+    sparse_attention_head_with, sparse_attention_train_with, SparseWorkspace, TrainWorkspace,
+};
 use spion::config::PatternKind;
+use spion::exec::{Exec, ExecConfig};
 use spion::metrics::{attention_bytes_dense, attention_bytes_sparse};
 use spion::pattern::BlockMask;
 use spion::util::bench::{bench, BenchStats, Report};
 use spion::util::human_bytes;
 use spion::util::rng::Rng;
 
+#[allow(clippy::too_many_arguments)]
 fn bench_model(
     kind: PatternKind,
     shape: &TaskShape,
     mask: &BlockMask,
+    exec: &Exec,
     q: &spion::tensor::Mat,
     k: &spion::tensor::Mat,
     v: &spion::tensor::Mat,
@@ -49,12 +56,12 @@ fn bench_model(
     } else {
         let mut ws = TrainWorkspace::new(mask, shape.dh);
         let train = bench("train", || {
-            sparse_attention_train(q, k, v, scale, cot, &mut ws);
+            sparse_attention_train_with(exec, q, k, v, scale, cot, &mut ws);
             std::hint::black_box(&ws.dq);
         });
         let mut ws2 = SparseWorkspace::new(mask, shape.dh);
         let infer = bench("infer", || {
-            let o = sparse_attention_head(q, k, v, scale, &mut ws2);
+            let o = sparse_attention_head_with(exec, q, k, v, scale, &mut ws2);
             std::hint::black_box(&o);
         });
         let mem = attention_bytes_sparse(1, 1, mask.nnz_elements(), mask.nnz_blocks(), mask.lb);
@@ -63,38 +70,64 @@ fn bench_model(
 }
 
 fn main() {
+    let workers_axis = worker_counts();
     let mut rng = Rng::new(0xF15);
     let mut report = Report::new(
         "Fig. 5 — training step time / attention memory / inference time (attention core, per head)",
-        &["task", "model", "density", "train step", "vs dense", "memory", "mem red.", "infer", "vs dense"],
+        &["task", "model", "workers", "density", "train step", "vs dense", "memory", "mem red.", "infer", "vs dense"],
     );
 
     for shape in task_shapes() {
         let scores = scores_for(&shape, &mut rng);
         let (q, k, v) = qkv(&shape, &mut rng);
         let cot = spion::tensor::Mat::random_normal(shape.l, shape.dh, 1.0, &mut rng);
-        let mut dense_train = None;
-        let mut dense_mem = 0usize;
-        let mut dense_infer = None;
-        for kind in PatternKind::all() {
-            let mask = pattern_for(kind, &shape, &scores, &mut rng);
-            let (train, infer, mem) = bench_model(kind, &shape, &mask, &q, &k, &v, &cot);
-            if matches!(kind, PatternKind::Dense) {
-                dense_train = Some(train.median_ms);
-                dense_infer = Some(infer.median_ms);
-                dense_mem = mem;
+
+        // Dense baseline: one single-threaded row per task.
+        let serial = Exec::serial();
+        let full = BlockMask::full(shape.l / shape.block, shape.block);
+        let (dense_train, dense_infer, dense_mem) =
+            bench_model(PatternKind::Dense, &shape, &full, &serial, &q, &k, &v, &cot);
+        report.row(vec![
+            shape.name.to_string(),
+            "Original".to_string(),
+            "1".to_string(),
+            "1.000".to_string(),
+            format!("{:.2} ms", dense_train.median_ms),
+            "1.00x".to_string(),
+            human_bytes(dense_mem),
+            "1.00x".to_string(),
+            format!("{:.2} ms", dense_infer.median_ms),
+            "1.00x".to_string(),
+        ]);
+
+        // One mask per model, fixed across the workers axis — every row of
+        // the scaling curve measures the same workload (the randomized
+        // baselines would otherwise re-draw a different pattern per row).
+        let masks: Vec<(PatternKind, BlockMask)> = PatternKind::all()
+            .into_iter()
+            .filter(|&k| !matches!(k, PatternKind::Dense))
+            .map(|kind| (kind, pattern_for(kind, &shape, &scores, &mut rng)))
+            .collect();
+
+        for &workers in &workers_axis {
+            let exec = Exec::new(ExecConfig::with_workers(workers));
+            for (kind, mask) in &masks {
+                let kind = *kind;
+                let (train, infer, mem) =
+                    bench_model(kind, &shape, mask, &exec, &q, &k, &v, &cot);
+                report.row(vec![
+                    shape.name.to_string(),
+                    kind.name().to_string(),
+                    workers.to_string(),
+                    format!("{:.3}", mask.density()),
+                    format!("{:.2} ms", train.median_ms),
+                    format!("{:.2}x", dense_train.median_ms / train.median_ms),
+                    human_bytes(mem),
+                    format!("{:.2}x", dense_mem as f64 / mem as f64),
+                    format!("{:.2} ms", infer.median_ms),
+                    format!("{:.2}x", dense_infer.median_ms / infer.median_ms),
+                ]);
             }
-            report.row(vec![
-                shape.name.to_string(),
-                kind.name().to_string(),
-                format!("{:.3}", mask.density()),
-                format!("{:.2} ms", train.median_ms),
-                format!("{:.2}x", dense_train.unwrap() / train.median_ms),
-                human_bytes(mem),
-                format!("{:.2}x", dense_mem as f64 / mem as f64),
-                format!("{:.2} ms", infer.median_ms),
-                format!("{:.2}x", dense_infer.unwrap() / infer.median_ms),
-            ]);
         }
     }
     report.print();

@@ -1,32 +1,40 @@
 //! Fig. 6 regenerator: per-operation breakdown of the MHA forward —
 //! dense GEMM(QKᵀ) / dense softmax / GEMM(A·V) vs SPION's SDDMM /
 //! sparse softmax / SpMM on the block-CSR engine, at each task's shape and
-//! the pattern SPION-CF actually extracts.
+//! the pattern SPION-CF actually extracts — with a **workers axis**: every
+//! sparse kernel is re-measured at each `exec` worker count so the scaling
+//! curve of the parallel runtime is recorded alongside the dense/sparse
+//! comparison (the dense baseline is single-threaded, as in the paper's
+//! one-GPU-stream setting).
 //!
 //! Paper reference points (image task, RTX A5000): SDDMM 2.55×, softmax
 //! 42.4×, SpMM 2.54×. The CPU engine reproduces the *shape*: softmax gains
-//! dominate, GEMM-replacements gain ≈ the density reciprocal × overhead.
+//! dominate, GEMM-replacements gain ≈ the density reciprocal × overhead;
+//! the workers axis adds near-linear scaling on top for L large enough.
 //!
-//! Run: cargo bench --bench fig6_mha_breakdown   (SPION_BENCH_FAST=1 to smoke)
+//! Run: cargo bench --bench fig6_mha_breakdown [-- --workers 1,2,4]
+//!      (SPION_BENCH_FAST=1 to smoke, SPION_BENCH_WORKERS=1,8 to override)
 
 mod common;
 
-use common::{pattern_for, qkv, scores_for, task_shapes};
+use common::{pattern_for, qkv, scores_for, task_shapes, worker_counts};
 use spion::attention::dense::dense_attention_head;
+use spion::exec::{Exec, ExecConfig};
 use spion::sparse::bcsr::Bcsr;
-use spion::sparse::sddmm::sddmm;
-use spion::sparse::softmax::sparse_softmax;
-use spion::sparse::spmm::spmm;
+use spion::sparse::sddmm::sddmm_with;
+use spion::sparse::softmax::sparse_softmax_with;
+use spion::sparse::spmm::spmm_with;
 use spion::tensor::ops::softmax_rows;
 use spion::tensor::Mat;
 use spion::util::bench::{bench, Report};
 use spion::util::rng::Rng;
 
 fn main() {
+    let workers_axis = worker_counts();
     let mut rng = Rng::new(0xF16);
     let mut report = Report::new(
-        "Fig. 6 — MHA operation breakdown: dense vs SPION-CF sparse (median ms)",
-        &["task", "op", "dense", "sparse", "speedup"],
+        "Fig. 6 — MHA operation breakdown: dense vs SPION-CF sparse (median ms), by exec workers",
+        &["task", "op", "workers", "dense", "sparse", "speedup"],
     );
 
     for shape in task_shapes() {
@@ -35,25 +43,19 @@ fn main() {
         let (q, k, v) = qkv(&shape, &mut rng);
         let scale = 1.0 / (shape.dh as f32).sqrt();
         println!(
-            "[fig6] {} — pattern density {:.3} ({} blocks)",
+            "[fig6] {} — pattern density {:.3} ({} blocks), workers axis {:?}",
             shape.name,
             mask.density(),
-            mask.nnz_blocks()
+            mask.nnz_blocks(),
+            workers_axis
         );
 
-        // --- QKᵀ: GEMM vs SDDMM ---
+        // --- dense baselines (single-threaded reference) ---
         let gemm = bench("gemm_qk", || {
             let mut s = q.matmul_nt(&k);
             s.scale(scale);
             std::hint::black_box(&s);
         });
-        let mut s_sparse = Bcsr::from_mask(&mask);
-        let sddmm_t = bench("sddmm", || {
-            sddmm(&q, &k, &mut s_sparse, scale);
-            std::hint::black_box(&s_sparse);
-        });
-
-        // --- softmax: dense vs sparse (with implicit-zero correction) ---
         let mut logits = q.matmul_nt(&k);
         logits.scale(scale);
         let soft_d = bench("softmax_dense", || {
@@ -61,53 +63,66 @@ fn main() {
             softmax_rows(&mut s);
             std::hint::black_box(&s);
         });
-        sddmm(&q, &k, &mut s_sparse, scale);
-        let filled = s_sparse.clone();
-        let soft_s = bench("softmax_sparse", || {
-            let mut s = filled.clone();
-            sparse_softmax(&mut s, 1.0, true);
-            std::hint::black_box(&s);
-        });
-
-        // --- A·V: GEMM vs SpMM ---
         let mut probs = logits.clone();
         softmax_rows(&mut probs);
         let gemm_av = bench("gemm_av", || {
             let out = probs.matmul(&v);
             std::hint::black_box(&out);
         });
-        let mut s_prob = filled.clone();
-        sparse_softmax(&mut s_prob, 1.0, true);
-        let mut out_buf = Mat::zeros(shape.l, shape.dh);
-        let spmm_t = bench("spmm", || {
-            spmm(&s_prob, &v, &mut out_buf);
-            std::hint::black_box(&out_buf);
-        });
-
-        // --- end-to-end single-head MHA ---
         let mha_dense = bench("mha_dense", || {
             let (o, _) = dense_attention_head(&q, &k, &v, scale);
             std::hint::black_box(&o);
         });
-        let mut ws = spion::attention::SparseWorkspace::new(&mask, shape.dh);
-        let mha_sparse = bench("mha_sparse", || {
-            let o = spion::attention::sparse_attention_head(&q, &k, &v, scale, &mut ws);
-            std::hint::black_box(&o);
-        });
 
-        for (op, d, s) in [
-            ("QKt (GEMM->SDDMM)", &gemm, &sddmm_t),
-            ("softmax (dense->sparse)", &soft_d, &soft_s),
-            ("A*V (GEMM->SpMM)", &gemm_av, &spmm_t),
-            ("full MHA fwd", &mha_dense, &mha_sparse),
-        ] {
-            report.row(vec![
-                shape.name.to_string(),
-                op.to_string(),
-                format!("{:.3} ms", d.median_ms),
-                format!("{:.3} ms", s.median_ms),
-                format!("{:.2}x", d.median_ms / s.median_ms),
-            ]);
+        // --- sparse kernels at each worker count ---
+        for &workers in &workers_axis {
+            let exec = Exec::new(ExecConfig::with_workers(workers));
+
+            let mut s_sparse = Bcsr::from_mask(&mask);
+            let sddmm_t = bench("sddmm", || {
+                sddmm_with(&exec, &q, &k, &mut s_sparse, scale);
+                std::hint::black_box(&s_sparse);
+            });
+
+            sddmm_with(&exec, &q, &k, &mut s_sparse, scale);
+            let filled = s_sparse.clone();
+            let soft_s = bench("softmax_sparse", || {
+                let mut s = filled.clone();
+                sparse_softmax_with(&exec, &mut s, 1.0, true);
+                std::hint::black_box(&s);
+            });
+
+            let mut s_prob = filled.clone();
+            sparse_softmax_with(&exec, &mut s_prob, 1.0, true);
+            let mut out_buf = Mat::zeros(shape.l, shape.dh);
+            let spmm_t = bench("spmm", || {
+                spmm_with(&exec, &s_prob, &v, &mut out_buf);
+                std::hint::black_box(&out_buf);
+            });
+
+            let mut ws = spion::attention::SparseWorkspace::new(&mask, shape.dh);
+            let mha_sparse = bench("mha_sparse", || {
+                let o = spion::attention::sparse_attention_head_with(
+                    &exec, &q, &k, &v, scale, &mut ws,
+                );
+                std::hint::black_box(&o);
+            });
+
+            for (op, d, s) in [
+                ("QKt (GEMM->SDDMM)", &gemm, &sddmm_t),
+                ("softmax (dense->sparse)", &soft_d, &soft_s),
+                ("A*V (GEMM->SpMM)", &gemm_av, &spmm_t),
+                ("full MHA fwd", &mha_dense, &mha_sparse),
+            ] {
+                report.row(vec![
+                    shape.name.to_string(),
+                    op.to_string(),
+                    workers.to_string(),
+                    format!("{:.3} ms", d.median_ms),
+                    format!("{:.3} ms", s.median_ms),
+                    format!("{:.2}x", d.median_ms / s.median_ms),
+                ]);
+            }
         }
     }
     report.print();

@@ -53,6 +53,7 @@ fn main() {
                     model: model.clone(),
                     train,
                     sparsity: SparsityConfig::for_model(kind, task, &model),
+                    exec: Default::default(),
                     artifacts_dir: "artifacts".into(),
                 };
                 let trainer = Trainer::new(&rt, exp).expect("trainer");

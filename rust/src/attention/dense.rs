@@ -1,6 +1,7 @@
 //! Dense attention (the Original-Transformer baseline): the two GEMMs and
 //! dense softmax of Algorithm 1 lines 6–8.
 
+use crate::exec::Exec;
 use crate::tensor::ops::softmax_rows;
 use crate::tensor::Mat;
 
@@ -20,6 +21,18 @@ pub fn dense_attention_head(q: &Mat, k: &Mat, v: &Mat, scale: f32) -> (Mat, Mat)
 /// as used in §3 ("we averaged the attention score matrices across multiple
 /// heads in each encoder layer").
 pub fn dense_mha(q: &Mat, k: &Mat, v: &Mat, heads: usize) -> (Mat, Mat) {
+    dense_mha_with(Exec::serial_ref(), q, k, v, heads)
+}
+
+/// Dense MHA on an execution context: heads evaluate in parallel in waves
+/// of at most `workers` (bounding the live L×L score matrices to one wave
+/// — dense attention memory is a Fig. 5 metric, so the parallel path must
+/// not inflate it by the full head count); each wave's context slices and
+/// A^s contributions are then folded sequentially **in head order**, so the
+/// accumulated float sum is associated exactly as in the serial loop —
+/// bit-identical output at any worker count (the deterministic-reduction
+/// contract of DESIGN.md §exec).
+pub fn dense_mha_with(exec: &Exec, q: &Mat, k: &Mat, v: &Mat, heads: usize) -> (Mat, Mat) {
     let d = q.cols;
     assert!(d % heads == 0, "D={d} not divisible by H={heads}");
     let dh = d / heads;
@@ -27,12 +40,35 @@ pub fn dense_mha(q: &Mat, k: &Mat, v: &Mat, heads: usize) -> (Mat, Mat) {
     let l = q.rows;
     let mut out = Mat::zeros(l, d);
     let mut avg_scores = Mat::zeros(l, l);
-    for h in 0..heads {
-        let (c0, c1) = (h * dh, (h + 1) * dh);
-        let (ctx, scores) =
-            dense_attention_head(&q.col_slice(c0, c1), &k.col_slice(c0, c1), &v.col_slice(c0, c1), scale);
-        out.set_col_slice(c0, &ctx);
-        avg_scores.add_assign(&scores);
+    if exec.workers() > 1 && heads > 1 {
+        let wave = exec.workers();
+        let mut h0 = 0;
+        while h0 < heads {
+            let h1 = (h0 + wave).min(heads);
+            let per_head = exec.par_map(h1 - h0, |i| {
+                let h = h0 + i;
+                let (c0, c1) = (h * dh, (h + 1) * dh);
+                dense_attention_head(
+                    &q.col_slice(c0, c1),
+                    &k.col_slice(c0, c1),
+                    &v.col_slice(c0, c1),
+                    scale,
+                )
+            });
+            for (i, (ctx, scores)) in per_head.into_iter().enumerate() {
+                out.set_col_slice((h0 + i) * dh, &ctx);
+                avg_scores.add_assign(&scores);
+            }
+            h0 = h1;
+        }
+    } else {
+        for h in 0..heads {
+            let (c0, c1) = (h * dh, (h + 1) * dh);
+            let (ctx, scores) =
+                dense_attention_head(&q.col_slice(c0, c1), &k.col_slice(c0, c1), &v.col_slice(c0, c1), scale);
+            out.set_col_slice(c0, &ctx);
+            avg_scores.add_assign(&scores);
+        }
     }
     avg_scores.scale(1.0 / heads as f32);
     (out, avg_scores)

@@ -3,11 +3,12 @@
 //! buffers once per (pattern, head) so the per-step hot path is
 //! allocation-free (the CPU analogue of the paper reusing device buffers).
 
+use crate::exec::Exec;
 use crate::pattern::BlockMask;
 use crate::sparse::bcsr::Bcsr;
-use crate::sparse::sddmm::sddmm;
-use crate::sparse::softmax::sparse_softmax;
-use crate::sparse::spmm::spmm;
+use crate::sparse::sddmm::sddmm_with;
+use crate::sparse::softmax::sparse_softmax_with;
+use crate::sparse::spmm::spmm_with;
 use crate::tensor::Mat;
 
 /// Reusable buffers for one layer's sparse MHA.
@@ -39,9 +40,23 @@ pub fn sparse_attention_head<'w>(
     scale: f32,
     ws: &'w mut SparseWorkspace,
 ) -> &'w Mat {
-    sddmm(q, k, &mut ws.s, scale);
-    sparse_softmax(&mut ws.s, 1.0, ws.zero_correction);
-    spmm(&ws.s, v, &mut ws.ctx);
+    sparse_attention_head_with(Exec::serial_ref(), q, k, v, scale, ws)
+}
+
+/// One head on an execution context: all three kernels run block-row
+/// parallel (Algorithm 5 lines 5–7). Bit-identical to the serial head at
+/// any worker count.
+pub fn sparse_attention_head_with<'w>(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    ws: &'w mut SparseWorkspace,
+) -> &'w Mat {
+    sddmm_with(exec, q, k, &mut ws.s, scale);
+    sparse_softmax_with(exec, &mut ws.s, 1.0, ws.zero_correction);
+    spmm_with(exec, &ws.s, v, &mut ws.ctx);
     &ws.ctx
 }
 
@@ -55,6 +70,23 @@ pub fn sparse_mha(
     heads: usize,
     workspaces: &mut [SparseWorkspace],
 ) -> Mat {
+    sparse_mha_with(Exec::serial_ref(), q, k, v, heads, workspaces)
+}
+
+/// Full sparse MHA on an execution context. When the head count can feed
+/// the pool, heads run in parallel (each with a serial inner engine —
+/// workspaces are already per-head); otherwise heads run in sequence with
+/// block-row-parallel kernels. Both schedules write disjoint column slices
+/// and run the exact serial per-element code, so the output is
+/// bit-identical either way.
+pub fn sparse_mha_with(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    heads: usize,
+    workspaces: &mut [SparseWorkspace],
+) -> Mat {
     let d = q.cols;
     assert!(d % heads == 0);
     assert_eq!(workspaces.len(), heads);
@@ -62,16 +94,35 @@ pub fn sparse_mha(
     let scale = 1.0 / (dh as f32).sqrt();
     let l = q.rows;
     let mut out = Mat::zeros(l, d);
-    for h in 0..heads {
-        let (c0, c1) = (h * dh, (h + 1) * dh);
-        let ctx = sparse_attention_head(
-            &q.col_slice(c0, c1),
-            &k.col_slice(c0, c1),
-            &v.col_slice(c0, c1),
-            scale,
-            &mut workspaces[h],
-        );
-        out.set_col_slice(c0, ctx);
+    if exec.workers() > 1 && heads >= exec.workers() {
+        // Head-level parallelism: one task per head, serial kernels inside.
+        let slices: Vec<(Mat, Mat, Mat)> = (0..heads)
+            .map(|h| {
+                let (c0, c1) = (h * dh, (h + 1) * dh);
+                (q.col_slice(c0, c1), k.col_slice(c0, c1), v.col_slice(c0, c1))
+            })
+            .collect();
+        let inner = exec.serial_view();
+        exec.par_for_each_mut(workspaces, |h, ws| {
+            let (qh, kh, vh) = &slices[h];
+            sparse_attention_head_with(&inner, qh, kh, vh, scale, ws);
+        });
+        for (h, ws) in workspaces.iter().enumerate() {
+            out.set_col_slice(h * dh, &ws.ctx);
+        }
+    } else {
+        for (h, ws) in workspaces.iter_mut().enumerate() {
+            let (c0, c1) = (h * dh, (h + 1) * dh);
+            let ctx = sparse_attention_head_with(
+                exec,
+                &q.col_slice(c0, c1),
+                &k.col_slice(c0, c1),
+                &v.col_slice(c0, c1),
+                scale,
+                ws,
+            );
+            out.set_col_slice(c0, ctx);
+        }
     }
     out
 }
@@ -111,12 +162,27 @@ pub fn sparse_attention_train(
     d_out: &Mat,
     ws: &mut TrainWorkspace,
 ) {
+    sparse_attention_train_with(Exec::serial_ref(), q, k, v, scale, d_out, ws);
+}
+
+/// Training pass on an execution context: forward and backward kernels all
+/// run block-row/-column parallel. Bit-identical to the serial pass at any
+/// worker count.
+pub fn sparse_attention_train_with(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    d_out: &Mat,
+    ws: &mut TrainWorkspace,
+) {
     let TrainWorkspace { fwd, grad_buf, dq, dk, dv } = ws;
-    crate::sparse::sddmm::sddmm(q, k, &mut fwd.s, scale);
-    crate::sparse::softmax::sparse_softmax(&mut fwd.s, 1.0, fwd.zero_correction);
-    crate::sparse::spmm::spmm(&fwd.s, v, &mut fwd.ctx);
-    crate::sparse::backward::sparse_attention_backward(
-        q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
+    sddmm_with(exec, q, k, &mut fwd.s, scale);
+    sparse_softmax_with(exec, &mut fwd.s, 1.0, fwd.zero_correction);
+    spmm_with(exec, &fwd.s, v, &mut fwd.ctx);
+    crate::sparse::backward::sparse_attention_backward_with(
+        exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
     );
 }
 

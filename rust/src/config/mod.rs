@@ -4,4 +4,6 @@
 pub mod toml;
 pub mod types;
 
-pub use types::{ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind, TrainConfig};
+pub use types::{
+    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind, TrainConfig,
+};

@@ -9,6 +9,8 @@ use super::toml::{parse, TomlDoc};
 use crate::pattern::spion::PatternConfig;
 use crate::pattern::SpionVariant;
 
+pub use crate::exec::ExecConfig;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
     /// Pixel-sequence image classification (CIFAR-10 stand-in).
@@ -178,6 +180,10 @@ pub struct ExperimentConfig {
     pub model: ModelConfig,
     pub train: TrainConfig,
     pub sparsity: SparsityConfig,
+    /// Parallel-execution runtime knobs (`[exec]` in TOML, `--workers` on
+    /// the CLI). Default is serial — bit-identical to the historical
+    /// engine.
+    pub exec: ExecConfig,
     pub artifacts_dir: String,
 }
 
@@ -319,12 +325,31 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         }
     }
 
+    let mut exec = ExecConfig::default();
+    if let Some(e) = doc.get("exec") {
+        if let Some(v) = e.get("workers").and_then(|v| v.as_int()) {
+            if v < 0 {
+                return Err(format!("exec.workers must be ≥ 0, got {v}"));
+            }
+            exec.workers = v as usize;
+        }
+        if let Some(v) = e.get("chunk_blocks").and_then(|v| v.as_int()) {
+            if v < 0 {
+                return Err(format!("exec.chunk_blocks must be ≥ 0, got {v}"));
+            }
+            exec.chunk_blocks = v as usize;
+        }
+        if let Some(v) = e.get("deterministic").and_then(|v| v.as_bool()) {
+            exec.deterministic = v;
+        }
+    }
+
     let artifacts_dir = root
         .get("artifacts_dir")
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    Ok(ExperimentConfig { task, model, train, sparsity, artifacts_dir })
+    Ok(ExperimentConfig { task, model, train, sparsity, exec, artifacts_dir })
 }
 
 #[cfg(test)]
@@ -391,6 +416,25 @@ block = 16
         assert_eq!(cfg.sparsity.kind, PatternKind::BigBird);
         assert_eq!(cfg.sparsity.pattern.block, 16);
         assert_eq!(cfg.artifact_path("init"), "artifacts/tiny/init.hlo.txt");
+        assert_eq!(cfg.exec, ExecConfig::default(), "no [exec] section → serial default");
+    }
+
+    #[test]
+    fn exec_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[exec]
+workers = 4
+chunk_blocks = 2
+deterministic = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.workers, 4);
+        assert_eq!(cfg.exec.chunk_blocks, 2);
+        assert!(!cfg.exec.deterministic);
+        assert!(experiment_from_toml("preset = \"tiny\"\n[exec]\nworkers = -1").is_err());
     }
 
     #[test]

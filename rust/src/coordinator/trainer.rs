@@ -16,12 +16,13 @@
 //! changes nothing about what Fig. 5/Table 2 measure (steady-state sparse
 //! throughput and final quality).
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentConfig, PatternKind};
 use crate::data::{batcher::Batcher, make_task};
+use crate::exec::Exec;
 use crate::metrics::{Phase, StepRecord, TrainMetrics};
-use crate::pattern::{bigbird, generate_pattern, lsh, BlockMask};
+use crate::pattern::{bigbird, lsh, BlockMask};
 use crate::runtime::executor::lit;
 use crate::runtime::{ArtifactSet, Runtime};
 use crate::tensor::Mat;
@@ -36,6 +37,9 @@ pub struct Trainer<'r> {
     pub exp: ExperimentConfig,
     pub artifacts: ArtifactSet,
     verbose: bool,
+    /// Execution context for the rust-side stages (pattern generation runs
+    /// layer-parallel on it; the XLA step itself is scheduled by PJRT).
+    exec: Exec,
 }
 
 #[derive(Debug)]
@@ -59,7 +63,8 @@ impl<'r> Trainer<'r> {
             );
             exp.sparsity.pattern.block = baked;
         }
-        Ok(Self { rt, exp, artifacts, verbose: false })
+        let exec = Exec::new(exp.exec);
+        Ok(Self { rt, exp, artifacts, verbose: false, exec })
     }
 
     pub fn verbose(mut self, v: bool) -> Self {
@@ -250,8 +255,11 @@ impl<'r> Trainer<'r> {
     }
 
     /// Per-layer pattern dispatch (pure; unit-tested without a runtime).
+    /// Layers generate concurrently on the trainer's execution context —
+    /// the three-phase loop overlaps pattern construction across layers at
+    /// the transition step.
     pub fn generate_masks(&self, scores: &[Mat]) -> Result<Vec<BlockMask>> {
-        generate_masks_for(&self.exp, scores)
+        generate_masks_for_with(&self.exec, &self.exp, scores)
     }
 
     pub fn save_checkpoint(&self, outcome: &TrainOutcome, path: &str) -> Result<()> {
@@ -264,27 +272,54 @@ impl<'r> Trainer<'r> {
     }
 }
 
-/// Pattern dispatch shared by the trainer and the benches.
+/// Pattern dispatch shared by the trainer and the benches (serial context).
 pub fn generate_masks_for(exp: &ExperimentConfig, scores: &[Mat]) -> Result<Vec<BlockMask>> {
+    generate_masks_for_with(Exec::serial_ref(), exp, scores)
+}
+
+/// Pattern dispatch on an execution context. The SPION variants (and the
+/// dense baseline) are pure functions of each layer's A^s, so layers
+/// generate in parallel with identical masks at any worker count. The
+/// RNG-threaded baselines (BigBird, Reformer/LSH) keep the historical
+/// sequential stream so their masks stay bit-identical to the serial
+/// engine regardless of `workers`.
+pub fn generate_masks_for_with(
+    exec: &Exec,
+    exp: &ExperimentConfig,
+    scores: &[Mat],
+) -> Result<Vec<BlockMask>> {
     let block = exp.sparsity.pattern.block;
-    let mut rng = Rng::new(exp.train.seed ^ 0xBA5E);
-    scores
-        .iter()
-        .map(|a_s| {
-            let lb = a_s.rows / block;
-            Ok(match exp.sparsity.kind {
-                PatternKind::Dense => BlockMask::full(lb, block),
-                PatternKind::BigBird => bigbird::bigbird(lb, block, &exp.sparsity.bigbird, &mut rng),
-                PatternKind::Reformer => {
-                    // LSH over the layer's attention row profiles: rows with
-                    // similar attention distributions share buckets
-                    // (content-based clustering at block granularity).
-                    lsh::lsh_pattern(a_s, block, &exp.sparsity.lsh, &mut rng)
-                }
-                PatternKind::Spion(_) => generate_pattern(a_s, &exp.sparsity.pattern),
-            })
-        })
-        .collect()
+    match exp.sparsity.kind {
+        PatternKind::Spion(_) => Ok(crate::pattern::spion::generate_layerwise_with(
+            exec,
+            scores,
+            &exp.sparsity.pattern,
+        )),
+        PatternKind::Dense => {
+            Ok(scores.iter().map(|a_s| BlockMask::full(a_s.rows / block, block)).collect())
+        }
+        PatternKind::BigBird | PatternKind::Reformer => {
+            let mut rng = Rng::new(exp.train.seed ^ 0xBA5E);
+            Ok(scores
+                .iter()
+                .map(|a_s| {
+                    let lb = a_s.rows / block;
+                    match exp.sparsity.kind {
+                        PatternKind::BigBird => {
+                            bigbird::bigbird(lb, block, &exp.sparsity.bigbird, &mut rng)
+                        }
+                        _ => {
+                            // LSH over the layer's attention row profiles:
+                            // rows with similar attention distributions share
+                            // buckets (content-based clustering at block
+                            // granularity).
+                            lsh::lsh_pattern(a_s, block, &exp.sparsity.lsh, &mut rng)
+                        }
+                    }
+                })
+                .collect())
+        }
+    }
 }
 
 fn zeros_like_params(m: &crate::runtime::Manifest) -> Result<Vec<xla::Literal>> {
@@ -292,7 +327,7 @@ fn zeros_like_params(m: &crate::runtime::Manifest) -> Result<Vec<xla::Literal>> 
         .iter()
         .map(|p| {
             let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-            lit::f32_vec(&vec![0.0; p.elements()], &dims).context("zero literal")
+            lit::f32_vec(&vec![0.0; p.elements()], &dims).map_err(|e| e.context("zero literal"))
         })
         .collect()
 }
@@ -349,6 +384,7 @@ mod tests {
             model,
             train: TrainConfig::default(),
             sparsity: SparsityConfig::new(kind, 16, 0.9),
+            exec: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -389,6 +425,21 @@ mod tests {
             if matches!(kind, PatternKind::Dense) {
                 assert!(masks.iter().all(|m| m.density() == 1.0));
             }
+        }
+    }
+
+    #[test]
+    fn parallel_mask_generation_matches_serial() {
+        // Every pattern kind must produce identical masks on a parallel
+        // context — SPION kinds via purity, the RNG baselines via the
+        // preserved sequential stream.
+        let scores = synth_layer_scores(3, 128);
+        let exec = crate::exec::Exec::new(crate::exec::ExecConfig::with_workers(4));
+        for kind in PatternKind::all() {
+            let exp = mk_exp(kind);
+            let serial = generate_masks_for(&exp, &scores).unwrap();
+            let parallel = generate_masks_for_with(&exec, &exp, &scores).unwrap();
+            assert_eq!(serial, parallel, "{}", kind.name());
         }
     }
 

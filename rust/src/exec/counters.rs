@@ -1,0 +1,97 @@
+//! Per-worker operation tallies, aggregated into the paper's op accounting
+//! ([`crate::sparse::ops::OpCounter`]).
+//!
+//! Kernels record counts once per chunk / block row (never per scalar), so
+//! the atomics here are off the hot path; slots are cache-line padded so
+//! workers never contend on a line. The slot is picked from the pool-worker
+//! id of the current thread; all non-pool threads share the last slot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sparse::ops::OpCounter;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct Slot {
+    mul_add: AtomicU64,
+    exp: AtomicU64,
+    cmp: AtomicU64,
+}
+
+/// Aggregating tally: one padded slot per worker plus one shared slot for
+/// external (non-pool) threads.
+pub struct OpTally {
+    slots: Box<[Slot]>,
+}
+
+impl OpTally {
+    pub fn new(workers: usize) -> Self {
+        let slots = (0..workers.max(1) + 1).map(|_| Slot::default()).collect();
+        Self { slots }
+    }
+
+    fn slot(&self) -> &Slot {
+        let id = super::pool::current_worker().unwrap_or(usize::MAX);
+        &self.slots[id.min(self.slots.len() - 1)]
+    }
+
+    pub fn add_mul_add(&self, n: u64) {
+        self.slot().mul_add.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_exp(&self, n: u64) {
+        self.slot().exp.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_cmp(&self, n: u64) {
+        self.slot().cmp.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Sum every worker slot into the engine-level counter struct.
+    pub fn snapshot(&self) -> OpCounter {
+        let mut c = OpCounter::default();
+        for s in self.slots.iter() {
+            c.mul_add += s.mul_add.load(Ordering::Relaxed);
+            c.exp += s.exp.load(Ordering::Relaxed);
+            c.cmp += s.cmp.load(Ordering::Relaxed);
+        }
+        c
+    }
+
+    pub fn reset(&self) {
+        for s in self.slots.iter() {
+            s.mul_add.store(0, Ordering::Relaxed);
+            s.exp.store(0, Ordering::Relaxed);
+            s.cmp.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_across_threads() {
+        let tally = std::sync::Arc::new(OpTally::new(4));
+        let pool = super::super::pool::ThreadPool::new(4);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                let tally = tally.clone();
+                s.spawn(move |_| {
+                    tally.add_mul_add(10);
+                    tally.add_exp(2);
+                    tally.add_cmp(1);
+                });
+            }
+        });
+        tally.add_mul_add(5); // external-thread slot
+        let c = tally.snapshot();
+        assert_eq!(c.mul_add, 165);
+        assert_eq!(c.exp, 32);
+        assert_eq!(c.cmp, 16);
+        assert_eq!(c.flops(), 2 * 165 + 32 + 16);
+        tally.reset();
+        assert_eq!(tally.snapshot().flops(), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! `exec` — the shared parallel execution runtime.
+//!
+//! A dependency-free, work-stealing scoped thread pool ([`pool`], [`scope`])
+//! with a chunked `par_for`/`par_map` layer ([`par`], [`partition`]) and
+//! per-worker op tallies ([`counters`]) that aggregate into the paper's
+//! operation accounting (`sparse::ops`). Every hot path in the crate — the
+//! block-CSR kernels (SDDMM / sparse softmax / SpMM / backward), per-head
+//! MHA, pattern generation, and the serving workers — runs through an
+//! [`Exec`] handle.
+//!
+//! ## Determinism contract (see DESIGN.md §exec)
+//!
+//! With `workers = 1` every code path degrades to the exact serial loops of
+//! the original engine — bit-identical outputs. With `workers > 1`:
+//! * parallel loops have disjoint writes and serial per-element order, so
+//!   kernel outputs stay bit-identical at any worker count;
+//! * reductions combine chunk partials in chunk order; in `deterministic`
+//!   mode chunk boundaries are worker-independent, so even float reductions
+//!   are bit-identical from 1 to N workers.
+
+pub mod counters;
+pub mod par;
+pub mod partition;
+pub mod pool;
+pub mod scope;
+
+use std::sync::{Arc, OnceLock};
+
+pub use counters::OpTally;
+pub use pool::ThreadPool;
+pub use scope::Scope;
+
+/// Execution-runtime configuration, loadable from `[exec]` in a config TOML
+/// and from `--workers` on the CLI (see `config::types` / `main.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker threads. `0` = one per available core; `1` = serial (the
+    /// default — bit-identical to the historical engine).
+    pub workers: usize,
+    /// Block rows per scheduling chunk. `0` = auto (see [`partition`]).
+    pub chunk_blocks: usize,
+    /// Worker-count-independent reduction order (bit-identical results from
+    /// 1 to N workers). Costs nothing on the disjoint-write kernel paths.
+    pub deterministic: bool,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        Self { workers: 1, chunk_blocks: 0, deterministic: true }
+    }
+}
+
+impl ExecConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Default::default() }
+    }
+
+    /// `workers` with `0` resolved to the machine's core count.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Cheap, cloneable handle to an execution context: an optional pool plus
+/// the config and the op tally. `workers == 1` carries no pool and runs
+/// everything inline (zero scheduling overhead, exact serial semantics).
+#[derive(Clone)]
+pub struct Exec {
+    pool: Option<Arc<ThreadPool>>,
+    cfg: ExecConfig,
+    tally: Arc<OpTally>,
+}
+
+impl Exec {
+    pub fn new(cfg: ExecConfig) -> Self {
+        let workers = cfg.resolved_workers();
+        let pool = if workers > 1 { Some(Arc::new(ThreadPool::new(workers))) } else { None };
+        Self { pool, cfg, tally: Arc::new(OpTally::new(workers)) }
+    }
+
+    /// A fresh serial context.
+    pub fn serial() -> Self {
+        Self::new(ExecConfig::default())
+    }
+
+    /// The process-wide serial context — what the legacy (`exec`-less)
+    /// kernel entry points run on.
+    pub fn serial_ref() -> &'static Exec {
+        static SERIAL: OnceLock<Exec> = OnceLock::new();
+        SERIAL.get_or_init(Exec::serial)
+    }
+
+    /// The process-wide default context. Starts serial; `init_global`
+    /// upgrades it once (e.g. from `--workers`).
+    pub fn global() -> &'static Exec {
+        global_cell().get_or_init(Exec::serial)
+    }
+
+    /// Install the global context. Returns `false` if it was already
+    /// initialized (first caller wins — call before any `global()` use).
+    pub fn init_global(cfg: ExecConfig) -> bool {
+        global_cell().set(Exec::new(cfg)).is_ok()
+    }
+
+    /// A serial context sharing this context's op tally — used for the
+    /// inner loops of a region already parallelized at an outer level
+    /// (per-head, per-layer), so op counts still aggregate in one place.
+    pub fn serial_view(&self) -> Exec {
+        Exec {
+            pool: None,
+            cfg: ExecConfig { workers: 1, ..self.cfg },
+            tally: self.tally.clone(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    pub fn deterministic(&self) -> bool {
+        self.cfg.deterministic
+    }
+
+    pub fn config(&self) -> ExecConfig {
+        self.cfg
+    }
+
+    pub(crate) fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_deref()
+    }
+
+    /// Aggregated op counts recorded through this context (and every
+    /// `serial_view` of it) since the last [`Exec::reset_ops`].
+    pub fn op_counter(&self) -> crate::sparse::ops::OpCounter {
+        self.tally.snapshot()
+    }
+
+    pub fn reset_ops(&self) {
+        self.tally.reset();
+    }
+
+    pub(crate) fn tally(&self) -> &OpTally {
+        &self.tally
+    }
+}
+
+impl std::fmt::Debug for Exec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Exec")
+            .field("workers", &self.workers())
+            .field("chunk_blocks", &self.cfg.chunk_blocks)
+            .field("deterministic", &self.cfg.deterministic)
+            .finish()
+    }
+}
+
+fn global_cell() -> &'static OnceLock<Exec> {
+    static GLOBAL: OnceLock<Exec> = OnceLock::new();
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_resolution() {
+        assert_eq!(ExecConfig::default().workers, 1);
+        assert!(ExecConfig::with_workers(0).resolved_workers() >= 1);
+        assert_eq!(ExecConfig::with_workers(3).resolved_workers(), 3);
+    }
+
+    #[test]
+    fn serial_exec_has_no_pool() {
+        let e = Exec::serial();
+        assert_eq!(e.workers(), 1);
+        assert!(e.pool().is_none());
+        let v = Exec::new(ExecConfig::with_workers(2));
+        assert_eq!(v.workers(), 2);
+        assert_eq!(v.serial_view().workers(), 1, "serial view drops the pool");
+    }
+
+    #[test]
+    fn serial_view_shares_tally() {
+        let e = Exec::new(ExecConfig::with_workers(2));
+        e.serial_view().tally().add_mul_add(7);
+        assert_eq!(e.op_counter().mul_add, 7);
+        e.reset_ops();
+        assert_eq!(e.op_counter().mul_add, 0);
+    }
+}

@@ -1,0 +1,275 @@
+//! High-level parallel iteration on top of the pool: `par_for` /
+//! `par_map` / `par_for_each_mut` / `par_reduce` over index ranges.
+//!
+//! Scheduling model: a chunked range is claimed dynamically through one
+//! shared atomic cursor — chunk-level work stealing. Up to `workers` driver
+//! jobs loop claiming chunks; the calling thread helps drain the pool while
+//! it waits inside the scope, so a `par_for` issued from a pool worker
+//! (nested parallelism) cannot deadlock.
+//!
+//! ## Determinism contract
+//!
+//! * `par_for`-family loops require **disjoint writes** per index; each
+//!   index runs the exact serial code, so outputs are bit-identical to the
+//!   serial engine at every worker count, in every mode.
+//! * `par_reduce` combines one partial per chunk **in chunk order**. With
+//!   `ExecConfig::deterministic` the chunk size is worker-independent
+//!   ([`super::partition::reduce_chunk_size`]), making floating-point
+//!   reductions bit-identical from 1 to N workers; without it, chunk sizes
+//!   scale with the pool and float results may differ at rounding level.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::partition;
+use super::Exec;
+
+/// Raw-pointer smuggler for disjoint-index writes from parallel closures.
+/// Safety is the *caller's* obligation: no two concurrent uses may touch
+/// the same index.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+// SAFETY: SendPtr is only handed to closures whose index sets are disjoint
+// (each output element written by exactly one task); the pointee outlives
+// the scope that runs them.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl Exec {
+    /// Run `f` over every chunk of `0..n`. Chunks are claimed dynamically;
+    /// `f` must only write state owned by its chunk.
+    pub fn par_for_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = partition::for_chunk_size(n, self.workers(), self.config().chunk_blocks);
+        let ranges = partition::chunks(n, chunk);
+        self.drive(&ranges, &f);
+    }
+
+    /// Run `f(i)` for every `i in 0..n` (chunked under the hood). `f` must
+    /// only write state owned by index `i`.
+    pub fn par_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.par_for_chunks(n, |r| {
+            for i in r {
+                f(i);
+            }
+        });
+    }
+
+    /// Map `0..n` through `f` into a `Vec` in index order.
+    pub fn par_map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.par_for(n, |i| {
+            // SAFETY: each index written exactly once; slot i owned by task i.
+            unsafe { *ptr.0.add(i) = Some(f(i)) };
+        });
+        out.into_iter().map(|s| s.expect("par_map slot unfilled")).collect()
+    }
+
+    /// Call `f(i, &mut items[i])` in parallel — the `iter_mut` analogue.
+    pub fn par_for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let ptr = SendPtr(items.as_mut_ptr());
+        self.par_for(items.len(), |i| {
+            // SAFETY: distinct indices yield disjoint &mut borrows.
+            let item = unsafe { &mut *ptr.0.add(i) };
+            f(i, item);
+        });
+    }
+
+    /// Chunked reduction with deterministic (chunk-ordered) combining:
+    /// `partials[k] = chunk_fn(chunk_k)`, folded left-to-right with
+    /// `combine` starting from `init`. See the module docs for the
+    /// determinism contract.
+    pub fn par_reduce<R, F, G>(&self, n: usize, init: R, chunk_fn: F, combine: G) -> R
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+        G: Fn(R, R) -> R,
+    {
+        if n == 0 {
+            return init;
+        }
+        let chunk = partition::reduce_chunk_size(
+            n,
+            self.workers(),
+            self.config().chunk_blocks,
+            self.deterministic(),
+        );
+        let ranges = partition::chunks(n, chunk);
+        let mut partials: Vec<Option<R>> = Vec::with_capacity(ranges.len());
+        partials.resize_with(ranges.len(), || None);
+        {
+            let ptr = SendPtr(partials.as_mut_ptr());
+            let ranges_ref = &ranges;
+            self.drive(&index_ranges(ranges.len()), &|r: Range<usize>| {
+                for k in r {
+                    // SAFETY: one writer per partial slot.
+                    unsafe { *ptr.0.add(k) = Some(chunk_fn(ranges_ref[k].clone())) };
+                }
+            });
+        }
+        partials
+            .into_iter()
+            .map(|p| p.expect("par_reduce slot unfilled"))
+            .fold(init, combine)
+    }
+
+    /// Core driver: execute `f` over each range, spreading ranges across
+    /// the pool via an atomic chunk cursor. Serial (`workers == 1`) execs
+    /// run inline in range order.
+    fn drive<F>(&self, ranges: &[Range<usize>], f: &F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let pool = match self.pool() {
+            Some(pool) if ranges.len() > 1 => pool,
+            _ => {
+                for r in ranges {
+                    f(r.clone());
+                }
+                return;
+            }
+        };
+        let cursor = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let drivers = pool.workers().min(ranges.len());
+            for _ in 0..drivers {
+                let cursor = &cursor;
+                s.spawn(move |_wid| loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= ranges.len() {
+                        break;
+                    }
+                    f(ranges[k].clone());
+                });
+            }
+        });
+    }
+}
+
+/// `[0..1, 1..2, ..]` — unit ranges for driving per-chunk-index loops.
+fn index_ranges(n: usize) -> Vec<Range<usize>> {
+    (0..n).map(|k| k..k + 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecConfig;
+    use std::sync::atomic::AtomicU64;
+
+    fn execs() -> Vec<Exec> {
+        vec![
+            Exec::serial(),
+            Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true }),
+            Exec::new(ExecConfig { workers: 4, chunk_blocks: 3, deterministic: true }),
+        ]
+    }
+
+    #[test]
+    fn par_for_covers_every_index_once() {
+        for exec in execs() {
+            for n in [0usize, 1, 7, 100, 1000] {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                exec.par_for(n, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "workers={} n={n}",
+                    exec.workers()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        for exec in execs() {
+            let out = exec.par_map(257, |i| i * i);
+            assert_eq!(out.len(), 257);
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_every_item() {
+        for exec in execs() {
+            let mut items = vec![0u64; 513];
+            exec.par_for_each_mut(&mut items, |i, v| {
+                *v = i as u64 + 1;
+            });
+            assert!(items.iter().enumerate().all(|(i, &v)| v == i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn par_reduce_deterministic_is_worker_independent() {
+        // A float sum whose result depends on association order: identical
+        // chunking ⇒ identical bits across worker counts.
+        let data: Vec<f32> = (0..1000).map(|i| ((i * 2654435761u64 as usize) % 97) as f32 * 0.1).collect();
+        let run = |exec: &Exec| {
+            exec.par_reduce(
+                data.len(),
+                0.0f32,
+                |r| r.map(|i| data[i]).sum::<f32>(),
+                |a, b| a + b,
+            )
+        };
+        let serial = run(&Exec::serial());
+        for workers in [2usize, 4] {
+            let exec = Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic: true });
+            let got = run(&exec);
+            assert_eq!(got.to_bits(), serial.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_for_propagates_panics() {
+        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true });
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.par_for(64, |i| {
+                if i == 33 {
+                    panic!("index boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // Pool still usable afterwards.
+        let sum = AtomicU64::new(0);
+        exec.par_for(10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_par_for_completes() {
+        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true });
+        let total = AtomicU64::new(0);
+        exec.par_for(8, |_| {
+            exec.par_for(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+}

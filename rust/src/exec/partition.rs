@@ -1,0 +1,102 @@
+//! Range partitioning: how a block-row range is cut into scheduling chunks.
+//!
+//! Two regimes:
+//! * [`for_chunk_size`] — load-balance oriented (≈4 chunks per worker).
+//!   Used by `par_for`-style loops, whose kernels write disjoint outputs
+//!   with serial per-element order, so chunk boundaries never change bits.
+//! * [`reduce_chunk_size`] — determinism oriented. Reductions combine one
+//!   partial per chunk, so in deterministic mode the chunk size must not
+//!   depend on the worker count; a config override (`chunk_blocks`) or a
+//!   fixed default keeps the combine tree identical from 1 to N workers.
+
+use std::ops::Range;
+
+/// Fixed chunk granularity for deterministic reductions when the config
+/// does not pin `chunk_blocks`.
+pub const DEFAULT_DETERMINISTIC_CHUNK: usize = 8;
+
+/// Chunk size for parallel-for loops over `n` items.
+pub fn for_chunk_size(n: usize, workers: usize, override_chunk: usize) -> usize {
+    if override_chunk > 0 {
+        return override_chunk.min(n.max(1));
+    }
+    // ~4 chunks per worker: enough slack for stealing to balance uneven
+    // block rows without drowning in queue traffic.
+    n.div_ceil(workers.max(1) * 4).max(1)
+}
+
+/// Chunk size for reductions. In deterministic mode the result is
+/// independent of `workers`.
+pub fn reduce_chunk_size(
+    n: usize,
+    workers: usize,
+    override_chunk: usize,
+    deterministic: bool,
+) -> usize {
+    if override_chunk > 0 {
+        return override_chunk.min(n.max(1));
+    }
+    if deterministic {
+        DEFAULT_DETERMINISTIC_CHUNK.min(n.max(1))
+    } else {
+        for_chunk_size(n, workers, 0)
+    }
+}
+
+/// Split `0..n` into consecutive chunks of `chunk` items (last may be
+/// short).
+pub fn chunks(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    assert!(chunk > 0, "chunk size must be positive");
+    let mut out = Vec::with_capacity(n.div_ceil(chunk));
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 7, 8, 9, 64, 1000] {
+            for c in [1usize, 3, 8, 1000] {
+                let parts = chunks(n, c);
+                let mut expect = 0;
+                for r in &parts {
+                    assert_eq!(r.start, expect, "n={n} c={c}");
+                    assert!(r.end > r.start && r.end - r.start <= c);
+                    expect = r.end;
+                }
+                assert_eq!(expect, n, "n={n} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_chunks_scale_with_workers() {
+        let c1 = for_chunk_size(1024, 1, 0);
+        let c8 = for_chunk_size(1024, 8, 0);
+        assert!(c8 < c1);
+        assert_eq!(for_chunk_size(1024, 4, 17), 17, "override wins");
+        assert_eq!(for_chunk_size(0, 4, 0), 1, "degenerate n");
+    }
+
+    #[test]
+    fn reduce_chunks_worker_independent_when_deterministic() {
+        for n in [1usize, 5, 64, 999] {
+            let c1 = reduce_chunk_size(n, 1, 0, true);
+            let c8 = reduce_chunk_size(n, 8, 0, true);
+            assert_eq!(c1, c8, "n={n}");
+        }
+        assert_ne!(
+            reduce_chunk_size(1024, 1, 0, false),
+            reduce_chunk_size(1024, 8, 0, false),
+            "non-deterministic mode scales with workers"
+        );
+    }
+}

@@ -1,0 +1,259 @@
+//! Work-stealing thread pool: per-worker job deques, idle workers steal
+//! from the back of their neighbours' queues, sleepers park on a condvar.
+//!
+//! Jobs are `'static` boxed closures; borrowing callers go through
+//! [`super::scope`], which erases lifetimes behind a completion latch. The
+//! pool itself is deliberately small and lock-based (one `Mutex<VecDeque>`
+//! per worker): the scheduling unit in this crate is a *chunk of block
+//! rows*, amortizing queue traffic to a handful of operations per kernel
+//! call — see `par.rs` for the chunk-claiming layer on top.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A unit of pool work. The argument is the executing worker's index
+/// (callers helping from outside the pool pass `workers()`).
+pub(crate) type Job = Box<dyn FnOnce(usize) + Send + 'static>;
+
+thread_local! {
+    /// Index of the pool worker running on this thread (`usize::MAX` when
+    /// the thread is not a pool worker).
+    static WORKER_ID: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// The pool-worker index of the current thread, if any.
+pub fn current_worker() -> Option<usize> {
+    let id = WORKER_ID.with(|w| w.get());
+    if id == usize::MAX {
+        None
+    } else {
+        Some(id)
+    }
+}
+
+struct Shared {
+    /// One deque per worker: the owner pops the front, thieves the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Park/wake for idle workers. `wake` notifications are issued with
+    /// `sleep_lock` held so a worker that re-checked the queues under the
+    /// lock cannot miss one.
+    sleep_lock: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin cursor for submissions from non-worker threads.
+    next_queue: AtomicUsize,
+}
+
+impl Shared {
+    fn find_job(&self, preferred: usize) -> Option<Job> {
+        let n = self.queues.len();
+        if preferred < n {
+            if let Some(j) = self.queues[preferred].lock().unwrap().pop_front() {
+                return Some(j);
+            }
+        }
+        // Steal from the back of the other queues, scanning from the
+        // neighbour up so thieves spread out.
+        for off in 0..n {
+            let q = preferred.wrapping_add(off + 1) % n;
+            if q == preferred {
+                continue;
+            }
+            if let Some(j) = self.queues[q].lock().unwrap().pop_back() {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    fn has_queued(&self) -> bool {
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+}
+
+/// Fixed-size work-stealing pool. Dropping the pool joins every worker.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers.max(1)` threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep_lock: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_queue: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("spion-exec-{id}"))
+                    .spawn(move || worker_loop(id, shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, handles, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue a job. Prefers the submitting worker's own queue (locality);
+    /// external threads round-robin across queues.
+    pub fn submit(&self, job: impl FnOnce(usize) + Send + 'static) {
+        self.submit_boxed(Box::new(job));
+    }
+
+    pub(crate) fn submit_boxed(&self, job: Job) {
+        let n = self.shared.queues.len();
+        let q = match current_worker() {
+            Some(id) if id < n => id,
+            _ => self.shared.next_queue.fetch_add(1, Ordering::Relaxed) % n,
+        };
+        self.shared.queues[q].lock().unwrap().push_back(job);
+        let _g = self.shared.sleep_lock.lock().unwrap();
+        self.shared.wake.notify_all();
+    }
+
+    /// Pop one queued job, if any — used by threads that help drain the
+    /// pool while waiting on a [`super::scope::Scope`].
+    pub(crate) fn try_pop(&self) -> Option<Job> {
+        self.shared.find_job(usize::MAX)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.sleep_lock.lock().unwrap();
+            self.shared.wake.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(id: usize, shared: Arc<Shared>) {
+    WORKER_ID.with(|w| w.set(id));
+    loop {
+        if let Some(job) = shared.find_job(id) {
+            // Scope jobs catch panics internally; this outer guard keeps the
+            // worker alive if a raw `submit` job panics.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+            if result.is_err() {
+                eprintln!("[exec] worker {id}: job panicked (pool continues)");
+            }
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let guard = shared.sleep_lock.lock().unwrap();
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if shared.has_queued() {
+            continue;
+        }
+        // Timeout bounds the cost of any missed wakeup to one tick.
+        let _ = shared.wake.wait_timeout(guard, Duration::from_millis(10)).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_submitted_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let n = 100;
+        for i in 0..n {
+            let counter = counter.clone();
+            let done = done.clone();
+            pool.submit(move |_w| {
+                counter.fetch_add(i as u64, Ordering::Relaxed);
+                let mut g = done.0.lock().unwrap();
+                *g += 1;
+                done.1.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut g = lock.lock().unwrap();
+        while *g < n {
+            g = cv.wait_timeout(g, Duration::from_secs(5)).unwrap().0;
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), (0..n as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            let hits = hits.clone();
+            pool.submit(move |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must not hang; queued jobs may or may not run
+        assert!(hits.load(Ordering::Relaxed) <= 16);
+    }
+
+    #[test]
+    fn worker_ids_are_in_range() {
+        let pool = ThreadPool::new(4);
+        let seen = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..64 {
+            let seen = seen.clone();
+            let done = done.clone();
+            pool.submit(move |w| {
+                assert!(w < 4);
+                seen.lock().unwrap().insert(w);
+                let mut g = done.0.lock().unwrap();
+                *g += 1;
+                done.1.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut g = lock.lock().unwrap();
+        while *g < 64 {
+            g = cv.wait_timeout(g, Duration::from_secs(5)).unwrap().0;
+        }
+        assert!(!seen.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool() {
+        let pool = ThreadPool::new(1);
+        pool.submit(|_| panic!("boom"));
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let d2 = done.clone();
+        pool.submit(move |_| {
+            let mut g = d2.0.lock().unwrap();
+            *g = true;
+            d2.1.notify_all();
+        });
+        let (lock, cv) = &*done;
+        let mut g = lock.lock().unwrap();
+        while !*g {
+            g = cv.wait_timeout(g, Duration::from_secs(5)).unwrap().0;
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Scoped spawning onto the pool: jobs may borrow from the caller's stack.
+//!
+//! Follows the `std::thread::scope` shape — an invariant `'scope` lifetime
+//! threaded through `&'scope Scope` so spawned closures can only capture
+//! borrows that outlive the whole [`ThreadPool::scope`] call — plus a
+//! completion latch: `scope()` does not return (or resume a panic) until
+//! every spawned job has finished. While waiting, the calling thread helps
+//! drain the pool's queues, which keeps nested scopes deadlock-free even
+//! when every pool worker is itself blocked in an inner `scope()`.
+
+use std::any::Any;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::pool::{self, ThreadPool};
+
+pub(crate) struct ScopeState {
+    pending: AtomicUsize,
+    done_lock: Mutex<()>,
+    done: Condvar,
+    /// First panic payload from any spawned job, re-thrown by `scope()`.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn new() -> Self {
+        Self {
+            pending: AtomicUsize::new(0),
+            done_lock: Mutex::new(()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn finish_one(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.done_lock.lock().unwrap();
+            self.done.notify_all();
+        }
+    }
+
+    fn record_panic(&self, payload: Box<dyn Any + Send + 'static>) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    /// Wait for all spawned jobs, helping run queued pool work meanwhile.
+    fn wait(&self, pool: &ThreadPool) {
+        while self.pending.load(Ordering::Acquire) != 0 {
+            if let Some(job) = pool.try_pop() {
+                let wid = pool::current_worker().unwrap_or(pool.workers());
+                job(wid);
+                continue;
+            }
+            let guard = self.done_lock.lock().unwrap();
+            if self.pending.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            let _ = self.done.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+/// Handle passed to the [`ThreadPool::scope`] closure; `spawn` submits jobs
+/// that may borrow anything outliving the scope call.
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'env ThreadPool,
+    state: Arc<ScopeState>,
+    /// Invariance over 'scope (the std::thread::scope trick): stops the
+    /// compiler shrinking 'scope to a region inside the scope closure.
+    scope_marker: PhantomData<&'scope mut &'scope ()>,
+    env_marker: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Submit a job that borrows from the environment of the scope call.
+    /// The closure receives the executing worker's index.
+    pub fn spawn<F>(&'scope self, f: F)
+    where
+        F: FnOnce(usize) + Send + 'scope,
+    {
+        self.state.pending.fetch_add(1, Ordering::AcqRel);
+        let state = self.state.clone();
+        let job: Box<dyn FnOnce(usize) + Send + 'scope> = Box::new(move |wid| {
+            let result = catch_unwind(AssertUnwindSafe(|| f(wid)));
+            if let Err(payload) = result {
+                state.record_panic(payload);
+            }
+            state.finish_one();
+        });
+        // SAFETY: lifetime erasure to fit the pool's 'static job type. The
+        // job only borrows data outliving 'scope, and `ThreadPool::scope`
+        // always blocks (on both the normal and the unwinding path) until
+        // `pending` reaches zero, i.e. until this job has run to completion
+        // — so no borrow is used after it expires. The job's own panics are
+        // caught above and never unwind through the erased frame.
+        let job: super::pool::Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce(usize) + Send + 'scope>, super::pool::Job>(job)
+        };
+        self.pool.submit_boxed(job);
+    }
+
+    pub fn pool(&self) -> &'env ThreadPool {
+        self.pool
+    }
+}
+
+impl ThreadPool {
+    /// Run `f` with a [`Scope`]: every job spawned on the scope completes
+    /// before this returns. A panic in `f` or in any job is propagated
+    /// (after all jobs have finished).
+    pub fn scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState::new()),
+            scope_marker: PhantomData,
+            env_marker: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.state.wait(self);
+        if let Some(payload) = scope.state.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+        match result {
+            Ok(r) => r,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_jobs_borrow_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(100) {
+                let sum = &sum;
+                s.spawn(move |_| {
+                    sum.fetch_add(chunk.iter().sum::<u64>(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..1000).sum::<u64>());
+    }
+
+    #[test]
+    fn scope_waits_for_all_jobs() {
+        let pool = ThreadPool::new(2);
+        for _round in 0..50 {
+            let flag = AtomicU64::new(0);
+            pool.scope(|s| {
+                for _ in 0..8 {
+                    let flag = &flag;
+                    s.spawn(move |_| {
+                        flag.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(flag.load(Ordering::Relaxed), 8, "job escaped the scope");
+        }
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicU64::new(0);
+        pool.scope(|outer| {
+            for _ in 0..4 {
+                let total = &total;
+                let pool = outer.pool();
+                outer.spawn(move |_| {
+                    pool.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(move |_| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn spawned_panic_propagates_after_completion() {
+        let pool = ThreadPool::new(2);
+        let completed = Arc::new(AtomicU64::new(0));
+        let completed2 = completed.clone();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                let completed = &completed2;
+                s.spawn(|_| panic!("job boom"));
+                for _ in 0..4 {
+                    s.spawn(move |_| {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        assert_eq!(completed.load(Ordering::Relaxed), 4, "siblings still ran");
+    }
+}

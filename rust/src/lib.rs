@@ -4,13 +4,15 @@
 //! Layer map (see DESIGN.md):
 //! * L3 (this crate): three-phase training coordinator, pattern generation
 //!   (Algorithms 3+4), block-CSR sparse MHA engine (Algorithms 5+6),
-//!   synthetic LRA data, PJRT runtime, serving.
+//!   work-stealing parallel execution runtime (`exec`), synthetic LRA data,
+//!   PJRT runtime, serving.
 //! * L2 (`python/compile/model.py`): JAX encoder fwd/bwd + Adam, AOT-lowered
 //!   to `artifacts/*.hlo.txt`.
 //! * L1 (`python/compile/kernels/`): Pallas block-sparse attention kernel
 //!   (interpret=True), lowered inside the L2 HLO.
 
 pub mod util;
+pub mod exec;
 pub mod tensor;
 pub mod config;
 pub mod pattern;

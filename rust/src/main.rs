@@ -11,8 +11,9 @@
 use anyhow::Result;
 use spion::config::types::{preset, presets};
 use spion::config::types::SparsityConfig;
-use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
+use spion::config::{ExecConfig, ExperimentConfig, PatternKind, TrainConfig};
 use spion::coordinator::Trainer;
+use spion::exec::Exec;
 use spion::runtime::Runtime;
 use spion::util::cli::Args;
 
@@ -47,14 +48,40 @@ fn print_help() {
          \x20 ops       --l 4096 --d 64 --density 0.1\n\
          \x20 data      --task listops --n 3\n\
          \x20 serve     --preset tiny --checkpoint ck.bin [--kind cf] --requests 64\n\
-         \x20 presets\n"
+         \x20 presets\n\n\
+         GLOBAL OPTIONS:\n\
+         \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
+         \x20 --chunk-blocks N   block rows per scheduling chunk (0 = auto)\n\
+         \x20 --deterministic B  worker-count-independent reduction order (default true)\n"
     );
+}
+
+/// Execution-runtime config from the shared CLI flags.
+fn exec_from_args(args: &Args) -> ExecConfig {
+    let d = ExecConfig::default();
+    ExecConfig {
+        workers: args.usize_or("workers", d.workers),
+        chunk_blocks: args.usize_or("chunk-blocks", d.chunk_blocks),
+        deterministic: args.bool_or("deterministic", d.deterministic),
+    }
 }
 
 /// Build an [`ExperimentConfig`] from CLI flags (or a `--config` TOML file).
 pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(path) = args.get("config") {
-        return spion::config::types::load_experiment(path).map_err(|e| anyhow::anyhow!(e));
+        let mut exp =
+            spion::config::types::load_experiment(path).map_err(|e| anyhow::anyhow!(e))?;
+        // CLI flags override the file's [exec] section.
+        if args.has("workers") {
+            exp.exec.workers = args.usize_or("workers", exp.exec.workers);
+        }
+        if args.has("chunk-blocks") {
+            exp.exec.chunk_blocks = args.usize_or("chunk-blocks", exp.exec.chunk_blocks);
+        }
+        if args.has("deterministic") {
+            exp.exec.deterministic = args.bool_or("deterministic", exp.exec.deterministic);
+        }
+        return Ok(exp);
     }
     let preset_name = args.str_or("preset", "tiny");
     let (task, model) =
@@ -77,6 +104,7 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         model,
         train,
         sparsity,
+        exec: exec_from_args(args),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     })
 }
@@ -84,7 +112,7 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
 fn run_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
     println!(
-        "training preset={} task={:?} kind={} steps={} (L={}, D={}, H={}, N={})",
+        "training preset={} task={:?} kind={} steps={} (L={}, D={}, H={}, N={}, workers={})",
         exp.model.preset,
         exp.task,
         exp.sparsity.kind.name(),
@@ -92,7 +120,8 @@ fn run_train(args: &Args) -> Result<()> {
         exp.model.seq_len,
         exp.model.d_model,
         exp.model.heads,
-        exp.model.layers
+        exp.model.layers,
+        exp.exec.resolved_workers()
     );
     let rt = Runtime::cpu()?;
     let trainer = Trainer::new(&rt, exp)?.verbose(true);
@@ -136,7 +165,8 @@ fn run_pattern(args: &Args) -> Result<()> {
         0.05,
         &mut rng,
     );
-    let mask = spion::pattern::generate_pattern(&scores, &cfg);
+    let exec = Exec::new(exec_from_args(args));
+    let mask = spion::pattern::spion::generate_pattern_with(&exec, &scores, &cfg);
     println!(
         "{} pattern: L={l} B={block} → {}×{} blocks, density {:.3} (sparsity {:.1}%)",
         variant.name(),
@@ -207,6 +237,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 model: model.clone(),
                 train: TrainConfig::default(),
                 sparsity: SparsityConfig::for_model(kind, task, &model),
+                exec: exec_from_args(args),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);
@@ -223,12 +254,15 @@ fn run_serve(args: &Args) -> Result<()> {
             Encoder::new(params, model.heads).with_masks(masks)
         }
     };
-    let server = InferenceServer::start(
+    let serve_workers = exec_from_args(args).resolved_workers();
+    println!("serving with {serve_workers} worker(s)");
+    let server = InferenceServer::start_with_workers(
         encoder,
         BatchPolicy {
             max_batch: args.usize_or("max-batch", 8),
             max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 5)),
         },
+        serve_workers,
     );
     // Drive a synthetic workload through concurrent clients.
     let n = args.usize_or("requests", 64);

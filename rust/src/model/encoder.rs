@@ -10,6 +10,10 @@ use super::ModelParams;
 
 const LN_EPS: f32 = 1e-6; // matches python/compile/model.py
 
+/// Cloneable so the serving layer can hand each pool worker its own
+/// instance (parameters and workspaces are deep-copied; workspaces are
+/// mutable scratch and must never be shared across workers).
+#[derive(Clone)]
 pub struct Encoder {
     pub params: ModelParams,
     pub heads: usize,

@@ -10,6 +10,8 @@
 //! a vertical stripe is amplified by the stripe's own width — exactly the
 //! shape-detection behaviour §4.2 describes.
 
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 use crate::tensor::Mat;
 
 /// The paper's diagonal filter: ones on the diagonal of an F×F kernel.
@@ -24,13 +26,21 @@ pub fn diagonal_filter(f: usize) -> Vec<f32> {
 /// tap. Naive form is O(L²F); `conv_diag` below is the optimized
 /// prefix-sum form used in production. Kept for property-testing.
 pub fn conv_diag_naive(a: &Mat, weights: &[f32]) -> Mat {
+    conv_diag_naive_with(Exec::serial_ref(), a, weights)
+}
+
+/// Row-parallel naive form (each output row is independent).
+pub fn conv_diag_naive_with(exec: &Exec, a: &Mat, weights: &[f32]) -> Mat {
     assert_eq!(a.rows, a.cols, "attention score matrix must be square");
     let l = a.rows;
     let f = weights.len();
     let half = f / 2;
     let mut out = Mat::zeros(l, l);
-    for i in 0..l {
-        for j in 0..l {
+    let optr = SendPtr(out.data.as_mut_ptr());
+    exec.par_for(l, |i| {
+        // SAFETY: row `i` of `out` is written by this index alone.
+        let orow = unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * l), l) };
+        for (j, o) in orow.iter_mut().enumerate() {
             let mut s = 0.0f32;
             for (fi, &w) in weights.iter().enumerate() {
                 let ii = i as isize + fi as isize - half as isize;
@@ -39,9 +49,9 @@ pub fn conv_diag_naive(a: &Mat, weights: &[f32]) -> Mat {
                     s += a.at(ii as usize, jj as usize) * w;
                 }
             }
-            *out.at_mut(i, j) = s;
+            *o = s;
         }
-    }
+    });
     out
 }
 
@@ -51,22 +61,34 @@ pub fn conv_diag_naive(a: &Mat, weights: &[f32]) -> Mat {
 ///
 /// For non-uniform weights we fall back to the naive form.
 pub fn conv_diag(a: &Mat, weights: &[f32]) -> Mat {
+    conv_diag_with(Exec::serial_ref(), a, weights)
+}
+
+/// Diagonal-parallel convolution: every diagonal `j − i = d` is an
+/// independent 1-D signal writing a disjoint set of output cells, so the
+/// 2L−1 diagonals parallelize freely and the result is bit-identical to
+/// the serial sweep at any worker count.
+pub fn conv_diag_with(exec: &Exec, a: &Mat, weights: &[f32]) -> Mat {
     let f = weights.len();
     if f == 0 {
         return a.clone();
     }
     let uniform = weights.iter().all(|&w| (w - weights[0]).abs() < 1e-12);
     if !uniform {
-        return conv_diag_naive(a, weights);
+        return conv_diag_naive_with(exec, a, weights);
     }
     let w = weights[0];
     let l = a.rows;
     assert_eq!(a.rows, a.cols);
     let half = f / 2;
     let mut out = Mat::zeros(l, l);
-    // Each diagonal d (j - i = d) is an independent 1-D signal; the output
-    // at position k along the diagonal is w * sum of input[k-half ..= k-half+f-1].
-    for d in -(l as isize - 1)..=(l as isize - 1) {
+    if l == 0 {
+        return out;
+    }
+    let optr = SendPtr(out.data.as_mut_ptr());
+    // Diagonal index t ∈ [0, 2L−1) ↔ offset d = t − (L−1) ∈ [−(L−1), L−1].
+    exec.par_for(2 * l - 1, |t| {
+        let d = t as isize - (l as isize - 1);
         // Starting coordinates of diagonal d.
         let (si, sj) = if d >= 0 { (0usize, d as usize) } else { ((-d) as usize, 0usize) };
         let len = l - si.max(sj);
@@ -75,11 +97,12 @@ pub fn conv_diag(a: &Mat, weights: &[f32]) -> Mat {
         // Window for output k covers input [k - half, k - half + f).
         // Initialize for k = 0: input indices [-half, -half+f).
         let hi0 = (f as isize - half as isize).clamp(0, len as isize) as usize;
-        for t in 0..hi0 {
-            acc += a.at(si + t, sj + t);
+        for t0 in 0..hi0 {
+            acc += a.at(si + t0, sj + t0);
         }
         for k in 0..len {
-            *out.at_mut(si + k, sj + k) = acc * w;
+            // SAFETY: cell (si+k, sj+k) lies on diagonal d only.
+            unsafe { *optr.0.add((si + k) * l + (sj + k)) = acc * w };
             // Advance window: remove k-half, add k+1-half+f-1 = k+f-half.
             let rm = k as isize - half as isize;
             let add = k as isize + f as isize - half as isize;
@@ -90,7 +113,7 @@ pub fn conv_diag(a: &Mat, weights: &[f32]) -> Mat {
                 acc += a.at(si + add as usize, sj + add as usize);
             }
         }
-    }
+    });
     out
 }
 

@@ -1,38 +1,60 @@
 //! Average pooling to block resolution (Eq. 4) and nearest-neighbor
 //! upsampling (Algorithm 3 lines 3 and 11).
 
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 use crate::tensor::Mat;
 
 /// Non-overlapping B×B average pooling: (L×L) → (L/B × L/B).
 pub fn avg_pool(a: &Mat, block: usize) -> Mat {
+    avg_pool_with(Exec::serial_ref(), a, block)
+}
+
+/// Block-row-parallel pooling: output row `bi` accumulates input rows
+/// `bi·B..(bi+1)·B` in the same ascending order as the serial sweep, so the
+/// result is bit-identical at any worker count.
+pub fn avg_pool_with(exec: &Exec, a: &Mat, block: usize) -> Mat {
     assert_eq!(a.rows, a.cols);
     assert!(block > 0 && a.rows % block == 0, "L={} must be divisible by B={}", a.rows, block);
     let lb = a.rows / block;
     let inv = 1.0 / (block * block) as f32;
     let mut out = Mat::zeros(lb, lb);
-    for i in 0..a.rows {
-        let bi = i / block;
-        let row = a.row(i);
-        let orow = out.row_mut(bi);
-        for (j, &v) in row.iter().enumerate() {
-            orow[j / block] += v;
+    let optr = SendPtr(out.data.as_mut_ptr());
+    exec.par_for(lb, |bi| {
+        // SAFETY: output row `bi` is written by this index alone.
+        let orow = unsafe { std::slice::from_raw_parts_mut(optr.0.add(bi * lb), lb) };
+        for i in bi * block..(bi + 1) * block {
+            let row = a.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                orow[j / block] += v;
+            }
         }
-    }
-    out.scale(inv);
+        for v in orow.iter_mut() {
+            *v *= inv;
+        }
+    });
     out
 }
 
 /// Nearest-neighbor upsample: (n×n) → (n·B × n·B).
 pub fn upsample(a: &Mat, block: usize) -> Mat {
+    upsample_with(Exec::serial_ref(), a, block)
+}
+
+/// Row-parallel upsample (each output row is written independently).
+pub fn upsample_with(exec: &Exec, a: &Mat, block: usize) -> Mat {
     let l = a.rows * block;
-    let mut out = Mat::zeros(l, a.cols * block);
-    for i in 0..l {
+    let out_cols = a.cols * block;
+    let mut out = Mat::zeros(l, out_cols);
+    let optr = SendPtr(out.data.as_mut_ptr());
+    exec.par_for(l, |i| {
         let srow = a.row(i / block);
-        let orow = out.row_mut(i);
+        // SAFETY: output row `i` is written by this index alone.
+        let orow = unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * out_cols), out_cols) };
         for (j, o) in orow.iter_mut().enumerate() {
             *o = srow[j / block];
         }
-    }
+    });
     out
 }
 

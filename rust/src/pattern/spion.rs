@@ -1,11 +1,12 @@
 //! Algorithm 3 — `generate_pattern()`: the SPION-C / SPION-F / SPION-CF
 //! variants evaluated in §5.
 
-use super::conv::{conv_diag, diagonal_filter};
+use super::conv::{conv_diag_with, diagonal_filter};
 use super::flood::flood_fill_all;
 use super::mask::BlockMask;
-use super::pool::avg_pool;
+use super::pool::avg_pool_with;
 use super::quantile::quantile;
+use crate::exec::Exec;
 use crate::tensor::Mat;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,17 +63,25 @@ impl Default for PatternConfig {
 /// [`BlockMask::to_dense`], kept separate because the sparse engine consumes
 /// the block form directly).
 pub fn generate_pattern(a_s: &Mat, cfg: &PatternConfig) -> BlockMask {
+    generate_pattern_with(Exec::serial_ref(), a_s, cfg)
+}
+
+/// Algorithm 3 on an execution context: the convolution (diagonal-parallel)
+/// and pooling (block-row-parallel) stages use the pool; the quantile and
+/// flood fill are sequential (data-dependent frontier). Pattern generation
+/// is pure, so the mask is bit-identical at any worker count.
+pub fn generate_pattern_with(exec: &Exec, a_s: &Mat, cfg: &PatternConfig) -> BlockMask {
     assert_eq!(a_s.rows, a_s.cols, "A^s must be square");
     assert!(a_s.rows % cfg.block == 0, "L={} not divisible by B={}", a_s.rows, cfg.block);
 
     // Lines 1–2: diagonal convolution (skipped by SPION-F).
     let conv_out = match cfg.variant {
         SpionVariant::F => a_s.clone(),
-        _ => conv_diag(a_s, &diagonal_filter(cfg.filter)),
+        _ => conv_diag_with(exec, a_s, &diagonal_filter(cfg.filter)),
     };
 
     // Line 3: average pooling to block resolution.
-    let pool_out = avg_pool(&conv_out, cfg.block);
+    let pool_out = avg_pool_with(exec, &conv_out, cfg.block);
 
     let fl_out = match cfg.variant {
         SpionVariant::C => {
@@ -111,7 +120,24 @@ pub fn generate_pattern(a_s: &Mat, cfg: &PatternConfig) -> BlockMask {
 
 /// Convenience: generate per-layer patterns from per-layer score matrices.
 pub fn generate_layerwise(scores: &[Mat], cfg: &PatternConfig) -> Vec<BlockMask> {
-    scores.iter().map(|a_s| generate_pattern(a_s, cfg)).collect()
+    generate_layerwise_with(Exec::serial_ref(), scores, cfg)
+}
+
+/// Per-layer pattern generation on an execution context. With enough layers
+/// to feed the pool, layers generate concurrently (serial inner stages);
+/// otherwise each layer's conv/pool stages parallelize internally. Either
+/// schedule yields identical masks (generation is pure).
+pub fn generate_layerwise_with(
+    exec: &Exec,
+    scores: &[Mat],
+    cfg: &PatternConfig,
+) -> Vec<BlockMask> {
+    if exec.workers() > 1 && scores.len() >= 2 {
+        let inner = exec.serial_view();
+        exec.par_map(scores.len(), |n| generate_pattern_with(&inner, &scores[n], cfg))
+    } else {
+        scores.iter().map(|a_s| generate_pattern_with(exec, a_s, cfg)).collect()
+    }
 }
 
 /// Synthesize a head-averaged `A^s` with a given structure — used by tests,

@@ -2,10 +2,12 @@
 //!
 //! The inference analogue of the paper's Fig. 5 right column (inference
 //! time): requests are classified sequences; the batcher groups them up to
-//! `max_batch` or `max_wait`, a worker thread runs either the rust-native
-//! [`crate::model::Encoder`] (dense or sparse) and replies through per-
-//! request channels. Thread-based (std::sync::mpsc) — the vendored crate
-//! set has no tokio, and a single worker matches the single-core testbed.
+//! `max_batch` or `max_wait`, and a pool of workers (each owning a
+//! rust-native [`crate::model::Encoder`] clone, dense or sparse) executes
+//! batches concurrently, replying through per-request channels.
+//! Thread-based (std::sync::mpsc + `exec::ThreadPool`) — the vendored
+//! crate set has no tokio. `--workers 1` reproduces the historical
+//! single-worker server bit-for-bit.
 
 pub mod batcher;
 pub mod server;

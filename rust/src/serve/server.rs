@@ -1,10 +1,19 @@
-//! Inference server: router thread + batched worker over an [`Encoder`].
+//! Inference server: router thread + a pool of batched workers over an
+//! [`Encoder`].
+//!
+//! Topology: clients → router (dynamic batcher) → batch queue → N pool
+//! workers, each owning its own `Encoder` clone (workspaces are mutable
+//! scratch). `workers = 1` reproduces the historical single-worker server
+//! exactly; more workers overlap whole batches, which is what lifts
+//! throughput — per-request latency is bounded by one encoder pass either
+//! way. Workers run on an [`crate::exec::ThreadPool`] owned by the server.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::exec::ThreadPool;
 use crate::model::Encoder;
 use crate::tensor::ops::argmax;
 
@@ -77,72 +86,122 @@ impl Client {
 
 pub struct InferenceServer {
     tx: Sender<Message>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    router: Option<std::thread::JoinHandle<()>>,
+    /// Worker pool; dropped (joined) after the router closes the batch
+    /// queue on shutdown.
+    pool: Option<ThreadPool>,
     next_id: Arc<AtomicU64>,
     pub stats: Arc<ServerStats>,
 }
 
 impl InferenceServer {
-    /// Start the worker thread around an encoder (dense or sparse).
+    /// Start a single-worker server around an encoder (dense or sparse) —
+    /// the historical configuration.
     pub fn start(encoder: Encoder, policy: BatchPolicy) -> Self {
+        Self::start_with_workers(encoder, policy, 1)
+    }
+
+    /// Start a pool-backed server: the router batches requests, `workers`
+    /// pool workers (each with its own encoder clone) execute batches
+    /// concurrently. The client-facing API is identical at any width.
+    pub fn start_with_workers(encoder: Encoder, policy: BatchPolicy, workers: usize) -> Self {
+        let workers = workers.max(1);
         let (tx, rx) = channel::<Message>();
         let stats = Arc::new(ServerStats::default());
-        let worker_stats = stats.clone();
-        let worker = std::thread::spawn(move || {
-            let mut enc = encoder;
-            let batcher = DynamicBatcher::new(rx, policy);
-            'outer: while let Some(batch) = batcher.next_batch() {
-                let mut requests = Vec::with_capacity(batch.len());
-                let mut shutdown = false;
-                for msg in batch {
-                    match msg {
-                        Message::Req(r) => requests.push(r),
-                        Message::Shutdown => shutdown = true,
+
+        // Router: dynamic batching + shutdown propagation. Dropping
+        // `batch_tx` when it exits disconnects every worker.
+        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
+        let router = std::thread::Builder::new()
+            .name("spion-serve-router".into())
+            .spawn(move || {
+                let batcher = DynamicBatcher::new(rx, policy);
+                while let Some(batch) = batcher.next_batch() {
+                    let mut requests = Vec::with_capacity(batch.len());
+                    let mut shutdown = false;
+                    for msg in batch {
+                        match msg {
+                            Message::Req(r) => requests.push(r),
+                            Message::Shutdown => shutdown = true,
+                        }
+                    }
+                    if !requests.is_empty() && batch_tx.send(requests).is_err() {
+                        break;
+                    }
+                    if shutdown {
+                        break;
                     }
                 }
-                let bsz = requests.len();
-                for req in requests {
-                    let (logits, _) = enc.forward(&req.tokens);
-                    let latency = req.submitted.elapsed();
-                    worker_stats.served.fetch_add(1, Ordering::Relaxed);
-                    worker_stats
-                        .total_latency_us
-                        .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
-                    worker_stats
-                        .max_latency_us
-                        .fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        class: argmax(&logits),
-                        logits,
-                        latency,
-                        batch_size: bsz,
-                    });
-                }
-                if bsz > 0 {
-                    worker_stats.batches.fetch_add(1, Ordering::Relaxed);
-                }
-                if shutdown {
-                    break 'outer;
-                }
-            }
-        });
-        Self { tx, worker: Some(worker), next_id: Arc::new(AtomicU64::new(0)), stats }
+            })
+            .expect("spawning serve router");
+
+        // Workers: drain whole batches off the shared queue.
+        let pool = ThreadPool::new(workers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        for _ in 0..workers {
+            let enc = encoder.clone();
+            let batch_rx = batch_rx.clone();
+            let stats = stats.clone();
+            pool.submit(move |_wid| serve_worker(enc, batch_rx, stats));
+        }
+
+        Self {
+            tx,
+            router: Some(router),
+            pool: Some(pool),
+            next_id: Arc::new(AtomicU64::new(0)),
+            stats,
+        }
     }
 
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone(), next_id: self.next_id.clone() }
     }
 
-    /// Signal the worker to finish its current batch and exit, then join.
+    /// Signal the workers to finish queued batches and exit, then join.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
         let _ = self.tx.send(Message::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        if let Some(r) = self.router.take() {
+            let _ = r.join(); // router exit drops batch_tx → workers drain and stop
+        }
+        self.pool.take(); // ThreadPool::drop joins the workers
+    }
+}
+
+/// One pool worker: pull batches until the router hangs up.
+fn serve_worker(
+    mut enc: Encoder,
+    batch_rx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    stats: Arc<ServerStats>,
+) {
+    loop {
+        // Hold the lock only while receiving; processing runs unlocked so
+        // other workers can pick up the next batch meanwhile.
+        let batch = match batch_rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        let bsz = batch.len();
+        for req in batch {
+            let (logits, _) = enc.forward(&req.tokens);
+            let latency = req.submitted.elapsed();
+            stats.served.fetch_add(1, Ordering::Relaxed);
+            stats.total_latency_us.fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+            stats.max_latency_us.fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
+            let _ = req.reply.send(Response {
+                id: req.id,
+                class: argmax(&logits),
+                logits,
+                latency,
+                batch_size: bsz,
+            });
+        }
+        if bsz > 0 {
+            stats.batches.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -194,6 +253,40 @@ mod tests {
         server.shutdown();
         let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
         assert!(client.infer(toks).is_none());
+    }
+
+    #[test]
+    fn multi_worker_serves_everything_and_matches_single_worker() {
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        // Reference answer from the single-worker server.
+        let single = InferenceServer::start(mk_encoder(true), BatchPolicy::default());
+        let expect = single.client().infer(toks.clone()).unwrap();
+        single.shutdown();
+
+        let server = InferenceServer::start_with_workers(
+            mk_encoder(true),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            4,
+        );
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let client = server.client();
+            let toks = toks.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..8).map(|_| client.infer(toks.clone()).unwrap()).collect::<Vec<_>>()
+            }));
+        }
+        let responses: Vec<Response> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        assert_eq!(responses.len(), 32);
+        for r in &responses {
+            assert_eq!(r.class, expect.class, "pool worker diverged from single worker");
+            for (a, b) in r.logits.iter().zip(&expect.logits) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+        assert_eq!(server.stats.served.load(Ordering::Relaxed), 32);
+        server.shutdown();
     }
 
     #[test]

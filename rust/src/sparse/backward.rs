@@ -19,35 +19,64 @@
 //! makes sparse *training*, not just sparse inference, L²/C cheaper).
 
 use super::bcsr::Bcsr;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 use crate::tensor::Mat;
+
+pub use super::bcsr::ColIndex;
 
 /// out = Sᵀ × X for block-CSR S (L×L) and dense X (L×d).
 pub fn spmm_t(s: &Bcsr, x: &Mat, out: &mut Mat) {
+    spmm_t_with(Exec::serial_ref(), s, x, out);
+}
+
+/// Parallel transposed SpMM. Unlike the forward SpMM, tile `(bi, bj)`
+/// scatters into output rows `bj·B..` — so the parallel axis is the output
+/// block *column*, traversed through the structure's cached [`ColIndex`]
+/// (built once per pattern — the hot path stays allocation-free).
+/// Contributions to each output element arrive in (block-row, row) order
+/// exactly as in the serial loop nest, keeping results bit-identical at any
+/// worker count.
+pub fn spmm_t_with(exec: &Exec, s: &Bcsr, x: &Mat, out: &mut Mat) {
     let b = s.block;
     assert_eq!(x.rows, s.seq_len());
     assert_eq!((out.rows, out.cols), (x.rows, x.cols));
-    out.data.fill(0.0);
     let d = x.cols;
-    for bi in 0..s.lb {
-        for blk in s.row_ptr[bi]..s.row_ptr[bi + 1] {
-            let bj = s.col_idx[blk];
-            let base = blk * b * b;
-            // Sᵀ: tile (bi,bj) scatters x rows bi·b.. into out rows bj·b.. .
-            for r in 0..b {
-                let srow = &s.values[base + r * b..base + (r + 1) * b];
-                let xrow = x.row(bi * b + r);
-                for (c, &sv) in srow.iter().enumerate() {
-                    if sv == 0.0 {
-                        continue;
-                    }
-                    let orow = &mut out.data[(bj * b + c) * d..(bj * b + c + 1) * d];
-                    for (o, &xv) in orow.iter_mut().zip(xrow) {
-                        *o += sv * xv;
+    let lb = s.lb;
+    let cols = s.col_index();
+    let values = &s.values;
+    let col_ptr = &cols.col_ptr;
+    let entries = &cols.entries;
+    let optr = SendPtr(out.data.as_mut_ptr());
+    exec.par_for_chunks(lb, |range| {
+        let mut tiles = 0u64;
+        for bj in range {
+            // SAFETY: output rows bj·B..(bj+1)·B belong to block column
+            // `bj` alone; chunks partition the block columns.
+            let opanel =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(bj * b * d), b * d) };
+            opanel.fill(0.0);
+            for &(bi, blk) in &entries[col_ptr[bj]..col_ptr[bj + 1]] {
+                let (bi, blk) = (bi as usize, blk as usize);
+                let base = blk * b * b;
+                for r in 0..b {
+                    let srow = &values[base + r * b..base + (r + 1) * b];
+                    let xrow = x.row(bi * b + r);
+                    for (c, &sv) in srow.iter().enumerate() {
+                        if sv == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut opanel[c * d..(c + 1) * d];
+                        for (o, &xv) in orow.iter_mut().zip(xrow) {
+                            *o += sv * xv;
+                        }
                     }
                 }
             }
+            tiles += (col_ptr[bj + 1] - col_ptr[bj]) as u64;
         }
-    }
+        exec.tally().add_mul_add(tiles * (b * b) as u64 * d as u64);
+    });
 }
 
 /// Gradients of the sparse attention head.
@@ -59,7 +88,40 @@ pub fn spmm_t(s: &Bcsr, x: &Mat, out: &mut Mat) {
 /// Returns (dQ, dK, dV). `workspace` must share `s_prob`'s structure and is
 /// overwritten (it holds dW/dZ; callers reuse it across steps to keep the
 /// hot path allocation-free).
+#[allow(clippy::too_many_arguments)]
 pub fn sparse_attention_backward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    s_prob: &Bcsr,
+    d_out: &Mat,
+    workspace: &mut Bcsr,
+    dq: &mut Mat,
+    dk: &mut Mat,
+    dv: &mut Mat,
+) {
+    sparse_attention_backward_with(
+        Exec::serial_ref(),
+        q,
+        k,
+        v,
+        scale,
+        s_prob,
+        d_out,
+        workspace,
+        dq,
+        dk,
+        dv,
+    );
+}
+
+/// Parallel backward: every stage is block-row-parallel (the transposed
+/// SpMMs block-column-parallel via [`ColIndex`]); all writes are disjoint,
+/// so gradients are bit-identical to the serial engine at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_backward_with(
+    exec: &Exec,
     q: &Mat,
     k: &Mat,
     v: &Mat,
@@ -75,37 +137,55 @@ pub fn sparse_attention_backward(
     assert_eq!(workspace.col_idx, s_prob.col_idx, "workspace structure mismatch");
 
     // dV = Wᵀ dO.
-    spmm_t(s_prob, d_out, dv);
+    spmm_t_with(exec, s_prob, d_out, dv);
 
     // dW = (dO Vᵀ) ⊙ P — SDDMM with (dO, V) in place of (Q, K).
-    super::sddmm::sddmm(d_out, v, workspace, 1.0);
+    super::sddmm::sddmm_with(exec, d_out, v, workspace, 1.0);
 
-    // dZ = W ⊙ (dW − rowsum(dW ⊙ W)).
-    for bi in 0..s_prob.lb {
-        let blocks = s_prob.row_ptr[bi]..s_prob.row_ptr[bi + 1];
-        for r in 0..b {
-            let mut rsum = 0.0f32;
-            for blk in blocks.clone() {
-                let w = &s_prob.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                let dw = &workspace.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                for (wv, dwv) in w.iter().zip(dw) {
-                    rsum += wv * dwv;
+    // dZ = W ⊙ (dW − rowsum(dW ⊙ W)) — softmax backward, sampled. Each
+    // block row rewrites only its own workspace tiles.
+    {
+        let lb = s_prob.lb;
+        let row_ptr = &s_prob.row_ptr;
+        let w_values = &s_prob.values;
+        let wsptr = SendPtr(workspace.values.as_mut_ptr());
+        exec.par_for_chunks(lb, |rows| {
+            let mut stored = 0u64;
+            for bi in rows {
+                let blocks = row_ptr[bi]..row_ptr[bi + 1];
+                for r in 0..b {
+                    let mut rsum = 0.0f32;
+                    for blk in blocks.clone() {
+                        let w = &w_values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                        // SAFETY: workspace tiles of block row `bi` are
+                        // touched by this chunk alone.
+                        let dw = unsafe {
+                            std::slice::from_raw_parts(wsptr.0.add(blk * b * b + r * b), b)
+                        };
+                        for (wv, dwv) in w.iter().zip(dw) {
+                            rsum += wv * dwv;
+                        }
+                    }
+                    for blk in blocks.clone() {
+                        let w = &w_values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                        let dz = unsafe {
+                            std::slice::from_raw_parts_mut(wsptr.0.add(blk * b * b + r * b), b)
+                        };
+                        for (zv, &wv) in dz.iter_mut().zip(w) {
+                            *zv = wv * (*zv - rsum);
+                        }
+                    }
                 }
+                stored += ((blocks.end - blocks.start) * b * b) as u64;
             }
-            for blk in blocks.clone() {
-                let w = &s_prob.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                let dz = &mut workspace.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                for (zv, &wv) in dz.iter_mut().zip(w) {
-                    *zv = wv * (*zv - rsum);
-                }
-            }
-        }
+            exec.tally().add_mul_add(3 * stored); // dW⊙W rowsum + W⊙(dW−r)
+        });
     }
 
     // dQ = (dZ K) · s ; dK = (dZᵀ Q) · s.
-    super::spmm::spmm(workspace, k, dq);
+    super::spmm::spmm_with(exec, workspace, k, dq);
     dq.scale(scale);
-    spmm_t(workspace, q, dk);
+    spmm_t_with(exec, workspace, q, dk);
     dk.scale(scale);
 }
 
@@ -154,6 +234,43 @@ mod tests {
             (Mat::zeros(q.rows, q.cols), Mat::zeros(k.rows, k.cols), Mat::zeros(v.rows, v.cols));
         sparse_attention_backward(q, k, v, scale, &s, cot, &mut ws, &mut dq, &mut dk, &mut dv);
         (dq, dk, dv)
+    }
+
+    #[test]
+    fn col_index_covers_all_tiles_in_row_order() {
+        QuickCheck::new().cases(25).run("col index", |rng| {
+            let lb = 1 + rng.below(10);
+            let p = rng.f64();
+            let mask = random_mask(rng, lb, 2, p);
+            let s = Bcsr::from_mask(&mask);
+            let ci = super::ColIndex::build(&s);
+            crate::qc_assert!(ci.entries.len() == s.nnz_blocks(), "entry count");
+            crate::qc_assert!(ci.col_ptr.len() == lb + 1, "col_ptr len");
+            let mut seen = vec![false; s.nnz_blocks()];
+            for bj in 0..lb {
+                let col = &ci.entries[ci.col_ptr[bj]..ci.col_ptr[bj + 1]];
+                // Ascending block rows within a column (the order that makes
+                // parallel spmm_t bit-identical to serial).
+                crate::qc_assert!(
+                    col.windows(2).all(|w| w[0].0 < w[1].0),
+                    "column {bj} not row-sorted"
+                );
+                for &(bi, blk) in col {
+                    crate::qc_assert!(
+                        s.col_idx[blk as usize] == bj,
+                        "entry ({bi},{blk}) not in column {bj}"
+                    );
+                    crate::qc_assert!(
+                        (s.row_ptr[bi as usize]..s.row_ptr[bi as usize + 1])
+                            .contains(&(blk as usize)),
+                        "tile {blk} not in block row {bi}"
+                    );
+                    seen[blk as usize] = true;
+                }
+            }
+            crate::qc_assert!(seen.iter().all(|&x| x), "tile missed");
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,7 +1,50 @@
 //! Block-CSR storage for the sparsified attention score matrix `S^r`/`S^s`.
 
+use std::sync::OnceLock;
+
 use crate::pattern::BlockMask;
 use crate::tensor::Mat;
+
+/// Column-major traversal index over a block-CSR structure: for each block
+/// column `j`, the `(block_row, tile_index)` pairs owning a tile in that
+/// column, in ascending block-row order. Lets the transposed SpMM
+/// parallelize over *output* block columns (disjoint output panels) while
+/// visiting each output element's contributions in exactly the serial
+/// engine's order — so parallel `spmm_t` stays bit-identical.
+#[derive(Debug, Clone)]
+pub struct ColIndex {
+    /// CSC-style pointer over block columns: len lb+1.
+    pub col_ptr: Vec<usize>,
+    /// (block_row, tile_index) per stored tile, grouped by block column.
+    pub entries: Vec<(u32, u32)>,
+}
+
+impl ColIndex {
+    /// O(nnz) counting sort of the CSR structure by block column.
+    pub fn build(s: &Bcsr) -> Self {
+        let lb = s.lb;
+        let mut counts = vec![0usize; lb + 1];
+        for &bj in &s.col_idx {
+            counts[bj + 1] += 1;
+        }
+        for j in 0..lb {
+            counts[j + 1] += counts[j];
+        }
+        let col_ptr = counts.clone();
+        let mut cursor = counts;
+        let mut entries = vec![(0u32, 0u32); s.nnz_blocks()];
+        // Row-major sweep ⇒ entries within a column come out in ascending
+        // block-row order.
+        for bi in 0..lb {
+            for blk in s.row_ptr[bi]..s.row_ptr[bi + 1] {
+                let bj = s.col_idx[blk];
+                entries[cursor[bj]] = (bi as u32, blk as u32);
+                cursor[bj] += 1;
+            }
+        }
+        Self { col_ptr, entries }
+    }
+}
 
 /// Block-CSR matrix over an (lb·B)×(lb·B) logical matrix. Nonzero structure
 /// is fixed by the pattern; `values` holds each active block as a dense
@@ -16,6 +59,12 @@ pub struct Bcsr {
     pub col_idx: Vec<usize>,
     /// Dense B×B tiles, len nnz_blocks · B².
     pub values: Vec<f32>,
+    /// Lazily-built column traversal, cached because the structure is fixed
+    /// for the pattern's lifetime (keeps the transposed-SpMM hot path
+    /// allocation-free after the first call). Invalidated by nothing —
+    /// callers who hand-edit `row_ptr`/`col_idx` (tests only) must build a
+    /// fresh `Bcsr` instead.
+    col_cache: OnceLock<ColIndex>,
 }
 
 impl Bcsr {
@@ -32,7 +81,12 @@ impl Bcsr {
             row_ptr.push(col_idx.len());
         }
         let values = vec![0.0; col_idx.len() * mask.block * mask.block];
-        Self { lb, block: mask.block, row_ptr, col_idx, values }
+        Self { lb, block: mask.block, row_ptr, col_idx, values, col_cache: OnceLock::new() }
+    }
+
+    /// The cached column-major traversal of this structure.
+    pub fn col_index(&self) -> &ColIndex {
+        self.col_cache.get_or_init(|| ColIndex::build(self))
     }
 
     pub fn seq_len(&self) -> usize {

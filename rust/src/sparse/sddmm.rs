@@ -5,6 +5,8 @@
 //! B×(D/H) by (D/H)×B matmul; Q rows and K rows stream linearly.
 
 use super::bcsr::Bcsr;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 use crate::tensor::mat::dot;
 use crate::tensor::Mat;
 
@@ -12,23 +14,43 @@ use crate::tensor::Mat;
 /// `q`, `k`: L×d head matrices. `scale` is the 1/√(D/H) softmax scale —
 /// folded in here like the GPU kernel does (Algorithm 6 line 8).
 pub fn sddmm(q: &Mat, k: &Mat, s: &mut Bcsr, scale: f32) {
+    sddmm_with(Exec::serial_ref(), q, k, s, scale);
+}
+
+/// Block-row-parallel SDDMM. Each block row owns a disjoint slice of
+/// `s.values`, so the output is bit-identical to the serial engine at any
+/// worker count.
+pub fn sddmm_with(exec: &Exec, q: &Mat, k: &Mat, s: &mut Bcsr, scale: f32) {
     let b = s.block;
     assert_eq!(q.rows, s.seq_len());
     assert_eq!(k.rows, s.seq_len());
     assert_eq!(q.cols, k.cols);
-    for bi in 0..s.lb {
-        for blk in s.row_ptr[bi]..s.row_ptr[bi + 1] {
-            let bj = s.col_idx[blk];
-            let base = blk * b * b;
-            for r in 0..b {
-                let qrow = q.row(bi * b + r);
-                let out = &mut s.values[base + r * b..base + (r + 1) * b];
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o = dot(qrow, k.row(bj * b + c)) * scale;
+    let d = q.cols as u64;
+    let lb = s.lb;
+    let row_ptr = &s.row_ptr;
+    let col_idx = &s.col_idx;
+    let vals = SendPtr(s.values.as_mut_ptr());
+    exec.par_for_chunks(lb, |rows| {
+        let mut tiles = 0u64;
+        for bi in rows {
+            for blk in row_ptr[bi]..row_ptr[bi + 1] {
+                let bj = col_idx[blk];
+                let base = blk * b * b;
+                for r in 0..b {
+                    let qrow = q.row(bi * b + r);
+                    // SAFETY: tile `blk` belongs to block row `bi` alone;
+                    // chunks partition the block rows.
+                    let out =
+                        unsafe { std::slice::from_raw_parts_mut(vals.0.add(base + r * b), b) };
+                    for (c, o) in out.iter_mut().enumerate() {
+                        *o = dot(qrow, k.row(bj * b + c)) * scale;
+                    }
                 }
             }
+            tiles += (row_ptr[bi + 1] - row_ptr[bi]) as u64;
         }
-    }
+        exec.tally().add_mul_add(tiles * (b * b) as u64 * d);
+    });
 }
 
 /// Dense reference: masked scaled QKᵀ (testing only).

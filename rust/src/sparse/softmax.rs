@@ -14,52 +14,82 @@
 //! each of the row-block's tiles).
 
 use super::bcsr::Bcsr;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 
 /// In-place sparse softmax. `scale` is applied to each stored logit first
 /// when `apply_scale` — the GPU kernel folds scaling here (Alg. 6 line 8);
 /// our SDDMM already scales, so the engine calls this with scale=1.
 pub fn sparse_softmax(s: &mut Bcsr, scale: f32, implicit_zero_correction: bool) {
+    sparse_softmax_with(Exec::serial_ref(), s, scale, implicit_zero_correction);
+}
+
+/// Block-row-parallel sparse softmax: every softmax row lives entirely
+/// inside its block row's tiles, so block rows are independent and the
+/// output is bit-identical to the serial engine at any worker count.
+pub fn sparse_softmax_with(exec: &Exec, s: &mut Bcsr, scale: f32, implicit_zero_correction: bool) {
     let b = s.block;
     let l = s.seq_len();
-    for bi in 0..s.lb {
-        let blocks = s.row_ptr[bi]..s.row_ptr[bi + 1];
-        let b_cnt = (blocks.end - blocks.start) * b; // stored entries per row
-        for r in 0..b {
-            // Pass 1: scale + max (Alg. 6 lines 7–11).
-            let mut max = f32::NEG_INFINITY;
-            for blk in blocks.clone() {
-                let tile = &mut s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                for v in tile.iter_mut() {
-                    *v *= scale;
-                    if *v > max {
-                        max = *v;
+    let lb = s.lb;
+    let row_ptr = &s.row_ptr;
+    let vals = SendPtr(s.values.as_mut_ptr());
+    exec.par_for_chunks(lb, |rows| {
+        let mut stored = 0u64;
+        for bi in rows {
+            let blocks = row_ptr[bi]..row_ptr[bi + 1];
+            let b_cnt = (blocks.end - blocks.start) * b; // stored entries per row
+            // SAFETY: block row `bi` owns values[row_ptr[bi]·b² ..
+            // row_ptr[bi+1]·b²); chunks partition the block rows.
+            let row_vals = unsafe {
+                std::slice::from_raw_parts_mut(
+                    vals.0.add(blocks.start * b * b),
+                    (blocks.end - blocks.start) * b * b,
+                )
+            };
+            let nblk = blocks.end - blocks.start;
+            for r in 0..b {
+                // Pass 1: scale + max (Alg. 6 lines 7–11).
+                let mut max = f32::NEG_INFINITY;
+                for blk in 0..nblk {
+                    let tile = &mut row_vals[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                    for v in tile.iter_mut() {
+                        *v *= scale;
+                        if *v > max {
+                            max = *v;
+                        }
+                    }
+                }
+                if b_cnt == 0 {
+                    continue;
+                }
+                // Pass 2: exp-sum (lines 12–14) + implicit-zero term (line 15).
+                let mut sum = 0.0f32;
+                for blk in 0..nblk {
+                    let tile = &row_vals[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                    for &v in tile {
+                        sum += (v - max).exp();
+                    }
+                }
+                if implicit_zero_correction {
+                    sum += (-max).exp() * (l - b_cnt) as f32;
+                }
+                // Pass 3: normalize (lines 16–17).
+                let inv = 1.0 / sum;
+                for blk in 0..nblk {
+                    let tile = &mut row_vals[blk * b * b + r * b..blk * b * b + (r + 1) * b];
+                    for v in tile.iter_mut() {
+                        *v = (*v - max).exp() * inv;
                     }
                 }
             }
-            if b_cnt == 0 {
-                continue;
-            }
-            // Pass 2: exp-sum (lines 12–14) + implicit-zero term (line 15).
-            let mut sum = 0.0f32;
-            for blk in blocks.clone() {
-                let tile = &s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                for &v in tile {
-                    sum += (v - max).exp();
-                }
-            }
-            if implicit_zero_correction {
-                sum += (-max).exp() * (l - b_cnt) as f32;
-            }
-            // Pass 3: normalize (lines 16–17).
-            let inv = 1.0 / sum;
-            for blk in blocks.clone() {
-                let tile = &mut s.values[blk * b * b + r * b..blk * b * b + (r + 1) * b];
-                for v in tile.iter_mut() {
-                    *v = (*v - max).exp() * inv;
-                }
-            }
+            stored += (nblk * b * b) as u64;
         }
-    }
+        // Per stored entry: one compare (max pass), two exps (sum +
+        // normalize passes), one multiply — matches the 3C softmax shape.
+        exec.tally().add_cmp(stored);
+        exec.tally().add_exp(2 * stored);
+        exec.tally().add_mul_add(stored);
+    });
 }
 
 #[cfg(test)]

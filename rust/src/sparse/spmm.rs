@@ -1,35 +1,58 @@
 //! SpMM: `A^c = S^s × V` (Algorithm 5 line 7) over block-CSR.
 
 use super::bcsr::Bcsr;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
 use crate::tensor::Mat;
 
 /// out = S × V, where S is block-CSR (L×L) and V is dense (L×d).
 pub fn spmm(s: &Bcsr, v: &Mat, out: &mut Mat) {
+    spmm_with(Exec::serial_ref(), s, v, out);
+}
+
+/// Block-row-parallel SpMM: block row `bi` accumulates only into output
+/// rows `bi·B..(bi+1)·B`, so block rows are independent and the output is
+/// bit-identical to the serial engine at any worker count.
+pub fn spmm_with(exec: &Exec, s: &Bcsr, v: &Mat, out: &mut Mat) {
     let b = s.block;
     assert_eq!(v.rows, s.seq_len());
     assert_eq!((out.rows, out.cols), (v.rows, v.cols));
     out.data.fill(0.0);
     let d = v.cols;
-    for bi in 0..s.lb {
-        for blk in s.row_ptr[bi]..s.row_ptr[bi + 1] {
-            let bj = s.col_idx[blk];
-            let base = blk * b * b;
-            // Tile-dense multiply: (B×B) tile × (B×d) V panel → (B×d) out panel.
-            for r in 0..b {
-                let srow = &s.values[base + r * b..base + (r + 1) * b];
-                let orow = &mut out.data[(bi * b + r) * d..(bi * b + r + 1) * d];
-                for (c, &sv) in srow.iter().enumerate() {
-                    if sv == 0.0 {
-                        continue;
-                    }
-                    let vrow = v.row(bj * b + c);
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += sv * vv;
+    let lb = s.lb;
+    let row_ptr = &s.row_ptr;
+    let col_idx = &s.col_idx;
+    let values = &s.values;
+    let optr = SendPtr(out.data.as_mut_ptr());
+    exec.par_for_chunks(lb, |rows| {
+        let mut tiles = 0u64;
+        for bi in rows {
+            // SAFETY: output rows bi·B..(bi+1)·B belong to block row `bi`
+            // alone; chunks partition the block rows.
+            let opanel =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(bi * b * d), b * d) };
+            for blk in row_ptr[bi]..row_ptr[bi + 1] {
+                let bj = col_idx[blk];
+                let base = blk * b * b;
+                // Tile-dense multiply: (B×B) tile × (B×d) V panel → (B×d) out panel.
+                for r in 0..b {
+                    let srow = &values[base + r * b..base + (r + 1) * b];
+                    let orow = &mut opanel[r * d..(r + 1) * d];
+                    for (c, &sv) in srow.iter().enumerate() {
+                        if sv == 0.0 {
+                            continue;
+                        }
+                        let vrow = v.row(bj * b + c);
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += sv * vv;
+                        }
                     }
                 }
             }
+            tiles += (row_ptr[bi + 1] - row_ptr[bi]) as u64;
         }
-    }
+        exec.tally().add_mul_add(tiles * (b * b) as u64 * d as u64);
+    });
 }
 
 pub fn spmm_alloc(s: &Bcsr, v: &Mat) -> Mat {

@@ -33,6 +33,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         model,
         train,
         sparsity: SparsityConfig::new(kind, 16, 0.9),
+        exec: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

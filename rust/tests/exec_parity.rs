@@ -1,0 +1,245 @@
+//! Serial ↔ parallel parity for the whole block-sparse pipeline.
+//!
+//! The `exec` determinism contract (DESIGN.md §exec): every kernel's
+//! parallel form writes disjoint outputs with serial per-element order, so
+//! SDDMM / sparse softmax / SpMM / transposed SpMM / backward must match
+//! the serial engine **bit for bit** at every worker count in deterministic
+//! mode — and within 1e-5 otherwise (the non-deterministic mode only
+//! re-chunks reductions; the kernels themselves stay exact, so the loose
+//! tolerance is an upper bound, not an expectation).
+//!
+//! Patterns under test span the full policy zoo: SPION-C/-F/-CF (the paper's
+//! variants), BigBird, and the Reformer/LSH baseline — plus worker counts
+//! {1, 2, 4} including the `workers = 1` no-pool path, which runs the
+//! literal serial loops.
+
+use spion::attention::{
+    dense_mha, dense_mha_with, sparse_attention_train, sparse_attention_train_with, sparse_mha,
+    sparse_mha_with, SparseWorkspace, TrainWorkspace,
+};
+use spion::exec::{Exec, ExecConfig};
+use spion::pattern::bigbird::bigbird;
+use spion::pattern::lsh::lsh_pattern;
+use spion::pattern::spion::{generate_pattern, synth_attention_scores, PatternConfig};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::sparse::backward::{spmm_t, spmm_t_with};
+use spion::sparse::bcsr::Bcsr;
+use spion::sparse::sddmm::{sddmm, sddmm_with};
+use spion::sparse::softmax::{sparse_softmax, sparse_softmax_with};
+use spion::sparse::spmm::{spmm, spmm_with};
+use spion::tensor::Mat;
+use spion::util::quickcheck::{assert_allclose, QuickCheck};
+use spion::util::rng::Rng;
+
+/// Build the executed-against contexts: serial plus pooled variants.
+fn contexts(deterministic: bool) -> Vec<Exec> {
+    [1usize, 2, 4]
+        .into_iter()
+        .map(|workers| Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic }))
+        .collect()
+}
+
+/// A pattern from every policy the engine supports, at block size `block`.
+fn pattern_zoo(rng: &mut Rng, l: usize, block: usize) -> Vec<(String, BlockMask)> {
+    let scores = synth_attention_scores(l, 0.8, 0.4, &[l / 3], 0.05, rng);
+    let lb = l / block;
+    let mut zoo = Vec::new();
+    for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+        let cfg = PatternConfig { variant, block, filter: 5, alpha: 0.5 + 0.45 * rng.f64() };
+        zoo.push((variant.name().to_string(), generate_pattern(&scores, &cfg)));
+    }
+    zoo.push(("BigBird".into(), bigbird(lb, block, &Default::default(), rng)));
+    zoo.push(("Reformer".into(), lsh_pattern(&scores, block, &Default::default(), rng)));
+    zoo
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn forward_kernels_bit_identical_across_workers() {
+    QuickCheck::new().cases(12).run("fwd kernel parity", |rng| {
+        let block = [4usize, 8][rng.below(2)];
+        let lb = 3 + rng.below(5);
+        let l = lb * block;
+        let d = 1 + rng.below(12);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 1.0, rng);
+        let k = Mat::random_normal(l, d, 1.0, rng);
+        let v = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            // Serial reference through the legacy entry points.
+            let mut s_ref = Bcsr::from_mask(&mask);
+            sddmm(&q, &k, &mut s_ref, scale);
+            let logits_ref = s_ref.clone();
+            sparse_softmax(&mut s_ref, 1.0, true);
+            let mut out_ref = Mat::zeros(l, d);
+            spmm(&s_ref, &v, &mut out_ref);
+            let mut t_ref = Mat::zeros(l, d);
+            spmm_t(&s_ref, &v, &mut t_ref);
+
+            for exec in contexts(true) {
+                let tag = format!("{name} w={}", exec.workers());
+                let mut s = Bcsr::from_mask(&mask);
+                sddmm_with(&exec, &q, &k, &mut s, scale);
+                assert_bits_eq(&s.values, &logits_ref.values, &format!("sddmm {tag}"));
+                sparse_softmax_with(&exec, &mut s, 1.0, true);
+                assert_bits_eq(&s.values, &s_ref.values, &format!("softmax {tag}"));
+                let mut out = Mat::zeros(l, d);
+                spmm_with(&exec, &s, &v, &mut out);
+                assert_bits_eq(&out.data, &out_ref.data, &format!("spmm {tag}"));
+                let mut t = Mat::zeros(l, d);
+                spmm_t_with(&exec, &s, &v, &mut t);
+                assert_bits_eq(&t.data, &t_ref.data, &format!("spmm_t {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn backward_bit_identical_across_workers() {
+    QuickCheck::new().cases(10).run("bwd parity", |rng| {
+        let block = [4usize, 8][rng.below(2)];
+        let lb = 2 + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(8);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.8, rng);
+        let k = Mat::random_normal(l, d, 0.8, rng);
+        let v = Mat::random_normal(l, d, 0.8, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let mut ws_ref = TrainWorkspace::new(&mask, d);
+            sparse_attention_train(&q, &k, &v, scale, &cot, &mut ws_ref);
+
+            for exec in contexts(true) {
+                let tag = format!("{name} w={}", exec.workers());
+                let mut ws = TrainWorkspace::new(&mask, d);
+                sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+                assert_bits_eq(&ws.fwd.ctx.data, &ws_ref.fwd.ctx.data, &format!("ctx {tag}"));
+                assert_bits_eq(&ws.dq.data, &ws_ref.dq.data, &format!("dQ {tag}"));
+                assert_bits_eq(&ws.dk.data, &ws_ref.dk.data, &format!("dK {tag}"));
+                assert_bits_eq(&ws.dv.data, &ws_ref.dv.data, &format!("dV {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mha_level_parity_dense_and_sparse() {
+    QuickCheck::new().cases(8).run("mha parity", |rng| {
+        let heads = [1usize, 2, 4][rng.below(3)];
+        let block = 4;
+        let lb = 3 + rng.below(4);
+        let l = lb * block;
+        let d = heads * (2 + rng.below(6));
+        let q = Mat::random_normal(l, d, 1.0, rng);
+        let k = Mat::random_normal(l, d, 1.0, rng);
+        let v = Mat::random_normal(l, d, 1.0, rng);
+
+        // Dense MHA: context and head-averaged scores.
+        let (out_ref, scores_ref) = dense_mha(&q, &k, &v, heads);
+        for exec in contexts(true) {
+            let (out, scores) = dense_mha_with(&exec, &q, &k, &v, heads);
+            assert_bits_eq(&out.data, &out_ref.data, &format!("dense ctx w={}", exec.workers()));
+            assert_bits_eq(
+                &scores.data,
+                &scores_ref.data,
+                &format!("dense A^s w={}", exec.workers()),
+            );
+        }
+
+        // Sparse MHA across the pattern zoo (shared per-layer mask).
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let mk_ws =
+                |m: &BlockMask| -> Vec<SparseWorkspace> {
+                    (0..heads).map(|_| SparseWorkspace::new(m, d / heads)).collect()
+                };
+            let mut ws_ref = mk_ws(&mask);
+            let sparse_ref = sparse_mha(&q, &k, &v, heads, &mut ws_ref);
+            for exec in contexts(true) {
+                let mut ws = mk_ws(&mask);
+                let sparse = sparse_mha_with(&exec, &q, &k, &v, heads, &mut ws);
+                assert_bits_eq(
+                    &sparse.data,
+                    &sparse_ref.data,
+                    &format!("sparse mha {name} w={}", exec.workers()),
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn non_deterministic_mode_stays_within_tolerance() {
+    // Non-deterministic mode only changes reduction chunking; the kernels
+    // keep disjoint writes, so outputs still land within (and in practice
+    // at) the documented 1e-5 envelope of the serial engine.
+    QuickCheck::new().cases(8).run("non-det tolerance", |rng| {
+        let block = 4;
+        let lb = 3 + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(8);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 1.0, rng);
+        let k = Mat::random_normal(l, d, 1.0, rng);
+        let v = Mat::random_normal(l, d, 1.0, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let mut ws_ref = TrainWorkspace::new(&mask, d);
+            sparse_attention_train(&q, &k, &v, scale, &cot, &mut ws_ref);
+            for exec in contexts(false) {
+                let mut ws = TrainWorkspace::new(&mask, d);
+                sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+                for (what, got, want) in [
+                    ("ctx", &ws.fwd.ctx, &ws_ref.fwd.ctx),
+                    ("dq", &ws.dq, &ws_ref.dq),
+                    ("dk", &ws.dk, &ws_ref.dk),
+                    ("dv", &ws.dv, &ws_ref.dv),
+                ] {
+                    assert_allclose(&got.data, &want.data, 1e-5, 1e-6).unwrap_or_else(|e| {
+                        panic!("{name} {what} w={}: {e}", exec.workers())
+                    });
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn op_tally_aggregates_identically_across_workers() {
+    // The per-worker tallies must sum to the same totals no matter how the
+    // chunks land — op accounting is scheduling-independent.
+    let mut rng = Rng::new(99);
+    let block = 4;
+    let l = 32;
+    let d = 8;
+    let q = Mat::random_normal(l, d, 1.0, &mut rng);
+    let k = Mat::random_normal(l, d, 1.0, &mut rng);
+    let (_, mask) = pattern_zoo(&mut rng, l, block).remove(2); // SPION-CF
+    let mut totals = Vec::new();
+    for exec in contexts(true) {
+        exec.reset_ops();
+        let mut s = Bcsr::from_mask(&mask);
+        sddmm_with(&exec, &q, &k, &mut s, 1.0);
+        sparse_softmax_with(&exec, &mut s, 1.0, true);
+        totals.push(exec.op_counter());
+    }
+    assert!(totals[0].flops() > 0, "tally recorded work");
+    for t in &totals[1..] {
+        assert_eq!(t.mul_add, totals[0].mul_add);
+        assert_eq!(t.exp, totals[0].exp);
+        assert_eq!(t.cmp, totals[0].cmp);
+    }
+}

@@ -1,0 +1,219 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build is fully vendored (no network registry), so this crate provides
+//! the API subset the SPION tree actually uses: [`Error`] (a context-chained
+//! dynamic error), the [`anyhow!`] / [`bail!`] macros, the [`Result`] alias
+//! with a defaulted error type, and the [`Context`] extension trait for
+//! `Result<T, E: std::error::Error>`.
+//!
+//! Formatting matches the upstream conventions the callers rely on:
+//! `{}` prints the outermost context, `{:#}` prints the whole chain
+//! separated by `": "`, and `{:?}` prints the chain in the multi-line
+//! `Caused by:` style.
+
+use std::fmt;
+
+/// A dynamic error: a stack of context messages, outermost first. The last
+/// entry is the root cause.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Self { stack: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional (outermost) context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// Capture a `std::error::Error`, preserving its `source()` chain as
+    /// context entries.
+    pub fn from_std(err: impl std::error::Error) -> Self {
+        let mut stack = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Self { stack }
+    }
+
+    /// The root-cause message (innermost entry).
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain on one line.
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.stack[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error` — like
+// upstream anyhow, this keeps the blanket `From<E: std::error::Error>` impl
+// below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::from_std(err)
+    }
+}
+
+/// `anyhow::Result<T>` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// whose error is a standard error type.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from_std(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("opening config: "), "{full}");
+        assert!(full.contains("missing thing"), "{full}");
+    }
+
+    #[test]
+    fn debug_shows_causes() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("root"), "{d}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.root_cause(), "missing thing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero is not allowed");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+        let from_string = anyhow!(String::from("plain message"));
+        assert_eq!(format!("{from_string}"), "plain message");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+    }
+}

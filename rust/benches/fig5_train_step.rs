@@ -24,7 +24,7 @@ use spion::attention::{
     sparse_attention_head_with, sparse_attention_train_with, SparseWorkspace, TrainWorkspace,
 };
 use spion::config::PatternKind;
-use spion::exec::{Exec, ExecConfig};
+use spion::exec::{Exec, ExecConfig, KernelConfig};
 use spion::metrics::{attention_bytes_dense, attention_bytes_sparse};
 use spion::pattern::BlockMask;
 use spion::util::bench::{bench, BenchStats, Report};
@@ -74,7 +74,7 @@ fn main() {
     let mut rng = Rng::new(0xF15);
     let mut report = Report::new(
         "Fig. 5 — training step time / attention memory / inference time (attention core, per head)",
-        &["task", "model", "workers", "density", "train step", "vs dense", "memory", "mem red.", "infer", "vs dense"],
+        &["task", "model", "workers", "kernel", "density", "train step", "vs dense", "memory", "mem red.", "infer", "vs dense"],
     );
 
     for shape in task_shapes() {
@@ -91,6 +91,7 @@ fn main() {
             shape.name.to_string(),
             "Original".to_string(),
             "1".to_string(),
+            "-".to_string(),
             "1.000".to_string(),
             format!("{:.2} ms", dense_train.median_ms),
             "1.00x".to_string(),
@@ -109,24 +110,32 @@ fn main() {
             .map(|kind| (kind, pattern_for(kind, &shape, &scores, &mut rng)))
             .collect();
 
+        // Fused-vs-unfused axis: every sparse model is measured through
+        // both kernel regimes at every worker count.
         for &workers in &workers_axis {
-            let exec = Exec::new(ExecConfig::with_workers(workers));
-            for (kind, mask) in &masks {
-                let kind = *kind;
-                let (train, infer, mem) =
-                    bench_model(kind, &shape, mask, &exec, &q, &k, &v, &cot);
-                report.row(vec![
-                    shape.name.to_string(),
-                    kind.name().to_string(),
-                    workers.to_string(),
-                    format!("{:.3}", mask.density()),
-                    format!("{:.2} ms", train.median_ms),
-                    format!("{:.2}x", dense_train.median_ms / train.median_ms),
-                    human_bytes(mem),
-                    format!("{:.2}x", dense_mem as f64 / mem as f64),
-                    format!("{:.2} ms", infer.median_ms),
-                    format!("{:.2}x", dense_infer.median_ms / infer.median_ms),
-                ]);
+            for (kname, kernel) in [
+                ("fused", KernelConfig { fused: true, simd: true }),
+                ("unfused", KernelConfig { fused: false, simd: false }),
+            ] {
+                let exec = Exec::new(ExecConfig { workers, kernel, ..Default::default() });
+                for (kind, mask) in &masks {
+                    let kind = *kind;
+                    let (train, infer, mem) =
+                        bench_model(kind, &shape, mask, &exec, &q, &k, &v, &cot);
+                    report.row(vec![
+                        shape.name.to_string(),
+                        kind.name().to_string(),
+                        workers.to_string(),
+                        kname.to_string(),
+                        format!("{:.3}", mask.density()),
+                        format!("{:.2} ms", train.median_ms),
+                        format!("{:.2}x", dense_train.median_ms / train.median_ms),
+                        human_bytes(mem),
+                        format!("{:.2}x", dense_mem as f64 / mem as f64),
+                        format!("{:.2} ms", infer.median_ms),
+                        format!("{:.2}x", dense_infer.median_ms / infer.median_ms),
+                    ]);
+                }
             }
         }
     }

@@ -1,0 +1,188 @@
+//! Per-kernel GFLOP/s microbench for the block-sparse attention hot path —
+//! the perf-trajectory seed for the fused/SIMD kernel layer (ISSUE 2).
+//!
+//! Measures, on the fig5 tiny listops shape (L=512) with a SPION-CF
+//! pattern at B=8 (plus a B=4 row for the second specialized dispatch):
+//! * the three unfused kernels in isolation (sddmm / softmax / spmm);
+//! * the unfused three-pass pipeline (their sum, measured as one pass);
+//! * the fused per-block-row pipeline, SIMD on and off.
+//!
+//! The isolated softmax row re-copies the logits each iteration (the kernel
+//! is in-place destructive); the memcpy is a few percent of the kernel time
+//! and is noted here rather than subtracted. Effective GFLOP/s are computed
+//! against the *unfused* op counts for every pipeline row, so fused rates
+//! are directly comparable (same work, less time ⇒ higher rate):
+//! * sddmm / spmm: `2·nnzb·B²·d` flops each;
+//! * softmax: `5` ops per stored entry (cmp + 2 exp + sub + mul; the fused
+//!   path executes 4 — it caches the exp — but is charged the same work).
+//!
+//! Writes `BENCH_kernels.json` (acceptance evidence: fused SIMD ≥ 1.5× the
+//! unfused scalar pipeline at workers=1) next to the cargo cwd.
+//!
+//! Run: cargo bench --bench kernel_gflops [-- --workers 1,2,4]
+
+mod common;
+
+use common::worker_counts;
+use spion::attention::{sparse_attention_head_with, SparseWorkspace};
+use spion::exec::{Exec, ExecConfig, KernelConfig};
+use spion::pattern::spion::{generate_pattern, synth_attention_scores, PatternConfig};
+use spion::pattern::SpionVariant;
+use spion::sparse::bcsr::Bcsr;
+use spion::sparse::sddmm::sddmm_with;
+use spion::sparse::softmax::sparse_softmax_with;
+use spion::sparse::spmm::spmm_with;
+use spion::tensor::Mat;
+use spion::util::bench::{bench, BenchStats, Report};
+use spion::util::rng::Rng;
+
+const L: usize = 512;
+const DH: usize = 32;
+const ALPHA: f64 = 0.92;
+
+struct Row {
+    workers: usize,
+    block: usize,
+    kernel: &'static str,
+    stats: BenchStats,
+    gflops: f64,
+}
+
+fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
+    Exec::new(ExecConfig { workers, kernel, ..Default::default() })
+}
+
+fn bench_block_size(
+    block: usize,
+    workers_axis: &[usize],
+    rng: &mut Rng,
+    rows: &mut Vec<Row>,
+) -> (f64, f64) {
+    let scores = synth_attention_scores(L, 1.0, 0.3, &[L / 3, 2 * L / 3], 0.05, rng);
+    let cfg = PatternConfig {
+        variant: SpionVariant::CF,
+        block,
+        filter: common::scaled_filter(L),
+        alpha: ALPHA,
+    };
+    let mask = generate_pattern(&scores, &cfg);
+    let q = Mat::random_normal(L, DH, 1.0, rng);
+    let k = Mat::random_normal(L, DH, 1.0, rng);
+    let v = Mat::random_normal(L, DH, 1.0, rng);
+    let scale = 1.0 / (DH as f32).sqrt();
+
+    let s0 = Bcsr::from_mask(&mask);
+    let nnzb = s0.nnz_blocks() as f64;
+    let stored = nnzb * (block * block) as f64;
+    let sddmm_flops = 2.0 * stored * DH as f64;
+    let spmm_flops = 2.0 * stored * DH as f64;
+    let softmax_flops = 5.0 * stored;
+    let pipeline_flops = sddmm_flops + softmax_flops + spmm_flops;
+    let gfl = |flops: f64, st: &BenchStats| flops / (st.median_ms * 1e-3) / 1e9;
+
+    let mut fused_w1_ms = f64::NAN;
+    let mut unfused_w1_ms = f64::NAN;
+    for &workers in workers_axis {
+        let unfused = exec_with(workers, KernelConfig { fused: false, simd: false });
+        let fused = exec_with(workers, KernelConfig { fused: true, simd: true });
+        let fused_scalar = exec_with(workers, KernelConfig { fused: true, simd: false });
+
+        // Isolated kernels (unfused reference forms).
+        let mut s = Bcsr::from_mask(&mask);
+        let st = bench("sddmm", || sddmm_with(&unfused, &q, &k, &mut s, scale));
+        rows.push(Row { workers, block, kernel: "sddmm", gflops: gfl(sddmm_flops, &st), stats: st });
+
+        sddmm_with(&unfused, &q, &k, &mut s, scale);
+        let logits = s.values.clone();
+        let st = bench("softmax", || {
+            s.values.copy_from_slice(&logits); // in-place kernel: restore logits
+            sparse_softmax_with(&unfused, &mut s, 1.0, true);
+        });
+        rows.push(Row { workers, block, kernel: "softmax", gflops: gfl(softmax_flops, &st), stats: st });
+
+        let mut out = Mat::zeros(L, DH);
+        let st = bench("spmm", || spmm_with(&unfused, &s, &v, &mut out));
+        rows.push(Row { workers, block, kernel: "spmm", gflops: gfl(spmm_flops, &st), stats: st });
+
+        // Whole pipelines through the head entry point (kernel routing).
+        for (name, exec) in
+            [("unfused", &unfused), ("fused", &fused), ("fused-noSIMD", &fused_scalar)]
+        {
+            let mut ws = SparseWorkspace::new(&mask, DH);
+            let st = bench(name, || {
+                let o = sparse_attention_head_with(exec, &q, &k, &v, scale, &mut ws);
+                std::hint::black_box(&o);
+            });
+            if workers == 1 && block == 8 {
+                match name {
+                    "fused" => fused_w1_ms = st.median_ms,
+                    "unfused" => unfused_w1_ms = st.median_ms,
+                    _ => {}
+                }
+            }
+            rows.push(Row {
+                workers,
+                block,
+                kernel: name,
+                gflops: gfl(pipeline_flops, &st),
+                stats: st,
+            });
+        }
+    }
+    (unfused_w1_ms, fused_w1_ms)
+}
+
+fn main() {
+    let workers_axis = worker_counts();
+    let mut rng = Rng::new(0x5EED);
+    let mut rows = Vec::new();
+    let mut speedup_w1 = f64::NAN;
+    for block in [8usize, 4] {
+        let (unf, fus) = bench_block_size(block, &workers_axis, &mut rng, &mut rows);
+        if block == 8 {
+            speedup_w1 = unf / fus;
+        }
+    }
+
+    let mut report = Report::new(
+        "Kernel GFLOP/s — block-sparse attention microkernels (L=512, d=32, SPION-CF)",
+        &["B", "workers", "kernel", "median", "GFLOP/s"],
+    );
+    for r in &rows {
+        report.row(vec![
+            r.block.to_string(),
+            r.workers.to_string(),
+            r.kernel.to_string(),
+            format!("{:.3} ms", r.stats.median_ms),
+            format!("{:.2}", r.gflops),
+        ]);
+    }
+    report.print();
+    println!("\nfused-SIMD speedup vs unfused pipeline (L=512, B=8, workers=1): {speedup_w1:.2}x");
+    report.save_csv("results/kernel_gflops.csv");
+
+    // Machine-readable evidence for the perf trajectory.
+    let mut json = String::from("{\n  \"bench\": \"kernel_gflops\",\n  \"provenance\": \"measured\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"l\": {L}, \"dh\": {DH}, \"alpha\": {ALPHA}, \"blocks\": [8, 4], \"workers\": {workers_axis:?}}},\n"
+    ));
+    // Only present when the workers axis included 1 (NaN is not JSON).
+    if speedup_w1.is_finite() {
+        json.push_str(&format!("  \"fused_speedup_w1_b8\": {speedup_w1:.3},\n"));
+    }
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"block\": {}, \"workers\": {}, \"kernel\": \"{}\", \"median_ms\": {:.4}, \"gflops\": {:.3}}}{}\n",
+            r.block,
+            r.workers,
+            r.kernel,
+            r.stats.median_ms,
+            r.gflops,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_kernels.json", &json).expect("writing BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
+}

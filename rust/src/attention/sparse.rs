@@ -1,17 +1,29 @@
 //! Sparse MHA forward — Algorithm 5: SDDMM → SparseSoftmax → SpMM over the
-//! block pattern `P`. The `SparseWorkspace` pre-allocates the block-CSR
-//! buffers once per (pattern, head) so the per-step hot path is
-//! allocation-free (the CPU analogue of the paper reusing device buffers).
+//! block pattern `P`. Two kernel regimes, selected by the execution
+//! context's [`crate::exec::KernelConfig`]:
+//!
+//! * **fused** (default): the per-block-row pipeline in
+//!   [`crate::sparse::kernel::fused`] — one sweep per block row with the
+//!   tiles held in a per-worker scratch arena (the CPU analogue of the
+//!   paper's fused GPU kernel, Algorithm 6);
+//! * **unfused**: the legacy three-pass kernels (reference semantics).
+//!
+//! The workspaces ([`SparseWorkspace`], [`MhaWorkspace`],
+//! [`TrainWorkspace`]) pre-allocate every buffer the hot path needs —
+//! block-CSR storage, context/output matrices, and the per-head Q/K/V
+//! column slices — so repeated serve/train steps never touch the global
+//! allocator (the CPU analogue of the paper reusing device buffers).
 
 use crate::exec::Exec;
 use crate::pattern::BlockMask;
 use crate::sparse::bcsr::Bcsr;
+use crate::sparse::kernel::{fused_attention_head_with, TileDispatch};
 use crate::sparse::sddmm::sddmm_with;
 use crate::sparse::softmax::sparse_softmax_with;
 use crate::sparse::spmm::spmm_with;
 use crate::tensor::Mat;
 
-/// Reusable buffers for one layer's sparse MHA.
+/// Reusable buffers for one head of one layer's sparse MHA.
 #[derive(Debug, Clone)]
 pub struct SparseWorkspace {
     pub s: Bcsr,
@@ -19,6 +31,9 @@ pub struct SparseWorkspace {
     /// Keep the implicit-zero softmax correction (Alg. 6 line 15). On by
     /// default; exposed for the ablation bench.
     pub zero_correction: bool,
+    /// Fused-sweep specialization for this pattern's block size, chosen
+    /// once here at pattern-build time (see `sparse::kernel::dispatch`).
+    pub dispatch: TileDispatch,
 }
 
 impl SparseWorkspace {
@@ -27,6 +42,7 @@ impl SparseWorkspace {
             s: Bcsr::from_mask(mask),
             ctx: Mat::zeros(mask.seq_len(), head_dim),
             zero_correction: true,
+            dispatch: TileDispatch::for_block(mask.block),
         }
     }
 }
@@ -43,9 +59,11 @@ pub fn sparse_attention_head<'w>(
     sparse_attention_head_with(Exec::serial_ref(), q, k, v, scale, ws)
 }
 
-/// One head on an execution context: all three kernels run block-row
-/// parallel (Algorithm 5 lines 5–7). Bit-identical to the serial head at
-/// any worker count.
+/// One head on an execution context (Algorithm 5 lines 5–7), fused or
+/// unfused per `exec.kernel()`. Both regimes are block-row parallel and
+/// bit-identical to their own serial form at any worker count; on return
+/// `ws.s` holds the softmax probabilities and `ws.ctx` the context either
+/// way.
 pub fn sparse_attention_head_with<'w>(
     exec: &Exec,
     q: &Mat,
@@ -54,23 +72,60 @@ pub fn sparse_attention_head_with<'w>(
     scale: f32,
     ws: &'w mut SparseWorkspace,
 ) -> &'w Mat {
-    sddmm_with(exec, q, k, &mut ws.s, scale);
-    sparse_softmax_with(exec, &mut ws.s, 1.0, ws.zero_correction);
-    spmm_with(exec, &ws.s, v, &mut ws.ctx);
+    if exec.kernel().fused {
+        let SparseWorkspace { s, ctx, zero_correction, dispatch } = ws;
+        fused_attention_head_with(exec, q, k, v, scale, s, ctx, *zero_correction, *dispatch);
+    } else {
+        sddmm_with(exec, q, k, &mut ws.s, scale);
+        sparse_softmax_with(exec, &mut ws.s, 1.0, ws.zero_correction);
+        spmm_with(exec, &ws.s, v, &mut ws.ctx);
+    }
     &ws.ctx
 }
 
-/// Full sparse MHA over concatenated Q,K,V (L×D) with H heads sharing one
-/// layer pattern (the paper shares P across heads within a layer — patterns
-/// are generated from the head-averaged A^s).
-pub fn sparse_mha(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    heads: usize,
-    workspaces: &mut [SparseWorkspace],
-) -> Mat {
-    sparse_mha_with(Exec::serial_ref(), q, k, v, heads, workspaces)
+/// Reusable buffers for a full multi-head sparse attention layer: per-head
+/// workspaces plus the concatenated output matrix and the per-head Q/K/V
+/// column slices (hoisted here so the per-step hot path is allocation-free
+/// — these used to be re-allocated on every `sparse_mha_with` call).
+#[derive(Debug, Clone)]
+pub struct MhaWorkspace {
+    pub heads: Vec<SparseWorkspace>,
+    out: Mat,
+    qh: Vec<Mat>,
+    kh: Vec<Mat>,
+    vh: Vec<Mat>,
+}
+
+impl MhaWorkspace {
+    /// All heads share one layer pattern (the paper generates `P` from the
+    /// head-averaged A^s).
+    pub fn new(mask: &BlockMask, heads: usize, d_model: usize) -> Self {
+        assert!(heads > 0 && d_model % heads == 0);
+        let dh = d_model / heads;
+        let l = mask.seq_len();
+        Self {
+            heads: (0..heads).map(|_| SparseWorkspace::new(mask, dh)).collect(),
+            out: Mat::zeros(l, d_model),
+            qh: (0..heads).map(|_| Mat::zeros(l, dh)).collect(),
+            kh: (0..heads).map(|_| Mat::zeros(l, dh)).collect(),
+            vh: (0..heads).map(|_| Mat::zeros(l, dh)).collect(),
+        }
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// The concatenated output of the last `sparse_mha*` call.
+    pub fn out(&self) -> &Mat {
+        &self.out
+    }
+}
+
+/// Full sparse MHA over concatenated Q,K,V (L×D). Returns a borrow of the
+/// workspace's output matrix.
+pub fn sparse_mha<'w>(q: &Mat, k: &Mat, v: &Mat, ws: &'w mut MhaWorkspace) -> &'w Mat {
+    sparse_mha_with(Exec::serial_ref(), q, k, v, ws)
 }
 
 /// Full sparse MHA on an execution context. When the head count can feed
@@ -78,53 +133,45 @@ pub fn sparse_mha(
 /// workspaces are already per-head); otherwise heads run in sequence with
 /// block-row-parallel kernels. Both schedules write disjoint column slices
 /// and run the exact serial per-element code, so the output is
-/// bit-identical either way.
-pub fn sparse_mha_with(
+/// bit-identical either way. Steady-state allocation-free: all scratch
+/// lives in `ws` and the per-worker arenas.
+pub fn sparse_mha_with<'w>(
     exec: &Exec,
     q: &Mat,
     k: &Mat,
     v: &Mat,
-    heads: usize,
-    workspaces: &mut [SparseWorkspace],
-) -> Mat {
+    ws: &'w mut MhaWorkspace,
+) -> &'w Mat {
+    let heads = ws.num_heads();
     let d = q.cols;
     assert!(d % heads == 0);
-    assert_eq!(workspaces.len(), heads);
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
-    let l = q.rows;
-    let mut out = Mat::zeros(l, d);
-    if exec.workers() > 1 && heads >= exec.workers() {
-        // Head-level parallelism: one task per head, serial kernels inside.
-        let slices: Vec<(Mat, Mat, Mat)> = (0..heads)
-            .map(|h| {
-                let (c0, c1) = (h * dh, (h + 1) * dh);
-                (q.col_slice(c0, c1), k.col_slice(c0, c1), v.col_slice(c0, c1))
-            })
-            .collect();
-        let inner = exec.serial_view();
-        exec.par_for_each_mut(workspaces, |h, ws| {
-            let (qh, kh, vh) = &slices[h];
-            sparse_attention_head_with(&inner, qh, kh, vh, scale, ws);
-        });
-        for (h, ws) in workspaces.iter().enumerate() {
-            out.set_col_slice(h * dh, &ws.ctx);
-        }
-    } else {
-        for (h, ws) in workspaces.iter_mut().enumerate() {
+    {
+        let MhaWorkspace { heads: hws, out, qh, kh, vh } = &mut *ws;
+        for h in 0..heads {
             let (c0, c1) = (h * dh, (h + 1) * dh);
-            let ctx = sparse_attention_head_with(
-                exec,
-                &q.col_slice(c0, c1),
-                &k.col_slice(c0, c1),
-                &v.col_slice(c0, c1),
-                scale,
-                ws,
-            );
-            out.set_col_slice(c0, ctx);
+            q.col_slice_into(c0, c1, &mut qh[h]);
+            k.col_slice_into(c0, c1, &mut kh[h]);
+            v.col_slice_into(c0, c1, &mut vh[h]);
+        }
+        if exec.workers() > 1 && heads >= exec.workers() {
+            // Head-level parallelism: one task per head, serial kernels inside.
+            let inner = exec.serial_view();
+            let (qh, kh, vh) = (&*qh, &*kh, &*vh);
+            exec.par_for_each_mut(hws, |h, hw| {
+                sparse_attention_head_with(&inner, &qh[h], &kh[h], &vh[h], scale, hw);
+            });
+        } else {
+            for (h, hw) in hws.iter_mut().enumerate() {
+                sparse_attention_head_with(exec, &qh[h], &kh[h], &vh[h], scale, hw);
+            }
+        }
+        for (h, hw) in hws.iter().enumerate() {
+            out.set_col_slice(h * dh, &hw.ctx);
         }
     }
-    out
+    &ws.out
 }
 
 /// Workspace for a full fwd+bwd training pass of one head (used by the
@@ -165,9 +212,9 @@ pub fn sparse_attention_train(
     sparse_attention_train_with(Exec::serial_ref(), q, k, v, scale, d_out, ws);
 }
 
-/// Training pass on an execution context: forward and backward kernels all
-/// run block-row/-column parallel. Bit-identical to the serial pass at any
-/// worker count.
+/// Training pass on an execution context: the forward routes through the
+/// fused/unfused selection, the backward kernels all run block-row/-column
+/// parallel. Bit-identical to the serial pass at any worker count.
 pub fn sparse_attention_train_with(
     exec: &Exec,
     q: &Mat,
@@ -178,9 +225,7 @@ pub fn sparse_attention_train_with(
     ws: &mut TrainWorkspace,
 ) {
     let TrainWorkspace { fwd, grad_buf, dq, dk, dv } = ws;
-    sddmm_with(exec, q, k, &mut fwd.s, scale);
-    sparse_softmax_with(exec, &mut fwd.s, 1.0, fwd.zero_correction);
-    spmm_with(exec, &fwd.s, v, &mut fwd.ctx);
+    sparse_attention_head_with(exec, q, k, v, scale, fwd);
     crate::sparse::backward::sparse_attention_backward_with(
         exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
     );
@@ -221,11 +266,39 @@ mod tests {
             let k = Mat::random_normal(l, d, 1.0, rng);
             let v = Mat::random_normal(l, d, 1.0, rng);
             let mask = BlockMask::full(lb, block);
-            let mut ws: Vec<_> = (0..heads).map(|_| SparseWorkspace::new(&mask, d / heads)).collect();
-            let got = sparse_mha(&q, &k, &v, heads, &mut ws);
+            let mut ws = MhaWorkspace::new(&mask, heads, d);
+            let got = sparse_mha(&q, &k, &v, &mut ws);
             let (expect, _) = dense_mha(&q, &k, &v, heads);
             assert_allclose(&got.data, &expect.data, 1e-3, 1e-4)
         });
+    }
+
+    #[test]
+    fn fused_and_unfused_heads_agree() {
+        // The two kernel regimes must agree to rounding on every output
+        // (exhaustively covered by tests/kernel_parity.rs; this is the
+        // in-crate smoke check).
+        let mut rng = Rng::new(13);
+        let (lb, block, dh) = (4, 4, 8);
+        let l = lb * block;
+        let q = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let k = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let v = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let mut mask = BlockMask::empty(lb, block);
+        mask.set_diagonal();
+        mask.set(0, 2, true);
+        let fused_exec = Exec::serial(); // default kernel: fused + simd
+        let unfused_exec = Exec::new(crate::exec::ExecConfig {
+            kernel: crate::exec::KernelConfig { fused: false, simd: false },
+            ..Default::default()
+        });
+        let mut ws_f = SparseWorkspace::new(&mask, dh);
+        let mut ws_u = SparseWorkspace::new(&mask, dh);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let got = sparse_attention_head_with(&fused_exec, &q, &k, &v, scale, &mut ws_f).clone();
+        let want = sparse_attention_head_with(&unfused_exec, &q, &k, &v, scale, &mut ws_u);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-6).unwrap();
+        assert_allclose(&ws_f.s.values, &ws_u.s.values, 1e-4, 1e-6).unwrap();
     }
 
     #[test]
@@ -276,6 +349,22 @@ mod tests {
         let q2 = Mat::random_normal(8, 4, 1.0, &mut rng);
         let _ = sparse_attention_head(&q2, &k1, &v1, 0.5, &mut ws);
         let again = sparse_attention_head(&q1, &k1, &v1, 0.5, &mut ws);
+        assert_allclose(&first.data, &again.data, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn mha_workspace_reuse_is_clean() {
+        let mut rng = Rng::new(9);
+        let mask = BlockMask::full(2, 4);
+        let (heads, d) = (2, 8);
+        let mut ws = MhaWorkspace::new(&mask, heads, d);
+        let q1 = Mat::random_normal(8, d, 1.0, &mut rng);
+        let k1 = Mat::random_normal(8, d, 1.0, &mut rng);
+        let v1 = Mat::random_normal(8, d, 1.0, &mut rng);
+        let first = sparse_mha(&q1, &k1, &v1, &mut ws).clone();
+        let q2 = Mat::random_normal(8, d, 1.0, &mut rng);
+        let _ = sparse_mha(&q2, &k1, &v1, &mut ws);
+        let again = sparse_mha(&q1, &k1, &v1, &mut ws);
         assert_allclose(&first.data, &again.data, 1e-6, 1e-7).unwrap();
     }
 }

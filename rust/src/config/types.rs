@@ -342,6 +342,12 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         if let Some(v) = e.get("deterministic").and_then(|v| v.as_bool()) {
             exec.deterministic = v;
         }
+        if let Some(v) = e.get("fused").and_then(|v| v.as_bool()) {
+            exec.kernel.fused = v;
+        }
+        if let Some(v) = e.get("simd").and_then(|v| v.as_bool()) {
+            exec.kernel.simd = v;
+        }
     }
 
     let artifacts_dir = root
@@ -434,7 +440,24 @@ deterministic = false
         assert_eq!(cfg.exec.workers, 4);
         assert_eq!(cfg.exec.chunk_blocks, 2);
         assert!(!cfg.exec.deterministic);
+        assert!(cfg.exec.kernel.fused, "kernel defaults on when unspecified");
+        assert!(cfg.exec.kernel.simd);
         assert!(experiment_from_toml("preset = \"tiny\"\n[exec]\nworkers = -1").is_err());
+    }
+
+    #[test]
+    fn kernel_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[exec]
+fused = false
+simd = false
+"#,
+        )
+        .unwrap();
+        assert!(!cfg.exec.kernel.fused);
+        assert!(!cfg.exec.kernel.simd);
     }
 
     #[test]

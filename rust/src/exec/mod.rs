@@ -30,6 +30,8 @@ pub use counters::OpTally;
 pub use pool::ThreadPool;
 pub use scope::Scope;
 
+pub use crate::sparse::kernel::KernelConfig;
+
 /// Execution-runtime configuration, loadable from `[exec]` in a config TOML
 /// and from `--workers` on the CLI (see `config::types` / `main.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,11 +44,15 @@ pub struct ExecConfig {
     /// Worker-count-independent reduction order (bit-identical results from
     /// 1 to N workers). Costs nothing on the disjoint-write kernel paths.
     pub deterministic: bool,
+    /// Kernel selection: fused per-block-row pipeline + SIMD microkernels
+    /// (both default on; `--fused`/`--simd` on the CLI, `fused`/`simd` in
+    /// the `[exec]` TOML section).
+    pub kernel: KernelConfig,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        Self { workers: 1, chunk_blocks: 0, deterministic: true }
+        Self { workers: 1, chunk_blocks: 0, deterministic: true, kernel: KernelConfig::default() }
     }
 }
 
@@ -123,6 +129,18 @@ impl Exec {
 
     pub fn deterministic(&self) -> bool {
         self.cfg.deterministic
+    }
+
+    /// Kernel-selection knobs for this context (fused pipeline / SIMD).
+    pub fn kernel(&self) -> KernelConfig {
+        self.cfg.kernel
+    }
+
+    /// Run `f` with this worker's scratch arena (per OS thread ⇒ per pool
+    /// worker; see `sparse::kernel::arena` for the ownership rules). Do not
+    /// nest — the fused pipeline acquires the arena once per chunk.
+    pub fn with_scratch<R>(&self, f: impl FnOnce(&mut crate::sparse::kernel::Arena) -> R) -> R {
+        crate::sparse::kernel::arena::with_thread_arena(f)
     }
 
     pub fn config(&self) -> ExecConfig {

@@ -179,8 +179,8 @@ mod tests {
     fn execs() -> Vec<Exec> {
         vec![
             Exec::serial(),
-            Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true }),
-            Exec::new(ExecConfig { workers: 4, chunk_blocks: 3, deterministic: true }),
+            Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true, ..Default::default() }),
+            Exec::new(ExecConfig { workers: 4, chunk_blocks: 3, deterministic: true, ..Default::default() }),
         ]
     }
 
@@ -236,7 +236,7 @@ mod tests {
         };
         let serial = run(&Exec::serial());
         for workers in [2usize, 4] {
-            let exec = Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic: true });
+            let exec = Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic: true, ..Default::default() });
             let got = run(&exec);
             assert_eq!(got.to_bits(), serial.to_bits(), "workers={workers}");
         }
@@ -244,7 +244,7 @@ mod tests {
 
     #[test]
     fn par_for_propagates_panics() {
-        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true });
+        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true, ..Default::default() });
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             exec.par_for(64, |i| {
                 if i == 33 {
@@ -263,7 +263,7 @@ mod tests {
 
     #[test]
     fn nested_par_for_completes() {
-        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true });
+        let exec = Exec::new(ExecConfig { workers: 2, chunk_blocks: 0, deterministic: true, ..Default::default() });
         let total = AtomicU64::new(0);
         exec.par_for(8, |_| {
             exec.par_for(8, |_| {

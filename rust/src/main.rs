@@ -52,7 +52,9 @@ fn print_help() {
          GLOBAL OPTIONS:\n\
          \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
          \x20 --chunk-blocks N   block rows per scheduling chunk (0 = auto)\n\
-         \x20 --deterministic B  worker-count-independent reduction order (default true)\n"
+         \x20 --deterministic B  worker-count-independent reduction order (default true)\n\
+         \x20 --fused B          fused per-block-row attention pipeline (default true)\n\
+         \x20 --simd B           8-lane SIMD microkernels inside the fused path (default true)\n"
     );
 }
 
@@ -63,6 +65,10 @@ fn exec_from_args(args: &Args) -> ExecConfig {
         workers: args.usize_or("workers", d.workers),
         chunk_blocks: args.usize_or("chunk-blocks", d.chunk_blocks),
         deterministic: args.bool_or("deterministic", d.deterministic),
+        kernel: spion::exec::KernelConfig {
+            fused: args.bool_or("fused", d.kernel.fused),
+            simd: args.bool_or("simd", d.kernel.simd),
+        },
     }
 }
 
@@ -80,6 +86,12 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         }
         if args.has("deterministic") {
             exp.exec.deterministic = args.bool_or("deterministic", exp.exec.deterministic);
+        }
+        if args.has("fused") {
+            exp.exec.kernel.fused = args.bool_or("fused", exp.exec.kernel.fused);
+        }
+        if args.has("simd") {
+            exp.exec.kernel.simd = args.bool_or("simd", exp.exec.kernel.simd);
         }
         return Ok(exp);
     }
@@ -229,15 +241,20 @@ fn run_serve(args: &Args) -> Result<()> {
     };
     let kind = PatternKind::parse(&args.str_or("kind", "dense"))
         .ok_or_else(|| anyhow::anyhow!("unknown --kind"))?;
+    // Kernel config (--fused/--simd) flows into every worker's encoder
+    // clone; request-level parallelism stays on the serve pool, so the
+    // per-encoder exec is serial (workers: 1).
+    let ecfg = exec_from_args(args);
+    let kernel_exec = Exec::new(ExecConfig { workers: 1, ..ecfg });
     let encoder = match kind {
-        PatternKind::Dense => Encoder::new(params, model.heads),
+        PatternKind::Dense => Encoder::new(params, model.heads).with_exec(kernel_exec),
         _ => {
             let exp = ExperimentConfig {
                 task,
                 model: model.clone(),
                 train: TrainConfig::default(),
                 sparsity: SparsityConfig::for_model(kind, task, &model),
-                exec: exec_from_args(args),
+                exec: ecfg,
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);
@@ -251,11 +268,16 @@ fn run_serve(args: &Args) -> Result<()> {
             let masks = spion::coordinator::trainer::generate_masks_for(&exp, &scores)?;
             let d: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
             println!("serving with {} pattern, mean density {d:.3}", kind.name());
-            Encoder::new(params, model.heads).with_masks(masks)
+            Encoder::new(params, model.heads).with_masks(masks).with_exec(kernel_exec)
         }
     };
-    let serve_workers = exec_from_args(args).resolved_workers();
-    println!("serving with {serve_workers} worker(s)");
+    let serve_workers = ecfg.resolved_workers();
+    let kcfg = ecfg.kernel;
+    println!(
+        "serving with {serve_workers} worker(s), kernels: {}{}",
+        if kcfg.fused { "fused" } else { "unfused" },
+        if kcfg.fused && kcfg.simd { "+simd" } else { "" },
+    );
     let server = InferenceServer::start_with_workers(
         encoder,
         BatchPolicy {

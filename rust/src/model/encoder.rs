@@ -1,7 +1,8 @@
 //! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`],
 //! with either dense MHA or the block-sparse engine (Algorithm 5).
 
-use crate::attention::{dense_mha, sparse_mha, SparseWorkspace};
+use crate::attention::{dense_mha, sparse_mha_with, MhaWorkspace};
+use crate::exec::Exec;
 use crate::pattern::BlockMask;
 use crate::tensor::ops::{add_bias, layernorm, mean_rows, relu};
 use crate::tensor::Mat;
@@ -12,33 +13,40 @@ const LN_EPS: f32 = 1e-6; // matches python/compile/model.py
 
 /// Cloneable so the serving layer can hand each pool worker its own
 /// instance (parameters and workspaces are deep-copied; workspaces are
-/// mutable scratch and must never be shared across workers).
+/// mutable scratch and must never be shared across workers; the exec
+/// handle is shared — it is a cheap Arc clone).
 #[derive(Clone)]
 pub struct Encoder {
     pub params: ModelParams,
     pub heads: usize,
-    /// Per-layer sparse workspaces; None = dense attention.
-    sparse: Option<Vec<Vec<SparseWorkspace>>>,
+    /// Per-layer sparse MHA workspaces; None = dense attention.
+    sparse: Option<Vec<MhaWorkspace>>,
     masks: Option<Vec<BlockMask>>,
+    /// Execution context for the attention kernels (kernel selection +
+    /// intra-request parallelism). Default: the process serial context,
+    /// i.e. fused SIMD kernels, request-level parallelism only.
+    exec: Exec,
 }
 
 impl Encoder {
     pub fn new(params: ModelParams, heads: usize) -> Self {
         assert_eq!(params.d_model() % heads, 0);
-        Self { params, heads, sparse: None, masks: None }
+        Self { params, heads, sparse: None, masks: None, exec: Exec::serial_ref().clone() }
     }
 
     /// Switch to sparse attention with per-layer masks.
     pub fn with_masks(mut self, masks: Vec<BlockMask>) -> Self {
         assert_eq!(masks.len(), self.params.layers.len());
-        let dh = self.params.d_model() / self.heads;
-        self.sparse = Some(
-            masks
-                .iter()
-                .map(|m| (0..self.heads).map(|_| SparseWorkspace::new(m, dh)).collect())
-                .collect(),
-        );
+        let d = self.params.d_model();
+        self.sparse = Some(masks.iter().map(|m| MhaWorkspace::new(m, self.heads, d)).collect());
         self.masks = Some(masks);
+        self
+    }
+
+    /// Run the attention kernels on `exec` (serve path: `--fused`/`--simd`
+    /// and per-request worker parallelism flow in through here).
+    pub fn with_exec(mut self, exec: Exec) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -63,18 +71,22 @@ impl Encoder {
             }
         }
         let mut scores_out = Vec::new();
+        let exec = self.exec.clone();
         for (n, lp) in p.layers.iter().enumerate() {
             let x = layernorm(&e, &lp.ln1_g, &lp.ln1_b, LN_EPS);
             let q = x.matmul(&lp.wq);
             let k = x.matmul(&lp.wk);
             let v = x.matmul(&lp.wv);
-            let a = match &mut self.sparse {
+            let a_dense;
+            let a: &Mat = match &mut self.sparse {
                 None => {
                     let (a, s) = dense_mha(&q, &k, &v, self.heads);
                     scores_out.push(s);
-                    a
+                    a_dense = a;
+                    &a_dense
                 }
-                Some(ws) => sparse_mha(&q, &k, &v, self.heads, &mut ws[n]),
+                // Borrow of the workspace output — no per-layer allocation.
+                Some(ws) => sparse_mha_with(&exec, &q, &k, &v, &mut ws[n]),
             };
             let mut o = a.matmul(&lp.wo);
             o.add_assign(&e);

@@ -59,17 +59,17 @@ pub fn spmm_t_with(exec: &Exec, s: &Bcsr, x: &Mat, out: &mut Mat) {
             for &(bi, blk) in &entries[col_ptr[bj]..col_ptr[bj + 1]] {
                 let (bi, blk) = (bi as usize, blk as usize);
                 let base = blk * b * b;
+                // Branchless AXPY rows (see spmm.rs): the zero-skip branch
+                // defeats vectorization, and accumulating exact zeros —
+                // common here, since this kernel also runs over signed dZ
+                // gradient tiles — is a numerical no-op. Elementwise
+                // unrolling keeps every output bit identical.
                 for r in 0..b {
                     let srow = &values[base + r * b..base + (r + 1) * b];
                     let xrow = x.row(bi * b + r);
                     for (c, &sv) in srow.iter().enumerate() {
-                        if sv == 0.0 {
-                            continue;
-                        }
                         let orow = &mut opanel[c * d..(c + 1) * d];
-                        for (o, &xv) in orow.iter_mut().zip(xrow) {
-                            *o += sv * xv;
-                        }
+                        super::kernel::microkernel::axpy(sv, xrow, orow);
                     }
                 }
             }

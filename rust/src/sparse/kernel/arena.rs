@@ -1,0 +1,131 @@
+//! Per-worker scratch arenas for the fused kernel pipeline.
+//!
+//! A bump allocator over one growable `Vec<f32>`: `reset()` rewinds the
+//! cursor, `alloc(n)` hands out the next `n` floats (growing the backing
+//! store only until the high-water mark stabilizes — steady state is
+//! allocation-free). One arena lives per OS thread (`with_thread_arena`),
+//! which makes it per-*worker* on the exec pool: pool workers are threads,
+//! so no two tasks ever share an arena and no locking is needed. Threads
+//! outside any pool (the caller of a serial `Exec`, serve workers) each get
+//! their own arena the same way.
+//!
+//! ## Ownership rules (DESIGN.md §Microkernels & fusion)
+//!
+//! * A slice returned by [`Arena::alloc`] is valid until the next `reset`
+//!   on the same arena; the borrow checker enforces that it cannot outlive
+//!   the `with_thread_arena` scope.
+//! * Arena contents are **scratch**: nothing may be read across block rows,
+//!   and the fused pipeline resets the arena per block row.
+//! * `alloc` zero-fills only newly grown storage; callers must treat the
+//!   slice as uninitialized data and fully overwrite it.
+
+use std::cell::RefCell;
+
+#[derive(Debug, Default)]
+pub struct Arena {
+    buf: Vec<f32>,
+    used: usize,
+    high: usize,
+}
+
+impl Arena {
+    pub const fn new() -> Self {
+        Self { buf: Vec::new(), used: 0, high: 0 }
+    }
+
+    /// Rewind the bump cursor; existing contents become reusable scratch.
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    /// Bump-allocate `n` floats. Contents are arbitrary stale scratch —
+    /// callers overwrite before reading.
+    pub fn alloc(&mut self, n: usize) -> &mut [f32] {
+        let start = self.used;
+        let end = start + n;
+        if self.buf.len() < end {
+            self.buf.resize(end, 0.0);
+        }
+        self.used = end;
+        self.high = self.high.max(end);
+        &mut self.buf[start..end]
+    }
+
+    /// High-water mark in floats since construction — the steady-state
+    /// scratch footprint of this worker.
+    pub fn high_water(&self) -> usize {
+        self.high
+    }
+
+    /// Currently reserved backing capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+thread_local! {
+    static THREAD_ARENA: RefCell<Arena> = const { RefCell::new(Arena::new()) };
+}
+
+/// Run `f` with the calling thread's arena. Reentrant calls are a bug (the
+/// inner call would see a locked RefCell and panic) — the fused pipeline
+/// acquires the arena exactly once per scheduling chunk.
+pub fn with_thread_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    THREAD_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_reset_reuse() {
+        let mut a = Arena::new();
+        let s = a.alloc(16);
+        assert_eq!(s.len(), 16);
+        s[0] = 1.0;
+        let s2 = a.alloc(8);
+        assert_eq!(s2.len(), 8);
+        assert_eq!(a.high_water(), 24);
+        a.reset();
+        // Reused storage: same backing, stale contents are allowed.
+        let s3 = a.alloc(16);
+        assert_eq!(s3.len(), 16);
+        assert_eq!(s3[0], 1.0, "scratch is reused, not cleared");
+        assert_eq!(a.high_water(), 24, "no growth on reuse");
+    }
+
+    #[test]
+    fn steady_state_capacity_stabilizes() {
+        let mut a = Arena::new();
+        for _ in 0..100 {
+            a.reset();
+            let _ = a.alloc(256);
+        }
+        assert_eq!(a.high_water(), 256);
+        assert_eq!(a.capacity_bytes(), 256 * 4);
+    }
+
+    #[test]
+    fn thread_arenas_are_independent() {
+        with_thread_arena(|a| {
+            a.reset();
+            a.alloc(32)[0] = 7.0;
+        });
+        let other = std::thread::spawn(|| {
+            with_thread_arena(|a| {
+                a.reset();
+                let s = a.alloc(32);
+                s[0] = 9.0;
+                s[0]
+            })
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other, 9.0);
+        with_thread_arena(|a| {
+            a.reset();
+            assert_eq!(a.alloc(32)[0], 7.0, "this thread's scratch untouched");
+        });
+    }
+}

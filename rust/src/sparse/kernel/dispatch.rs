@@ -1,0 +1,68 @@
+//! Block-size dispatch for the fused pipeline.
+//!
+//! The paper's block sizes of interest are small powers of two (B = 32/64
+//! on GPU; 4/8 dominate the scaled CPU presets and tests). For those the
+//! fused sweep is called through a literal-B call site so, combined with
+//! `#[inline(always)]` on the tile kernels, the compiler constant-folds the
+//! B-loops into straight-line vector code. The choice is made once at
+//! pattern-build time — [`TileDispatch::for_block`] is stored in the
+//! workspace when the block structure is created, not re-derived per step.
+//!
+//! Specialization never changes numerics: the specialized variants run the
+//! exact same arithmetic with constant trip counts, so outputs are
+//! bit-identical to the generic sweep at any block size.
+
+/// Which fused-sweep instantiation a pattern's block size maps to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileDispatch {
+    /// Constant-folded B=4 sweep.
+    B4,
+    /// Constant-folded B=8 sweep.
+    B8,
+    /// Runtime-B sweep (any other block size).
+    Generic,
+}
+
+impl TileDispatch {
+    /// Pick the instantiation for a pattern block size (pattern-build time).
+    pub fn for_block(block: usize) -> Self {
+        match block {
+            4 => Self::B4,
+            8 => Self::B8,
+            _ => Self::Generic,
+        }
+    }
+
+    /// The constant block size this dispatch is specialized for, if any.
+    pub fn specialized_block(&self) -> Option<usize> {
+        match self {
+            Self::B4 => Some(4),
+            Self::B8 => Some(8),
+            Self::Generic => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_size_mapping() {
+        assert_eq!(TileDispatch::for_block(4), TileDispatch::B4);
+        assert_eq!(TileDispatch::for_block(8), TileDispatch::B8);
+        for b in [1usize, 2, 3, 5, 16, 32, 64] {
+            assert_eq!(TileDispatch::for_block(b), TileDispatch::Generic, "B={b}");
+        }
+    }
+
+    #[test]
+    fn specialized_block_agrees_with_mapping() {
+        for b in [2usize, 4, 8, 16] {
+            let d = TileDispatch::for_block(b);
+            if let Some(sb) = d.specialized_block() {
+                assert_eq!(sb, b);
+            }
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Fused per-block-row attention pipeline — the CPU realization of the
+//! paper's fused GPU kernel (Algorithm 6), which keeps each block row's
+//! tiles resident while SDDMM → SparseSoftmax → SpMM run over them.
+//!
+//! The unfused engine makes three full passes over `s.values` per head per
+//! step (SDDMM writes logits, softmax rewrites them twice — computing every
+//! `exp` twice — and SpMM reads them back). This pipeline makes **one sweep
+//! per block row**:
+//!
+//! 1. SDDMM tiles land in a per-worker scratch panel ([`super::arena`])
+//!    that stays L1/L2-resident for the whole row;
+//! 2. the softmax runs over the panel while it is hot, storing the `exp`
+//!    results back into the panel so normalization reuses them instead of
+//!    recomputing (halving the `exp` count);
+//! 3. normalization streams the probabilities into `s.values` (the
+//!    backward pass and callers still see the exact unfused invariant:
+//!    `s.values` holds the softmax output), and the SpMM immediately
+//!    accumulates the row's tiles into the output panel.
+//!
+//! ## Determinism contract (DESIGN.md §Microkernels & fusion)
+//!
+//! * Block rows are the unit of work, writes are disjoint per block row,
+//!   and the per-row code is worker-independent ⇒ fused output is
+//!   **bit-identical serial↔parallel at any worker count**.
+//! * With `KernelConfig::simd` **off**, every reduction uses the legacy
+//!   association (4-lane `mat::dot`, sequential max/exp-sum), so the fused
+//!   pipeline is **bit-identical to the unfused three-pass kernels** —
+//!   asserted by `tests/kernel_parity.rs`.
+//! * With `simd` **on**, the SDDMM dot uses the 8-lane fold, which
+//!   reassociates the sum ⇒ fused↔unfused agree to rounding (allclose).
+
+use super::dispatch::TileDispatch;
+use super::microkernel as mk;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
+use crate::sparse::bcsr::Bcsr;
+use crate::tensor::Mat;
+
+/// Fused SDDMM → softmax → SpMM over the block structure of `s`.
+///
+/// `q`,`k`: L×d head matrices; `v`: L×dv; `ctx`: L×dv output. `scale` is
+/// folded into the SDDMM (Alg. 6 line 8). On return `s.values` holds the
+/// sparse softmax probabilities (same invariant as the unfused pipeline)
+/// and `ctx` the attention output.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_head_with(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    s: &mut Bcsr,
+    ctx: &mut Mat,
+    zero_correction: bool,
+    dispatch: TileDispatch,
+) {
+    let b = s.block;
+    debug_assert!(
+        dispatch.specialized_block().map_or(true, |sb| sb == b),
+        "dispatch {dispatch:?} does not match block size {b}"
+    );
+    let l = s.seq_len();
+    assert_eq!(q.rows, l);
+    assert_eq!(k.rows, l);
+    assert_eq!(v.rows, l);
+    assert_eq!(q.cols, k.cols);
+    assert_eq!((ctx.rows, ctx.cols), (v.rows, v.cols));
+    let d = q.cols;
+    let dv = v.cols;
+    let lb = s.lb;
+    let row_ptr = &s.row_ptr;
+    let col_idx = &s.col_idx;
+    let simd = exec.kernel().simd;
+    let vals = SendPtr(s.values.as_mut_ptr());
+    let optr = SendPtr(ctx.data.as_mut_ptr());
+    exec.par_for_chunks(lb, |rows| {
+        // One arena acquisition per scheduling chunk; reset per block row.
+        exec.with_scratch(|arena| {
+            let mut tiles = 0u64;
+            let mut stored = 0u64;
+            for bi in rows {
+                let blocks = row_ptr[bi]..row_ptr[bi + 1];
+                let nblk = blocks.end - blocks.start;
+                // SAFETY: tiles of block row `bi` and ctx rows bi·B..(bi+1)·B
+                // are owned by this chunk alone; chunks partition block rows.
+                let row_vals = unsafe {
+                    std::slice::from_raw_parts_mut(vals.0.add(blocks.start * b * b), nblk * b * b)
+                };
+                let opanel =
+                    unsafe { std::slice::from_raw_parts_mut(optr.0.add(bi * b * dv), b * dv) };
+                opanel.fill(0.0);
+                if nblk == 0 {
+                    continue;
+                }
+                arena.reset();
+                let panel = arena.alloc(nblk * b * b);
+                let bcols = &col_idx[blocks];
+                match (simd, dispatch) {
+                    (true, TileDispatch::B4) => sweep_block_row::<true>(
+                        4, bi, bcols, q, k, v, scale, l, zero_correction, panel, row_vals, opanel,
+                    ),
+                    (true, TileDispatch::B8) => sweep_block_row::<true>(
+                        8, bi, bcols, q, k, v, scale, l, zero_correction, panel, row_vals, opanel,
+                    ),
+                    (true, TileDispatch::Generic) => sweep_block_row::<true>(
+                        b, bi, bcols, q, k, v, scale, l, zero_correction, panel, row_vals, opanel,
+                    ),
+                    (false, _) => sweep_block_row::<false>(
+                        b, bi, bcols, q, k, v, scale, l, zero_correction, panel, row_vals, opanel,
+                    ),
+                }
+                tiles += nblk as u64;
+                stored += (nblk * b * b) as u64;
+            }
+            // SDDMM + SpMM mul-adds per tile, softmax per stored entry: one
+            // compare (max), one exp (cached — the fusion win), one multiply
+            // (normalize).
+            let t = exec.tally();
+            t.add_mul_add(tiles * (b * b) as u64 * (d as u64 + dv as u64) + stored);
+            t.add_exp(stored);
+            t.add_cmp(stored);
+        });
+    });
+}
+
+/// One block row's full SDDMM → softmax → SpMM sweep. `b` arrives as a
+/// literal at the B=4/B=8 call sites, so with `#[inline(always)]` the
+/// compiler emits constant-trip-count specializations (see [`dispatch`]).
+///
+/// [`dispatch`]: super::dispatch
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn sweep_block_row<const SIMD: bool>(
+    b: usize,
+    bi: usize,
+    bcols: &[usize],
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    l: usize,
+    zero_correction: bool,
+    panel: &mut [f32],
+    row_vals: &mut [f32],
+    opanel: &mut [f32],
+) {
+    let d = q.cols;
+    let dv = v.cols;
+    let bb = b * b;
+    let nblk = bcols.len();
+    let b_cnt = nblk * b;
+    // Q rows bi·B..(bi+1)·B are one contiguous row-major slab.
+    let q_panel = &q.data[bi * b * d..(bi + 1) * b * d];
+
+    // SDDMM: every tile of the row into the hot scratch panel (Alg. 5 l.5).
+    for (t, &bj) in bcols.iter().enumerate() {
+        let k_panel = &k.data[bj * b * d..(bj + 1) * b * d];
+        mk::tile_sddmm::<SIMD>(b, d, q_panel, k_panel, scale, &mut panel[t * bb..(t + 1) * bb]);
+    }
+
+    // Softmax over the cache-hot panel (Alg. 6 lines 7–17). A softmax row's
+    // stored entries are the length-B segments at offset r·B of each tile.
+    for r in 0..b {
+        let mut max = f32::NEG_INFINITY;
+        for t in 0..nblk {
+            let seg = &panel[t * bb + r * b..t * bb + (r + 1) * b];
+            if SIMD {
+                max = mk::max_fold(seg, max);
+            } else {
+                for &x in seg {
+                    if x > max {
+                        max = x;
+                    }
+                }
+            }
+        }
+        // exp cached into the panel; sum accumulates sequentially so the
+        // scalar pipeline matches the unfused association bit-for-bit.
+        let mut sum = 0.0f32;
+        for t in 0..nblk {
+            let seg = &mut panel[t * bb + r * b..t * bb + (r + 1) * b];
+            sum = mk::exp_sum_inplace(seg, max, sum);
+        }
+        // Implicit-zero mass for the L − b_cnt pruned entries (Alg. 6 l.15).
+        if zero_correction {
+            sum += (-max).exp() * (l - b_cnt) as f32;
+        }
+        let inv = 1.0 / sum;
+        // Normalize from the cached exps straight into s.values.
+        for t in 0..nblk {
+            let seg = &panel[t * bb + r * b..t * bb + (r + 1) * b];
+            let out = &mut row_vals[t * bb + r * b..t * bb + (r + 1) * b];
+            mk::scaled_copy(seg, inv, out);
+        }
+    }
+
+    // SpMM: accumulate the still-hot probability tiles into the output
+    // panel (Alg. 5 l.7) in the unfused kernel's (tile, r, c) order.
+    for (t, &bj) in bcols.iter().enumerate() {
+        let v_panel = &v.data[bj * b * dv..(bj + 1) * b * dv];
+        mk::tile_spmm_acc::<SIMD>(b, dv, &row_vals[t * bb..(t + 1) * bb], v_panel, opanel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecConfig;
+    use crate::pattern::BlockMask;
+    use crate::sparse::sddmm::sddmm;
+    use crate::sparse::softmax::sparse_softmax;
+    use crate::sparse::spmm::spmm;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    fn unfused(q: &Mat, k: &Mat, v: &Mat, scale: f32, mask: &BlockMask) -> (Bcsr, Mat) {
+        let mut s = Bcsr::from_mask(mask);
+        sddmm(q, k, &mut s, scale);
+        sparse_softmax(&mut s, 1.0, true);
+        let mut out = Mat::zeros(v.rows, v.cols);
+        spmm(&s, v, &mut out);
+        (s, out)
+    }
+
+    fn fused(
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        scale: f32,
+        mask: &BlockMask,
+        simd: bool,
+    ) -> (Bcsr, Mat) {
+        let exec = Exec::new(ExecConfig {
+            kernel: crate::sparse::kernel::KernelConfig { fused: true, simd },
+            ..Default::default()
+        });
+        let mut s = Bcsr::from_mask(mask);
+        let mut out = Mat::zeros(v.rows, v.cols);
+        fused_attention_head_with(
+            &exec,
+            q,
+            k,
+            v,
+            scale,
+            &mut s,
+            &mut out,
+            true,
+            TileDispatch::for_block(mask.block),
+        );
+        (s, out)
+    }
+
+    fn random_mask(rng: &mut crate::util::rng::Rng, lb: usize, block: usize, p: f64) -> BlockMask {
+        let mut m = BlockMask::empty(lb, block);
+        for bit in m.bits.iter_mut() {
+            *bit = rng.chance(p);
+        }
+        m.set_diagonal();
+        m
+    }
+
+    #[test]
+    fn scalar_fused_bitwise_equals_unfused_property() {
+        QuickCheck::new().cases(25).run("fused scalar = unfused", |rng| {
+            let block = [2usize, 4, 8][rng.below(3)];
+            let lb = 1 + rng.below(5);
+            let l = lb * block;
+            let d = 1 + rng.below(12);
+            let scale = 1.0 / (d as f32).sqrt();
+            let q = Mat::random_normal(l, d, 1.0, rng);
+            let k = Mat::random_normal(l, d, 1.0, rng);
+            let v = Mat::random_normal(l, d, 1.0, rng);
+            let p = rng.f64();
+            let mask = random_mask(rng, lb, block, p);
+            let (s_ref, out_ref) = unfused(&q, &k, &v, scale, &mask);
+            let (s_got, out_got) = fused(&q, &k, &v, scale, &mask, false);
+            for (i, (a, b)) in s_got.values.iter().zip(&s_ref.values).enumerate() {
+                crate::qc_assert!(a.to_bits() == b.to_bits(), "probs bit mismatch at {i}");
+            }
+            for (i, (a, b)) in out_got.data.iter().zip(&out_ref.data).enumerate() {
+                crate::qc_assert!(a.to_bits() == b.to_bits(), "ctx bit mismatch at {i}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_fused_allclose_to_unfused_property() {
+        QuickCheck::new().cases(25).run("fused simd ≈ unfused", |rng| {
+            let block = [2usize, 4, 8][rng.below(3)];
+            let lb = 1 + rng.below(5);
+            let l = lb * block;
+            let d = 1 + rng.below(16);
+            let scale = 1.0 / (d as f32).sqrt();
+            let q = Mat::random_normal(l, d, 1.0, rng);
+            let k = Mat::random_normal(l, d, 1.0, rng);
+            let v = Mat::random_normal(l, d, 1.0, rng);
+            let mask = random_mask(rng, lb, block, 0.5);
+            let (s_ref, out_ref) = unfused(&q, &k, &v, scale, &mask);
+            let (s_got, out_got) = fused(&q, &k, &v, scale, &mask, true);
+            assert_allclose(&s_got.values, &s_ref.values, 1e-4, 1e-6)?;
+            assert_allclose(&out_got.data, &out_ref.data, 1e-4, 1e-6)
+        });
+    }
+
+    #[test]
+    fn empty_block_rows_zero_the_output() {
+        // A mask whose later block rows are empty must still clear stale ctx.
+        let mut mask = BlockMask::empty(3, 4);
+        mask.set(0, 0, true);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let q = Mat::random_normal(12, 6, 1.0, &mut rng);
+        let k = Mat::random_normal(12, 6, 1.0, &mut rng);
+        let v = Mat::random_normal(12, 6, 1.0, &mut rng);
+        let exec = Exec::serial();
+        let mut s = Bcsr::from_mask(&mask);
+        let mut out = Mat::filled(12, 6, 7.0); // poisoned
+        fused_attention_head_with(
+            &exec,
+            &q,
+            &k,
+            &v,
+            0.5,
+            &mut s,
+            &mut out,
+            true,
+            TileDispatch::B4,
+        );
+        for i in 4..12 {
+            assert!(out.row(i).iter().all(|&x| x == 0.0), "row {i} not cleared");
+        }
+        assert!(out.row(0).iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,328 @@
+//! Fixed-width SIMD-shaped f32 primitives for the block-sparse hot path.
+//!
+//! Written as 8-lane unrolled loops over `chunks_exact(LANES)` with a
+//! scalar tail — the dependency-free shape the autovectorizer reliably
+//! lowers to packed vector code on stable Rust (no `std::simd`, no
+//! intrinsics, no `unsafe`). Eight independent accumulator lanes break the
+//! loop-carried dependence that keeps a naive dot product scalar.
+//!
+//! Numerics contract:
+//! * [`axpy`] and [`scaled_copy`] are **elementwise** — unrolling cannot
+//!   change any output bit, at any lane count.
+//! * [`max_fold`] reassociates the max reduction, which is order-invariant
+//!   for non-NaN inputs — bit-identical to a sequential scan.
+//! * [`dot`] reassociates the sum (8 partials folded pairwise), so it
+//!   differs from a sequential sum at rounding level; callers that need the
+//!   legacy association use [`crate::tensor::mat::dot`] (the fused pipeline
+//!   does this when `KernelConfig::simd` is off).
+//! * [`exp_sum_inplace`] accumulates **sequentially** on purpose: it must
+//!   match the unfused softmax's association exactly so that the fused
+//!   scalar pipeline stays bit-identical to the three-pass kernels.
+
+/// Unroll width: 8 f32 lanes = one AVX2 register, two NEON registers.
+pub const LANES: usize = 8;
+
+/// 8-lane dot product with pairwise lane fold and scalar tail.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y[i] += alpha * x[i]` — elementwise, bit-identical to the scalar loop.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (cy, cx) in (&mut yc).zip(&mut xc) {
+        for l in 0..LANES {
+            cy[l] += alpha * cx[l];
+        }
+    }
+    for (sy, &sx) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *sy += alpha * sx;
+    }
+}
+
+/// `dst[i] = src[i] * s` — elementwise, bit-identical to the scalar loop.
+#[inline]
+pub fn scaled_copy(src: &[f32], s: f32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (cd, cs) in (&mut dc).zip(&mut sc) {
+        for l in 0..LANES {
+            cd[l] = cs[l] * s;
+        }
+    }
+    for (d, &v) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = v * s;
+    }
+}
+
+/// Running max of `x` folded into `init`. Lane-parallel then pairwise fold —
+/// order-invariant for non-NaN inputs, so bit-identical to a scan.
+#[inline]
+pub fn max_fold(x: &[f32], init: f32) -> f32 {
+    let mut m = [f32::NEG_INFINITY; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    for cx in &mut xc {
+        for l in 0..LANES {
+            if cx[l] > m[l] {
+                m[l] = cx[l];
+            }
+        }
+    }
+    let mut r = init;
+    for &lane in &m {
+        if lane > r {
+            r = lane;
+        }
+    }
+    for &v in xc.remainder() {
+        if v > r {
+            r = v;
+        }
+    }
+    r
+}
+
+/// Scale `x` in place and return the running max folded into `init` — the
+/// fused form of the softmax's first pass (Alg. 6 lines 7–11) for callers
+/// that have not folded the scale into the SDDMM.
+#[inline]
+pub fn scale_max(x: &mut [f32], scale: f32, init: f32) -> f32 {
+    let mut r = init;
+    for v in x.iter_mut() {
+        *v *= scale;
+        if *v > r {
+            r = *v;
+        }
+    }
+    r
+}
+
+/// `x[i] = exp(x[i] - max)` **stored** (the cache that lets normalization
+/// reuse the exp instead of recomputing it), returning `acc + Σ exp(..)`.
+/// Accumulation is sequential left-to-right so the association matches the
+/// three-pass softmax exactly.
+#[inline]
+pub fn exp_sum_inplace(x: &mut [f32], max: f32, acc: f32) -> f32 {
+    let mut s = acc;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        s += *v;
+    }
+    s
+}
+
+/// B×B SDDMM tile: `out[r,c] = dot(Q_panel[r], K_panel[c]) * scale` where
+/// both panels are contiguous row-major B×d slabs. `SIMD` selects the
+/// 8-lane [`dot`] or the legacy 4-lane [`crate::tensor::mat::dot`] (the
+/// latter keeps the fused pipeline bit-identical to the unfused kernels).
+/// `#[inline(always)]` so literal-B call sites constant-fold the loops.
+#[inline(always)]
+pub fn tile_sddmm<const SIMD: bool>(
+    b: usize,
+    d: usize,
+    q_panel: &[f32],
+    k_panel: &[f32],
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q_panel.len(), b * d);
+    debug_assert_eq!(k_panel.len(), b * d);
+    debug_assert_eq!(out.len(), b * b);
+    for r in 0..b {
+        let qrow = &q_panel[r * d..(r + 1) * d];
+        let orow = &mut out[r * b..(r + 1) * b];
+        for (c, o) in orow.iter_mut().enumerate() {
+            let krow = &k_panel[c * d..(c + 1) * d];
+            let s = if SIMD { dot(qrow, krow) } else { crate::tensor::mat::dot(qrow, krow) };
+            *o = s * scale;
+        }
+    }
+}
+
+/// B×B SpMM tile accumulate: `out_panel[r] += tile[r,c] · V_panel[c]` for
+/// every stored entry, `out_panel`/`V_panel` contiguous row-major B×d slabs.
+/// Elementwise AXPY rows ⇒ identical bits whether `SIMD` is on or off; the
+/// flag only changes the unroll shape.
+#[inline(always)]
+pub fn tile_spmm_acc<const SIMD: bool>(
+    b: usize,
+    d: usize,
+    tile: &[f32],
+    v_panel: &[f32],
+    out_panel: &mut [f32],
+) {
+    debug_assert_eq!(tile.len(), b * b);
+    debug_assert_eq!(v_panel.len(), b * d);
+    debug_assert_eq!(out_panel.len(), b * d);
+    for r in 0..b {
+        let srow = &tile[r * b..(r + 1) * b];
+        let orow = &mut out_panel[r * d..(r + 1) * d];
+        for (c, &sv) in srow.iter().enumerate() {
+            let vrow = &v_panel[c * d..(c + 1) * d];
+            if SIMD {
+                axpy(sv, vrow, orow);
+            } else {
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += sv * vv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+
+    fn randv(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gauss() as f32).collect()
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_property() {
+        QuickCheck::new().cases(40).run("mk dot", |rng| {
+            let n = rng.below(70);
+            let a = randv(rng, n);
+            let b = randv(rng, n);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            crate::qc_assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpy_and_scaled_copy_bitwise_match_scalar() {
+        QuickCheck::new().cases(40).run("mk axpy", |rng| {
+            let n = rng.below(70);
+            let alpha = rng.gauss() as f32;
+            let x = randv(rng, n);
+            let y0 = randv(rng, n);
+            let mut y = y0.clone();
+            axpy(alpha, &x, &mut y);
+            for i in 0..n {
+                let want = y0[i] + alpha * x[i];
+                crate::qc_assert!(y[i].to_bits() == want.to_bits(), "axpy[{i}]");
+            }
+            let mut d = vec![0.0f32; n];
+            scaled_copy(&x, alpha, &mut d);
+            for i in 0..n {
+                crate::qc_assert!(d[i].to_bits() == (x[i] * alpha).to_bits(), "scaled_copy[{i}]");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_fold_matches_scan_property() {
+        QuickCheck::new().cases(40).run("mk max", |rng| {
+            let n = rng.below(70);
+            let x = randv(rng, n);
+            let init = if rng.chance(0.5) { f32::NEG_INFINITY } else { rng.gauss() as f32 };
+            let mut want = init;
+            for &v in &x {
+                if v > want {
+                    want = v;
+                }
+            }
+            crate::qc_assert!(max_fold(&x, init).to_bits() == want.to_bits(), "max n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_max_scales_and_maxes() {
+        let mut x = vec![2.0f32, -4.0, 1.0];
+        let m = scale_max(&mut x, 0.5, f32::NEG_INFINITY);
+        assert_eq!(x, vec![1.0, -2.0, 0.5]);
+        assert_eq!(m, 1.0);
+    }
+
+    #[test]
+    fn exp_sum_caches_and_matches_sequential() {
+        QuickCheck::new().cases(30).run("mk expsum", |rng| {
+            let n = 1 + rng.below(30);
+            let x0 = randv(rng, n);
+            let max = x0.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut x = x0.clone();
+            let mut want = 0.1f32;
+            let got = exp_sum_inplace(&mut x, max, 0.1);
+            for (i, &v) in x0.iter().enumerate() {
+                let e = (v - max).exp();
+                crate::qc_assert!(x[i].to_bits() == e.to_bits(), "exp cached [{i}]");
+                want += e;
+            }
+            crate::qc_assert!(got.to_bits() == want.to_bits(), "sum association");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_kernels_match_dense_reference() {
+        QuickCheck::new().cases(25).run("mk tiles", |rng| {
+            let b = [2usize, 4, 8][rng.below(3)];
+            let d = 1 + rng.below(20);
+            let qp = randv(rng, b * d);
+            let kp = randv(rng, b * d);
+            let scale = 0.25f32;
+            let mut tile = vec![0.0f32; b * b];
+            tile_sddmm::<true>(b, d, &qp, &kp, scale, &mut tile);
+            for r in 0..b {
+                for c in 0..b {
+                    let want: f64 = (0..d)
+                        .map(|i| qp[r * d + i] as f64 * kp[c * d + i] as f64)
+                        .sum::<f64>()
+                        * scale as f64;
+                    crate::qc_assert!(
+                        (tile[r * b + c] as f64 - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                        "sddmm ({r},{c})"
+                    );
+                }
+            }
+            let vp = randv(rng, b * d);
+            let mut out_simd = vec![0.0f32; b * d];
+            let mut out_scalar = vec![0.0f32; b * d];
+            tile_spmm_acc::<true>(b, d, &tile, &vp, &mut out_simd);
+            tile_spmm_acc::<false>(b, d, &tile, &vp, &mut out_scalar);
+            for i in 0..b * d {
+                crate::qc_assert!(
+                    out_simd[i].to_bits() == out_scalar[i].to_bits(),
+                    "spmm_acc elementwise bit parity [{i}]"
+                );
+            }
+            let mut want = vec![0.0f64; b * d];
+            for r in 0..b {
+                for c in 0..b {
+                    for i in 0..d {
+                        want[r * d + i] += tile[r * b + c] as f64 * vp[c * d + i] as f64;
+                    }
+                }
+            }
+            assert_allclose(
+                &out_simd,
+                &want.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+                1e-4,
+                1e-5,
+            )
+        });
+    }
+}

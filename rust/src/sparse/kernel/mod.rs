@@ -1,0 +1,55 @@
+//! `sparse::kernel` — the microkernel layer beneath the block-sparse ops.
+//!
+//! Three pieces (ISSUE 2 / ROADMAP "NUMA/affinity + SIMD"):
+//! * [`microkernel`] — 8-lane-unrolled f32 primitives (dot, AXPY,
+//!   scale-max, exp-sum, B×B tile matmuls) the autovectorizer lowers to
+//!   packed code on stable Rust;
+//! * [`fused`] — the per-block-row SDDMM → softmax → SpMM sweep
+//!   (Algorithm 6 on CPU), which keeps each block row's tiles cache-hot
+//!   and halves the softmax `exp` count by caching the exponentials;
+//! * [`arena`] — per-worker bump-allocated scratch so the fused path is
+//!   allocation-free in steady state;
+//! * [`dispatch`] — B=4/B=8 constant-folded sweep selection, decided once
+//!   at pattern-build time.
+//!
+//! [`KernelConfig`] (carried by `exec::ExecConfig`, loadable from the
+//! `[exec]` TOML section and `--fused`/`--simd` CLI flags) selects between
+//! the fused pipeline and the legacy three-pass kernels at run time.
+
+pub mod arena;
+pub mod dispatch;
+pub mod fused;
+pub mod microkernel;
+
+pub use arena::Arena;
+pub use dispatch::TileDispatch;
+pub use fused::fused_attention_head_with;
+
+/// Kernel-selection knobs, embedded in [`crate::exec::ExecConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Route the sparse attention forward through the fused per-block-row
+    /// pipeline instead of the three-pass SDDMM/softmax/SpMM kernels.
+    pub fused: bool,
+    /// Use the 8-lane SIMD-shaped microkernels inside the fused pipeline.
+    /// Off ⇒ legacy scalar reductions, bit-identical to the unfused path.
+    pub simd: bool,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        Self { fused: true, simd: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_fused_simd() {
+        let k = KernelConfig::default();
+        assert!(k.fused);
+        assert!(k.simd);
+    }
+}

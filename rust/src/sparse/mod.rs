@@ -8,7 +8,15 @@
 //! (cache/SIMD-friendly — the CPU analogue of the coalesced accesses the
 //! paper gets from blocked `P`).
 
+//! Two kernel regimes coexist (selected by [`kernel::KernelConfig`], default
+//! fused): the legacy three-pass kernels below ([`sddmm`] → [`softmax`] →
+//! [`spmm`]) and the fused per-block-row pipeline in [`kernel::fused`],
+//! which runs all three stages over each block row while its tiles are
+//! cache-hot. The three-pass kernels remain the reference semantics — the
+//! fused scalar path is bit-identical to them (see `tests/kernel_parity.rs`).
+
 pub mod bcsr;
+pub mod kernel;
 pub mod sddmm;
 pub mod softmax;
 pub mod spmm;
@@ -16,3 +24,4 @@ pub mod ops;
 pub mod backward;
 
 pub use bcsr::Bcsr;
+pub use kernel::KernelConfig;

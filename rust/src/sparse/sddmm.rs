@@ -3,6 +3,12 @@
 //! Only the B×B tiles selected by the pattern are computed — this is where
 //! the paper's `L²/C` operation reduction is realized. Each tile is a dense
 //! B×(D/H) by (D/H)×B matmul; Q rows and K rows stream linearly.
+//!
+//! This is the *unfused* (three-pass, reference-semantics) form. The
+//! default engine path runs the fused per-block-row pipeline in
+//! [`crate::sparse::kernel::fused`], which computes the same tiles into a
+//! per-worker scratch panel and keeps them hot through softmax + SpMM; the
+//! fused scalar path is bit-identical to this kernel (kernel_parity suite).
 
 use super::bcsr::Bcsr;
 use crate::exec::par::SendPtr;

@@ -12,6 +12,13 @@
 //! row; `warp_reduce_max/sum` shuffles → straight-line reductions over the
 //! row's stored entries (the stored entries of a row sit at stride B inside
 //! each of the row-block's tiles).
+//!
+//! This is the *unfused* form; note it computes every `exp` twice (pass 2
+//! for the sum, pass 3 for normalization). The default fused pipeline
+//! ([`crate::sparse::kernel::fused`]) caches the pass-2 exps in a scratch
+//! panel and reuses them, halving the `exp` count — while reproducing this
+//! kernel's exact association (sequential exp-sum), so the fused scalar
+//! path stays bit-identical to this one.
 
 use super::bcsr::Bcsr;
 use crate::exec::par::SendPtr;

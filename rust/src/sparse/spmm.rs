@@ -35,17 +35,15 @@ pub fn spmm_with(exec: &Exec, s: &Bcsr, v: &Mat, out: &mut Mat) {
                 let bj = col_idx[blk];
                 let base = blk * b * b;
                 // Tile-dense multiply: (B×B) tile × (B×d) V panel → (B×d) out panel.
+                // No zero-skip branch: it defeats vectorization of the
+                // AXPY, and accumulating an exact-zero value (softmax
+                // underflow here; the backward also feeds signed dZ tiles
+                // through this kernel) adds 0·v — a numerical no-op.
                 for r in 0..b {
                     let srow = &values[base + r * b..base + (r + 1) * b];
                     let orow = &mut opanel[r * d..(r + 1) * d];
                     for (c, &sv) in srow.iter().enumerate() {
-                        if sv == 0.0 {
-                            continue;
-                        }
-                        let vrow = v.row(bj * b + c);
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += sv * vv;
-                        }
+                        super::kernel::microkernel::axpy(sv, v.row(bj * b + c), orow);
                     }
                 }
             }

@@ -151,10 +151,18 @@ impl Mat {
     pub fn col_slice(&self, c0: usize, c1: usize) -> Mat {
         assert!(c0 <= c1 && c1 <= self.cols);
         let mut out = Mat::zeros(self.rows, c1 - c0);
+        self.col_slice_into(c0, c1, &mut out);
+        out
+    }
+
+    /// Copy columns [c0, c1) into a preallocated matrix — the
+    /// allocation-free head split used by the MHA workspaces.
+    pub fn col_slice_into(&self, c0: usize, c1: usize, out: &mut Mat) {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        assert_eq!((out.rows, out.cols), (self.rows, c1 - c0));
         for i in 0..self.rows {
             out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
         }
-        out
     }
 
     /// Write `src` into columns [c0, c0+src.cols) (used for head concat).

@@ -15,7 +15,7 @@
 
 use spion::attention::{
     dense_mha, dense_mha_with, sparse_attention_train, sparse_attention_train_with, sparse_mha,
-    sparse_mha_with, SparseWorkspace, TrainWorkspace,
+    sparse_mha_with, MhaWorkspace, TrainWorkspace,
 };
 use spion::exec::{Exec, ExecConfig};
 use spion::pattern::bigbird::bigbird;
@@ -35,7 +35,9 @@ use spion::util::rng::Rng;
 fn contexts(deterministic: bool) -> Vec<Exec> {
     [1usize, 2, 4]
         .into_iter()
-        .map(|workers| Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic }))
+        .map(|workers| {
+            Exec::new(ExecConfig { workers, chunk_blocks: 0, deterministic, ..Default::default() })
+        })
         .collect()
 }
 
@@ -159,15 +161,11 @@ fn mha_level_parity_dense_and_sparse() {
 
         // Sparse MHA across the pattern zoo (shared per-layer mask).
         for (name, mask) in pattern_zoo(rng, l, block) {
-            let mk_ws =
-                |m: &BlockMask| -> Vec<SparseWorkspace> {
-                    (0..heads).map(|_| SparseWorkspace::new(m, d / heads)).collect()
-                };
-            let mut ws_ref = mk_ws(&mask);
-            let sparse_ref = sparse_mha(&q, &k, &v, heads, &mut ws_ref);
+            let mut ws_ref = MhaWorkspace::new(&mask, heads, d);
+            let sparse_ref = sparse_mha(&q, &k, &v, &mut ws_ref).clone();
             for exec in contexts(true) {
-                let mut ws = mk_ws(&mask);
-                let sparse = sparse_mha_with(&exec, &q, &k, &v, heads, &mut ws);
+                let mut ws = MhaWorkspace::new(&mask, heads, d);
+                let sparse = sparse_mha_with(&exec, &q, &k, &v, &mut ws);
                 assert_bits_eq(
                     &sparse.data,
                     &sparse_ref.data,

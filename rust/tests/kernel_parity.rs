@@ -1,0 +1,224 @@
+//! Fused-kernel parity — the determinism contract of `sparse::kernel`
+//! (DESIGN.md §Microkernels & fusion), mirroring `tests/exec_parity.rs`:
+//!
+//! * **fused serial ↔ parallel**: bit-for-bit at workers {1, 2, 4} (block
+//!   rows are the unit of work; per-row code is worker-independent);
+//! * **fused scalar ↔ unfused**: bit-for-bit (with `simd` off the fused
+//!   sweep reproduces the three-pass kernels' exact association);
+//! * **fused SIMD ↔ unfused**: allclose only (the 8-lane SDDMM dot
+//!   reassociates the sum), forward and backward, across the pattern zoo
+//!   (SPION-C/F/CF, BigBird, Reformer/LSH) and block sizes {2, 4, 8} —
+//!   covering the B=4/B=8 specialized dispatch and the generic sweep.
+
+use spion::attention::{
+    sparse_attention_train_with, sparse_mha_with, MhaWorkspace, TrainWorkspace,
+};
+use spion::exec::{Exec, ExecConfig, KernelConfig};
+use spion::pattern::bigbird::bigbird;
+use spion::pattern::lsh::lsh_pattern;
+use spion::pattern::spion::{generate_pattern, synth_attention_scores, PatternConfig};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::tensor::Mat;
+use spion::util::quickcheck::{assert_allclose, QuickCheck};
+use spion::util::rng::Rng;
+
+fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
+    Exec::new(ExecConfig { workers, kernel, ..Default::default() })
+}
+
+const FUSED_SIMD: KernelConfig = KernelConfig { fused: true, simd: true };
+const FUSED_SCALAR: KernelConfig = KernelConfig { fused: true, simd: false };
+const UNFUSED: KernelConfig = KernelConfig { fused: false, simd: false };
+
+/// A pattern from every policy the engine supports, at block size `block`.
+fn pattern_zoo(rng: &mut Rng, l: usize, block: usize) -> Vec<(String, BlockMask)> {
+    let scores = synth_attention_scores(l, 0.8, 0.4, &[l / 3], 0.05, rng);
+    let lb = l / block;
+    let mut zoo = Vec::new();
+    for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+        let cfg = PatternConfig { variant, block, filter: 5, alpha: 0.5 + 0.45 * rng.f64() };
+        zoo.push((variant.name().to_string(), generate_pattern(&scores, &cfg)));
+    }
+    zoo.push(("BigBird".into(), bigbird(lb, block, &Default::default(), rng)));
+    zoo.push(("Reformer".into(), lsh_pattern(&scores, block, &Default::default(), rng)));
+    zoo
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+/// Run the full fwd+bwd train pass under `exec` and return the workspace.
+fn train(
+    exec: &Exec,
+    mask: &BlockMask,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    cot: &Mat,
+    scale: f32,
+) -> TrainWorkspace {
+    let mut ws = TrainWorkspace::new(mask, q.cols);
+    sparse_attention_train_with(exec, q, k, v, scale, cot, &mut ws);
+    ws
+}
+
+#[test]
+fn fused_serial_parallel_bit_identical() {
+    QuickCheck::new().cases(10).run("fused serial↔parallel", |rng| {
+        let block = [4usize, 8][rng.below(2)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(10);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, FUSED_SIMD), &mask, &q, &k, &v, &cot, scale);
+            for workers in [2usize, 4] {
+                let ws = train(&exec_with(workers, FUSED_SIMD), &mask, &q, &k, &v, &cot, scale);
+                let tag = format!("{name} w={workers}");
+                assert_bits_eq(&ws.fwd.s.values, &ws_ref.fwd.s.values, &format!("probs {tag}"));
+                assert_bits_eq(&ws.fwd.ctx.data, &ws_ref.fwd.ctx.data, &format!("ctx {tag}"));
+                assert_bits_eq(&ws.dq.data, &ws_ref.dq.data, &format!("dQ {tag}"));
+                assert_bits_eq(&ws.dk.data, &ws_ref.dk.data, &format!("dK {tag}"));
+                assert_bits_eq(&ws.dv.data, &ws_ref.dv.data, &format!("dV {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_scalar_bitwise_equals_unfused() {
+    // With simd off, the fused sweep keeps the legacy association in every
+    // reduction — the whole pipeline (fwd probabilities, context, and all
+    // three gradients) must reproduce the three-pass kernels bit for bit.
+    QuickCheck::new().cases(10).run("fused scalar = unfused", |rng| {
+        let block = [2usize, 4, 8][rng.below(3)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(10);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, UNFUSED), &mask, &q, &k, &v, &cot, scale);
+            for workers in [1usize, 2, 4] {
+                let ws = train(&exec_with(workers, FUSED_SCALAR), &mask, &q, &k, &v, &cot, scale);
+                let tag = format!("{name} B={block} w={workers}");
+                assert_bits_eq(&ws.fwd.s.values, &ws_ref.fwd.s.values, &format!("probs {tag}"));
+                assert_bits_eq(&ws.fwd.ctx.data, &ws_ref.fwd.ctx.data, &format!("ctx {tag}"));
+                assert_bits_eq(&ws.dq.data, &ws_ref.dq.data, &format!("dQ {tag}"));
+                assert_bits_eq(&ws.dk.data, &ws_ref.dk.data, &format!("dK {tag}"));
+                assert_bits_eq(&ws.dv.data, &ws_ref.dv.data, &format!("dV {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_simd_allclose_to_unfused_fwd_bwd() {
+    QuickCheck::new().cases(10).run("fused simd ≈ unfused", |rng| {
+        let block = [2usize, 4, 8][rng.below(3)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(12);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, UNFUSED), &mask, &q, &k, &v, &cot, scale);
+            for workers in [1usize, 2, 4] {
+                let ws = train(&exec_with(workers, FUSED_SIMD), &mask, &q, &k, &v, &cot, scale);
+                for (what, got, want) in [
+                    ("probs", &ws.fwd.s.values, &ws_ref.fwd.s.values),
+                    ("ctx", &ws.fwd.ctx.data, &ws_ref.fwd.ctx.data),
+                    ("dq", &ws.dq.data, &ws_ref.dq.data),
+                    ("dk", &ws.dk.data, &ws_ref.dk.data),
+                    ("dv", &ws.dv.data, &ws_ref.dv.data),
+                ] {
+                    assert_allclose(got, want, 1e-3, 1e-5).unwrap_or_else(|e| {
+                        panic!("{name} B={block} {what} w={workers}: {e}")
+                    });
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_mha_bit_identical_across_workers_and_allclose_to_unfused() {
+    QuickCheck::new().cases(8).run("fused mha parity", |rng| {
+        let heads = [1usize, 2, 4][rng.below(3)];
+        let block = [4usize, 8][rng.below(2)];
+        let lb = 3 + rng.below(3);
+        let l = lb * block;
+        let d = heads * (2 + rng.below(6));
+        let q = Mat::random_normal(l, d, 1.0, rng);
+        let k = Mat::random_normal(l, d, 1.0, rng);
+        let v = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let mut ws_ref = MhaWorkspace::new(&mask, heads, d);
+            let fused_ref = sparse_mha_with(&exec_with(1, FUSED_SIMD), &q, &k, &v, &mut ws_ref)
+                .clone();
+            // Bit-identical across worker counts (head-parallel and
+            // block-row-parallel schedules both).
+            for workers in [2usize, 4] {
+                let mut ws = MhaWorkspace::new(&mask, heads, d);
+                let got = sparse_mha_with(&exec_with(workers, FUSED_SIMD), &q, &k, &v, &mut ws);
+                assert_bits_eq(
+                    &got.data,
+                    &fused_ref.data,
+                    &format!("fused mha {name} h={heads} w={workers}"),
+                );
+            }
+            // Allclose to the unfused engine.
+            let mut ws_u = MhaWorkspace::new(&mask, heads, d);
+            let unfused = sparse_mha_with(&exec_with(1, UNFUSED), &q, &k, &v, &mut ws_u);
+            assert_allclose(&fused_ref.data, &unfused.data, 1e-3, 1e-5)
+                .unwrap_or_else(|e| panic!("fused↔unfused mha {name} h={heads}: {e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workspace_steady_state_is_stable_across_repeated_steps() {
+    // Repeated train steps through one workspace must be reproducible —
+    // the arena + workspace reuse cannot leak state between steps.
+    let mut rng = Rng::new(42);
+    let (lb, block, d) = (4, 8, 8);
+    let l = lb * block;
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = Mat::random_normal(l, d, 0.9, &mut rng);
+    let k = Mat::random_normal(l, d, 0.9, &mut rng);
+    let v = Mat::random_normal(l, d, 0.9, &mut rng);
+    let cot = Mat::random_normal(l, d, 1.0, &mut rng);
+    let (_, mask) = pattern_zoo(&mut rng, l, block).remove(2); // SPION-CF
+    let exec = exec_with(2, FUSED_SIMD);
+    let mut ws = TrainWorkspace::new(&mask, d);
+    sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+    let first_dq = ws.dq.clone();
+    let first_ctx = ws.fwd.ctx.clone();
+    for _ in 0..5 {
+        sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+    }
+    assert_bits_eq(&ws.dq.data, &first_dq.data, "dq drifted across steps");
+    assert_bits_eq(&ws.fwd.ctx.data, &first_ctx.data, "ctx drifted across steps");
+}

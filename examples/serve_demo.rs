@@ -24,11 +24,20 @@ use spion::serve::{BatchPolicy, InferenceServer};
 use spion::util::cli::Args;
 use std::time::{Duration, Instant};
 
-fn load_params(args: &Args, preset_name: &str, layers: usize) -> Result<ModelParams> {
+fn load_params(
+    args: &Args,
+    preset_name: &str,
+    layers: usize,
+) -> Result<(ModelParams, Option<Vec<spion::pattern::BlockMask>>)> {
     if let Some(ck_path) = args.get("checkpoint") {
         let ck = Checkpoint::load(ck_path)?;
-        println!("loaded checkpoint {ck_path} (step {})", ck.step);
-        return ModelParams::from_checkpoint(&ck, layers);
+        println!(
+            "loaded checkpoint {ck_path} (step {}, {})",
+            ck.step,
+            if ck.masks.is_some() { "with trained masks" } else { "no masks" }
+        );
+        let params = ModelParams::from_checkpoint(&ck, layers)?;
+        return Ok((params, ck.masks));
     }
     // Fall back to freshly-initialized weights via the AOT init artifact.
     let rt = Runtime::cpu()?;
@@ -40,7 +49,7 @@ fn load_params(args: &Args, preset_name: &str, layers: usize) -> Result<ModelPar
         .zip(&artifacts.manifest.params)
         .map(|(l, spec)| Ok((spec.shape.clone(), lit::to_f32_vec(l)?)))
         .collect::<Result<_>>()?;
-    ModelParams::from_flat(&flat, layers)
+    Ok((ModelParams::from_flat(&flat, layers)?, None))
 }
 
 fn run_load(
@@ -109,7 +118,7 @@ fn main() -> Result<()> {
     let workers =
         spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)).resolved_workers();
 
-    let params = load_params(&args, &preset_name, model.layers)?;
+    let (params, trained_masks) = load_params(&args, &preset_name, model.layers)?;
 
     // Request workload from the real task generator.
     let gen = make_task(task, model.seq_len, model.vocab, model.classes);
@@ -125,30 +134,43 @@ fn main() -> Result<()> {
     let dense_enc = Encoder::new(params.clone(), model.heads);
     let (lat_d, rps_d) = run_load("dense", dense_enc, &tokens, concurrency, max_batch, workers)?;
 
-    // SPION-CF sparse serving: pattern from synthetic diagonal+vertical
-    // scores (or from the checkpointed run's structure in a real pipeline).
-    let exp = ExperimentConfig {
-        task,
-        model: model.clone(),
-        train: TrainConfig::default(),
-        sparsity: {
-            let mut s =
-                SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model);
-            s.pattern.alpha = args.f64_or("alpha", s.pattern.alpha);
-            s
-        },
-        exec: Default::default(),
-        artifacts_dir: "artifacts".into(),
+    // SPION-CF sparse serving: the checkpoint's trained masks when present,
+    // else a pattern from synthetic diagonal+vertical scores.
+    let masks = match trained_masks {
+        Some(ms) => {
+            println!("sparse serving uses the checkpoint's trained masks");
+            ms
+        }
+        None => {
+            let exp = ExperimentConfig {
+                task,
+                model: model.clone(),
+                train: TrainConfig::default(),
+                sparsity: {
+                    let mut s = SparsityConfig::for_model(
+                        PatternKind::Spion(SpionVariant::CF),
+                        task,
+                        &model,
+                    );
+                    s.pattern.alpha = args.f64_or("alpha", s.pattern.alpha);
+                    s
+                },
+                exec: Default::default(),
+                artifacts_dir: "artifacts".into(),
+            };
+            let mut rng = spion::util::rng::Rng::new(5);
+            let scores: Vec<_> = (0..model.layers)
+                .map(|_| {
+                    spion::pattern::spion::synth_attention_scores(
+                        model.seq_len, 1.0, 0.3, &[model.seq_len / 3], 0.05, &mut rng,
+                    )
+                })
+                .collect();
+            generate_masks_for(&exp, &scores)?
+        }
     };
-    let mut rng = spion::util::rng::Rng::new(5);
-    let scores: Vec<_> = (0..model.layers)
-        .map(|_| {
-            spion::pattern::spion::synth_attention_scores(model.seq_len, 1.0, 0.3, &[model.seq_len / 3], 0.05, &mut rng)
-        })
-        .collect();
-    let masks = generate_masks_for(&exp, &scores)?;
     let density: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
-    let sparse_enc = Encoder::new(params, model.heads).with_masks(masks);
+    let sparse_enc = Encoder::new(params, model.heads).with_masks(masks)?;
     let (lat_s, rps_s) =
         run_load("spion-cf", sparse_enc, &tokens, concurrency, max_batch, workers)?;
 

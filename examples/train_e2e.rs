@@ -1,6 +1,8 @@
 //! End-to-end driver (the DESIGN.md §6 validation run): full three-phase
-//! SPION training on a real synthetic workload through the AOT/PJRT stack,
-//! logging the loss curve and recording the run for EXPERIMENTS.md.
+//! SPION training on a real synthetic workload — through the AOT/PJRT
+//! stack, or fully offline with `--backend native` (rust full-encoder
+//! engine, no artifacts) — logging the loss curve and recording the run
+//! for EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example train_e2e -- --preset listops \
 //!        --kind cf --steps 300 --out results/train_e2e`
@@ -12,8 +14,8 @@
 
 use anyhow::Result;
 use spion::config::types::{preset, SparsityConfig};
-use spion::config::{ExperimentConfig, PatternKind, TrainConfig};
-use spion::coordinator::Trainer;
+use spion::config::{ExperimentConfig, PatternKind, TrainBackend, TrainConfig};
+use spion::coordinator::{NativeTrainer, Trainer};
 use spion::runtime::Runtime;
 use spion::util::cli::Args;
 use spion::util::json::Json;
@@ -25,8 +27,9 @@ fn main() -> Result<()> {
         &[
             ("preset <name>", "model preset (tiny|image|listops|retrieval)"),
             ("kind <k>", "dense|bigbird|reformer|c|f|cf (default cf)"),
+            ("backend <b>", "pjrt (AOT artifacts) | native (rust engine, offline)"),
             ("steps <n>", "total training steps (default 300)"),
-            ("lr <f>", "Adam learning rate (default 1e-3)"),
+            ("lr <f>", "learning rate (default 1e-3; Adam on pjrt, SGD+momentum on native)"),
             ("seed <n>", "run seed (default 42)"),
             ("workers <n>", "exec workers (0 = all cores; default 1 = serial)"),
             ("out <dir>", "output directory (default results/train_e2e)"),
@@ -38,6 +41,13 @@ fn main() -> Result<()> {
     let mut train = TrainConfig::default();
     train.steps = args.usize_or("steps", 300);
     train.lr = args.f64_or("lr", 1e-3);
+    train.momentum = spion::config::types::validate_momentum(
+        args.f64_or("momentum", train.momentum),
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let backend_arg = args.str_or("backend", "pjrt");
+    train.backend = TrainBackend::parse(&backend_arg)
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend {backend_arg} (native|pjrt)"))?;
     train.seed = args.u64_or("seed", 42);
     train.max_dense_steps = args.usize_or("max-dense-steps", 60);
     let mut sparsity = SparsityConfig::for_model(kind, task, &model);
@@ -60,9 +70,10 @@ fn main() -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
 
     println!(
-        "== train_e2e: preset={} kind={} steps={} L={} D={} H={} N={} batch={} workers={} ==",
+        "== train_e2e: preset={} kind={} backend={} steps={} L={} D={} H={} N={} batch={} workers={} ==",
         model.preset,
         exp.sparsity.kind.name(),
+        exp.train.backend.name(),
         exp.train.steps,
         model.seq_len,
         model.d_model,
@@ -72,14 +83,31 @@ fn main() -> Result<()> {
         exp.exec.resolved_workers()
     );
 
-    let rt = Runtime::cpu()?;
-    let trainer = Trainer::new(&rt, exp)?.verbose(true);
+    let kind_name = exp.sparsity.kind.name().to_string();
+    let steps = exp.train.steps;
+    let kind_tag = kind_name.to_lowercase().replace('-', "_");
+    let ck_path = format!("{out_dir}/{}_{kind_tag}.ckpt", model.preset);
     let t0 = std::time::Instant::now();
-    let outcome = trainer.run()?;
+    // Each backend saves through its own save_checkpoint so the example
+    // writes byte-identical checkpoints to `spion train`.
+    let outcome = match exp.train.backend {
+        TrainBackend::Native => {
+            let trainer = NativeTrainer::new(exp)?.verbose(true);
+            let outcome = trainer.run()?;
+            trainer.save_checkpoint(&outcome, &ck_path)?;
+            outcome
+        }
+        TrainBackend::Pjrt => {
+            let rt = Runtime::cpu()?;
+            let trainer = Trainer::new(&rt, exp)?.verbose(true);
+            let outcome = trainer.run()?;
+            trainer.save_checkpoint(&outcome, &ck_path)?;
+            outcome
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     // --- outputs ---
-    let kind_tag = trainer.exp.sparsity.kind.name().to_lowercase().replace('-', "_");
     let csv_path = format!("{out_dir}/{}_{kind_tag}_loss.csv", model.preset);
     outcome.metrics.save(&csv_path)?;
     if let Some(masks) = &outcome.masks {
@@ -87,14 +115,12 @@ fn main() -> Result<()> {
             std::fs::write(format!("{out_dir}/{}_{kind_tag}_pattern_l{n}.txt", model.preset), m.render())?;
         }
     }
-    let ck_path = format!("{out_dir}/{}_{kind_tag}.ckpt", model.preset);
-    trainer.save_checkpoint(&outcome, &ck_path)?;
 
     let m = &outcome.metrics;
     let summary = Json::obj(vec![
         ("preset", Json::Str(model.preset.clone())),
-        ("kind", Json::Str(trainer.exp.sparsity.kind.name().into())),
-        ("steps", Json::Num(trainer.exp.train.steps as f64)),
+        ("kind", Json::Str(kind_name.clone())),
+        ("steps", Json::Num(steps as f64)),
         ("wall_s", Json::Num(wall)),
         ("transition_step", m.transition_step.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
         ("pattern_density", Json::arr_f64(&m.pattern_density)),

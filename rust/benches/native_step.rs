@@ -1,0 +1,115 @@
+//! Native-backend full train step: per-step time of the rust full-encoder
+//! forward+backward (embedding → N layers → classifier → loss → SGD grads)
+//! with dense vs SPION-sparse attention, across exec worker counts.
+//!
+//! This is the Fig. 5 comparison lifted from the attention core to the
+//! *whole* train step the native backend actually executes — the sparse
+//! rows show how much of the paper's attention speedup survives once the
+//! (dense) projections/FFN/LayerNorm surround it.
+//!
+//! Run: cargo bench --bench native_step [-- --workers 1,2,4 --batch 4]
+
+mod common;
+
+use common::worker_counts;
+use spion::config::types::{preset, SparsityConfig};
+use spion::config::{ModelConfig, PatternKind};
+use spion::exec::{Exec, ExecConfig};
+use spion::model::grad::ModelGrads;
+use spion::model::{train_step_sample, ModelParams};
+use spion::pattern::spion::synth_attention_scores;
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::util::bench::{bench, Report};
+use spion::util::cli::Args;
+use spion::util::rng::Rng;
+
+fn masks_for(model: &ModelConfig, exp_block: usize, alpha: f64) -> Vec<BlockMask> {
+    let mut sparsity =
+        SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), exp_block, alpha);
+    sparsity.pattern.filter = spion::config::types::default_filter(model);
+    let mut rng = Rng::new(9);
+    (0..model.layers)
+        .map(|_| {
+            let scores = synth_attention_scores(
+                model.seq_len,
+                1.0,
+                0.3,
+                &[model.seq_len / 3],
+                0.05,
+                &mut rng,
+            );
+            spion::pattern::spion::generate_pattern(&scores, &sparsity.pattern)
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env();
+    args.help_if_requested(
+        "Native full-encoder train-step bench (dense vs SPION-sparse)",
+        &[
+            ("preset <name>", "model preset (default tiny)"),
+            ("workers <list>", "comma-separated worker counts (default 1,2,4)"),
+            ("batch <n>", "samples per measured step (default: preset batch)"),
+            ("alpha <f>", "pattern quantile (default 0.9)"),
+        ],
+    );
+    let preset_name = args.str_or("preset", "tiny");
+    let (task, model) = preset(&preset_name).expect("unknown preset");
+    let batch = args.usize_or("batch", model.batch);
+    let block = spion::config::types::default_block(&model);
+    let alpha = args.f64_or("alpha", 0.9);
+
+    let params = ModelParams::init_random(&model, 42);
+    let masks = masks_for(&model, block, alpha);
+    let density: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
+    let gen = spion::data::make_task(task, model.seq_len, model.vocab, model.classes);
+    let mut batcher = spion::data::batcher::Batcher::new(gen, batch, 7);
+    let b = batcher.next_batch();
+
+    println!(
+        "== native_step: preset={preset_name} L={} D={} H={} N={} batch={batch} density={density:.3} ==",
+        model.seq_len, model.d_model, model.heads, model.layers
+    );
+    let mut report = Report::new(
+        "Native full train step (fwd+bwd, all parameters)",
+        &["attention", "workers", "step", "per-sample"],
+    );
+
+    for &workers in &worker_counts() {
+        let exec = Exec::new(ExecConfig::with_workers(workers));
+        let inner = exec.serial_view();
+        for (name, layer_masks) in [("dense", None), ("spion-cf", Some(masks.as_slice()))] {
+            let stats = bench(name, || {
+                // One batch = the unit the trainer times per step; samples
+                // fan out over the pool exactly as NativeTrainer does.
+                let per_sample = exec.par_map(batch, |i| {
+                    let mut g = ModelGrads::zeros_like(&params);
+                    let toks = &b.x[i * model.seq_len..(i + 1) * model.seq_len];
+                    train_step_sample(
+                        &inner,
+                        &params,
+                        model.heads,
+                        layer_masks,
+                        toks,
+                        b.y[i],
+                        false,
+                        &mut g,
+                    );
+                    g
+                });
+                std::hint::black_box(&per_sample);
+            });
+            report.row(vec![
+                name.to_string(),
+                workers.to_string(),
+                stats.per_iter_human(),
+                spion::util::bench::format_ms(stats.median_ms / batch as f64),
+            ]);
+        }
+    }
+    report.print();
+    if let Some(csv) = args.get("out") {
+        report.save_csv(csv);
+    }
+}

@@ -89,9 +89,22 @@ pub fn dense_attention_train(
     w.scale(scale);
     softmax_rows(&mut w);
     let _o = w.matmul(v);
-    // Backward (standard attention gradients). Transpose-free products
-    // (`matmul_tn`) keep every access streaming row-major — see the perf
-    // log in EXPERIMENTS.md §Perf (L3).
+    dense_attention_backward_cached(q, k, v, scale, &w, d_out)
+}
+
+/// Backward of one dense attention head given the forward's softmax
+/// probabilities `w` (what a training loop caches instead of re-running the
+/// forward). Returns (dQ, dK, dV). Transpose-free products (`matmul_tn`)
+/// keep every access streaming row-major — see the perf log in
+/// EXPERIMENTS.md §Perf (L3).
+pub fn dense_attention_backward_cached(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    w: &Mat,
+    d_out: &Mat,
+) -> (Mat, Mat, Mat) {
     let dv = w.matmul_tn(d_out);
     let dw = d_out.matmul_nt(v);
     let l = w.rows;
@@ -177,6 +190,25 @@ mod tests {
         assert_allclose(&dq.data, &ws.dq.data, 1e-3, 1e-4).unwrap();
         assert_allclose(&dk.data, &ws.dk.data, 1e-3, 1e-4).unwrap();
         assert_allclose(&dv.data, &ws.dv.data, 1e-3, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn backward_cached_matches_train_path() {
+        // The cached backward (forward probs supplied) must equal the
+        // recompute-forward path bit-for-bit — it is the same code.
+        let mut rng = Rng::new(12);
+        let (l, dh) = (10, 6);
+        let q = Mat::random_normal(l, dh, 0.9, &mut rng);
+        let k = Mat::random_normal(l, dh, 0.9, &mut rng);
+        let v = Mat::random_normal(l, dh, 0.9, &mut rng);
+        let cot = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (dq, dk, dv) = dense_attention_train(&q, &k, &v, scale, &cot);
+        let (_, w) = dense_attention_head(&q, &k, &v, scale);
+        let (dq2, dk2, dv2) = dense_attention_backward_cached(&q, &k, &v, scale, &w, &cot);
+        assert_eq!(dq.data, dq2.data);
+        assert_eq!(dk.data, dk2.data);
+        assert_eq!(dv.data, dv2.data);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 pub mod dense;
 pub mod sparse;
 
-pub use dense::{dense_attention_head, dense_attention_train, dense_mha, dense_mha_with};
+pub use dense::{
+    dense_attention_backward_cached, dense_attention_head, dense_attention_train, dense_mha,
+    dense_mha_with,
+};
 pub use sparse::{
     sparse_attention_head, sparse_attention_head_with, sparse_attention_train,
     sparse_attention_train_with, sparse_mha, sparse_mha_with, MhaWorkspace, SparseWorkspace,

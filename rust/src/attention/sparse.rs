@@ -196,6 +196,25 @@ impl TrainWorkspace {
             dv: Mat::zeros(l, head_dim),
         }
     }
+
+    /// Backward only, reusing the softmax probabilities left in `fwd.s` by
+    /// the most recent forward over this workspace (the full-encoder native
+    /// trainer runs the forward during its own forward sweep and calls this
+    /// during the reverse sweep). Gradients land in `dq`/`dk`/`dv`.
+    pub fn backward_with(
+        &mut self,
+        exec: &Exec,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        scale: f32,
+        d_out: &Mat,
+    ) {
+        let TrainWorkspace { fwd, grad_buf, dq, dk, dv } = self;
+        crate::sparse::backward::sparse_attention_backward_with(
+            exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
+        );
+    }
 }
 
 /// One full sparse-attention training pass: forward (Alg. 5) + backward
@@ -224,11 +243,8 @@ pub fn sparse_attention_train_with(
     d_out: &Mat,
     ws: &mut TrainWorkspace,
 ) {
-    let TrainWorkspace { fwd, grad_buf, dq, dk, dv } = ws;
-    sparse_attention_head_with(exec, q, k, v, scale, fwd);
-    crate::sparse::backward::sparse_attention_backward_with(
-        exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
-    );
+    sparse_attention_head_with(exec, q, k, v, scale, &mut ws.fwd);
+    ws.backward_with(exec, q, k, v, scale, d_out);
 }
 
 #[cfg(test)]

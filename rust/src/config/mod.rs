@@ -5,5 +5,6 @@ pub mod toml;
 pub mod types;
 
 pub use types::{
-    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind, TrainConfig,
+    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind,
+    TrainBackend, TrainConfig,
 };

@@ -107,10 +107,44 @@ impl ModelConfig {
     }
 }
 
+/// Which engine executes the train step (`[train] backend` in TOML,
+/// `--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrainBackend {
+    /// AOT-compiled PJRT artifacts (requires `make artifacts` and a real
+    /// xla backend; the vendored stub reports unavailable).
+    #[default]
+    Pjrt,
+    /// The in-crate full-encoder forward/backward + SGD(+momentum) on the
+    /// exec pool — no artifacts directory, fully offline.
+    Native,
+}
+
+impl TrainBackend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Some(Self::Pjrt),
+            "native" | "rust" => Some(Self::Native),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pjrt => "pjrt",
+            Self::Native => "native",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub steps: usize,
     pub lr: f64,
+    /// Momentum coefficient of the native backend's SGD optimizer
+    /// (ignored by the PJRT backend, whose artifacts bake Adam).
+    pub momentum: f64,
+    /// Train-step engine: PJRT artifacts or the rust-native encoder.
+    pub backend: TrainBackend,
     pub seed: u64,
     /// Frobenius transition threshold α of Eq. 2 / Algorithm 2.
     pub transition_threshold: f64,
@@ -124,11 +158,23 @@ pub struct TrainConfig {
     pub snapshot_every: usize,
 }
 
+/// Shared momentum-range validation (TOML `train.momentum` and every
+/// `--momentum` CLI path): μ ≥ 1 makes the SGD velocity grow geometrically
+/// and the run diverge silently, so reject it at parse time.
+pub fn validate_momentum(v: f64) -> Result<f64, String> {
+    if !(0.0..1.0).contains(&v) {
+        return Err(format!("train.momentum must be in [0, 1), got {v}"));
+    }
+    Ok(v)
+}
+
 impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             steps: 200,
             lr: 1e-3,
+            momentum: 0.9,
+            backend: TrainBackend::default(),
             seed: 42,
             transition_threshold: 0.05,
             min_dense_steps: 10,
@@ -288,6 +334,13 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         if let Some(v) = t.get("lr").and_then(|v| v.as_float()) {
             train.lr = v;
         }
+        if let Some(v) = t.get("momentum").and_then(|v| v.as_float()) {
+            train.momentum = validate_momentum(v)?;
+        }
+        if let Some(v) = t.get("backend").and_then(|v| v.as_str()) {
+            train.backend =
+                TrainBackend::parse(v).ok_or(format!("unknown train backend {v:?}"))?;
+        }
         if let Some(v) = t.get("seed").and_then(|v| v.as_int()) {
             train.seed = v as u64;
         }
@@ -401,6 +454,24 @@ mod tests {
         // §5: image 96 < listops 98 < retrieval 99.
         assert!(default_alpha(TaskKind::Image, true) < default_alpha(TaskKind::ListOps, true));
         assert!(default_alpha(TaskKind::ListOps, true) < default_alpha(TaskKind::Retrieval, true));
+    }
+
+    #[test]
+    fn train_backend_from_toml() {
+        let cfg = experiment_from_toml(
+            "preset = \"tiny\"\n[train]\nbackend = \"native\"\nmomentum = 0.85\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.backend, TrainBackend::Native);
+        assert_eq!(cfg.train.momentum, 0.85);
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(d.train.backend, TrainBackend::Pjrt, "default backend unchanged");
+        assert!(experiment_from_toml("preset = \"tiny\"\n[train]\nbackend = \"tpu\"").is_err());
+        assert!(experiment_from_toml("preset = \"tiny\"\n[train]\nmomentum = 1.5").is_err());
+        for name in ["pjrt", "xla", "native", "rust"] {
+            assert!(TrainBackend::parse(name).is_some(), "{name}");
+        }
+        assert_eq!(TrainBackend::parse("native").unwrap().name(), "native");
     }
 
     #[test]

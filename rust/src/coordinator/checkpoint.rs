@@ -1,17 +1,39 @@
-//! Parameter checkpoints: flat binary format (magic, tensor count, per-tensor
-//! rank/dims/f32 data) so the rust-native inference engine and the serving
-//! example can load weights trained through the PJRT path.
+//! Parameter checkpoints: flat binary format (magic, tensor count,
+//! per-tensor rank/dims/f32 data) plus an **optional trained-mask section**
+//! (`SPIONMK1`), so serving runs the exact per-layer sparsity pattern the
+//! run trained instead of regenerating one from synthetic scores.
+//!
+//! Compatibility: the mask section is appended after the tensor payload —
+//! pre-mask checkpoints (which end at the last tensor) load with
+//! `masks: None`, and readers that predate the section simply stopped at
+//! the tensor count, so both directions round-trip.
+//!
+//! Robustness: `load` never trusts a length field it has not bounded
+//! against the file size — a truncated or corrupted file produces an
+//! `anyhow` error with the byte offset of the bad field, not an OOM
+//! allocation or a panic.
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
+use crate::pattern::BlockMask;
+
 const MAGIC: &[u8; 8] = b"SPIONCK1";
+const MASK_MAGIC: &[u8; 8] = b"SPIONMK1";
+/// Sanity bounds on structural fields (far above any real model, small
+/// enough to reject garbage before allocating).
+const MAX_NAME_LEN: usize = 4096;
+const MAX_RANK: usize = 8;
+const MAX_MASK_LAYERS: usize = 4096;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub preset: String,
     pub step: u64,
     pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
+    /// Per-layer block masks of the trained run's sparse phase (None for
+    /// dense runs and pre-mask-format checkpoints).
+    pub masks: Option<Vec<BlockMask>>,
 }
 
 impl Checkpoint {
@@ -26,6 +48,9 @@ impl Checkpoint {
         f.write_all(name)?;
         f.write_all(&self.step.to_le_bytes())?;
         f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        // Reused staging buffer: batch the f32 payload into few large
+        // `write_all`s instead of one syscall-bound 4-byte write per element.
+        let mut buf: Vec<u8> = Vec::with_capacity(64 * 1024);
         for (shape, data) in &self.tensors {
             f.write_all(&(shape.len() as u32).to_le_bytes())?;
             for &d in shape {
@@ -35,80 +60,267 @@ impl Checkpoint {
             if expect != data.len() {
                 return Err(anyhow!("tensor shape {shape:?} != data len {}", data.len()));
             }
-            for &v in data {
-                f.write_all(&v.to_le_bytes())?;
+            for chunk in data.chunks(16 * 1024) {
+                buf.clear();
+                for &v in chunk {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                f.write_all(&buf)?;
+            }
+        }
+        if let Some(masks) = &self.masks {
+            f.write_all(MASK_MAGIC)?;
+            f.write_all(&(masks.len() as u32).to_le_bytes())?;
+            for m in masks {
+                f.write_all(&(m.lb as u32).to_le_bytes())?;
+                f.write_all(&(m.block as u32).to_le_bytes())?;
+                buf.clear();
+                buf.extend(m.bits.iter().map(|&b| b as u8));
+                f.write_all(&buf)?;
             }
         }
         Ok(())
     }
 
     pub fn load(path: &str) -> Result<Self> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path}"))?,
-        );
+        let file =
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path}"))?;
+        let file_len = file.metadata().with_context(|| format!("stat {path}"))?.len();
+        let mut r = Reader { inner: std::io::BufReader::new(file), offset: 0, len: file_len };
+
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        r.read_exact(&mut magic, "magic")?;
         if &magic != MAGIC {
-            return Err(anyhow!("{path}: not a SPION checkpoint"));
+            bail!("{path}: not a SPION checkpoint");
         }
-        let name_len = read_u32(&mut f)? as usize;
+        let name_len = r.u32("preset name length")? as usize;
+        if name_len > MAX_NAME_LEN {
+            bail!("{path}: preset name length {name_len} exceeds {MAX_NAME_LEN} (offset {})", r.offset);
+        }
+        r.check_remaining(name_len as u64, "preset name")?;
         let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
+        r.read_exact(&mut name, "preset name")?;
         let mut step = [0u8; 8];
-        f.read_exact(&mut step)?;
-        let n = read_u32(&mut f)? as usize;
+        r.read_exact(&mut step, "step")?;
+        let n = r.u32("tensor count")? as usize;
+        // Each tensor needs at least a rank field: bound the count before
+        // the `Vec::with_capacity` below can amplify a corrupt field.
+        if (n as u64) * 4 > r.remaining() {
+            bail!(
+                "{path}: tensor count {n} cannot fit in the {} bytes after offset {}",
+                r.remaining(),
+                r.offset
+            );
+        }
         let mut tensors = Vec::with_capacity(n);
-        for _ in 0..n {
-            let rank = read_u32(&mut f)? as usize;
+        for t in 0..n {
+            let rank = r.u32(&format!("tensor {t} rank"))? as usize;
+            if rank > MAX_RANK {
+                bail!("{path}: tensor {t} rank {rank} exceeds {MAX_RANK} (offset {})", r.offset);
+            }
+            r.check_remaining(rank as u64 * 8, "tensor dims")?;
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
-                let mut d = [0u8; 8];
-                f.read_exact(&mut d)?;
-                shape.push(u64::from_le_bytes(d) as usize);
+                shape.push(r.u64(&format!("tensor {t} dim"))? as usize);
             }
-            let count: usize = shape.iter().product();
-            let mut bytes = vec![0u8; count * 4];
-            f.read_exact(&mut bytes)?;
-            let data = bytes
+            let count = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    anyhow!("{path}: tensor {t} shape {shape:?} overflows (offset {})", r.offset)
+                })?;
+            let bytes = (count as u64)
+                .checked_mul(4)
+                .ok_or_else(|| anyhow!("{path}: tensor {t} byte size overflows"))?;
+            if bytes > r.remaining() {
+                bail!(
+                    "{path}: tensor {t} shape {shape:?} needs {bytes} bytes but only {} remain after offset {}",
+                    r.remaining(),
+                    r.offset
+                );
+            }
+            let mut raw = vec![0u8; count * 4];
+            r.read_exact(&mut raw, &format!("tensor {t} data"))?;
+            let data = raw
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             tensors.push((shape, data));
         }
+
+        let masks = Self::load_mask_section(&mut r, path)?;
+
         Ok(Self {
-            preset: String::from_utf8(name)?,
+            preset: String::from_utf8(name)
+                .with_context(|| format!("{path}: preset name is not UTF-8"))?,
             step: u64::from_le_bytes(step),
             tensors,
+            masks,
         })
+    }
+
+    /// Optional trailing mask section: EOF ⇒ None (pre-mask format); mask
+    /// magic ⇒ parse; anything else ⇒ error (trailing garbage).
+    fn load_mask_section(r: &mut Reader, path: &str) -> Result<Option<Vec<BlockMask>>> {
+        let mut magic = [0u8; 8];
+        match r.try_read_8(&mut magic)? {
+            0 => return Ok(None),
+            8 if &magic == MASK_MAGIC => {}
+            got => bail!(
+                "{path}: {got} trailing bytes at offset {} are not a mask section",
+                r.offset - got as u64
+            ),
+        }
+        let layers = r.u32("mask layer count")? as usize;
+        if layers > MAX_MASK_LAYERS {
+            bail!("{path}: mask layer count {layers} exceeds {MAX_MASK_LAYERS}");
+        }
+        let mut masks = Vec::with_capacity(layers);
+        for i in 0..layers {
+            let lb = r.u32(&format!("mask {i} lb"))? as usize;
+            let block = r.u32(&format!("mask {i} block"))? as usize;
+            if lb == 0 || block == 0 || lb > 1 << 16 || block > 1 << 16 {
+                bail!("{path}: mask {i} has implausible lb={lb} block={block} (offset {})", r.offset);
+            }
+            let bits_len = lb * lb;
+            r.check_remaining(bits_len as u64, &format!("mask {i} bitmap"))?;
+            let mut raw = vec![0u8; bits_len];
+            r.read_exact(&mut raw, &format!("mask {i} bitmap"))?;
+            masks.push(BlockMask { lb, block, bits: raw.into_iter().map(|b| b != 0).collect() });
+        }
+        if r.remaining() > 0 {
+            bail!(
+                "{path}: {} trailing bytes after the mask section (offset {})",
+                r.remaining(),
+                r.offset
+            );
+        }
+        Ok(Some(masks))
     }
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// Byte-counting reader: every failure reports the offset it happened at,
+/// and length fields can be validated against the bytes actually left.
+struct Reader {
+    inner: std::io::BufReader<std::fs::File>,
+    offset: u64,
+    len: u64,
+}
+
+impl Reader {
+    fn remaining(&self) -> u64 {
+        self.len.saturating_sub(self.offset)
+    }
+
+    fn check_remaining(&self, need: u64, what: &str) -> Result<()> {
+        if need > self.remaining() {
+            bail!(
+                "truncated checkpoint: {what} needs {need} bytes but only {} remain after offset {}",
+                self.remaining(),
+                self.offset
+            );
+        }
+        Ok(())
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        self.inner
+            .read_exact(buf)
+            .with_context(|| format!("reading {what} at byte offset {}", self.offset))?;
+        self.offset += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Read up to 8 bytes; returns how many were read (0 at clean EOF).
+    fn try_read_8(&mut self, buf: &mut [u8; 8]) -> Result<usize> {
+        let mut got = 0;
+        while got < 8 {
+            let n = self
+                .inner
+                .read(&mut buf[got..])
+                .with_context(|| format!("probing section at byte offset {}", self.offset))?;
+            if n == 0 {
+                break;
+            }
+            got += n;
+        }
+        self.offset += got as u64;
+        Ok(got)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(name).to_str().unwrap().to_string()
+    }
+
+    fn sample_tensors() -> Vec<(Vec<usize>, Vec<f32>)> {
+        vec![
+            (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            (vec![4], vec![-1.0, 0.0, 1.0, 2.5]),
+        ]
+    }
+
     #[test]
     fn roundtrip() {
         let ck = Checkpoint {
             preset: "tiny".into(),
             step: 123,
-            tensors: vec![
-                (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
-                (vec![4], vec![-1.0, 0.0, 1.0, 2.5]),
-            ],
+            tensors: sample_tensors(),
+            masks: None,
         };
-        let path = std::env::temp_dir().join("spion_ck_test.bin");
-        let path = path.to_str().unwrap();
-        ck.save(path).unwrap();
-        let back = Checkpoint::load(path).unwrap();
+        let path = tmp("spion_ck_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
-        std::fs::remove_file(path).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_masks() {
+        let mut m0 = BlockMask::empty(4, 8);
+        m0.set_diagonal();
+        m0.set(0, 3, true);
+        let mut m1 = BlockMask::empty(4, 8);
+        m1.set_diagonal();
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 9,
+            tensors: sample_tensors(),
+            masks: Some(vec![m0.clone(), m1.clone()]),
+        };
+        let path = tmp("spion_ck_masks.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.masks, Some(vec![m0, m1]));
+        assert_eq!(back.tensors, ck.tensors);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn maskless_file_reads_as_none() {
+        // A checkpoint written without masks is byte-identical to the
+        // pre-mask format — it must load with masks: None.
+        let ck = Checkpoint { preset: "x".into(), step: 1, tensors: sample_tensors(), masks: None };
+        let path = tmp("spion_ck_old.bin");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().masks, None);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -117,17 +329,120 @@ mod tests {
             preset: "x".into(),
             step: 0,
             tensors: vec![(vec![2, 2], vec![1.0])],
+            masks: None,
         };
-        let path = std::env::temp_dir().join("spion_ck_bad.bin");
-        assert!(ck.save(path.to_str().unwrap()).is_err());
-        std::fs::remove_file(path).ok();
+        let path = tmp("spion_ck_bad.bin");
+        assert!(ck.save(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn rejects_wrong_magic() {
-        let path = std::env::temp_dir().join("spion_ck_magic.bin");
+        let path = tmp("spion_ck_magic.bin");
         std::fs::write(&path, b"NOTSPION____").unwrap();
-        assert!(Checkpoint::load(path.to_str().unwrap()).is_err());
-        std::fs::remove_file(path).ok();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Corrupt one structural field and confirm load errors (with offset
+    /// context) instead of over-allocating or panicking.
+    fn corrupt_and_load(name: &str, mutate: impl FnOnce(&mut Vec<u8>)) -> String {
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 3,
+            tensors: sample_tensors(),
+            masks: Some(vec![BlockMask::full(2, 4)]),
+        };
+        let path = tmp(name);
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        mutate(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).expect_err("corrupt checkpoint must error");
+        std::fs::remove_file(&path).ok();
+        format!("{err:#}")
+    }
+
+    #[test]
+    fn huge_name_len_is_bounded() {
+        let msg = corrupt_and_load("spion_ck_name.bin", |b| {
+            b[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+        assert!(msg.contains("name"), "{msg}");
+    }
+
+    #[test]
+    fn huge_tensor_count_is_bounded() {
+        let msg = corrupt_and_load("spion_ck_count.bin", |b| {
+            // offset: 8 magic + 4 name_len + 4 name + 8 step = 24.
+            b[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+        assert!(msg.contains("tensor count"), "{msg}");
+    }
+
+    #[test]
+    fn huge_dim_is_bounded() {
+        let msg = corrupt_and_load("spion_ck_dim.bin", |b| {
+            // First tensor: rank u32 at 28, first dim u64 at 32.
+            b[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        });
+        assert!(msg.contains("offset") || msg.contains("overflow"), "{msg}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 3,
+            tensors: sample_tensors(),
+            masks: None,
+        };
+        let path = tmp("spion_ck_trunc.bin");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [10, 26, 30, 44, bytes.len() - 3] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = Checkpoint::load(&path).expect_err(&format!("cut at {cut}"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains("offset") || msg.contains("remain"), "cut {cut}: {msg}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        // Both after the tensor payload (no mask section)…
+        let ck = Checkpoint { preset: "t".into(), step: 1, tensors: sample_tensors(), masks: None };
+        let path = tmp("spion_ck_trail.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("trailing"), "{msg}");
+        // …and after a mask section.
+        let ck = Checkpoint {
+            preset: "t".into(),
+            step: 1,
+            tensors: sample_tensors(),
+            masks: Some(vec![BlockMask::full(2, 4)]),
+        };
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("trailing"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_truncated_fixture_still_rejected() {
+        // The fixture from tests/config_and_failures.rs: valid magic then
+        // a claimed 4-byte name with only 2 bytes present.
+        let path = tmp("spion_ck_legacy.bin");
+        std::fs::write(&path, b"SPIONCK1\x04\x00\x00\x00ti").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

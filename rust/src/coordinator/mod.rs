@@ -4,8 +4,20 @@
 //! convergence), plus pattern dispatch for the baseline policies.
 
 pub mod checkpoint;
+pub mod native;
 pub mod phase;
 pub mod trainer;
 
+pub use native::NativeTrainer;
 pub use phase::TransitionDetector;
 pub use trainer::{TrainOutcome, Trainer};
+
+/// Eval-set size shared by both trainer backends: `SPION_EVAL_BATCHES`
+/// env override, default 8, floored at 1 so accuracy is never 0/0.
+pub(crate) fn eval_batches() -> usize {
+    std::env::var("SPION_EVAL_BATCHES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8usize)
+        .max(1)
+}

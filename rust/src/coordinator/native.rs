@@ -1,0 +1,319 @@
+//! The rust-native three-phase trainer (Algorithm 2) — same phase
+//! structure as [`super::trainer::Trainer`], but every step runs the
+//! in-crate full-encoder forward/backward (`model::train`) instead of an
+//! AOT-compiled PJRT artifact. No `artifacts/` directory is required: with
+//! the vendored `xla` stub this is the path that makes `spion train` work
+//! end-to-end offline.
+//!
+//! Phase 1 (dense): dense MHA, snapshotting the per-layer batch- and
+//! head-averaged A^s. Phase boundary: the shared [`TransitionDetector`] +
+//! [`super::phase::transition_should_fire`] rule. Pattern generation: the
+//! same per-layer dispatch as the PJRT trainer. Phase 2 (sparse): the
+//! block-CSR kernels (fused/SIMD per the exec config) with the frozen
+//! masks, forward *and* backward.
+//!
+//! Parallelism & determinism: batch samples fan out over the exec pool
+//! (`par_map`), each with a serial inner kernel context; per-sample
+//! gradients are folded in sample order, so the batch gradient — and hence
+//! the whole training trajectory — is bit-identical at any worker count
+//! (tier 1 of the DESIGN.md determinism ladder).
+//!
+//! Optimizer: momentum SGD owned by this module ([`SgdMomentum`]); the
+//! PJRT artifacts bake Adam, so the two backends share phases and kernels
+//! but not optimizer state — see DESIGN.md §Native training backend.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ExperimentConfig, PatternKind};
+use crate::data::{batcher::Batcher, make_task};
+use crate::exec::Exec;
+use crate::metrics::{Phase, StepRecord, TrainMetrics};
+use crate::model::grad::{ModelGrads, SgdMomentum};
+use crate::model::train::train_step_sample;
+use crate::model::{Encoder, ModelParams};
+use crate::pattern::BlockMask;
+use crate::tensor::Mat;
+use crate::util::Stopwatch;
+
+use super::checkpoint::Checkpoint;
+use super::phase::{transition_should_fire, TransitionDetector};
+use super::trainer::{generate_masks_for_with, TrainOutcome};
+
+pub struct NativeTrainer {
+    pub exp: ExperimentConfig,
+    exec: Exec,
+    verbose: bool,
+}
+
+impl NativeTrainer {
+    pub fn new(exp: ExperimentConfig) -> Result<Self> {
+        let m = &exp.model;
+        if m.heads == 0 || m.d_model % m.heads != 0 {
+            return Err(anyhow!("d_model {} not divisible by heads {}", m.d_model, m.heads));
+        }
+        if !matches!(exp.sparsity.kind, PatternKind::Dense) {
+            let b = exp.sparsity.pattern.block;
+            if b == 0 || m.seq_len % b != 0 {
+                return Err(anyhow!(
+                    "pattern block {b} does not divide seq_len {} (preset {})",
+                    m.seq_len,
+                    m.preset
+                ));
+            }
+        }
+        if m.batch == 0 {
+            return Err(anyhow!("batch must be ≥ 1"));
+        }
+        let exec = Exec::new(exp.exec);
+        Ok(Self { exp, exec, verbose: false })
+    }
+
+    pub fn verbose(mut self, v: bool) -> Self {
+        self.verbose = v;
+        self
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            println!("[native] {msg}");
+        }
+    }
+
+    /// Full Algorithm-2 run on the native engine. Returns metrics, the
+    /// generated masks (None for the dense baseline) and the final
+    /// parameters — the same [`TrainOutcome`] the PJRT trainer produces.
+    pub fn run(&self) -> Result<TrainOutcome> {
+        let cfg = &self.exp;
+        let m = &cfg.model;
+        let mut params = ModelParams::init_random(m, cfg.train.seed);
+        let mut opt =
+            SgdMomentum::new(&params, cfg.train.lr as f32, cfg.train.momentum as f32);
+        let task = make_task(cfg.task, m.seq_len, m.vocab, m.classes);
+        let mut batcher = Batcher::new(task, m.batch, cfg.train.seed);
+
+        let mut detector = TransitionDetector::new(cfg.train.transition_threshold);
+        let mut metrics = TrainMetrics::default();
+        let mut masks: Option<Vec<BlockMask>> = None;
+        let mut grads = ModelGrads::zeros_like(&params);
+
+        for step in 0..cfg.train.steps {
+            let batch = batcher.next_batch();
+            let sw = Stopwatch::start();
+            let dense_phase = masks.is_none();
+            let snapshot_due = dense_phase
+                && !matches!(cfg.sparsity.kind, PatternKind::Dense)
+                && (step % cfg.train.snapshot_every == 0
+                    || step + 1 == cfg.train.max_dense_steps);
+
+            // Fan samples out over the pool; serial kernels inside each
+            // sample (the batch is the outer parallel axis).
+            let inner = self.exec.serial_view();
+            let params_ref = &params;
+            let masks_ref = masks.as_deref();
+            let per_sample = self.exec.par_map(m.batch, |b| {
+                let mut g = ModelGrads::zeros_like(params_ref);
+                let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
+                let r = train_step_sample(
+                    &inner,
+                    params_ref,
+                    m.heads,
+                    masks_ref,
+                    toks,
+                    batch.y[b],
+                    snapshot_due,
+                    &mut g,
+                );
+                (r.loss, r.correct, g, r.scores)
+            });
+
+            // Ordered fold: bit-identical batch gradient at any worker count.
+            grads.zero();
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0usize;
+            let mut score_acc: Option<Vec<Mat>> = None;
+            for (loss, ok, g, scores) in per_sample {
+                loss_sum += loss;
+                correct += ok as usize;
+                grads.add_assign(&g);
+                if let Some(s) = scores {
+                    match &mut score_acc {
+                        None => score_acc = Some(s),
+                        Some(acc) => {
+                            for (a, b) in acc.iter_mut().zip(&s) {
+                                a.add_assign(b);
+                            }
+                        }
+                    }
+                }
+            }
+            grads.scale(1.0 / m.batch as f32);
+            opt.step(&mut params, &grads);
+
+            metrics.record(StepRecord {
+                step,
+                phase: if dense_phase { Phase::Dense } else { Phase::Sparse },
+                loss: (loss_sum / m.batch as f64) as f32,
+                acc: correct as f32 / m.batch as f32,
+                step_ms: sw.elapsed_ms(),
+            });
+
+            if let Some(mut scores) = score_acc {
+                for s in &mut scores {
+                    s.scale(1.0 / m.batch as f32);
+                }
+                let stable = detector.observe(&scores);
+                let min_ok = step >= cfg.train.min_dense_steps;
+                let forced = step + 1 >= cfg.train.max_dense_steps;
+                if transition_should_fire(cfg.sparsity.kind, stable, min_ok, forced) {
+                    let gen = generate_masks_for_with(&self.exec, cfg, &scores)?;
+                    metrics.transition_step = Some(step);
+                    metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
+                    self.log(&format!(
+                        "transition at step {step}: densities {:?}",
+                        metrics.pattern_density
+                    ));
+                    masks = Some(gen);
+                }
+            }
+
+            if self.verbose && step % 10 == 0 {
+                let r = metrics.records.last().unwrap();
+                self.log(&format!(
+                    "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
+                    r.phase.name(),
+                    r.loss,
+                    r.acc,
+                    r.step_ms
+                ));
+            }
+        }
+
+        let eval_acc = self.evaluate(&params, masks.as_deref(), &batcher)?;
+        metrics.eval_accuracy = Some(eval_acc);
+        self.log(&format!("eval accuracy {eval_acc:.4}"));
+
+        let final_params = params.to_flat();
+        Ok(TrainOutcome { metrics, masks, final_params })
+    }
+
+    /// Accuracy over the fixed eval set (same stream the PJRT trainer
+    /// evaluates on), through the rust-native encoder.
+    pub fn evaluate(
+        &self,
+        params: &ModelParams,
+        masks: Option<&[BlockMask]>,
+        batcher: &Batcher,
+    ) -> Result<f64> {
+        let m = &self.exp.model;
+        let eval_batches = super::eval_batches();
+        let mut enc =
+            Encoder::new(params.clone(), m.heads).with_exec(self.exec.clone());
+        if let Some(ms) = masks {
+            enc = enc.with_masks(ms.to_vec())?;
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for batch in batcher.eval_set(eval_batches, self.exp.train.seed) {
+            let logits = enc.forward_batch(&batch.x, batch.batch);
+            for (i, &label) in batch.y.iter().enumerate() {
+                if crate::tensor::ops::argmax(logits.row(i)) == label as usize {
+                    correct += 1;
+                }
+            }
+            total += batch.y.len();
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Checkpoint with the trained per-layer masks embedded, so `spion
+    /// serve` runs the *trained* sparsity pattern rather than regenerating
+    /// one from synthetic scores.
+    pub fn save_checkpoint(&self, outcome: &TrainOutcome, path: &str) -> Result<()> {
+        Checkpoint {
+            preset: self.exp.model.preset.clone(),
+            step: outcome.metrics.records.len() as u64,
+            tensors: outcome.final_params.clone(),
+            masks: outcome.masks.clone(),
+        }
+        .save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::types::SparsityConfig;
+    use crate::config::{ModelConfig, TaskKind, TrainConfig};
+    use crate::pattern::SpionVariant;
+
+    pub(crate) fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfig {
+        let model = ModelConfig {
+            preset: "micro".into(),
+            seq_len: 32,
+            d_model: 16,
+            heads: 2,
+            layers: 2,
+            ffn_dim: 32,
+            vocab: 20,
+            classes: 10,
+            batch: 4,
+        };
+        let mut train = TrainConfig::default();
+        train.steps = steps;
+        train.lr = 0.02;
+        train.min_dense_steps = 4;
+        train.max_dense_steps = 8;
+        train.snapshot_every = 2;
+        let mut sparsity = SparsityConfig::new(kind, 8, 0.7);
+        sparsity.pattern.filter = 3;
+        ExperimentConfig {
+            task: TaskKind::ListOps,
+            model,
+            train,
+            sparsity,
+            exec: crate::exec::ExecConfig::with_workers(workers),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut exp = micro_exp(PatternKind::Spion(SpionVariant::CF), 1, 1);
+        exp.sparsity.pattern.block = 7; // 32 % 7 != 0
+        assert!(NativeTrainer::new(exp).is_err());
+        let mut exp = micro_exp(PatternKind::Dense, 1, 1);
+        exp.model.heads = 3; // 16 % 3 != 0
+        assert!(NativeTrainer::new(exp).is_err());
+    }
+
+    #[test]
+    fn dense_baseline_never_transitions() {
+        std::env::set_var("SPION_EVAL_BATCHES", "1");
+        let exp = micro_exp(PatternKind::Dense, 6, 1);
+        let outcome = NativeTrainer::new(exp).unwrap().run().unwrap();
+        assert!(outcome.metrics.transition_step.is_none());
+        assert!(outcome.masks.is_none());
+        assert!(outcome.metrics.records.iter().all(|r| r.phase == Phase::Dense));
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_trajectory() {
+        // The whole training trajectory must be bit-identical at any worker
+        // count: ordered gradient fold + serial inner kernels.
+        std::env::set_var("SPION_EVAL_BATCHES", "1");
+        let run = |workers: usize| {
+            let exp = micro_exp(PatternKind::Spion(SpionVariant::CF), 10, workers);
+            NativeTrainer::new(exp).unwrap().run().unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.metrics.records.len(), parallel.metrics.records.len());
+        for (a, b) in serial.metrics.records.iter().zip(&parallel.metrics.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+        }
+        assert_eq!(serial.masks, parallel.masks);
+        for (a, b) in serial.final_params.iter().zip(&parallel.final_params) {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -7,7 +7,26 @@
 //! written for a single A^s stream; per-layer streams stabilize together in
 //! practice and a single switch point keeps the phase structure of Fig. 2).
 
+use crate::config::PatternKind;
 use crate::tensor::Mat;
+
+/// The dense→sparse firing rule shared by both trainer backends
+/// (Algorithm 2 line 11 plus the fixed-pattern-baseline harmonization of
+/// DESIGN.md §3): SPION variants fire when the Frobenius criterion holds
+/// (or the dense cap forces it), BigBird/Reformer fire as soon as the
+/// minimum dense warm-up has elapsed, the dense baseline never fires.
+pub fn transition_should_fire(
+    kind: PatternKind,
+    stable: bool,
+    min_ok: bool,
+    forced: bool,
+) -> bool {
+    match kind {
+        PatternKind::Dense => false,
+        PatternKind::BigBird | PatternKind::Reformer => min_ok,
+        PatternKind::Spion(_) => min_ok && (stable || forced),
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct TransitionDetector {

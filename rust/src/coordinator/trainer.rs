@@ -149,15 +149,12 @@ impl<'r> Trainer<'r> {
                     last_scores = Some(scores);
                     let min_ok = step >= cfg.train.min_dense_steps;
                     let forced = step + 1 >= cfg.train.max_dense_steps;
-                    let fixed_baseline = matches!(
+                    let fire = super::phase::transition_should_fire(
                         cfg.sparsity.kind,
-                        PatternKind::BigBird | PatternKind::Reformer
+                        stable,
+                        min_ok,
+                        forced,
                     );
-                    let fire = match cfg.sparsity.kind {
-                        PatternKind::Dense => false,
-                        _ if fixed_baseline => min_ok,
-                        _ => min_ok && (stable || forced),
-                    };
                     if fire {
                         let scores = last_scores.as_ref().unwrap();
                         let gen = self.generate_masks(scores)?;
@@ -224,10 +221,7 @@ impl<'r> Trainer<'r> {
         batcher: &Batcher,
     ) -> Result<f64> {
         let m = &self.artifacts.manifest;
-        let eval_batches = std::env::var("SPION_EVAL_BATCHES")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(8usize);
+        let eval_batches = super::eval_batches();
         let exe = match masks {
             Some(_) => self.rt.load(&self.artifacts.path("sparse_fwd"))?,
             None => self.rt.load(&self.artifacts.path("dense_fwd"))?,
@@ -251,7 +245,7 @@ impl<'r> Trainer<'r> {
             }
             total += batch.y.len();
         }
-        Ok(correct as f64 / total as f64)
+        Ok(correct as f64 / total.max(1) as f64)
     }
 
     /// Per-layer pattern dispatch (pure; unit-tested without a runtime).
@@ -267,6 +261,7 @@ impl<'r> Trainer<'r> {
             preset: self.exp.model.preset.clone(),
             step: outcome.metrics.records.len() as u64,
             tensors: outcome.final_params.clone(),
+            masks: outcome.masks.clone(),
         }
         .save(path)
     }

@@ -11,8 +11,8 @@
 use anyhow::Result;
 use spion::config::types::{preset, presets};
 use spion::config::types::SparsityConfig;
-use spion::config::{ExecConfig, ExperimentConfig, PatternKind, TrainConfig};
-use spion::coordinator::Trainer;
+use spion::config::{ExecConfig, ExperimentConfig, PatternKind, TrainBackend, TrainConfig};
+use spion::coordinator::{NativeTrainer, TrainOutcome, Trainer};
 use spion::exec::Exec;
 use spion::runtime::Runtime;
 use spion::util::cli::Args;
@@ -44,10 +44,13 @@ fn print_help() {
          USAGE: spion <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n\
          \x20 train     --preset tiny --kind cf --steps 200 --lr 1e-3 [--config file.toml]\n\
+         \x20           --backend native|pjrt (native = rust full-encoder engine, no artifacts;\n\
+         \x20           pjrt = AOT artifacts; --momentum tunes the native SGD optimizer)\n\
          \x20 pattern   --variant cf --l 256 --block 16 --alpha 0.9\n\
          \x20 ops       --l 4096 --d 64 --density 0.1\n\
          \x20 data      --task listops --n 3\n\
          \x20 serve     --preset tiny --checkpoint ck.bin [--kind cf] --requests 64\n\
+         \x20           (checkpoints with trained masks serve that pattern; --kind dense opts out)\n\
          \x20 presets\n\n\
          GLOBAL OPTIONS:\n\
          \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
@@ -93,6 +96,15 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         if args.has("simd") {
             exp.exec.kernel.simd = args.bool_or("simd", exp.exec.kernel.simd);
         }
+        if let Some(b) = args.get("backend") {
+            exp.train.backend = TrainBackend::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("unknown --backend {b} (native|pjrt)"))?;
+        }
+        if args.has("momentum") {
+            exp.train.momentum =
+                spion::config::types::validate_momentum(args.f64_or("momentum", exp.train.momentum))
+                    .map_err(|e| anyhow::anyhow!(e))?;
+        }
         return Ok(exp);
     }
     let preset_name = args.str_or("preset", "tiny");
@@ -107,6 +119,13 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     let mut train = TrainConfig::default();
     train.steps = args.usize_or("steps", train.steps);
     train.lr = args.f64_or("lr", train.lr);
+    train.momentum =
+        spion::config::types::validate_momentum(args.f64_or("momentum", train.momentum))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(b) = args.get("backend") {
+        train.backend = TrainBackend::parse(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {b} (native|pjrt)"))?;
+    }
     train.seed = args.u64_or("seed", train.seed);
     train.max_dense_steps = args.usize_or("max-dense-steps", train.max_dense_steps);
     train.min_dense_steps = args.usize_or("min-dense-steps", train.min_dense_steps);
@@ -124,10 +143,11 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
 fn run_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
     println!(
-        "training preset={} task={:?} kind={} steps={} (L={}, D={}, H={}, N={}, workers={})",
+        "training preset={} task={:?} kind={} backend={} steps={} (L={}, D={}, H={}, N={}, workers={})",
         exp.model.preset,
         exp.task,
         exp.sparsity.kind.name(),
+        exp.train.backend.name(),
         exp.train.steps,
         exp.model.seq_len,
         exp.model.d_model,
@@ -135,16 +155,39 @@ fn run_train(args: &Args) -> Result<()> {
         exp.model.layers,
         exp.exec.resolved_workers()
     );
-    let rt = Runtime::cpu()?;
-    let trainer = Trainer::new(&rt, exp)?.verbose(true);
-    let outcome = trainer.run()?;
+    match exp.train.backend {
+        TrainBackend::Native => {
+            // Fully offline: no artifacts directory, no PJRT — the rust
+            // full-encoder engine runs all three phases.
+            let trainer = NativeTrainer::new(exp)?.verbose(true);
+            let outcome = trainer.run()?;
+            report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
+        }
+        TrainBackend::Pjrt => {
+            let rt = Runtime::cpu()?;
+            let trainer = Trainer::new(&rt, exp)?.verbose(true);
+            let outcome = trainer.run()?;
+            report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
+        }
+    }
+}
+
+/// Shared tail of `run_train`: metrics CSV, checkpoint, summary line.
+fn report_train(
+    args: &Args,
+    outcome: &TrainOutcome,
+    save: impl Fn(&TrainOutcome, &str) -> Result<()>,
+) -> Result<()> {
     if let Some(csv) = args.get("metrics-out") {
         outcome.metrics.save(csv)?;
         println!("metrics written to {csv}");
     }
     if let Some(ck) = args.get("checkpoint-out") {
-        trainer.save_checkpoint(&outcome, ck)?;
-        println!("checkpoint written to {ck}");
+        save(outcome, ck)?;
+        println!(
+            "checkpoint written to {ck}{}",
+            if outcome.masks.is_some() { " (with trained masks)" } else { "" }
+        );
     }
     println!(
         "done: final loss {:.4}, eval acc {:.4}, transition at {:?}",
@@ -223,32 +266,45 @@ fn run_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Batched inference serving over a trained checkpoint (rust-native engine;
-/// dense by default, SPION-sparse with `--kind cf` — pattern regenerated
-/// from synthetic scores unless the checkpoint came with pattern renders).
+/// Batched inference serving over a trained checkpoint (rust-native
+/// engine). Pattern selection: the checkpoint's *trained* per-layer masks
+/// whenever it carries them (so serving runs the exact sparsity pattern
+/// training froze — `--kind dense` opts out); only maskless checkpoints
+/// fall back to regenerating a pattern of `--kind` from synthetic scores.
 fn run_serve(args: &Args) -> Result<()> {
     use spion::model::{Encoder, ModelParams};
     use spion::serve::{BatchPolicy, InferenceServer};
     let preset_name = args.str_or("preset", "tiny");
     let (task, model) =
         preset(&preset_name).ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
-    let params = if let Some(ck_path) = args.get("checkpoint") {
+    let (params, trained_masks) = if let Some(ck_path) = args.get("checkpoint") {
         let ck = spion::coordinator::checkpoint::Checkpoint::load(ck_path)?;
         println!("loaded checkpoint {ck_path} (step {})", ck.step);
-        ModelParams::from_checkpoint(&ck, model.layers)?
+        (ModelParams::from_checkpoint(&ck, model.layers)?, ck.masks)
     } else {
         anyhow::bail!("--checkpoint required (train one with `spion train --checkpoint-out ...`)");
     };
-    let kind = PatternKind::parse(&args.str_or("kind", "dense"))
+    // Without --kind: trained masks if present, else dense. With --kind:
+    // dense forces dense; sparse kinds prefer the trained masks and only
+    // regenerate synthetically when the checkpoint has none.
+    let kind = PatternKind::parse(&args.str_or("kind", if trained_masks.is_some() { "cf" } else { "dense" }))
         .ok_or_else(|| anyhow::anyhow!("unknown --kind"))?;
     // Kernel config (--fused/--simd) flows into every worker's encoder
     // clone; request-level parallelism stays on the serve pool, so the
     // per-encoder exec is serial (workers: 1).
     let ecfg = exec_from_args(args);
     let kernel_exec = Exec::new(ExecConfig { workers: 1, ..ecfg });
-    let encoder = match kind {
-        PatternKind::Dense => Encoder::new(params, model.heads).with_exec(kernel_exec),
-        _ => {
+    let encoder = match (kind, trained_masks) {
+        (PatternKind::Dense, _) => Encoder::new(params, model.heads).with_exec(kernel_exec),
+        (_, Some(masks)) => {
+            let d: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
+            println!(
+                "serving with {} trained masks from checkpoint, mean density {d:.3}",
+                masks.len()
+            );
+            Encoder::new(params, model.heads).with_masks(masks)?.with_exec(kernel_exec)
+        }
+        (_, None) => {
             let exp = ExperimentConfig {
                 task,
                 model: model.clone(),
@@ -267,8 +323,12 @@ fn run_serve(args: &Args) -> Result<()> {
                 .collect();
             let masks = spion::coordinator::trainer::generate_masks_for(&exp, &scores)?;
             let d: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
-            println!("serving with {} pattern, mean density {d:.3}", kind.name());
-            Encoder::new(params, model.heads).with_masks(masks).with_exec(kernel_exec)
+            println!(
+                "serving with {} pattern, mean density {d:.3} — note: checkpoint has no \
+                 trained masks, pattern regenerated from synthetic scores",
+                kind.name()
+            );
+            Encoder::new(params, model.heads).with_masks(masks)?.with_exec(kernel_exec)
         }
     };
     let serve_workers = ecfg.resolved_workers();

@@ -1,15 +1,15 @@
 //! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`],
 //! with either dense MHA or the block-sparse engine (Algorithm 5).
 
+use anyhow::{bail, Result};
+
 use crate::attention::{dense_mha, sparse_mha_with, MhaWorkspace};
 use crate::exec::Exec;
 use crate::pattern::BlockMask;
 use crate::tensor::ops::{add_bias, layernorm, mean_rows, relu};
 use crate::tensor::Mat;
 
-use super::ModelParams;
-
-const LN_EPS: f32 = 1e-6; // matches python/compile/model.py
+use super::{ModelParams, LN_EPS};
 
 /// Cloneable so the serving layer can hand each pool worker its own
 /// instance (parameters and workspaces are deep-copied; workspaces are
@@ -35,12 +35,33 @@ impl Encoder {
     }
 
     /// Switch to sparse attention with per-layer masks.
-    pub fn with_masks(mut self, masks: Vec<BlockMask>) -> Self {
-        assert_eq!(masks.len(), self.params.layers.len());
+    ///
+    /// Errors (rather than panicking — a bad checkpoint must not kill the
+    /// serving process) when the mask count does not match the layer count
+    /// or a mask does not cover the model's sequence length.
+    pub fn with_masks(mut self, masks: Vec<BlockMask>) -> Result<Self> {
+        if masks.len() != self.params.layers.len() {
+            bail!(
+                "mask count {} does not match encoder layer count {}",
+                masks.len(),
+                self.params.layers.len()
+            );
+        }
+        let l = self.params.seq_len();
+        for (n, m) in masks.iter().enumerate() {
+            if m.seq_len() != l {
+                bail!(
+                    "layer {n}: mask covers {} tokens ({}×{} blocks), model expects {l}",
+                    m.seq_len(),
+                    m.lb,
+                    m.block
+                );
+            }
+        }
         let d = self.params.d_model();
         self.sparse = Some(masks.iter().map(|m| MhaWorkspace::new(m, self.heads, d)).collect());
         self.masks = Some(masks);
-        self
+        Ok(self)
     }
 
     /// Run the attention kernels on `exec` (serve path: `--fused`/`--simd`
@@ -155,7 +176,7 @@ mod tests {
         let (ld, _) = dense.forward(&toks);
         let full = vec![BlockMask::full(4, 4), BlockMask::full(4, 4)];
         let mut sparse =
-            Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2).with_masks(full);
+            Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2).with_masks(full).unwrap();
         let (ls, _) = sparse.forward(&toks);
         assert_allclose(&ld, &ls, 1e-4, 1e-5).unwrap();
     }
@@ -168,6 +189,19 @@ mod tests {
         let batch = enc.forward_batch(&toks, 2);
         let (one, _) = enc.forward(&toks[16..32]);
         assert_allclose(batch.row(1), &one, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn with_masks_rejects_mismatches() {
+        let mut rng = Rng::new(5);
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let mk = || Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2);
+        // Wrong layer count.
+        assert!(mk().with_masks(vec![BlockMask::full(4, 4)]).is_err());
+        // Wrong sequence coverage (3×4 = 12 ≠ 16).
+        assert!(mk().with_masks(vec![BlockMask::full(3, 4), BlockMask::full(3, 4)]).is_err());
+        // Matching masks are accepted.
+        assert!(mk().with_masks(vec![BlockMask::full(4, 4), BlockMask::full(2, 8)]).is_ok());
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Parameter gradients + the native optimizer.
+//!
+//! [`ModelGrads`] mirrors [`ModelParams`] field-for-field (manifest order),
+//! so the full-encoder backward (`model::train`) can accumulate into a
+//! structure that lines up with the parameters it differentiates, and the
+//! optimizer can walk both in lockstep. [`SgdMomentum`] is the native
+//! backend's optimizer: classical momentum SGD (the PJRT artifacts bake
+//! Adam; the native loop keeps its own, simpler state — see DESIGN.md
+//! §Native training backend for why the two backends are allowed to
+//! differ here).
+
+use crate::tensor::Mat;
+
+use super::params::{LayerParams, ModelParams};
+
+/// Per-layer gradient block, mirroring [`LayerParams`].
+#[derive(Debug, Clone)]
+pub struct LayerGrads {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub wf: Mat,
+    pub bf: Vec<f32>,
+    pub we: Mat,
+    pub be: Vec<f32>,
+}
+
+/// Full gradient set, mirroring [`ModelParams`].
+#[derive(Debug, Clone)]
+pub struct ModelGrads {
+    pub embed: Mat,
+    pub pos: Mat,
+    pub layers: Vec<LayerGrads>,
+    pub cls_w: Mat,
+    pub cls_b: Vec<f32>,
+}
+
+impl ModelGrads {
+    pub fn zeros_like(p: &ModelParams) -> Self {
+        let zmat = |m: &Mat| Mat::zeros(m.rows, m.cols);
+        Self {
+            embed: zmat(&p.embed),
+            pos: zmat(&p.pos),
+            layers: p
+                .layers
+                .iter()
+                .map(|lp| LayerGrads {
+                    ln1_g: vec![0.0; lp.ln1_g.len()],
+                    ln1_b: vec![0.0; lp.ln1_b.len()],
+                    wq: zmat(&lp.wq),
+                    wk: zmat(&lp.wk),
+                    wv: zmat(&lp.wv),
+                    wo: zmat(&lp.wo),
+                    ln2_g: vec![0.0; lp.ln2_g.len()],
+                    ln2_b: vec![0.0; lp.ln2_b.len()],
+                    wf: zmat(&lp.wf),
+                    bf: vec![0.0; lp.bf.len()],
+                    we: zmat(&lp.we),
+                    be: vec![0.0; lp.be.len()],
+                })
+                .collect(),
+            cls_w: zmat(&p.cls_w),
+            cls_b: vec![0.0; p.cls_b.len()],
+        }
+    }
+
+    /// Reset every gradient to zero (step-to-step buffer reuse).
+    pub fn zero(&mut self) {
+        for s in self.slices_mut() {
+            s.fill(0.0);
+        }
+    }
+
+    /// `self += other` (batch accumulation; fold samples in index order to
+    /// keep the sum bit-identical at any worker count).
+    pub fn add_assign(&mut self, other: &ModelGrads) {
+        for (a, b) in self.slices_mut().into_iter().zip(other.slices()) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for sl in self.slices_mut() {
+            for v in sl {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Global gradient L2 norm (diagnostics / tests).
+    pub fn l2_norm(&self) -> f64 {
+        self.slices()
+            .into_iter()
+            .flat_map(|s| s.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// All gradient tensors as flat slices, in manifest order.
+    pub fn slices(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = Vec::with_capacity(4 + 12 * self.layers.len());
+        out.push(&self.embed.data);
+        out.push(&self.pos.data);
+        for l in &self.layers {
+            out.push(&l.ln1_g);
+            out.push(&l.ln1_b);
+            out.push(&l.wq.data);
+            out.push(&l.wk.data);
+            out.push(&l.wv.data);
+            out.push(&l.wo.data);
+            out.push(&l.ln2_g);
+            out.push(&l.ln2_b);
+            out.push(&l.wf.data);
+            out.push(&l.bf);
+            out.push(&l.we.data);
+            out.push(&l.be);
+        }
+        out.push(&self.cls_w.data);
+        out.push(&self.cls_b);
+        out
+    }
+
+    /// Mutable flat views, in manifest order.
+    pub fn slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut out: Vec<&mut [f32]> = Vec::with_capacity(4 + 12 * self.layers.len());
+        out.push(&mut self.embed.data);
+        out.push(&mut self.pos.data);
+        for l in &mut self.layers {
+            let LayerGrads { ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, wf, bf, we, be } = l;
+            out.push(ln1_g);
+            out.push(ln1_b);
+            out.push(&mut wq.data);
+            out.push(&mut wk.data);
+            out.push(&mut wv.data);
+            out.push(&mut wo.data);
+            out.push(ln2_g);
+            out.push(ln2_b);
+            out.push(&mut wf.data);
+            out.push(bf);
+            out.push(&mut we.data);
+            out.push(be);
+        }
+        out.push(&mut self.cls_w.data);
+        out.push(&mut self.cls_b);
+        out
+    }
+}
+
+/// Mutable flat views over the *parameters*, in the same manifest order as
+/// [`ModelGrads::slices`] — the lockstep walk the optimizer relies on.
+pub fn param_slices_mut(p: &mut ModelParams) -> Vec<&mut [f32]> {
+    let mut out: Vec<&mut [f32]> = Vec::with_capacity(4 + 12 * p.layers.len());
+    out.push(&mut p.embed.data);
+    out.push(&mut p.pos.data);
+    for l in &mut p.layers {
+        let LayerParams { ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, wf, bf, we, be } = l;
+        out.push(ln1_g);
+        out.push(ln1_b);
+        out.push(&mut wq.data);
+        out.push(&mut wk.data);
+        out.push(&mut wv.data);
+        out.push(&mut wo.data);
+        out.push(ln2_g);
+        out.push(ln2_b);
+        out.push(&mut wf.data);
+        out.push(bf);
+        out.push(&mut we.data);
+        out.push(be);
+    }
+    out.push(&mut p.cls_w.data);
+    out.push(&mut p.cls_b);
+    out
+}
+
+/// Classical momentum SGD: `v ← μ·v + g`, `p ← p − lr·v`.
+#[derive(Debug, Clone)]
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: ModelGrads,
+}
+
+impl SgdMomentum {
+    pub fn new(params: &ModelParams, lr: f32, momentum: f32) -> Self {
+        Self { lr, momentum, vel: ModelGrads::zeros_like(params) }
+    }
+
+    pub fn step(&mut self, params: &mut ModelParams, grads: &ModelGrads) {
+        let mu = self.momentum;
+        let lr = self.lr;
+        for (v, g) in self.vel.slices_mut().into_iter().zip(grads.slices()) {
+            debug_assert_eq!(v.len(), g.len());
+            for (vv, &gv) in v.iter_mut().zip(g) {
+                *vv = mu * *vv + gv;
+            }
+        }
+        for (p, v) in param_slices_mut(params).into_iter().zip(self.vel.slices()) {
+            for (pv, &vv) in p.iter_mut().zip(v) {
+                *pv -= lr * vv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::ModelParams;
+    use crate::util::rng::Rng;
+
+    fn mk_params() -> ModelParams {
+        let mut rng = Rng::new(1);
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        ModelParams::from_flat(&flat, 2).unwrap()
+    }
+
+    #[test]
+    fn grads_mirror_param_layout() {
+        let mut p = mk_params();
+        let g = ModelGrads::zeros_like(&p);
+        let gs = g.slices();
+        let ps = param_slices_mut(&mut p);
+        assert_eq!(gs.len(), ps.len());
+        assert_eq!(gs.len(), 2 + 12 * 2 + 2, "manifest tensor count");
+        for (a, b) in gs.iter().zip(&ps) {
+            assert_eq!(a.len(), b.len());
+        }
+    }
+
+    #[test]
+    fn accumulate_scale_zero() {
+        let p = mk_params();
+        let mut a = ModelGrads::zeros_like(&p);
+        let mut b = ModelGrads::zeros_like(&p);
+        b.layers[0].wq.data[3] = 2.0;
+        b.cls_b[1] = -4.0;
+        a.add_assign(&b);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.layers[0].wq.data[3], 2.0);
+        assert_eq!(a.cls_b[1], -4.0);
+        assert!(a.l2_norm() > 0.0);
+        a.zero();
+        assert_eq!(a.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn sgd_momentum_matches_reference_sequence() {
+        // One parameter, analytic trace: v1=g, p1=p0-lr·g;
+        // v2=μg+g, p2=p1-lr·v2.
+        let mut p = mk_params();
+        let idx = 5;
+        let p0 = p.embed.data[idx];
+        let mut g = ModelGrads::zeros_like(&p);
+        g.embed.data[idx] = 1.5;
+        let mut opt = SgdMomentum::new(&p, 0.1, 0.9);
+        opt.step(&mut p, &g);
+        let p1 = p0 - 0.1 * 1.5;
+        assert!((p.embed.data[idx] - p1).abs() < 1e-6);
+        opt.step(&mut p, &g);
+        let p2 = p1 - 0.1 * (0.9 * 1.5 + 1.5);
+        assert!((p.embed.data[idx] - p2).abs() < 1e-6);
+    }
+}

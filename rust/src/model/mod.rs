@@ -1,13 +1,28 @@
-//! Rust-native encoder inference engine.
+//! Rust-native encoder engine: inference *and* training.
 //!
 //! Mirrors the L2 JAX model exactly (same param layout, LN eps, masking
 //! semantics) so weights trained through the PJRT path can be served with
 //! zero python *and* zero XLA on the request path — this is the engine the
 //! serving router uses, and it is cross-validated against the `dense_fwd`
 //! artifact in `rust/tests/e2e_tiny.rs`.
+//!
+//! `grad` + `train` extend the engine with the full-encoder backward and
+//! the native optimizer, so the three-phase trainer can run entirely in
+//! Rust (`spion train --backend native`) — no AOT artifacts, the vendored
+//! `xla` stub covers the whole stack.
 
 pub mod encoder;
+pub mod grad;
 pub mod params;
+pub mod train;
+
+/// LayerNorm epsilon shared by the inference forward (`encoder`) and the
+/// training forward/backward (`train`) — one definition so weights are
+/// always trained and served with the same normalization. Matches the L2
+/// JAX model (`python/compile/model.py`, jax default 1e-6).
+pub(crate) const LN_EPS: f32 = 1e-6;
 
 pub use encoder::Encoder;
+pub use grad::{ModelGrads, SgdMomentum};
 pub use params::ModelParams;
+pub use train::{train_step_sample, SampleResult};

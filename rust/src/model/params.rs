@@ -3,8 +3,10 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::config::ModelConfig;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::tensor::Mat;
+use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct LayerParams {
@@ -80,6 +82,65 @@ impl ModelParams {
         Self::from_flat(&ck.tensors, layers)
     }
 
+    /// Fresh random initialization for the native training backend,
+    /// mirroring the L2 model's scheme (scaled-normal projections, identity
+    /// LayerNorm, zero biases). Deterministic from `seed`.
+    pub fn init_random(m: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let (d, ffn) = (m.d_model, m.ffn_dim);
+        let proj_std = (1.0 / d as f32).sqrt();
+        let mut mat = |r: usize, c: usize, std: f32, rng: &mut Rng| Mat::random_normal(r, c, std, rng);
+        let embed = mat(m.vocab, d, 0.1, &mut rng);
+        let pos = mat(m.seq_len, d, 0.1, &mut rng);
+        let layers = (0..m.layers)
+            .map(|_| LayerParams {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: mat(d, d, proj_std, &mut rng),
+                wk: mat(d, d, proj_std, &mut rng),
+                wv: mat(d, d, proj_std, &mut rng),
+                wo: mat(d, d, proj_std, &mut rng),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                wf: mat(d, ffn, proj_std, &mut rng),
+                bf: vec![0.0; ffn],
+                we: mat(ffn, d, (1.0 / ffn as f32).sqrt(), &mut rng),
+                be: vec![0.0; d],
+            })
+            .collect();
+        let cls_w = mat(d, m.classes, 0.1, &mut rng);
+        let cls_b = vec![0.0; m.classes];
+        Self { embed, pos, layers, cls_w, cls_b }
+    }
+
+    /// Flatten back to `(shape, data)` tensors in manifest order — the
+    /// inverse of [`Self::from_flat`], used for checkpointing the native
+    /// trainer's parameters.
+    pub fn to_flat(&self) -> Vec<(Vec<usize>, Vec<f32>)> {
+        let mut out: Vec<(Vec<usize>, Vec<f32>)> = Vec::with_capacity(4 + 12 * self.layers.len());
+        let mat = |m: &Mat| (vec![m.rows, m.cols], m.data.clone());
+        let vec1 = |v: &[f32]| (vec![v.len()], v.to_vec());
+        out.push(mat(&self.embed));
+        out.push(mat(&self.pos));
+        for l in &self.layers {
+            out.push(vec1(&l.ln1_g));
+            out.push(vec1(&l.ln1_b));
+            out.push(mat(&l.wq));
+            out.push(mat(&l.wk));
+            out.push(mat(&l.wv));
+            out.push(mat(&l.wo));
+            out.push(vec1(&l.ln2_g));
+            out.push(vec1(&l.ln2_b));
+            out.push(mat(&l.wf));
+            out.push(vec1(&l.bf));
+            out.push(mat(&l.we));
+            out.push(vec1(&l.be));
+        }
+        out.push(mat(&self.cls_w));
+        out.push(vec1(&self.cls_b));
+        out
+    }
+
     pub fn d_model(&self) -> usize {
         self.embed.cols
     }
@@ -142,6 +203,26 @@ pub(crate) mod tests {
         assert_eq!(p.d_model(), 8);
         assert_eq!(p.seq_len(), 16);
         assert_eq!(p.classes(), 4);
+    }
+
+    #[test]
+    fn init_random_to_flat_roundtrip() {
+        let (_, m) = crate::config::types::preset("tiny").unwrap();
+        let p = ModelParams::init_random(&m, 7);
+        assert_eq!(p.d_model(), m.d_model);
+        assert_eq!(p.seq_len(), m.seq_len);
+        assert_eq!(p.classes(), m.classes);
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), m.param_tensor_count());
+        let back = ModelParams::from_flat(&flat, m.layers).unwrap();
+        assert_eq!(back.embed.data, p.embed.data);
+        assert_eq!(back.layers[1].we.data, p.layers[1].we.data);
+        assert_eq!(back.cls_b, p.cls_b);
+        // Deterministic from the seed.
+        let p2 = ModelParams::init_random(&m, 7);
+        assert_eq!(p2.layers[0].wq.data, p.layers[0].wq.data);
+        let p3 = ModelParams::init_random(&m, 8);
+        assert_ne!(p3.layers[0].wq.data, p.layers[0].wq.data);
     }
 
     #[test]

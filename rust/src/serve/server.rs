@@ -227,7 +227,7 @@ mod tests {
         if sparse {
             let mut m = BlockMask::empty(4, 4);
             m.set_diagonal();
-            enc.with_masks(vec![m.clone(), m])
+            enc.with_masks(vec![m.clone(), m]).unwrap()
         } else {
             enc
         }

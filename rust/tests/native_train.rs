@@ -1,0 +1,267 @@
+//! Native training backend: finite-difference gradient checks over the
+//! *full encoder* (every parameter tensor, dense and sparse attention),
+//! the three-phase end-to-end loop with no artifacts directory, the
+//! checkpoint→serve mask round-trip, and (artifact-gated) a sanity
+//! comparison against the PJRT backend's loss trajectory.
+
+use spion::config::types::SparsityConfig;
+use spion::config::{ExperimentConfig, ModelConfig, PatternKind, TaskKind, TrainConfig};
+use spion::coordinator::checkpoint::Checkpoint;
+use spion::coordinator::NativeTrainer;
+use spion::exec::Exec;
+use spion::metrics::Phase;
+use spion::model::grad::{param_slices_mut, ModelGrads};
+use spion::model::{train_step_sample, Encoder, ModelParams};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::serve::{BatchPolicy, InferenceServer};
+use spion::util::rng::Rng;
+
+/// Tiny-but-complete shape: 2 layers, 2 heads, uneven FFN width — small
+/// enough that probing every tensor with central differences stays fast.
+fn micro_model() -> ModelConfig {
+    ModelConfig {
+        preset: "micro".into(),
+        seq_len: 8,
+        d_model: 6,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 10,
+        vocab: 9,
+        classes: 3,
+        batch: 2,
+    }
+}
+
+fn micro_tokens(l: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..l).map(|_| rng.below(vocab) as i32).collect()
+}
+
+fn loss_of(
+    exec: &Exec,
+    params: &ModelParams,
+    heads: usize,
+    masks: Option<&[BlockMask]>,
+    toks: &[i32],
+    label: i32,
+) -> f64 {
+    let mut g = ModelGrads::zeros_like(params);
+    train_step_sample(exec, params, heads, masks, toks, label, false, &mut g).loss
+}
+
+/// Probe a spread of coordinates in every parameter tensor with central
+/// differences and compare against the analytic gradient.
+fn fd_check_all_tensors(masks: Option<Vec<BlockMask>>) {
+    let m = micro_model();
+    let params = ModelParams::init_random(&m, 3);
+    let toks = micro_tokens(m.seq_len, m.vocab, 17);
+    let label = 1;
+    let exec = Exec::serial();
+    let masks_ref = masks.as_deref();
+
+    let mut grads = ModelGrads::zeros_like(&params);
+    train_step_sample(&exec, &params, m.heads, masks_ref, &toks, label, false, &mut grads);
+
+    let eps = 1e-2f32;
+    let mut pairs: Vec<(f64, f64)> = Vec::new(); // (finite-diff, analytic)
+    let analytic: Vec<Vec<f32>> = grads.slices().into_iter().map(|s| s.to_vec()).collect();
+    for (ti, g) in analytic.iter().enumerate() {
+        let stride = (g.len() / 6).max(1);
+        for idx in (0..g.len()).step_by(stride) {
+            let probe = |delta: f32| -> f64 {
+                let mut p = params.clone();
+                param_slices_mut(&mut p)[ti][idx] += delta;
+                loss_of(&exec, &p, m.heads, masks_ref, &toks, label)
+            };
+            let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+            let an = g[idx] as f64;
+            // Floor absorbs the f32-forward noise of the central difference
+            // (~1e-4 at this eps); real sign/scale errors on any non-tiny
+            // gradient still blow well past the threshold.
+            let err = (fd - an).abs() / (1e-2 + fd.abs().max(an.abs()));
+            assert!(
+                err < 0.05,
+                "tensor {ti} idx {idx}: finite-diff {fd:.6} vs analytic {an:.6} (rel {err:.4})"
+            );
+            pairs.push((fd, an));
+        }
+    }
+    assert!(pairs.len() > 100, "probed only {} coordinates", pairs.len());
+    // Global agreement: the two gradient vectors must point the same way.
+    let dot: f64 = pairs.iter().map(|(a, b)| a * b).sum();
+    let nf: f64 = pairs.iter().map(|(a, _)| a * a).sum::<f64>().sqrt();
+    let na: f64 = pairs.iter().map(|(_, b)| b * b).sum::<f64>().sqrt();
+    assert!(na > 0.0, "analytic gradient is identically zero");
+    let cos = dot / (nf * na);
+    assert!(cos > 0.995, "finite-diff vs analytic cosine similarity {cos}");
+}
+
+#[test]
+fn full_encoder_gradients_match_finite_differences_dense() {
+    fd_check_all_tensors(None);
+}
+
+#[test]
+fn full_encoder_gradients_match_finite_differences_sparse() {
+    // Block-diagonal + one off-diagonal block per layer (L=8, B=4 → lb=2).
+    let mut m0 = BlockMask::empty(2, 4);
+    m0.set_diagonal();
+    m0.set(0, 1, true);
+    let mut m1 = BlockMask::empty(2, 4);
+    m1.set_diagonal();
+    m1.set(1, 0, true);
+    fd_check_all_tensors(Some(vec![m0, m1]));
+}
+
+fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfig {
+    let model = ModelConfig {
+        preset: "micro".into(),
+        seq_len: 32,
+        d_model: 16,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 32,
+        vocab: 20,
+        classes: 10,
+        batch: 4,
+    };
+    let mut train = TrainConfig::default();
+    train.steps = steps;
+    train.lr = 0.02; // SGD+momentum step; Adam's 1e-3 default is too timid here
+    train.min_dense_steps = 4;
+    train.max_dense_steps = 8;
+    train.snapshot_every = 2;
+    let mut sparsity = SparsityConfig::new(kind, 8, 0.7);
+    sparsity.pattern.filter = 3;
+    ExperimentConfig {
+        task: TaskKind::ListOps,
+        model,
+        train,
+        sparsity,
+        exec: spion::exec::ExecConfig::with_workers(workers),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn native_three_phase_loop_decreases_loss_and_serves_trained_masks() {
+    // NOTE: every test in this binary sets the same value — the tests run
+    // on parallel threads and env vars are process-global, so differing
+    // values would race.
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let exp = micro_exp(PatternKind::Spion(SpionVariant::CF), 40, 1);
+    let trainer = NativeTrainer::new(exp).unwrap();
+    let outcome = trainer.run().unwrap();
+    let m = &outcome.metrics;
+
+    // Phase structure: dense prefix, sparse suffix, one transition in the
+    // configured window.
+    let t = m.transition_step.expect("transition fired");
+    assert!((4..=8).contains(&t), "transition at {t}");
+    assert!(m.records.iter().take(t).all(|r| r.phase == Phase::Dense));
+    assert!(m.records.iter().skip(t + 1).all(|r| r.phase == Phase::Sparse));
+
+    // Masks: per layer, block-sparse, diagonal forced on.
+    let masks = outcome.masks.as_ref().expect("masks generated");
+    assert_eq!(masks.len(), 2);
+    for mask in masks {
+        assert!(mask.density() < 1.0, "density {}", mask.density());
+        for k in 0..mask.lb {
+            assert!(mask.get(k, k), "diagonal block {k}");
+        }
+    }
+
+    // Optimization signal: the tail of the loss curve sits below the head.
+    let first = m.records.first().unwrap().loss;
+    let last_avg: f32 = m.records.iter().rev().take(5).map(|r| r.loss).sum::<f32>() / 5.0;
+    assert!(last_avg < first, "loss did not decrease: {first} → {last_avg}");
+    assert!(m.eval_accuracy.unwrap() >= 0.0);
+
+    // Checkpoint round-trip: tensors AND masks survive, and the serve
+    // stack runs the trained pattern.
+    let path = std::env::temp_dir().join("spion_native_e2e.ckpt");
+    let path = path.to_str().unwrap();
+    trainer.save_checkpoint(&outcome, path).unwrap();
+    let ck = Checkpoint::load(path).unwrap();
+    assert_eq!(ck.preset, "micro");
+    assert_eq!(ck.masks.as_ref(), outcome.masks.as_ref(), "trained masks persisted");
+    let params = ModelParams::from_checkpoint(&ck, 2).unwrap();
+    let enc = Encoder::new(params, 2).with_masks(ck.masks.unwrap()).unwrap();
+    assert!(enc.is_sparse());
+    let server = InferenceServer::start(enc, BatchPolicy::default());
+    let toks = micro_tokens(32, 20, 4);
+    let r = server.client().infer(toks).expect("served");
+    assert_eq!(r.logits.len(), 10);
+    assert!(r.logits.iter().all(|v| v.is_finite()));
+    server.shutdown();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn native_backend_runs_every_pattern_kind() {
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    for kind in PatternKind::all() {
+        let exp = micro_exp(kind, 10, 1);
+        let outcome = NativeTrainer::new(exp).unwrap().run().unwrap();
+        assert!(
+            outcome.metrics.final_loss().unwrap().is_finite(),
+            "{} diverged",
+            kind.name()
+        );
+        if matches!(kind, PatternKind::Dense) {
+            assert!(outcome.masks.is_none());
+        } else {
+            assert!(outcome.metrics.transition_step.is_some(), "{}", kind.name());
+        }
+    }
+}
+
+/// Native vs PJRT: the two backends use different inits and optimizers
+/// (SGD+momentum vs baked Adam), so trajectories are not bit-comparable —
+/// but on the same preset both must start near ln(classes) and both must
+/// optimize. Runs only when the AOT artifacts and a real XLA backend are
+/// present; skips (like the other artifact-gated suites) otherwise.
+#[test]
+fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return;
+    }
+    let rt = match spion::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT backend unavailable ({e:#})");
+            return;
+        }
+    };
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let (task, model) = spion::config::types::preset("tiny").unwrap();
+    let mk_exp = || {
+        let mut train = TrainConfig::default();
+        train.steps = 12;
+        train.min_dense_steps = 4;
+        train.max_dense_steps = 8;
+        train.snapshot_every = 2;
+        ExperimentConfig {
+            task,
+            model: model.clone(),
+            train,
+            sparsity: SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 16, 0.9),
+            exec: Default::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    };
+    let pjrt = spion::coordinator::Trainer::new(&rt, mk_exp()).unwrap().run().unwrap();
+    let mut nexp = mk_exp();
+    nexp.train.lr = 0.02; // SGD needs a larger step than Adam's 1e-3
+    let native = NativeTrainer::new(nexp).unwrap().run().unwrap();
+    let first = |o: &spion::coordinator::TrainOutcome| o.metrics.records.first().unwrap().loss;
+    let lnc = (model.classes as f32).ln();
+    assert!((first(&pjrt) - lnc).abs() < 1.0, "pjrt first loss {}", first(&pjrt));
+    assert!((first(&native) - lnc).abs() < 1.0, "native first loss {}", first(&native));
+    let tail = |o: &spion::coordinator::TrainOutcome| {
+        o.metrics.records.iter().rev().take(3).map(|r| r.loss).sum::<f32>() / 3.0
+    };
+    assert!(tail(&pjrt) < first(&pjrt) + 0.1, "pjrt did not optimize");
+    assert!(tail(&native) < first(&native) + 0.1, "native did not optimize");
+}

@@ -82,7 +82,7 @@ fn server_end_to_end_dense_and_sparse_agree_on_full_mask() {
     let dense = InferenceServer::start(Encoder::new(params.clone(), 2), BatchPolicy::default());
     let full = vec![BlockMask::full(4, 4), BlockMask::full(4, 4)];
     let sparse = InferenceServer::start(
-        Encoder::new(params, 2).with_masks(full),
+        Encoder::new(params, 2).with_masks(full).unwrap(),
         BatchPolicy::default(),
     );
     let rd = dense.client().infer(toks.clone()).unwrap();
@@ -96,13 +96,32 @@ fn server_end_to_end_dense_and_sparse_agree_on_full_mask() {
 }
 
 #[test]
+fn bad_checkpoint_masks_error_instead_of_killing_the_server() {
+    // A checkpoint whose mask section disagrees with the model must surface
+    // as a Result at encoder construction (the serve path propagates it),
+    // not as a panic that takes down the serving process.
+    let mut rng = Rng::new(11);
+    let params = random_params(&mut rng, 2);
+    // One mask for two layers.
+    let err = Encoder::new(params.clone(), 2)
+        .with_masks(vec![BlockMask::full(4, 4)])
+        .expect_err("layer-count mismatch must error");
+    assert!(format!("{err:#}").contains("mask count"), "{err:#}");
+    // Right count, wrong sequence coverage.
+    let err = Encoder::new(params, 2)
+        .with_masks(vec![BlockMask::full(2, 4), BlockMask::full(2, 4)])
+        .expect_err("seq-len mismatch must error");
+    assert!(format!("{err:#}").contains("tokens"), "{err:#}");
+}
+
+#[test]
 fn server_under_concurrent_load_serves_everything() {
     let mut rng = Rng::new(9);
     let params = random_params(&mut rng, 2);
     let mut mask = BlockMask::empty(4, 4);
     mask.set_diagonal();
     let server = InferenceServer::start(
-        Encoder::new(params, 2).with_masks(vec![mask.clone(), mask]),
+        Encoder::new(params, 2).with_masks(vec![mask.clone(), mask]).unwrap(),
         BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
     );
     let n_threads = 6;

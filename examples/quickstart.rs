@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         // `pattern_block`); `for_model` mirrors the AOT side.
         sparsity: SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model),
         exec: Default::default(),
+        serve: Default::default(),
         artifacts_dir: "artifacts".into(),
     };
 

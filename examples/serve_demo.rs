@@ -1,14 +1,16 @@
 //! Serving demo (Fig. 5 right-column analogue): batched inference through
-//! the request router, dense vs SPION-sparse attention, reporting
+//! the ticketed serving engine, dense vs SPION-sparse attention, reporting
 //! latency/throughput.
 //!
-//! The encoder is the rust-native engine (no python, no XLA on the request
-//! path). Weights come from a checkpoint if given (`--checkpoint` from
-//! train_e2e), else from the artifact `init` function so the demo is
-//! runnable standalone.
+//! Each client thread *queues* its whole request chunk first — blocking
+//! only on admission space (the bounded queue's backpressure), never on
+//! results — then waits the tickets. The encoder is the rust-native
+//! engine (no python, no XLA on the request path). Weights come from a
+//! checkpoint if given (`--checkpoint` from train_e2e), else from the
+//! artifact `init` function so the demo is runnable standalone.
 //!
 //! Run: `cargo run --release --example serve_demo -- --preset tiny \
-//!        --requests 64 --concurrency 8`
+//!        --requests 64 --concurrency 8 --queue-depth 128`
 
 use anyhow::Result;
 use spion::config::types::{preset, SparsityConfig};
@@ -20,9 +22,10 @@ use spion::model::{Encoder, ModelParams};
 use spion::pattern::SpionVariant;
 use spion::runtime::executor::lit;
 use spion::runtime::{ArtifactSet, Runtime};
-use spion::serve::{BatchPolicy, InferenceServer};
+use spion::serve::{Engine, ServeConfig};
 use spion::util::cli::Args;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
 fn load_params(
     args: &Args,
@@ -57,26 +60,24 @@ fn run_load(
     encoder: Encoder,
     tokens: &[Vec<i32>],
     concurrency: usize,
-    max_batch: usize,
-    workers: usize,
+    cfg: ServeConfig,
 ) -> Result<(f64, f64)> {
-    let server = InferenceServer::start_with_workers(
-        encoder,
-        BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
-        workers,
-    );
+    let engine = Arc::new(Engine::start(encoder, cfg)?);
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    let per_worker = tokens.len() / concurrency;
-    for w in 0..concurrency {
-        let client = server.client();
-        let chunk: Vec<Vec<i32>> = tokens[w * per_worker..(w + 1) * per_worker].to_vec();
+    // div_ceil so a non-divisible request count still serves every request.
+    for chunk in tokens.chunks(tokens.len().div_ceil(concurrency.max(1))) {
+        let engine = engine.clone();
+        let chunk: Vec<Vec<i32>> = chunk.to_vec();
         handles.push(std::thread::spawn(move || {
-            let mut classes = Vec::new();
-            for t in chunk {
-                classes.push(client.infer(t).expect("response").class);
-            }
-            classes
+            // Queue everything (blocking on admission space only), then
+            // wait the tickets — the non-blocking client path.
+            let tickets: Vec<_> =
+                chunk.into_iter().map(|t| engine.submit(t).expect("admitted")).collect();
+            tickets
+                .into_iter()
+                .map(|t| t.wait().expect("response").class)
+                .collect::<Vec<usize>>()
         }));
     }
     let mut all = Vec::new();
@@ -84,15 +85,17 @@ fn run_load(
         all.extend(h.join().unwrap());
     }
     let elapsed = t0.elapsed();
-    let rps = server.stats.throughput_rps(elapsed);
-    let lat = server.stats.mean_latency_ms();
+    let stats = engine.stats();
+    let rps = stats.throughput_rps(elapsed);
+    let lat = stats.mean_latency_ms();
     println!(
-        "{name:<14} served {:>4} | mean latency {lat:>8.2} ms | p(max) {:>8.2} ms | {rps:>7.1} req/s | mean batch {:.1}",
+        "{name:<14} served {:>4} | mean latency {lat:>8.2} ms | p(max) {:>8.2} ms | {rps:>7.1} req/s | mean batch {:.1} | peak queue {}",
         all.len(),
-        server.stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
-        server.stats.mean_batch(),
+        stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
+        stats.mean_batch(),
+        stats.queue_peak.load(std::sync::atomic::Ordering::Relaxed),
     );
-    server.shutdown();
+    engine.shutdown();
     Ok((lat, rps))
 }
 
@@ -106,7 +109,9 @@ fn main() -> Result<()> {
             ("requests <n>", "total requests (default 64)"),
             ("concurrency <n>", "client threads (default 8)"),
             ("max-batch <n>", "batcher max batch (default 8)"),
-            ("workers <n>", "server pool workers (0 = all cores; default 1)"),
+            ("queue-depth <n>", "bounded admission depth (default 256)"),
+            ("workers <n>", "engine pool workers (0 = all cores; default 1)"),
+            ("kernel-workers <n>", "per-worker kernel parallelism for big L (default 1)"),
             ("alpha <f>", "SPION-CF threshold quantile (default 0.9)"),
         ],
     );
@@ -114,9 +119,13 @@ fn main() -> Result<()> {
     let (task, model) = preset(&preset_name).expect("unknown preset");
     let n_requests = args.usize_or("requests", 64);
     let concurrency = args.usize_or("concurrency", 8);
-    let max_batch = args.usize_or("max-batch", 8);
-    let workers =
-        spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)).resolved_workers();
+    let serve_cfg = ServeConfig {
+        queue_depth: args.usize_or("queue-depth", 256),
+        max_batch: args.usize_or("max-batch", 8),
+        max_wait_us: 2_000,
+        workers: args.usize_or("workers", 1),
+        kernel_workers: args.usize_or("kernel-workers", 1),
+    };
 
     let (params, trained_masks) = load_params(&args, &preset_name, model.layers)?;
 
@@ -126,13 +135,17 @@ fn main() -> Result<()> {
     let tokens: Vec<Vec<i32>> = (0..n_requests).map(|_| batcher.next_batch().x).collect();
 
     println!(
-        "== serve_demo: preset={preset_name} L={} D={} requests={n_requests} concurrency={concurrency} workers={workers} ==",
-        model.seq_len, model.d_model
+        "== serve_demo: preset={preset_name} L={} D={} requests={n_requests} concurrency={concurrency} workers={}×{} queue_depth={} ==",
+        model.seq_len,
+        model.d_model,
+        serve_cfg.resolved_workers(),
+        serve_cfg.resolved_kernel_workers(),
+        serve_cfg.queue_depth
     );
 
     // Dense serving.
     let dense_enc = Encoder::new(params.clone(), model.heads);
-    let (lat_d, rps_d) = run_load("dense", dense_enc, &tokens, concurrency, max_batch, workers)?;
+    let (lat_d, rps_d) = run_load("dense", dense_enc, &tokens, concurrency, serve_cfg)?;
 
     // SPION-CF sparse serving: the checkpoint's trained masks when present,
     // else a pattern from synthetic diagonal+vertical scores.
@@ -156,6 +169,7 @@ fn main() -> Result<()> {
                     s
                 },
                 exec: Default::default(),
+                serve: Default::default(),
                 artifacts_dir: "artifacts".into(),
             };
             let mut rng = spion::util::rng::Rng::new(5);
@@ -171,8 +185,7 @@ fn main() -> Result<()> {
     };
     let density: f64 = masks.iter().map(|m| m.density()).sum::<f64>() / masks.len() as f64;
     let sparse_enc = Encoder::new(params, model.heads).with_masks(masks)?;
-    let (lat_s, rps_s) =
-        run_load("spion-cf", sparse_enc, &tokens, concurrency, max_batch, workers)?;
+    let (lat_s, rps_s) = run_load("spion-cf", sparse_enc, &tokens, concurrency, serve_cfg)?;
 
     println!(
         "\nsparse pattern density {density:.3} → latency {:.2}× lower, throughput {:.2}× higher",

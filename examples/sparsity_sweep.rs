@@ -58,6 +58,7 @@ fn main() -> Result<()> {
                 s
             },
             exec: spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)),
+            serve: Default::default(),
             artifacts_dir: args.str_or("artifacts", "artifacts"),
         };
         let trainer = Trainer::new(&rt, exp)?;

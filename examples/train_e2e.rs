@@ -64,6 +64,7 @@ fn main() -> Result<()> {
         train,
         sparsity,
         exec,
+        serve: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     };
     let out_dir = args.str_or("out", "results/train_e2e");

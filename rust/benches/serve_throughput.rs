@@ -1,0 +1,195 @@
+//! Serving-engine throughput/latency under offered load — the acceptance
+//! evidence for the ticketed redesign: sweeps offered load (as a multiple
+//! of measured capacity) × `queue_depth` × workers, open-loop (a paced
+//! generator that never waits for responses, so overload actually builds
+//! up instead of self-throttling like a closed loop would).
+//!
+//! Reports throughput, p50/p99 response latency, and the rejection rate,
+//! as markdown + `results/serve_throughput.csv` + `BENCH_serve.json`.
+//!
+//! Run: `cargo bench --bench serve_throughput -- --workers 1,2,4`
+//! (SPION_BENCH_FAST=1 shrinks the measurement windows ~4×.)
+
+mod common;
+
+use spion::config::ModelConfig;
+use spion::model::{Encoder, ModelParams};
+use spion::pattern::BlockMask;
+use spion::serve::{AdmissionError, Engine, ServeConfig, Ticket};
+use spion::util::bench::Report;
+use spion::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+/// L=128 D=32 2-layer model with a diagonal block mask (the library's own
+/// initializer) — big enough that service time dominates queueing overhead.
+fn encoder(seed: u64) -> Encoder {
+    let model = ModelConfig {
+        preset: "serve-bench".into(),
+        seq_len: 128,
+        d_model: 32,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 64,
+        vocab: 20,
+        classes: 4,
+        batch: 1,
+    };
+    let params = ModelParams::init_random(&model, seed);
+    let mut mask = BlockMask::empty(8, 16);
+    mask.set_diagonal();
+    Encoder::new(params, 2).with_masks(vec![mask.clone(), mask]).unwrap()
+}
+
+struct Row {
+    workers: usize,
+    queue_depth: usize,
+    offered_x: f64,
+    offered_rps: f64,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    rejection_rate: f64,
+}
+
+fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[idx].as_secs_f64() * 1e3
+}
+
+/// One measured service time per request at this worker width, closed
+/// loop — the capacity baseline the offered-load multiples scale from.
+fn calibrate_capacity_rps(enc: &Encoder, workers: usize, rng: &mut Rng) -> f64 {
+    let engine = Engine::start(
+        enc.clone(),
+        ServeConfig { queue_depth: 64, max_batch: 1, workers, ..Default::default() },
+    )
+    .unwrap();
+    let n = 32;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let toks: Vec<i32> = (0..128).map(|_| rng.below(20) as i32).collect();
+        engine.submit(toks).unwrap().wait().unwrap();
+    }
+    let rps = n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    engine.shutdown();
+    rps
+}
+
+fn run_one(
+    enc: &Encoder,
+    workers: usize,
+    queue_depth: usize,
+    offered_x: f64,
+    capacity_rps: f64,
+    window: Duration,
+    rng: &mut Rng,
+) -> Row {
+    let engine = Engine::start(
+        enc.clone(),
+        ServeConfig { queue_depth, max_batch: 8, workers, ..Default::default() },
+    )
+    .unwrap();
+    let offered_rps = offered_x * capacity_rps;
+    let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+    let start = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let mut n = 0u64;
+    // Open loop: fire at the pace regardless of responses; spin-wait for
+    // the tick (sleep granularity is too coarse at µs intervals).
+    while start.elapsed() < window {
+        let next = start + interval.mul_f64(n as f64);
+        while Instant::now() < next {
+            std::hint::spin_loop();
+        }
+        let toks: Vec<i32> = (0..128).map(|_| rng.below(20) as i32).collect();
+        match engine.try_submit(toks) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull) => {}
+            Err(e) => panic!("admission error mid-bench: {e}"),
+        }
+        n += 1;
+    }
+    // Drain: wait every admitted ticket, collect response latencies.
+    let mut lats: Vec<Duration> =
+        tickets.iter().filter_map(|t| t.wait().ok()).map(|r| r.latency).collect();
+    let elapsed = start.elapsed();
+    lats.sort_unstable();
+    let stats = engine.stats();
+    let row = Row {
+        workers,
+        queue_depth,
+        offered_x,
+        offered_rps,
+        throughput_rps: stats.served.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64(),
+        p50_ms: percentile_ms(&lats, 0.50),
+        p99_ms: percentile_ms(&lats, 0.99),
+        rejection_rate: stats.rejection_rate(),
+    };
+    assert!(
+        stats.queue_peak.load(Ordering::Relaxed) as usize <= queue_depth,
+        "bounded-queue invariant violated in bench"
+    );
+    engine.shutdown();
+    row
+}
+
+fn main() {
+    let fast = std::env::var("SPION_BENCH_FAST").ok().as_deref() == Some("1");
+    let window = if fast { Duration::from_millis(250) } else { Duration::from_secs(1) };
+    let mut rng = Rng::new(42);
+    let enc = encoder(42);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &workers in &common::worker_counts() {
+        let capacity = calibrate_capacity_rps(&enc, workers, &mut rng);
+        for &queue_depth in &[16usize, 64, 256] {
+            for &offered_x in &[0.5f64, 2.0, 4.0] {
+                rows.push(run_one(
+                    &enc, workers, queue_depth, offered_x, capacity, window, &mut rng,
+                ));
+            }
+        }
+    }
+
+    let mut report = Report::new(
+        "Serving engine: offered load × queue_depth × workers (open loop)",
+        &["workers", "queue_depth", "offered ×cap", "offered req/s", "served req/s", "p50", "p99", "rejected %"],
+    );
+    for r in &rows {
+        report.row(vec![
+            r.workers.to_string(),
+            r.queue_depth.to_string(),
+            format!("{:.1}", r.offered_x),
+            format!("{:.0}", r.offered_rps),
+            format!("{:.0}", r.throughput_rps),
+            format!("{:.2} ms", r.p50_ms),
+            format!("{:.2} ms", r.p99_ms),
+            format!("{:.1}", 100.0 * r.rejection_rate),
+        ]);
+    }
+    report.print();
+    report.save_csv("results/serve_throughput.csv");
+
+    let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"provenance\": \"measured\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"queue_depth\": {}, \"offered_x\": {:.1}, \"offered_rps\": {:.1}, \"throughput_rps\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"rejection_rate\": {:.4}}}{}\n",
+            r.workers,
+            r.queue_depth,
+            r.offered_x,
+            r.offered_rps,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.rejection_rate,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_serve.json", &json).expect("writing BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

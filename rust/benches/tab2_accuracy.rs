@@ -54,6 +54,7 @@ fn main() {
                     train,
                     sparsity: SparsityConfig::for_model(kind, task, &model),
                     exec: Default::default(),
+                    serve: Default::default(),
                     artifacts_dir: "artifacts".into(),
                 };
                 let trainer = Trainer::new(&rt, exp).expect("trainer");

@@ -5,6 +5,6 @@ pub mod toml;
 pub mod types;
 
 pub use types::{
-    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, SparsityConfig, TaskKind,
-    TrainBackend, TrainConfig,
+    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, ServeConfig, SparsityConfig,
+    TaskKind, TrainBackend, TrainConfig,
 };

@@ -42,6 +42,14 @@ impl TomlValue {
             _ => None,
         }
     }
+    /// Non-negative integer as usize; `None` for negatives and non-ints —
+    /// capacity/count keys (`[serve]`, `[exec]`) share this bound check.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
 }
 
 /// section → key → value. Keys before any `[section]` land in section "".
@@ -177,6 +185,14 @@ labels = ["a", "b"]
     fn int_coerces_to_float() {
         let doc = parse("x = 3").unwrap();
         assert_eq!(doc[""]["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn as_usize_rejects_negatives_and_non_ints() {
+        let doc = parse("a = 8\nb = -1\nc = 2.5").unwrap();
+        assert_eq!(doc[""]["a"].as_usize(), Some(8));
+        assert_eq!(doc[""]["b"].as_usize(), None);
+        assert_eq!(doc[""]["c"].as_usize(), None);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::pattern::spion::PatternConfig;
 use crate::pattern::SpionVariant;
 
 pub use crate::exec::ExecConfig;
+pub use crate::serve::ServeConfig;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
@@ -230,6 +231,9 @@ pub struct ExperimentConfig {
     /// the CLI). Default is serial — bit-identical to the historical
     /// engine.
     pub exec: ExecConfig,
+    /// Serving-engine knobs (`[serve]` in TOML, `spion serve` CLI flags):
+    /// bounded admission depth, batch policy, worker widths.
+    pub serve: ServeConfig,
     pub artifacts_dir: String,
 }
 
@@ -403,12 +407,33 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         }
     }
 
+    let mut serve = ServeConfig::default();
+    if let Some(s) = doc.get("serve") {
+        for (key, field) in [
+            ("queue_depth", &mut serve.queue_depth as &mut usize),
+            ("max_batch", &mut serve.max_batch),
+            ("workers", &mut serve.workers),
+            ("kernel_workers", &mut serve.kernel_workers),
+        ] {
+            if let Some(v) = s.get(key) {
+                *field = v
+                    .as_usize()
+                    .ok_or(format!("serve.{key} must be a non-negative integer"))?;
+            }
+        }
+        if let Some(v) = s.get("max_wait_us") {
+            serve.max_wait_us =
+                v.as_usize().ok_or("serve.max_wait_us must be a non-negative integer")? as u64;
+        }
+    }
+    serve.validate()?;
+
     let artifacts_dir = root
         .get("artifacts_dir")
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    Ok(ExperimentConfig { task, model, train, sparsity, exec, artifacts_dir })
+    Ok(ExperimentConfig { task, model, train, sparsity, exec, serve, artifacts_dir })
 }
 
 #[cfg(test)]
@@ -529,6 +554,45 @@ simd = false
         .unwrap();
         assert!(!cfg.exec.kernel.fused);
         assert!(!cfg.exec.kernel.simd);
+    }
+
+    #[test]
+    fn serve_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[serve]
+queue_depth = 64
+max_batch = 16
+max_wait_us = 2000
+workers = 4
+kernel_workers = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.queue_depth, 64);
+        assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.serve.max_wait_us, 2000);
+        assert_eq!(cfg.serve.workers, 4);
+        assert_eq!(cfg.serve.kernel_workers, 2);
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(d.serve, ServeConfig::default(), "no [serve] section → defaults");
+    }
+
+    #[test]
+    fn serve_section_validates() {
+        // Negative / degenerate values fail at parse time with the key name.
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[serve]\nqueue_depth = -1").unwrap_err();
+        assert!(err.contains("queue_depth"), "{err}");
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[serve]\nqueue_depth = 0").unwrap_err();
+        assert!(err.contains("queue_depth"), "{err}");
+        let err = experiment_from_toml("preset = \"tiny\"\n[serve]\nmax_batch = 0").unwrap_err();
+        assert!(err.contains("max_batch"), "{err}");
+        let err = experiment_from_toml("preset = \"tiny\"\n[serve]\nmax_wait_us = 99000000")
+            .unwrap_err();
+        assert!(err.contains("cap"), "{err}");
     }
 
     #[test]

@@ -95,6 +95,15 @@ impl NativeTrainer {
         let mut metrics = TrainMetrics::default();
         let mut masks: Option<Vec<BlockMask>> = None;
         let mut grads = ModelGrads::zeros_like(&params);
+        // Reusable per-sample gradient buffers: a free-list shared across
+        // steps, so the steady-state loop allocates no ModelGrads after the
+        // first step (previously: one fresh zeros_like per sample per
+        // step). Which buffer a sample gets is irrelevant to numerics —
+        // every buffer is zeroed before use and the fold below stays in
+        // sample order, so the trajectory remains bit-identical at any
+        // worker count.
+        let grad_pool: std::sync::Mutex<Vec<ModelGrads>> =
+            std::sync::Mutex::new(Vec::with_capacity(m.batch));
 
         for step in 0..cfg.train.steps {
             let batch = batcher.next_batch();
@@ -111,7 +120,13 @@ impl NativeTrainer {
             let params_ref = &params;
             let masks_ref = masks.as_deref();
             let per_sample = self.exec.par_map(m.batch, |b| {
-                let mut g = ModelGrads::zeros_like(params_ref);
+                let mut g = match grad_pool.lock().unwrap().pop() {
+                    Some(mut g) => {
+                        g.zero();
+                        g
+                    }
+                    None => ModelGrads::zeros_like(params_ref),
+                };
                 let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
                 let r = train_step_sample(
                     &inner,
@@ -135,6 +150,7 @@ impl NativeTrainer {
                 loss_sum += loss;
                 correct += ok as usize;
                 grads.add_assign(&g);
+                grad_pool.lock().unwrap().push(g); // recycle for the next step
                 if let Some(s) = scores {
                     match &mut score_acc {
                         None => score_acc = Some(s),
@@ -272,6 +288,7 @@ mod tests {
             train,
             sparsity,
             exec: crate::exec::ExecConfig::with_workers(workers),
+            serve: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

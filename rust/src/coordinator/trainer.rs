@@ -380,6 +380,7 @@ mod tests {
             train: TrainConfig::default(),
             sparsity: SparsityConfig::new(kind, 16, 0.9),
             exec: Default::default(),
+            serve: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

@@ -9,8 +9,7 @@
 //!   presets   list available presets / artifact status
 
 use anyhow::Result;
-use spion::config::types::{preset, presets};
-use spion::config::types::SparsityConfig;
+use spion::config::types::{preset, presets, ServeConfig, SparsityConfig};
 use spion::config::{ExecConfig, ExperimentConfig, PatternKind, TrainBackend, TrainConfig};
 use spion::coordinator::{NativeTrainer, TrainOutcome, Trainer};
 use spion::exec::Exec;
@@ -51,6 +50,9 @@ fn print_help() {
          \x20 data      --task listops --n 3\n\
          \x20 serve     --preset tiny --checkpoint ck.bin [--kind cf] --requests 64\n\
          \x20           (checkpoints with trained masks serve that pattern; --kind dense opts out)\n\
+         \x20           [serve] engine: --queue-depth N (bounded admission; overload → QueueFull)\n\
+         \x20           --max-batch N --max-wait-us N (batching window) --kernel-workers N\n\
+         \x20           (per-worker sparse-kernel parallelism for big-L requests)\n\
          \x20 presets\n\n\
          GLOBAL OPTIONS:\n\
          \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
@@ -61,9 +63,32 @@ fn print_help() {
     );
 }
 
-/// Execution-runtime config from the shared CLI flags.
-fn exec_from_args(args: &Args) -> ExecConfig {
-    let d = ExecConfig::default();
+/// Serving-engine config from the CLI flags, over `default` (the `[serve]`
+/// TOML section when `--config` was given, else `ServeConfig::default()`).
+/// `--workers` doubles as the serve-worker width so the historical flag
+/// keeps working.
+fn serve_from_args(args: &Args, default: ServeConfig) -> Result<ServeConfig> {
+    // --max-wait-us preferred; --max-wait-ms kept for compatibility (only
+    // consulted when actually passed, so it never rounds a TOML value).
+    let default_wait_us = if args.has("max-wait-ms") {
+        args.u64_or("max-wait-ms", default.max_wait_us / 1000) * 1000
+    } else {
+        default.max_wait_us
+    };
+    let cfg = ServeConfig {
+        queue_depth: args.usize_or("queue-depth", default.queue_depth),
+        max_batch: args.usize_or("max-batch", default.max_batch),
+        max_wait_us: args.u64_or("max-wait-us", default_wait_us),
+        workers: args.usize_or("workers", default.workers),
+        kernel_workers: args.usize_or("kernel-workers", default.kernel_workers),
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+/// Execution-runtime config from the shared CLI flags over `d` (a config
+/// file's `[exec]` section, or the serial default).
+fn exec_from_args_over(args: &Args, d: ExecConfig) -> ExecConfig {
     ExecConfig {
         workers: args.usize_or("workers", d.workers),
         chunk_blocks: args.usize_or("chunk-blocks", d.chunk_blocks),
@@ -73,6 +98,11 @@ fn exec_from_args(args: &Args) -> ExecConfig {
             simd: args.bool_or("simd", d.kernel.simd),
         },
     }
+}
+
+/// Execution-runtime config from the shared CLI flags.
+fn exec_from_args(args: &Args) -> ExecConfig {
+    exec_from_args_over(args, ExecConfig::default())
 }
 
 /// Build an [`ExperimentConfig`] from CLI flags (or a `--config` TOML file).
@@ -105,6 +135,8 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
                 spion::config::types::validate_momentum(args.f64_or("momentum", exp.train.momentum))
                     .map_err(|e| anyhow::anyhow!(e))?;
         }
+        // CLI serve flags override the file's [serve] section.
+        exp.serve = serve_from_args(args, exp.serve)?;
         return Ok(exp);
     }
     let preset_name = args.str_or("preset", "tiny");
@@ -136,6 +168,7 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         train,
         sparsity,
         exec: exec_from_args(args),
+        serve: serve_from_args(args, Default::default())?,
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     })
 }
@@ -266,17 +299,33 @@ fn run_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Batched inference serving over a trained checkpoint (rust-native
-/// engine). Pattern selection: the checkpoint's *trained* per-layer masks
-/// whenever it carries them (so serving runs the exact sparsity pattern
-/// training froze — `--kind dense` opts out); only maskless checkpoints
-/// fall back to regenerating a pattern of `--kind` from synthetic scores.
+/// Batched inference serving over a trained checkpoint, on the ticketed
+/// [`spion::serve::Engine`]: bounded admission (`--queue-depth`), dynamic
+/// batching (`--max-batch`/`--max-wait-us`), pool workers (`--workers`),
+/// and per-worker sparse-kernel parallelism for big-L requests
+/// (`--kernel-workers`). A `--config` TOML's `[serve]` section supplies
+/// defaults; flags override. Pattern selection: the checkpoint's *trained*
+/// per-layer masks whenever it carries them (so serving runs the exact
+/// sparsity pattern training froze — `--kind dense` opts out); only
+/// maskless checkpoints fall back to regenerating a pattern of `--kind`
+/// from synthetic scores.
 fn run_serve(args: &Args) -> Result<()> {
     use spion::model::{Encoder, ModelParams};
-    use spion::serve::{BatchPolicy, InferenceServer};
-    let preset_name = args.str_or("preset", "tiny");
-    let (task, model) =
-        preset(&preset_name).ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
+    use spion::serve::Engine;
+    // --config supplies model/[exec]/[serve] defaults, flags override —
+    // loaded once so the file's preset cannot silently diverge from the
+    // model actually served.
+    let file_exp = args
+        .get("config")
+        .map(|p| spion::config::types::load_experiment(p).map_err(|e| anyhow::anyhow!(e)))
+        .transpose()?;
+    let (task, model) = if let Some(name) = args.get("preset") {
+        preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?
+    } else if let Some(exp) = &file_exp {
+        (exp.task, exp.model.clone())
+    } else {
+        preset("tiny").expect("tiny preset exists")
+    };
     let (params, trained_masks) = if let Some(ck_path) = args.get("checkpoint") {
         let ck = spion::coordinator::checkpoint::Checkpoint::load(ck_path)?;
         println!("loaded checkpoint {ck_path} (step {})", ck.step);
@@ -289,10 +338,15 @@ fn run_serve(args: &Args) -> Result<()> {
     // regenerate synthetically when the checkpoint has none.
     let kind = PatternKind::parse(&args.str_or("kind", if trained_masks.is_some() { "cf" } else { "dense" }))
         .ok_or_else(|| anyhow::anyhow!("unknown --kind"))?;
-    // Kernel config (--fused/--simd) flows into every worker's encoder
-    // clone; request-level parallelism stays on the serve pool, so the
-    // per-encoder exec is serial (workers: 1).
-    let ecfg = exec_from_args(args);
+    // Kernel config (--fused/--simd, over the file's [exec]) flows into
+    // every worker's encoder clone through this serial base exec; when
+    // --kernel-workers > 1 the engine swaps in a per-worker pool of that
+    // width (same kernel flags) for intra-request parallelism on big-L
+    // models.
+    let ecfg = exec_from_args_over(
+        args,
+        file_exp.as_ref().map(|e| e.exec).unwrap_or_default(),
+    );
     let kernel_exec = Exec::new(ExecConfig { workers: 1, ..ecfg });
     let encoder = match (kind, trained_masks) {
         (PatternKind::Dense, _) => Encoder::new(params, model.heads).with_exec(kernel_exec),
@@ -311,6 +365,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 train: TrainConfig::default(),
                 sparsity: SparsityConfig::for_model(kind, task, &model),
                 exec: ecfg,
+                serve: Default::default(),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);
@@ -331,22 +386,21 @@ fn run_serve(args: &Args) -> Result<()> {
             Encoder::new(params, model.heads).with_masks(masks)?.with_exec(kernel_exec)
         }
     };
-    let serve_workers = ecfg.resolved_workers();
+    // Serve config: `[serve]` from --config if given, then CLI flags.
+    let scfg = serve_from_args(args, file_exp.as_ref().map(|e| e.serve).unwrap_or_default())?;
     let kcfg = ecfg.kernel;
     println!(
-        "serving with {serve_workers} worker(s), kernels: {}{}",
+        "serving with {} worker(s) × {} kernel worker(s), queue depth {}, kernels: {}{}",
+        scfg.resolved_workers(),
+        scfg.resolved_kernel_workers(),
+        scfg.queue_depth,
         if kcfg.fused { "fused" } else { "unfused" },
         if kcfg.fused && kcfg.simd { "+simd" } else { "" },
     );
-    let server = InferenceServer::start_with_workers(
-        encoder,
-        BatchPolicy {
-            max_batch: args.usize_or("max-batch", 8),
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 5)),
-        },
-        serve_workers,
-    );
-    // Drive a synthetic workload through concurrent clients.
+    let engine = std::sync::Arc::new(Engine::start(encoder, scfg)?);
+    // Drive a synthetic workload through concurrent submitters: each
+    // thread queues its whole chunk first (blocking only on admission
+    // space — backpressure, not latency), then waits the tickets.
     let n = args.usize_or("requests", 64);
     let conc = args.usize_or("concurrency", 4);
     let gen = spion::data::make_task(task, model.seq_len, model.vocab, model.classes);
@@ -355,22 +409,28 @@ fn run_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for chunk in work.chunks(n.div_ceil(conc)) {
-        let client = server.client();
+        let engine = engine.clone();
         let chunk = chunk.to_vec();
         handles.push(std::thread::spawn(move || {
-            chunk.into_iter().filter_map(|t| client.infer(t)).count()
+            let tickets: Vec<_> =
+                chunk.into_iter().filter_map(|t| engine.submit(t).ok()).collect();
+            tickets.into_iter().filter(|t| t.wait().is_ok()).count()
         }));
     }
     let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let elapsed = t0.elapsed();
+    let stats = engine.stats();
     println!(
-        "served {served}/{n} | mean latency {:.2} ms | max {:.2} ms | {:.1} req/s | mean batch {:.1}",
-        server.stats.mean_latency_ms(),
-        server.stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
-        server.stats.throughput_rps(elapsed),
-        server.stats.mean_batch(),
+        "served {served}/{n} | mean latency {:.2} ms | max {:.2} ms | {:.1} req/s | mean batch {:.1} | rejected {} shed {} peak queue {}",
+        stats.mean_latency_ms(),
+        stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
+        stats.throughput_rps(elapsed),
+        stats.mean_batch(),
+        stats.rejected.load(std::sync::atomic::Ordering::Relaxed),
+        stats.shed.load(std::sync::atomic::Ordering::Relaxed),
+        stats.queue_peak.load(std::sync::atomic::Ordering::Relaxed),
     );
-    server.shutdown();
+    engine.shutdown();
     Ok(())
 }
 

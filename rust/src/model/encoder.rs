@@ -1,6 +1,8 @@
 //! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`],
 //! with either dense MHA or the block-sparse engine (Algorithm 5).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::attention::{dense_mha, sparse_mha_with, MhaWorkspace};
@@ -12,12 +14,14 @@ use crate::tensor::Mat;
 use super::{ModelParams, LN_EPS};
 
 /// Cloneable so the serving layer can hand each pool worker its own
-/// instance (parameters and workspaces are deep-copied; workspaces are
-/// mutable scratch and must never be shared across workers; the exec
-/// handle is shared — it is a cheap Arc clone).
+/// instance. Weights are **shared**: `params` sits behind an `Arc`, so an
+/// N-worker server holds one copy of the model, not N (clones are pointer
+/// bumps). Only the mutable scratch — the per-layer sparse workspaces —
+/// is deep-copied per clone, and must never be shared across workers. The
+/// exec handle is shared (cheap Arc clone).
 #[derive(Clone)]
 pub struct Encoder {
-    pub params: ModelParams,
+    params: Arc<ModelParams>,
     pub heads: usize,
     /// Per-layer sparse MHA workspaces; None = dense attention.
     sparse: Option<Vec<MhaWorkspace>>,
@@ -30,8 +34,29 @@ pub struct Encoder {
 
 impl Encoder {
     pub fn new(params: ModelParams, heads: usize) -> Self {
+        Self::from_arc(Arc::new(params), heads)
+    }
+
+    /// Build around already-shared weights (e.g. several engines serving
+    /// one model).
+    pub fn from_arc(params: Arc<ModelParams>, heads: usize) -> Self {
         assert_eq!(params.d_model() % heads, 0);
         Self { params, heads, sparse: None, masks: None, exec: Exec::serial_ref().clone() }
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    /// The shared weight handle — `Arc::ptr_eq` across clones witnesses
+    /// that pool workers do not duplicate the model.
+    pub fn params_arc(&self) -> &Arc<ModelParams> {
+        &self.params
+    }
+
+    /// The execution context this encoder runs its attention kernels on.
+    pub fn exec(&self) -> &Exec {
+        &self.exec
     }
 
     /// Switch to sparse attention with per-layer masks.
@@ -78,7 +103,7 @@ impl Encoder {
     /// Forward one sequence of tokens; returns (logits, per-layer A^s for
     /// the dense path — empty when sparse).
     pub fn forward(&mut self, tokens: &[i32]) -> (Vec<f32>, Vec<Mat>) {
-        let p = &self.params;
+        let p: &ModelParams = &self.params;
         let l = p.seq_len();
         assert_eq!(tokens.len(), l, "expected {l} tokens");
         let d = p.d_model();
@@ -202,6 +227,28 @@ mod tests {
         assert!(mk().with_masks(vec![BlockMask::full(3, 4), BlockMask::full(3, 4)]).is_err());
         // Matching masks are accepted.
         assert!(mk().with_masks(vec![BlockMask::full(4, 4), BlockMask::full(2, 8)]).is_ok());
+    }
+
+    #[test]
+    fn clones_share_weights_by_pointer() {
+        // The serving pool clones one encoder per worker: N workers must
+        // hold ONE copy of the weights (Arc), not N — only the mutable
+        // sparse workspaces are deep-copied.
+        let mut rng = Rng::new(6);
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let enc = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2)
+            .with_masks(vec![BlockMask::full(4, 4), BlockMask::full(4, 4)])
+            .unwrap();
+        let clones: Vec<Encoder> = (0..4).map(|_| enc.clone()).collect();
+        for c in &clones {
+            assert!(
+                std::sync::Arc::ptr_eq(c.params_arc(), enc.params_arc()),
+                "clone duplicated the model weights"
+            );
+        }
+        // with_masks / with_exec keep the sharing too.
+        let rewired = enc.clone().with_exec(crate::exec::Exec::serial());
+        assert!(std::sync::Arc::ptr_eq(rewired.params_arc(), enc.params_arc()));
     }
 
     #[test]

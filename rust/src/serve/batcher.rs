@@ -1,6 +1,12 @@
 //! Dynamic batching: collect requests until `max_batch` or `max_wait`,
 //! whichever first (the vLLM-router-style policy, reduced to classification
 //! workloads: no KV cache, so batching is pure throughput/latency trade).
+//!
+//! Two consumers of this policy exist: the legacy mpsc [`DynamicBatcher`]
+//! below (kept for the [`super::InferenceServer`] compatibility tests and
+//! embedders holding a `Receiver`), and the engine's bounded admission
+//! queue, whose [`super::queue::Bounded::pop_batch`] implements the same
+//! first-item-blocks / deadline-or-max-closes semantics.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -14,6 +20,28 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         Self { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+impl BatchPolicy {
+    /// Construction-time validation — a degenerate policy gets a
+    /// descriptive error instead of degenerate batching behavior
+    /// (`max_batch == 0` used to silently produce singleton batches).
+    /// The wait cap is the engine's [`super::MAX_WAIT_CAP_US`], so a
+    /// policy that validates always converts to a `ServeConfig` exactly
+    /// (no silent clamping in the compatibility shim).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("batch policy: max_batch must be ≥ 1".into());
+        }
+        let cap = Duration::from_micros(super::MAX_WAIT_CAP_US);
+        if self.max_wait > cap {
+            return Err(format!(
+                "batch policy: max_wait {:?} exceeds the {cap:?} cap",
+                self.max_wait
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -100,6 +128,26 @@ mod tests {
         );
         assert_eq!(b.next_batch().unwrap(), vec![7]);
         drop(tx);
+    }
+
+    #[test]
+    fn policy_validation_is_descriptive() {
+        assert!(BatchPolicy::default().validate().is_ok());
+        let err = BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1) }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("max_batch"), "{err}");
+        let err = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(120) }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("max_wait"), "{err}");
+        // The cap equals the engine's, so valid policies convert exactly.
+        assert!(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(super::MAX_WAIT_CAP_US),
+        }
+        .validate()
+        .is_ok());
     }
 
     #[test]

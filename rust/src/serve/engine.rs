@@ -1,0 +1,544 @@
+//! The serving engine: non-blocking ticketed admission, bounded queues,
+//! backpressure, and a pool of batched workers over an [`Encoder`].
+//!
+//! ## Topology
+//!
+//! ```text
+//! clients ──try_submit/submit──▶ [admission queue]   bounded: queue_depth
+//!                                      │ pop_batch (max_batch / max_wait)
+//!                                   router
+//!                                      │ push (blocks when workers lag)
+//!                                 [batch queue]      bounded: 2 × workers
+//!                                      │ pop
+//!                        worker 0 … worker N-1       each: Encoder clone
+//!                                      │                   (weights shared
+//!                                   Resolver ──▶ Ticket     via Arc)
+//! ```
+//!
+//! Both queues are bounded, so engine memory is bounded at any offered
+//! load. Overload sheds at the front door: `try_submit` returns
+//! [`AdmissionError::QueueFull`] the moment `queue_depth` submissions are
+//! waiting — it never blocks. The blocking variant [`Engine::submit`]
+//! waits for *queue space only*, never for the result; results travel
+//! through [`Ticket`]s.
+//!
+//! ## Admission-time validation
+//!
+//! Requests that can never be served — wrong token count, out-of-vocab
+//! token id — are rejected as [`AdmissionError::BadRequest`] before they
+//! touch a queue. (The legacy server forwarded them to a worker, whose
+//! encoder assert then panicked mid-batch, killing every other request in
+//! that batch.)
+//!
+//! ## Shutdown contract
+//!
+//! [`Engine::shutdown`] closes admission (new submissions get
+//! `ShuttingDown`), lets in-flight batches — already formed, queued, or on
+//! a worker — complete, and resolves the undispatched admission backlog
+//! with [`ServeError::ShuttingDown`] (counted in [`ServerStats::shed`]).
+//! Every admitted ticket resolves, always: the [`Resolver`] drop guard
+//! covers even worker-panic paths, so `wait()` can never deadlock.
+//!
+//! ## Big-L requests
+//!
+//! `ServeConfig::kernel_workers > 1` gives each serve worker its own
+//! `exec` pool (via [`Encoder::with_exec`]) so a single long-sequence
+//! request parallelizes *inside* the sparse kernels (block rows, heads) on
+//! top of the request-level parallelism across workers. The kernels are
+//! bit-identical at any worker count (DESIGN.md §exec determinism tier 2),
+//! so logits do not depend on `kernel_workers`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::exec::{Exec, ExecConfig, ThreadPool};
+use crate::model::Encoder;
+use crate::tensor::ops::argmax;
+
+use super::queue::{Bounded, TryPushError};
+use super::ticket::{ticket, AdmissionError, Resolver, ServeError, Ticket};
+
+/// Hard cap on `max_wait_us`: a batching window longer than this is a
+/// misconfiguration (it holds admitted requests hostage for seconds), so
+/// validation rejects it instead of serving with degenerate latency.
+pub const MAX_WAIT_CAP_US: u64 = 10_000_000;
+
+/// First-class serving configuration: the `[serve]` TOML section and the
+/// `spion serve` CLI flags (`--queue-depth`, `--max-batch`,
+/// `--max-wait-us`, `--workers`, `--kernel-workers`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Admission-queue capacity — the backpressure bound. `try_submit`
+    /// returns `QueueFull` beyond this.
+    pub queue_depth: usize,
+    /// Requests per batch, upper bound.
+    pub max_batch: usize,
+    /// Batching window in microseconds (capped at [`MAX_WAIT_CAP_US`]).
+    pub max_wait_us: u64,
+    /// Serve workers (whole-batch parallelism). `0` = one per core.
+    pub workers: usize,
+    /// Per-worker kernel parallelism for big-L requests: each worker's
+    /// encoder runs its attention kernels on its own `exec` pool of this
+    /// width. `1` (default) = request-level parallelism only; `0` = one
+    /// per core. Total threads ≈ `workers × kernel_workers`.
+    pub kernel_workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { queue_depth: 256, max_batch: 8, max_wait_us: 5_000, workers: 1, kernel_workers: 1 }
+    }
+}
+
+impl ServeConfig {
+    /// Construction-time validation — degenerate configs get a descriptive
+    /// error here instead of degenerate runtime behavior.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.queue_depth == 0 {
+            return Err("serve.queue_depth must be ≥ 1 (0 would reject every request)".into());
+        }
+        if self.max_batch == 0 {
+            return Err("serve.max_batch must be ≥ 1".into());
+        }
+        if self.max_wait_us > MAX_WAIT_CAP_US {
+            return Err(format!(
+                "serve.max_wait_us {} exceeds the {}s cap (holds admitted requests hostage)",
+                self.max_wait_us,
+                MAX_WAIT_CAP_US / 1_000_000
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us)
+    }
+
+    /// `workers` with `0` resolved to the core count.
+    pub fn resolved_workers(&self) -> usize {
+        ExecConfig::with_workers(self.workers).resolved_workers()
+    }
+
+    pub fn resolved_kernel_workers(&self) -> usize {
+        ExecConfig::with_workers(self.kernel_workers).resolved_workers()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Serving counters + queue gauges. Monotonic counters unless noted.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    pub max_latency_us: AtomicU64,
+    /// Tickets admitted into the engine (served + shed + in flight).
+    pub admitted: AtomicU64,
+    /// `try_submit` rejections with `QueueFull` (admission-control sheds).
+    pub rejected: AtomicU64,
+    /// Admitted tickets resolved `ShuttingDown` at shutdown (drained
+    /// backlog that never reached a worker).
+    pub shed: AtomicU64,
+    /// Gauge: current admission-queue depth (approximate under races).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of the admission queue (≤ configured
+    /// `queue_depth` — the boundedness witness).
+    pub queue_peak: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.served.load(Ordering::Relaxed).max(1);
+        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.served.load(Ordering::Relaxed) as f64 / b as f64
+    }
+    pub fn throughput_rps(&self, elapsed: Duration) -> f64 {
+        self.served.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+    /// Fraction of submissions turned away at the door.
+    pub fn rejection_rate(&self) -> f64 {
+        let adm = self.admitted.load(Ordering::Relaxed);
+        let rej = self.rejected.load(Ordering::Relaxed);
+        rej as f64 / ((adm + rej) as f64).max(1.0)
+    }
+
+    fn note_queue_len(&self, len: usize) {
+        self.queue_depth.store(len as u64, Ordering::Relaxed);
+        self.queue_peak.fetch_max(len as u64, Ordering::Relaxed);
+    }
+}
+
+/// One admitted request in flight through the queues.
+struct Submission {
+    id: u64,
+    tokens: Vec<i32>,
+    submitted: Instant,
+    resolver: Resolver,
+}
+
+struct Core {
+    admission: Bounded<Submission>,
+    stats: Arc<ServerStats>,
+    next_id: AtomicU64,
+    /// Model contract for admission-time validation.
+    seq_len: usize,
+    vocab: usize,
+}
+
+struct JoinState {
+    router: Option<std::thread::JoinHandle<()>>,
+    pool: Option<ThreadPool>,
+}
+
+/// The ticketed serving engine. Shareable across threads behind an `Arc`;
+/// [`Engine::shutdown`] is idempotent and also runs on drop.
+pub struct Engine {
+    core: Arc<Core>,
+    cfg: ServeConfig,
+    join: Mutex<JoinState>,
+}
+
+impl Engine {
+    /// Start the engine: router + `workers` pool workers, each owning an
+    /// `Encoder` clone (scratch workspaces per worker, weights shared via
+    /// `Arc` inside the encoder). Errors on an invalid [`ServeConfig`].
+    pub fn start(encoder: Encoder, cfg: ServeConfig) -> Result<Self> {
+        if let Err(e) = cfg.validate() {
+            bail!("invalid serve config: {e}");
+        }
+        let workers = cfg.resolved_workers();
+        let stats = Arc::new(ServerStats::default());
+        let core = Arc::new(Core {
+            admission: Bounded::new(cfg.queue_depth),
+            stats: stats.clone(),
+            next_id: AtomicU64::new(0),
+            seq_len: encoder.params().seq_len(),
+            vocab: encoder.params().embed.rows,
+        });
+
+        // Bounded batch queue: a couple of formed batches per worker. When
+        // workers lag, the router blocks here, the admission queue fills,
+        // and try_submit starts shedding — backpressure end to end.
+        let batch_q = Arc::new(Bounded::<Vec<Submission>>::new(2 * workers));
+
+        let router = {
+            let core = core.clone();
+            let batch_q = batch_q.clone();
+            let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait());
+            std::thread::Builder::new()
+                .name("spion-serve-router".into())
+                .spawn(move || {
+                    while let Some(batch) = core.admission.pop_batch(max_batch, max_wait) {
+                        core.stats.note_queue_len(core.admission.len());
+                        if let Err(batch) = batch_q.push(batch) {
+                            // Defensive: only this thread closes batch_q,
+                            // so today this is unreachable — but if a
+                            // refactor ever makes it real, the batch must
+                            // shed through the counted path, not the
+                            // silent drop guards.
+                            for sub in batch {
+                                core.stats.shed.fetch_add(1, Ordering::Relaxed);
+                                sub.resolver.resolve(Err(ServeError::ShuttingDown));
+                            }
+                            break;
+                        }
+                    }
+                    // Admission closed: shed the undispatched backlog with
+                    // an explicit resolution — nothing vanishes.
+                    for sub in core.admission.drain() {
+                        core.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        sub.resolver.resolve(Err(ServeError::ShuttingDown));
+                    }
+                    core.stats.note_queue_len(0);
+                    // Workers drain what is already batched, then exit.
+                    batch_q.close();
+                })
+                .expect("spawning serve router")
+        };
+
+        let pool = ThreadPool::new(workers);
+        let kernel_workers = cfg.resolved_kernel_workers();
+        for _ in 0..workers {
+            // Per-worker kernel parallelism: each worker's encoder clone
+            // gets its own exec pool when kernel_workers > 1, so one big-L
+            // request spreads over kernel_workers cores. Serial (the
+            // encoder's existing exec, typically fused SIMD) otherwise.
+            let enc = if kernel_workers > 1 {
+                let kcfg = ExecConfig { workers: kernel_workers, ..encoder.exec().config() };
+                encoder.clone().with_exec(Exec::new(kcfg))
+            } else {
+                encoder.clone()
+            };
+            let batch_q = batch_q.clone();
+            let stats = stats.clone();
+            pool.submit(move |_wid| serve_worker(enc, batch_q, stats));
+        }
+
+        Ok(Self { core, cfg, join: Mutex::new(JoinState { router: Some(router), pool: Some(pool) }) })
+    }
+
+    pub fn config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.core.stats
+    }
+
+    /// Current admission backlog (gauge; racy by nature).
+    pub fn queue_len(&self) -> usize {
+        self.core.admission.len()
+    }
+
+    fn validate(&self, tokens: &[i32]) -> std::result::Result<(), AdmissionError> {
+        if tokens.len() != self.core.seq_len {
+            return Err(AdmissionError::BadRequest {
+                reason: format!("expected {} tokens, got {}", self.core.seq_len, tokens.len()),
+            });
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.core.vocab) {
+            return Err(AdmissionError::BadRequest {
+                reason: format!("token id {t} outside vocab 0..{}", self.core.vocab),
+            });
+        }
+        Ok(())
+    }
+
+    fn submission(&self, tokens: Vec<i32>) -> (Submission, Ticket) {
+        let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tk, resolver) = ticket(id);
+        (Submission { id, tokens, submitted: Instant::now(), resolver }, tk)
+    }
+
+    /// Non-blocking admission: validates, then either enqueues (returning
+    /// the ticket) or rejects with a typed error. Never waits — under
+    /// overload this returns `QueueFull` immediately.
+    pub fn try_submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        self.validate(&tokens)?;
+        let (sub, tk) = self.submission(tokens);
+        match self.core.admission.try_push(sub) {
+            Ok(()) => {
+                self.core.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                self.core.stats.note_queue_len(self.core.admission.len());
+                Ok(tk)
+            }
+            Err(TryPushError::Full(sub)) => {
+                self.core.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                drop(sub.resolver); // resolves the (discarded) ticket
+                Err(AdmissionError::QueueFull)
+            }
+            Err(TryPushError::Closed(sub)) => {
+                drop(sub.resolver);
+                Err(AdmissionError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Blocking admission: waits for *queue space*, never for the result.
+    /// Returns as soon as the request is queued.
+    pub fn submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        self.validate(&tokens)?;
+        let (sub, tk) = self.submission(tokens);
+        match self.core.admission.push(sub) {
+            Ok(()) => {
+                self.core.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                self.core.stats.note_queue_len(self.core.admission.len());
+                Ok(tk)
+            }
+            Err(sub) => {
+                drop(sub.resolver);
+                Err(AdmissionError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Shut down: close admission, complete in-flight batches, shed the
+    /// undispatched backlog (`ShuttingDown`), join router and workers.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.core.admission.close();
+        let mut j = self.join.lock().unwrap();
+        if let Some(r) = j.router.take() {
+            let _ = r.join();
+        }
+        j.pool.take(); // ThreadPool::drop joins the workers
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One pool worker: drain whole batches until the router closes the batch
+/// queue *and* it is empty (in-flight batches complete on shutdown).
+fn serve_worker(mut enc: Encoder, batch_q: Arc<Bounded<Vec<Submission>>>, stats: Arc<ServerStats>) {
+    while let Some(batch) = batch_q.pop() {
+        let bsz = batch.len();
+        for sub in batch {
+            let (logits, _) = enc.forward(&sub.tokens);
+            let latency = sub.submitted.elapsed();
+            stats.served.fetch_add(1, Ordering::Relaxed);
+            stats.total_latency_us.fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+            stats.max_latency_us.fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
+            sub.resolver.resolve(Ok(Response {
+                id: sub.id,
+                class: argmax(&logits),
+                logits,
+                latency,
+                batch_size: bsz,
+            }));
+        }
+        if bsz > 0 {
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests::random_flat;
+    use crate::model::ModelParams;
+    use crate::pattern::BlockMask;
+    use crate::util::rng::Rng;
+
+    fn mk_encoder(sparse: bool) -> Encoder {
+        let mut rng = Rng::new(7);
+        let flat = random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let enc = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2);
+        if sparse {
+            let mut m = BlockMask::empty(4, 4);
+            m.set_diagonal();
+            enc.with_masks(vec![m.clone(), m]).unwrap()
+        } else {
+            enc
+        }
+    }
+
+    fn toks() -> Vec<i32> {
+        (0..16).map(|i| (i % 12) as i32).collect()
+    }
+
+    #[test]
+    fn ticketed_round_trip() {
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        let t1 = eng.try_submit(toks()).unwrap();
+        let t2 = eng.try_submit(toks()).unwrap();
+        assert_ne!(t1.id(), t2.id());
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        assert_eq!(r1.logits.len(), 4);
+        assert_eq!(r1.class, r2.class, "deterministic");
+        assert_eq!(eng.stats().served.load(Ordering::Relaxed), 2);
+        assert_eq!(eng.stats().admitted.load(Ordering::Relaxed), 2);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed() {
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        eng.shutdown();
+        assert!(matches!(eng.try_submit(toks()), Err(AdmissionError::ShuttingDown)));
+        assert!(matches!(eng.submit(toks()), Err(AdmissionError::ShuttingDown)));
+    }
+
+    #[test]
+    fn bad_requests_rejected_at_admission_without_poisoning_workers() {
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        // Wrong length — the legacy server's worker would have panicked on
+        // the encoder's length assert, killing its whole batch.
+        match eng.try_submit(vec![1, 2, 3]) {
+            Err(AdmissionError::BadRequest { reason }) => {
+                assert!(reason.contains("expected 16 tokens"), "{reason}");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        // Out-of-vocab (negative and ≥ vocab).
+        let mut bad = toks();
+        bad[3] = -1;
+        assert!(matches!(eng.try_submit(bad), Err(AdmissionError::BadRequest { .. })));
+        let mut bad = toks();
+        bad[3] = 12;
+        assert!(matches!(eng.try_submit(bad), Err(AdmissionError::BadRequest { .. })));
+        // The engine still serves valid requests afterwards.
+        assert!(eng.try_submit(toks()).unwrap().wait().is_ok());
+        eng.shutdown();
+    }
+
+    #[test]
+    fn invalid_configs_error_descriptively() {
+        assert!(ServeConfig { queue_depth: 0, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .contains("queue_depth"));
+        assert!(ServeConfig { max_batch: 0, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .contains("max_batch"));
+        assert!(ServeConfig { max_wait_us: MAX_WAIT_CAP_US + 1, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .contains("cap"));
+        assert!(Engine::start(mk_encoder(false), ServeConfig { max_batch: 0, ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn sparse_engine_serves() {
+        let eng = Engine::start(
+            mk_encoder(true),
+            ServeConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..8).map(|_| eng.submit(toks()).unwrap()).collect();
+        let first = tickets[0].wait().unwrap();
+        for t in &tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.class, first.class);
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn shutdown_sheds_backlog_with_typed_resolution() {
+        // workers=1 over a non-trivial forward keeps the queue occupied
+        // long enough for shutdown to find a backlog; every ticket must
+        // still resolve (response or ShuttingDown), never hang.
+        let eng = Engine::start(
+            mk_encoder(true),
+            ServeConfig { queue_depth: 64, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..64).filter_map(|_| eng.try_submit(toks()).ok()).collect();
+        eng.shutdown();
+        let mut served = 0u64;
+        let mut shed = 0u64;
+        for t in &tickets {
+            match t.wait() {
+                Ok(_) => served += 1,
+                Err(ServeError::ShuttingDown) => shed += 1,
+            }
+        }
+        assert_eq!(served + shed, tickets.len() as u64, "every admitted ticket resolved");
+        assert_eq!(eng.stats().served.load(Ordering::Relaxed), served);
+        // The shed gauge counts exactly the backlog resolutions (worker-
+        // panic fallbacks would resolve without counting, but none panic).
+        assert_eq!(eng.stats().shed.load(Ordering::Relaxed), shed);
+    }
+}

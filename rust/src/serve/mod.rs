@@ -1,16 +1,30 @@
-//! Serving: a request router with dynamic batching over a trained model.
+//! Serving: a non-blocking ticketed engine with bounded admission,
+//! dynamic batching, and backpressure over a trained model.
 //!
 //! The inference analogue of the paper's Fig. 5 right column (inference
-//! time): requests are classified sequences; the batcher groups them up to
-//! `max_batch` or `max_wait`, and a pool of workers (each owning a
-//! rust-native [`crate::model::Encoder`] clone, dense or sparse) executes
-//! batches concurrently, replying through per-request channels.
-//! Thread-based (std::sync::mpsc + `exec::ThreadPool`) — the vendored
-//! crate set has no tokio. `--workers 1` reproduces the historical
-//! single-worker server bit-for-bit.
+//! time): requests are classified sequences; the [`Engine`] admits them
+//! through a bounded queue (`try_submit` → [`Ticket`], shedding with
+//! typed [`AdmissionError`]s under overload), the router groups them up
+//! to `max_batch` or `max_wait`, and a pool of workers (each owning a
+//! rust-native [`crate::model::Encoder`] clone — scratch per worker,
+//! weights shared via `Arc`) executes batches concurrently, resolving
+//! tickets. Configuration is the first-class [`ServeConfig`] (`[serve]`
+//! in TOML, `spion serve` flags).
+//!
+//! Thread-based (std sync primitives + `exec::ThreadPool`) — the vendored
+//! crate set has no tokio. `workers = 1, kernel_workers = 1` reproduces
+//! the historical single-worker server bit-for-bit.
+//!
+//! [`InferenceServer`] / [`Client::infer`] remain as a thin blocking
+//! compatibility shim over the engine (`server.rs`).
 
 pub mod batcher;
+pub mod engine;
+pub mod queue;
 pub mod server;
+pub mod ticket;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use engine::{Engine, Response, ServeConfig, ServerStats, MAX_WAIT_CAP_US};
+pub use server::{Client, InferenceServer};
+pub use ticket::{AdmissionError, ServeError, Ticket, TicketResult};

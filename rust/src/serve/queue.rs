@@ -1,0 +1,309 @@
+//! Bounded MPMC queue — the admission-control primitive of the serving
+//! engine (std-only: `Mutex<VecDeque>` + two condvars; the vendored crate
+//! set has no crossbeam/tokio).
+//!
+//! Two queues of this type form the engine's topology (see `engine.rs`):
+//! the *admission queue* (capacity = `ServeConfig::queue_depth`) absorbs
+//! client submissions, and the *batch queue* (capacity ∝ workers) hands
+//! formed batches to the worker pool. Because both are bounded, engine
+//! memory is bounded no matter the offered load: `try_push` sheds excess
+//! instead of growing, and a full batch queue propagates backpressure to
+//! the router, which leaves submissions in the admission queue, which
+//! fills, which makes `try_push` reject — the whole pipeline degrades by
+//! rejecting at the front door, never by buffering without limit.
+//!
+//! Close semantics are deliberately asymmetric, matching the two ends of a
+//! shutdown:
+//! * [`Bounded::pop`] (worker side) keeps draining after `close()` and
+//!   returns `None` only once the queue is empty — in-flight batches
+//!   complete.
+//! * [`Bounded::pop_batch`] (router side) returns `None` as soon as the
+//!   queue is closed — the undispatched backlog is then [`Bounded::drain`]ed
+//!   by the caller and resolved with a typed error instead of silently
+//!   vanishing (the pre-engine server dropped it on the floor).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a non-blocking push did not enqueue. The rejected value rides along
+/// so the caller can resolve its ticket (nothing is silently dropped).
+#[derive(Debug)]
+pub enum TryPushError<T> {
+    /// At capacity — admission control says shed.
+    Full(T),
+    /// Queue closed — the engine is shutting down.
+    Closed(T),
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue with blocking and non-blocking ends.
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "bounded queue capacity must be ≥ 1");
+        Self {
+            inner: Mutex::new(Inner { q: VecDeque::with_capacity(cap.min(1024)), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking push: `Full` at capacity, `Closed` after [`Self::close`].
+    pub fn try_push(&self, v: T) -> Result<(), TryPushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(TryPushError::Closed(v));
+        }
+        if g.q.len() >= self.cap {
+            return Err(TryPushError::Full(v));
+        }
+        g.q.push_back(v);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space (not for the consumer to finish the
+    /// item). Returns the value back if the queue closes while waiting.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(v);
+            }
+            if g.q.len() < self.cap {
+                g.q.push_back(v);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop with drain-after-close semantics: returns items while
+    /// any remain (even after `close()`), `None` once closed *and* empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Dynamic batching pop (the router end): block for the first item,
+    /// then collect until `max` items or `max_wait` elapses, whichever
+    /// first — the same policy as the legacy [`super::DynamicBatcher`].
+    ///
+    /// Returns `None` as soon as the queue is closed, *without* draining:
+    /// the shutdown path owns the backlog (see [`Self::drain`]) so every
+    /// queued item gets an explicit resolution. A batch already being
+    /// collected when close lands is returned — those items were admitted
+    /// and will be processed.
+    pub fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<T>> {
+        debug_assert!(max >= 1);
+        let mut g = self.inner.lock().unwrap();
+        let first = loop {
+            if g.closed {
+                return None;
+            }
+            if let Some(v) = g.q.pop_front() {
+                break v;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        };
+        self.not_full.notify_one();
+        let mut batch = Vec::with_capacity(max.min(64));
+        batch.push(first);
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max {
+            if let Some(v) = g.q.pop_front() {
+                batch.push(v);
+                self.not_full.notify_one();
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if timeout.timed_out() && g.q.is_empty() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+
+    /// Take everything currently queued (shutdown shedding). Wakes blocked
+    /// pushers so they observe the closed flag.
+    pub fn drain(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let out: Vec<T> = g.q.drain(..).collect();
+        drop(g);
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Close the queue: pushes fail from now on, poppers wake. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_push_rejects_at_capacity_and_recovers() {
+        let q = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(TryPushError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "space freed by pop re-admits");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_fails_pushes_but_pop_drains() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err(TryPushError::Closed(3))));
+        assert!(q.push(4).is_err());
+        assert_eq!(q.pop(), Some(1), "drain-after-close");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_batch_honors_max_and_stops_at_close() {
+        let q = Bounded::new(16);
+        for i in 0..10 {
+            q.try_push(i).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        q.close();
+        // Closed ⇒ None immediately; the backlog stays for drain().
+        assert!(q.pop_batch(4, Duration::from_secs(30)).is_none());
+        assert_eq!(q.drain(), vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn pop_batch_deadline_flushes_partial() {
+        let q = Bounded::new(4);
+        q.try_push(7).unwrap();
+        let b = q.pop_batch(8, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![7], "deadline closes an underfull batch");
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(1).is_ok());
+        // The pusher parks on not_full until this pop frees a slot.
+        assert_eq!(q.pop(), Some(0));
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_close() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(1));
+        q.close();
+        assert_eq!(pusher.join().unwrap(), Err(1), "close hands the value back");
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q = Arc::new(Bounded::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut expect: Vec<i32> =
+            (0..4).flat_map(|p| (0..50).map(move |i| p * 1000 + i)).collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+    }
+}

@@ -1,96 +1,60 @@
-//! Inference server: router thread + a pool of batched workers over an
-//! [`Encoder`].
+//! Legacy blocking serving API — a thin compatibility shim over the
+//! ticketed [`Engine`](super::Engine).
 //!
-//! Topology: clients → router (dynamic batcher) → batch queue → N pool
-//! workers, each owning its own `Encoder` clone (workspaces are mutable
-//! scratch). `workers = 1` reproduces the historical single-worker server
-//! exactly; more workers overlap whole batches, which is what lifts
-//! throughput — per-request latency is bounded by one encoder pass either
-//! way. Workers run on an [`crate::exec::ThreadPool`] owned by the server.
+//! [`InferenceServer`] / [`Client::infer`] predate the engine: one
+//! blocking call per request, `None` on shutdown. They are kept so
+//! existing tests, examples, and embedders keep compiling, but every
+//! request now flows through the engine's bounded queues: `infer` is
+//! `Engine::submit` (blocks for *queue space*, providing the backpressure
+//! the old unbounded channels lacked) followed by `Ticket::wait`. New code
+//! should use [`Engine`](super::Engine) directly and hold
+//! [`Ticket`](super::Ticket)s (`poll` / `wait_timeout`) instead of
+//! blocking.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
 
-use crate::exec::ThreadPool;
 use crate::model::Encoder;
-use crate::tensor::ops::argmax;
 
-use super::batcher::{BatchPolicy, DynamicBatcher};
+pub use super::engine::{Response, ServerStats};
+use super::batcher::BatchPolicy;
+use super::engine::{Engine, ServeConfig};
 
-#[derive(Debug)]
-pub struct Request {
-    pub id: u64,
-    pub tokens: Vec<i32>,
-    pub submitted: Instant,
-    reply: Sender<Response>,
-}
+/// Admission depth for the legacy API. Deep enough that well-behaved
+/// closed-loop clients (the only kind this API supports — `infer` blocks)
+/// never queue anywhere near it, yet bounded, so a runaway embedder can no
+/// longer OOM the process the way the old unbounded channels could.
+const LEGACY_QUEUE_DEPTH: usize = 4096;
 
-/// Router messages: requests + an explicit shutdown sentinel (client clones
-/// keep the channel alive, so disconnect alone cannot signal shutdown).
-enum Message {
-    Req(Request),
-    Shutdown,
-}
-
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub class: usize,
-    pub logits: Vec<f32>,
-    pub latency: Duration,
-    pub batch_size: usize,
-}
-
-#[derive(Debug, Default)]
-pub struct ServerStats {
-    pub served: AtomicU64,
-    pub batches: AtomicU64,
-    pub total_latency_us: AtomicU64,
-    pub max_latency_us: AtomicU64,
-}
-
-impl ServerStats {
-    pub fn mean_latency_ms(&self) -> f64 {
-        let n = self.served.load(Ordering::Relaxed).max(1);
-        self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
-    }
-    pub fn mean_batch(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed).max(1);
-        self.served.load(Ordering::Relaxed) as f64 / b as f64
-    }
-    pub fn throughput_rps(&self, elapsed: Duration) -> f64 {
-        self.served.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64().max(1e-9)
+/// Exact conversion: `BatchPolicy::validate` (run before this) enforces
+/// `max_batch ≥ 1` and `max_wait ≤` the engine cap, so nothing is clamped.
+fn legacy_config(policy: &BatchPolicy, workers: usize) -> ServeConfig {
+    ServeConfig {
+        queue_depth: LEGACY_QUEUE_DEPTH,
+        max_batch: policy.max_batch,
+        max_wait_us: policy.max_wait.as_micros() as u64,
+        workers,
+        kernel_workers: 1,
     }
 }
 
-/// Handle for submitting requests; clones share the router queue.
+/// Handle for submitting requests; clones share the engine.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Message>,
-    next_id: Arc<AtomicU64>,
+    engine: Arc<Engine>,
 }
 
 impl Client {
-    /// Submit and block for the response. None if the server has shut down.
+    /// Submit and block for the response. `None` if the server has shut
+    /// down (or the request is invalid — the legacy behavior for those was
+    /// a worker panic; the engine rejects them at admission instead).
     pub fn infer(&self, tokens: Vec<i32>) -> Option<Response> {
-        let (reply_tx, reply_rx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Message::Req(Request { id, tokens, submitted: Instant::now(), reply: reply_tx }))
-            .ok()?;
-        reply_rx.recv().ok()
+        let ticket = self.engine.submit(tokens).ok()?;
+        ticket.wait().ok()
     }
 }
 
 pub struct InferenceServer {
-    tx: Sender<Message>,
-    router: Option<std::thread::JoinHandle<()>>,
-    /// Worker pool; dropped (joined) after the router closes the batch
-    /// queue on shutdown.
-    pool: Option<ThreadPool>,
-    next_id: Arc<AtomicU64>,
+    engine: Arc<Engine>,
     pub stats: Arc<ServerStats>,
 }
 
@@ -101,114 +65,39 @@ impl InferenceServer {
         Self::start_with_workers(encoder, policy, 1)
     }
 
-    /// Start a pool-backed server: the router batches requests, `workers`
-    /// pool workers (each with its own encoder clone) execute batches
-    /// concurrently. The client-facing API is identical at any width.
+    /// Start a pool-backed server: `workers` engine workers execute
+    /// batches concurrently. The client-facing API is identical at any
+    /// width.
+    ///
+    /// Panics on a degenerate policy (`max_batch == 0`) — the legacy
+    /// signature has no error channel; use [`Engine::start`] for a
+    /// `Result`.
     pub fn start_with_workers(encoder: Encoder, policy: BatchPolicy, workers: usize) -> Self {
-        let workers = workers.max(1);
-        let (tx, rx) = channel::<Message>();
-        let stats = Arc::new(ServerStats::default());
-
-        // Router: dynamic batching + shutdown propagation. Dropping
-        // `batch_tx` when it exits disconnects every worker.
-        let (batch_tx, batch_rx) = channel::<Vec<Request>>();
-        let router = std::thread::Builder::new()
-            .name("spion-serve-router".into())
-            .spawn(move || {
-                let batcher = DynamicBatcher::new(rx, policy);
-                while let Some(batch) = batcher.next_batch() {
-                    let mut requests = Vec::with_capacity(batch.len());
-                    let mut shutdown = false;
-                    for msg in batch {
-                        match msg {
-                            Message::Req(r) => requests.push(r),
-                            Message::Shutdown => shutdown = true,
-                        }
-                    }
-                    if !requests.is_empty() && batch_tx.send(requests).is_err() {
-                        break;
-                    }
-                    if shutdown {
-                        break;
-                    }
-                }
-            })
-            .expect("spawning serve router");
-
-        // Workers: drain whole batches off the shared queue.
-        let pool = ThreadPool::new(workers);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
-        for _ in 0..workers {
-            let enc = encoder.clone();
-            let batch_rx = batch_rx.clone();
-            let stats = stats.clone();
-            pool.submit(move |_wid| serve_worker(enc, batch_rx, stats));
-        }
-
-        Self {
-            tx,
-            router: Some(router),
-            pool: Some(pool),
-            next_id: Arc::new(AtomicU64::new(0)),
-            stats,
-        }
+        policy.validate().expect("invalid batch policy");
+        let engine = Engine::start(encoder, legacy_config(&policy, workers.max(1)))
+            .expect("legacy serve config is always valid");
+        let stats = engine.stats().clone();
+        Self { engine: Arc::new(engine), stats }
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone(), next_id: self.next_id.clone() }
+        Client { engine: self.engine.clone() }
     }
 
-    /// Signal the workers to finish queued batches and exit, then join.
-    pub fn shutdown(mut self) {
-        self.shutdown_inner();
-    }
-
-    fn shutdown_inner(&mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(r) = self.router.take() {
-            let _ = r.join(); // router exit drops batch_tx → workers drain and stop
-        }
-        self.pool.take(); // ThreadPool::drop joins the workers
-    }
-}
-
-/// One pool worker: pull batches until the router hangs up.
-fn serve_worker(
-    mut enc: Encoder,
-    batch_rx: Arc<Mutex<Receiver<Vec<Request>>>>,
-    stats: Arc<ServerStats>,
-) {
-    loop {
-        // Hold the lock only while receiving; processing runs unlocked so
-        // other workers can pick up the next batch meanwhile.
-        let batch = match batch_rx.lock().unwrap().recv() {
-            Ok(b) => b,
-            Err(_) => return,
-        };
-        let bsz = batch.len();
-        for req in batch {
-            let (logits, _) = enc.forward(&req.tokens);
-            let latency = req.submitted.elapsed();
-            stats.served.fetch_add(1, Ordering::Relaxed);
-            stats.total_latency_us.fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
-            stats.max_latency_us.fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
-            let _ = req.reply.send(Response {
-                id: req.id,
-                class: argmax(&logits),
-                logits,
-                latency,
-                batch_size: bsz,
-            });
-        }
-        if bsz > 0 {
-            stats.batches.fetch_add(1, Ordering::Relaxed);
-        }
+    /// Signal the workers to finish in-flight batches and exit, then join.
+    pub fn shutdown(self) {
+        self.engine.shutdown();
     }
 }
 
 impl Drop for InferenceServer {
+    /// The legacy server shut down when its handle was dropped, even with
+    /// `Client` clones still alive — preserve that: without this, a
+    /// long-lived `Client`'s `Arc<Engine>` would keep the router and the
+    /// whole worker pool running indefinitely. `Engine::shutdown` is
+    /// idempotent, so the explicit `shutdown(self)` path is unaffected.
     fn drop(&mut self) {
-        self.shutdown_inner();
+        self.engine.shutdown();
     }
 }
 
@@ -219,6 +108,8 @@ mod tests {
     use crate::model::ModelParams;
     use crate::pattern::BlockMask;
     use crate::util::rng::Rng;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
 
     fn mk_encoder(sparse: bool) -> Encoder {
         let mut rng = Rng::new(7);
@@ -244,6 +135,17 @@ mod tests {
         assert_eq!(r.class, r2.class, "deterministic");
         assert!(server.stats.served.load(Ordering::Relaxed) >= 2);
         server.shutdown();
+    }
+
+    #[test]
+    fn dropping_server_shuts_down_even_with_live_clients() {
+        // Legacy contract: the server handle owns the lifecycle; a
+        // surviving Client must not keep the engine serving.
+        let server = InferenceServer::start(mk_encoder(false), BatchPolicy::default());
+        let client = server.client();
+        drop(server);
+        let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
+        assert!(client.infer(toks).is_none(), "engine kept serving after server drop");
     }
 
     #[test]
@@ -309,5 +211,22 @@ mod tests {
         assert_eq!(ids.len(), 8, "all distinct requests answered");
         assert!(server.stats.mean_batch() >= 1.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn degenerate_policy_panics_with_descriptive_message() {
+        let result = std::panic::catch_unwind(|| {
+            InferenceServer::start(
+                mk_encoder(false),
+                BatchPolicy { max_batch: 0, max_wait: Duration::from_millis(1) },
+            )
+        });
+        let err = result.expect_err("max_batch = 0 must be rejected");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("max_batch"), "descriptive: {msg}");
     }
 }

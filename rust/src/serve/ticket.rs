@@ -1,0 +1,243 @@
+//! Tickets — the non-blocking client half of the serving engine.
+//!
+//! `Engine::try_submit` returns a [`Ticket`] immediately; the caller
+//! chooses when (and whether) to block: [`Ticket::poll`] never blocks,
+//! [`Ticket::wait`] parks until resolution, [`Ticket::wait_timeout`] parks
+//! with a deadline. The worker side holds the matching [`Resolver`].
+//!
+//! Resolution invariants:
+//! * **exactly once** — [`Resolver::resolve`] consumes the resolver, and a
+//!   second write can never land (the slot is write-once);
+//! * **always** — if a resolver is dropped unresolved (worker panic,
+//!   engine teardown race), its `Drop` impl resolves the ticket with
+//!   [`ServeError::ShuttingDown`], so no `wait()` can deadlock on a ticket
+//!   the engine admitted. This is the fix for the legacy server's silent
+//!   shutdown drop, where requests admitted behind the shutdown sentinel
+//!   vanished with an indistinguishable `None`.
+
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::engine::Response;
+
+/// Why a submission was not admitted. `try_submit`/`submit` return this —
+/// typed, so callers can tell shedding (`QueueFull`, retry later) from
+/// teardown (`ShuttingDown`, stop) from caller bugs (`BadRequest`, fix the
+/// request; the legacy path let these panic a worker mid-batch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The bounded admission queue is at `queue_depth` — backpressure.
+    QueueFull,
+    /// The engine is shutting down (or already shut down).
+    ShuttingDown,
+    /// The request can never be served (wrong length, out-of-vocab token):
+    /// rejected at the front door instead of poisoning a worker.
+    BadRequest { reason: String },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::QueueFull => write!(f, "admission queue full (backpressure — retry later)"),
+            Self::ShuttingDown => write!(f, "engine is shutting down"),
+            Self::BadRequest { reason } => write!(f, "bad request: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Why an *admitted* ticket resolved without a response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admitted but shed by shutdown before a worker picked it up (or the
+    /// worker died). The request was never executed.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ShuttingDown => write!(f, "engine shut down before the request was served"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What an admitted ticket resolves to.
+pub type TicketResult = Result<Response, ServeError>;
+
+struct TicketState {
+    slot: Mutex<Option<TicketResult>>,
+    done: Condvar,
+}
+
+/// Client handle for one admitted request. Cheap to move across threads;
+/// dropping it does not cancel the request (the worker still runs it, the
+/// result is discarded on resolution).
+pub struct Ticket {
+    id: u64,
+    state: Arc<TicketState>,
+}
+
+impl Ticket {
+    /// The engine-assigned request id (matches [`Response::id`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Non-blocking: `Some` once resolved, `None` while in flight.
+    pub fn poll(&self) -> Option<TicketResult> {
+        self.state.slot.lock().unwrap().clone()
+    }
+
+    /// Block until the engine resolves this ticket. Cannot deadlock: every
+    /// admitted ticket is resolved, worst case with
+    /// [`ServeError::ShuttingDown`] (see module docs).
+    pub fn wait(&self) -> TicketResult {
+        let mut g = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.as_ref() {
+                return r.clone();
+            }
+            g = self.state.done.wait(g).unwrap();
+        }
+    }
+
+    /// Block up to `d`; `None` if the deadline elapses first (the ticket
+    /// stays valid — poll or wait again later).
+    pub fn wait_timeout(&self, d: Duration) -> Option<TicketResult> {
+        let deadline = std::time::Instant::now() + d;
+        let mut g = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.as_ref() {
+                return Some(r.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.state.done.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+impl fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket")
+            .field("id", &self.id)
+            .field("resolved", &self.poll().is_some())
+            .finish()
+    }
+}
+
+/// Worker-side completion handle. Consumed by [`Resolver::resolve`];
+/// dropping it unresolved resolves the ticket with `ShuttingDown`.
+pub struct Resolver {
+    state: Option<Arc<TicketState>>,
+}
+
+impl Resolver {
+    fn set(state: &Arc<TicketState>, r: TicketResult) {
+        let mut g = state.slot.lock().unwrap();
+        if g.is_none() {
+            *g = Some(r);
+            drop(g);
+            state.done.notify_all();
+        }
+    }
+
+    /// Resolve the paired ticket (exactly once — consumes the resolver).
+    pub fn resolve(mut self, r: TicketResult) {
+        if let Some(state) = self.state.take() {
+            Self::set(&state, r);
+        }
+    }
+}
+
+impl Drop for Resolver {
+    fn drop(&mut self) {
+        // Safety net for panic/teardown paths: an admitted ticket must
+        // never be left pending.
+        if let Some(state) = self.state.take() {
+            Self::set(&state, Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
+/// Create a linked (ticket, resolver) pair for request `id`.
+pub fn ticket(id: u64) -> (Ticket, Resolver) {
+    let state = Arc::new(TicketState { slot: Mutex::new(None), done: Condvar::new() });
+    (Ticket { id, state: state.clone() }, Resolver { state: Some(state) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_response(id: u64) -> Response {
+        Response {
+            id,
+            class: 0,
+            logits: vec![0.0],
+            latency: Duration::ZERO,
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn poll_then_resolve_then_wait() {
+        let (t, r) = ticket(7);
+        assert_eq!(t.id(), 7);
+        assert!(t.poll().is_none(), "pending");
+        r.resolve(Ok(ok_response(7)));
+        assert_eq!(t.poll().unwrap().unwrap().id, 7);
+        assert_eq!(t.wait().unwrap().id, 7, "wait after resolution returns instantly");
+    }
+
+    #[test]
+    fn wait_blocks_until_resolved_from_another_thread() {
+        let (t, r) = ticket(1);
+        let h = std::thread::spawn(move || t.wait());
+        r.resolve(Err(ServeError::ShuttingDown));
+        assert_eq!(h.join().unwrap().unwrap_err(), ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn wait_timeout_elapses_then_succeeds() {
+        let (t, r) = ticket(2);
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_none(), "times out while pending");
+        r.resolve(Ok(ok_response(2)));
+        let got = t.wait_timeout(Duration::from_secs(30)).expect("resolved");
+        assert_eq!(got.unwrap().id, 2);
+    }
+
+    #[test]
+    fn dropped_resolver_resolves_shutting_down() {
+        let (t, r) = ticket(3);
+        drop(r);
+        assert_eq!(t.wait().unwrap_err(), ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn resolution_is_first_writer_wins() {
+        // resolve() consumes the resolver, so a double write is impossible
+        // by construction; the slot additionally ignores late writers (the
+        // Drop safety net after an explicit resolve is a no-op).
+        let (t, r) = ticket(4);
+        r.resolve(Ok(ok_response(4)));
+        assert!(t.wait().is_ok());
+    }
+
+    #[test]
+    fn error_types_display() {
+        assert!(AdmissionError::QueueFull.to_string().contains("full"));
+        assert!(AdmissionError::ShuttingDown.to_string().contains("shutting down"));
+        let e = AdmissionError::BadRequest { reason: "expected 16 tokens, got 3".into() };
+        assert!(e.to_string().contains("16 tokens"));
+        assert!(ServeError::ShuttingDown.to_string().contains("shut down"));
+    }
+}

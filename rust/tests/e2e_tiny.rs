@@ -34,6 +34,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         train,
         sparsity: SparsityConfig::new(kind, 16, 0.9),
         exec: Default::default(),
+        serve: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -139,6 +139,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         train,
         sparsity,
         exec: spion::exec::ExecConfig::with_workers(workers),
+        serve: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -248,6 +249,7 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
             train,
             sparsity: SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 16, 0.9),
             exec: Default::default(),
+            serve: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     };

@@ -114,8 +114,8 @@ fn main() {
         // both kernel regimes at every worker count.
         for &workers in &workers_axis {
             for (kname, kernel) in [
-                ("fused", KernelConfig { fused: true, simd: true }),
-                ("unfused", KernelConfig { fused: false, simd: false }),
+                ("fused", KernelConfig { fused: true, simd: true, fused_bwd: true }),
+                ("unfused", KernelConfig { fused: false, simd: false, fused_bwd: false }),
             ] {
                 let exec = Exec::new(ExecConfig { workers, kernel, ..Default::default() });
                 for (kind, mask) in &masks {

@@ -12,14 +12,24 @@
 //! dominate, GEMM-replacements gain ≈ the density reciprocal × overhead;
 //! the workers axis adds near-linear scaling on top for L large enough.
 //!
+//! Training rows: the **backward** (dV/dW/dZ/dQ/dK on cached
+//! probabilities) is measured with the same dense-vs-sparse treatment —
+//! dense `dense_attention_backward_cached` vs the fused two-sweep
+//! block-CSR backward — and the sparse engine's measured forward/backward
+//! FLOPs (stage-split op tallies) are printed against the §4.4 closed
+//! forms, so gradient ops are reported with the same fidelity as the
+//! forward.
+//!
 //! Run: cargo bench --bench fig6_mha_breakdown [-- --workers 1,2,4]
 //!      (SPION_BENCH_FAST=1 to smoke, SPION_BENCH_WORKERS=1,8 to override)
 
 mod common;
 
 use common::{pattern_for, qkv, scores_for, task_shapes, worker_counts};
-use spion::attention::dense::dense_attention_head;
+use spion::attention::dense::{dense_attention_backward_cached, dense_attention_head};
+use spion::attention::TrainWorkspace;
 use spion::exec::{Exec, ExecConfig};
+use spion::sparse::ops::{sparse_bwd_ops, sparse_ops};
 use spion::sparse::bcsr::Bcsr;
 use spion::sparse::sddmm::sddmm_with;
 use spion::sparse::softmax::sparse_softmax_with;
@@ -73,6 +83,17 @@ fn main() {
             let (o, _) = dense_attention_head(&q, &k, &v, scale);
             std::hint::black_box(&o);
         });
+        // Dense backward baseline on cached probabilities (what a training
+        // loop actually runs after the forward).
+        let (_, dense_probs) = dense_attention_head(&q, &k, &v, scale);
+        let cot = {
+            let mut r = Rng::new(0xBAD);
+            Mat::random_normal(shape.l, shape.dh, 1.0, &mut r)
+        };
+        let mha_dense_bwd = bench("mha_dense_bwd", || {
+            let g = dense_attention_backward_cached(&q, &k, &v, scale, &dense_probs, &cot);
+            std::hint::black_box(&g);
+        });
 
         // --- sparse kernels at each worker count ---
         for &workers in &workers_axis {
@@ -108,11 +129,21 @@ fn main() {
                 std::hint::black_box(&o);
             });
 
+            // Sparse backward on the forward's cached probabilities (fused
+            // two-sweep, the default training path).
+            let mut tws = TrainWorkspace::new(&mask, shape.dh);
+            spion::attention::sparse_attention_head_with(&exec, &q, &k, &v, scale, &mut tws.fwd);
+            let mha_sparse_bwd = bench("mha_sparse_bwd", || {
+                tws.backward_with(&exec, &q, &k, &v, scale, &cot);
+                std::hint::black_box(&tws.dq);
+            });
+
             for (op, d, s) in [
                 ("QKt (GEMM->SDDMM)", &gemm, &sddmm_t),
                 ("softmax (dense->sparse)", &soft_d, &soft_s),
                 ("A*V (GEMM->SpMM)", &gemm_av, &spmm_t),
                 ("full MHA fwd", &mha_dense, &mha_sparse),
+                ("full MHA bwd (cached probs)", &mha_dense_bwd, &mha_sparse_bwd),
             ] {
                 report.row(vec![
                     shape.name.to_string(),
@@ -124,6 +155,24 @@ fn main() {
                 ]);
             }
         }
+
+        // Fidelity check: the engine's stage-split tallies vs the §4.4
+        // closed forms, forward AND backward, at this shape's pattern.
+        let exec = Exec::serial();
+        let mut tws = TrainWorkspace::new(&mask, shape.dh);
+        exec.reset_ops();
+        spion::attention::sparse_attention_head_with(&exec, &q, &k, &v, scale, &mut tws.fwd);
+        tws.backward_with(&exec, &q, &k, &v, scale, &cot);
+        let c = exec.op_counter();
+        let (lu, du, cu) = (shape.l as u64, shape.dh as u64, mask.nnz_elements() as u64);
+        println!(
+            "[fig6] {} measured flops — fwd {} (closed form {}), bwd {} (closed form {})",
+            shape.name,
+            c.fwd_flops(),
+            sparse_ops(lu, du, cu).total(),
+            c.bwd_flops(),
+            sparse_bwd_ops(lu, du, cu).total(),
+        );
     }
     report.print();
     report.save_csv("results/fig6_mha_breakdown.csv");

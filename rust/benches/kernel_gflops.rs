@@ -5,7 +5,10 @@
 //! pattern at B=8 (plus a B=4 row for the second specialized dispatch):
 //! * the three unfused kernels in isolation (sddmm / softmax / spmm);
 //! * the unfused three-pass pipeline (their sum, measured as one pass);
-//! * the fused per-block-row pipeline, SIMD on and off.
+//! * the fused per-block-row pipeline, SIMD on and off;
+//! * the **backward** pipeline (dV/dW/dZ/dQ/dK on the forward's cached
+//!   probabilities): unfused five-pass vs the fused two-sweep
+//!   (`fused_bwd`), SIMD on and off — the training counterpart rows.
 //!
 //! The isolated softmax row re-copies the logits each iteration (the kernel
 //! is in-place destructive); the memcpy is a few percent of the kernel time
@@ -24,7 +27,7 @@
 mod common;
 
 use common::worker_counts;
-use spion::attention::{sparse_attention_head_with, SparseWorkspace};
+use spion::attention::{sparse_attention_head_with, SparseWorkspace, TrainWorkspace};
 use spion::exec::{Exec, ExecConfig, KernelConfig};
 use spion::pattern::spion::{generate_pattern, synth_attention_scores, PatternConfig};
 use spion::pattern::SpionVariant;
@@ -52,12 +55,13 @@ fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
     Exec::new(ExecConfig { workers, kernel, ..Default::default() })
 }
 
+/// (unfused_fwd_w1, fused_fwd_w1, unfused_bwd_w1, fused_bwd_w1) medians.
 fn bench_block_size(
     block: usize,
     workers_axis: &[usize],
     rng: &mut Rng,
     rows: &mut Vec<Row>,
-) -> (f64, f64) {
+) -> (f64, f64, f64, f64) {
     let scores = synth_attention_scores(L, 1.0, 0.3, &[L / 3, 2 * L / 3], 0.05, rng);
     let cfg = PatternConfig {
         variant: SpionVariant::CF,
@@ -78,14 +82,22 @@ fn bench_block_size(
     let spmm_flops = 2.0 * stored * DH as f64;
     let softmax_flops = 5.0 * stored;
     let pipeline_flops = sddmm_flops + softmax_flops + spmm_flops;
+    // Backward: 4 GEMM-shaped kernels (dV/dW/dQ/dK) + the two-pair
+    // Jacobian — the unfused count charged to every backward row so fused
+    // rates are directly comparable (see sparse::ops::engine_bwd_muladds).
+    let bwd_flops = 2.0 * (4.0 * stored * DH as f64 + 2.0 * stored);
     let gfl = |flops: f64, st: &BenchStats| flops / (st.median_ms * 1e-3) / 1e9;
 
     let mut fused_w1_ms = f64::NAN;
     let mut unfused_w1_ms = f64::NAN;
+    let mut bwd_fused_w1_ms = f64::NAN;
+    let mut bwd_unfused_w1_ms = f64::NAN;
     for &workers in workers_axis {
-        let unfused = exec_with(workers, KernelConfig { fused: false, simd: false });
-        let fused = exec_with(workers, KernelConfig { fused: true, simd: true });
-        let fused_scalar = exec_with(workers, KernelConfig { fused: true, simd: false });
+        let unfused =
+            exec_with(workers, KernelConfig { fused: false, simd: false, fused_bwd: false });
+        let fused = exec_with(workers, KernelConfig { fused: true, simd: true, fused_bwd: true });
+        let fused_scalar =
+            exec_with(workers, KernelConfig { fused: true, simd: false, fused_bwd: true });
 
         // Isolated kernels (unfused reference forms).
         let mut s = Bcsr::from_mask(&mask);
@@ -128,8 +140,33 @@ fn bench_block_size(
                 stats: st,
             });
         }
+
+        // Backward pipelines: one forward fills the cached probabilities,
+        // then each regime repeatedly runs the full five-gradient backward
+        // over a reused TrainWorkspace (the trainer's steady state).
+        for (name, exec) in [
+            ("bwd-unfused", &unfused),
+            ("bwd-fused", &fused),
+            ("bwd-fused-noSIMD", &fused_scalar),
+        ] {
+            let mut ws = TrainWorkspace::new(&mask, DH);
+            sparse_attention_head_with(exec, &q, &k, &v, scale, &mut ws.fwd);
+            let cot = Mat::random_normal(L, DH, 1.0, &mut Rng::new(0xC07));
+            let st = bench(name, || {
+                ws.backward_with(exec, &q, &k, &v, scale, &cot);
+                std::hint::black_box(&ws.dq);
+            });
+            if workers == 1 && block == 8 {
+                match name {
+                    "bwd-fused" => bwd_fused_w1_ms = st.median_ms,
+                    "bwd-unfused" => bwd_unfused_w1_ms = st.median_ms,
+                    _ => {}
+                }
+            }
+            rows.push(Row { workers, block, kernel: name, gflops: gfl(bwd_flops, &st), stats: st });
+        }
     }
-    (unfused_w1_ms, fused_w1_ms)
+    (unfused_w1_ms, fused_w1_ms, bwd_unfused_w1_ms, bwd_fused_w1_ms)
 }
 
 fn main() {
@@ -137,10 +174,13 @@ fn main() {
     let mut rng = Rng::new(0x5EED);
     let mut rows = Vec::new();
     let mut speedup_w1 = f64::NAN;
+    let mut bwd_speedup_w1 = f64::NAN;
     for block in [8usize, 4] {
-        let (unf, fus) = bench_block_size(block, &workers_axis, &mut rng, &mut rows);
+        let (unf, fus, bwd_unf, bwd_fus) =
+            bench_block_size(block, &workers_axis, &mut rng, &mut rows);
         if block == 8 {
             speedup_w1 = unf / fus;
+            bwd_speedup_w1 = bwd_unf / bwd_fus;
         }
     }
 
@@ -159,6 +199,7 @@ fn main() {
     }
     report.print();
     println!("\nfused-SIMD speedup vs unfused pipeline (L=512, B=8, workers=1): {speedup_w1:.2}x");
+    println!("fused-SIMD backward speedup vs unfused backward (L=512, B=8, workers=1): {bwd_speedup_w1:.2}x");
     report.save_csv("results/kernel_gflops.csv");
 
     // Machine-readable evidence for the perf trajectory.
@@ -169,6 +210,9 @@ fn main() {
     // Only present when the workers axis included 1 (NaN is not JSON).
     if speedup_w1.is_finite() {
         json.push_str(&format!("  \"fused_speedup_w1_b8\": {speedup_w1:.3},\n"));
+    }
+    if bwd_speedup_w1.is_finite() {
+        json.push_str(&format!("  \"fused_bwd_speedup_w1_b8\": {bwd_speedup_w1:.3},\n"));
     }
     json.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {

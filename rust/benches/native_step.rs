@@ -1,25 +1,36 @@
 //! Native-backend full train step: per-step time of the rust full-encoder
 //! forward+backward (embedding → N layers → classifier → loss → SGD grads)
-//! with dense vs SPION-sparse attention, across exec worker counts.
+//! with dense vs SPION-sparse attention, across exec worker counts and —
+//! for the sparse rows — the `fused_bwd` kernel axis (fused two-sweep vs
+//! unfused five-pass backward).
 //!
 //! This is the Fig. 5 comparison lifted from the attention core to the
 //! *whole* train step the native backend actually executes — the sparse
 //! rows show how much of the paper's attention speedup survives once the
-//! (dense) projections/FFN/LayerNorm surround it.
+//! (dense) projections/FFN/LayerNorm surround it, and the fused_bwd axis
+//! shows how much of the remaining sparse-phase time the fused backward
+//! recovers. The loop mirrors NativeTrainer exactly: per-sample gradients
+//! and sparse TrainCaches come from step-spanning free-lists and the
+//! ordered fold overlaps the fan-out (`par_map_fold`).
+//!
+//! Writes `BENCH_train.json` — the training perf trajectory file (step
+//! time dense vs sparse × fused_bwd × workers).
 //!
 //! Run: cargo bench --bench native_step [-- --workers 1,2,4 --batch 4]
 
 mod common;
 
+use std::sync::Mutex;
+
 use common::worker_counts;
 use spion::config::types::{preset, SparsityConfig};
 use spion::config::{ModelConfig, PatternKind};
-use spion::exec::{Exec, ExecConfig};
+use spion::exec::{Exec, ExecConfig, KernelConfig};
 use spion::model::grad::ModelGrads;
-use spion::model::{train_step_sample, ModelParams};
+use spion::model::{train_step_sample, ModelParams, TrainCache};
 use spion::pattern::spion::synth_attention_scores;
 use spion::pattern::{BlockMask, SpionVariant};
-use spion::util::bench::{bench, Report};
+use spion::util::bench::{bench, BenchStats, Report};
 use spion::util::cli::Args;
 use spion::util::rng::Rng;
 
@@ -43,10 +54,18 @@ fn masks_for(model: &ModelConfig, exp_block: usize, alpha: f64) -> Vec<BlockMask
         .collect()
 }
 
+struct Row {
+    attention: &'static str,
+    workers: usize,
+    fused_bwd: &'static str,
+    stats: BenchStats,
+    per_sample_ms: f64,
+}
+
 fn main() {
     let args = Args::from_env();
     args.help_if_requested(
-        "Native full-encoder train-step bench (dense vs SPION-sparse)",
+        "Native full-encoder train-step bench (dense vs SPION-sparse × fused_bwd)",
         &[
             ("preset <name>", "model preset (default tiny)"),
             ("workers <list>", "comma-separated worker counts (default 1,2,4)"),
@@ -59,6 +78,7 @@ fn main() {
     let batch = args.usize_or("batch", model.batch);
     let block = spion::config::types::default_block(&model);
     let alpha = args.f64_or("alpha", 0.9);
+    let dh = model.d_model / model.heads;
 
     let params = ModelParams::init_random(&model, 42);
     let masks = masks_for(&model, block, alpha);
@@ -73,43 +93,112 @@ fn main() {
     );
     let mut report = Report::new(
         "Native full train step (fwd+bwd, all parameters)",
-        &["attention", "workers", "step", "per-sample"],
+        &["attention", "workers", "fused_bwd", "step", "per-sample"],
     );
+    let mut rows: Vec<Row> = Vec::new();
 
     for &workers in &worker_counts() {
-        let exec = Exec::new(ExecConfig::with_workers(workers));
-        let inner = exec.serial_view();
-        for (name, layer_masks) in [("dense", None), ("spion-cf", Some(masks.as_slice()))] {
+        // (attention, fused_bwd label, masks, kernel) — the dense row has
+        // no sparse backward, so it carries one kernel config only.
+        let cases: [(&'static str, &'static str, Option<&[BlockMask]>, KernelConfig); 3] = [
+            ("dense", "-", None, KernelConfig::default()),
+            ("spion-cf", "on", Some(masks.as_slice()), KernelConfig::default()),
+            (
+                "spion-cf",
+                "off",
+                Some(masks.as_slice()),
+                KernelConfig { fused_bwd: false, ..KernelConfig::default() },
+            ),
+        ];
+        for (name, fbwd, layer_masks, kernel) in cases {
+            let exec = Exec::new(ExecConfig { workers, kernel, ..Default::default() });
+            let inner = exec.serial_view();
+            // Step-spanning free-lists, exactly as NativeTrainer keeps them
+            // (steady state allocates no ModelGrads / TrainCache).
+            let grad_pool: Mutex<Vec<ModelGrads>> = Mutex::new(Vec::with_capacity(batch));
+            let cache_pool: Mutex<Vec<TrainCache>> = Mutex::new(Vec::with_capacity(batch));
+            let mut grads = ModelGrads::zeros_like(&params);
             let stats = bench(name, || {
                 // One batch = the unit the trainer times per step; samples
-                // fan out over the pool exactly as NativeTrainer does.
-                let per_sample = exec.par_map(batch, |i| {
-                    let mut g = ModelGrads::zeros_like(&params);
-                    let toks = &b.x[i * model.seq_len..(i + 1) * model.seq_len];
-                    train_step_sample(
-                        &inner,
-                        &params,
-                        model.heads,
-                        layer_masks,
-                        toks,
-                        b.y[i],
-                        false,
-                        &mut g,
-                    );
-                    g
-                });
-                std::hint::black_box(&per_sample);
+                // fan out over the pool and fold in order, overlapped.
+                grads.zero();
+                exec.par_map_fold(
+                    batch,
+                    |i| {
+                        let mut g = match grad_pool.lock().unwrap().pop() {
+                            Some(mut g) => {
+                                g.zero();
+                                g
+                            }
+                            None => ModelGrads::zeros_like(&params),
+                        };
+                        let mut cache = layer_masks.map(|ms| {
+                            cache_pool
+                                .lock()
+                                .unwrap()
+                                .pop()
+                                .unwrap_or_else(|| TrainCache::new(ms, model.heads, dh))
+                        });
+                        let toks = &b.x[i * model.seq_len..(i + 1) * model.seq_len];
+                        train_step_sample(
+                            &inner,
+                            &params,
+                            model.heads,
+                            layer_masks,
+                            toks,
+                            b.y[i],
+                            false,
+                            &mut g,
+                            cache.as_mut(),
+                        );
+                        (g, cache)
+                    },
+                    |_, (g, cache)| {
+                        grads.add_assign(&g);
+                        grad_pool.lock().unwrap().push(g);
+                        if let Some(c) = cache {
+                            cache_pool.lock().unwrap().push(c);
+                        }
+                    },
+                );
+                std::hint::black_box(&grads);
             });
+            let per_sample_ms = stats.median_ms / batch as f64;
             report.row(vec![
                 name.to_string(),
                 workers.to_string(),
+                fbwd.to_string(),
                 stats.per_iter_human(),
-                spion::util::bench::format_ms(stats.median_ms / batch as f64),
+                spion::util::bench::format_ms(per_sample_ms),
             ]);
+            rows.push(Row { attention: name, workers, fused_bwd: fbwd, stats, per_sample_ms });
         }
     }
     report.print();
     if let Some(csv) = args.get("out") {
         report.save_csv(csv);
     }
+
+    // Machine-readable training perf trajectory.
+    let mut json =
+        String::from("{\n  \"bench\": \"native_step\",\n  \"provenance\": \"measured\",\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"preset\": \"{preset_name}\", \"l\": {}, \"d\": {}, \"heads\": {}, \"layers\": {}, \"batch\": {batch}, \"density\": {density:.4}}},\n",
+        model.seq_len, model.d_model, model.heads, model.layers
+    ));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"attention\": \"{}\", \"workers\": {}, \"fused_bwd\": \"{}\", \"step_ms\": {:.4}, \"per_sample_ms\": {:.4}}}{}\n",
+            r.attention,
+            r.workers,
+            r.fused_bwd,
+            r.stats.median_ms,
+            r.per_sample_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_train.json", &json).expect("writing BENCH_train.json");
+    println!("wrote BENCH_train.json");
 }

@@ -200,7 +200,9 @@ impl TrainWorkspace {
     /// Backward only, reusing the softmax probabilities left in `fwd.s` by
     /// the most recent forward over this workspace (the full-encoder native
     /// trainer runs the forward during its own forward sweep and calls this
-    /// during the reverse sweep). Gradients land in `dq`/`dk`/`dv`.
+    /// during the reverse sweep). Gradients land in `dq`/`dk`/`dv`. Routed
+    /// through the fused two-sweep backward (`exec.kernel().fused_bwd`,
+    /// default on) with the workspace's pattern-build-time tile dispatch.
     pub fn backward_with(
         &mut self,
         exec: &Exec,
@@ -211,8 +213,8 @@ impl TrainWorkspace {
         d_out: &Mat,
     ) {
         let TrainWorkspace { fwd, grad_buf, dq, dk, dv } = self;
-        crate::sparse::backward::sparse_attention_backward_with(
-            exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv,
+        crate::sparse::backward::sparse_attention_backward_dispatch(
+            exec, q, k, v, scale, &fwd.s, d_out, grad_buf, dq, dk, dv, fwd.dispatch,
         );
     }
 }
@@ -305,7 +307,7 @@ mod tests {
         mask.set(0, 2, true);
         let fused_exec = Exec::serial(); // default kernel: fused + simd
         let unfused_exec = Exec::new(crate::exec::ExecConfig {
-            kernel: crate::exec::KernelConfig { fused: false, simd: false },
+            kernel: crate::exec::KernelConfig { fused: false, simd: false, fused_bwd: false },
             ..Default::default()
         });
         let mut ws_f = SparseWorkspace::new(&mask, dh);

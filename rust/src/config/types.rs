@@ -405,6 +405,9 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         if let Some(v) = e.get("simd").and_then(|v| v.as_bool()) {
             exec.kernel.simd = v;
         }
+        if let Some(v) = e.get("fused_bwd").and_then(|v| v.as_bool()) {
+            exec.kernel.fused_bwd = v;
+        }
     }
 
     let mut serve = ServeConfig::default();
@@ -538,6 +541,7 @@ deterministic = false
         assert!(!cfg.exec.deterministic);
         assert!(cfg.exec.kernel.fused, "kernel defaults on when unspecified");
         assert!(cfg.exec.kernel.simd);
+        assert!(cfg.exec.kernel.fused_bwd);
         assert!(experiment_from_toml("preset = \"tiny\"\n[exec]\nworkers = -1").is_err());
     }
 
@@ -549,11 +553,17 @@ preset = "tiny"
 [exec]
 fused = false
 simd = false
+fused_bwd = false
 "#,
         )
         .unwrap();
         assert!(!cfg.exec.kernel.fused);
         assert!(!cfg.exec.kernel.simd);
+        assert!(!cfg.exec.kernel.fused_bwd);
+        // The backward flag is independent of the forward one.
+        let cfg = experiment_from_toml("preset = \"tiny\"\n[exec]\nfused = false").unwrap();
+        assert!(!cfg.exec.kernel.fused);
+        assert!(cfg.exec.kernel.fused_bwd, "fused_bwd stays default-on");
     }
 
     #[test]

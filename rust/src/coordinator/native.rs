@@ -13,10 +13,15 @@
 //! masks, forward *and* backward.
 //!
 //! Parallelism & determinism: batch samples fan out over the exec pool
-//! (`par_map`), each with a serial inner kernel context; per-sample
-//! gradients are folded in sample order, so the batch gradient — and hence
-//! the whole training trajectory — is bit-identical at any worker count
-//! (tier 1 of the DESIGN.md determinism ladder).
+//! (`par_map_fold`), each with a serial inner kernel context; per-sample
+//! gradients are folded in sample order **on the calling thread, while the
+//! fan-out is still running** — the ordered reduction overlaps the
+//! backward instead of serializing behind the slowest shard — so the batch
+//! gradient, and hence the whole training trajectory, is bit-identical at
+//! any worker count (tier 1 of the DESIGN.md determinism ladder).
+//! Per-sample `ModelGrads` and sparse-phase `TrainCache`s come from
+//! step-spanning free-lists: the steady-state sparse loop performs no heap
+//! allocation (witnessed by tests/backward_parity.rs).
 //!
 //! Optimizer: momentum SGD owned by this module ([`SgdMomentum`]); the
 //! PJRT artifacts bake Adam, so the two backends share phases and kernels
@@ -29,7 +34,7 @@ use crate::data::{batcher::Batcher, make_task};
 use crate::exec::Exec;
 use crate::metrics::{Phase, StepRecord, TrainMetrics};
 use crate::model::grad::{ModelGrads, SgdMomentum};
-use crate::model::train::train_step_sample;
+use crate::model::train::{train_step_sample, TrainCache};
 use crate::model::{Encoder, ModelParams};
 use crate::pattern::BlockMask;
 use crate::tensor::Mat;
@@ -95,14 +100,18 @@ impl NativeTrainer {
         let mut metrics = TrainMetrics::default();
         let mut masks: Option<Vec<BlockMask>> = None;
         let mut grads = ModelGrads::zeros_like(&params);
-        // Reusable per-sample gradient buffers: a free-list shared across
-        // steps, so the steady-state loop allocates no ModelGrads after the
-        // first step (previously: one fresh zeros_like per sample per
-        // step). Which buffer a sample gets is irrelevant to numerics —
-        // every buffer is zeroed before use and the fold below stays in
+        let dh = m.d_model / m.heads;
+        // Reusable per-sample buffers: free-lists shared across steps, so
+        // the steady-state loop allocates no ModelGrads after the first
+        // step and no sparse-phase TrainCache (block-CSR workspaces, slice
+        // staging) after the first sparse step. Which buffer a sample gets
+        // is irrelevant to numerics — ModelGrads are zeroed before use,
+        // TrainCaches fully overwritten, and the fold below stays in
         // sample order, so the trajectory remains bit-identical at any
         // worker count.
         let grad_pool: std::sync::Mutex<Vec<ModelGrads>> =
+            std::sync::Mutex::new(Vec::with_capacity(m.batch));
+        let cache_pool: std::sync::Mutex<Vec<TrainCache>> =
             std::sync::Mutex::new(Vec::with_capacity(m.batch));
 
         for step in 0..cfg.train.steps {
@@ -115,53 +124,74 @@ impl NativeTrainer {
                     || step + 1 == cfg.train.max_dense_steps);
 
             // Fan samples out over the pool; serial kernels inside each
-            // sample (the batch is the outer parallel axis).
+            // sample (the batch is the outer parallel axis). NOTE:
+            // benches/native_step.rs mirrors this pooled loop to measure
+            // the step the trainer actually runs — keep the two in sync.
+            // The ordered gradient fold runs on this thread *overlapped*
+            // with the still-running backward fan-out (`par_map_fold`): each
+            // sample's gradient is folded as soon as it and all earlier
+            // samples have landed, so the reduction no longer serializes
+            // behind the slowest shard — while the strict sample order
+            // keeps the batch gradient bit-identical at any worker count.
             let inner = self.exec.serial_view();
             let params_ref = &params;
             let masks_ref = masks.as_deref();
-            let per_sample = self.exec.par_map(m.batch, |b| {
-                let mut g = match grad_pool.lock().unwrap().pop() {
-                    Some(mut g) => {
-                        g.zero();
-                        g
-                    }
-                    None => ModelGrads::zeros_like(params_ref),
-                };
-                let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
-                let r = train_step_sample(
-                    &inner,
-                    params_ref,
-                    m.heads,
-                    masks_ref,
-                    toks,
-                    batch.y[b],
-                    snapshot_due,
-                    &mut g,
-                );
-                (r.loss, r.correct, g, r.scores)
-            });
-
-            // Ordered fold: bit-identical batch gradient at any worker count.
             grads.zero();
             let mut loss_sum = 0.0f64;
             let mut correct = 0usize;
             let mut score_acc: Option<Vec<Mat>> = None;
-            for (loss, ok, g, scores) in per_sample {
-                loss_sum += loss;
-                correct += ok as usize;
-                grads.add_assign(&g);
-                grad_pool.lock().unwrap().push(g); // recycle for the next step
-                if let Some(s) = scores {
-                    match &mut score_acc {
-                        None => score_acc = Some(s),
-                        Some(acc) => {
-                            for (a, b) in acc.iter_mut().zip(&s) {
-                                a.add_assign(b);
+            self.exec.par_map_fold(
+                m.batch,
+                |b| {
+                    let mut g = match grad_pool.lock().unwrap().pop() {
+                        Some(mut g) => {
+                            g.zero();
+                            g
+                        }
+                        None => ModelGrads::zeros_like(params_ref),
+                    };
+                    let mut cache = masks_ref.map(|ms| {
+                        cache_pool
+                            .lock()
+                            .unwrap()
+                            .pop()
+                            .unwrap_or_else(|| TrainCache::new(ms, m.heads, dh))
+                    });
+                    let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
+                    let r = train_step_sample(
+                        &inner,
+                        params_ref,
+                        m.heads,
+                        masks_ref,
+                        toks,
+                        batch.y[b],
+                        snapshot_due,
+                        &mut g,
+                        cache.as_mut(),
+                    );
+                    (r.loss, r.correct, g, cache, r.scores)
+                },
+                |_, (loss, ok, g, cache, scores)| {
+                    loss_sum += loss;
+                    correct += ok as usize;
+                    grads.add_assign(&g);
+                    // Recycle for in-flight samples and the next step.
+                    grad_pool.lock().unwrap().push(g);
+                    if let Some(c) = cache {
+                        cache_pool.lock().unwrap().push(c);
+                    }
+                    if let Some(s) = scores {
+                        match &mut score_acc {
+                            None => score_acc = Some(s),
+                            Some(acc) => {
+                                for (a, b) in acc.iter_mut().zip(&s) {
+                                    a.add_assign(b);
+                                }
                             }
                         }
                     }
-                }
-            }
+                },
+            );
             grads.scale(1.0 / m.batch as f32);
             opt.step(&mut params, &grads);
 

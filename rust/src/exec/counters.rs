@@ -5,10 +5,27 @@
 //! the atomics here are off the hot path; slots are cache-line padded so
 //! workers never contend on a line. The slot is picked from the pool-worker
 //! id of the current thread; all non-pool threads share the last slot.
+//!
+//! Counts are split by [`Stage`]: the same kernel (SDDMM, SpMM, transposed
+//! SpMM) runs in both the forward and the backward of sparse training, and
+//! the fig6/ops_table reports break FLOPs out per direction. The stage is
+//! carried by the [`crate::exec::Exec`] handle (see `Exec::backward_stage`),
+//! so kernels stay stage-oblivious — they call `exec.tally().add_*` and the
+//! handle routes the count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sparse::ops::OpCounter;
+
+/// Which direction of the training pass an op count belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Stage {
+    /// Forward kernels (inference and the forward half of training).
+    #[default]
+    Fwd,
+    /// Backward kernels (gradient SpMM/SDDMM/softmax-Jacobian).
+    Bwd,
+}
 
 #[repr(align(64))]
 #[derive(Default)]
@@ -16,6 +33,9 @@ struct Slot {
     mul_add: AtomicU64,
     exp: AtomicU64,
     cmp: AtomicU64,
+    bwd_mul_add: AtomicU64,
+    bwd_exp: AtomicU64,
+    bwd_cmp: AtomicU64,
 }
 
 /// Aggregating tally: one padded slot per worker plus one shared slot for
@@ -35,16 +55,28 @@ impl OpTally {
         &self.slots[id.min(self.slots.len() - 1)]
     }
 
-    pub fn add_mul_add(&self, n: u64) {
-        self.slot().mul_add.fetch_add(n, Ordering::Relaxed);
+    pub fn add_mul_add(&self, stage: Stage, n: u64) {
+        let s = self.slot();
+        match stage {
+            Stage::Fwd => s.mul_add.fetch_add(n, Ordering::Relaxed),
+            Stage::Bwd => s.bwd_mul_add.fetch_add(n, Ordering::Relaxed),
+        };
     }
 
-    pub fn add_exp(&self, n: u64) {
-        self.slot().exp.fetch_add(n, Ordering::Relaxed);
+    pub fn add_exp(&self, stage: Stage, n: u64) {
+        let s = self.slot();
+        match stage {
+            Stage::Fwd => s.exp.fetch_add(n, Ordering::Relaxed),
+            Stage::Bwd => s.bwd_exp.fetch_add(n, Ordering::Relaxed),
+        };
     }
 
-    pub fn add_cmp(&self, n: u64) {
-        self.slot().cmp.fetch_add(n, Ordering::Relaxed);
+    pub fn add_cmp(&self, stage: Stage, n: u64) {
+        let s = self.slot();
+        match stage {
+            Stage::Fwd => s.cmp.fetch_add(n, Ordering::Relaxed),
+            Stage::Bwd => s.bwd_cmp.fetch_add(n, Ordering::Relaxed),
+        };
     }
 
     /// Sum every worker slot into the engine-level counter struct.
@@ -54,6 +86,9 @@ impl OpTally {
             c.mul_add += s.mul_add.load(Ordering::Relaxed);
             c.exp += s.exp.load(Ordering::Relaxed);
             c.cmp += s.cmp.load(Ordering::Relaxed);
+            c.bwd_mul_add += s.bwd_mul_add.load(Ordering::Relaxed);
+            c.bwd_exp += s.bwd_exp.load(Ordering::Relaxed);
+            c.bwd_cmp += s.bwd_cmp.load(Ordering::Relaxed);
         }
         c
     }
@@ -63,7 +98,37 @@ impl OpTally {
             s.mul_add.store(0, Ordering::Relaxed);
             s.exp.store(0, Ordering::Relaxed);
             s.cmp.store(0, Ordering::Relaxed);
+            s.bwd_mul_add.store(0, Ordering::Relaxed);
+            s.bwd_exp.store(0, Ordering::Relaxed);
+            s.bwd_cmp.store(0, Ordering::Relaxed);
         }
+    }
+}
+
+/// Stage-routing view of an [`OpTally`], handed out by `Exec::tally()`.
+/// Kernels call the same `add_*` methods whether they run in the forward
+/// or the backward; the handle directs the count to the right counters.
+#[derive(Clone, Copy)]
+pub struct TallyHandle<'a> {
+    tally: &'a OpTally,
+    stage: Stage,
+}
+
+impl<'a> TallyHandle<'a> {
+    pub(crate) fn new(tally: &'a OpTally, stage: Stage) -> Self {
+        Self { tally, stage }
+    }
+
+    pub fn add_mul_add(&self, n: u64) {
+        self.tally.add_mul_add(self.stage, n);
+    }
+
+    pub fn add_exp(&self, n: u64) {
+        self.tally.add_exp(self.stage, n);
+    }
+
+    pub fn add_cmp(&self, n: u64) {
+        self.tally.add_cmp(self.stage, n);
     }
 }
 
@@ -79,13 +144,13 @@ mod tests {
             for _ in 0..16 {
                 let tally = tally.clone();
                 s.spawn(move |_| {
-                    tally.add_mul_add(10);
-                    tally.add_exp(2);
-                    tally.add_cmp(1);
+                    tally.add_mul_add(Stage::Fwd, 10);
+                    tally.add_exp(Stage::Fwd, 2);
+                    tally.add_cmp(Stage::Fwd, 1);
                 });
             }
         });
-        tally.add_mul_add(5); // external-thread slot
+        tally.add_mul_add(Stage::Fwd, 5); // external-thread slot
         let c = tally.snapshot();
         assert_eq!(c.mul_add, 165);
         assert_eq!(c.exp, 32);
@@ -93,5 +158,31 @@ mod tests {
         assert_eq!(c.flops(), 2 * 165 + 32 + 16);
         tally.reset();
         assert_eq!(tally.snapshot().flops(), 0);
+    }
+
+    #[test]
+    fn stages_do_not_mix() {
+        let tally = OpTally::new(2);
+        tally.add_mul_add(Stage::Fwd, 7);
+        tally.add_mul_add(Stage::Bwd, 11);
+        tally.add_exp(Stage::Bwd, 3);
+        tally.add_cmp(Stage::Bwd, 2);
+        let c = tally.snapshot();
+        assert_eq!(c.mul_add, 7);
+        assert_eq!(c.bwd_mul_add, 11);
+        assert_eq!(c.bwd_exp, 3);
+        assert_eq!(c.bwd_cmp, 2);
+        assert_eq!(c.fwd_flops(), 14);
+        assert_eq!(c.bwd_flops(), 2 * 11 + 3 + 2);
+        assert_eq!(c.flops(), c.fwd_flops() + c.bwd_flops());
+    }
+
+    #[test]
+    fn handle_routes_by_stage() {
+        let tally = OpTally::new(1);
+        TallyHandle::new(&tally, Stage::Fwd).add_mul_add(4);
+        TallyHandle::new(&tally, Stage::Bwd).add_mul_add(6);
+        let c = tally.snapshot();
+        assert_eq!((c.mul_add, c.bwd_mul_add), (4, 6));
     }
 }

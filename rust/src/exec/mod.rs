@@ -26,7 +26,7 @@ pub mod scope;
 
 use std::sync::{Arc, OnceLock};
 
-pub use counters::OpTally;
+pub use counters::{OpTally, Stage, TallyHandle};
 pub use pool::ThreadPool;
 pub use scope::Scope;
 
@@ -79,13 +79,17 @@ pub struct Exec {
     pool: Option<Arc<ThreadPool>>,
     cfg: ExecConfig,
     tally: Arc<OpTally>,
+    /// Which direction of a training pass ops recorded through this handle
+    /// belong to (see [`counters::Stage`]). Forward by default; the sparse
+    /// backward entry points switch to a [`Exec::backward_stage`] view.
+    stage: Stage,
 }
 
 impl Exec {
     pub fn new(cfg: ExecConfig) -> Self {
         let workers = cfg.resolved_workers();
         let pool = if workers > 1 { Some(Arc::new(ThreadPool::new(workers))) } else { None };
-        Self { pool, cfg, tally: Arc::new(OpTally::new(workers)) }
+        Self { pool, cfg, tally: Arc::new(OpTally::new(workers)), stage: Stage::Fwd }
     }
 
     /// A fresh serial context.
@@ -120,7 +124,23 @@ impl Exec {
             pool: None,
             cfg: ExecConfig { workers: 1, ..self.cfg },
             tally: self.tally.clone(),
+            stage: self.stage,
         }
+    }
+
+    /// A view of this context whose op tallies land in the **backward**
+    /// counters (same pool, config, and tally storage). The sparse backward
+    /// entry points wrap themselves in this so the shared kernels (SDDMM /
+    /// SpMM / transposed SpMM) report gradient FLOPs with the same fidelity
+    /// as the forward — fig6/ops_table read them via
+    /// [`crate::sparse::ops::OpCounter::bwd_flops`].
+    pub fn backward_stage(&self) -> Exec {
+        Exec { stage: Stage::Bwd, ..self.clone() }
+    }
+
+    /// The stage this handle tallies into.
+    pub fn stage(&self) -> Stage {
+        self.stage
     }
 
     pub fn workers(&self) -> usize {
@@ -161,8 +181,8 @@ impl Exec {
         self.tally.reset();
     }
 
-    pub(crate) fn tally(&self) -> &OpTally {
-        &self.tally
+    pub(crate) fn tally(&self) -> TallyHandle<'_> {
+        TallyHandle::new(&self.tally, self.stage)
     }
 }
 
@@ -209,5 +229,19 @@ mod tests {
         assert_eq!(e.op_counter().mul_add, 7);
         e.reset_ops();
         assert_eq!(e.op_counter().mul_add, 0);
+    }
+
+    #[test]
+    fn backward_stage_routes_into_bwd_counters() {
+        let e = Exec::serial();
+        e.tally().add_mul_add(3);
+        let b = e.backward_stage();
+        b.tally().add_mul_add(5);
+        b.serial_view().tally().add_mul_add(2); // serial views keep the stage
+        let c = e.op_counter();
+        assert_eq!(c.mul_add, 3);
+        assert_eq!(c.bwd_mul_add, 7);
+        assert_eq!(e.stage(), Stage::Fwd, "original handle unchanged");
+        assert_eq!(b.stage(), Stage::Bwd);
     }
 }

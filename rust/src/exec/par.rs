@@ -19,7 +19,10 @@
 //!   scale with the pool and float results may differ at rounding level.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 use super::partition;
 use super::Exec;
@@ -44,6 +47,16 @@ impl Exec {
         F: Fn(Range<usize>) + Sync,
     {
         if n == 0 {
+            return;
+        }
+        // Serial fast path: one inline sweep, no chunk vector. Chunk
+        // boundaries cannot change bits on the disjoint-write contract
+        // (each index runs the exact serial per-element code), and this is
+        // the last per-call heap allocation on the kernel hot path — the
+        // zero-allocation sparse training phase depends on it
+        // (tests/backward_parity.rs witnesses).
+        if self.pool().is_none() {
+            f(0..n);
             return;
         }
         let chunk = partition::for_chunk_size(n, self.workers(), self.config().chunk_blocks);
@@ -78,6 +91,98 @@ impl Exec {
             unsafe { *ptr.0.add(i) = Some(f(i)) };
         });
         out.into_iter().map(|s| s.expect("par_map slot unfilled")).collect()
+    }
+
+    /// Map `0..n` through `f` on the pool and fold each result **on the
+    /// calling thread, in index order, overlapped with production**: `fold`
+    /// runs for index `i` as soon as results `0..=i` have all landed, while
+    /// later indices are still computing on the workers. The fold therefore
+    /// no longer serializes behind the slowest producer — this is what lets
+    /// the native trainer overlap its ordered gradient reduction with the
+    /// still-running backward fan-out.
+    ///
+    /// Determinism: `fold` observes exactly the sequence a collect-then-fold
+    /// (`par_map` + ordered loop) would produce — same values, same order —
+    /// so float folds stay bit-identical at any worker count. With no pool
+    /// (serial exec) each index is computed and folded inline in order.
+    pub fn par_map_fold<T, F, G>(&self, n: usize, f: F, mut fold: G)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+        G: FnMut(usize, T),
+    {
+        if n == 0 {
+            return;
+        }
+        let pool = match self.pool() {
+            Some(pool) if n > 1 => pool,
+            _ => {
+                for i in 0..n {
+                    fold(i, f(i));
+                }
+                return;
+            }
+        };
+        let slots: Mutex<Vec<Option<T>>> = {
+            let mut v = Vec::with_capacity(n);
+            v.resize_with(n, || None);
+            Mutex::new(v)
+        };
+        let ready = Condvar::new();
+        // Set (with a wake-up) if any producer panics, so the folder stops
+        // waiting for slots that will never fill; the scope re-raises the
+        // recorded panic after every job has finished.
+        let poisoned = AtomicBool::new(false);
+        pool.scope(|s| {
+            for i in 0..n {
+                let (slots, ready, poisoned, f) = (&slots, &ready, &poisoned, &f);
+                s.spawn(move |_| match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(r) => {
+                        let mut g = slots.lock().unwrap();
+                        g[i] = Some(r);
+                        drop(g);
+                        ready.notify_all();
+                    }
+                    Err(payload) => {
+                        poisoned.store(true, Ordering::Release);
+                        ready.notify_all();
+                        resume_unwind(payload); // recorded by the scope
+                    }
+                });
+            }
+            // The calling thread folds in index order while workers produce.
+            'fold: for i in 0..n {
+                loop {
+                    let mut g = slots.lock().unwrap();
+                    if let Some(r) = g[i].take() {
+                        drop(g);
+                        fold(i, r);
+                        break;
+                    }
+                    if poisoned.load(Ordering::Acquire) {
+                        break 'fold;
+                    }
+                    drop(g);
+                    // Help drain the pool while the next slot is pending
+                    // (the ScopeState::wait trick) — a caller that is
+                    // itself a pool worker keeps the queue moving instead
+                    // of parking on it.
+                    if let Some(job) = s.pool().try_pop() {
+                        let wid = crate::exec::pool::current_worker()
+                            .unwrap_or(s.pool().workers());
+                        job(wid);
+                        continue;
+                    }
+                    // Timeout guards against a producer that died without a
+                    // wake-up reaching us (the scope will re-raise it).
+                    let g = slots.lock().unwrap();
+                    if g[i].is_some() || poisoned.load(Ordering::Acquire) {
+                        continue;
+                    }
+                    let _ = ready.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                }
+            }
+        });
     }
 
     /// Call `f(i, &mut items[i])` in parallel — the `iter_mut` analogue.
@@ -240,6 +345,85 @@ mod tests {
             let got = run(&exec);
             assert_eq!(got.to_bits(), serial.to_bits(), "workers={workers}");
         }
+    }
+
+    #[test]
+    fn par_map_fold_folds_every_index_in_order() {
+        for exec in execs() {
+            for n in [0usize, 1, 7, 64, 257] {
+                let mut seen = Vec::new();
+                exec.par_map_fold(n, |i| i * 3, |i, v| seen.push((i, v)));
+                assert_eq!(seen.len(), n, "workers={}", exec.workers());
+                assert!(seen.iter().enumerate().all(|(k, &(i, v))| k == i && v == i * 3));
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_fold_float_sum_is_worker_independent() {
+        // The fold runs on the calling thread in index order, so an
+        // order-sensitive float fold is bit-identical at any worker count.
+        let data: Vec<f32> =
+            (0..500).map(|i| ((i * 2654435761u64 as usize) % 89) as f32 * 0.3).collect();
+        let run = |exec: &Exec| {
+            let mut acc = 0.0f32;
+            exec.par_map_fold(data.len(), |i| data[i] * 1.000001, |_, v| acc += v);
+            acc
+        };
+        let serial = run(&Exec::serial());
+        for workers in [2usize, 4] {
+            let exec = Exec::new(ExecConfig { workers, ..Default::default() });
+            assert_eq!(run(&exec).to_bits(), serial.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_fold_overlaps_fold_with_production() {
+        // Index 0 is slow; later indices must be produced (not just queued)
+        // before the fold of index 0 completes — witnessed by the producers
+        // all finishing even though the folder is still blocked on slot 0
+        // when they run.
+        let exec = Exec::new(ExecConfig { workers: 4, ..Default::default() });
+        let produced = AtomicU64::new(0);
+        let mut folded = Vec::new();
+        exec.par_map_fold(
+            8,
+            |i| {
+                if i == 0 {
+                    // Give the other producers time to land first.
+                    while produced.load(Ordering::Relaxed) < 7 {
+                        std::thread::yield_now();
+                    }
+                }
+                produced.fetch_add(1, Ordering::Relaxed);
+                i
+            },
+            |i, v| folded.push((i, v)),
+        );
+        assert_eq!(folded, (0..8).map(|i| (i, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_fold_propagates_producer_panics() {
+        let exec = Exec::new(ExecConfig { workers: 2, ..Default::default() });
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut count = 0usize;
+            exec.par_map_fold(
+                16,
+                |i| {
+                    if i == 9 {
+                        panic!("producer boom");
+                    }
+                    i
+                },
+                |_, _| count += 1,
+            );
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        // Pool still usable afterwards.
+        let mut total = 0usize;
+        exec.par_map_fold(10, |i| i, |_, v| total += v);
+        assert_eq!(total, 45);
     }
 
     #[test]

@@ -59,7 +59,8 @@ fn print_help() {
          \x20 --chunk-blocks N   block rows per scheduling chunk (0 = auto)\n\
          \x20 --deterministic B  worker-count-independent reduction order (default true)\n\
          \x20 --fused B          fused per-block-row attention pipeline (default true)\n\
-         \x20 --simd B           8-lane SIMD microkernels inside the fused path (default true)\n"
+         \x20 --simd B           8-lane SIMD microkernels inside the fused paths (default true)\n\
+         \x20 --fused-bwd B      fused two-sweep backward for sparse training (default true)\n"
     );
 }
 
@@ -96,6 +97,7 @@ fn exec_from_args_over(args: &Args, d: ExecConfig) -> ExecConfig {
         kernel: spion::exec::KernelConfig {
             fused: args.bool_or("fused", d.kernel.fused),
             simd: args.bool_or("simd", d.kernel.simd),
+            fused_bwd: args.bool_or("fused-bwd", d.kernel.fused_bwd),
         },
     }
 }
@@ -125,6 +127,9 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         }
         if args.has("simd") {
             exp.exec.kernel.simd = args.bool_or("simd", exp.exec.kernel.simd);
+        }
+        if args.has("fused-bwd") {
+            exp.exec.kernel.fused_bwd = args.bool_or("fused-bwd", exp.exec.kernel.fused_bwd);
         }
         if let Some(b) = args.get("backend") {
             exp.train.backend = TrainBackend::parse(b)

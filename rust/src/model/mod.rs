@@ -25,4 +25,4 @@ pub(crate) const LN_EPS: f32 = 1e-6;
 pub use encoder::Encoder;
 pub use grad::{ModelGrads, SgdMomentum};
 pub use params::ModelParams;
-pub use train::{train_step_sample, SampleResult};
+pub use train::{train_step_sample, SampleResult, TrainCache};

@@ -121,13 +121,96 @@ fn add_colsum(m: &Mat, out: &mut [f32]) {
     }
 }
 
+/// Step-spanning sparse-phase buffers for one training sample: the per-head
+/// block-CSR [`TrainWorkspace`]s of every layer (`fwd.s` holds the
+/// forward's probabilities until the reverse sweep consumes them) plus the
+/// per-head Q/K/V/dA column-slice staging matrices. Creating one of these
+/// is the *only* sparse-phase heap work — the native trainer keeps a
+/// free-list of them (the `ModelGrads` pattern), so after the first sparse
+/// step the block-sparse attention path allocates nothing: block-CSR
+/// storage, ColIndex caches, gradient buffers and slice staging are all
+/// reused, and the kernels' scratch lives in the per-worker arenas.
+/// Witnessed by the allocation-count test in `tests/backward_parity.rs`.
+#[derive(Debug)]
+pub struct TrainCache {
+    /// `layers[n][h]` — layer `n`, head `h`.
+    layers: Vec<Vec<TrainWorkspace>>,
+    qh: Mat,
+    kh: Mat,
+    vh: Mat,
+    dah: Mat,
+}
+
+impl TrainCache {
+    pub fn new(masks: &[BlockMask], heads: usize, head_dim: usize) -> Self {
+        assert!(heads > 0);
+        let l = masks.first().map_or(0, |m| m.seq_len());
+        Self {
+            layers: masks
+                .iter()
+                .map(|m| (0..heads).map(|_| TrainWorkspace::new(m, head_dim)).collect())
+                .collect(),
+            qh: Mat::zeros(l, head_dim),
+            kh: Mat::zeros(l, head_dim),
+            vh: Mat::zeros(l, head_dim),
+            dah: Mat::zeros(l, head_dim),
+        }
+    }
+
+    /// Cheap shape compatibility with a mask set: layer/head counts and
+    /// per-layer block counts. Runs per sample in the training hot loop.
+    pub fn shape_matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
+        self.layers.len() == masks.len()
+            && self.qh.cols == head_dim
+            && masks.first().map_or(true, |m| self.qh.rows == m.seq_len())
+            && self.layers.iter().zip(masks).all(|(ws, m)| {
+                ws.len() == heads
+                    && ws.iter().all(|w| {
+                        w.fwd.s.lb == m.lb
+                            && w.fwd.s.block == m.block
+                            && w.fwd.s.nnz_blocks() == m.nnz_blocks()
+                    })
+            })
+    }
+
+    /// Exact structural compatibility: on top of [`Self::shape_matches`],
+    /// every head's block-CSR structure is walked against the mask's
+    /// actual block placement — a cache built for a different pattern with
+    /// identical density is rejected. Allocation-free but O(layers × heads
+    /// × nnz_blocks); the hot loop runs it as a `debug_assert` only
+    /// (free-list sanity: masks freeze after the transition, so a pooled
+    /// cache always matches by construction).
+    pub fn matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
+        fn structure_matches(s: &crate::sparse::bcsr::Bcsr, m: &BlockMask) -> bool {
+            let mut blk = 0usize;
+            for i in 0..m.lb {
+                for j in m.row_blocks(i) {
+                    if blk >= s.col_idx.len() || s.col_idx[blk] != j {
+                        return false;
+                    }
+                    blk += 1;
+                }
+                if s.row_ptr[i + 1] != blk {
+                    return false;
+                }
+            }
+            true
+        }
+        self.shape_matches(masks, heads, head_dim)
+            && self.layers.iter().zip(masks).all(|(ws, m)| {
+                ws.iter().all(|w| structure_matches(&w.fwd.s, m))
+            })
+    }
+}
+
 /// Per-layer attention state retained by the forward sweep.
 enum AttnCache {
     /// Per-head softmax probability matrices W (L×L each).
     Dense(Vec<Mat>),
-    /// Per-head block-CSR train workspaces; `fwd.s` holds the forward's
-    /// probabilities, `grad_buf`/`dq`/`dk`/`dv` serve the backward.
-    Sparse(Vec<TrainWorkspace>),
+    /// Sparse layers keep their state in the sample's [`TrainCache`]
+    /// (hoisted out of the per-layer-per-sample loop so the sparse phase
+    /// is steady-state allocation-free).
+    Sparse,
 }
 
 struct LayerCache {
@@ -165,6 +248,13 @@ pub struct SampleResult {
 /// samples in index order). `masks = None` runs dense attention (phase 1);
 /// `Some` runs the block-sparse engine on `exec`'s kernel configuration
 /// (phase 3). `capture_scores` is honored only on the dense path.
+///
+/// `cache` carries the sparse-phase workspaces across steps (the
+/// [`TrainCache`] free-list); training hot loops pass one so the sparse
+/// phase never touches the allocator, while one-off callers may pass
+/// `None` and a scratch cache is created locally. Which cache a sample
+/// runs with is irrelevant to numerics — every buffer is fully overwritten.
+#[allow(clippy::too_many_arguments)]
 pub fn train_step_sample(
     exec: &Exec,
     params: &ModelParams,
@@ -174,6 +264,7 @@ pub fn train_step_sample(
     label: i32,
     capture_scores: bool,
     grads: &mut ModelGrads,
+    cache: Option<&mut TrainCache>,
 ) -> SampleResult {
     let p = params;
     let l = p.seq_len();
@@ -185,6 +276,26 @@ pub fn train_step_sample(
     if let Some(ms) = masks {
         assert_eq!(ms.len(), p.layers.len(), "one mask per layer");
     }
+    let mut owned_cache: Option<TrainCache> = None;
+    let cache: Option<&mut TrainCache> = match (masks, cache) {
+        (Some(ms), None) => {
+            owned_cache = Some(TrainCache::new(ms, heads, dh));
+            owned_cache.as_mut()
+        }
+        (_, c) => c,
+    };
+    if let (Some(ms), Some(c)) = (masks, &cache) {
+        assert!(c.shape_matches(ms, heads, dh), "TrainCache does not match the mask shapes");
+        debug_assert!(c.matches(ms, heads, dh), "TrainCache does not match the mask set");
+    }
+    // Split the cache into independently-borrowable pieces for the two
+    // sweeps (workspaces per layer, slice staging shared across layers).
+    let (mut ws_layers, mut qh_buf, mut kh_buf, mut vh_buf, mut dah_buf) = match cache {
+        Some(TrainCache { layers, qh, kh, vh, dah }) => {
+            (Some(layers), Some(qh), Some(kh), Some(vh), Some(dah))
+        }
+        None => (None, None, None, None, None),
+    };
 
     // ---- forward ----
     let mut e = Mat::zeros(l, d);
@@ -228,23 +339,20 @@ pub fn train_step_sample(
                 }
                 AttnCache::Dense(probs)
             }
-            Some(ms) => {
-                let mask = &ms[n];
-                let mut ws: Vec<TrainWorkspace> =
-                    (0..heads).map(|_| TrainWorkspace::new(mask, dh)).collect();
+            Some(_) => {
+                let ws = &mut ws_layers.as_mut().expect("sparse cache")[n];
+                let qh = &mut **qh_buf.as_mut().expect("sparse cache");
+                let kh = &mut **kh_buf.as_mut().expect("sparse cache");
+                let vh = &mut **vh_buf.as_mut().expect("sparse cache");
                 for (h, hw) in ws.iter_mut().enumerate() {
                     let (c0, c1) = (h * dh, (h + 1) * dh);
-                    sparse_attention_head_with(
-                        exec,
-                        &q.col_slice(c0, c1),
-                        &k.col_slice(c0, c1),
-                        &v.col_slice(c0, c1),
-                        scale,
-                        &mut hw.fwd,
-                    );
+                    q.col_slice_into(c0, c1, qh);
+                    k.col_slice_into(c0, c1, kh);
+                    v.col_slice_into(c0, c1, vh);
+                    sparse_attention_head_with(exec, qh, kh, vh, scale, &mut hw.fwd);
                     a.set_col_slice(c0, &hw.fwd.ctx);
                 }
-                AttnCache::Sparse(ws)
+                AttnCache::Sparse
             }
         };
         let mut o = a.matmul(&lp.wo);
@@ -355,17 +463,19 @@ pub fn train_step_sample(
                     dv.set_col_slice(c0, &dvh);
                 }
             }
-            AttnCache::Sparse(ws) => {
+            AttnCache::Sparse => {
+                let ws = &mut ws_layers.as_mut().expect("sparse cache")[n];
+                let qh = &mut **qh_buf.as_mut().expect("sparse cache");
+                let kh = &mut **kh_buf.as_mut().expect("sparse cache");
+                let vh = &mut **vh_buf.as_mut().expect("sparse cache");
+                let dah = &mut **dah_buf.as_mut().expect("sparse cache");
                 for (h, hw) in ws.iter_mut().enumerate() {
                     let (c0, c1) = (h * dh, (h + 1) * dh);
-                    hw.backward_with(
-                        exec,
-                        &q.col_slice(c0, c1),
-                        &k.col_slice(c0, c1),
-                        &v.col_slice(c0, c1),
-                        scale,
-                        &da.col_slice(c0, c1),
-                    );
+                    q.col_slice_into(c0, c1, qh);
+                    k.col_slice_into(c0, c1, kh);
+                    v.col_slice_into(c0, c1, vh);
+                    da.col_slice_into(c0, c1, dah);
+                    hw.backward_with(exec, qh, kh, vh, scale, dah);
                     dq.set_col_slice(c0, &hw.dq);
                     dk.set_col_slice(c0, &hw.dk);
                     dv.set_col_slice(c0, &hw.dv);
@@ -477,11 +587,11 @@ mod tests {
         let toks = micro_tokens(m.seq_len, m.vocab, 5);
         let exec = Exec::serial();
         let mut gd = ModelGrads::zeros_like(&params);
-        let rd = train_step_sample(&exec, &params, m.heads, None, &toks, 1, false, &mut gd);
+        let rd = train_step_sample(&exec, &params, m.heads, None, &toks, 1, false, &mut gd, None);
         let full = vec![BlockMask::full(2, 4), BlockMask::full(2, 4)];
         let mut gs = ModelGrads::zeros_like(&params);
         let rs =
-            train_step_sample(&exec, &params, m.heads, Some(&full), &toks, 1, false, &mut gs);
+            train_step_sample(&exec, &params, m.heads, Some(&full), &toks, 1, false, &mut gs, None);
         assert!((rd.loss - rs.loss).abs() < 1e-4, "{} vs {}", rd.loss, rs.loss);
         for (a, b) in gd.slices().into_iter().zip(gs.slices()) {
             assert_allclose(a, b, 1e-3, 1e-4).unwrap();
@@ -495,7 +605,7 @@ mod tests {
         let toks = micro_tokens(m.seq_len, m.vocab, 9);
         let exec = Exec::serial();
         let mut g1 = ModelGrads::zeros_like(&params);
-        let r = train_step_sample(&exec, &params, m.heads, None, &toks, 0, true, &mut g1);
+        let r = train_step_sample(&exec, &params, m.heads, None, &toks, 0, true, &mut g1, None);
         let scores = r.scores.expect("dense snapshot captures scores");
         assert_eq!(scores.len(), m.layers);
         assert_eq!(scores[0].rows, m.seq_len);
@@ -508,11 +618,59 @@ mod tests {
         }
         // Accumulation: running the same sample twice doubles the gradient.
         let mut g2 = ModelGrads::zeros_like(&params);
-        train_step_sample(&exec, &params, m.heads, None, &toks, 0, false, &mut g2);
-        train_step_sample(&exec, &params, m.heads, None, &toks, 0, false, &mut g2);
+        train_step_sample(&exec, &params, m.heads, None, &toks, 0, false, &mut g2, None);
+        train_step_sample(&exec, &params, m.heads, None, &toks, 0, false, &mut g2, None);
         for (a, b) in g1.slices().into_iter().zip(g2.slices()) {
             for (x, y) in a.iter().zip(b) {
                 assert!((2.0 * x - y).abs() <= 1e-5 + 1e-5 * y.abs(), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn train_cache_reuse_is_bit_identical_to_fresh_workspaces() {
+        // A pooled TrainCache is fully overwritten per sample: repeated
+        // sparse passes through one cache must reproduce the cacheless
+        // (fresh-workspace) gradients bit for bit.
+        let m = micro_model();
+        let params = ModelParams::init_random(&m, 11);
+        let toks = micro_tokens(m.seq_len, m.vocab, 5);
+        let exec = Exec::serial();
+        let mut m0 = BlockMask::empty(2, 4);
+        m0.set_diagonal();
+        m0.set(0, 1, true);
+        let mut m1 = BlockMask::empty(2, 4);
+        m1.set_diagonal();
+        m1.set(1, 0, true);
+        let masks = vec![m0, m1];
+        let mut g_fresh = ModelGrads::zeros_like(&params);
+        train_step_sample(
+            &exec, &params, m.heads, Some(&masks), &toks, 1, false, &mut g_fresh, None,
+        );
+        let dh = m.d_model / m.heads;
+        let mut cache = TrainCache::new(&masks, m.heads, dh);
+        assert!(cache.matches(&masks, m.heads, dh));
+        // Same per-layer block counts, different placement → rejected (the
+        // swapped mask set has identical lb/block/nnz everywhere).
+        let swapped = vec![masks[1].clone(), masks[0].clone()];
+        assert!(!cache.matches(&swapped, m.heads, dh), "placement must be checked");
+        for round in 0..3 {
+            let mut g = ModelGrads::zeros_like(&params);
+            train_step_sample(
+                &exec,
+                &params,
+                m.heads,
+                Some(&masks),
+                &toks,
+                1,
+                false,
+                &mut g,
+                Some(&mut cache),
+            );
+            for (a, b) in g.slices().into_iter().zip(g_fresh.slices()) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+                }
             }
         }
     }
@@ -525,7 +683,7 @@ mod tests {
         let exec = Exec::serial();
         let mut g = ModelGrads::zeros_like(&params);
         let toks = micro_tokens(m.seq_len, m.vocab, 1);
-        let r = train_step_sample(&exec, &params, m.heads, None, &toks, 2, false, &mut g);
+        let r = train_step_sample(&exec, &params, m.heads, None, &toks, 2, false, &mut g, None);
         assert!(r.loss.is_finite());
         assert!((r.loss - (m.classes as f64).ln()).abs() < 1.0, "loss {}", r.loss);
     }

@@ -19,6 +19,7 @@
 //! makes sparse *training*, not just sparse inference, L²/C cheaper).
 
 use super::bcsr::Bcsr;
+use super::kernel::TileDispatch;
 use crate::exec::par::SendPtr;
 use crate::exec::Exec;
 use crate::tensor::Mat;
@@ -116,11 +117,88 @@ pub fn sparse_attention_backward(
     );
 }
 
-/// Parallel backward: every stage is block-row-parallel (the transposed
-/// SpMMs block-column-parallel via [`ColIndex`]); all writes are disjoint,
-/// so gradients are bit-identical to the serial engine at any worker count.
+/// Parallel backward, routed by `exec.kernel().fused_bwd`:
+///
+/// * **fused** (default): the two-sweep pipeline in
+///   [`crate::sparse::kernel::fused_bwd`] — one per-block-row dW→dZ→dQ
+///   sweep over a per-worker scratch panel plus one merged per-block-column
+///   dV/dK sweep;
+/// * **unfused**: the legacy five gradient passes below (reference
+///   semantics).
+///
+/// Both regimes tally into the **backward** op counters
+/// ([`crate::sparse::ops::OpCounter::bwd_flops`]), have disjoint writes,
+/// and are bit-identical to their own serial form at any worker count; the
+/// fused-scalar form is bit-identical to the unfused one
+/// (tests/backward_parity.rs).
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_attention_backward_with(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    s_prob: &Bcsr,
+    d_out: &Mat,
+    workspace: &mut Bcsr,
+    dq: &mut Mat,
+    dk: &mut Mat,
+    dv: &mut Mat,
+) {
+    // `TileDispatch::for_block` is a pure function of the block size, so
+    // deriving it here matches the pattern-build-time choice callers with a
+    // workspace pass through `sparse_attention_backward_dispatch`.
+    sparse_attention_backward_dispatch(
+        exec,
+        q,
+        k,
+        v,
+        scale,
+        s_prob,
+        d_out,
+        workspace,
+        dq,
+        dk,
+        dv,
+        TileDispatch::for_block(s_prob.block),
+    );
+}
+
+/// [`sparse_attention_backward_with`] with the fused sweep's block-size
+/// specialization supplied by the caller (chosen once at pattern-build
+/// time and stored in the workspace — see `sparse::kernel::dispatch`).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_backward_dispatch(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    s_prob: &Bcsr,
+    d_out: &Mat,
+    workspace: &mut Bcsr,
+    dq: &mut Mat,
+    dk: &mut Mat,
+    dv: &mut Mat,
+    dispatch: TileDispatch,
+) {
+    // Gradient kernels tally into the backward counters (fig6/ops_table
+    // report training FLOPs per direction).
+    let bexec = exec.backward_stage();
+    let exec = &bexec;
+    if exec.kernel().fused_bwd {
+        super::kernel::fused_bwd::fused_attention_backward_with(
+            exec, q, k, v, scale, s_prob, d_out, workspace, dq, dk, dv, dispatch,
+        );
+        return;
+    }
+    unfused_backward_with(exec, q, k, v, scale, s_prob, d_out, workspace, dq, dk, dv);
+}
+
+/// The legacy five-pass backward (reference semantics for the parity
+/// suites; selected by `fused_bwd = false`).
+#[allow(clippy::too_many_arguments)]
+fn unfused_backward_with(
     exec: &Exec,
     q: &Mat,
     k: &Mat,
@@ -178,7 +256,9 @@ pub fn sparse_attention_backward_with(
                 }
                 stored += ((blocks.end - blocks.start) * b * b) as u64;
             }
-            exec.tally().add_mul_add(3 * stored); // dW⊙W rowsum + W⊙(dW−r)
+            // Jacobian raw ops per stored entry: rowsum mul+add and the
+            // subtract+scale of W⊙(dW−r) — two mul-add pairs (4 flops).
+            exec.tally().add_mul_add(2 * stored);
         });
     }
 
@@ -331,6 +411,45 @@ mod tests {
         assert!(check(0, &dq) < 0.05, "dQ fd mismatch");
         assert!(check(1, &dk) < 0.05, "dK fd mismatch");
         assert!(check(2, &dv) < 0.05, "dV fd mismatch");
+    }
+
+    #[test]
+    fn fused_and_unfused_routing_agree_bitwise_in_scalar_mode() {
+        // In-crate smoke check of the `fused_bwd` routing (the exhaustive
+        // suite is tests/backward_parity.rs): with simd off, the two
+        // regimes must produce identical bits through the public entry.
+        use crate::exec::{ExecConfig, KernelConfig};
+        let mut rng = Rng::new(23);
+        let (lb, block, dh) = (4, 4, 7);
+        let l = lb * block;
+        let mask = random_mask(&mut rng, lb, block, 0.5);
+        let q = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let k = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let v = Mat::random_normal(l, dh, 0.8, &mut rng);
+        let cot = Mat::random_normal(l, dh, 1.0, &mut rng);
+        let scale = 0.5;
+        let mut s = Bcsr::from_mask(&mask);
+        sddmm(&q, &k, &mut s, scale);
+        sparse_softmax(&mut s, 1.0, true);
+        let run = |fused_bwd: bool| {
+            let exec = Exec::new(ExecConfig {
+                kernel: KernelConfig { fused: true, simd: false, fused_bwd },
+                ..Default::default()
+            });
+            let mut ws = Bcsr::from_mask(&mask);
+            let (mut dq, mut dk, mut dv) =
+                (Mat::zeros(l, dh), Mat::zeros(l, dh), Mat::zeros(l, dh));
+            sparse_attention_backward_with(
+                &exec, &q, &k, &v, scale, &s, &cot, &mut ws, &mut dq, &mut dk, &mut dv,
+            );
+            (ws.values, dq.data, dk.data, dv.data)
+        };
+        let fused = run(true);
+        let unfused = run(false);
+        assert_eq!(fused.0, unfused.0, "dz");
+        assert_eq!(fused.1, unfused.1, "dq");
+        assert_eq!(fused.2, unfused.2, "dk");
+        assert_eq!(fused.3, unfused.3, "dv");
     }
 
     #[test]

@@ -230,7 +230,7 @@ mod tests {
         simd: bool,
     ) -> (Bcsr, Mat) {
         let exec = Exec::new(ExecConfig {
-            kernel: crate::sparse::kernel::KernelConfig { fused: true, simd },
+            kernel: crate::sparse::kernel::KernelConfig { fused: true, simd, fused_bwd: true },
             ..Default::default()
         });
         let mut s = Bcsr::from_mask(mask);

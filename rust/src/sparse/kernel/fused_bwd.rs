@@ -1,0 +1,607 @@
+//! Fused backward pipeline for block-sparse attention training — the
+//! gradient counterpart of [`super::fused`] (the paper backpropagates
+//! through the sparse MHA with the same cuSPARSE-kernel structure as the
+//! forward; see `sparse::backward` for the derivation).
+//!
+//! The unfused backward makes **five** full passes over the pattern's
+//! tiles per head per step:
+//! ```text
+//! 1. dV = Wᵀ·dO          transposed SpMM  (column traversal)
+//! 2. dW = (dO·Vᵀ)⊙P      SDDMM            (row traversal, writes workspace)
+//! 3. dZ = W⊙(dW − r)     softmax Jacobian (row traversal, rewrites it)
+//! 4. dQ = (dZ·K)·s       SpMM             (row traversal, reads it back)
+//! 5. dK = (dZᵀ·Q)·s      transposed SpMM  (column traversal)
+//! ```
+//! This pipeline makes **two**:
+//!
+//! * **Row sweep** (block-row parallel): for each block row, the dW SDDMM
+//!   tiles land in a per-worker scratch panel ([`super::arena`]) that stays
+//!   L1/L2-resident; the softmax Jacobian contraction runs over the hot
+//!   panel against the forward's cached probabilities in `s_prob.values`
+//!   (no `exp` is ever recomputed — the backward only multiplies cached
+//!   probs); dZ streams into `workspace.values` for the column sweep while
+//!   the still-hot tiles immediately accumulate the dQ panel. Stages 2–4
+//!   collapse into one traversal; two full write+read passes over
+//!   `workspace.values` disappear.
+//! * **Column sweep** (block-column parallel via the structure's cached
+//!   [`crate::sparse::bcsr::ColIndex`]): the two transposed SpMMs (1 and 5)
+//!   merge into a single traversal — each visited tile is read once for dV
+//!   (probabilities) and once for dK (dZ), halving the column-index walk
+//!   and the output-panel setup.
+//!
+//! ## Determinism contract (DESIGN.md §Fused backward)
+//!
+//! * Row-sweep writes are disjoint per block row, column-sweep writes
+//!   disjoint per block column, and per-row/-column code is
+//!   worker-independent ⇒ **bit-identical serial↔parallel at any worker
+//!   count**.
+//! * With `KernelConfig::simd` **off**, every reduction keeps the unfused
+//!   association (the 4-lane `mat::dot` SDDMM, sequential Jacobian rowsum,
+//!   elementwise AXPY accumulation in the unfused kernels' tile order), so
+//!   the fused backward is **bit-identical to the five-pass kernels** —
+//!   asserted by `tests/backward_parity.rs`.
+//! * With `simd` **on**, the SDDMM dot and the Jacobian rowsum use the
+//!   8-lane fold, which reassociates ⇒ fused↔unfused agree to rounding
+//!   (allclose). The AXPY-shaped accumulations are elementwise either way
+//!   and never change bits.
+
+use super::dispatch::TileDispatch;
+use super::microkernel as mk;
+use crate::exec::par::SendPtr;
+use crate::exec::Exec;
+use crate::sparse::bcsr::Bcsr;
+use crate::tensor::Mat;
+
+/// Fused backward of one sparse attention head.
+///
+/// * `s_prob` — the forward's block-CSR softmax probabilities (`ws.fwd.s`).
+/// * `d_out` — cotangent of the head output (L×dh).
+/// * `workspace` — shares `s_prob`'s structure; receives dZ (same contents
+///   the unfused backward leaves, so downstream consumers see the exact
+///   unfused invariant).
+///
+/// Gradients land in `dq`/`dk`/`dv` (overwritten). The caller supplies the
+/// pattern-build-time [`TileDispatch`] so B=4/B=8 sweeps constant-fold.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_backward_with(
+    exec: &Exec,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    s_prob: &Bcsr,
+    d_out: &Mat,
+    workspace: &mut Bcsr,
+    dq: &mut Mat,
+    dk: &mut Mat,
+    dv: &mut Mat,
+    dispatch: TileDispatch,
+) {
+    let b = s_prob.block;
+    debug_assert!(
+        dispatch.specialized_block().map_or(true, |sb| sb == b),
+        "dispatch {dispatch:?} does not match block size {b}"
+    );
+    assert_eq!(workspace.col_idx, s_prob.col_idx, "workspace structure mismatch");
+    let l = s_prob.seq_len();
+    assert_eq!(q.rows, l);
+    assert_eq!(k.rows, l);
+    assert_eq!(v.rows, l);
+    assert_eq!(q.cols, k.cols);
+    assert_eq!((d_out.rows, d_out.cols), (v.rows, v.cols));
+    assert_eq!((dq.rows, dq.cols), (q.rows, q.cols));
+    assert_eq!((dk.rows, dk.cols), (k.rows, k.cols));
+    assert_eq!((dv.rows, dv.cols), (v.rows, v.cols));
+    let d = q.cols;
+    let dvc = v.cols;
+    let lb = s_prob.lb;
+    let simd = exec.kernel().simd;
+
+    // ---- Row sweep: dW → dZ → dQ, one traversal per block row ----
+    {
+        let row_ptr = &s_prob.row_ptr;
+        let col_idx = &s_prob.col_idx;
+        let w_values = &s_prob.values;
+        let dzptr = SendPtr(workspace.values.as_mut_ptr());
+        let dqptr = SendPtr(dq.data.as_mut_ptr());
+        exec.par_for_chunks(lb, |rows| {
+            exec.with_scratch(|arena| {
+                let mut tiles = 0u64;
+                let mut stored = 0u64;
+                for bi in rows {
+                    let blocks = row_ptr[bi]..row_ptr[bi + 1];
+                    let nblk = blocks.end - blocks.start;
+                    // SAFETY: workspace tiles of block row `bi` and dq rows
+                    // bi·B..(bi+1)·B are owned by this chunk alone; chunks
+                    // partition the block rows.
+                    let row_dz = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            dzptr.0.add(blocks.start * b * b),
+                            nblk * b * b,
+                        )
+                    };
+                    let dq_panel =
+                        unsafe { std::slice::from_raw_parts_mut(dqptr.0.add(bi * b * d), b * d) };
+                    dq_panel.fill(0.0);
+                    if nblk == 0 {
+                        continue;
+                    }
+                    arena.reset();
+                    let panel = arena.alloc(nblk * b * b);
+                    let row_w = &w_values[blocks.start * b * b..blocks.end * b * b];
+                    let bcols = &col_idx[blocks];
+                    match (simd, dispatch) {
+                        (true, TileDispatch::B4) => sweep_bwd_row::<true>(
+                            4, bi, bcols, k, v, scale, d_out, row_w, panel, row_dz, dq_panel,
+                        ),
+                        (true, TileDispatch::B8) => sweep_bwd_row::<true>(
+                            8, bi, bcols, k, v, scale, d_out, row_w, panel, row_dz, dq_panel,
+                        ),
+                        (true, TileDispatch::Generic) => sweep_bwd_row::<true>(
+                            b, bi, bcols, k, v, scale, d_out, row_w, panel, row_dz, dq_panel,
+                        ),
+                        (false, _) => sweep_bwd_row::<false>(
+                            b, bi, bcols, k, v, scale, d_out, row_w, panel, row_dz, dq_panel,
+                        ),
+                    }
+                    tiles += nblk as u64;
+                    stored += (nblk * b * b) as u64;
+                }
+                // dW SDDMM + dQ SpMM per tile, Jacobian two mul-add pairs
+                // per entry (rowsum mul+add, subtract+scale) — identical
+                // totals to the unfused stages 2–4.
+                exec.tally()
+                    .add_mul_add(tiles * (b * b) as u64 * (dvc as u64 + d as u64) + 2 * stored);
+            });
+        });
+    }
+
+    // ---- Column sweep: dV + dK, one merged traversal per block column ----
+    {
+        let cols = s_prob.col_index();
+        let col_ptr = &cols.col_ptr;
+        let entries = &cols.entries;
+        let w_values = &s_prob.values;
+        let dz_values = &workspace.values;
+        let dvptr = SendPtr(dv.data.as_mut_ptr());
+        let dkptr = SendPtr(dk.data.as_mut_ptr());
+        exec.par_for_chunks(lb, |range| {
+            let mut tiles = 0u64;
+            for bj in range {
+                // SAFETY: dv/dk rows bj·B..(bj+1)·B belong to block column
+                // `bj` alone; chunks partition the block columns.
+                let dv_panel =
+                    unsafe { std::slice::from_raw_parts_mut(dvptr.0.add(bj * b * dvc), b * dvc) };
+                let dk_panel =
+                    unsafe { std::slice::from_raw_parts_mut(dkptr.0.add(bj * b * d), b * d) };
+                dv_panel.fill(0.0);
+                dk_panel.fill(0.0);
+                let col = &entries[col_ptr[bj]..col_ptr[bj + 1]];
+                match dispatch {
+                    TileDispatch::B4 => sweep_bwd_col(
+                        4, col, q, d_out, scale, w_values, dz_values, dv_panel, dk_panel,
+                    ),
+                    TileDispatch::B8 => sweep_bwd_col(
+                        8, col, q, d_out, scale, w_values, dz_values, dv_panel, dk_panel,
+                    ),
+                    TileDispatch::Generic => sweep_bwd_col(
+                        b, col, q, d_out, scale, w_values, dz_values, dv_panel, dk_panel,
+                    ),
+                }
+                tiles += col.len() as u64;
+            }
+            // dV + dK transposed SpMMs — identical totals to stages 1 and 5.
+            exec.tally().add_mul_add(tiles * (b * b) as u64 * (dvc as u64 + d as u64));
+        });
+    }
+}
+
+/// One block row's dW → dZ → dQ sweep. `b` arrives as a literal at the
+/// B=4/B=8 call sites so the loops constant-fold (see [`super::dispatch`]).
+///
+/// Association contract: with `SIMD` off the SDDMM uses the legacy 4-lane
+/// `mat::dot` and the Jacobian rowsum accumulates sequentially in the
+/// unfused `(tile, entry)` order — every value matches the five-pass
+/// backward bit for bit. The dQ accumulation runs the unfused SpMM's exact
+/// `(tile, r, c)` elementwise order in both modes.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn sweep_bwd_row<const SIMD: bool>(
+    b: usize,
+    bi: usize,
+    bcols: &[usize],
+    k: &Mat,
+    v: &Mat,
+    scale: f32,
+    d_out: &Mat,
+    row_w: &[f32],
+    panel: &mut [f32],
+    row_dz: &mut [f32],
+    dq_panel: &mut [f32],
+) {
+    let d = k.cols;
+    let dvc = v.cols;
+    let bb = b * b;
+    let nblk = bcols.len();
+    // dO rows bi·B..(bi+1)·B are one contiguous row-major slab.
+    let do_panel = &d_out.data[bi * b * dvc..(bi + 1) * b * dvc];
+
+    // dW = (dO·Vᵀ)⊙P into the hot scratch panel (unfused stage 2, with
+    // (dO, V) in place of (Q, K) and unit scale).
+    for (t, &bj) in bcols.iter().enumerate() {
+        let v_panel = &v.data[bj * b * dvc..(bj + 1) * b * dvc];
+        mk::tile_sddmm::<SIMD>(b, dvc, do_panel, v_panel, 1.0, &mut panel[t * bb..(t + 1) * bb]);
+    }
+
+    // dZ = W ⊙ (dW − rowsum(dW ⊙ W)), over the cache-hot panel against the
+    // forward's cached probabilities. A softmax row's stored entries are
+    // the length-B segments at offset r·B of each tile.
+    for r in 0..b {
+        let mut rsum = 0.0f32;
+        for t in 0..nblk {
+            let w = &row_w[t * bb + r * b..t * bb + (r + 1) * b];
+            let dw = &panel[t * bb + r * b..t * bb + (r + 1) * b];
+            if SIMD {
+                rsum += mk::dot(w, dw);
+            } else {
+                // Sequential — the unfused Jacobian's exact association.
+                for (wv, dwv) in w.iter().zip(dw) {
+                    rsum += wv * dwv;
+                }
+            }
+        }
+        for t in 0..nblk {
+            let w = &row_w[t * bb + r * b..t * bb + (r + 1) * b];
+            let dzp = &mut panel[t * bb + r * b..t * bb + (r + 1) * b];
+            let dzo = &mut row_dz[t * bb + r * b..t * bb + (r + 1) * b];
+            // Elementwise: identical bits at any unroll. dZ stays in the
+            // panel for the dQ accumulation and streams into the workspace
+            // for the column sweep (dK) — the unfused invariant.
+            for ((z, wv), out) in dzp.iter_mut().zip(w).zip(dzo.iter_mut()) {
+                *z = wv * (*z - rsum);
+                *out = *z;
+            }
+        }
+    }
+
+    // dQ = (dZ·K)·s from the still-hot panel (unfused stage 4), in the
+    // unfused SpMM's (tile, r, c) elementwise order; the trailing scale is
+    // elementwise over a completed panel, so it matches the unfused
+    // whole-matrix `dq.scale(scale)` bit for bit.
+    for (t, &bj) in bcols.iter().enumerate() {
+        let k_panel = &k.data[bj * b * d..(bj + 1) * b * d];
+        mk::tile_spmm_acc::<SIMD>(b, d, &panel[t * bb..(t + 1) * bb], k_panel, dq_panel);
+    }
+    for x in dq_panel.iter_mut() {
+        *x *= scale;
+    }
+}
+
+/// One block column's merged dV/dK sweep over the cached [`ColIndex`]
+/// traversal: each visited tile feeds `dV += Wᵀ·dO` and `dK += dZᵀ·Q` in
+/// the unfused transposed-SpMM's exact `(entry, r, c)` elementwise order
+/// (contributions to every output element arrive exactly as in the serial
+/// five-pass engine, so this sweep is bit-identical to it in both SIMD
+/// modes — AXPY rows are elementwise).
+///
+/// [`ColIndex`]: crate::sparse::bcsr::ColIndex
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn sweep_bwd_col(
+    b: usize,
+    col: &[(u32, u32)],
+    q: &Mat,
+    d_out: &Mat,
+    scale: f32,
+    w_values: &[f32],
+    dz_values: &[f32],
+    dv_panel: &mut [f32],
+    dk_panel: &mut [f32],
+) {
+    let d = q.cols;
+    let dvc = d_out.cols;
+    for &(bi, blk) in col {
+        let (bi, blk) = (bi as usize, blk as usize);
+        let base = blk * b * b;
+        for r in 0..b {
+            let w_row = &w_values[base + r * b..base + (r + 1) * b];
+            let dz_row = &dz_values[base + r * b..base + (r + 1) * b];
+            let do_row = d_out.row(bi * b + r);
+            let q_row = q.row(bi * b + r);
+            for c in 0..b {
+                mk::axpy(w_row[c], do_row, &mut dv_panel[c * dvc..(c + 1) * dvc]);
+                mk::axpy(dz_row[c], q_row, &mut dk_panel[c * d..(c + 1) * d]);
+            }
+        }
+    }
+    // Completed panel ⇒ elementwise scale matches the unfused
+    // whole-matrix `dk.scale(scale)` bit for bit. dV carries no scale.
+    for x in dk_panel.iter_mut() {
+        *x *= scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{ExecConfig, KernelConfig};
+    use crate::pattern::BlockMask;
+    use crate::sparse::backward::sparse_attention_backward_with;
+    use crate::sparse::sddmm::sddmm;
+    use crate::sparse::softmax::sparse_softmax;
+    use crate::util::quickcheck::{assert_allclose, QuickCheck};
+    use crate::util::rng::Rng;
+
+    fn random_mask(rng: &mut Rng, lb: usize, block: usize, p: f64) -> BlockMask {
+        let mut m = BlockMask::empty(lb, block);
+        for bit in m.bits.iter_mut() {
+            *bit = rng.chance(p);
+        }
+        m.set_diagonal();
+        m
+    }
+
+    fn forward_probs(q: &Mat, k: &Mat, scale: f32, mask: &BlockMask) -> Bcsr {
+        let mut s = Bcsr::from_mask(mask);
+        sddmm(q, k, &mut s, scale);
+        sparse_softmax(&mut s, 1.0, true);
+        s
+    }
+
+    /// The shipped five-pass reference, reached through the public routing
+    /// with `fused_bwd` off (a plain flag check — see `backward.rs`), so
+    /// these parity tests always compare against the code that actually
+    /// ships rather than a private copy. Returns (dZ workspace, dQ, dK, dV).
+    fn unfused_backward(
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        scale: f32,
+        s_prob: &Bcsr,
+        d_out: &Mat,
+        mask: &BlockMask,
+    ) -> (Bcsr, Mat, Mat, Mat) {
+        let exec = Exec::new(ExecConfig {
+            kernel: KernelConfig { fused: false, simd: false, fused_bwd: false },
+            ..Default::default()
+        });
+        let mut ws = Bcsr::from_mask(mask);
+        let mut dq = Mat::zeros(q.rows, q.cols);
+        let mut dk = Mat::zeros(k.rows, k.cols);
+        let mut dv = Mat::zeros(v.rows, v.cols);
+        sparse_attention_backward_with(
+            &exec, q, k, v, scale, s_prob, d_out, &mut ws, &mut dq, &mut dk, &mut dv,
+        );
+        (ws, dq, dk, dv)
+    }
+
+    fn exec_with(workers: usize, simd: bool) -> Exec {
+        Exec::new(ExecConfig {
+            workers,
+            kernel: KernelConfig { fused: true, simd, fused_bwd: true },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn scalar_fused_backward_bitwise_equals_unfused_property() {
+        QuickCheck::new().cases(25).run("fused bwd scalar = unfused", |rng| {
+            let block = [2usize, 4, 8][rng.below(3)];
+            let lb = 1 + rng.below(5);
+            let l = lb * block;
+            let d = 1 + rng.below(10);
+            let scale = 1.0 / (d as f32).sqrt();
+            let q = Mat::random_normal(l, d, 0.9, rng);
+            let k = Mat::random_normal(l, d, 0.9, rng);
+            let v = Mat::random_normal(l, d, 0.9, rng);
+            let cot = Mat::random_normal(l, d, 1.0, rng);
+            let mask = random_mask(rng, lb, block, rng.f64());
+            let s = forward_probs(&q, &k, scale, &mask);
+
+            let (ws_ref, dq_ref, dk_ref, dv_ref) =
+                unfused_backward(&q, &k, &v, scale, &s, &cot, &mask);
+
+            let exec = exec_with(1, false);
+            let mut ws = Bcsr::from_mask(&mask);
+            let mut dq = Mat::zeros(l, d);
+            let mut dk = Mat::zeros(l, d);
+            let mut dv = Mat::zeros(l, d);
+            fused_attention_backward_with(
+                &exec,
+                &q,
+                &k,
+                &v,
+                scale,
+                &s,
+                &cot,
+                &mut ws,
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                TileDispatch::for_block(block),
+            );
+            for (what, a, b) in [
+                ("dz", &ws.values, &ws_ref.values),
+                ("dq", &dq.data, &dq_ref.data),
+                ("dk", &dk.data, &dk_ref.data),
+                ("dv", &dv.data, &dv_ref.data),
+            ] {
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    crate::qc_assert!(
+                        x.to_bits() == y.to_bits(),
+                        "{what} bit mismatch at {i}: {x} vs {y} (B={block})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_fused_backward_allclose_to_unfused_property() {
+        QuickCheck::new().cases(25).run("fused bwd simd ≈ unfused", |rng| {
+            let block = [2usize, 4, 8][rng.below(3)];
+            let lb = 1 + rng.below(5);
+            let l = lb * block;
+            let d = 1 + rng.below(16);
+            let scale = 1.0 / (d as f32).sqrt();
+            let q = Mat::random_normal(l, d, 0.9, rng);
+            let k = Mat::random_normal(l, d, 0.9, rng);
+            let v = Mat::random_normal(l, d, 0.9, rng);
+            let cot = Mat::random_normal(l, d, 1.0, rng);
+            let mask = random_mask(rng, lb, block, 0.5);
+            let s = forward_probs(&q, &k, scale, &mask);
+
+            let (ws_ref, dq_ref, dk_ref, dv_ref) =
+                unfused_backward(&q, &k, &v, scale, &s, &cot, &mask);
+
+            let exec = exec_with(1, true);
+            let mut ws = Bcsr::from_mask(&mask);
+            let mut dq = Mat::zeros(l, d);
+            let mut dk = Mat::zeros(l, d);
+            let mut dv = Mat::zeros(l, d);
+            fused_attention_backward_with(
+                &exec,
+                &q,
+                &k,
+                &v,
+                scale,
+                &s,
+                &cot,
+                &mut ws,
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                TileDispatch::for_block(block),
+            );
+            assert_allclose(&ws.values, &ws_ref.values, 1e-3, 1e-5)?;
+            assert_allclose(&dq.data, &dq_ref.data, 1e-3, 1e-5)?;
+            assert_allclose(&dk.data, &dk_ref.data, 1e-3, 1e-5)?;
+            assert_allclose(&dv.data, &dv_ref.data, 1e-3, 1e-5)
+        });
+    }
+
+    #[test]
+    fn empty_rows_and_columns_zero_their_gradients() {
+        // A single stored block: every other dq row / dk·dv column panel
+        // must still be cleared from stale contents.
+        let mut mask = BlockMask::empty(3, 4);
+        mask.set(0, 1, true);
+        let mut rng = Rng::new(7);
+        let (l, d) = (12, 5);
+        let q = Mat::random_normal(l, d, 1.0, &mut rng);
+        let k = Mat::random_normal(l, d, 1.0, &mut rng);
+        let v = Mat::random_normal(l, d, 1.0, &mut rng);
+        let cot = Mat::random_normal(l, d, 1.0, &mut rng);
+        let s = forward_probs(&q, &k, 0.5, &mask);
+        let exec = exec_with(1, true);
+        let mut ws = Bcsr::from_mask(&mask);
+        let mut dq = Mat::filled(l, d, 9.0); // poisoned
+        let mut dk = Mat::filled(l, d, 9.0);
+        let mut dv = Mat::filled(l, d, 9.0);
+        fused_attention_backward_with(
+            &exec,
+            &q,
+            &k,
+            &v,
+            0.5,
+            &s,
+            &cot,
+            &mut ws,
+            &mut dq,
+            &mut dk,
+            &mut dv,
+            TileDispatch::B4,
+        );
+        // Stored block (0,1): dq rows 0..4 live, dk/dv rows 4..8 live.
+        for i in 4..l {
+            assert!(dq.row(i).iter().all(|&x| x == 0.0), "dq row {i}");
+        }
+        for i in (0..4).chain(8..l) {
+            assert!(dk.row(i).iter().all(|&x| x == 0.0), "dk row {i}");
+            assert!(dv.row(i).iter().all(|&x| x == 0.0), "dv row {i}");
+        }
+        assert!(dq.row(0).iter().any(|&x| x != 0.0));
+        assert!(dv.row(4).iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn serial_parallel_bit_identical() {
+        let mut rng = Rng::new(31);
+        let (lb, block, d) = (6, 8, 12);
+        let l = lb * block;
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, &mut rng);
+        let k = Mat::random_normal(l, d, 0.9, &mut rng);
+        let v = Mat::random_normal(l, d, 0.9, &mut rng);
+        let cot = Mat::random_normal(l, d, 1.0, &mut rng);
+        let mask = random_mask(&mut rng, lb, block, 0.4);
+        let s = forward_probs(&q, &k, scale, &mask);
+        let run = |workers: usize| {
+            let exec = exec_with(workers, true);
+            let mut ws = Bcsr::from_mask(&mask);
+            let mut dq = Mat::zeros(l, d);
+            let mut dk = Mat::zeros(l, d);
+            let mut dv = Mat::zeros(l, d);
+            fused_attention_backward_with(
+                &exec,
+                &q,
+                &k,
+                &v,
+                scale,
+                &s,
+                &cot,
+                &mut ws,
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                TileDispatch::B8,
+            );
+            (ws.values, dq.data, dk.data, dv.data)
+        };
+        let reference = run(1);
+        for workers in [2usize, 4] {
+            let got = run(workers);
+            assert_eq!(got.0, reference.0, "dz w={workers}");
+            assert_eq!(got.1, reference.1, "dq w={workers}");
+            assert_eq!(got.2, reference.2, "dk w={workers}");
+            assert_eq!(got.3, reference.3, "dv w={workers}");
+        }
+    }
+
+    #[test]
+    fn tallies_land_in_backward_counters() {
+        let mut rng = Rng::new(5);
+        let (lb, block, d) = (3, 4, 6);
+        let l = lb * block;
+        let mask = random_mask(&mut rng, lb, block, 0.5);
+        let q = Mat::random_normal(l, d, 1.0, &mut rng);
+        let k = Mat::random_normal(l, d, 1.0, &mut rng);
+        let v = Mat::random_normal(l, d, 1.0, &mut rng);
+        let cot = Mat::random_normal(l, d, 1.0, &mut rng);
+        let s = forward_probs(&q, &k, 0.5, &mask);
+        let exec = exec_with(1, true).backward_stage();
+        exec.reset_ops();
+        let mut ws = Bcsr::from_mask(&mask);
+        let (mut dq, mut dk, mut dv) =
+            (Mat::zeros(l, d), Mat::zeros(l, d), Mat::zeros(l, d));
+        fused_attention_backward_with(
+            &exec,
+            &q,
+            &k,
+            &v,
+            0.5,
+            &s,
+            &cot,
+            &mut ws,
+            &mut dq,
+            &mut dk,
+            &mut dv,
+            TileDispatch::B4,
+        );
+        let c = exec.op_counter();
+        let stored = s.nnz_elements() as u64;
+        assert_eq!(c.bwd_mul_add, crate::sparse::ops::engine_bwd_muladds(stored, d as u64));
+        assert_eq!(c.mul_add, 0, "nothing lands in the forward counters");
+    }
+}

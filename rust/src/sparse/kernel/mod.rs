@@ -7,6 +7,11 @@
 //! * [`fused`] — the per-block-row SDDMM → softmax → SpMM sweep
 //!   (Algorithm 6 on CPU), which keeps each block row's tiles cache-hot
 //!   and halves the softmax `exp` count by caching the exponentials;
+//! * [`fused_bwd`] — the training counterpart: a per-block-row
+//!   dW → softmax-Jacobian → dQ sweep over the forward's cached
+//!   probabilities plus one merged per-block-column sweep for the two
+//!   transposed products (dV, dK) — two passes where the unfused backward
+//!   makes five;
 //! * [`arena`] — per-worker bump-allocated scratch so the fused path is
 //!   allocation-free in steady state;
 //! * [`dispatch`] — B=4/B=8 constant-folded sweep selection, decided once
@@ -19,11 +24,13 @@
 pub mod arena;
 pub mod dispatch;
 pub mod fused;
+pub mod fused_bwd;
 pub mod microkernel;
 
 pub use arena::Arena;
 pub use dispatch::TileDispatch;
 pub use fused::fused_attention_head_with;
+pub use fused_bwd::fused_attention_backward_with;
 
 /// Kernel-selection knobs, embedded in [`crate::exec::ExecConfig`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,14 +38,19 @@ pub struct KernelConfig {
     /// Route the sparse attention forward through the fused per-block-row
     /// pipeline instead of the three-pass SDDMM/softmax/SpMM kernels.
     pub fused: bool,
-    /// Use the 8-lane SIMD-shaped microkernels inside the fused pipeline.
-    /// Off ⇒ legacy scalar reductions, bit-identical to the unfused path.
+    /// Use the 8-lane SIMD-shaped microkernels inside the fused pipelines
+    /// (forward and backward). Off ⇒ legacy scalar reductions,
+    /// bit-identical to the unfused paths.
     pub simd: bool,
+    /// Route the sparse attention backward through the fused two-sweep
+    /// pipeline ([`fused_bwd`]) instead of the five unfused gradient
+    /// passes. Same determinism ladder as the forward flag.
+    pub fused_bwd: bool,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        Self { fused: true, simd: true }
+        Self { fused: true, simd: true, fused_bwd: true }
     }
 }
 
@@ -51,5 +63,6 @@ mod tests {
         let k = KernelConfig::default();
         assert!(k.fused);
         assert!(k.simd);
+        assert!(k.fused_bwd);
     }
 }

@@ -1,0 +1,435 @@
+//! Fused-backward parity + the zero-allocation sparse training phase —
+//! the determinism and steady-state-memory contract of
+//! `sparse::kernel::fused_bwd` and the native trainer's free-lists
+//! (DESIGN.md §Fused backward & overlapped reduction):
+//!
+//! * **fused-bwd scalar ↔ unfused**: bit-for-bit across the pattern zoo
+//!   (SPION-C/F/CF, BigBird, Reformer/LSH) × block sizes {2, 4, 8} ×
+//!   workers {1, 2, 4} — with `simd` off the two-sweep backward keeps the
+//!   five-pass kernels' exact association;
+//! * **fused-bwd SIMD ↔ unfused**: allclose (the 8-lane SDDMM dot and
+//!   Jacobian rowsum reassociate);
+//! * **fused-bwd serial ↔ parallel**: bit-for-bit at any worker count;
+//! * finite-difference gradient checks **through the fused path**;
+//! * the native trainer's **overlapped ordered fold**: whole-trajectory
+//!   bit-identity at workers {1, 2, 4}, and fused-bwd-scalar ≡
+//!   unfused-scalar trajectories bit-for-bit;
+//! * an **allocation-count regression**: a counting global allocator
+//!   witnesses that the warm sparse attention fwd+bwd performs zero heap
+//!   allocations, and that `train_step_sample` with a pooled `TrainCache`
+//!   has a stable (and strictly smaller) per-call allocation count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use spion::attention::{sparse_attention_train_with, TrainWorkspace};
+use spion::config::types::SparsityConfig;
+use spion::config::{ExperimentConfig, ModelConfig, PatternKind, TaskKind, TrainConfig};
+use spion::coordinator::NativeTrainer;
+use spion::exec::{Exec, ExecConfig, KernelConfig};
+use spion::model::grad::ModelGrads;
+use spion::model::{train_step_sample, ModelParams, TrainCache};
+use spion::pattern::bigbird::bigbird;
+use spion::pattern::lsh::lsh_pattern;
+use spion::pattern::spion::{generate_pattern, synth_attention_scores, PatternConfig};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::tensor::Mat;
+use spion::util::quickcheck::{assert_allclose, QuickCheck};
+use spion::util::rng::Rng;
+
+// ---- counting allocator ------------------------------------------------
+
+thread_local! {
+    /// Allocations made by *this* thread (const-init Cell: reading/writing
+    /// it never allocates, so the allocator cannot recurse). Thread-local
+    /// so concurrently-running tests in this binary cannot pollute each
+    /// other's counts — the witnessed paths all run on a serial exec,
+    /// i.e. on the measuring thread itself.
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers to the system allocator; the bookkeeping is a const-init
+// thread-local Cell bump, which performs no allocation.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+// ---- shared fixtures ---------------------------------------------------
+
+const FB_SIMD: KernelConfig = KernelConfig { fused: true, simd: true, fused_bwd: true };
+/// Unfused forward + fused scalar backward: isolates the backward routing,
+/// so any bit difference against UNFUSED is the fused backward's fault.
+const FB_SCALAR: KernelConfig = KernelConfig { fused: false, simd: false, fused_bwd: true };
+const UNFUSED: KernelConfig = KernelConfig { fused: false, simd: false, fused_bwd: false };
+
+fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
+    Exec::new(ExecConfig { workers, kernel, ..Default::default() })
+}
+
+/// A pattern from every policy the engine supports, at block size `block`.
+fn pattern_zoo(rng: &mut Rng, l: usize, block: usize) -> Vec<(String, BlockMask)> {
+    let scores = synth_attention_scores(l, 0.8, 0.4, &[l / 3], 0.05, rng);
+    let lb = l / block;
+    let mut zoo = Vec::new();
+    for variant in [SpionVariant::C, SpionVariant::F, SpionVariant::CF] {
+        let cfg = PatternConfig { variant, block, filter: 5, alpha: 0.5 + 0.45 * rng.f64() };
+        zoo.push((variant.name().to_string(), generate_pattern(&scores, &cfg)));
+    }
+    zoo.push(("BigBird".into(), bigbird(lb, block, &Default::default(), rng)));
+    zoo.push(("Reformer".into(), lsh_pattern(&scores, block, &Default::default(), rng)));
+    zoo
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+/// Run the full fwd+bwd train pass under `exec` and return the workspace.
+fn train(
+    exec: &Exec,
+    mask: &BlockMask,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    cot: &Mat,
+    scale: f32,
+) -> TrainWorkspace {
+    let mut ws = TrainWorkspace::new(mask, q.cols);
+    sparse_attention_train_with(exec, q, k, v, scale, cot, &mut ws);
+    ws
+}
+
+// ---- backward parity ---------------------------------------------------
+
+#[test]
+fn fused_bwd_scalar_bitwise_equals_unfused_over_zoo() {
+    QuickCheck::new().cases(10).run("fused bwd scalar = unfused", |rng| {
+        let block = [2usize, 4, 8][rng.below(3)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(10);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, UNFUSED), &mask, &q, &k, &v, &cot, scale);
+            for workers in [1usize, 2, 4] {
+                let ws = train(&exec_with(workers, FB_SCALAR), &mask, &q, &k, &v, &cot, scale);
+                let tag = format!("{name} B={block} w={workers}");
+                assert_bits_eq(&ws.dq.data, &ws_ref.dq.data, &format!("dQ {tag}"));
+                assert_bits_eq(&ws.dk.data, &ws_ref.dk.data, &format!("dK {tag}"));
+                assert_bits_eq(&ws.dv.data, &ws_ref.dv.data, &format!("dV {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_bwd_simd_allclose_to_unfused_over_zoo() {
+    QuickCheck::new().cases(10).run("fused bwd simd ≈ unfused", |rng| {
+        let block = [2usize, 4, 8][rng.below(3)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(12);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, UNFUSED), &mask, &q, &k, &v, &cot, scale);
+            for workers in [1usize, 2, 4] {
+                let ws = train(&exec_with(workers, FB_SIMD), &mask, &q, &k, &v, &cot, scale);
+                for (what, got, want) in [
+                    ("dq", &ws.dq.data, &ws_ref.dq.data),
+                    ("dk", &ws.dk.data, &ws_ref.dk.data),
+                    ("dv", &ws.dv.data, &ws_ref.dv.data),
+                ] {
+                    assert_allclose(got, want, 1e-3, 1e-5).unwrap_or_else(|e| {
+                        panic!("{name} B={block} {what} w={workers}: {e}")
+                    });
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_bwd_serial_parallel_bit_identical_over_zoo() {
+    QuickCheck::new().cases(8).run("fused bwd serial↔parallel", |rng| {
+        let block = [4usize, 8][rng.below(2)];
+        let lb = (16 / block).max(2) + rng.below(4);
+        let l = lb * block;
+        let d = 2 + rng.below(10);
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = Mat::random_normal(l, d, 0.9, rng);
+        let k = Mat::random_normal(l, d, 0.9, rng);
+        let v = Mat::random_normal(l, d, 0.9, rng);
+        let cot = Mat::random_normal(l, d, 1.0, rng);
+
+        for (name, mask) in pattern_zoo(rng, l, block) {
+            let ws_ref = train(&exec_with(1, FB_SIMD), &mask, &q, &k, &v, &cot, scale);
+            for workers in [2usize, 4] {
+                let ws = train(&exec_with(workers, FB_SIMD), &mask, &q, &k, &v, &cot, scale);
+                let tag = format!("{name} w={workers}");
+                assert_bits_eq(&ws.dq.data, &ws_ref.dq.data, &format!("dQ {tag}"));
+                assert_bits_eq(&ws.dk.data, &ws_ref.dk.data, &format!("dK {tag}"));
+                assert_bits_eq(&ws.dv.data, &ws_ref.dv.data, &format!("dV {tag}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn finite_differences_pass_through_fused_backward() {
+    // Scalar loss L = Σ (O ⊙ C): central differences through the (fused)
+    // forward vs the fused backward's analytic gradients.
+    let mut rng = Rng::new(11);
+    let (lb, block, dh) = (3, 4, 6);
+    let l = lb * block;
+    let mut mask = BlockMask::empty(lb, block);
+    for bit in mask.bits.iter_mut() {
+        *bit = rng.chance(0.5);
+    }
+    mask.set_diagonal();
+    let q = Mat::random_normal(l, dh, 0.7, &mut rng);
+    let k = Mat::random_normal(l, dh, 0.7, &mut rng);
+    let v = Mat::random_normal(l, dh, 0.7, &mut rng);
+    let cot = Mat::random_normal(l, dh, 1.0, &mut rng);
+    let scale = 1.0 / (dh as f32).sqrt();
+    for kernel in [FB_SIMD, FB_SCALAR] {
+        let exec = exec_with(1, kernel);
+        let ws = train(&exec, &mask, &q, &k, &v, &cot, scale);
+        let loss = |q: &Mat, k: &Mat, v: &Mat| -> f64 {
+            let mut w = TrainWorkspace::new(&mask, dh);
+            sparse_attention_train_with(&exec, q, k, v, scale, &cot, &mut w);
+            w.fwd.ctx.data.iter().zip(&cot.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let eps = 1e-3f32;
+        for (which, grad) in [(0usize, &ws.dq), (1, &ws.dk), (2, &ws.dv)] {
+            let mut worst = 0.0f64;
+            for idx in 0..l * dh {
+                let (mut qp, mut kp, mut vp) = (q.clone(), k.clone(), v.clone());
+                let (mut qm, mut km, mut vm) = (q.clone(), k.clone(), v.clone());
+                let (tp, tm) = match which {
+                    0 => (&mut qp.data[idx], &mut qm.data[idx]),
+                    1 => (&mut kp.data[idx], &mut km.data[idx]),
+                    _ => (&mut vp.data[idx], &mut vm.data[idx]),
+                };
+                *tp += eps;
+                *tm -= eps;
+                let fd = (loss(&qp, &kp, &vp) - loss(&qm, &km, &vm)) / (2.0 * eps as f64);
+                let an = grad.data[idx] as f64;
+                let err = (fd - an).abs() / (1e-3 + fd.abs().max(an.abs()));
+                worst = worst.max(err);
+            }
+            assert!(worst < 0.05, "tensor {which} fd mismatch (worst rel {worst}) {kernel:?}");
+        }
+    }
+}
+
+// ---- native-trainer trajectory ----------------------------------------
+
+fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
+    let model = ModelConfig {
+        preset: "micro".into(),
+        seq_len: 32,
+        d_model: 16,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 32,
+        vocab: 20,
+        classes: 10,
+        batch: 4,
+    };
+    let mut train = TrainConfig::default();
+    train.steps = 10;
+    train.lr = 0.02;
+    train.min_dense_steps = 4;
+    train.max_dense_steps = 8;
+    train.snapshot_every = 2;
+    let mut sparsity = SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 8, 0.7);
+    sparsity.pattern.filter = 3;
+    ExperimentConfig {
+        task: TaskKind::ListOps,
+        model,
+        train,
+        sparsity,
+        exec: ExecConfig { workers, kernel, ..Default::default() },
+        serve: Default::default(),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn overlapped_fold_trajectory_bit_identical_at_any_worker_count() {
+    // The overlapped ordered fold must keep the whole training trajectory
+    // (losses, masks, final parameters) bit-identical from 1 to N workers,
+    // with the fused backward on (the default kernel config).
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let run = |workers: usize| {
+        NativeTrainer::new(micro_exp(workers, KernelConfig::default())).unwrap().run().unwrap()
+    };
+    let serial = run(1);
+    for workers in [2usize, 4] {
+        let parallel = run(workers);
+        assert_eq!(serial.metrics.records.len(), parallel.metrics.records.len());
+        for (a, b) in serial.metrics.records.iter().zip(&parallel.metrics.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {} w={workers}", a.step);
+        }
+        assert_eq!(serial.masks, parallel.masks, "w={workers}");
+        for (a, b) in serial.final_params.iter().zip(&parallel.final_params) {
+            assert_eq!(a, b, "final params w={workers}");
+        }
+    }
+}
+
+#[test]
+fn fused_bwd_scalar_trajectory_bitwise_equals_unfused() {
+    // Whole-trainer tier of the scalar contract: swapping only the
+    // backward pipeline (five-pass → fused two-sweep, both scalar) must
+    // not move a single bit of the training trajectory.
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let run = |kernel: KernelConfig| {
+        NativeTrainer::new(micro_exp(2, kernel)).unwrap().run().unwrap()
+    };
+    let fused = run(FB_SCALAR);
+    let unfused = run(UNFUSED);
+    for (a, b) in fused.metrics.records.iter().zip(&unfused.metrics.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+    }
+    assert_eq!(fused.masks, unfused.masks);
+    for (a, b) in fused.final_params.iter().zip(&unfused.final_params) {
+        assert_eq!(a, b);
+    }
+}
+
+// ---- allocation regression ---------------------------------------------
+
+#[test]
+fn warm_sparse_train_pass_is_allocation_free() {
+    // One fwd+bwd over a reused TrainWorkspace on a serial exec: after the
+    // warmup call (arena growth, ColIndex builds), the steady-state pass
+    // must perform ZERO heap allocations — this is the per-sample inner
+    // loop of the sparse training phase.
+    let mut rng = Rng::new(3);
+    let (lb, block, d) = (6, 8, 16);
+    let l = lb * block;
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = Mat::random_normal(l, d, 0.9, &mut rng);
+    let k = Mat::random_normal(l, d, 0.9, &mut rng);
+    let v = Mat::random_normal(l, d, 0.9, &mut rng);
+    let cot = Mat::random_normal(l, d, 1.0, &mut rng);
+    let (_, mask) = pattern_zoo(&mut rng, l, block).remove(2); // SPION-CF
+    for kernel in [FB_SIMD, FB_SCALAR, UNFUSED] {
+        let exec = exec_with(1, kernel);
+        let mut ws = TrainWorkspace::new(&mask, d);
+        // Warmup: grows the thread arena to its high-water mark and builds
+        // the cached column indices.
+        sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+        let before = thread_allocs();
+        for _ in 0..3 {
+            sparse_attention_train_with(&exec, &q, &k, &v, scale, &cot, &mut ws);
+        }
+        let after = thread_allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "sparse fwd+bwd allocated {} times in steady state ({kernel:?})",
+            after - before
+        );
+    }
+}
+
+#[test]
+fn pooled_train_cache_makes_sample_allocations_stable_and_smaller() {
+    // Full-encoder sample pass: with a warmed step-spanning TrainCache the
+    // per-call allocation count is *constant* (the dense encoder mats are a
+    // deterministic per-call sequence; the sparse phase adds nothing), and
+    // strictly smaller than the cacheless call that must build fresh
+    // workspaces per layer per head.
+    let model = ModelConfig {
+        preset: "micro".into(),
+        seq_len: 16,
+        d_model: 8,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 16,
+        vocab: 12,
+        classes: 4,
+        batch: 1,
+    };
+    let params = ModelParams::init_random(&model, 7);
+    let mut rng = Rng::new(21);
+    let toks: Vec<i32> = (0..model.seq_len).map(|_| rng.below(model.vocab) as i32).collect();
+    let mut m0 = BlockMask::empty(4, 4);
+    m0.set_diagonal();
+    m0.set(0, 2, true);
+    let mut m1 = BlockMask::empty(4, 4);
+    m1.set_diagonal();
+    m1.set(3, 1, true);
+    let masks = vec![m0, m1];
+    let dh = model.d_model / model.heads;
+    let exec = Exec::serial();
+    let mut grads = ModelGrads::zeros_like(&params);
+
+    let count_call = |grads: &mut ModelGrads, cache: Option<&mut TrainCache>| -> u64 {
+        let before = thread_allocs();
+        train_step_sample(
+            &exec,
+            &params,
+            model.heads,
+            Some(&masks),
+            &toks,
+            1,
+            false,
+            grads,
+            cache,
+        );
+        thread_allocs() - before
+    };
+
+    let mut cache = TrainCache::new(&masks, model.heads, dh);
+    let _warm = count_call(&mut grads, Some(&mut cache)); // builds ColIndex caches
+    let a2 = count_call(&mut grads, Some(&mut cache));
+    let a3 = count_call(&mut grads, Some(&mut cache));
+    let fresh = count_call(&mut grads, None);
+    assert_eq!(a2, a3, "warm per-call allocation count must be stable");
+    assert!(
+        fresh > a2,
+        "cacheless call ({fresh} allocs) must exceed the pooled-cache call ({a2})"
+    );
+}

@@ -26,9 +26,9 @@ fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
     Exec::new(ExecConfig { workers, kernel, ..Default::default() })
 }
 
-const FUSED_SIMD: KernelConfig = KernelConfig { fused: true, simd: true };
-const FUSED_SCALAR: KernelConfig = KernelConfig { fused: true, simd: false };
-const UNFUSED: KernelConfig = KernelConfig { fused: false, simd: false };
+const FUSED_SIMD: KernelConfig = KernelConfig { fused: true, simd: true, fused_bwd: true };
+const FUSED_SCALAR: KernelConfig = KernelConfig { fused: true, simd: false, fused_bwd: true };
+const UNFUSED: KernelConfig = KernelConfig { fused: false, simd: false, fused_bwd: false };
 
 /// A pattern from every policy the engine supports, at block size `block`.
 fn pattern_zoo(rng: &mut Rng, l: usize, block: usize) -> Vec<(String, BlockMask)> {

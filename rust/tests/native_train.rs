@@ -46,7 +46,7 @@ fn loss_of(
     label: i32,
 ) -> f64 {
     let mut g = ModelGrads::zeros_like(params);
-    train_step_sample(exec, params, heads, masks, toks, label, false, &mut g).loss
+    train_step_sample(exec, params, heads, masks, toks, label, false, &mut g, None).loss
 }
 
 /// Probe a spread of coordinates in every parameter tensor with central
@@ -60,7 +60,7 @@ fn fd_check_all_tensors(masks: Option<Vec<BlockMask>>) {
     let masks_ref = masks.as_deref();
 
     let mut grads = ModelGrads::zeros_like(&params);
-    train_step_sample(&exec, &params, m.heads, masks_ref, &toks, label, false, &mut grads);
+    train_step_sample(&exec, &params, m.heads, masks_ref, &toks, label, false, &mut grads, None);
 
     let eps = 1e-2f32;
     let mut pairs: Vec<(f64, f64)> = Vec::new(); // (finite-diff, analytic)

@@ -170,6 +170,7 @@ fn main() -> Result<()> {
                 },
                 exec: Default::default(),
                 serve: Default::default(),
+                obs: Default::default(),
                 artifacts_dir: "artifacts".into(),
             };
             let mut rng = spion::util::rng::Rng::new(5);

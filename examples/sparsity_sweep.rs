@@ -43,10 +43,12 @@ fn main() -> Result<()> {
     );
 
     for &ratio in &ratios {
-        let mut train = TrainConfig::default();
-        train.steps = steps;
-        train.max_dense_steps = 30;
-        train.min_dense_steps = 10;
+        let train = TrainConfig {
+            steps,
+            max_dense_steps: 30,
+            min_dense_steps: 10,
+            ..Default::default()
+        };
         let exp = ExperimentConfig {
             task,
             model: model.clone(),
@@ -59,6 +61,7 @@ fn main() -> Result<()> {
             },
             exec: spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)),
             serve: Default::default(),
+            obs: Default::default(),
             artifacts_dir: args.str_or("artifacts", "artifacts"),
         };
         let trainer = Trainer::new(&rt, exp)?;

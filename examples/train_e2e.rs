@@ -38,18 +38,19 @@ fn main() -> Result<()> {
     let preset_name = args.str_or("preset", "listops");
     let (task, model) = preset(&preset_name).expect("unknown preset");
     let kind = PatternKind::parse(&args.str_or("kind", "cf")).expect("bad --kind");
-    let mut train = TrainConfig::default();
-    train.steps = args.usize_or("steps", 300);
-    train.lr = args.f64_or("lr", 1e-3);
-    train.momentum = spion::config::types::validate_momentum(
-        args.f64_or("momentum", train.momentum),
-    )
-    .map_err(|e| anyhow::anyhow!(e))?;
+    let d = TrainConfig::default();
     let backend_arg = args.str_or("backend", "pjrt");
-    train.backend = TrainBackend::parse(&backend_arg)
-        .ok_or_else(|| anyhow::anyhow!("unknown --backend {backend_arg} (native|pjrt)"))?;
-    train.seed = args.u64_or("seed", 42);
-    train.max_dense_steps = args.usize_or("max-dense-steps", 60);
+    let train = TrainConfig {
+        steps: args.usize_or("steps", 300),
+        lr: args.f64_or("lr", 1e-3),
+        momentum: spion::config::types::validate_momentum(args.f64_or("momentum", d.momentum))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        backend: TrainBackend::parse(&backend_arg)
+            .ok_or_else(|| anyhow::anyhow!("unknown --backend {backend_arg} (native|pjrt)"))?,
+        seed: args.u64_or("seed", 42),
+        max_dense_steps: args.usize_or("max-dense-steps", 60),
+        ..d
+    };
     let mut sparsity = SparsityConfig::for_model(kind, task, &model);
     sparsity.pattern.block = args.usize_or("block", sparsity.pattern.block);
     sparsity.pattern.alpha = args.f64_or("alpha", sparsity.pattern.alpha);
@@ -65,6 +66,7 @@ fn main() -> Result<()> {
         sparsity,
         exec,
         serve: Default::default(),
+        obs: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     };
     let out_dir = args.str_or("out", "results/train_e2e");

@@ -55,13 +55,15 @@ fn exec_with(workers: usize, kernel: KernelConfig) -> Exec {
     Exec::new(ExecConfig { workers, kernel, ..Default::default() })
 }
 
-/// (unfused_fwd_w1, fused_fwd_w1, unfused_bwd_w1, fused_bwd_w1) medians.
+/// (unfused_fwd_w1, fused_fwd_w1, unfused_bwd_w1, fused_bwd_w1,
+/// fused_noobs_w1) medians — the last is the fused forward with the obs
+/// span registry disabled, the denominator of the tracing-overhead gate.
 fn bench_block_size(
     block: usize,
     workers_axis: &[usize],
     rng: &mut Rng,
     rows: &mut Vec<Row>,
-) -> (f64, f64, f64, f64) {
+) -> (f64, f64, f64, f64, f64) {
     let scores = synth_attention_scores(L, 1.0, 0.3, &[L / 3, 2 * L / 3], 0.05, rng);
     let cfg = PatternConfig {
         variant: SpionVariant::CF,
@@ -92,6 +94,7 @@ fn bench_block_size(
     let mut unfused_w1_ms = f64::NAN;
     let mut bwd_fused_w1_ms = f64::NAN;
     let mut bwd_unfused_w1_ms = f64::NAN;
+    let mut noobs_w1_ms = f64::NAN;
     for &workers in workers_axis {
         let unfused =
             exec_with(workers, KernelConfig { fused: false, simd: false, fused_bwd: false });
@@ -141,6 +144,27 @@ fn bench_block_size(
             });
         }
 
+        // Tracing-overhead gate: the same fused pipeline with the obs span
+        // registry disabled. The ratio fused/noobs is the cost the always-on
+        // spans add to the hottest kernel path (budget: < 2%).
+        if workers == 1 && block == 8 {
+            let mut ws = SparseWorkspace::new(&mask, DH);
+            spion::obs::set_enabled(false);
+            let st = bench("fused-noobs", || {
+                let o = sparse_attention_head_with(&fused, &q, &k, &v, scale, &mut ws);
+                std::hint::black_box(&o);
+            });
+            spion::obs::set_enabled(true);
+            noobs_w1_ms = st.median_ms;
+            rows.push(Row {
+                workers,
+                block,
+                kernel: "fused-noobs",
+                gflops: gfl(pipeline_flops, &st),
+                stats: st,
+            });
+        }
+
         // Backward pipelines: one forward fills the cached probabilities,
         // then each regime repeatedly runs the full five-gradient backward
         // over a reused TrainWorkspace (the trainer's steady state).
@@ -166,7 +190,7 @@ fn bench_block_size(
             rows.push(Row { workers, block, kernel: name, gflops: gfl(bwd_flops, &st), stats: st });
         }
     }
-    (unfused_w1_ms, fused_w1_ms, bwd_unfused_w1_ms, bwd_fused_w1_ms)
+    (unfused_w1_ms, fused_w1_ms, bwd_unfused_w1_ms, bwd_fused_w1_ms, noobs_w1_ms)
 }
 
 fn main() {
@@ -175,12 +199,14 @@ fn main() {
     let mut rows = Vec::new();
     let mut speedup_w1 = f64::NAN;
     let mut bwd_speedup_w1 = f64::NAN;
+    let mut obs_overhead_w1 = f64::NAN;
     for block in [8usize, 4] {
-        let (unf, fus, bwd_unf, bwd_fus) =
+        let (unf, fus, bwd_unf, bwd_fus, noobs) =
             bench_block_size(block, &workers_axis, &mut rng, &mut rows);
         if block == 8 {
             speedup_w1 = unf / fus;
             bwd_speedup_w1 = bwd_unf / bwd_fus;
+            obs_overhead_w1 = fus / noobs - 1.0;
         }
     }
 
@@ -200,6 +226,7 @@ fn main() {
     report.print();
     println!("\nfused-SIMD speedup vs unfused pipeline (L=512, B=8, workers=1): {speedup_w1:.2}x");
     println!("fused-SIMD backward speedup vs unfused backward (L=512, B=8, workers=1): {bwd_speedup_w1:.2}x");
+    println!("obs span overhead on fused forward (L=512, B=8, workers=1): {:.2}%", 100.0 * obs_overhead_w1);
     report.save_csv("results/kernel_gflops.csv");
 
     // Machine-readable evidence for the perf trajectory.
@@ -213,6 +240,9 @@ fn main() {
     }
     if bwd_speedup_w1.is_finite() {
         json.push_str(&format!("  \"fused_bwd_speedup_w1_b8\": {bwd_speedup_w1:.3},\n"));
+    }
+    if obs_overhead_w1.is_finite() {
+        json.push_str(&format!("  \"obs_overhead_fused_w1_b8\": {obs_overhead_w1:.4},\n"));
     }
     json.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {

@@ -52,13 +52,9 @@ struct Row {
     rejection_rate: f64,
 }
 
-fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let idx = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
-    sorted[idx].as_secs_f64() * 1e3
-}
+// Tail latencies come straight from the engine's lock-free
+// `latency_histogram` (obs::Hist) rather than a sorted Vec of ticket
+// latencies — the bench now reads the same numbers /metrics exposes.
 
 /// One measured service time per request at this worker width, closed
 /// loop — the capacity baseline the offered-load multiples scale from.
@@ -113,20 +109,20 @@ fn run_one(
         }
         n += 1;
     }
-    // Drain: wait every admitted ticket, collect response latencies.
-    let mut lats: Vec<Duration> =
-        tickets.iter().filter_map(|t| t.wait().ok()).map(|r| r.latency).collect();
+    // Drain: wait every admitted ticket so the histogram is complete.
+    let drained = tickets.iter().filter(|t| t.wait().is_ok()).count();
     let elapsed = start.elapsed();
-    lats.sort_unstable();
     let stats = engine.stats();
+    let lat = stats.latency_histogram.snapshot();
+    assert_eq!(lat.count, drained as u64, "one histogram sample per served request");
     let row = Row {
         workers,
         queue_depth,
         offered_x,
         offered_rps,
         throughput_rps: stats.served.load(Ordering::Relaxed) as f64 / elapsed.as_secs_f64(),
-        p50_ms: percentile_ms(&lats, 0.50),
-        p99_ms: percentile_ms(&lats, 0.99),
+        p50_ms: lat.percentile(0.50) as f64 / 1e6,
+        p99_ms: lat.percentile(0.99) as f64 / 1e6,
         rejection_rate: stats.rejection_rate(),
     };
     assert!(

@@ -41,13 +41,15 @@ fn main() {
             let mut transition = None;
             let mut density = f64::NAN;
             for seed in 0..seeds {
-                let mut train = TrainConfig::default();
-                train.steps = steps;
-                train.seed = 42 + seed;
-                // Dense warmup ≈ 20% of the budget (the paper trains dense
-                // "for a few epochs" before sparsifying).
-                train.max_dense_steps = (steps / 4).max(20);
-                train.min_dense_steps = (steps / 5).max(10);
+                let train = TrainConfig {
+                    steps,
+                    seed: 42 + seed,
+                    // Dense warmup ≈ 20% of the budget (the paper trains
+                    // dense "for a few epochs" before sparsifying).
+                    max_dense_steps: (steps / 4).max(20),
+                    min_dense_steps: (steps / 5).max(10),
+                    ..Default::default()
+                };
                 let exp = ExperimentConfig {
                     task,
                     model: model.clone(),
@@ -55,6 +57,7 @@ fn main() {
                     sparsity: SparsityConfig::for_model(kind, task, &model),
                     exec: Default::default(),
                     serve: Default::default(),
+                    obs: Default::default(),
                     artifacts_dir: "artifacts".into(),
                 };
                 let trainer = Trainer::new(&rt, exp).expect("trainer");

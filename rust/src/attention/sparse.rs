@@ -72,13 +72,24 @@ pub fn sparse_attention_head_with<'w>(
     scale: f32,
     ws: &'w mut SparseWorkspace,
 ) -> &'w Mat {
+    let _sp = crate::obs::span(crate::obs::SpanId::SparseAttnFwd);
     if exec.kernel().fused {
+        let _f = crate::obs::span(crate::obs::SpanId::FusedAttnFwd);
         let SparseWorkspace { s, ctx, zero_correction, dispatch } = ws;
         fused_attention_head_with(exec, q, k, v, scale, s, ctx, *zero_correction, *dispatch);
     } else {
-        sddmm_with(exec, q, k, &mut ws.s, scale);
-        sparse_softmax_with(exec, &mut ws.s, 1.0, ws.zero_correction);
-        spmm_with(exec, &ws.s, v, &mut ws.ctx);
+        {
+            let _k = crate::obs::span(crate::obs::SpanId::SddmmFwd);
+            sddmm_with(exec, q, k, &mut ws.s, scale);
+        }
+        {
+            let _k = crate::obs::span(crate::obs::SpanId::SoftmaxFwd);
+            sparse_softmax_with(exec, &mut ws.s, 1.0, ws.zero_correction);
+        }
+        {
+            let _k = crate::obs::span(crate::obs::SpanId::SpmmFwd);
+            spmm_with(exec, &ws.s, v, &mut ws.ctx);
+        }
     }
     &ws.ctx
 }

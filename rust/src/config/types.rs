@@ -10,6 +10,7 @@ use crate::pattern::spion::PatternConfig;
 use crate::pattern::SpionVariant;
 
 pub use crate::exec::ExecConfig;
+pub use crate::obs::ObsConfig;
 pub use crate::serve::ServeConfig;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -234,6 +235,9 @@ pub struct ExperimentConfig {
     /// Serving-engine knobs (`[serve]` in TOML, `spion serve` CLI flags):
     /// bounded admission depth, batch policy, worker widths.
     pub serve: ServeConfig,
+    /// Observability knobs (`[obs]` in TOML, `--metrics-addr` /
+    /// `--trace-out` / `--obs` on the CLI).
+    pub obs: ObsConfig,
     pub artifacts_dir: String,
 }
 
@@ -431,12 +435,30 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
     }
     serve.validate()?;
 
+    let mut obs = ObsConfig::default();
+    if let Some(o) = doc.get("obs") {
+        if let Some(v) = o.get("enabled") {
+            obs.enabled = v.as_bool().ok_or("obs.enabled must be a boolean")?;
+        }
+        if let Some(v) = o.get("metrics_addr") {
+            obs.metrics_addr =
+                Some(v.as_str().ok_or("obs.metrics_addr must be a string")?.to_string());
+        }
+        if let Some(v) = o.get("trace_out") {
+            obs.trace_out = Some(v.as_str().ok_or("obs.trace_out must be a string")?.to_string());
+        }
+        if let Some(v) = o.get("trace_capacity") {
+            obs.trace_capacity =
+                v.as_usize().ok_or("obs.trace_capacity must be a non-negative integer")?;
+        }
+    }
+
     let artifacts_dir = root
         .get("artifacts_dir")
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    Ok(ExperimentConfig { task, model, train, sparsity, exec, serve, artifacts_dir })
+    Ok(ExperimentConfig { task, model, train, sparsity, exec, serve, obs, artifacts_dir })
 }
 
 #[cfg(test)]
@@ -522,6 +544,32 @@ block = 16
         assert_eq!(cfg.sparsity.pattern.block, 16);
         assert_eq!(cfg.artifact_path("init"), "artifacts/tiny/init.hlo.txt");
         assert_eq!(cfg.exec, ExecConfig::default(), "no [exec] section → serial default");
+    }
+
+    #[test]
+    fn obs_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[obs]
+enabled = false
+metrics_addr = "127.0.0.1:9464"
+trace_out = "trace.json"
+trace_capacity = 1024
+"#,
+        )
+        .unwrap();
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(cfg.obs.trace_capacity, 1024);
+
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(d.obs, ObsConfig::default(), "no [obs] section → always-on defaults");
+        assert!(d.obs.enabled && d.obs.metrics_addr.is_none());
+
+        assert!(experiment_from_toml("preset = \"tiny\"\n[obs]\nenabled = 3").is_err());
+        assert!(experiment_from_toml("preset = \"tiny\"\n[obs]\ntrace_capacity = -1").is_err());
     }
 
     #[test]

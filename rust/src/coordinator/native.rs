@@ -140,6 +140,7 @@ impl NativeTrainer {
             let mut loss_sum = 0.0f64;
             let mut correct = 0usize;
             let mut score_acc: Option<Vec<Mat>> = None;
+            let step_span = crate::obs::span(crate::obs::SpanId::TrainStep);
             self.exec.par_map_fold(
                 m.batch,
                 |b| {
@@ -172,6 +173,7 @@ impl NativeTrainer {
                     (r.loss, r.correct, g, cache, r.scores)
                 },
                 |_, (loss, ok, g, cache, scores)| {
+                    let _sp = crate::obs::span(crate::obs::SpanId::GradFold);
                     loss_sum += loss;
                     correct += ok as usize;
                     grads.add_assign(&g);
@@ -193,7 +195,11 @@ impl NativeTrainer {
                 },
             );
             grads.scale(1.0 / m.batch as f32);
-            opt.step(&mut params, &grads);
+            {
+                let _sp = crate::obs::span(crate::obs::SpanId::Optimizer);
+                opt.step(&mut params, &grads);
+            }
+            drop(step_span);
 
             metrics.record(StepRecord {
                 step,
@@ -211,7 +217,13 @@ impl NativeTrainer {
                 let min_ok = step >= cfg.train.min_dense_steps;
                 let forced = step + 1 >= cfg.train.max_dense_steps;
                 if transition_should_fire(cfg.sparsity.kind, stable, min_ok, forced) {
-                    let gen = generate_masks_for_with(&self.exec, cfg, &scores)?;
+                    // The dense→sparse flip shows up in trace exports as a
+                    // transition_step span wrapping the pattern generation.
+                    let _tr = crate::obs::span(crate::obs::SpanId::TransitionStep);
+                    let gen = {
+                        let _pg = crate::obs::span(crate::obs::SpanId::PatternGen);
+                        generate_masks_for_with(&self.exec, cfg, &scores)?
+                    };
                     metrics.transition_step = Some(step);
                     metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
                     self.log(&format!(
@@ -304,12 +316,14 @@ mod tests {
             classes: 10,
             batch: 4,
         };
-        let mut train = TrainConfig::default();
-        train.steps = steps;
-        train.lr = 0.02;
-        train.min_dense_steps = 4;
-        train.max_dense_steps = 8;
-        train.snapshot_every = 2;
+        let train = TrainConfig {
+            steps,
+            lr: 0.02,
+            min_dense_steps: 4,
+            max_dense_steps: 8,
+            snapshot_every: 2,
+            ..Default::default()
+        };
         let mut sparsity = SparsityConfig::new(kind, 8, 0.7);
         sparsity.pattern.filter = 3;
         ExperimentConfig {
@@ -319,6 +333,7 @@ mod tests {
             sparsity,
             exec: crate::exec::ExecConfig::with_workers(workers),
             serve: Default::default(),
+            obs: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

@@ -381,6 +381,7 @@ mod tests {
             sparsity: SparsityConfig::new(kind, 16, 0.9),
             exec: Default::default(),
             serve: Default::default(),
+            obs: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

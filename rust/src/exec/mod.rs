@@ -138,6 +138,24 @@ impl Exec {
         Exec { stage: Stage::Bwd, ..self.clone() }
     }
 
+    /// A fresh context over `cfg` that *shares* this context's tally
+    /// storage, so op counts from work dispatched on the new pool still
+    /// aggregate with the original (the serve engine's `kernel_workers > 1`
+    /// path uses this to keep `/metrics` op tallies whole). Worker ids from
+    /// the new pool alias slots of the original — totals stay exact because
+    /// slots are atomic.
+    pub fn with_shared_tally(&self, cfg: ExecConfig) -> Exec {
+        let workers = cfg.resolved_workers();
+        let pool = if workers > 1 { Some(Arc::new(ThreadPool::new(workers))) } else { None };
+        Exec { pool, cfg, tally: self.tally.clone(), stage: self.stage }
+    }
+
+    /// The shared tally storage behind this context (exposition only —
+    /// kernels go through [`Exec::tally`]).
+    pub fn op_tally(&self) -> Arc<OpTally> {
+        self.tally.clone()
+    }
+
     /// The stage this handle tallies into.
     pub fn stage(&self) -> Stage {
         self.stage

@@ -24,3 +24,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod serve;
 pub mod metrics;
+pub mod obs;

@@ -60,7 +60,13 @@ fn print_help() {
          \x20 --deterministic B  worker-count-independent reduction order (default true)\n\
          \x20 --fused B          fused per-block-row attention pipeline (default true)\n\
          \x20 --simd B           8-lane SIMD microkernels inside the fused paths (default true)\n\
-         \x20 --fused-bwd B      fused two-sweep backward for sparse training (default true)\n"
+         \x20 --fused-bwd B      fused two-sweep backward for sparse training (default true)\n\n\
+         OBSERVABILITY (train + serve; `[obs]` in TOML):\n\
+         \x20 --obs B            arm the span registry (default true; false = single-load no-op)\n\
+         \x20 --metrics-addr A   serve: Prometheus /metrics + /healthz on host:port (:0 = ephemeral)\n\
+         \x20 --trace-out PATH   dump a chrome://tracing JSON of the run on exit\n\
+         \x20 --trace-capacity N max events in the trace ring (default 65536)\n\
+         \x20 --hold-ms N        serve: keep engine + /metrics alive N ms after the workload\n"
     );
 }
 
@@ -107,6 +113,17 @@ fn exec_from_args(args: &Args) -> ExecConfig {
     exec_from_args_over(args, ExecConfig::default())
 }
 
+/// Observability config from the CLI flags over `d` (a config file's
+/// `[obs]` section, or the always-on default).
+fn obs_from_args(args: &Args, d: spion::obs::ObsConfig) -> spion::obs::ObsConfig {
+    spion::obs::ObsConfig {
+        enabled: args.bool_or("obs", d.enabled),
+        metrics_addr: args.get("metrics-addr").map(String::from).or(d.metrics_addr),
+        trace_out: args.get("trace-out").map(String::from).or(d.trace_out),
+        trace_capacity: args.usize_or("trace-capacity", d.trace_capacity),
+    }
+}
+
 /// Build an [`ExperimentConfig`] from CLI flags (or a `--config` TOML file).
 pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(path) = args.get("config") {
@@ -142,6 +159,8 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         }
         // CLI serve flags override the file's [serve] section.
         exp.serve = serve_from_args(args, exp.serve)?;
+        // …and CLI obs flags the file's [obs] section.
+        exp.obs = obs_from_args(args, exp.obs);
         return Ok(exp);
     }
     let preset_name = args.str_or("preset", "tiny");
@@ -153,20 +172,22 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     sparsity.pattern.block = args.usize_or("block", sparsity.pattern.block);
     sparsity.pattern.alpha = args.f64_or("alpha", sparsity.pattern.alpha);
     sparsity.pattern.filter = args.usize_or("filter", sparsity.pattern.filter);
-    let mut train = TrainConfig::default();
-    train.steps = args.usize_or("steps", train.steps);
-    train.lr = args.f64_or("lr", train.lr);
-    train.momentum =
-        spion::config::types::validate_momentum(args.f64_or("momentum", train.momentum))
-            .map_err(|e| anyhow::anyhow!(e))?;
+    let d = TrainConfig::default();
+    let mut train = TrainConfig {
+        steps: args.usize_or("steps", d.steps),
+        lr: args.f64_or("lr", d.lr),
+        momentum: spion::config::types::validate_momentum(args.f64_or("momentum", d.momentum))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        seed: args.u64_or("seed", d.seed),
+        max_dense_steps: args.usize_or("max-dense-steps", d.max_dense_steps),
+        min_dense_steps: args.usize_or("min-dense-steps", d.min_dense_steps),
+        transition_threshold: args.f64_or("transition-threshold", d.transition_threshold),
+        ..d
+    };
     if let Some(b) = args.get("backend") {
         train.backend = TrainBackend::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown --backend {b} (native|pjrt)"))?;
     }
-    train.seed = args.u64_or("seed", train.seed);
-    train.max_dense_steps = args.usize_or("max-dense-steps", train.max_dense_steps);
-    train.min_dense_steps = args.usize_or("min-dense-steps", train.min_dense_steps);
-    train.transition_threshold = args.f64_or("transition-threshold", train.transition_threshold);
     Ok(ExperimentConfig {
         task,
         model,
@@ -174,12 +195,15 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         sparsity,
         exec: exec_from_args(args),
         serve: serve_from_args(args, Default::default())?,
+        obs: obs_from_args(args, Default::default()),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     })
 }
 
 fn run_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
+    let obs_cfg = exp.obs.clone();
+    spion::obs::init(&obs_cfg);
     println!(
         "training preset={} task={:?} kind={} backend={} steps={} (L={}, D={}, H={}, N={}, workers={})",
         exp.model.preset,
@@ -193,7 +217,7 @@ fn run_train(args: &Args) -> Result<()> {
         exp.model.layers,
         exp.exec.resolved_workers()
     );
-    match exp.train.backend {
+    let result = match exp.train.backend {
         TrainBackend::Native => {
             // Fully offline: no artifacts directory, no PJRT — the rust
             // full-encoder engine runs all three phases.
@@ -207,7 +231,12 @@ fn run_train(args: &Args) -> Result<()> {
             let outcome = trainer.run()?;
             report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
         }
+    };
+    if let Some(path) = &obs_cfg.trace_out {
+        spion::obs::trace::write(path)?;
+        println!("trace written to {path}");
     }
+    result
 }
 
 /// Shared tail of `run_train`: metrics CSV, checkpoint, summary line.
@@ -324,6 +353,11 @@ fn run_serve(args: &Args) -> Result<()> {
         .get("config")
         .map(|p| spion::config::types::load_experiment(p).map_err(|e| anyhow::anyhow!(e)))
         .transpose()?;
+    // [obs] from --config, flags override; armed before the encoder is
+    // built so every span of the run records.
+    let ocfg =
+        obs_from_args(args, file_exp.as_ref().map(|e| e.obs.clone()).unwrap_or_default());
+    spion::obs::init(&ocfg);
     let (task, model) = if let Some(name) = args.get("preset") {
         preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?
     } else if let Some(exp) = &file_exp {
@@ -371,6 +405,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 sparsity: SparsityConfig::for_model(kind, task, &model),
                 exec: ecfg,
                 serve: Default::default(),
+                obs: Default::default(),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);
@@ -403,6 +438,22 @@ fn run_serve(args: &Args) -> Result<()> {
         if kcfg.fused && kcfg.simd { "+simd" } else { "" },
     );
     let engine = std::sync::Arc::new(Engine::start(encoder, scfg)?);
+    // /metrics endpoint: scrapes read atomics only, never the workers.
+    let metrics_srv = match &ocfg.metrics_addr {
+        Some(addr) => {
+            let srv = spion::obs::http::MetricsServer::start(
+                addr,
+                spion::obs::prom::Sources {
+                    server: Some(engine.stats().clone()),
+                    ops: Some(engine.op_tally()),
+                },
+            )?;
+            // Tests and scripts parse this line to find an ephemeral port.
+            println!("metrics listening on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
     // Drive a synthetic workload through concurrent submitters: each
     // thread queues its whole chunk first (blocking only on admission
     // space — backpressure, not latency), then waits the tickets.
@@ -435,7 +486,28 @@ fn run_serve(args: &Args) -> Result<()> {
         stats.shed.load(std::sync::atomic::Ordering::Relaxed),
         stats.queue_peak.load(std::sync::atomic::Ordering::Relaxed),
     );
+    let lat = stats.latency_histogram.snapshot();
+    let wait = stats.queue_wait_histogram.snapshot();
+    println!(
+        "latency p50 {:.2} ms | p90 {:.2} ms | p99 {:.2} ms | queue wait p99 {:.2} ms",
+        lat.percentile(0.50) as f64 / 1e6,
+        lat.percentile(0.90) as f64 / 1e6,
+        lat.percentile(0.99) as f64 / 1e6,
+        wait.percentile(0.99) as f64 / 1e6,
+    );
+    // --hold-ms keeps the engine + metrics endpoint alive after the
+    // synthetic workload, giving scrapers a deterministic window.
+    let hold_ms = args.u64_or("hold-ms", 0);
+    if hold_ms > 0 {
+        println!("holding for {hold_ms} ms");
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
     engine.shutdown();
+    drop(metrics_srv);
+    if let Some(path) = &ocfg.trace_out {
+        spion::obs::trace::write(path)?;
+        println!("trace written to {path}");
+    }
     Ok(())
 }
 

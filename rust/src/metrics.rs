@@ -92,6 +92,10 @@ impl TrainMetrics {
                 Json::arr_f32(&self.records.iter().map(|r| r.loss).collect::<Vec<_>>()),
             ),
             (
+                "acc",
+                Json::arr_f32(&self.records.iter().map(|r| r.acc).collect::<Vec<_>>()),
+            ),
+            (
                 "step_ms",
                 Json::arr_f64(&self.records.iter().map(|r| r.step_ms).collect::<Vec<_>>()),
             ),
@@ -159,11 +163,20 @@ mod tests {
 
     #[test]
     fn json_shape() {
-        let mut m = TrainMetrics::default();
-        m.transition_step = Some(5);
-        m.pattern_density = vec![0.1, 0.2];
+        let mut m = TrainMetrics {
+            transition_step: Some(5),
+            pattern_density: vec![0.1, 0.2],
+            ..Default::default()
+        };
+        m.record(StepRecord { step: 0, phase: Phase::Dense, loss: 2.0, acc: 0.125, step_ms: 10.0 });
+        m.record(StepRecord { step: 1, phase: Phase::Sparse, loss: 1.5, acc: 0.25, step_ms: 4.0 });
         let j = m.to_json();
         assert_eq!(j.get("transition_step").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("pattern_density").unwrap().as_arr().unwrap().len(), 2);
+        // JSON carries the same per-step series as the CSV — including the
+        // acc column, which used to be CSV-only.
+        assert_eq!(j.get("acc").unwrap().as_f32_vec().unwrap(), vec![0.125f32, 0.25]);
+        assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("step_ms").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -299,11 +299,14 @@ pub fn train_step_sample(
 
     // ---- forward ----
     let mut e = Mat::zeros(l, d);
-    for (i, &t) in tokens.iter().enumerate() {
-        let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
-        let prow = p.pos.row(i);
-        for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
-            *o = a + b;
+    {
+        let _sp = crate::obs::span(crate::obs::SpanId::Embed);
+        for (i, &t) in tokens.iter().enumerate() {
+            let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
+            let prow = p.pos.row(i);
+            for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
+                *o = a + b;
+            }
         }
     }
     let mut scores_out: Option<Vec<Mat>> =
@@ -317,6 +320,7 @@ pub fn train_step_sample(
         let mut a = Mat::zeros(l, d);
         let attn = match masks {
             None => {
+                let _sp = crate::obs::span(crate::obs::SpanId::DenseAttnFwd);
                 let mut probs = Vec::with_capacity(heads);
                 let mut avg = scores_out.is_some().then(|| Mat::zeros(l, l));
                 for h in 0..heads {
@@ -446,6 +450,7 @@ pub fn train_step_sample(
         let mut dq = Mat::zeros(l, d);
         let mut dk = Mat::zeros(l, d);
         let mut dv = Mat::zeros(l, d);
+        let attn_bwd_span = crate::obs::span(crate::obs::SpanId::AttnBwd);
         match attn {
             AttnCache::Dense(probs) => {
                 for (h, w) in probs.iter().enumerate() {
@@ -482,6 +487,7 @@ pub fn train_step_sample(
                 }
             }
         }
+        drop(attn_bwd_span);
 
         // Projections: q/k/v = x·W.
         lg.wq.add_assign(&x.matmul_tn(&dq));

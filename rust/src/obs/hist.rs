@@ -1,0 +1,341 @@
+//! Log-linear (HDR-style) latency histograms: lock-free record, merge-on-read.
+//!
+//! The value domain is nanoseconds (any u64 works). Buckets follow the
+//! HdrHistogram idea at 2 significant bits: values below 16 get exact unit
+//! buckets, and every power-of-two octave above that splits into 4
+//! sub-buckets, so the quantization error of a reported percentile is at
+//! most 25% of the value (exact below 16 ns). 16 linear + 60 octaves × 4
+//! sub-buckets = 256 buckets cover the whole u64 range with no saturation.
+//!
+//! Concurrency mirrors [`crate::exec::counters::OpTally`]: a fixed array of
+//! cache-line-aligned slots, one per pool worker (wrapped), so concurrent
+//! `record` calls from different workers never contend on a line. Reads
+//! merge all slots into a [`HistSnapshot`]; because every counter is a sum
+//! of relaxed `fetch_add`s, the merged snapshot is deterministic for a given
+//! multiset of recorded values regardless of worker count or interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Total bucket count: 16 exact linear + 60 octaves × 4 sub-buckets.
+pub const N_BUCKETS: usize = 256;
+const LINEAR: u64 = 16;
+
+/// Per-worker slots. Pool workers map to slots `1..N_SLOTS` (wrapped);
+/// threads outside the pool (main, serve router, HTTP) share slot 0.
+pub const N_SLOTS: usize = 9;
+
+/// Bucket index for a value; monotone non-decreasing in `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize; // ≥ 4 since v ≥ 16
+        16 + (msb - 4) * 4 + ((v >> (msb - 2)) & 3) as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` — the value percentiles report.
+pub fn bucket_lower(i: usize) -> u64 {
+    debug_assert!(i < N_BUCKETS);
+    if i < LINEAR as usize {
+        i as u64
+    } else {
+        let msb = (i - 16) / 4 + 4;
+        let sub = ((i - 16) % 4) as u64;
+        (1u64 << msb) + (sub << (msb - 2))
+    }
+}
+
+/// Inclusive upper bound of bucket `i`.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 < N_BUCKETS {
+        bucket_lower(i + 1) - 1
+    } else {
+        u64::MAX
+    }
+}
+
+#[repr(align(64))]
+struct Slot {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Slot {
+    const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Slot { count: Z, sum: Z, max: Z, buckets: [Z; N_BUCKETS] }
+    }
+}
+
+/// A concurrent histogram. `const`-constructible so span registries can live
+/// in static storage with zero startup cost and zero heap allocation.
+pub struct Hist {
+    slots: [Slot; N_SLOTS],
+}
+
+impl Hist {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const S: Slot = Slot::new();
+        Hist { slots: [S; N_SLOTS] }
+    }
+
+    #[inline]
+    fn slot(&self) -> &Slot {
+        let id = crate::exec::pool::current_worker().map_or(0, |w| 1 + w % (N_SLOTS - 1));
+        &self.slots[id]
+    }
+
+    /// Record one value. Lock-free, allocation-free: four relaxed atomic RMWs
+    /// on a cache line owned by the calling worker.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let s = self.slot();
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
+        s.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Merge all worker slots into an owned snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for s in &self.slots {
+            out.count += s.count.load(Ordering::Relaxed);
+            out.sum += s.sum.load(Ordering::Relaxed);
+            out.max = out.max.max(s.max.load(Ordering::Relaxed));
+            for (o, b) in out.buckets.iter_mut().zip(&s.buckets) {
+                *o += b.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
+    /// Zero every slot (tests and epoch boundaries; not linearizable against
+    /// concurrent recorders).
+    pub fn reset(&self) {
+        for s in &self.slots {
+            s.count.store(0, Ordering::Relaxed);
+            s.sum.store(0, Ordering::Relaxed);
+            s.max.store(0, Ordering::Relaxed);
+            for b in &s.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("Hist")
+            .field("count", &s.count)
+            .field("sum", &s.sum)
+            .field("max", &s.max)
+            .finish()
+    }
+}
+
+/// A merged, immutable view of a [`Hist`].
+#[derive(Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; N_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Value at quantile `q` ∈ [0, 1]: the lower bound of the bucket holding
+    /// the rank-`⌈q·count⌉` value, clipped by the exact max. Returns 0 for an
+    /// empty histogram. Monotone non-decreasing in `q`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_lower(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Count of recorded values whose *bucket* lies entirely at or below
+    /// `bound` — a conservative (never over-counting) cumulative count used
+    /// for Prometheus `le` buckets.
+    pub fn cumulative_le(&self, bound: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if bucket_upper(i) <= bound {
+                cum += c;
+            } else {
+                break;
+            }
+        }
+        cum
+    }
+}
+
+impl std::fmt::Debug for HistSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HistSnapshot")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("max", &self.max)
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Exec, ExecConfig};
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        // Linear zone is exact.
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lower(v as usize), v);
+        }
+        // Every bucket's own bounds map back to it.
+        for i in 0..N_BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i, "lower of bucket {i}");
+            assert_eq!(bucket_index(bucket_upper(i)), i, "upper of bucket {i}");
+        }
+        // Octave starts land on exact powers of two.
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 19);
+        assert_eq!(bucket_index(32), 20);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        // ≤ 25% relative quantization error above the linear zone.
+        for &v in &[100u64, 1_000, 123_456, 7_890_123, u64::MAX / 3] {
+            let i = bucket_index(v);
+            let lo = bucket_lower(i);
+            assert!(lo <= v && v <= bucket_upper(i));
+            assert!((v - lo) * 4 <= v, "err {} for v {v}", v - lo);
+        }
+    }
+
+    #[test]
+    fn single_value_percentile_is_exact_or_clipped() {
+        for &v in &[0u64, 1, 7, 15, 16, 100, 5_000_000] {
+            let h = Hist::new();
+            h.record(v);
+            let s = h.snapshot();
+            assert_eq!(s.count, 1);
+            assert_eq!(s.max, v);
+            let p = s.percentile(0.5);
+            assert!(p <= v && (v == 0 || (v - p) * 4 <= v), "p {p} v {v}");
+            if v < 16 {
+                assert_eq!(p, v);
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let h = Hist::new();
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..10_000 {
+            h.record((rng.below(1_000_000) as u64).pow(2) % 10_000_000);
+        }
+        let s = h.snapshot();
+        let mut prev = 0u64;
+        for q in 0..=100 {
+            let p = s.percentile(q as f64 / 100.0);
+            assert!(p >= prev, "p({q}) = {p} < {prev}");
+            prev = p;
+        }
+        assert!(prev <= s.max);
+        assert!(s.percentile(1.0) <= s.max);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let s = Hist::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile(0.5), 0);
+        assert_eq!(s.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn cumulative_le_is_monotone_and_conservative() {
+        let h = Hist::new();
+        for v in [1u64, 10, 100, 1_000, 10_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let mut prev = 0;
+        for bound in [0u64, 1, 15, 1_000, 1_000_000, u64::MAX] {
+            let c = s.cumulative_le(bound);
+            assert!(c >= prev);
+            prev = c;
+        }
+        assert_eq!(s.cumulative_le(u64::MAX), s.count);
+        // Conservative: never counts a value above the bound.
+        assert!(s.cumulative_le(9) <= 1); // only v=1 can be ≤ 9 for sure
+    }
+
+    #[test]
+    fn concurrent_record_then_merge_is_deterministic() {
+        // The same multiset of values recorded under 1, 2 and 4 workers must
+        // merge to bit-identical snapshots (sums are commutative).
+        let values: Vec<u64> = (0..4096).map(|i| (i as u64 * 2654435761) % 50_000_000).collect();
+        let mut snaps = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let exec = Exec::new(ExecConfig { workers, ..ExecConfig::default() });
+            let h = Hist::new();
+            let vals = &values;
+            let href = &h;
+            exec.par_for_chunks(vals.len(), |range| {
+                for i in range {
+                    href.record(vals[i]);
+                }
+            });
+            snaps.push(h.snapshot());
+        }
+        assert_eq!(snaps[0], snaps[1]);
+        assert_eq!(snaps[1], snaps[2]);
+        assert_eq!(snaps[0].count, values.len() as u64);
+        assert_eq!(snaps[0].sum, values.iter().sum::<u64>());
+        assert_eq!(snaps[0].max, *values.iter().max().unwrap());
+    }
+}

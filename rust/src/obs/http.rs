@@ -1,0 +1,123 @@
+//! Minimal HTTP/1.0 metrics endpoint over `std::net::TcpListener`.
+//!
+//! One dedicated thread, non-blocking accept with a 5 ms poll so `stop()`
+//! joins promptly; each connection is handled inline (scrapes are rare and
+//! the render is cheap), answering `GET /metrics` and `GET /healthz` and
+//! closing. Inference workers are never involved: the render only does
+//! merge-on-read snapshots of atomics.
+//!
+//! Binding `host:0` picks an ephemeral port; `addr()` reports the real one
+//! (and `spion serve` prints it) so tests can connect deterministically.
+
+use super::prom::{render, Sources};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn start(addr: &str, sources: Sources) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("spion-metrics".into())
+            .spawn(move || accept_loop(listener, sources, stop_flag))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, sources: Sources, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // A misbehaving client can only stall this thread for the
+                // 2 s socket timeout, never the serving engine.
+                let _ = handle_conn(stream, &sources);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, sources: &Sources) -> std::io::Result<()> {
+    // Accepted sockets inherit non-blocking on some platforms; force the
+    // blocking + timeout mode we want.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+
+    let mut buf = [0u8; 4096];
+    let mut n = 0;
+    loop {
+        if n == buf.len() {
+            break;
+        }
+        let r = stream.read(&mut buf[n..])?;
+        if r == 0 {
+            break;
+        }
+        n += r;
+        let seen = &buf[..n];
+        if seen.windows(4).any(|w| w == b"\r\n\r\n") || seen.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+    }
+
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = req.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" => ("200 OK", "text/plain; version=0.0.4", render(sources)),
+            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        }
+    };
+
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

@@ -1,0 +1,228 @@
+//! obs — dependency-free observability: spans, histograms, /metrics, traces.
+//!
+//! Four pieces, layered so the hot path never pays for the cold one:
+//!
+//! * [`hist`] — lock-free log-linear latency histograms (per-worker slots in
+//!   the style of [`crate::exec::counters`], merge-on-read).
+//! * spans (this module) — RAII scoped timers over a **fixed static
+//!   registry** of pipeline stages. `obs::span(SpanId::SddmmFwd)` costs one
+//!   relaxed load when disabled and one `Instant::now` + four relaxed RMWs
+//!   when enabled; no allocation either way, so the zero-allocation sparse
+//!   phase witness stays valid with spans armed.
+//! * [`prom`] + [`http`] — Prometheus-text exposition of spans, ServerStats
+//!   and op tallies over a minimal `TcpListener` HTTP/1.0 endpoint.
+//! * [`trace`] — opt-in bounded event ring dumped as chrome://tracing JSON.
+//!
+//! Spans never touch model data, so enabling or disabling them cannot change
+//! any computed bit (the fused/unfused parity suites run with the default
+//! enabled state).
+
+pub mod hist;
+pub mod http;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// The fixed stage registry. Train stages cover one optimizer step end to
+/// end; serve stages cover one request from admission to ticket resolve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum SpanId {
+    // ---- train ----
+    Embed,
+    DenseAttnFwd,
+    SparseAttnFwd,
+    SddmmFwd,
+    SoftmaxFwd,
+    SpmmFwd,
+    FusedAttnFwd,
+    AttnBwd,
+    FusedBwdRowSweep,
+    FusedBwdColSweep,
+    UnfusedAttnBwd,
+    GradFold,
+    Optimizer,
+    TrainStep,
+    TransitionStep,
+    PatternGen,
+    // ---- serve ----
+    Admission,
+    QueueWait,
+    BatchAssembly,
+    EncoderFwd,
+    TicketResolve,
+    Request,
+}
+
+pub const N_SPANS: usize = 22;
+
+pub const ALL_SPANS: [SpanId; N_SPANS] = [
+    SpanId::Embed,
+    SpanId::DenseAttnFwd,
+    SpanId::SparseAttnFwd,
+    SpanId::SddmmFwd,
+    SpanId::SoftmaxFwd,
+    SpanId::SpmmFwd,
+    SpanId::FusedAttnFwd,
+    SpanId::AttnBwd,
+    SpanId::FusedBwdRowSweep,
+    SpanId::FusedBwdColSweep,
+    SpanId::UnfusedAttnBwd,
+    SpanId::GradFold,
+    SpanId::Optimizer,
+    SpanId::TrainStep,
+    SpanId::TransitionStep,
+    SpanId::PatternGen,
+    SpanId::Admission,
+    SpanId::QueueWait,
+    SpanId::BatchAssembly,
+    SpanId::EncoderFwd,
+    SpanId::TicketResolve,
+    SpanId::Request,
+];
+
+impl SpanId {
+    pub const fn name(self) -> &'static str {
+        match self {
+            SpanId::Embed => "embed",
+            SpanId::DenseAttnFwd => "dense_attn_fwd",
+            SpanId::SparseAttnFwd => "sparse_attn_fwd",
+            SpanId::SddmmFwd => "sddmm_fwd",
+            SpanId::SoftmaxFwd => "softmax_fwd",
+            SpanId::SpmmFwd => "spmm_fwd",
+            SpanId::FusedAttnFwd => "fused_attn_fwd",
+            SpanId::AttnBwd => "attn_bwd",
+            SpanId::FusedBwdRowSweep => "fused_bwd_row_sweep",
+            SpanId::FusedBwdColSweep => "fused_bwd_col_sweep",
+            SpanId::UnfusedAttnBwd => "unfused_attn_bwd",
+            SpanId::GradFold => "grad_fold",
+            SpanId::Optimizer => "optimizer",
+            SpanId::TrainStep => "train_step",
+            SpanId::TransitionStep => "transition_step",
+            SpanId::PatternGen => "pattern_gen",
+            SpanId::Admission => "admission",
+            SpanId::QueueWait => "queue_wait",
+            SpanId::BatchAssembly => "batch_assembly",
+            SpanId::EncoderFwd => "encoder_fwd",
+            SpanId::TicketResolve => "ticket_resolve",
+            SpanId::Request => "request",
+        }
+    }
+
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<SpanId> {
+        ALL_SPANS.get(i).copied()
+    }
+}
+
+// One histogram per stage, in static storage: no heap, no init order, and a
+// `record` from any thread at any time is valid.
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_HIST: Hist = Hist::new();
+static REGISTRY: [Hist; N_SPANS] = [EMPTY_HIST; N_SPANS];
+
+/// Spans are always-on by default; `[obs] enabled = false` or `--obs false`
+/// reduces `span()` to a single relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The live histogram backing a stage.
+pub fn stage_hist(id: SpanId) -> &'static Hist {
+    &REGISTRY[id.index()]
+}
+
+/// Merged snapshot of one stage's histogram.
+pub fn snapshot(id: SpanId) -> HistSnapshot {
+    REGISTRY[id.index()].snapshot()
+}
+
+/// Zero every stage histogram (tests only; not linearizable against
+/// concurrent recorders).
+pub fn reset_all() {
+    for h in &REGISTRY {
+        h.reset();
+    }
+}
+
+/// Start a scoped timer for `id`; the elapsed time records on drop.
+#[inline]
+#[must_use = "the span records on drop — bind it (`let _sp = obs::span(..)`)"]
+pub fn span(id: SpanId) -> SpanGuard {
+    let start = if ENABLED.load(Ordering::Relaxed) { Some(Instant::now()) } else { None };
+    SpanGuard { id, start }
+}
+
+/// Record an externally measured duration (queue wait, request e2e) under a
+/// stage without a guard.
+#[inline]
+pub fn record(id: SpanId, d: Duration) {
+    if ENABLED.load(Ordering::Relaxed) {
+        REGISTRY[id.index()].record_duration(d);
+    }
+}
+
+pub struct SpanGuard {
+    id: SpanId,
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur = start.elapsed();
+            REGISTRY[self.id.index()].record_duration(dur);
+            if trace::active() {
+                trace::record_event(self.id, start, dur);
+            }
+        }
+    }
+}
+
+/// `[obs]` config section (also driven by `--obs`, `--metrics-addr`,
+/// `--trace-out`, `--trace-capacity`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Arm the span registry (default true — "always-on").
+    pub enabled: bool,
+    /// `host:port` for the /metrics endpoint; `None` = no listener.
+    pub metrics_addr: Option<String>,
+    /// Path for a chrome://tracing JSON dump; `None` = tracing off.
+    pub trace_out: Option<String>,
+    /// Max events the trace ring holds (fill-once; later events are dropped
+    /// and counted).
+    pub trace_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            metrics_addr: None,
+            trace_out: None,
+            trace_capacity: trace::DEFAULT_CAPACITY,
+        }
+    }
+}
+
+/// Apply a config: set the enable flag and arm the trace ring if requested.
+pub fn init(cfg: &ObsConfig) {
+    set_enabled(cfg.enabled);
+    if cfg.trace_out.is_some() {
+        trace::enable(cfg.trace_capacity);
+    }
+}

@@ -1,0 +1,207 @@
+//! Prometheus text-format (0.0.4) renderer over spans, serve stats and op
+//! tallies. Pure string building — the only cost of a scrape is the
+//! merge-on-read snapshots, so the inference workers never see it.
+//!
+//! Span latencies are exposed twice, because the two consumers want
+//! different shapes:
+//!
+//! * `spion_span_seconds{stage,quantile}` — a summary with explicit
+//!   p50/p90/p99 lines (plus `_sum`/`_count`), so tail latency is readable
+//!   straight off a curl without PromQL.
+//! * `spion_span_duration_seconds_bucket{stage,le}` — a coarse cumulative
+//!   histogram (decade boundaries 1µs…10s) for `histogram_quantile` users.
+//!   Bucket counts are conservative: a fine bucket only contributes to an
+//!   `le` bound that its entire range fits under, so counts are monotone in
+//!   `le` and never overstate.
+
+use super::hist::HistSnapshot;
+use super::{SpanId, ALL_SPANS};
+use crate::exec::OpTally;
+use crate::serve::ServerStats;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// What a metrics endpoint exposes besides the global span registry.
+#[derive(Default, Clone)]
+pub struct Sources {
+    pub server: Option<Arc<ServerStats>>,
+    pub ops: Option<Arc<OpTally>>,
+}
+
+const QUANTILES: [(f64, &str); 3] = [(0.50, "0.5"), (0.90, "0.9"), (0.99, "0.99")];
+
+/// (`le` label, bound in ns). Decade boundaries from 1µs to 10s.
+const LE_BOUNDS: [(&str, u64); 8] = [
+    ("1e-06", 1_000),
+    ("1e-05", 10_000),
+    ("0.0001", 100_000),
+    ("0.001", 1_000_000),
+    ("0.01", 10_000_000),
+    ("0.1", 100_000_000),
+    ("1", 1_000_000_000),
+    ("10", 10_000_000_000),
+];
+
+fn secs(ns: u64) -> f64 {
+    ns as f64 * 1e-9
+}
+
+fn help_line(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Emit a summary family body for one snapshot. `labels` is either empty or
+/// `key="value"` pairs without braces.
+fn emit_summary(out: &mut String, name: &str, labels: &str, s: &HistSnapshot) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    for (q, qs) in QUANTILES {
+        let _ = writeln!(
+            out,
+            "{name}{{{labels}{sep}quantile=\"{qs}\"}} {}",
+            secs(s.percentile(q))
+        );
+    }
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", secs(s.sum));
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", s.count);
+}
+
+/// Render the full exposition.
+pub fn render(sources: &Sources) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    help_line(&mut out, "spion_obs_enabled", "gauge", "1 when the span registry is armed.");
+    let _ = writeln!(out, "spion_obs_enabled {}", u8::from(super::enabled()));
+
+    // Snapshot every stage once; skip never-hit stages to keep the page
+    // readable (their absence is itself informative).
+    let snaps: Vec<(SpanId, HistSnapshot)> =
+        ALL_SPANS.iter().map(|&id| (id, super::snapshot(id))).collect();
+
+    help_line(
+        &mut out,
+        "spion_span_seconds",
+        "summary",
+        "Per-stage span latency (merged over worker slots).",
+    );
+    for (id, s) in &snaps {
+        if s.count == 0 {
+            continue;
+        }
+        emit_summary(&mut out, "spion_span_seconds", &format!("stage=\"{}\"", id.name()), s);
+    }
+
+    help_line(&mut out, "spion_span_max_seconds", "gauge", "Per-stage max span latency.");
+    for (id, s) in &snaps {
+        if s.count == 0 {
+            continue;
+        }
+        let _ = writeln!(out, "spion_span_max_seconds{{stage=\"{}\"}} {}", id.name(), secs(s.max));
+    }
+
+    help_line(
+        &mut out,
+        "spion_span_duration_seconds",
+        "histogram",
+        "Per-stage span latency, coarse cumulative buckets.",
+    );
+    for (id, s) in &snaps {
+        if s.count == 0 {
+            continue;
+        }
+        let stage = id.name();
+        for (le, bound) in LE_BOUNDS {
+            let _ = writeln!(
+                out,
+                "spion_span_duration_seconds_bucket{{stage=\"{stage}\",le=\"{le}\"}} {}",
+                s.cumulative_le(bound)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "spion_span_duration_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {}",
+            s.count
+        );
+        let _ = writeln!(out, "spion_span_duration_seconds_sum{{stage=\"{stage}\"}} {}", secs(s.sum));
+        let _ = writeln!(out, "spion_span_duration_seconds_count{{stage=\"{stage}\"}} {}", s.count);
+    }
+
+    if let Some(stats) = &sources.server {
+        let counters: [(&str, u64, &str); 5] = [
+            ("served", stats.served.load(Ordering::Relaxed), "Requests served to completion."),
+            ("batches", stats.batches.load(Ordering::Relaxed), "Batches executed."),
+            ("admitted", stats.admitted.load(Ordering::Relaxed), "Requests admitted."),
+            ("rejected", stats.rejected.load(Ordering::Relaxed), "Requests rejected at admission."),
+            ("shed", stats.shed.load(Ordering::Relaxed), "Admitted requests shed at shutdown."),
+        ];
+        for (name, v, help) in counters {
+            let full = format!("spion_serve_{name}_total");
+            help_line(&mut out, &full, "counter", help);
+            let _ = writeln!(out, "{full} {v}");
+        }
+        help_line(&mut out, "spion_serve_queue_depth", "gauge", "Current admission queue depth.");
+        let _ = writeln!(out, "spion_serve_queue_depth {}", stats.queue_depth.load(Ordering::Relaxed));
+        help_line(&mut out, "spion_serve_queue_peak", "gauge", "Peak admission queue depth.");
+        let _ = writeln!(out, "spion_serve_queue_peak {}", stats.queue_peak.load(Ordering::Relaxed));
+        help_line(&mut out, "spion_serve_rejection_rate", "gauge", "rejected / offered.");
+        let _ = writeln!(out, "spion_serve_rejection_rate {}", stats.rejection_rate());
+
+        help_line(
+            &mut out,
+            "spion_request_latency_seconds",
+            "summary",
+            "End-to-end request latency, admission to resolve.",
+        );
+        emit_summary(&mut out, "spion_request_latency_seconds", "", &stats.latency_histogram.snapshot());
+
+        help_line(
+            &mut out,
+            "spion_queue_wait_seconds",
+            "summary",
+            "Time from admission to batch dispatch.",
+        );
+        emit_summary(&mut out, "spion_queue_wait_seconds", "", &stats.queue_wait_histogram.snapshot());
+    }
+
+    if let Some(tally) = &sources.ops {
+        let ops = tally.snapshot();
+        help_line(&mut out, "spion_ops_total", "counter", "Kernel op tallies by op and stage.");
+        let rows: [(&str, &str, u64); 6] = [
+            ("mul_add", "fwd", ops.mul_add),
+            ("exp", "fwd", ops.exp),
+            ("cmp", "fwd", ops.cmp),
+            ("mul_add", "bwd", ops.bwd_mul_add),
+            ("exp", "bwd", ops.bwd_exp),
+            ("cmp", "bwd", ops.bwd_cmp),
+        ];
+        for (op, stage, v) in rows {
+            let _ = writeln!(out, "spion_ops_total{{op=\"{op}\",stage=\"{stage}\"}} {v}");
+        }
+    }
+
+    let (captured, dropped) = super::trace::stats();
+    help_line(&mut out, "spion_trace_events_captured", "gauge", "Events held in the trace ring.");
+    let _ = writeln!(out, "spion_trace_events_captured {captured}");
+    help_line(&mut out, "spion_trace_events_dropped_total", "counter", "Events dropped (ring full).");
+    let _ = writeln!(out, "spion_trace_events_dropped_total {dropped}");
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_without_sources_is_parseable() {
+        let text = render(&Sources::default());
+        assert!(text.contains("spion_obs_enabled"));
+        // Every sample line is `name{labels} value` with a finite value.
+        for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("sample line");
+            let v: f64 = val.parse().expect("numeric value");
+            assert!(v.is_finite(), "non-finite sample: {line}");
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Opt-in bounded trace ring → chrome://tracing "trace event format" JSON.
+//!
+//! The ring is fill-once, not wrapping: a wrapping ring would need either a
+//! lock or a reclamation protocol to stay readable while writers run, and
+//! for flamegraph-style inspection the *first* N events of a run (one train
+//! epoch, one serve flood) are what you want anyway. Writers claim a slot
+//! with one `fetch_add`; once the ring is full further events are dropped
+//! and counted, never blocking the hot path.
+//!
+//! Events are complete-events (`"ph":"X"`) with microsecond timestamps
+//! relative to the ring's arming instant; `tid` is the pool worker id + 1
+//! (0 = a non-pool thread), so per-worker lanes line up with the kernel
+//! partitioning.
+
+use super::SpanId;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+struct EventSlot {
+    /// stage index in the low byte, worker id + 1 above it.
+    meta: AtomicU64,
+    ts_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    /// Set with Release after the payload stores; readers skip slots that
+    /// were claimed but not yet written.
+    done: AtomicBool,
+}
+
+struct Ring {
+    slots: Box<[EventSlot]>,
+    cursor: AtomicUsize,
+    dropped: AtomicU64,
+    epoch: Instant,
+}
+
+static RING: OnceLock<Ring> = OnceLock::new();
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Allocate the ring (once) and start capturing. Allocation happens here,
+/// at arm time — never on the record path.
+pub fn enable(capacity: usize) {
+    RING.get_or_init(|| Ring {
+        slots: (0..capacity.max(1))
+            .map(|_| EventSlot {
+                meta: AtomicU64::new(0),
+                ts_ns: AtomicU64::new(0),
+                dur_ns: AtomicU64::new(0),
+                done: AtomicBool::new(false),
+            })
+            .collect(),
+        cursor: AtomicUsize::new(0),
+        dropped: AtomicU64::new(0),
+        epoch: Instant::now(),
+    });
+    ACTIVE.store(true, Ordering::Release);
+}
+
+/// Stop capturing (the ring and its events stay readable).
+pub fn disable() {
+    ACTIVE.store(false, Ordering::Release);
+}
+
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// (events captured, events dropped because the ring was full).
+pub fn stats() -> (u64, u64) {
+    match RING.get() {
+        None => (0, 0),
+        Some(r) => (
+            r.cursor.load(Ordering::Relaxed).min(r.slots.len()) as u64,
+            r.dropped.load(Ordering::Relaxed),
+        ),
+    }
+}
+
+pub(super) fn record_event(id: SpanId, start: Instant, dur: Duration) {
+    let Some(ring) = RING.get() else { return };
+    let i = ring.cursor.fetch_add(1, Ordering::Relaxed);
+    if i >= ring.slots.len() {
+        ring.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let worker = crate::exec::pool::current_worker().map_or(0u64, |w| w as u64 + 1);
+    // saturating: a span may have started before the ring was armed.
+    let ts = start.saturating_duration_since(ring.epoch).as_nanos().min(u64::MAX as u128) as u64;
+    let slot = &ring.slots[i];
+    slot.meta.store(id.index() as u64 | (worker << 8), Ordering::Relaxed);
+    slot.ts_ns.store(ts, Ordering::Relaxed);
+    slot.dur_ns.store(dur.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    slot.done.store(true, Ordering::Release);
+}
+
+/// Render the captured events as a chrome://tracing JSON object.
+pub fn dump_json() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"traceEvents\":[");
+    if let Some(ring) = RING.get() {
+        let n = ring.cursor.load(Ordering::Acquire).min(ring.slots.len());
+        let mut first = true;
+        for slot in ring.slots.iter().take(n) {
+            if !slot.done.load(Ordering::Acquire) {
+                continue; // claimed but still being written
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let Some(id) = SpanId::from_index((meta & 0xff) as usize) else { continue };
+            let tid = meta >> 8;
+            let ts_us = slot.ts_ns.load(Ordering::Relaxed) as f64 / 1_000.0;
+            let dur_us = slot.dur_ns.load(Ordering::Relaxed) as f64 / 1_000.0;
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"spion\",\"ph\":\"X\",\"ts\":{ts_us:.3},\"dur\":{dur_us:.3},\"pid\":1,\"tid\":{tid}}}",
+                id.name()
+            );
+        }
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Write the trace to `path` (called once, after the run).
+pub fn write(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, dump_json())
+}

@@ -54,8 +54,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::exec::{Exec, ExecConfig, ThreadPool};
+use crate::exec::{ExecConfig, OpTally, ThreadPool};
 use crate::model::Encoder;
+use crate::obs::{self, Hist, SpanId};
 use crate::tensor::ops::argmax;
 
 use super::queue::{Bounded, TryPushError};
@@ -155,6 +156,10 @@ pub struct ServerStats {
     /// High-water mark of the admission queue (≤ configured
     /// `queue_depth` — the boundedness witness).
     pub queue_peak: AtomicU64,
+    /// End-to-end latency distribution (admission → ticket resolve), ns.
+    pub latency_histogram: Hist,
+    /// Admission → batch-dispatch wait distribution, ns.
+    pub queue_wait_histogram: Hist,
 }
 
 impl ServerStats {
@@ -197,6 +202,9 @@ struct Core {
     /// Model contract for admission-time validation.
     seq_len: usize,
     vocab: usize,
+    /// The encoder's op-tally storage (shared with every worker clone via
+    /// [`crate::exec::Exec::with_shared_tally`]) — /metrics reads it.
+    tally: Arc<OpTally>,
 }
 
 struct JoinState {
@@ -228,6 +236,7 @@ impl Engine {
             next_id: AtomicU64::new(0),
             seq_len: encoder.params().seq_len(),
             vocab: encoder.params().embed.rows,
+            tally: encoder.exec().op_tally(),
         });
 
         // Bounded batch queue: a couple of formed batches per worker. When
@@ -242,7 +251,14 @@ impl Engine {
             std::thread::Builder::new()
                 .name("spion-serve-router".into())
                 .spawn(move || {
-                    while let Some(batch) = core.admission.pop_batch(max_batch, max_wait) {
+                    loop {
+                        // Manual timing (not a span guard): a `None` from a
+                        // closed queue must not record a bogus sample.
+                        let t0 = Instant::now();
+                        let Some(batch) = core.admission.pop_batch(max_batch, max_wait) else {
+                            break;
+                        };
+                        obs::record(SpanId::BatchAssembly, t0.elapsed());
                         core.stats.note_queue_len(core.admission.len());
                         if let Err(batch) = batch_q.push(batch) {
                             // Defensive: only this thread closes batch_q,
@@ -279,7 +295,9 @@ impl Engine {
             // encoder's existing exec, typically fused SIMD) otherwise.
             let enc = if kernel_workers > 1 {
                 let kcfg = ExecConfig { workers: kernel_workers, ..encoder.exec().config() };
-                encoder.clone().with_exec(Exec::new(kcfg))
+                // Shared tally: op counts from every worker pool aggregate
+                // into the engine's single OpTally for /metrics.
+                encoder.clone().with_exec(encoder.exec().with_shared_tally(kcfg))
             } else {
                 encoder.clone()
             };
@@ -297,6 +315,11 @@ impl Engine {
 
     pub fn stats(&self) -> &Arc<ServerStats> {
         &self.core.stats
+    }
+
+    /// The engine-wide kernel op tally (all worker encoders record here).
+    pub fn op_tally(&self) -> Arc<OpTally> {
+        self.core.tally.clone()
     }
 
     /// Current admission backlog (gauge; racy by nature).
@@ -328,6 +351,7 @@ impl Engine {
     /// the ticket) or rejects with a typed error. Never waits — under
     /// overload this returns `QueueFull` immediately.
     pub fn try_submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        let _sp = obs::span(SpanId::Admission);
         self.validate(&tokens)?;
         let (sub, tk) = self.submission(tokens);
         match self.core.admission.try_push(sub) {
@@ -351,6 +375,7 @@ impl Engine {
     /// Blocking admission: waits for *queue space*, never for the result.
     /// Returns as soon as the request is queued.
     pub fn submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        let _sp = obs::span(SpanId::Admission);
         self.validate(&tokens)?;
         let (sub, tk) = self.submission(tokens);
         match self.core.admission.push(sub) {
@@ -389,13 +414,28 @@ impl Drop for Engine {
 /// queue *and* it is empty (in-flight batches complete on shutdown).
 fn serve_worker(mut enc: Encoder, batch_q: Arc<Bounded<Vec<Submission>>>, stats: Arc<ServerStats>) {
     while let Some(batch) = batch_q.pop() {
+        // Queue wait is measured once at dispatch for the whole batch, so a
+        // sub later in the batch doesn't charge its siblings' forwards to
+        // the queue.
+        let dispatched = Instant::now();
+        for sub in &batch {
+            let wait = dispatched.saturating_duration_since(sub.submitted);
+            stats.queue_wait_histogram.record_duration(wait);
+            obs::record(SpanId::QueueWait, wait);
+        }
         let bsz = batch.len();
         for sub in batch {
-            let (logits, _) = enc.forward(&sub.tokens);
+            let logits = {
+                let _sp = obs::span(SpanId::EncoderFwd);
+                enc.forward(&sub.tokens).0
+            };
             let latency = sub.submitted.elapsed();
             stats.served.fetch_add(1, Ordering::Relaxed);
             stats.total_latency_us.fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
             stats.max_latency_us.fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
+            stats.latency_histogram.record_duration(latency);
+            obs::record(SpanId::Request, latency);
+            let _sp = obs::span(SpanId::TicketResolve);
             sub.resolver.resolve(Ok(Response {
                 id: sub.id,
                 class: argmax(&logits),
@@ -540,5 +580,51 @@ mod tests {
         // The shed gauge counts exactly the backlog resolutions (worker-
         // panic fallbacks would resolve without counting, but none panic).
         assert_eq!(eng.stats().shed.load(Ordering::Relaxed), shed);
+    }
+
+    #[test]
+    fn rejection_rate_is_zero_without_traffic() {
+        // Divide-by-zero guard: 0 admitted + 0 rejected must be 0.0, not NaN.
+        let stats = ServerStats::default();
+        let r = stats.rejection_rate();
+        assert_eq!(r, 0.0);
+        assert!(r.is_finite());
+        // And all-rejected traffic stays a well-defined fraction.
+        stats.rejected.fetch_add(3, Ordering::Relaxed);
+        assert!((stats.rejection_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_histograms_populate_per_request() {
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        let tickets: Vec<_> = (0..6).map(|_| eng.try_submit(toks()).unwrap()).collect();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        eng.shutdown();
+        let lat = eng.stats().latency_histogram.snapshot();
+        let wait = eng.stats().queue_wait_histogram.snapshot();
+        assert_eq!(lat.count, 6, "one e2e latency sample per served request");
+        assert_eq!(wait.count, 6, "one queue-wait sample per dispatched request");
+        assert!(lat.max > 0);
+        assert!(lat.percentile(0.50) <= lat.percentile(0.99));
+        // The histogram agrees with the coarse µs counters on the max.
+        let max_us = eng.stats().max_latency_us.load(Ordering::Relaxed);
+        assert!(lat.max >= max_us * 1_000, "ns max {} vs µs max {}", lat.max, max_us);
+    }
+
+    #[test]
+    fn engine_exposes_shared_op_tally() {
+        // kernel_workers > 1 must still aggregate op counts into the tally
+        // the engine hands to /metrics.
+        let eng = Engine::start(
+            mk_encoder(true),
+            ServeConfig { workers: 1, kernel_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        eng.try_submit(toks()).unwrap().wait().unwrap();
+        eng.shutdown();
+        let ops = eng.op_tally().snapshot();
+        assert!(ops.mul_add > 0, "sparse forward tallied through the shared storage");
     }
 }

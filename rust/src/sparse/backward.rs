@@ -192,6 +192,7 @@ pub fn sparse_attention_backward_dispatch(
         );
         return;
     }
+    let _sp = crate::obs::span(crate::obs::SpanId::UnfusedAttnBwd);
     unfused_backward_with(exec, q, k, v, scale, s_prob, d_out, workspace, dq, dk, dv);
 }
 

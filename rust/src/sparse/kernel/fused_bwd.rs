@@ -99,6 +99,7 @@ pub fn fused_attention_backward_with(
 
     // ---- Row sweep: dW → dZ → dQ, one traversal per block row ----
     {
+        let _sp = crate::obs::span(crate::obs::SpanId::FusedBwdRowSweep);
         let row_ptr = &s_prob.row_ptr;
         let col_idx = &s_prob.col_idx;
         let w_values = &s_prob.values;
@@ -158,6 +159,7 @@ pub fn fused_attention_backward_with(
 
     // ---- Column sweep: dV + dK, one merged traversal per block column ----
     {
+        let _sp = crate::obs::span(crate::obs::SpanId::FusedBwdColSweep);
         let cols = s_prob.col_index();
         let col_ptr = &cols.col_ptr;
         let entries = &cols.entries;

@@ -275,12 +275,14 @@ fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
         classes: 10,
         batch: 4,
     };
-    let mut train = TrainConfig::default();
-    train.steps = 10;
-    train.lr = 0.02;
-    train.min_dense_steps = 4;
-    train.max_dense_steps = 8;
-    train.snapshot_every = 2;
+    let train = TrainConfig {
+        steps: 10,
+        lr: 0.02,
+        min_dense_steps: 4,
+        max_dense_steps: 8,
+        snapshot_every: 2,
+        ..Default::default()
+    };
     let mut sparsity = SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 8, 0.7);
     sparsity.pattern.filter = 3;
     ExperimentConfig {
@@ -290,6 +292,7 @@ fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
         sparsity,
         exec: ExecConfig { workers, kernel, ..Default::default() },
         serve: Default::default(),
+        obs: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -23,11 +23,13 @@ fn artifacts_available() -> bool {
 
 fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
     let (task, model) = preset("tiny").unwrap();
-    let mut train = TrainConfig::default();
-    train.steps = steps;
-    train.min_dense_steps = 6;
-    train.max_dense_steps = 12;
-    train.snapshot_every = 3;
+    let train = TrainConfig {
+        steps,
+        min_dense_steps: 6,
+        max_dense_steps: 12,
+        snapshot_every: 3,
+        ..Default::default()
+    };
     ExperimentConfig {
         task,
         model,
@@ -35,6 +37,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         sparsity: SparsityConfig::new(kind, 16, 0.9),
         exec: Default::default(),
         serve: Default::default(),
+        obs: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

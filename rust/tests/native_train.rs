@@ -125,12 +125,14 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         classes: 10,
         batch: 4,
     };
-    let mut train = TrainConfig::default();
-    train.steps = steps;
-    train.lr = 0.02; // SGD+momentum step; Adam's 1e-3 default is too timid here
-    train.min_dense_steps = 4;
-    train.max_dense_steps = 8;
-    train.snapshot_every = 2;
+    let train = TrainConfig {
+        steps,
+        lr: 0.02, // SGD+momentum step; Adam's 1e-3 default is too timid here
+        min_dense_steps: 4,
+        max_dense_steps: 8,
+        snapshot_every: 2,
+        ..Default::default()
+    };
     let mut sparsity = SparsityConfig::new(kind, 8, 0.7);
     sparsity.pattern.filter = 3;
     ExperimentConfig {
@@ -140,6 +142,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         sparsity,
         exec: spion::exec::ExecConfig::with_workers(workers),
         serve: Default::default(),
+        obs: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -238,11 +241,13 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
     std::env::set_var("SPION_EVAL_BATCHES", "1");
     let (task, model) = spion::config::types::preset("tiny").unwrap();
     let mk_exp = || {
-        let mut train = TrainConfig::default();
-        train.steps = 12;
-        train.min_dense_steps = 4;
-        train.max_dense_steps = 8;
-        train.snapshot_every = 2;
+        let train = TrainConfig {
+            steps: 12,
+            min_dense_steps: 4,
+            max_dense_steps: 8,
+            snapshot_every: 2,
+            ..Default::default()
+        };
         ExperimentConfig {
             task,
             model: model.clone(),
@@ -250,6 +255,7 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
             sparsity: SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 16, 0.9),
             exec: Default::default(),
             serve: Default::default(),
+            obs: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     };

@@ -1,0 +1,273 @@
+//! Observability integration tests: span registry semantics (enabled /
+//! disabled), the chrome-trace ring, the Prometheus /metrics endpoint over
+//! raw TCP against a live serving engine, and an end-to-end spawn of the
+//! `spion` binary (train a checkpoint, serve it with `--metrics-addr` +
+//! `--trace-out`, scrape the ephemeral port).
+//!
+//! These tests mutate process-global obs state (the static span registry,
+//! the ENABLED flag, the trace ring), so everything that touches globals
+//! serializes on one lock — and lives in this integration binary, a
+//! separate process from the unit-test binary, so lib tests never race it.
+
+use spion::config::ModelConfig;
+use spion::model::{Encoder, ModelParams};
+use spion::obs::{self, SpanId};
+use spion::pattern::BlockMask;
+use spion::serve::{Engine, ServeConfig};
+use spion::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+/// Poison-tolerant lock: one failing test must not cascade into every
+/// later test dying on `PoisonError`.
+fn lock_globals() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Small sparse model through the public surface (L=32, D=32, 2 layers,
+/// diagonal block mask) — big enough to exercise every serve span.
+fn encoder() -> Encoder {
+    let model = ModelConfig {
+        preset: "obs-test".into(),
+        seq_len: 32,
+        d_model: 32,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 64,
+        vocab: 20,
+        classes: 4,
+        batch: 1,
+    };
+    let params = ModelParams::init_random(&model, 9);
+    let mut m = BlockMask::empty(8, 4);
+    m.set_diagonal();
+    Encoder::new(params, 2).with_masks(vec![m.clone(), m]).unwrap()
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to metrics endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+#[test]
+fn spans_record_into_the_registry() {
+    let _g = lock_globals();
+    obs::set_enabled(true);
+    let before = obs::snapshot(SpanId::Embed).count;
+    {
+        let _sp = obs::span(SpanId::Embed);
+    }
+    obs::record(SpanId::Embed, Duration::from_micros(5));
+    let after = obs::snapshot(SpanId::Embed).count;
+    assert_eq!(after, before + 2, "guard drop + explicit record each add one sample");
+}
+
+#[test]
+fn disabled_spans_are_no_ops() {
+    let _g = lock_globals();
+    obs::set_enabled(false);
+    let before = obs::snapshot(SpanId::Optimizer).count;
+    for _ in 0..100 {
+        let _sp = obs::span(SpanId::Optimizer);
+    }
+    obs::record(SpanId::Optimizer, Duration::from_micros(5));
+    let after = obs::snapshot(SpanId::Optimizer).count;
+    obs::set_enabled(true);
+    assert_eq!(after, before, "disabled registry must record nothing");
+}
+
+#[test]
+fn trace_ring_dumps_valid_chrome_json() {
+    let _g = lock_globals();
+    obs::set_enabled(true);
+    obs::trace::enable(1024);
+    {
+        let _sp = obs::span(SpanId::TransitionStep);
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let dump = obs::trace::dump_json();
+    obs::trace::disable();
+    assert!(dump.contains("transition_step"), "span name missing from trace");
+    assert!(dump.contains("\"ph\":\"X\""), "complete-event phase missing");
+    let j = Json::parse(&dump).expect("trace dump is valid JSON");
+    let events = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty(), "ring captured no events");
+    let (captured, _) = obs::trace::stats();
+    assert!(captured >= 1);
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_text() {
+    let _g = lock_globals();
+    obs::set_enabled(true);
+    let engine = Engine::start(
+        encoder(),
+        ServeConfig { queue_depth: 32, max_batch: 4, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let srv = obs::http::MetricsServer::start(
+        "127.0.0.1:0",
+        obs::prom::Sources {
+            server: Some(engine.stats().clone()),
+            ops: Some(engine.op_tally()),
+        },
+    )
+    .unwrap();
+    let addr = srv.addr();
+
+    for i in 0..8 {
+        let toks: Vec<i32> = (0..32).map(|t| ((t + i) % 20) as i32).collect();
+        engine.submit(toks).unwrap().wait().unwrap();
+    }
+
+    let resp = http_get(addr, "/metrics");
+    let (head, body) = resp.split_once("\r\n\r\n").expect("header/body split");
+    assert!(head.starts_with("HTTP/1.0 200"), "bad status: {head}");
+    assert!(head.contains("text/plain"), "bad content type: {head}");
+    for family in [
+        "spion_obs_enabled",
+        "spion_span_seconds",
+        "spion_span_duration_seconds_bucket",
+        "spion_serve_served_total",
+        "spion_request_latency_seconds",
+        "spion_queue_wait_seconds",
+        "spion_ops_total",
+        "spion_trace_events_dropped_total",
+    ] {
+        assert!(body.contains(family), "family {family} missing from exposition");
+    }
+    // The workload ran through the engine, so the serve counters and the
+    // request-latency summary must be non-empty.
+    assert!(body.contains("spion_serve_served_total 8"), "served count wrong:\n{body}");
+    assert!(
+        body.lines().any(|l| {
+            l.starts_with("spion_request_latency_seconds_count")
+                && l.ends_with(" 8")
+        }),
+        "latency histogram not populated"
+    );
+    // Every sample line is `name{{labels}} value` with a finite value —
+    // the "parseable" half of the acceptance gate.
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (_, val) = line.rsplit_once(' ').expect("sample line shape");
+        let v: f64 = val.parse().unwrap_or_else(|_| panic!("non-numeric sample: {line}"));
+        assert!(v.is_finite(), "non-finite sample: {line}");
+    }
+
+    let health = http_get(addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.0 200"));
+    assert!(health.ends_with("ok\n"));
+    let missing = http_get(addr, "/nope");
+    assert!(missing.starts_with("HTTP/1.0 404"));
+
+    engine.shutdown();
+    srv.stop();
+}
+
+/// End-to-end through the shipped binary: train a tiny native checkpoint,
+/// serve it with an ephemeral /metrics port and a trace dump, scrape the
+/// endpoint during the `--hold-ms` window.
+#[test]
+fn serve_binary_exposes_metrics_and_trace() {
+    let dir = std::env::temp_dir().join(format!("spion-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.bin");
+    let trace = dir.join("trace.json");
+
+    let bin = env!("CARGO_BIN_EXE_spion");
+    let train = std::process::Command::new(bin)
+        .args([
+            "train",
+            "--preset",
+            "tiny",
+            "--backend",
+            "native",
+            "--steps",
+            "2",
+            "--checkpoint-out",
+        ])
+        .arg(&ck)
+        .output()
+        .expect("spawn train");
+    assert!(
+        train.status.success(),
+        "train failed:\n{}",
+        String::from_utf8_lossy(&train.stderr)
+    );
+
+    let mut serve = std::process::Command::new(bin)
+        .args(["serve", "--preset", "tiny", "--checkpoint"])
+        .arg(&ck)
+        .args([
+            "--requests",
+            "16",
+            "--concurrency",
+            "2",
+            "--metrics-addr",
+            "127.0.0.1:0",
+            "--hold-ms",
+            "4000",
+            "--trace-out",
+        ])
+        .arg(&trace)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+
+    let stdout = serve.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut addr: Option<SocketAddr> = None;
+    let mut workload_done = false;
+    let mut line = String::new();
+    // The engine prints the ephemeral port right after binding, runs the
+    // synthetic workload, prints the latency summary, then holds. Scrape
+    // inside the hold window so the histograms are fully populated.
+    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+        if let Some(rest) = line.trim().strip_prefix("metrics listening on http://") {
+            let host = rest.strip_suffix("/metrics").unwrap_or(rest);
+            addr = Some(host.parse().expect("socket addr in banner"));
+        }
+        if line.starts_with("holding for") {
+            workload_done = true;
+            break;
+        }
+        line.clear();
+    }
+    let addr = addr.expect("serve never printed the metrics banner");
+    assert!(workload_done, "serve never reached the hold window");
+
+    let resp = http_get(addr, "/metrics");
+    assert!(resp.starts_with("HTTP/1.0 200"), "bad scrape: {resp}");
+    for family in
+        ["spion_span_seconds", "spion_serve_served_total", "spion_request_latency_seconds"]
+    {
+        assert!(resp.contains(family), "family {family} missing:\n{resp}");
+    }
+    assert!(
+        !resp.contains("spion_serve_served_total 0\n"),
+        "workload ran but served counter is zero"
+    );
+
+    // Drain the rest of stdout (the child blocks on a full pipe otherwise)
+    // and wait for a clean exit.
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    let status = serve.wait().expect("wait serve");
+    assert!(status.success(), "serve exited non-zero; tail:\n{rest}");
+
+    let trace_json = std::fs::read_to_string(&trace).expect("trace file written");
+    assert!(trace_json.contains("traceEvents"));
+    Json::parse(&trace_json).expect("trace file is valid JSON");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -32,6 +32,7 @@ fn main() -> Result<()> {
         exec: Default::default(),
         serve: Default::default(),
         obs: Default::default(),
+        resil: Default::default(),
         artifacts_dir: "artifacts".into(),
     };
 

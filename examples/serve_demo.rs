@@ -112,6 +112,7 @@ fn main() -> Result<()> {
             ("queue-depth <n>", "bounded admission depth (default 256)"),
             ("workers <n>", "engine pool workers (0 = all cores; default 1)"),
             ("kernel-workers <n>", "per-worker kernel parallelism for big L (default 1)"),
+            ("deadline-us <n>", "per-request deadline, shed before execute (0 = none)"),
             ("alpha <f>", "SPION-CF threshold quantile (default 0.9)"),
         ],
     );
@@ -125,6 +126,7 @@ fn main() -> Result<()> {
         max_wait_us: 2_000,
         workers: args.usize_or("workers", 1),
         kernel_workers: args.usize_or("kernel-workers", 1),
+        deadline_us: args.u64_or("deadline-us", 0),
     };
 
     let (params, trained_masks) = load_params(&args, &preset_name, model.layers)?;
@@ -171,6 +173,7 @@ fn main() -> Result<()> {
                 exec: Default::default(),
                 serve: Default::default(),
                 obs: Default::default(),
+                resil: Default::default(),
                 artifacts_dir: "artifacts".into(),
             };
             let mut rng = spion::util::rng::Rng::new(5);

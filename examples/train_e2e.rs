@@ -67,6 +67,7 @@ fn main() -> Result<()> {
         exec,
         serve: Default::default(),
         obs: Default::default(),
+        resil: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     };
     let out_dir = args.str_or("out", "results/train_e2e");

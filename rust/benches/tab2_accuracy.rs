@@ -58,6 +58,7 @@ fn main() {
                     exec: Default::default(),
                     serve: Default::default(),
                     obs: Default::default(),
+                    resil: Default::default(),
                     artifacts_dir: "artifacts".into(),
                 };
                 let trainer = Trainer::new(&rt, exp).expect("trainer");

@@ -158,6 +158,13 @@ pub struct TrainConfig {
     pub max_dense_steps: usize,
     /// Steps between A^s snapshots for the transition detector.
     pub snapshot_every: usize,
+    /// Write a crash-safe periodic checkpoint (with a resume section)
+    /// every N steps. `None` disables periodic checkpoints; an explicit
+    /// 0 is a config error.
+    pub checkpoint_every: Option<usize>,
+    /// How many periodic checkpoints to retain (keep-last-K; older ones
+    /// are deleted after each successful write).
+    pub checkpoint_keep: usize,
 }
 
 /// Shared momentum-range validation (TOML `train.momentum` and every
@@ -182,6 +189,8 @@ impl Default for TrainConfig {
             min_dense_steps: 10,
             max_dense_steps: 60,
             snapshot_every: 5,
+            checkpoint_every: None,
+            checkpoint_keep: 3,
         }
     }
 }
@@ -238,6 +247,9 @@ pub struct ExperimentConfig {
     /// Observability knobs (`[obs]` in TOML, `--metrics-addr` /
     /// `--trace-out` / `--obs` on the CLI).
     pub obs: ObsConfig,
+    /// Fault-injection knobs (`[resil]` in TOML, `SPION_FAULT*` env) —
+    /// disarmed by default; only chaos harnesses set these.
+    pub resil: crate::resil::ResilConfig,
     pub artifacts_dir: String,
 }
 
@@ -248,6 +260,64 @@ impl ExperimentConfig {
     pub fn manifest_path(&self) -> String {
         format!("{}/{}/manifest.json", self.artifacts_dir, self.model.preset)
     }
+
+    /// Cross-field semantic validation, run after every load path (TOML
+    /// file and CLI flags). Catches the degenerate values that would
+    /// otherwise surface deep inside a run — a `snapshot_every` of 0 is a
+    /// division in the train loop, a non-dividing block size panics at
+    /// mask construction, a zero `checkpoint_every` silently never
+    /// checkpoints while looking enabled.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.train.snapshot_every == 0 {
+            return Err("train.snapshot_every must be ≥ 1 (0 would divide by zero)".into());
+        }
+        if self.train.checkpoint_every == Some(0) {
+            return Err(
+                "train.checkpoint_every must be ≥ 1 (omit the key to disable periodic \
+                 checkpoints)"
+                    .into(),
+            );
+        }
+        if self.train.checkpoint_keep == 0 {
+            return Err("train.checkpoint_keep must be ≥ 1".into());
+        }
+        if self.train.min_dense_steps > self.train.max_dense_steps {
+            return Err(format!(
+                "train.min_dense_steps ({}) exceeds train.max_dense_steps ({})",
+                self.train.min_dense_steps, self.train.max_dense_steps
+            ));
+        }
+        if self.sparsity.kind != PatternKind::Dense {
+            let b = self.sparsity.pattern.block;
+            if b == 0 || self.model.seq_len % b != 0 {
+                return Err(format!(
+                    "sparsity.block {b} must divide seq_len {}",
+                    self.model.seq_len
+                ));
+            }
+        }
+        self.serve.validate()?;
+        // Validate the fault names/prob without arming the registry (a
+        // bad `[resil]` section must fail the load, not half-arm).
+        validate_resil(&self.resil)
+    }
+}
+
+/// Check a `[resil]` section's fault names and probability range without
+/// touching the global registry.
+pub fn validate_resil(cfg: &crate::resil::ResilConfig) -> Result<(), String> {
+    for name in &cfg.faults {
+        if crate::resil::FaultPoint::parse(name).is_none() {
+            return Err(format!(
+                "resil.faults: unknown fault point {name:?} (expected one of: {})",
+                crate::resil::fault::ALL_POINTS.map(|p| p.name()).join(", ")
+            ));
+        }
+    }
+    if !(0.0..=1.0).contains(&cfg.prob) {
+        return Err(format!("resil.prob {} outside [0, 1]", cfg.prob));
+    }
+    Ok(())
 }
 
 /// The presets the AOT pass compiles. `tiny` is the CI/test config; the task
@@ -364,6 +434,14 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         if let Some(v) = t.get("snapshot_every").and_then(|v| v.as_int()) {
             train.snapshot_every = v as usize;
         }
+        if let Some(v) = t.get("checkpoint_every") {
+            train.checkpoint_every =
+                Some(v.as_usize().ok_or("train.checkpoint_every must be a non-negative integer")?);
+        }
+        if let Some(v) = t.get("checkpoint_keep") {
+            train.checkpoint_keep =
+                v.as_usize().ok_or("train.checkpoint_keep must be a non-negative integer")?;
+        }
     }
 
     let mut sparsity =
@@ -432,6 +510,10 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
             serve.max_wait_us =
                 v.as_usize().ok_or("serve.max_wait_us must be a non-negative integer")? as u64;
         }
+        if let Some(v) = s.get("deadline_us") {
+            serve.deadline_us =
+                v.as_usize().ok_or("serve.deadline_us must be a non-negative integer")? as u64;
+        }
     }
     serve.validate()?;
 
@@ -453,12 +535,51 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         }
     }
 
+    let mut resil = crate::resil::ResilConfig::default();
+    if let Some(r) = doc.get("resil") {
+        if let Some(v) = r.get("faults") {
+            resil.faults = match v {
+                // Both spellings load: `faults = ["a", "b"]` and
+                // `faults = "a,b"` (the env var uses the comma form).
+                super::toml::TomlValue::Array(items) => items
+                    .iter()
+                    .map(|i| {
+                        i.as_str()
+                            .map(String::from)
+                            .ok_or_else(|| "resil.faults entries must be strings".to_string())
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+                other => other
+                    .as_str()
+                    .ok_or("resil.faults must be a string or an array of strings")?
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+            };
+        }
+        if let Some(v) = r.get("prob") {
+            resil.prob = v.as_float().ok_or("resil.prob must be a number")?;
+        }
+        if let Some(v) = r.get("after") {
+            resil.after = v.as_usize().ok_or("resil.after must be a non-negative integer")? as u64;
+        }
+        if let Some(v) = r.get("seed") {
+            resil.seed = v.as_usize().ok_or("resil.seed must be a non-negative integer")? as u64;
+        }
+        if let Some(v) = r.get("kill") {
+            resil.kill = v.as_bool().ok_or("resil.kill must be a boolean")?;
+        }
+    }
+
     let artifacts_dir = root
         .get("artifacts_dir")
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    Ok(ExperimentConfig { task, model, train, sparsity, exec, serve, obs, artifacts_dir })
+    let cfg = ExperimentConfig { task, model, train, sparsity, exec, serve, obs, resil, artifacts_dir };
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 #[cfg(test)]
@@ -625,6 +746,7 @@ max_batch = 16
 max_wait_us = 2000
 workers = 4
 kernel_workers = 2
+deadline_us = 250000
 "#,
         )
         .unwrap();
@@ -633,6 +755,7 @@ kernel_workers = 2
         assert_eq!(cfg.serve.max_wait_us, 2000);
         assert_eq!(cfg.serve.workers, 4);
         assert_eq!(cfg.serve.kernel_workers, 2);
+        assert_eq!(cfg.serve.deadline_us, 250_000);
         let d = experiment_from_toml("preset = \"tiny\"").unwrap();
         assert_eq!(d.serve, ServeConfig::default(), "no [serve] section → defaults");
     }
@@ -658,5 +781,106 @@ kernel_workers = 2
         for k in PatternKind::all() {
             assert_eq!(PatternKind::parse(k.name()), Some(k), "{}", k.name());
         }
+    }
+
+    #[test]
+    fn checkpoint_keys_from_toml() {
+        let cfg = experiment_from_toml(
+            "preset = \"tiny\"\n[train]\ncheckpoint_every = 5\ncheckpoint_keep = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.checkpoint_every, Some(5));
+        assert_eq!(cfg.train.checkpoint_keep, 2);
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(d.train.checkpoint_every, None, "omitted key disables");
+        assert_eq!(d.train.checkpoint_keep, 3);
+    }
+
+    #[test]
+    fn zero_checkpoint_every_is_rejected() {
+        let err = experiment_from_toml("preset = \"tiny\"\n[train]\ncheckpoint_every = 0")
+            .unwrap_err();
+        assert!(err.contains("checkpoint_every"), "{err}");
+    }
+
+    #[test]
+    fn zero_snapshot_every_is_rejected() {
+        // Regression guard: snapshot_every = 0 used to reach the train
+        // loop and divide by zero.
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[train]\nsnapshot_every = 0").unwrap_err();
+        assert!(err.contains("snapshot_every"), "{err}");
+    }
+
+    #[test]
+    fn zero_checkpoint_keep_is_rejected() {
+        let err = experiment_from_toml(
+            "preset = \"tiny\"\n[train]\ncheckpoint_every = 5\ncheckpoint_keep = 0",
+        )
+        .unwrap_err();
+        assert!(err.contains("checkpoint_keep"), "{err}");
+    }
+
+    #[test]
+    fn inverted_dense_window_is_rejected() {
+        let err = experiment_from_toml(
+            "preset = \"tiny\"\n[train]\nmin_dense_steps = 30\nmax_dense_steps = 10",
+        )
+        .unwrap_err();
+        assert!(err.contains("min_dense_steps"), "{err}");
+    }
+
+    #[test]
+    fn non_dividing_block_is_rejected() {
+        // tiny has seq_len 128; 48 does not divide it.
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[sparsity]\nblock = 48").unwrap_err();
+        assert!(err.contains("block"), "{err}");
+        // …but a dense run never builds masks, so the block is ignored.
+        assert!(experiment_from_toml(
+            "preset = \"tiny\"\n[sparsity]\nkind = \"dense\"\nblock = 48"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn resil_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[resil]
+faults = ["ckpt-write", "io-err"]
+prob = 0.5
+after = 3
+seed = 9
+kill = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.resil.faults, vec!["ckpt-write", "io-err"]);
+        assert_eq!(cfg.resil.prob, 0.5);
+        assert_eq!(cfg.resil.after, 3);
+        assert_eq!(cfg.resil.seed, 9);
+        assert!(cfg.resil.kill);
+        // Comma-string spelling (mirrors SPION_FAULTS).
+        let cfg = experiment_from_toml(
+            "preset = \"tiny\"\n[resil]\nfaults = \"queue-slow, worker-panic\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.resil.faults, vec!["queue-slow", "worker-panic"]);
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert!(d.resil.faults.is_empty(), "no [resil] section → disarmed");
+    }
+
+    #[test]
+    fn resil_section_validates() {
+        let err = experiment_from_toml("preset = \"tiny\"\n[resil]\nfaults = \"ckpt-wirte\"")
+            .unwrap_err();
+        assert!(err.contains("ckpt-wirte"), "{err}");
+        assert!(err.contains("ckpt-write"), "catalog missing: {err}");
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[resil]\nfaults = \"io-err\"\nprob = 1.5")
+                .unwrap_err();
+        assert!(err.contains("prob"), "{err}");
     }
 }

@@ -1,12 +1,21 @@
 //! Parameter checkpoints: flat binary format (magic, tensor count,
-//! per-tensor rank/dims/f32 data) plus an **optional trained-mask section**
-//! (`SPIONMK1`), so serving runs the exact per-layer sparsity pattern the
-//! run trained instead of regenerating one from synthetic scores.
+//! per-tensor rank/dims/f32 data) plus optional trailing sections —
+//! trained masks (`SPIONMK1`), a resume-state section (`SPIONRS1`) carrying
+//! everything a mid-run restart needs for a bit-identical trajectory, and
+//! a whole-file CRC-32 trailer (`SPIONSUM`) so bit-rot is detected at load
+//! instead of corrupting a resumed run.
 //!
-//! Compatibility: the mask section is appended after the tensor payload —
-//! pre-mask checkpoints (which end at the last tensor) load with
-//! `masks: None`, and readers that predate the section simply stopped at
-//! the tensor count, so both directions round-trip.
+//! Compatibility: sections are appended after the tensor payload and
+//! probed by magic — pre-section checkpoints (which end at the last tensor
+//! or the mask section) load with `masks: None` / `resume: None`, and the
+//! header/tensor layout is byte-identical across versions.
+//!
+//! Durability: `save` is atomic — the file is staged at `<path>.tmp`,
+//! fsync'd, then renamed over the destination, so a crash mid-write leaves
+//! the previous checkpoint intact rather than a truncated file. The
+//! `ckpt-write` fault point fires between the staging write and the
+//! rename, which is exactly the window the chaos suite kills the process
+//! in.
 //!
 //! Robustness: `load` never trusts a length field it has not bounded
 //! against the file size — a truncated or corrupted file produces an
@@ -16,15 +25,49 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
+use crate::metrics::{Phase, StepRecord};
 use crate::pattern::BlockMask;
+use crate::resil::crc;
+use crate::resil::fault::{self, FaultPoint};
+use crate::util::rng::RngState;
+
+use super::phase::DetectorState;
 
 const MAGIC: &[u8; 8] = b"SPIONCK1";
 const MASK_MAGIC: &[u8; 8] = b"SPIONMK1";
+const RESUME_MAGIC: &[u8; 8] = b"SPIONRS1";
+const SUM_MAGIC: &[u8; 8] = b"SPIONSUM";
 /// Sanity bounds on structural fields (far above any real model, small
 /// enough to reject garbage before allocating).
 const MAX_NAME_LEN: usize = 4096;
 const MAX_RANK: usize = 8;
 const MAX_MASK_LAYERS: usize = 4096;
+/// Resume payloads carry the momentum buffer (≈ model size) plus metrics;
+/// bound the declared length before allocating.
+const MAX_RESUME_LEN: u64 = 1 << 32;
+
+/// Everything beyond the parameters that an exact mid-run restart needs
+/// (`spion train --resume`): the step to continue from, optimizer
+/// momentum, the data-stream RNG, the transition detector, and the metric
+/// records accumulated so far. Restoring all of it makes the resumed
+/// trajectory bit-identical to the uninterrupted run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeState {
+    /// First step the resumed run executes (the checkpoint was written
+    /// after step `next_step - 1` completed).
+    pub next_step: u64,
+    pub transition_step: Option<usize>,
+    pub pattern_density: Vec<f64>,
+    /// Per-step records of the interrupted run — the resumed run's metrics
+    /// CSV carries the full series, so golden comparisons can line up
+    /// whole files.
+    pub records: Vec<StepRecord>,
+    /// Training-stream RNG, captured after the checkpointed step's batch.
+    pub batcher_rng: RngState,
+    pub detector: DetectorState,
+    /// Optimizer momentum buffer, flattened in manifest order.
+    pub velocity: Vec<Vec<f32>>,
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
@@ -34,14 +77,23 @@ pub struct Checkpoint {
     /// Per-layer block masks of the trained run's sparse phase (None for
     /// dense runs and pre-mask-format checkpoints).
     pub masks: Option<Vec<BlockMask>>,
+    /// Exact-resume section (None for final checkpoints and pre-resume
+    /// formats — only periodic mid-run checkpoints carry it).
+    pub resume: Option<ResumeState>,
 }
 
 impl Checkpoint {
+    /// Atomic durable write: stage at `<path>.tmp`, fsync, rename.
     pub fn save(&self, path: &str) -> Result<()> {
+        let sw = std::time::Instant::now();
         if let Some(dir) = std::path::Path::new(path).parent() {
-            std::fs::create_dir_all(dir)?;
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint directory for {path}"))?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let tmp_path = format!("{path}.tmp");
+        let file = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating checkpoint staging file {tmp_path}"))?;
+        let mut f = CrcWriter { inner: std::io::BufWriter::new(file), crc: crc::INIT };
         f.write_all(MAGIC)?;
         let name = self.preset.as_bytes();
         f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -79,14 +131,48 @@ impl Checkpoint {
                 f.write_all(&buf)?;
             }
         }
+        if let Some(rs) = &self.resume {
+            let payload = rs.encode();
+            f.write_all(RESUME_MAGIC)?;
+            f.write_all(&(payload.len() as u64).to_le_bytes())?;
+            f.write_all(&payload)?;
+            f.write_all(&crc::of(&payload).to_le_bytes())?;
+        }
+        // Whole-file trailer: CRC over every byte from the start through
+        // the SUM magic (the 4 CRC bytes themselves are not hashed).
+        f.write_all(SUM_MAGIC)?;
+        let sum = crc::finish(f.crc);
+        f.write_all(&sum.to_le_bytes())?;
+        let file = f
+            .inner
+            .into_inner()
+            .map_err(|e| anyhow!("flushing checkpoint staging file {tmp_path}: {}", e.error()))?;
+        file.sync_all().with_context(|| format!("fsync checkpoint staging file {tmp_path}"))?;
+        drop(file);
+        // Fault point: a crash here (tmp staged, rename not yet done) must
+        // leave any previous checkpoint at `path` intact.
+        if fault::trip(FaultPoint::CkptWrite) {
+            bail!("fault injected: ckpt-write ({tmp_path} staged, rename skipped)");
+        }
+        std::fs::rename(&tmp_path, path)
+            .with_context(|| format!("renaming {tmp_path} over {path}"))?;
+        crate::resil::stats().checkpoint_write.record_duration(sw.elapsed());
         Ok(())
     }
 
     pub fn load(path: &str) -> Result<Self> {
         let file =
             std::fs::File::open(path).with_context(|| format!("opening checkpoint {path}"))?;
+        if fault::trip(FaultPoint::IoErr) {
+            bail!("fault injected: io-err reading checkpoint {path}");
+        }
         let file_len = file.metadata().with_context(|| format!("stat {path}"))?.len();
-        let mut r = Reader { inner: std::io::BufReader::new(file), offset: 0, len: file_len };
+        let mut r = Reader {
+            inner: std::io::BufReader::new(file),
+            offset: 0,
+            len: file_len,
+            crc: crc::INIT,
+        };
 
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic, "magic")?;
@@ -148,7 +234,7 @@ impl Checkpoint {
             tensors.push((shape, data));
         }
 
-        let masks = Self::load_mask_section(&mut r, path)?;
+        let (masks, resume) = Self::load_sections(&mut r, path)?;
 
         Ok(Self {
             preset: String::from_utf8(name)
@@ -156,21 +242,66 @@ impl Checkpoint {
             step: u64::from_le_bytes(step),
             tensors,
             masks,
+            resume,
         })
     }
 
-    /// Optional trailing mask section: EOF ⇒ None (pre-mask format); mask
-    /// magic ⇒ parse; anything else ⇒ error (trailing garbage).
-    fn load_mask_section(r: &mut Reader, path: &str) -> Result<Option<Vec<BlockMask>>> {
-        let mut magic = [0u8; 8];
-        match r.try_read_8(&mut magic)? {
-            0 => return Ok(None),
-            8 if &magic == MASK_MAGIC => {}
-            got => bail!(
-                "{path}: {got} trailing bytes at offset {} are not a mask section",
-                r.offset - got as u64
-            ),
+    /// Optional trailing sections, probed by magic in a loop: EOF ⇒ done
+    /// (pre-section formats); `SPIONMK1` ⇒ masks; `SPIONRS1` ⇒ resume
+    /// state; `SPIONSUM` ⇒ whole-file CRC check, must be last; anything
+    /// else ⇒ error (trailing garbage).
+    fn load_sections(
+        r: &mut Reader,
+        path: &str,
+    ) -> Result<(Option<Vec<BlockMask>>, Option<ResumeState>)> {
+        let mut masks = None;
+        let mut resume = None;
+        loop {
+            let mut magic = [0u8; 8];
+            match r.try_read_8(&mut magic)? {
+                0 => return Ok((masks, resume)),
+                8 if &magic == MASK_MAGIC => {
+                    if masks.is_some() {
+                        bail!("{path}: duplicate mask section (offset {})", r.offset - 8);
+                    }
+                    masks = Some(Self::load_mask_section(r, path)?);
+                }
+                8 if &magic == RESUME_MAGIC => {
+                    if resume.is_some() {
+                        bail!("{path}: duplicate resume section (offset {})", r.offset - 8);
+                    }
+                    resume = Some(Self::load_resume_section(r, path)?);
+                }
+                8 if &magic == SUM_MAGIC => {
+                    // The trailer's CRC covers everything through its own
+                    // magic (already folded into `r.crc` by the probe);
+                    // the 4 stored CRC bytes themselves are not hashed.
+                    let computed = crc::finish(r.crc);
+                    let stored = r.u32("whole-file checksum")?;
+                    if computed != stored {
+                        bail!(
+                            "{path}: checksum mismatch (stored {stored:#010x}, computed \
+                             {computed:#010x}) — checkpoint is corrupt"
+                        );
+                    }
+                    if r.remaining() > 0 {
+                        bail!(
+                            "{path}: {} trailing bytes after the checksum trailer (offset {})",
+                            r.remaining(),
+                            r.offset
+                        );
+                    }
+                    return Ok((masks, resume));
+                }
+                got => bail!(
+                    "{path}: {got} trailing bytes at offset {} are not a checkpoint section",
+                    r.offset - got as u64
+                ),
+            }
         }
+    }
+
+    fn load_mask_section(r: &mut Reader, path: &str) -> Result<Vec<BlockMask>> {
         let layers = r.u32("mask layer count")? as usize;
         if layers > MAX_MASK_LAYERS {
             bail!("{path}: mask layer count {layers} exceeds {MAX_MASK_LAYERS}");
@@ -188,23 +319,219 @@ impl Checkpoint {
             r.read_exact(&mut raw, &format!("mask {i} bitmap"))?;
             masks.push(BlockMask { lb, block, bits: raw.into_iter().map(|b| b != 0).collect() });
         }
-        if r.remaining() > 0 {
+        Ok(masks)
+    }
+
+    /// `u64 payload_len + payload + u32 CRC-32(payload)` — the per-section
+    /// checksum means a bit-rotted resume section is rejected even in
+    /// files missing the whole-file trailer.
+    fn load_resume_section(r: &mut Reader, path: &str) -> Result<ResumeState> {
+        let len = r.u64("resume payload length")?;
+        if len > MAX_RESUME_LEN {
+            bail!("{path}: resume payload length {len} exceeds {MAX_RESUME_LEN}");
+        }
+        r.check_remaining(len + 4, "resume payload")?;
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload, "resume payload")?;
+        let stored = r.u32("resume payload checksum")?;
+        let computed = crc::of(&payload);
+        if stored != computed {
             bail!(
-                "{path}: {} trailing bytes after the mask section (offset {})",
-                r.remaining(),
-                r.offset
+                "{path}: resume section checksum mismatch (stored {stored:#010x}, computed \
+                 {computed:#010x})"
             );
         }
-        Ok(Some(masks))
+        ResumeState::decode(&payload).with_context(|| format!("{path}: resume section"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resume-state payload encoding: a versioned flat little-endian layout,
+// written by `encode` and bounds-checked field-for-field by `decode`.
+// ---------------------------------------------------------------------------
+
+const RESUME_VERSION: u32 = 1;
+
+impl ResumeState {
+    fn encode(&self) -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::with_capacity(256 + 4 * self.velocity.iter().map(Vec::len).sum::<usize>());
+        b.extend_from_slice(&RESUME_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.next_step.to_le_bytes());
+        b.push(self.transition_step.is_some() as u8);
+        b.extend_from_slice(&(self.transition_step.unwrap_or(0) as u64).to_le_bytes());
+        b.extend_from_slice(&(self.pattern_density.len() as u32).to_le_bytes());
+        for &d in &self.pattern_density {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.records.len() as u64).to_le_bytes());
+        for r in &self.records {
+            b.extend_from_slice(&(r.step as u64).to_le_bytes());
+            b.push(matches!(r.phase, Phase::Sparse) as u8);
+            b.extend_from_slice(&r.loss.to_le_bytes());
+            b.extend_from_slice(&r.acc.to_le_bytes());
+            b.extend_from_slice(&r.step_ms.to_le_bytes());
+        }
+        for s in self.batcher_rng.s {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+        b.push(self.batcher_rng.gauss_spare.is_some() as u8);
+        b.extend_from_slice(&self.batcher_rng.gauss_spare.unwrap_or(0.0).to_le_bytes());
+        b.extend_from_slice(&self.detector.snapshots_seen.to_le_bytes());
+        b.push(self.detector.fired as u8);
+        for opt in [&self.detector.prev_norm, &self.detector.prev_distance] {
+            b.push(opt.is_some() as u8);
+            let xs = opt.as_deref().unwrap_or(&[]);
+            b.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+            for &x in xs {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        b.extend_from_slice(&(self.velocity.len() as u32).to_le_bytes());
+        for v in &self.velocity {
+            b.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for &x in v {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    fn decode(b: &[u8]) -> Result<Self> {
+        let mut c = Cursor { b, i: 0 };
+        let version = c.u32("version")?;
+        if version != RESUME_VERSION {
+            bail!("unsupported resume-state version {version} (expected {RESUME_VERSION})");
+        }
+        let next_step = c.u64("next_step")?;
+        let has_transition = c.u8("transition flag")? != 0;
+        let transition_raw = c.u64("transition step")?;
+        let transition_step = has_transition.then_some(transition_raw as usize);
+        let nd = c.u32("pattern density count")? as usize;
+        c.need(nd * 8, "pattern density")?;
+        let pattern_density = (0..nd).map(|_| c.f64("density")).collect::<Result<Vec<_>>>()?;
+        let nr = c.u64("record count")? as usize;
+        c.need(nr.saturating_mul(29), "records")?;
+        let mut records = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            let step = c.u64("record step")? as usize;
+            let phase = if c.u8("record phase")? != 0 { Phase::Sparse } else { Phase::Dense };
+            let loss = c.f32("record loss")?;
+            let acc = c.f32("record acc")?;
+            let step_ms = c.f64("record step_ms")?;
+            records.push(StepRecord { step, phase, loss, acc, step_ms });
+        }
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = c.u64("rng state")?;
+        }
+        let has_spare = c.u8("rng spare flag")? != 0;
+        let spare = c.f64("rng spare")?;
+        let batcher_rng = RngState { s, gauss_spare: has_spare.then_some(spare) };
+        let snapshots_seen = c.u64("detector snapshots")?;
+        let fired = c.u8("detector fired")? != 0;
+        let mut opts: [Option<Vec<f64>>; 2] = [None, None];
+        for opt in &mut opts {
+            let has = c.u8("detector vec flag")? != 0;
+            let len = c.u32("detector vec len")? as usize;
+            c.need(len * 8, "detector vec")?;
+            let xs = (0..len).map(|_| c.f64("detector value")).collect::<Result<Vec<_>>>()?;
+            *opt = has.then_some(xs);
+        }
+        let [prev_norm, prev_distance] = opts;
+        let detector = DetectorState { prev_norm, prev_distance, snapshots_seen, fired };
+        let nv = c.u32("velocity slice count")? as usize;
+        c.need(nv * 8, "velocity slices")?;
+        let mut velocity = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            let len = c.u64("velocity slice length")? as usize;
+            c.need(len.saturating_mul(4), "velocity data")?;
+            velocity.push((0..len).map(|_| c.f32("velocity value")).collect::<Result<Vec<_>>>()?);
+        }
+        if c.i != b.len() {
+            bail!("resume payload has {} undecoded trailing bytes", b.len() - c.i);
+        }
+        Ok(ResumeState {
+            next_step,
+            transition_step,
+            pattern_density,
+            records,
+            batcher_rng,
+            detector,
+            velocity,
+        })
+    }
+}
+
+/// Bounds-checked little-endian slice cursor for the resume payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Cursor<'_> {
+    fn need(&self, n: usize, what: &str) -> Result<()> {
+        if self.i + n > self.b.len() {
+            bail!("resume payload truncated: {what} needs {n} bytes at offset {}", self.i);
+        }
+        Ok(())
+    }
+
+    fn take<const N: usize>(&mut self, what: &str) -> Result<[u8; N]> {
+        self.need(N, what)?;
+        let mut out = [0u8; N];
+        out.copy_from_slice(&self.b[self.i..self.i + N]);
+        self.i += N;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take::<1>(what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(what)?))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(what)?))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(what)?))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(what)?))
+    }
+}
+
+/// CRC-folding writer: everything written through it feeds the running
+/// whole-file checksum.
+struct CrcWriter<W: Write> {
+    inner: W,
+    crc: u32,
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc = crc::update(self.crc, &buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
     }
 }
 
 /// Byte-counting reader: every failure reports the offset it happened at,
-/// and length fields can be validated against the bytes actually left.
+/// length fields can be validated against the bytes actually left, and a
+/// running CRC over consumed bytes backs the `SPIONSUM` trailer check.
 struct Reader {
     inner: std::io::BufReader<std::fs::File>,
     offset: u64,
     len: u64,
+    crc: u32,
 }
 
 impl Reader {
@@ -228,6 +555,7 @@ impl Reader {
             .read_exact(buf)
             .with_context(|| format!("reading {what} at byte offset {}", self.offset))?;
         self.offset += buf.len() as u64;
+        self.crc = crc::update(self.crc, buf);
         Ok(())
     }
 
@@ -245,6 +573,7 @@ impl Reader {
             got += n;
         }
         self.offset += got as u64;
+        self.crc = crc::update(self.crc, &buf[..got]);
         Ok(got)
     }
 
@@ -262,6 +591,7 @@ impl Reader {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -276,6 +606,26 @@ mod tests {
         ]
     }
 
+    fn sample_resume() -> ResumeState {
+        ResumeState {
+            next_step: 12,
+            transition_step: Some(7),
+            pattern_density: vec![0.25, 0.5],
+            records: vec![
+                StepRecord { step: 0, phase: Phase::Dense, loss: 2.0, acc: 0.1, step_ms: 3.5 },
+                StepRecord { step: 1, phase: Phase::Sparse, loss: 1.5, acc: 0.3, step_ms: 2.0 },
+            ],
+            batcher_rng: RngState { s: [1, 2, 3, 4], gauss_spare: Some(0.75) },
+            detector: DetectorState {
+                prev_norm: Some(vec![1.0, 2.0]),
+                prev_distance: None,
+                snapshots_seen: 4,
+                fired: true,
+            },
+            velocity: vec![vec![0.1, -0.2, 0.3], vec![4.0]],
+        }
+    }
+
     #[test]
     fn roundtrip() {
         let ck = Checkpoint {
@@ -283,6 +633,7 @@ mod tests {
             step: 123,
             tensors: sample_tensors(),
             masks: None,
+            resume: None,
         };
         let path = tmp("spion_ck_test.bin");
         ck.save(&path).unwrap();
@@ -303,6 +654,7 @@ mod tests {
             step: 9,
             tensors: sample_tensors(),
             masks: Some(vec![m0.clone(), m1.clone()]),
+            resume: None,
         };
         let path = tmp("spion_ck_masks.bin");
         ck.save(&path).unwrap();
@@ -313,13 +665,112 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_with_resume_state() {
+        let mut m = BlockMask::empty(4, 8);
+        m.set_diagonal();
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 11,
+            tensors: sample_tensors(),
+            masks: Some(vec![m]),
+            resume: Some(sample_resume()),
+        };
+        let path = tmp("spion_ck_resume.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        let rs = back.resume.unwrap();
+        assert_eq!(rs.next_step, 12);
+        assert_eq!(rs.batcher_rng.gauss_spare, Some(0.75));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn maskless_file_reads_as_none() {
-        // A checkpoint written without masks is byte-identical to the
-        // pre-mask format — it must load with masks: None.
-        let ck = Checkpoint { preset: "x".into(), step: 1, tensors: sample_tensors(), masks: None };
+        // A checkpoint written without masks must load with masks: None.
+        let ck = Checkpoint {
+            preset: "x".into(),
+            step: 1,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: None,
+        };
         let path = tmp("spion_ck_old.bin");
         ck.save(&path).unwrap();
-        assert_eq!(Checkpoint::load(&path).unwrap().masks, None);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.masks, None);
+        assert_eq!(back.resume, None);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_trailer_format_still_loads() {
+        // Strip the 12-byte SPIONSUM trailer — the resulting bytes are
+        // exactly the pre-v2 format, which must keep loading.
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 5,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: None,
+        };
+        let path = tmp("spion_ck_prev2.bin");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[bytes.len() - 12..bytes.len() - 4], SUM_MAGIC);
+        std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors, ck.tensors);
+        std::fs::remove_file(&path).ok();
+    }
+
+    // NOTE: atomicity under an injected ckpt-write crash is covered by
+    // `tests/chaos.rs::crashed_save_leaves_previous_checkpoint_intact` —
+    // arming the process-global fault registry inside this binary would
+    // poison concurrently-running trainer tests that also save.
+
+    #[test]
+    fn checksum_detects_bit_rot() {
+        // Flip one bit inside the tensor payload: the structure still
+        // parses, but the SPIONSUM trailer must reject the file.
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 3,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: None,
+        };
+        let path = tmp("spion_ck_rot.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Layout: 8 magic + 4 name_len + 4 "tiny" + 8 step + 4 count +
+        // (4 rank + 16 dims) = 48 → tensor 0's f32 data starts at 48.
+        bytes[50] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_section_checksum_detects_bit_rot() {
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 3,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: Some(sample_resume()),
+        };
+        let path = tmp("spion_ck_rs_rot.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a bit a few bytes into the resume payload (after the RS
+        // magic + u64 length), well before the trailer.
+        let pos = bytes.len() - 40;
+        bytes[pos] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("checksum mismatch"), "{msg}");
         std::fs::remove_file(&path).ok();
     }
 
@@ -330,10 +781,12 @@ mod tests {
             step: 0,
             tensors: vec![(vec![2, 2], vec![1.0])],
             masks: None,
+            resume: None,
         };
         let path = tmp("spion_ck_bad.bin");
         assert!(ck.save(&path).is_err());
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(format!("{path}.tmp")).ok();
     }
 
     #[test]
@@ -352,6 +805,7 @@ mod tests {
             step: 3,
             tensors: sample_tensors(),
             masks: Some(vec![BlockMask::full(2, 4)]),
+            resume: None,
         };
         let path = tmp(name);
         ck.save(&path).unwrap();
@@ -390,12 +844,34 @@ mod tests {
     }
 
     #[test]
+    fn huge_resume_len_is_bounded() {
+        let ck = Checkpoint {
+            preset: "tiny".into(),
+            step: 3,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: Some(sample_resume()),
+        };
+        let path = tmp("spion_ck_rslen.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Locate the RS magic and blow up its declared payload length.
+        let pos = bytes.windows(8).position(|w| w == RESUME_MAGIC).unwrap();
+        bytes[pos + 8..pos + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("resume payload length"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn truncation_is_detected() {
         let ck = Checkpoint {
             preset: "tiny".into(),
             step: 3,
             tensors: sample_tensors(),
             masks: None,
+            resume: None,
         };
         let path = tmp("spion_ck_trunc.bin");
         ck.save(&path).unwrap();
@@ -411,8 +887,15 @@ mod tests {
 
     #[test]
     fn trailing_garbage_is_rejected() {
-        // Both after the tensor payload (no mask section)…
-        let ck = Checkpoint { preset: "t".into(), step: 1, tensors: sample_tensors(), masks: None };
+        // Both after the tensor payload (junk where a section magic should
+        // be)…
+        let ck = Checkpoint {
+            preset: "t".into(),
+            step: 1,
+            tensors: sample_tensors(),
+            masks: None,
+            resume: None,
+        };
         let path = tmp("spion_ck_trail.bin");
         ck.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
@@ -426,6 +909,7 @@ mod tests {
             step: 1,
             tensors: sample_tensors(),
             masks: Some(vec![BlockMask::full(2, 4)]),
+            resume: None,
         };
         ck.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();

@@ -40,7 +40,7 @@ use crate::pattern::BlockMask;
 use crate::tensor::Mat;
 use crate::util::Stopwatch;
 
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{Checkpoint, ResumeState};
 use super::phase::{transition_should_fire, TransitionDetector};
 use super::trainer::{generate_masks_for_with, TrainOutcome};
 
@@ -48,6 +48,9 @@ pub struct NativeTrainer {
     pub exp: ExperimentConfig,
     exec: Exec,
     verbose: bool,
+    /// Base path for periodic crash-safe checkpoints (written every
+    /// `train.checkpoint_every` steps as `{base}.step{NNNNNNNN}`).
+    ckpt_base: Option<String>,
 }
 
 impl NativeTrainer {
@@ -70,11 +73,19 @@ impl NativeTrainer {
             return Err(anyhow!("batch must be ≥ 1"));
         }
         let exec = Exec::new(exp.exec);
-        Ok(Self { exp, exec, verbose: false })
+        Ok(Self { exp, exec, verbose: false, ckpt_base: None })
     }
 
     pub fn verbose(mut self, v: bool) -> Self {
         self.verbose = v;
+        self
+    }
+
+    /// Where periodic checkpoints go. Without a base path,
+    /// `train.checkpoint_every` is ignored (final checkpoints via
+    /// [`save_checkpoint`](Self::save_checkpoint) are unaffected).
+    pub fn checkpoint_to(mut self, base: impl Into<String>) -> Self {
+        self.ckpt_base = Some(base.into());
         self
     }
 
@@ -88,17 +99,77 @@ impl NativeTrainer {
     /// generated masks (None for the dense baseline) and the final
     /// parameters — the same [`TrainOutcome`] the PJRT trainer produces.
     pub fn run(&self) -> Result<TrainOutcome> {
+        self.run_inner(None)
+    }
+
+    /// Continue an interrupted run from a checkpoint that carries a resume
+    /// section. Restores parameters, optimizer momentum, the data-stream
+    /// RNG, the transition detector and the metric history, then executes
+    /// the remaining steps — the combined trajectory (losses, accuracies,
+    /// final parameters) is bit-identical to the uninterrupted run at any
+    /// worker count.
+    pub fn run_resumed(&self, ck: &Checkpoint) -> Result<TrainOutcome> {
+        self.run_inner(Some(ck))
+    }
+
+    fn run_inner(&self, from: Option<&Checkpoint>) -> Result<TrainOutcome> {
         let cfg = &self.exp;
         let m = &cfg.model;
-        let mut params = ModelParams::init_random(m, cfg.train.seed);
-        let mut opt =
-            SgdMomentum::new(&params, cfg.train.lr as f32, cfg.train.momentum as f32);
         let task = make_task(cfg.task, m.seq_len, m.vocab, m.classes);
         let mut batcher = Batcher::new(task, m.batch, cfg.train.seed);
-
         let mut detector = TransitionDetector::new(cfg.train.transition_threshold);
         let mut metrics = TrainMetrics::default();
         let mut masks: Option<Vec<BlockMask>> = None;
+        let mut params;
+        let start_step;
+        match from {
+            None => {
+                params = ModelParams::init_random(m, cfg.train.seed);
+                start_step = 0;
+            }
+            Some(ck) => {
+                let rs = ck.resume.as_ref().ok_or_else(|| {
+                    anyhow!(
+                        "checkpoint has no resume section — only periodic checkpoints \
+                         (train.checkpoint_every / --checkpoint-every) are resumable"
+                    )
+                })?;
+                if ck.preset != m.preset {
+                    return Err(anyhow!(
+                        "checkpoint preset {:?} does not match configured preset {:?}",
+                        ck.preset,
+                        m.preset
+                    ));
+                }
+                if rs.next_step as usize > cfg.train.steps {
+                    return Err(anyhow!(
+                        "checkpoint resumes at step {} but the run is only {} steps",
+                        rs.next_step,
+                        cfg.train.steps
+                    ));
+                }
+                params = ModelParams::from_checkpoint(ck, m.layers)?;
+                batcher.restore_rng(&rs.batcher_rng);
+                detector.restore(&rs.detector);
+                metrics.records = rs.records.clone();
+                metrics.transition_step = rs.transition_step;
+                metrics.pattern_density = rs.pattern_density.clone();
+                masks = ck.masks.clone();
+                start_step = rs.next_step as usize;
+                crate::resil::stats().note_resume();
+                self.log(&format!(
+                    "resuming at step {start_step} ({} phase)",
+                    if masks.is_some() { "sparse" } else { "dense" }
+                ));
+            }
+        }
+        let mut opt =
+            SgdMomentum::new(&params, cfg.train.lr as f32, cfg.train.momentum as f32);
+        if let Some(ck) = from {
+            restore_velocity(&mut opt, ck)?;
+        }
+        // Periodic checkpoints written so far (keep-last-K retention).
+        let mut kept: std::collections::VecDeque<String> = std::collections::VecDeque::new();
         let mut grads = ModelGrads::zeros_like(&params);
         let dh = m.d_model / m.heads;
         // Reusable per-sample buffers: free-lists shared across steps, so
@@ -114,7 +185,7 @@ impl NativeTrainer {
         let cache_pool: std::sync::Mutex<Vec<TrainCache>> =
             std::sync::Mutex::new(Vec::with_capacity(m.batch));
 
-        for step in 0..cfg.train.steps {
+        for step in start_step..cfg.train.steps {
             let batch = batcher.next_batch();
             let sw = Stopwatch::start();
             let dense_phase = masks.is_none();
@@ -144,7 +215,7 @@ impl NativeTrainer {
             self.exec.par_map_fold(
                 m.batch,
                 |b| {
-                    let mut g = match grad_pool.lock().unwrap().pop() {
+                    let mut g = match grad_pool.lock().unwrap_or_else(|e| e.into_inner()).pop() {
                         Some(mut g) => {
                             g.zero();
                             g
@@ -154,7 +225,7 @@ impl NativeTrainer {
                     let mut cache = masks_ref.map(|ms| {
                         cache_pool
                             .lock()
-                            .unwrap()
+                            .unwrap_or_else(|e| e.into_inner())
                             .pop()
                             .unwrap_or_else(|| TrainCache::new(ms, m.heads, dh))
                     });
@@ -178,9 +249,9 @@ impl NativeTrainer {
                     correct += ok as usize;
                     grads.add_assign(&g);
                     // Recycle for in-flight samples and the next step.
-                    grad_pool.lock().unwrap().push(g);
+                    grad_pool.lock().unwrap_or_else(|e| e.into_inner()).push(g);
                     if let Some(c) = cache {
-                        cache_pool.lock().unwrap().push(c);
+                        cache_pool.lock().unwrap_or_else(|e| e.into_inner()).push(c);
                     }
                     if let Some(s) = scores {
                         match &mut score_acc {
@@ -235,7 +306,7 @@ impl NativeTrainer {
             }
 
             if self.verbose && step % 10 == 0 {
-                let r = metrics.records.last().unwrap();
+                let r = metrics.records.last().expect("record pushed this step");
                 self.log(&format!(
                     "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
                     r.phase.name(),
@@ -243,6 +314,41 @@ impl NativeTrainer {
                     r.acc,
                     r.step_ms
                 ));
+            }
+
+            // Crash-safe periodic checkpoint, written after the step fully
+            // completed (optimizer applied, transition decided) — a resumed
+            // run starts at `step + 1` with the exact state this one had.
+            if let (Some(every), Some(base)) = (cfg.train.checkpoint_every, &self.ckpt_base) {
+                if (step + 1) % every == 0 {
+                    let done = metrics.records.len();
+                    let path = format!("{base}.step{done:08}");
+                    Checkpoint {
+                        preset: m.preset.clone(),
+                        step: done as u64,
+                        tensors: params.to_flat(),
+                        masks: masks.clone(),
+                        resume: Some(ResumeState {
+                            next_step: (step + 1) as u64,
+                            transition_step: metrics.transition_step,
+                            pattern_density: metrics.pattern_density.clone(),
+                            records: metrics.records.clone(),
+                            batcher_rng: batcher.rng_state(),
+                            detector: detector.state(),
+                            velocity: opt.velocity().slices().iter().map(|s| s.to_vec()).collect(),
+                        }),
+                    }
+                    .save(&path)?;
+                    self.log(&format!("checkpoint {path}"));
+                    kept.push_back(path);
+                    while kept.len() > cfg.train.checkpoint_keep.max(1) {
+                        if let Some(old) = kept.pop_front() {
+                            // Retention is best-effort: a missing/locked old
+                            // file must not kill the run.
+                            let _ = std::fs::remove_file(&old);
+                        }
+                    }
+                }
             }
         }
 
@@ -292,12 +398,39 @@ impl NativeTrainer {
             step: outcome.metrics.records.len() as u64,
             tensors: outcome.final_params.clone(),
             masks: outcome.masks.clone(),
+            resume: None,
         }
         .save(path)
     }
 }
 
+/// Copy a resume section's momentum buffer into a fresh optimizer; the
+/// slice layout must match the model exactly (manifest order).
+fn restore_velocity(opt: &mut SgdMomentum, ck: &Checkpoint) -> Result<()> {
+    let rs = ck.resume.as_ref().expect("caller verified the resume section exists");
+    let mut slices = opt.velocity_mut().slices_mut();
+    if slices.len() != rs.velocity.len() {
+        return Err(anyhow!(
+            "resume section has {} velocity slices, model has {}",
+            rs.velocity.len(),
+            slices.len()
+        ));
+    }
+    for (i, (dst, src)) in slices.iter_mut().zip(&rs.velocity).enumerate() {
+        if dst.len() != src.len() {
+            return Err(anyhow!(
+                "velocity slice {i} length {} does not match model ({})",
+                src.len(),
+                dst.len()
+            ));
+        }
+        dst.copy_from_slice(src);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::types::SparsityConfig;
@@ -334,6 +467,7 @@ mod tests {
             exec: crate::exec::ExecConfig::with_workers(workers),
             serve: Default::default(),
             obs: Default::default(),
+            resil: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -376,6 +510,89 @@ mod tests {
         assert_eq!(serial.masks, parallel.masks);
         for (a, b) in serial.final_params.iter().zip(&parallel.final_params) {
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn interrupted_resume_matches_uninterrupted_trajectory() {
+        // Train once end-to-end (golden), train again with periodic
+        // checkpoints, then resume from the mid-run checkpoint: losses,
+        // accuracies, masks and final parameters must all be bit-identical
+        // to the golden run.
+        std::env::set_var("SPION_EVAL_BATCHES", "1");
+        let base = std::env::temp_dir()
+            .join("spion_native_resume_test.ckpt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let kind = PatternKind::Spion(SpionVariant::CF);
+        let golden = NativeTrainer::new(micro_exp(kind, 12, 1)).unwrap().run().unwrap();
+
+        let mut exp = micro_exp(kind, 12, 1);
+        exp.train.checkpoint_every = Some(5);
+        NativeTrainer::new(exp).unwrap().checkpoint_to(&base).run().unwrap();
+
+        // Step 5 is pre-transition (dense), so the resumed run re-runs the
+        // detector and pattern generation from restored state.
+        let ck = Checkpoint::load(&format!("{base}.step00000005")).unwrap();
+        assert!(ck.resume.is_some(), "periodic checkpoints carry a resume section");
+        let resumed = NativeTrainer::new(micro_exp(kind, 12, 1)).unwrap().run_resumed(&ck).unwrap();
+
+        assert_eq!(resumed.metrics.records.len(), golden.metrics.records.len());
+        for (a, b) in golden.metrics.records.iter().zip(&resumed.metrics.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}", a.step);
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "acc at step {}", a.step);
+        }
+        assert_eq!(resumed.metrics.transition_step, golden.metrics.transition_step);
+        assert_eq!(resumed.masks, golden.masks);
+        assert_eq!(resumed.final_params, golden.final_params);
+
+        for suffix in ["step00000005", "step00000010"] {
+            std::fs::remove_file(format!("{base}.{suffix}")).ok();
+        }
+    }
+
+    #[test]
+    fn final_checkpoint_has_no_resume_and_resume_requires_one() {
+        std::env::set_var("SPION_EVAL_BATCHES", "1");
+        let kind = PatternKind::Spion(SpionVariant::CF);
+        let trainer = NativeTrainer::new(micro_exp(kind, 4, 1)).unwrap();
+        let outcome = trainer.run().unwrap();
+        let path = std::env::temp_dir()
+            .join("spion_native_final.ckpt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        trainer.save_checkpoint(&outcome, &path).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert!(ck.resume.is_none(), "final checkpoints carry no resume section");
+        let err = trainer.run_resumed(&ck).unwrap_err();
+        assert!(format!("{err:#}").contains("resume section"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn periodic_checkpoints_keep_last_k() {
+        std::env::set_var("SPION_EVAL_BATCHES", "1");
+        let base = std::env::temp_dir()
+            .join("spion_native_keep_test.ckpt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let mut exp = micro_exp(PatternKind::Dense, 12, 1);
+        exp.train.checkpoint_every = Some(2);
+        exp.train.checkpoint_keep = 2;
+        NativeTrainer::new(exp).unwrap().checkpoint_to(&base).run().unwrap();
+        // Writes happened after steps 2,4,6,8,10,12 — only the last two
+        // survive retention.
+        for done in [2, 4, 6, 8] {
+            let p = format!("{base}.step{done:08}");
+            assert!(!std::path::Path::new(&p).exists(), "{p} should have been pruned");
+        }
+        for done in [10, 12] {
+            let p = format!("{base}.step{done:08}");
+            assert!(std::path::Path::new(&p).exists(), "{p} should be retained");
+            std::fs::remove_file(&p).ok();
         }
     }
 }

@@ -28,6 +28,18 @@ pub fn transition_should_fire(
     }
 }
 
+/// Serializable mutable state of a [`TransitionDetector`] — the part a
+/// checkpoint's resume section must carry so a restarted run makes the
+/// same dense→sparse decision at the same step. `threshold` and
+/// `min_snapshots` come back from the config instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectorState {
+    pub prev_norm: Option<Vec<f64>>,
+    pub prev_distance: Option<Vec<f64>>,
+    pub snapshots_seen: u64,
+    pub fired: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct TransitionDetector {
     threshold: f64,
@@ -54,6 +66,25 @@ impl TransitionDetector {
 
     pub fn fired(&self) -> bool {
         self.fired
+    }
+
+    /// Snapshot the mutable detector state for a checkpoint resume section.
+    pub fn state(&self) -> DetectorState {
+        DetectorState {
+            prev_norm: self.prev_norm.clone(),
+            prev_distance: self.prev_distance.clone(),
+            snapshots_seen: self.snapshots_seen as u64,
+            fired: self.fired,
+        }
+    }
+
+    /// Restore the mutable state captured by [`state`](Self::state);
+    /// `threshold`/`min_snapshots` keep their constructor values.
+    pub fn restore(&mut self, st: &DetectorState) {
+        self.prev_norm = st.prev_norm.clone();
+        self.prev_distance = st.prev_distance.clone();
+        self.snapshots_seen = st.snapshots_seen as usize;
+        self.fired = st.fired;
     }
 
     /// Feed one snapshot of per-layer score matrices; returns true exactly
@@ -88,6 +119,7 @@ impl TransitionDetector {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::util::quickcheck::QuickCheck;
@@ -140,6 +172,25 @@ mod tests {
             crate::qc_assert!(fires <= 1, "fired {fires} times");
             Ok(())
         });
+    }
+
+    #[test]
+    fn state_roundtrip_makes_the_same_decision() {
+        // Feed two snapshots, checkpoint the state, then verify a restored
+        // detector fires at exactly the same future snapshot as the
+        // original — the resume-section invariant.
+        let mut det = TransitionDetector::new(0.05);
+        det.observe(&scores_with_norm(8, 1.0));
+        det.observe(&scores_with_norm(8, 2.0));
+        let st = det.state();
+        let mut restored = TransitionDetector::new(0.05);
+        restored.restore(&st);
+        for scale in [4.0f32, 4.0, 4.0, 4.0] {
+            let a = det.observe(&scores_with_norm(8, scale));
+            let b = restored.observe(&scores_with_norm(8, scale));
+            assert_eq!(a, b);
+        }
+        assert_eq!(det.fired(), restored.fired());
     }
 
     #[test]

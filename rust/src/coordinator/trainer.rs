@@ -128,8 +128,8 @@ impl<'r> Trainer<'r> {
                 let mut out = dense_exe.run(&inputs)?;
                 let p = m.param_count();
                 let scores_lit = out.pop().ok_or_else(|| anyhow!("missing scores"))?;
-                let acc = lit::scalar_to_f32(&out.pop().unwrap())?;
-                let loss = lit::scalar_to_f32(&out.pop().unwrap())?;
+                let acc = lit::scalar_to_f32(&out.pop().expect("dense exe returns acc"))?;
+                let loss = lit::scalar_to_f32(&out.pop().expect("dense exe returns loss"))?;
                 adam_v = out.split_off(2 * p);
                 adam_m = out.split_off(p);
                 params = out;
@@ -156,7 +156,8 @@ impl<'r> Trainer<'r> {
                         forced,
                     );
                     if fire {
-                        let scores = last_scores.as_ref().unwrap();
+                        let scores =
+                            last_scores.as_ref().expect("scores captured on snapshot step");
                         let gen = self.generate_masks(scores)?;
                         metrics.transition_step = Some(step);
                         metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
@@ -171,16 +172,22 @@ impl<'r> Trainer<'r> {
                 }
             } else {
                 // ---- sparse phase (Algorithm 2 lines 13–16) ----
-                let exe = sparse_exe.as_ref().unwrap();
+                let exe = sparse_exe.as_ref().expect("sparse exe loaded at transition");
                 let mut inputs = Vec::with_capacity(3 * params.len() + 5);
                 inputs.extend(params.iter().cloned());
                 inputs.extend(adam_m.iter().cloned());
                 inputs.extend(adam_v.iter().cloned());
-                inputs.extend([x, y, step_lit, lr, masks_literal.as_ref().unwrap().clone()]);
+                inputs.extend([
+                    x,
+                    y,
+                    step_lit,
+                    lr,
+                    masks_literal.as_ref().expect("masks set with sparse exe").clone(),
+                ]);
                 let mut out = exe.run(&inputs)?;
                 let p = m.param_count();
-                let acc = lit::scalar_to_f32(&out.pop().unwrap())?;
-                let loss = lit::scalar_to_f32(&out.pop().unwrap())?;
+                let acc = lit::scalar_to_f32(&out.pop().expect("sparse exe returns acc"))?;
+                let loss = lit::scalar_to_f32(&out.pop().expect("sparse exe returns loss"))?;
                 adam_v = out.split_off(2 * p);
                 adam_m = out.split_off(p);
                 params = out;
@@ -193,7 +200,7 @@ impl<'r> Trainer<'r> {
                 });
             }
             if self.verbose && step % 10 == 0 {
-                let r = metrics.records.last().unwrap();
+                let r = metrics.records.last().expect("record pushed this step");
                 self.log(&format!(
                     "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
                     r.phase.name(),
@@ -262,6 +269,7 @@ impl<'r> Trainer<'r> {
             step: outcome.metrics.records.len() as u64,
             tensors: outcome.final_params.clone(),
             masks: outcome.masks.clone(),
+            resume: None,
         }
         .save(path)
     }
@@ -366,6 +374,7 @@ fn literals_to_host(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::types::{preset, SparsityConfig};
@@ -382,6 +391,7 @@ mod tests {
             exec: Default::default(),
             serve: Default::default(),
             obs: Default::default(),
+            resil: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

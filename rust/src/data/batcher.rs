@@ -1,7 +1,7 @@
 //! Batching: deterministic train/eval streams over a [`Task`].
 
 use super::Task;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 
 /// A flattened batch ready for literal marshaling.
 #[derive(Debug, Clone)]
@@ -21,6 +21,19 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(task: Box<dyn Task>, batch: usize, seed: u64) -> Self {
         Self { task, batch, rng: Rng::new(seed) }
+    }
+
+    /// Snapshot the training-stream RNG (checkpoint resume). Captured
+    /// *after* a step's batch is drawn, it reproduces the next batch of
+    /// the uninterrupted run bit-identically.
+    pub fn rng_state(&self) -> RngState {
+        self.rng.state()
+    }
+
+    /// Restore a training-stream RNG snapshot taken by
+    /// [`rng_state`](Self::rng_state).
+    pub fn restore_rng(&mut self, st: &RngState) {
+        self.rng = Rng::from_state(st);
     }
 
     pub fn next_batch(&mut self) -> Batch {
@@ -81,6 +94,23 @@ mod tests {
         assert_eq!(a1.x, b1.x);
         let a2 = a.next_batch();
         assert_ne!(a1.x, a2.x, "stream advances");
+    }
+
+    #[test]
+    fn rng_state_roundtrip_resumes_the_stream() {
+        let mk = || Batcher::new(make_task(TaskKind::ListOps, 64, 20, 10), 4, 7);
+        let mut a = mk();
+        a.next_batch();
+        a.next_batch();
+        let st = a.rng_state();
+        let mut b = mk();
+        b.restore_rng(&st);
+        for _ in 0..3 {
+            let ba = a.next_batch();
+            let bb = b.next_batch();
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+        }
     }
 
     #[test]

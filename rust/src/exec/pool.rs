@@ -10,7 +10,7 @@
 
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -45,6 +45,11 @@ struct Shared {
     shutdown: AtomicBool,
     /// Round-robin cursor for submissions from non-worker threads.
     next_queue: AtomicUsize,
+    /// Jobs run to completion (including ones that panicked).
+    executed: AtomicU64,
+    /// Subset of `executed` that unwound with a panic (caught; the worker
+    /// survives). `executed - panicked` jobs finished normally.
+    panicked: AtomicU64,
 }
 
 impl Shared {
@@ -91,6 +96,8 @@ impl ThreadPool {
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
             next_queue: AtomicUsize::new(0),
+            executed: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|id| {
@@ -130,6 +137,18 @@ impl ThreadPool {
     pub(crate) fn try_pop(&self) -> Option<Job> {
         self.shared.find_job(usize::MAX)
     }
+
+    /// Jobs run to completion on pool workers (panicked ones included).
+    pub fn jobs_executed(&self) -> u64 {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that unwound with a caught panic. The pool survives these; the
+    /// two counters let callers assert `executed == submitted` (no job
+    /// vanished) and `panicked == expected` after a chaos run.
+    pub fn jobs_panicked(&self) -> u64 {
+        self.shared.panicked.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for ThreadPool {
@@ -152,7 +171,9 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
             // Scope jobs catch panics internally; this outer guard keeps the
             // worker alive if a raw `submit` job panics.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+            shared.executed.fetch_add(1, Ordering::Relaxed);
             if result.is_err() {
+                shared.panicked.fetch_add(1, Ordering::Relaxed);
                 eprintln!("[exec] worker {id}: job panicked (pool continues)");
             }
             continue;
@@ -255,5 +276,9 @@ mod tests {
         while !*g {
             g = cv.wait_timeout(g, Duration::from_secs(5)).unwrap().0;
         }
+        // Both jobs ran (the panicking one counts as executed), exactly one
+        // unwound — no submission vanished.
+        assert_eq!(pool.jobs_executed(), 2);
+        assert_eq!(pool.jobs_panicked(), 1);
     }
 }

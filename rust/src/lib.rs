@@ -21,7 +21,13 @@ pub mod attention;
 pub mod model;
 pub mod data;
 pub mod runtime;
+// User-supplied files (checkpoints, configs) flow through these two
+// modules: panicking on bad input is a bug, not a shortcut — internal
+// invariants must use `expect` with a message (tests opt back in).
+#[deny(clippy::unwrap_used)]
 pub mod coordinator;
+#[deny(clippy::unwrap_used)]
 pub mod serve;
 pub mod metrics;
 pub mod obs;
+pub mod resil;

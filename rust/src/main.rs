@@ -45,6 +45,11 @@ fn print_help() {
          \x20 train     --preset tiny --kind cf --steps 200 --lr 1e-3 [--config file.toml]\n\
          \x20           --backend native|pjrt (native = rust full-encoder engine, no artifacts;\n\
          \x20           pjrt = AOT artifacts; --momentum tunes the native SGD optimizer)\n\
+         \x20           --checkpoint-every N  crash-safe periodic checkpoints (atomic write +\n\
+         \x20           CRC + resume section) at {--checkpoint-out}.stepNNNNNNNN\n\
+         \x20           --checkpoint-keep K   retain the last K periodic checkpoints (default 3)\n\
+         \x20           --resume PATH         continue an interrupted run bit-identically\n\
+         \x20           (native backend; restores optimizer momentum, RNG and detector state)\n\
          \x20 pattern   --variant cf --l 256 --block 16 --alpha 0.9\n\
          \x20 ops       --l 4096 --d 64 --density 0.1\n\
          \x20 data      --task listops --n 3\n\
@@ -53,7 +58,14 @@ fn print_help() {
          \x20           [serve] engine: --queue-depth N (bounded admission; overload → QueueFull)\n\
          \x20           --max-batch N --max-wait-us N (batching window) --kernel-workers N\n\
          \x20           (per-worker sparse-kernel parallelism for big-L requests)\n\
+         \x20           --deadline-us N (shed requests still queued past N µs; 0 = off)\n\
+         \x20           SIGTERM drains gracefully: stop admitting, finish in-flight,\n\
+         \x20           resolve the backlog with typed errors, flush metrics\n\
          \x20 presets\n\n\
+         RESILIENCE (`[resil]` in TOML or SPION_FAULTS env):\n\
+         \x20 SPION_FAULTS=p1,p2     arm fault points (ckpt-write worker-panic queue-slow io-err)\n\
+         \x20 SPION_FAULT_PROB=0.5   per-hit firing probability (seeded, deterministic)\n\
+         \x20 SPION_FAULT_AFTER=N    ignore the first N-1 hits   SPION_FAULT_KILL=1 exit(42) on fire\n\
          GLOBAL OPTIONS:\n\
          \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
          \x20 --chunk-blocks N   block rows per scheduling chunk (0 = auto)\n\
@@ -88,6 +100,7 @@ fn serve_from_args(args: &Args, default: ServeConfig) -> Result<ServeConfig> {
         max_wait_us: args.u64_or("max-wait-us", default_wait_us),
         workers: args.usize_or("workers", default.workers),
         kernel_workers: args.usize_or("kernel-workers", default.kernel_workers),
+        deadline_us: args.u64_or("deadline-us", default.deadline_us),
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -161,6 +174,13 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         exp.serve = serve_from_args(args, exp.serve)?;
         // …and CLI obs flags the file's [obs] section.
         exp.obs = obs_from_args(args, exp.obs);
+        if args.has("checkpoint-every") {
+            exp.train.checkpoint_every = Some(args.usize_or("checkpoint-every", 1));
+        }
+        if args.has("checkpoint-keep") {
+            exp.train.checkpoint_keep = args.usize_or("checkpoint-keep", exp.train.checkpoint_keep);
+        }
+        exp.validate().map_err(|e| anyhow::anyhow!(e))?;
         return Ok(exp);
     }
     let preset_name = args.str_or("preset", "tiny");
@@ -188,7 +208,11 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         train.backend = TrainBackend::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown --backend {b} (native|pjrt)"))?;
     }
-    Ok(ExperimentConfig {
+    if args.has("checkpoint-every") {
+        train.checkpoint_every = Some(args.usize_or("checkpoint-every", 1));
+    }
+    train.checkpoint_keep = args.usize_or("checkpoint-keep", train.checkpoint_keep);
+    let exp = ExperimentConfig {
         task,
         model,
         train,
@@ -196,12 +220,29 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         exec: exec_from_args(args),
         serve: serve_from_args(args, Default::default())?,
         obs: obs_from_args(args, Default::default()),
+        resil: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
-    })
+    };
+    exp.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(exp)
+}
+
+/// Arm the fault-injection registry from the `[resil]` config section,
+/// then let `SPION_FAULTS` env arming override it (the chaos CI uses the
+/// env form). Disarmed — a single relaxed load per fault point — unless
+/// one of the two actually names a fault.
+fn arm_faults(exp: &ExperimentConfig) -> Result<()> {
+    if !exp.resil.faults.is_empty() {
+        spion::resil::fault::arm(&exp.resil).map_err(|e| anyhow::anyhow!(e))?;
+        eprintln!("[resil] armed fault points: {}", exp.resil.faults.join(", "));
+    }
+    spion::resil::fault::arm_from_env().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(())
 }
 
 fn run_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
+    arm_faults(&exp)?;
     let obs_cfg = exp.obs.clone();
     spion::obs::init(&obs_cfg);
     println!(
@@ -221,11 +262,29 @@ fn run_train(args: &Args) -> Result<()> {
         TrainBackend::Native => {
             // Fully offline: no artifacts directory, no PJRT — the rust
             // full-encoder engine runs all three phases.
-            let trainer = NativeTrainer::new(exp)?.verbose(true);
-            let outcome = trainer.run()?;
+            let resume_ck = args
+                .get("resume")
+                .map(spion::coordinator::checkpoint::Checkpoint::load)
+                .transpose()?;
+            // Periodic checkpoints share the --checkpoint-out base; the
+            // final file keeps the bare name, mid-run ones get .stepNNNNNNNN.
+            let base = args.str_or("checkpoint-out", "spion.ckpt");
+            let trainer = NativeTrainer::new(exp)?.verbose(true).checkpoint_to(base);
+            let outcome = match &resume_ck {
+                Some(ck) => {
+                    println!("resuming from checkpoint at step {}", ck.step);
+                    trainer.run_resumed(ck)?
+                }
+                None => trainer.run()?,
+            };
             report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
         }
         TrainBackend::Pjrt => {
+            if args.has("resume") {
+                anyhow::bail!(
+                    "--resume is supported by the native backend only (pass --backend native)"
+                );
+            }
             let rt = Runtime::cpu()?;
             let trainer = Trainer::new(&rt, exp)?.verbose(true);
             let outcome = trainer.run()?;
@@ -343,9 +402,35 @@ fn run_data(args: &Args) -> Result<()> {
 /// sparsity pattern training froze — `--kind dense` opts out); only
 /// maskless checkpoints fall back to regenerating a pattern of `--kind`
 /// from synthetic scores.
+/// Set by the SIGTERM handler; polled by `run_serve`'s hold loop so an
+/// orchestrator's stop signal triggers a graceful drain instead of a kill.
+static SIGTERM_RECEIVED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Install a minimal SIGTERM handler (the vendored crate set has no signal
+/// crate, so this binds libc's `signal` directly). The handler only stores
+/// to an atomic, which is async-signal-safe.
+#[cfg(unix)]
+fn install_sigterm_handler() {
+    extern "C" fn on_sigterm(_sig: i32) {
+        SIGTERM_RECEIVED.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm_handler() {}
+
 fn run_serve(args: &Args) -> Result<()> {
     use spion::model::{Encoder, ModelParams};
     use spion::serve::Engine;
+    install_sigterm_handler();
     // --config supplies model/[exec]/[serve] defaults, flags override —
     // loaded once so the file's preset cannot silently diverge from the
     // model actually served.
@@ -358,6 +443,12 @@ fn run_serve(args: &Args) -> Result<()> {
     let ocfg =
         obs_from_args(args, file_exp.as_ref().map(|e| e.obs.clone()).unwrap_or_default());
     spion::obs::init(&ocfg);
+    // Fault injection: `[resil]` from --config, then the environment
+    // (SPION_FAULTS et al.) — the chaos harness drives serve runs this way.
+    match &file_exp {
+        Some(exp) => arm_faults(exp)?,
+        None => spion::resil::fault::arm_from_env().map_err(|e| anyhow::anyhow!(e))?,
+    }
     let (task, model) = if let Some(name) = args.get("preset") {
         preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?
     } else if let Some(exp) = &file_exp {
@@ -406,6 +497,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 exec: ecfg,
                 serve: Default::default(),
                 obs: Default::default(),
+                resil: Default::default(),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);
@@ -446,6 +538,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 spion::obs::prom::Sources {
                     server: Some(engine.stats().clone()),
                     ops: Some(engine.op_tally()),
+                    health: Some(engine.health()),
                 },
             )?;
             // Tests and scripts parse this line to find an ephemeral port.
@@ -496,13 +589,38 @@ fn run_serve(args: &Args) -> Result<()> {
         wait.percentile(0.99) as f64 / 1e6,
     );
     // --hold-ms keeps the engine + metrics endpoint alive after the
-    // synthetic workload, giving scrapers a deterministic window.
+    // synthetic workload, giving scrapers a deterministic window. The wait
+    // is sliced so a SIGTERM turns into a prompt graceful drain: stop
+    // admitting, finish in-flight work, resolve the backlog, flush stats.
     let hold_ms = args.u64_or("hold-ms", 0);
     if hold_ms > 0 {
         println!("holding for {hold_ms} ms");
-        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(hold_ms);
+        loop {
+            if SIGTERM_RECEIVED.load(std::sync::atomic::Ordering::Relaxed) {
+                println!("SIGTERM received — draining");
+                break;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            std::thread::sleep((deadline - now).min(std::time::Duration::from_millis(50)));
+        }
     }
     engine.shutdown();
+    // Conservation line (the chaos CI job greps it): after the drain every
+    // admitted ticket has resolved exactly once — served, shed, or failed.
+    {
+        use std::sync::atomic::Ordering::Relaxed;
+        let admitted = stats.admitted.load(Relaxed);
+        let (served, shed, failed) =
+            (stats.served.load(Relaxed), stats.shed.load(Relaxed), stats.failed.load(Relaxed));
+        println!(
+            "drain complete: {}/{admitted} admitted tickets resolved (served {served}, shed {shed}, failed {failed})",
+            served + shed + failed,
+        );
+    }
     drop(metrics_srv);
     if let Some(path) = &ocfg.trace_out {
         spion::obs::trace::write(path)?;

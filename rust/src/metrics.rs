@@ -18,7 +18,7 @@ impl Phase {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepRecord {
     pub step: usize,
     pub phase: Phase,

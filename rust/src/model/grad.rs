@@ -194,6 +194,18 @@ impl SgdMomentum {
         Self { lr, momentum, vel: ModelGrads::zeros_like(params) }
     }
 
+    /// The momentum buffer, in manifest order (checkpoint resume reads it).
+    pub fn velocity(&self) -> &ModelGrads {
+        &self.vel
+    }
+
+    /// Mutable momentum buffer — checkpoint resume restores it so the
+    /// first post-resume step applies the exact same update as the
+    /// uninterrupted run.
+    pub fn velocity_mut(&mut self) -> &mut ModelGrads {
+        &mut self.vel
+    }
+
     pub fn step(&mut self, params: &mut ModelParams, grads: &ModelGrads) {
         let mu = self.momentum;
         let lr = self.lr;

@@ -108,7 +108,17 @@ fn handle_conn(mut stream: TcpStream, sources: &Sources) -> std::io::Result<()> 
     } else {
         match path {
             "/metrics" => ("200 OK", "text/plain; version=0.0.4", render(sources)),
-            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            "/healthz" => {
+                // ok | degraded | draining, from the engine's shared cell.
+                // Always HTTP 200: orchestrators key off the body, and a
+                // draining process is healthy enough to say so.
+                let h = sources
+                    .health
+                    .as_ref()
+                    .map(|h| h.load(Ordering::Relaxed))
+                    .unwrap_or(crate::resil::HEALTH_OK);
+                ("200 OK", "text/plain", format!("{}\n", crate::resil::health_name(h)))
+            }
             _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
         }
     };

@@ -27,6 +27,9 @@ use std::sync::Arc;
 pub struct Sources {
     pub server: Option<Arc<ServerStats>>,
     pub ops: Option<Arc<OpTally>>,
+    /// Shared serving health cell — drives `/healthz` and the
+    /// `spion_serve_health` gauge. `None` renders (and reports) `ok`.
+    pub health: Option<crate::resil::Health>,
 }
 
 const QUANTILES: [(f64, &str); 3] = [(0.50, "0.5"), (0.90, "0.9"), (0.99, "0.99")];
@@ -128,12 +131,17 @@ pub fn render(sources: &Sources) -> String {
     }
 
     if let Some(stats) = &sources.server {
-        let counters: [(&str, u64, &str); 5] = [
+        let counters: [(&str, u64, &str); 6] = [
             ("served", stats.served.load(Ordering::Relaxed), "Requests served to completion."),
             ("batches", stats.batches.load(Ordering::Relaxed), "Batches executed."),
             ("admitted", stats.admitted.load(Ordering::Relaxed), "Requests admitted."),
             ("rejected", stats.rejected.load(Ordering::Relaxed), "Requests rejected at admission."),
             ("shed", stats.shed.load(Ordering::Relaxed), "Admitted requests shed at shutdown."),
+            (
+                "failed",
+                stats.failed.load(Ordering::Relaxed),
+                "Admitted requests resolved WorkerFailed or DeadlineExceeded.",
+            ),
         ];
         for (name, v, help) in counters {
             let full = format!("spion_serve_{name}_total");
@@ -180,6 +188,60 @@ pub fn render(sources: &Sources) -> String {
         }
     }
 
+    // Resilience families render unconditionally: the stats live in a
+    // process-wide static, so a train-side scrape sees checkpoint/resume
+    // counters and a serve-side scrape sees respawns and deadline sheds.
+    let r = crate::resil::stats();
+    let resil_counters: [(&str, u64, &str); 3] = [
+        (
+            "worker_respawns",
+            r.worker_respawns.load(Ordering::Relaxed),
+            "Serve workers rebuilt after a supervised panic.",
+        ),
+        (
+            "deadline_shed",
+            r.deadline_shed.load(Ordering::Relaxed),
+            "Requests shed because their deadline expired before execution.",
+        ),
+        (
+            "resume",
+            r.resume_total.load(Ordering::Relaxed),
+            "Training runs resumed from a checkpoint's resume section.",
+        ),
+    ];
+    for (name, v, help) in resil_counters {
+        let full = format!("spion_resil_{name}_total");
+        help_line(&mut out, &full, "counter", help);
+        let _ = writeln!(out, "{full} {v}");
+    }
+    help_line(
+        &mut out,
+        "spion_resil_checkpoint_write_seconds",
+        "summary",
+        "Durable checkpoint write latency (tmp + fsync + rename).",
+    );
+    emit_summary(
+        &mut out,
+        "spion_resil_checkpoint_write_seconds",
+        "",
+        &r.checkpoint_write.snapshot(),
+    );
+
+    if let Some(health) = &sources.health {
+        let h = health.load(Ordering::Relaxed);
+        help_line(
+            &mut out,
+            "spion_serve_health",
+            "gauge",
+            "Serving health: 0 = ok, 1 = degraded, 2 = draining.",
+        );
+        let _ = writeln!(
+            out,
+            "spion_serve_health{{state=\"{}\"}} {h}",
+            crate::resil::health_name(h)
+        );
+    }
+
     let (captured, dropped) = super::trace::stats();
     help_line(&mut out, "spion_trace_events_captured", "gauge", "Events held in the trace ring.");
     let _ = writeln!(out, "spion_trace_events_captured {captured}");
@@ -192,6 +254,21 @@ pub fn render(sources: &Sources) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn resil_families_render_unconditionally() {
+        let text = render(&Sources::default());
+        assert!(text.contains("spion_resil_worker_respawns_total"));
+        assert!(text.contains("spion_resil_deadline_shed_total"));
+        assert!(text.contains("spion_resil_resume_total"));
+        assert!(text.contains("spion_resil_checkpoint_write_seconds_count"));
+        // No health source → no health gauge (train-side scrapes).
+        assert!(!text.contains("spion_serve_health"));
+        let health = crate::resil::new_health();
+        health.store(crate::resil::HEALTH_DEGRADED, Ordering::Relaxed);
+        let text = render(&Sources { health: Some(health), ..Default::default() });
+        assert!(text.contains("spion_serve_health{state=\"degraded\"} 1"));
+    }
 
     #[test]
     fn render_without_sources_is_parseable() {

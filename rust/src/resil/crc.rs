@@ -1,0 +1,84 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checksum
+//! behind the checkpoint format's per-section integrity trailers. Table
+//! built at compile time; no dependencies.
+//!
+//! Streaming use: seed with [`INIT`], fold bytes through [`update`], close
+//! with [`finish`]. One-shot use: [`of`].
+
+/// Streaming seed (all-ones register, per the IEEE definition).
+pub const INIT: u32 = 0xFFFF_FFFF;
+
+const fn build_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Fold `data` into a running CRC register (seeded with [`INIT`]).
+#[inline]
+pub fn update(crc: u32, data: &[u8]) -> u32 {
+    let mut c = crc;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// Close a running register into the final CRC value.
+#[inline]
+pub fn finish(crc: u32) -> u32 {
+    crc ^ 0xFFFF_FFFF
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn of(data: &[u8]) -> u32 {
+    finish(update(INIT, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical check value for CRC-32/IEEE.
+        assert_eq!(of(b"123456789"), 0xCBF4_3926);
+        assert_eq!(of(b""), 0);
+        assert_eq!(of(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut c = INIT;
+        for chunk in data.chunks(7) {
+            c = update(c, chunk);
+        }
+        assert_eq!(finish(c), of(data));
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut data = vec![0u8; 64];
+        let base = of(&data);
+        for byte in 0..64 {
+            for bit in 0..8 {
+                data[byte] ^= 1 << bit;
+                assert_ne!(of(&data), base, "flip at {byte}:{bit} undetected");
+                data[byte] ^= 1 << bit;
+            }
+        }
+    }
+}

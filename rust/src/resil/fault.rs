@@ -1,0 +1,284 @@
+//! Deterministic fault injection — named fault points compiled into the
+//! hot paths (checkpoint write, serve worker, queue pop, checkpoint read)
+//! that a chaos harness can arm with a seeded RNG.
+//!
+//! Cost model follows the obs registry (PR 6): when nothing is armed —
+//! every production run, every ordinary test — [`trip`] is a **single
+//! relaxed atomic load** and returns `false`. The slow path (hit counters,
+//! membership mask, seeded coin flip) only runs once a harness has called
+//! [`arm`] or set `SPION_FAULTS`. Injection is therefore invisible to the
+//! PR-5 zero-allocation and fused-parity witnesses.
+//!
+//! Determinism: firing decisions come from a SplitMix64 stream seeded by
+//! the harness (`seed`), gated by a per-point hit counter (`after` = fire
+//! from the Nth encounter on) and a probability (`prob`). Same arming +
+//! same execution order ⇒ same faults.
+//!
+//! Kill mode (`kill = true` / `SPION_FAULT_KILL=1`) turns a tripped fault
+//! into an immediate `process::exit(42)` — the CI chaos job uses this to
+//! cut training down mid-checkpoint-write and then prove `--resume`
+//! reconstructs the exact trajectory.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Exit code a kill-mode fault terminates the process with.
+pub const KILL_EXIT_CODE: i32 = 42;
+
+/// The catalog of injectable fault points. Call sites are the single
+/// source of truth for behavior on trip:
+///
+/// | point          | site                              | effect when tripped        |
+/// |----------------|-----------------------------------|----------------------------|
+/// | `ckpt-write`   | `Checkpoint::save`, before rename | write error (tmp left)     |
+/// | `worker-panic` | serve worker, before forward      | panic (supervised)         |
+/// | `queue-slow`   | serve worker, batch start         | 2 ms stall                 |
+/// | `io-err`       | `Checkpoint::load`, after open    | read error                 |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    CkptWrite,
+    WorkerPanic,
+    QueueSlow,
+    IoErr,
+}
+
+pub const N_POINTS: usize = 4;
+pub const ALL_POINTS: [FaultPoint; N_POINTS] =
+    [FaultPoint::CkptWrite, FaultPoint::WorkerPanic, FaultPoint::QueueSlow, FaultPoint::IoErr];
+
+impl FaultPoint {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPoint::CkptWrite => "ckpt-write",
+            FaultPoint::WorkerPanic => "worker-panic",
+            FaultPoint::QueueSlow => "queue-slow",
+            FaultPoint::IoErr => "io-err",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultPoint> {
+        ALL_POINTS.into_iter().find(|p| p.name() == s.trim())
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            FaultPoint::CkptWrite => 0,
+            FaultPoint::WorkerPanic => 1,
+            FaultPoint::QueueSlow => 2,
+            FaultPoint::IoErr => 3,
+        }
+    }
+}
+
+/// `[resil]` config section / `SPION_FAULT*` env surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilConfig {
+    /// Armed fault points by name (empty = everything disarmed).
+    pub faults: Vec<String>,
+    /// Probability a hit past `after` fires, in [0, 1].
+    pub prob: f64,
+    /// First hit (1-based) of each point that is eligible to fire;
+    /// 0 and 1 both mean "from the first hit".
+    pub after: u64,
+    /// Seed for the firing-decision RNG.
+    pub seed: u64,
+    /// Tripped faults call `process::exit(42)` instead of reporting —
+    /// simulates a hard crash for the chaos CI job.
+    pub kill: bool,
+}
+
+impl Default for ResilConfig {
+    fn default() -> Self {
+        ResilConfig { faults: Vec::new(), prob: 1.0, after: 0, seed: 42, kill: false }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static MASK: AtomicU32 = AtomicU32::new(0);
+/// Probability in micro-units (1_000_000 = certain).
+static PROB_MICRO: AtomicU32 = AtomicU32::new(1_000_000);
+static AFTER: AtomicU64 = AtomicU64::new(0);
+static KILL: AtomicBool = AtomicBool::new(false);
+static RNG: Mutex<u64> = Mutex::new(0);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static HITS: [AtomicU64; N_POINTS] = [ZERO; N_POINTS];
+static FIRED: [AtomicU64; N_POINTS] = [ZERO; N_POINTS];
+
+/// Arm the registry from a config. Unknown fault names are an error (a
+/// typo must not silently disarm a chaos run). An empty `faults` list
+/// disarms everything.
+pub fn arm(cfg: &ResilConfig) -> Result<(), String> {
+    let mut mask = 0u32;
+    for name in &cfg.faults {
+        let p = FaultPoint::parse(name).ok_or_else(|| {
+            format!(
+                "unknown fault point {name:?} (expected one of: {})",
+                ALL_POINTS.map(|p| p.name()).join(", ")
+            )
+        })?;
+        mask |= 1 << p.index();
+    }
+    if !(0.0..=1.0).contains(&cfg.prob) {
+        return Err(format!("fault prob {} outside [0, 1]", cfg.prob));
+    }
+    MASK.store(mask, Ordering::Relaxed);
+    PROB_MICRO.store((cfg.prob * 1e6).round() as u32, Ordering::Relaxed);
+    AFTER.store(cfg.after, Ordering::Relaxed);
+    KILL.store(cfg.kill, Ordering::Relaxed);
+    *RNG.lock().unwrap_or_else(|e| e.into_inner()) = cfg.seed;
+    for h in &HITS {
+        h.store(0, Ordering::Relaxed);
+    }
+    for f in &FIRED {
+        f.store(0, Ordering::Relaxed);
+    }
+    // Publish last so trip() never sees a half-written configuration.
+    ARMED.store(mask != 0, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm everything; [`trip`] is a single relaxed load again.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    MASK.store(0, Ordering::Relaxed);
+}
+
+/// Arm from the environment (`SPION_FAULTS="ckpt-write,worker-panic"`,
+/// `SPION_FAULT_PROB`, `SPION_FAULT_AFTER`, `SPION_FAULT_SEED`,
+/// `SPION_FAULT_KILL=1`). No-op when `SPION_FAULTS` is unset or empty —
+/// call it unconditionally from binary entry points.
+pub fn arm_from_env() -> Result<(), String> {
+    let faults = match std::env::var("SPION_FAULTS") {
+        Ok(s) if !s.trim().is_empty() => {
+            s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
+        }
+        _ => return Ok(()),
+    };
+    let num = |key: &str, default: f64| -> Result<f64, String> {
+        match std::env::var(key) {
+            Ok(v) => v.trim().parse::<f64>().map_err(|_| format!("bad {key}={v:?}")),
+            Err(_) => Ok(default),
+        }
+    };
+    let cfg = ResilConfig {
+        faults,
+        prob: num("SPION_FAULT_PROB", 1.0)?,
+        after: num("SPION_FAULT_AFTER", 0.0)? as u64,
+        seed: num("SPION_FAULT_SEED", 42.0)? as u64,
+        kill: std::env::var("SPION_FAULT_KILL").map(|v| v == "1" || v == "true").unwrap_or(false),
+    };
+    arm(&cfg)
+}
+
+/// True while any fault point is armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Times `p` has fired since the last [`arm`] (test observability).
+pub fn fired_count(p: FaultPoint) -> u64 {
+    FIRED[p.index()].load(Ordering::Relaxed)
+}
+
+/// Times `p` has been encountered since the last [`arm`].
+pub fn hit_count(p: FaultPoint) -> u64 {
+    HITS[p.index()].load(Ordering::Relaxed)
+}
+
+/// Should the fault at point `p` fire here? Disarmed cost: one relaxed
+/// load. In kill mode a firing trip terminates the process instead of
+/// returning.
+#[inline]
+pub fn trip(p: FaultPoint) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    trip_slow(p)
+}
+
+#[cold]
+fn trip_slow(p: FaultPoint) -> bool {
+    let i = p.index();
+    if MASK.load(Ordering::Relaxed) & (1 << i) == 0 {
+        return false;
+    }
+    let hit = HITS[i].fetch_add(1, Ordering::Relaxed) + 1;
+    if hit < AFTER.load(Ordering::Relaxed).max(1) {
+        return false;
+    }
+    let prob = PROB_MICRO.load(Ordering::Relaxed);
+    if prob < 1_000_000 {
+        // SplitMix64 step on the shared seeded stream.
+        let draw = {
+            let mut s = RNG.lock().unwrap_or_else(|e| e.into_inner());
+            *s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = *s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        if (draw >> 44) as u32 % 1_000_000 >= prob {
+            return false;
+        }
+    }
+    FIRED[i].fetch_add(1, Ordering::Relaxed);
+    if KILL.load(Ordering::Relaxed) {
+        eprintln!("[resil] fault {} tripped on hit {hit} — killing process", p.name());
+        std::process::exit(KILL_EXIT_CODE);
+    }
+    true
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    // IMPORTANT: the registry is process-global and production code trips
+    // it from checkpoint saves and serve workers, so lib-binary tests must
+    // NEVER arm it — concurrently running trainer/engine tests would see
+    // injected faults. Tests that arm live in `tests/chaos.rs`, a
+    // dedicated integration binary (own process) whose tests serialize on
+    // a local gate. Only side-effect-free behavior is verified here.
+
+    #[test]
+    fn disarmed_is_inert() {
+        for p in ALL_POINTS {
+            assert!(!trip(p));
+        }
+    }
+
+    #[test]
+    fn unknown_fault_name_is_an_error() {
+        // arm() validates before mutating, so a failed arm is pure — safe
+        // to exercise even in this binary.
+        let err =
+            arm(&ResilConfig { faults: vec!["ckpt-wirte".into()], ..Default::default() })
+                .unwrap_err();
+        assert!(err.contains("ckpt-wirte"), "{err}");
+        assert!(err.contains("ckpt-write"), "catalog missing from error: {err}");
+        assert!(!armed());
+    }
+
+    #[test]
+    fn out_of_range_probability_is_an_error() {
+        let err = arm(&ResilConfig {
+            faults: vec!["io-err".into()],
+            prob: 1.5,
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("prob"), "{err}");
+        assert!(!armed());
+    }
+
+    #[test]
+    fn point_names_parse_roundtrip() {
+        for p in ALL_POINTS {
+            assert_eq!(FaultPoint::parse(p.name()), Some(p));
+        }
+        assert_eq!(FaultPoint::parse("no-such-point"), None);
+    }
+}

@@ -1,0 +1,106 @@
+//! Resilience layer: crash-safe checkpointing support, serve-side health
+//! states, process-wide resilience counters, and the deterministic
+//! fault-injection registry ([`fault`]).
+//!
+//! Three consumers:
+//! - `coordinator/checkpoint.rs` uses [`crc`] for the v2 integrity
+//!   trailers and reports write latencies / resume counts here;
+//! - `serve/engine.rs` drives the health state machine
+//!   (`ok → degraded` on respawn-budget exhaustion, `→ draining` on
+//!   shutdown) and counts worker respawns + deadline sheds;
+//! - `obs/{http,prom}.rs` render `/healthz` and the `spion_resil_*`
+//!   Prometheus families from the state kept here.
+//!
+//! Everything is atomics + one lock-free histogram: scrape-safe from any
+//! thread, no allocation after startup.
+
+pub mod crc;
+pub mod fault;
+
+pub use fault::{FaultPoint, ResilConfig};
+
+use crate::obs::Hist;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Serving health states surfaced by `/healthz` (stored as a `u8` so the
+/// engine and the HTTP endpoint share one atomic).
+pub const HEALTH_OK: u8 = 0;
+pub const HEALTH_DEGRADED: u8 = 1;
+pub const HEALTH_DRAINING: u8 = 2;
+
+pub fn health_name(h: u8) -> &'static str {
+    match h {
+        HEALTH_DEGRADED => "degraded",
+        HEALTH_DRAINING => "draining",
+        _ => "ok",
+    }
+}
+
+/// A shared health cell: the engine writes, `/healthz` and prom read.
+pub type Health = Arc<AtomicU8>;
+
+pub fn new_health() -> Health {
+    Arc::new(AtomicU8::new(HEALTH_OK))
+}
+
+/// Process-wide monotonic resilience counters (the `spion_resil_*`
+/// Prometheus families).
+pub struct ResilStats {
+    /// Serve workers rebuilt after a supervised panic.
+    pub worker_respawns: AtomicU64,
+    /// Requests shed because their deadline expired before execution.
+    pub deadline_shed: AtomicU64,
+    /// Training runs restarted from a checkpoint's resume section.
+    pub resume_total: AtomicU64,
+    /// Checkpoint write latency (atomic durable write: tmp+fsync+rename).
+    pub checkpoint_write: Hist,
+}
+
+static STATS: ResilStats = ResilStats {
+    worker_respawns: AtomicU64::new(0),
+    deadline_shed: AtomicU64::new(0),
+    resume_total: AtomicU64::new(0),
+    checkpoint_write: Hist::new(),
+};
+
+/// The process-wide stats instance.
+pub fn stats() -> &'static ResilStats {
+    &STATS
+}
+
+impl ResilStats {
+    pub fn note_respawn(&self) -> u64 {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn note_deadline_shed(&self) {
+        self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_resume(&self) {
+        self.resume_total.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_names() {
+        assert_eq!(health_name(HEALTH_OK), "ok");
+        assert_eq!(health_name(HEALTH_DEGRADED), "degraded");
+        assert_eq!(health_name(HEALTH_DRAINING), "draining");
+        assert_eq!(health_name(200), "ok", "unknown values read as ok");
+    }
+
+    #[test]
+    fn counters_are_monotonic() {
+        let before = stats().deadline_shed.load(Ordering::Relaxed);
+        stats().note_deadline_shed();
+        assert!(stats().deadline_shed.load(Ordering::Relaxed) > before);
+        stats().checkpoint_write.record(1_000);
+        assert!(stats().checkpoint_write.snapshot().count >= 1);
+    }
+}

@@ -81,6 +81,7 @@ impl<T> DynamicBatcher<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;

@@ -57,6 +57,7 @@ use anyhow::{bail, Result};
 use crate::exec::{ExecConfig, OpTally, ThreadPool};
 use crate::model::Encoder;
 use crate::obs::{self, Hist, SpanId};
+use crate::resil::{self, fault, FaultPoint, Health};
 use crate::tensor::ops::argmax;
 
 use super::queue::{Bounded, TryPushError};
@@ -66,6 +67,11 @@ use super::ticket::{ticket, AdmissionError, Resolver, ServeError, Ticket};
 /// misconfiguration (it holds admitted requests hostage for seconds), so
 /// validation rejects it instead of serving with degenerate latency.
 pub const MAX_WAIT_CAP_US: u64 = 10_000_000;
+
+/// Supervised-panic respawn budget per worker: after this many panics the
+/// worker retires instead of respawning (a systematically-poisoned model
+/// would otherwise churn forever), and `/healthz` flips to `degraded`.
+pub const MAX_WORKER_RESPAWNS: u64 = 8;
 
 /// First-class serving configuration: the `[serve]` TOML section and the
 /// `spion serve` CLI flags (`--queue-depth`, `--max-batch`,
@@ -86,11 +92,23 @@ pub struct ServeConfig {
     /// width. `1` (default) = request-level parallelism only; `0` = one
     /// per core. Total threads ≈ `workers × kernel_workers`.
     pub kernel_workers: usize,
+    /// Per-request execution deadline in microseconds, measured from
+    /// admission. A request still queued when it expires is shed with
+    /// [`ServeError::DeadlineExceeded`] instead of running a forward
+    /// nobody is waiting for. `0` (default) disables the deadline.
+    pub deadline_us: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { queue_depth: 256, max_batch: 8, max_wait_us: 5_000, workers: 1, kernel_workers: 1 }
+        Self {
+            queue_depth: 256,
+            max_batch: 8,
+            max_wait_us: 5_000,
+            workers: 1,
+            kernel_workers: 1,
+            deadline_us: 0,
+        }
     }
 }
 
@@ -151,6 +169,10 @@ pub struct ServerStats {
     /// Admitted tickets resolved `ShuttingDown` at shutdown (drained
     /// backlog that never reached a worker).
     pub shed: AtomicU64,
+    /// Admitted tickets resolved with `WorkerFailed` (supervised worker
+    /// panic) or `DeadlineExceeded` (expired before execution). Together
+    /// with `served` and `shed` this conserves `admitted`.
+    pub failed: AtomicU64,
     /// Gauge: current admission-queue depth (approximate under races).
     pub queue_depth: AtomicU64,
     /// High-water mark of the admission queue (≤ configured
@@ -192,6 +214,9 @@ struct Submission {
     id: u64,
     tokens: Vec<i32>,
     submitted: Instant,
+    /// Expiry instant when `ServeConfig::deadline_us > 0`; a worker sheds
+    /// the request unexecuted once this passes.
+    deadline: Option<Instant>,
     resolver: Resolver,
 }
 
@@ -205,6 +230,9 @@ struct Core {
     /// The encoder's op-tally storage (shared with every worker clone via
     /// [`crate::exec::Exec::with_shared_tally`]) — /metrics reads it.
     tally: Arc<OpTally>,
+    /// Shared health cell: `ok` → `degraded` when a worker exhausts its
+    /// respawn budget, → `draining` on shutdown. `/healthz` reads it.
+    health: Health,
 }
 
 struct JoinState {
@@ -230,6 +258,7 @@ impl Engine {
         }
         let workers = cfg.resolved_workers();
         let stats = Arc::new(ServerStats::default());
+        let health = resil::new_health();
         let core = Arc::new(Core {
             admission: Bounded::new(cfg.queue_depth),
             stats: stats.clone(),
@@ -237,6 +266,7 @@ impl Engine {
             seq_len: encoder.params().seq_len(),
             vocab: encoder.params().embed.rows,
             tally: encoder.exec().op_tally(),
+            health: health.clone(),
         });
 
         // Bounded batch queue: a couple of formed batches per worker. When
@@ -303,7 +333,8 @@ impl Engine {
             };
             let batch_q = batch_q.clone();
             let stats = stats.clone();
-            pool.submit(move |_wid| serve_worker(enc, batch_q, stats));
+            let health = health.clone();
+            pool.submit(move |_wid| serve_worker(enc, batch_q, stats, health));
         }
 
         Ok(Self { core, cfg, join: Mutex::new(JoinState { router: Some(router), pool: Some(pool) }) })
@@ -327,6 +358,13 @@ impl Engine {
         self.core.admission.len()
     }
 
+    /// The shared health cell (`/healthz`): `ok` while serving normally,
+    /// `degraded` after a worker exhausts its respawn budget, `draining`
+    /// once shutdown starts.
+    pub fn health(&self) -> Health {
+        self.core.health.clone()
+    }
+
     fn validate(&self, tokens: &[i32]) -> std::result::Result<(), AdmissionError> {
         if tokens.len() != self.core.seq_len {
             return Err(AdmissionError::BadRequest {
@@ -344,7 +382,10 @@ impl Engine {
     fn submission(&self, tokens: Vec<i32>) -> (Submission, Ticket) {
         let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
         let (tk, resolver) = ticket(id);
-        (Submission { id, tokens, submitted: Instant::now(), resolver }, tk)
+        let submitted = Instant::now();
+        let deadline = (self.cfg.deadline_us > 0)
+            .then(|| submitted + Duration::from_micros(self.cfg.deadline_us));
+        (Submission { id, tokens, submitted, deadline, resolver }, tk)
     }
 
     /// Non-blocking admission: validates, then either enqueues (returning
@@ -395,8 +436,9 @@ impl Engine {
     /// undispatched backlog (`ShuttingDown`), join router and workers.
     /// Idempotent; also runs on drop.
     pub fn shutdown(&self) {
+        self.core.health.store(resil::HEALTH_DRAINING, Ordering::Relaxed);
         self.core.admission.close();
-        let mut j = self.join.lock().unwrap();
+        let mut j = self.join.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(r) = j.router.take() {
             let _ = r.join();
         }
@@ -412,8 +454,30 @@ impl Drop for Engine {
 
 /// One pool worker: drain whole batches until the router closes the batch
 /// queue *and* it is empty (in-flight batches complete on shutdown).
-fn serve_worker(mut enc: Encoder, batch_q: Arc<Bounded<Vec<Submission>>>, stats: Arc<ServerStats>) {
+///
+/// Execution is *supervised*: each forward runs under `catch_unwind`, so a
+/// panicking request (poisoned input, injected fault, kernel bug) resolves
+/// only its own ticket with [`ServeError::WorkerFailed`] — batch siblings
+/// are unaffected. After a panic the worker rebuilds its encoder from the
+/// pristine `template` (the unwound forward may have left scratch state
+/// inconsistent; weights stay shared via `Arc`), up to
+/// [`MAX_WORKER_RESPAWNS`] times; past the budget it retires and flips the
+/// shared health cell to `degraded`.
+fn serve_worker(
+    template: Encoder,
+    batch_q: Arc<Bounded<Vec<Submission>>>,
+    stats: Arc<ServerStats>,
+    health: Health,
+) {
+    let mut enc = template.clone();
+    let mut respawns_left = MAX_WORKER_RESPAWNS;
     while let Some(batch) = batch_q.pop() {
+        // queue-slow fault: stall the dispatch (models a descheduled or
+        // page-faulting worker) so deadline shedding is reachable in
+        // deterministic chaos tests.
+        if fault::trip(FaultPoint::QueueSlow) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
         // Queue wait is measured once at dispatch for the whole batch, so a
         // sub later in the batch doesn't charge its siblings' forwards to
         // the queue.
@@ -424,10 +488,59 @@ fn serve_worker(mut enc: Encoder, batch_q: Arc<Bounded<Vec<Submission>>>, stats:
             obs::record(SpanId::QueueWait, wait);
         }
         let bsz = batch.len();
-        for sub in batch {
-            let logits = {
+        let mut pending = batch.into_iter();
+        while let Some(sub) = pending.next() {
+            // Expired before execution: shed without running the forward —
+            // the client stopped waiting at the deadline, so executing now
+            // only amplifies the overload that caused the delay.
+            if sub.deadline.is_some_and(|d| Instant::now() >= d) {
+                resil::stats().note_deadline_shed();
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                sub.resolver.resolve(Err(ServeError::DeadlineExceeded));
+                continue;
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if fault::trip(FaultPoint::WorkerPanic) {
+                    panic!("fault injected: worker-panic");
+                }
                 let _sp = obs::span(SpanId::EncoderFwd);
                 enc.forward(&sub.tokens).0
+            }));
+            let logits = match outcome {
+                Ok(l) => l,
+                Err(payload) => {
+                    let reason = panic_reason(payload.as_ref());
+                    eprintln!("[serve] worker panic on request {}: {reason}", sub.id);
+                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                    sub.resolver.resolve(Err(ServeError::WorkerFailed { reason }));
+                    if respawns_left == 0 {
+                        // Sticky unless already draining: shutdown owns the
+                        // final state.
+                        let _ = health.compare_exchange(
+                            resil::HEALTH_OK,
+                            resil::HEALTH_DEGRADED,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                        eprintln!(
+                            "[serve] worker retired after exhausting its respawn budget \
+                             ({MAX_WORKER_RESPAWNS}) — health degraded"
+                        );
+                        // Resolve the rest of the batch through the counted
+                        // path before retiring — nothing vanishes.
+                        for rest in pending {
+                            stats.failed.fetch_add(1, Ordering::Relaxed);
+                            rest.resolver.resolve(Err(ServeError::WorkerFailed {
+                                reason: "worker retired (respawn budget exhausted)".into(),
+                            }));
+                        }
+                        return;
+                    }
+                    respawns_left -= 1;
+                    resil::stats().note_respawn();
+                    enc = template.clone();
+                    continue;
+                }
             };
             let latency = sub.submitted.elapsed();
             stats.served.fetch_add(1, Ordering::Relaxed);
@@ -450,7 +563,20 @@ fn serve_worker(mut enc: Encoder, batch_q: Arc<Bounded<Vec<Submission>>>, stats:
     }
 }
 
+/// Best-effort human-readable panic payload (`&str`/`String` cover
+/// `panic!` and `assert!`; anything else gets a placeholder).
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::model::params::tests::random_flat;
@@ -573,6 +699,7 @@ mod tests {
             match t.wait() {
                 Ok(_) => served += 1,
                 Err(ServeError::ShuttingDown) => shed += 1,
+                Err(other) => panic!("unexpected resolution without faults: {other}"),
             }
         }
         assert_eq!(served + shed, tickets.len() as u64, "every admitted ticket resolved");
@@ -611,6 +738,38 @@ mod tests {
         // The histogram agrees with the coarse µs counters on the max.
         let max_us = eng.stats().max_latency_us.load(Ordering::Relaxed);
         assert!(lat.max >= max_us * 1_000, "ns max {} vs µs max {}", lat.max, max_us);
+    }
+
+    #[test]
+    fn expired_deadlines_shed_before_execution() {
+        // 1 µs deadline: every request expires between admission and
+        // dispatch, so nothing runs a forward — all resolve
+        // DeadlineExceeded through the counted `failed` path.
+        let eng = Engine::start(
+            mk_encoder(false),
+            ServeConfig { deadline_us: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..6).map(|_| eng.try_submit(toks()).unwrap()).collect();
+        for t in &tickets {
+            assert_eq!(t.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        }
+        eng.shutdown();
+        assert_eq!(eng.stats().served.load(Ordering::Relaxed), 0);
+        assert_eq!(eng.stats().failed.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn health_follows_the_engine_lifecycle() {
+        // Worker-panic supervision itself is exercised in `tests/chaos.rs`
+        // (arming the process-global fault registry here would poison
+        // concurrent engine tests); the fault-free lifecycle is safe.
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        assert_eq!(eng.health().load(Ordering::Relaxed), resil::HEALTH_OK);
+        assert!(eng.try_submit(toks()).unwrap().wait().is_ok());
+        eng.shutdown();
+        assert_eq!(eng.health().load(Ordering::Relaxed), resil::HEALTH_DRAINING);
+        assert_eq!(eng.stats().failed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod server;
 pub mod ticket;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use engine::{Engine, Response, ServeConfig, ServerStats, MAX_WAIT_CAP_US};
+pub use engine::{Engine, Response, ServeConfig, ServerStats, MAX_WAIT_CAP_US, MAX_WORKER_RESPAWNS};
 pub use server::{Client, InferenceServer};
 pub use ticket::{AdmissionError, ServeError, Ticket, TicketResult};

@@ -65,7 +65,7 @@ impl<T> Bounded<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -73,12 +73,12 @@ impl<T> Bounded<T> {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed
     }
 
     /// Non-blocking push: `Full` at capacity, `Closed` after [`Self::close`].
     pub fn try_push(&self, v: T) -> Result<(), TryPushError<T>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if g.closed {
             return Err(TryPushError::Closed(v));
         }
@@ -94,7 +94,7 @@ impl<T> Bounded<T> {
     /// Blocking push: waits for space (not for the consumer to finish the
     /// item). Returns the value back if the queue closes while waiting.
     pub fn push(&self, v: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if g.closed {
                 return Err(v);
@@ -105,14 +105,14 @@ impl<T> Bounded<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Blocking pop with drain-after-close semantics: returns items while
     /// any remain (even after `close()`), `None` once closed *and* empty.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(v) = g.q.pop_front() {
                 drop(g);
@@ -122,7 +122,7 @@ impl<T> Bounded<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -137,7 +137,7 @@ impl<T> Bounded<T> {
     /// and will be processed.
     pub fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<T>> {
         debug_assert!(max >= 1);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let first = loop {
             if g.closed {
                 return None;
@@ -145,7 +145,7 @@ impl<T> Bounded<T> {
             if let Some(v) = g.q.pop_front() {
                 break v;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
         };
         self.not_full.notify_one();
         let mut batch = Vec::with_capacity(max.min(64));
@@ -164,7 +164,7 @@ impl<T> Bounded<T> {
             if now >= deadline {
                 break;
             }
-            let (g2, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            let (g2, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap_or_else(|e| e.into_inner());
             g = g2;
             if timeout.timed_out() && g.q.is_empty() {
                 break;
@@ -176,7 +176,7 @@ impl<T> Bounded<T> {
     /// Take everything currently queued (shutdown shedding). Wakes blocked
     /// pushers so they observe the closed flag.
     pub fn drain(&self) -> Vec<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let out: Vec<T> = g.q.drain(..).collect();
         drop(g);
         self.not_full.notify_all();
@@ -185,7 +185,7 @@ impl<T> Bounded<T> {
 
     /// Close the queue: pushes fail from now on, poppers wake. Idempotent.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         g.closed = true;
         drop(g);
         self.not_empty.notify_all();
@@ -194,6 +194,7 @@ impl<T> Bounded<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::Arc;

@@ -34,6 +34,9 @@ fn legacy_config(policy: &BatchPolicy, workers: usize) -> ServeConfig {
         max_wait_us: policy.max_wait.as_micros() as u64,
         workers,
         kernel_workers: 1,
+        // The legacy API predates deadlines; callers block for as long as
+        // the queue takes.
+        deadline_us: 0,
     }
 }
 
@@ -102,6 +105,7 @@ impl Drop for InferenceServer {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::model::params::tests::random_flat;

@@ -54,12 +54,25 @@ pub enum ServeError {
     /// Admitted but shed by shutdown before a worker picked it up (or the
     /// worker died). The request was never executed.
     ShuttingDown,
+    /// The worker panicked while executing *this* request (poisoned input
+    /// or injected fault). Only this request fails — batch siblings are
+    /// unaffected and the worker respawns with a fresh encoder.
+    WorkerFailed { reason: String },
+    /// The request's `deadline_us` expired before any worker could start
+    /// it; it was shed without running the forward.
+    DeadlineExceeded,
 }
 
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Self::ShuttingDown => write!(f, "engine shut down before the request was served"),
+            Self::WorkerFailed { reason } => {
+                write!(f, "serve worker failed while executing the request: {reason}")
+            }
+            Self::DeadlineExceeded => {
+                write!(f, "request deadline expired before execution (shed unexecuted)")
+            }
         }
     }
 }
@@ -90,19 +103,21 @@ impl Ticket {
 
     /// Non-blocking: `Some` once resolved, `None` while in flight.
     pub fn poll(&self) -> Option<TicketResult> {
-        self.state.slot.lock().unwrap().clone()
+        // The slot holds plain data; a panic mid-write is impossible, so a
+        // poisoned lock (panicking waiter) is safe to enter.
+        self.state.slot.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Block until the engine resolves this ticket. Cannot deadlock: every
     /// admitted ticket is resolved, worst case with
     /// [`ServeError::ShuttingDown`] (see module docs).
     pub fn wait(&self) -> TicketResult {
-        let mut g = self.state.slot.lock().unwrap();
+        let mut g = self.state.slot.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(r) = g.as_ref() {
                 return r.clone();
             }
-            g = self.state.done.wait(g).unwrap();
+            g = self.state.done.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -110,7 +125,7 @@ impl Ticket {
     /// stays valid — poll or wait again later).
     pub fn wait_timeout(&self, d: Duration) -> Option<TicketResult> {
         let deadline = std::time::Instant::now() + d;
-        let mut g = self.state.slot.lock().unwrap();
+        let mut g = self.state.slot.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(r) = g.as_ref() {
                 return Some(r.clone());
@@ -119,7 +134,11 @@ impl Ticket {
             if now >= deadline {
                 return None;
             }
-            let (g2, _) = self.state.done.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) = self
+                .state
+                .done
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             g = g2;
         }
     }
@@ -142,7 +161,7 @@ pub struct Resolver {
 
 impl Resolver {
     fn set(state: &Arc<TicketState>, r: TicketResult) {
-        let mut g = state.slot.lock().unwrap();
+        let mut g = state.slot.lock().unwrap_or_else(|e| e.into_inner());
         if g.is_none() {
             *g = Some(r);
             drop(g);
@@ -175,6 +194,7 @@ pub fn ticket(id: u64) -> (Ticket, Resolver) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -239,5 +259,8 @@ mod tests {
         let e = AdmissionError::BadRequest { reason: "expected 16 tokens, got 3".into() };
         assert!(e.to_string().contains("16 tokens"));
         assert!(ServeError::ShuttingDown.to_string().contains("shut down"));
+        let w = ServeError::WorkerFailed { reason: "index out of bounds".into() };
+        assert!(w.to_string().contains("index out of bounds"));
+        assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
     }
 }

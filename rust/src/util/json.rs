@@ -282,9 +282,14 @@ impl<'a> Parser<'a> {
                     }
                 }
                 Some(_) => {
-                    // Consume one UTF-8 char.
+                    // Consume one UTF-8 char. `peek()` returned Some, so a
+                    // valid str here is non-empty — but parse errors stay
+                    // typed rather than trusting that across refactors.
                     let rest = std::str::from_utf8(&self.b[self.i..]).map_err(|_| "bad utf8")?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| format!("unterminated string at byte {}", self.i))?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }

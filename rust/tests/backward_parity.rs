@@ -293,6 +293,7 @@ fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
         exec: ExecConfig { workers, kernel, ..Default::default() },
         serve: Default::default(),
         obs: Default::default(),
+        resil: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

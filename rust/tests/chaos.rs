@@ -1,0 +1,412 @@
+//! Chaos suite — the only place the process-global fault registry is
+//! armed. Production code trips `ckpt-write`/`io-err` inside checkpoint
+//! save/load and `worker-panic`/`queue-slow` inside serve workers, so any
+//! test that arms would poison concurrently-running trainer/engine tests
+//! in the same process. This integration binary is its own process, and
+//! every test here serializes on one gate, so arming is safe.
+//!
+//! Covered invariants (the PR-7 acceptance gates):
+//! * determinism of the fault registry itself (seeded stream, `after`
+//!   gating, counter resets);
+//! * a crash injected between checkpoint staging and rename leaves the
+//!   previous checkpoint intact;
+//! * an injected read fault surfaces as a typed load error;
+//! * under injected worker panics every admitted ticket still resolves
+//!   exactly once, only the poisoned request fails, and the engine keeps
+//!   serving (respawn) until the budget is exhausted (degraded);
+//! * deadline shedding is reachable and counted when workers stall;
+//! * an interrupted-then-resumed training run is bit-identical to the
+//!   uninterrupted one.
+
+use spion::config::types::SparsityConfig;
+use spion::config::{ExperimentConfig, ModelConfig, PatternKind, TaskKind, TrainConfig};
+use spion::coordinator::checkpoint::Checkpoint;
+use spion::coordinator::NativeTrainer;
+use spion::exec::ExecConfig;
+use spion::model::{Encoder, ModelParams};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::resil;
+use spion::resil::fault::{self, FaultPoint, ResilConfig};
+use spion::serve::{Engine, ServeConfig, ServeError, MAX_WORKER_RESPAWNS};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Every test takes this gate: the fault registry and the resil counters
+/// are process-global, so chaos tests must not overlap.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII disarm: a panicking assertion must not leave the registry armed
+/// for the next test.
+struct DisarmGuard;
+
+impl Drop for DisarmGuard {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn arm(points: &[&str], prob: f64, after: u64, seed: u64) -> DisarmGuard {
+    fault::arm(&ResilConfig {
+        faults: points.iter().map(|s| s.to_string()).collect(),
+        prob,
+        after,
+        seed,
+        kill: false,
+    })
+    .expect("valid arming config");
+    DisarmGuard
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("spion-chaos-{}-{name}", std::process::id()))
+        .to_str()
+        .expect("utf8 temp path")
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Fault-registry semantics (ported from the former fault.rs unit tests —
+// they arm, so they must live in this process).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn armed_point_fires_and_counts() {
+    let _g = locked();
+    let _d = arm(&["ckpt-write"], 1.0, 0, 1);
+    assert!(fault::armed());
+    assert!(fault::trip(FaultPoint::CkptWrite), "armed point at prob 1 fires");
+    assert!(!fault::trip(FaultPoint::WorkerPanic), "unarmed point never fires");
+    assert_eq!(fault::hit_count(FaultPoint::CkptWrite), 1);
+    assert_eq!(fault::fired_count(FaultPoint::CkptWrite), 1);
+    assert_eq!(fault::hit_count(FaultPoint::WorkerPanic), 0);
+    fault::disarm();
+    assert!(!fault::trip(FaultPoint::CkptWrite), "disarmed registry is inert");
+}
+
+#[test]
+fn after_gates_the_first_hits() {
+    let _g = locked();
+    let _d = arm(&["io-err"], 1.0, 3, 1);
+    assert!(!fault::trip(FaultPoint::IoErr), "hit 1 < after 3");
+    assert!(!fault::trip(FaultPoint::IoErr), "hit 2 < after 3");
+    assert!(fault::trip(FaultPoint::IoErr), "hit 3 fires");
+    assert!(fault::trip(FaultPoint::IoErr), "hits past after keep firing at prob 1");
+    assert_eq!(fault::fired_count(FaultPoint::IoErr), 2);
+}
+
+#[test]
+fn probability_stream_is_deterministic() {
+    let _g = locked();
+    let run = || -> Vec<bool> {
+        let _d = arm(&["queue-slow"], 0.5, 0, 7);
+        (0..64).map(|_| fault::trip(FaultPoint::QueueSlow)).collect()
+    };
+    let a = run();
+    let fired = a.iter().filter(|&&f| f).count();
+    // A fair-ish coin over 64 draws: a degenerate stream (all/none) would
+    // mean the probability gate is broken.
+    assert!(fired > 8 && fired < 56, "prob 0.5 fired {fired}/64");
+    let b = run();
+    assert_eq!(a, b, "same seed ⇒ same firing sequence");
+}
+
+#[test]
+fn rearming_resets_counters() {
+    let _g = locked();
+    let _d = arm(&["ckpt-write"], 1.0, 0, 3);
+    fault::trip(FaultPoint::CkptWrite);
+    fault::trip(FaultPoint::CkptWrite);
+    assert_eq!(fault::hit_count(FaultPoint::CkptWrite), 2);
+    let _d = arm(&["ckpt-write"], 1.0, 0, 3);
+    assert_eq!(fault::hit_count(FaultPoint::CkptWrite), 0, "re-arm resets hits");
+    assert_eq!(fault::fired_count(FaultPoint::CkptWrite), 0, "re-arm resets fired");
+}
+
+#[test]
+fn env_arming_roundtrip() {
+    let _g = locked();
+    // Unset → no-op, stays disarmed.
+    std::env::remove_var("SPION_FAULTS");
+    fault::arm_from_env().expect("unset env is a no-op");
+    assert!(!fault::armed());
+    // Set → armed with the parsed knobs; a typo'd point is a hard error.
+    std::env::set_var("SPION_FAULTS", "queue-slow, io-err");
+    std::env::set_var("SPION_FAULT_AFTER", "2");
+    let _d = DisarmGuard;
+    fault::arm_from_env().expect("valid env arms");
+    assert!(fault::armed());
+    assert!(!fault::trip(FaultPoint::QueueSlow), "after=2 gates the first hit");
+    assert!(fault::trip(FaultPoint::QueueSlow));
+    std::env::set_var("SPION_FAULTS", "no-such-point");
+    assert!(fault::arm_from_env().is_err(), "unknown point must not silently disarm");
+    std::env::remove_var("SPION_FAULTS");
+    std::env::remove_var("SPION_FAULT_AFTER");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint crash-safety under injected faults.
+// ---------------------------------------------------------------------------
+
+fn small_checkpoint(preset: &str) -> Checkpoint {
+    Checkpoint {
+        preset: preset.into(),
+        step: 3,
+        tensors: vec![(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0])],
+        masks: None,
+        resume: None,
+    }
+}
+
+#[test]
+fn crashed_save_leaves_previous_checkpoint_intact() {
+    let _g = locked();
+    let path = tmp("atomic.ckpt");
+    small_checkpoint("old").save(&path).expect("clean save");
+    {
+        let _d = arm(&["ckpt-write"], 1.0, 0, 1);
+        let err = small_checkpoint("new").save(&path).expect_err("injected write fault");
+        assert!(format!("{err:#}").contains("ckpt-write"), "{err:#}");
+    }
+    // The staged tmp never replaced the destination: the previous
+    // checkpoint still loads, byte-for-byte valid.
+    let back = Checkpoint::load(&path).expect("previous checkpoint intact");
+    assert_eq!(back.preset, "old");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(format!("{path}.tmp")).ok();
+}
+
+#[test]
+fn injected_read_fault_is_a_typed_load_error() {
+    let _g = locked();
+    let path = tmp("ioerr.ckpt");
+    small_checkpoint("x").save(&path).expect("clean save");
+    {
+        let _d = arm(&["io-err"], 1.0, 0, 1);
+        let err = Checkpoint::load(&path).expect_err("injected read fault");
+        assert!(format!("{err:#}").contains("io-err"), "{err:#}");
+    }
+    assert_eq!(Checkpoint::load(&path).expect("disarmed load succeeds").preset, "x");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Serve-side supervision: panics, respawn budget, deadlines.
+// ---------------------------------------------------------------------------
+
+/// Small sparse encoder through the public surface (L=32, 2 layers).
+fn encoder(seed: u64) -> Encoder {
+    let model = ModelConfig {
+        preset: "chaos-test".into(),
+        seq_len: 32,
+        d_model: 32,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 64,
+        vocab: 20,
+        classes: 4,
+        batch: 1,
+    };
+    let params = ModelParams::init_random(&model, seed);
+    let mut m = BlockMask::empty(8, 4);
+    m.set_diagonal();
+    Encoder::new(params, 2).with_masks(vec![m.clone(), m]).expect("valid masks")
+}
+
+fn toks(seed: usize) -> Vec<i32> {
+    (0..32).map(|t| ((t + seed) % 20) as i32).collect()
+}
+
+#[test]
+fn worker_panic_fails_only_the_poisoned_request() {
+    let _g = locked();
+    let respawns_before = resil::stats().worker_respawns.load(Ordering::Relaxed);
+    let eng = Engine::start(
+        encoder(11),
+        ServeConfig { workers: 1, max_batch: 1, ..Default::default() },
+    )
+    .expect("engine starts");
+
+    let poisoned = {
+        let _d = arm(&["worker-panic"], 1.0, 0, 1);
+        eng.submit(toks(0)).expect("admitted").wait()
+    };
+    match poisoned {
+        Err(ServeError::WorkerFailed { reason }) => {
+            assert!(reason.contains("worker-panic"), "{reason}");
+        }
+        other => panic!("expected WorkerFailed, got {other:?}"),
+    }
+
+    // Disarmed again: the respawned worker serves the very next request.
+    let ok = eng.submit(toks(1)).expect("admitted").wait().expect("served after respawn");
+    assert_eq!(ok.logits.len(), 4);
+
+    let stats = eng.stats();
+    assert_eq!(stats.failed.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.served.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.admitted.load(Ordering::Relaxed), 2, "conservation: 2 admitted = 1 + 1");
+    assert!(
+        resil::stats().worker_respawns.load(Ordering::Relaxed) > respawns_before,
+        "respawn was counted"
+    );
+    assert_eq!(eng.health().load(Ordering::Relaxed), resil::HEALTH_OK, "one panic ≠ degraded");
+    eng.shutdown();
+    assert_eq!(eng.health().load(Ordering::Relaxed), resil::HEALTH_DRAINING);
+}
+
+#[test]
+fn exhausted_respawn_budget_degrades_health() {
+    let _g = locked();
+    let eng = Engine::start(
+        encoder(12),
+        ServeConfig { workers: 1, max_batch: 1, ..Default::default() },
+    )
+    .expect("engine starts");
+    let _d = arm(&["worker-panic"], 1.0, 0, 1);
+
+    // MAX_WORKER_RESPAWNS failures consume the budget; one more retires
+    // the worker. Sequential waits keep each failure in its own batch.
+    let failures = MAX_WORKER_RESPAWNS + 1;
+    for i in 0..failures {
+        let r = eng.submit(toks(i as usize)).expect("admitted").wait();
+        assert!(
+            matches!(r, Err(ServeError::WorkerFailed { .. })),
+            "request {i} should fail under prob-1 worker-panic, got {r:?}"
+        );
+    }
+    // The degraded store happens just after the final resolve; poll
+    // briefly rather than racing it.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while eng.health().load(Ordering::Relaxed) != resil::HEALTH_DEGRADED {
+        assert!(Instant::now() < deadline, "health never degraded after budget exhaustion");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = eng.stats();
+    assert_eq!(stats.failed.load(Ordering::Relaxed), failures);
+    assert_eq!(stats.admitted.load(Ordering::Relaxed), failures, "every ticket resolved");
+    eng.shutdown();
+    // Shutdown owns the terminal state even for a degraded engine.
+    assert_eq!(eng.health().load(Ordering::Relaxed), resil::HEALTH_DRAINING);
+}
+
+#[test]
+fn stalled_worker_sheds_expired_deadlines() {
+    let _g = locked();
+    let shed_before = resil::stats().deadline_shed.load(Ordering::Relaxed);
+    // queue-slow stalls every batch 25 ms; a 5 ms deadline therefore
+    // expires before any forward starts — deterministically.
+    let eng = Engine::start(
+        encoder(13),
+        ServeConfig { workers: 1, max_batch: 1, deadline_us: 5_000, ..Default::default() },
+    )
+    .expect("engine starts");
+    let _d = arm(&["queue-slow"], 1.0, 0, 1);
+    let tickets: Vec<_> = (0..4).map(|i| eng.submit(toks(i)).expect("admitted")).collect();
+    for t in &tickets {
+        assert_eq!(t.wait().expect_err("expired before execution"), ServeError::DeadlineExceeded);
+    }
+    let stats = eng.stats();
+    assert_eq!(stats.served.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.failed.load(Ordering::Relaxed), 4);
+    assert!(
+        resil::stats().deadline_shed.load(Ordering::Relaxed) >= shed_before + 4,
+        "deadline sheds were counted"
+    );
+    eng.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Interrupted-then-resumed training is bit-identical.
+// ---------------------------------------------------------------------------
+
+fn micro_exp(steps: usize, workers: usize) -> ExperimentConfig {
+    let model = ModelConfig {
+        preset: "micro".into(),
+        seq_len: 32,
+        d_model: 16,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 32,
+        vocab: 20,
+        classes: 10,
+        batch: 4,
+    };
+    let train = TrainConfig {
+        steps,
+        lr: 0.02,
+        min_dense_steps: 4,
+        max_dense_steps: 8,
+        snapshot_every: 2,
+        ..Default::default()
+    };
+    let mut sparsity = SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 8, 0.7);
+    sparsity.pattern.filter = 3;
+    ExperimentConfig {
+        task: TaskKind::ListOps,
+        model,
+        train,
+        sparsity,
+        exec: ExecConfig::with_workers(workers),
+        serve: Default::default(),
+        obs: Default::default(),
+        resil: Default::default(),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn resumed_run_is_bit_identical_to_uninterrupted() {
+    let _g = locked();
+    let resumes_before = resil::stats().resume_total.load(Ordering::Relaxed);
+    let golden = NativeTrainer::new(micro_exp(12, 2))
+        .expect("golden trainer")
+        .run()
+        .expect("golden run");
+
+    // "Crash" after step 5: run with periodic checkpoints, then restart
+    // from the step-5 file as `spion train --resume` would.
+    let base = tmp("resume.ckpt");
+    let mut exp = micro_exp(12, 2);
+    exp.train.checkpoint_every = Some(5);
+    NativeTrainer::new(exp)
+        .expect("interrupted trainer")
+        .checkpoint_to(&base)
+        .run()
+        .expect("interrupted run");
+    let ck = Checkpoint::load(&format!("{base}.step00000005")).expect("periodic checkpoint");
+    assert!(ck.resume.is_some(), "periodic checkpoints carry a resume section");
+
+    let resumed = NativeTrainer::new(micro_exp(12, 2))
+        .expect("resumed trainer")
+        .run_resumed(&ck)
+        .expect("resumed run");
+    assert!(
+        resil::stats().resume_total.load(Ordering::Relaxed) > resumes_before,
+        "resume was counted"
+    );
+
+    // The combined trajectory matches the uninterrupted one exactly —
+    // losses, accuracies, phase boundaries, masks, final parameters.
+    // (step_ms is wall time and legitimately differs.)
+    assert_eq!(resumed.metrics.records.len(), golden.metrics.records.len());
+    for (r, g) in resumed.metrics.records.iter().zip(&golden.metrics.records) {
+        assert_eq!(r.step, g.step);
+        assert_eq!(r.phase, g.phase, "phase diverged at step {}", g.step);
+        assert_eq!(r.loss.to_bits(), g.loss.to_bits(), "loss diverged at step {}", g.step);
+        assert_eq!(r.acc.to_bits(), g.acc.to_bits(), "acc diverged at step {}", g.step);
+    }
+    assert_eq!(resumed.metrics.transition_step, golden.metrics.transition_step);
+    assert_eq!(resumed.masks, golden.masks);
+    assert_eq!(resumed.final_params, golden.final_params, "final parameters diverged");
+
+    // Cleanup the retained periodic checkpoints.
+    for done in [5usize, 10] {
+        std::fs::remove_file(format!("{base}.step{done:08}")).ok();
+    }
+}

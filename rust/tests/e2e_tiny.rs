@@ -38,6 +38,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         exec: Default::default(),
         serve: Default::default(),
         obs: Default::default(),
+        resil: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -143,6 +143,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         exec: spion::exec::ExecConfig::with_workers(workers),
         serve: Default::default(),
         obs: Default::default(),
+        resil: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -256,6 +257,7 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
             exec: Default::default(),
             serve: Default::default(),
             obs: Default::default(),
+            resil: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     };

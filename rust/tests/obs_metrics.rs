@@ -119,6 +119,7 @@ fn metrics_endpoint_serves_prometheus_text() {
         obs::prom::Sources {
             server: Some(engine.stats().clone()),
             ops: Some(engine.op_tally()),
+            health: Some(engine.health()),
         },
     )
     .unwrap();
@@ -142,6 +143,12 @@ fn metrics_endpoint_serves_prometheus_text() {
         "spion_queue_wait_seconds",
         "spion_ops_total",
         "spion_trace_events_dropped_total",
+        "spion_serve_failed_total",
+        "spion_resil_worker_respawns_total",
+        "spion_resil_deadline_shed_total",
+        "spion_resil_resume_total",
+        "spion_resil_checkpoint_write_seconds",
+        "spion_serve_health",
     ] {
         assert!(body.contains(family), "family {family} missing from exposition");
     }
@@ -169,7 +176,17 @@ fn metrics_endpoint_serves_prometheus_text() {
     let missing = http_get(addr, "/nope");
     assert!(missing.starts_with("HTTP/1.0 404"));
 
+    // Shutdown flips the shared health cell to draining — /healthz and the
+    // gauge follow, still HTTP 200 (orchestrators key off the body).
     engine.shutdown();
+    let health = http_get(addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.0 200"));
+    assert!(health.ends_with("draining\n"), "post-shutdown health: {health}");
+    let resp = http_get(addr, "/metrics");
+    assert!(
+        resp.contains("spion_serve_health{state=\"draining\"} 2"),
+        "health gauge did not follow drain"
+    );
     srv.stop();
 }
 

@@ -132,6 +132,7 @@ fn shutdown_mid_flood_resolves_every_ticket() {
                 served += 1;
             }
             Err(ServeError::ShuttingDown) => shed += 1,
+            Err(other) => panic!("unexpected resolution without faults: {other}"),
         }
     }
     assert_eq!(served + shed, tickets.len() as u64);

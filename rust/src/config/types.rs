@@ -110,7 +110,10 @@ impl ModelConfig {
 }
 
 /// Which engine executes the train step (`[train] backend` in TOML,
-/// `--backend` on the CLI).
+/// `--backend` on the CLI). Each variant names a
+/// `coordinator::TrainerBackend` implementation — `main.rs` constructs it
+/// and hands it to the shared `run_training` driver, so both engines share
+/// one phase/transition/checkpoint loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TrainBackend {
     /// AOT-compiled PJRT artifacts (requires `make artifacts` and a real
@@ -135,6 +138,10 @@ impl TrainBackend {
             Self::Pjrt => "pjrt",
             Self::Native => "native",
         }
+    }
+    /// Every selectable backend, in help-text order.
+    pub fn all() -> [Self; 2] {
+        [Self::Native, Self::Pjrt]
     }
 }
 
@@ -643,6 +650,9 @@ mod tests {
             assert!(TrainBackend::parse(name).is_some(), "{name}");
         }
         assert_eq!(TrainBackend::parse("native").unwrap().name(), "native");
+        for b in TrainBackend::all() {
+            assert_eq!(TrainBackend::parse(b.name()), Some(b), "{} roundtrips", b.name());
+        }
     }
 
     #[test]

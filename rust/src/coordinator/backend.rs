@@ -1,0 +1,287 @@
+//! The `TrainerBackend` trait and the shared three-phase training driver.
+//!
+//! Algorithm 2's control flow — data stream, dense-phase snapshots, the
+//! transition decision, pattern generation, sparse-phase continuation,
+//! periodic crash-safe checkpoints and resume — is *backend-independent*:
+//! only the step math differs between the rust-native engine and the
+//! AOT-compiled PJRT artifacts. [`run_training`] owns that control flow
+//! once; a backend implements the seven-method [`TrainerBackend`] surface
+//! (`step`, `capture_scores`, `apply_masks`, `snapshot`, `restore`,
+//! `evaluate`, `final_params`) and inherits phases, transition, checkpoint
+//! retention and bit-identical resume for free. `main.rs` dispatches
+//! `--backend native|pjrt` through one `Box<dyn TrainerBackend>`.
+//!
+//! Loop order is load-bearing for bit-identity and must not be reshuffled:
+//! batch → step (optimizer applied inside) → metric record → snapshot
+//! observe → transition fire/mask generation → periodic checkpoint. A
+//! resumed run re-enters at the top of the loop with every piece of
+//! mutable state (params, optimizer velocity, data RNG, detector, metric
+//! history, masks) restored, so the combined trajectory equals the
+//! uninterrupted one exactly.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ExperimentConfig, PatternKind};
+use crate::data::batcher::{Batch, Batcher};
+use crate::data::make_task;
+use crate::exec::Exec;
+use crate::metrics::{Phase, StepRecord, TrainMetrics};
+use crate::pattern::BlockMask;
+use crate::tensor::Mat;
+use crate::util::Stopwatch;
+
+use super::checkpoint::{Checkpoint, ResumeState};
+use super::phase::{transition_should_fire, TransitionDetector};
+use super::trainer::{generate_masks_for_with, TrainOutcome};
+
+/// What one optimizer step reports back to the driver.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Batch-mean loss.
+    pub loss: f32,
+    /// Batch accuracy in [0, 1].
+    pub acc: f32,
+}
+
+/// Backend state a periodic checkpoint needs beyond what the driver holds.
+#[derive(Debug)]
+pub struct BackendSnapshot {
+    /// Parameters as flat `(shape, data)` tensors in manifest order.
+    pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
+    /// Optimizer velocity slices in manifest order.
+    pub velocity: Vec<Vec<f32>>,
+}
+
+/// One training backend: the step math plus the state it owns (parameters,
+/// optimizer, applied masks). Everything phase-related lives in
+/// [`run_training`]; a backend never decides *when* to transition, only
+/// *how* to step.
+pub trait TrainerBackend {
+    /// Short name used as the log prefix (`[native]`, `[trainer]`).
+    fn name(&self) -> &'static str;
+
+    /// The experiment this backend was built for. Backends may adjust the
+    /// config at construction (the PJRT artifacts bake the pattern block),
+    /// so the driver reads it back from here rather than trusting its own
+    /// copy.
+    fn config(&self) -> &ExperimentConfig;
+
+    /// Execution context for the rust-side shared stages (pattern
+    /// generation runs layer-parallel on it).
+    fn exec(&self) -> &Exec;
+
+    /// Run one optimizer step on `batch`. `snapshot_due` asks the backend
+    /// to retain this step's per-layer head-averaged A^s for a following
+    /// [`Self::capture_scores`] call (dense phase only).
+    fn step(&mut self, step: usize, batch: &Batch, snapshot_due: bool) -> Result<StepStats>;
+
+    /// Take the scores retained by the last `snapshot_due` step, batch
+    /// averaged — `None` if the step had none to capture.
+    fn capture_scores(&mut self) -> Result<Option<Vec<Mat>>>;
+
+    /// Freeze per-layer masks: every later [`Self::step`] runs the sparse
+    /// phase with them.
+    fn apply_masks(&mut self, masks: &[BlockMask]) -> Result<()>;
+
+    /// Snapshot parameters + optimizer state for a periodic checkpoint.
+    /// `None` means the backend cannot checkpoint mid-run (PJRT: Adam
+    /// state lives in device literals with no resume format) — the driver
+    /// then skips periodic checkpoints entirely.
+    fn snapshot(&self) -> Option<BackendSnapshot>;
+
+    /// Restore parameters + optimizer state from a resumable checkpoint
+    /// (the driver has already validated the resume section exists).
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()>;
+
+    /// Accuracy over the fixed eval stream with the backend's current
+    /// parameters and masks.
+    fn evaluate(&mut self, batcher: &Batcher) -> Result<f64>;
+
+    /// Final parameters as flat host tensors.
+    fn final_params(&self) -> Result<Vec<(Vec<usize>, Vec<f32>)>>;
+}
+
+/// Final-outcome checkpoint (no resume section), shared by both backends
+/// and `main.rs` — embeds the trained masks so `spion serve` runs the
+/// *trained* sparsity pattern.
+pub fn save_outcome_checkpoint(preset: &str, outcome: &TrainOutcome, path: &str) -> Result<()> {
+    Checkpoint {
+        preset: preset.to_string(),
+        step: outcome.metrics.records.len() as u64,
+        tensors: outcome.final_params.clone(),
+        masks: outcome.masks.clone(),
+        resume: None,
+    }
+    .save(path)
+}
+
+/// The full Algorithm-2 run over any backend: dense phase with snapshot
+/// observation, the shared transition rule, pattern generation on the
+/// backend's exec, sparse continuation, periodic keep-last-K checkpoints
+/// (when `ckpt_base` is set and the backend can snapshot), and resume
+/// (`from`) with bit-identical continuation.
+pub fn run_training(
+    backend: &mut dyn TrainerBackend,
+    verbose: bool,
+    ckpt_base: Option<&str>,
+    from: Option<&Checkpoint>,
+) -> Result<TrainOutcome> {
+    let cfg = backend.config().clone();
+    let name = backend.name();
+    let log = |msg: &str| {
+        if verbose {
+            println!("[{name}] {msg}");
+        }
+    };
+    let m = &cfg.model;
+    let task = make_task(cfg.task, m.seq_len, m.vocab, m.classes);
+    let mut batcher = Batcher::new(task, m.batch, cfg.train.seed);
+    let mut detector = TransitionDetector::new(cfg.train.transition_threshold);
+    let mut metrics = TrainMetrics::default();
+    let mut masks: Option<Vec<BlockMask>> = None;
+
+    let start_step = match from {
+        None => 0,
+        Some(ck) => {
+            let rs = ck.resume.as_ref().ok_or_else(|| {
+                anyhow!(
+                    "checkpoint has no resume section — only periodic checkpoints \
+                     (train.checkpoint_every / --checkpoint-every) are resumable"
+                )
+            })?;
+            if ck.preset != m.preset {
+                return Err(anyhow!(
+                    "checkpoint preset {:?} does not match configured preset {:?}",
+                    ck.preset,
+                    m.preset
+                ));
+            }
+            if rs.next_step as usize > cfg.train.steps {
+                return Err(anyhow!(
+                    "checkpoint resumes at step {} but the run is only {} steps",
+                    rs.next_step,
+                    cfg.train.steps
+                ));
+            }
+            backend.restore(ck)?;
+            batcher.restore_rng(&rs.batcher_rng);
+            detector.restore(&rs.detector);
+            metrics.records = rs.records.clone();
+            metrics.transition_step = rs.transition_step;
+            metrics.pattern_density = rs.pattern_density.clone();
+            if let Some(ms) = &ck.masks {
+                backend.apply_masks(ms)?;
+                masks = Some(ms.clone());
+            }
+            crate::resil::stats().note_resume();
+            log(&format!(
+                "resuming at step {} ({} phase)",
+                rs.next_step,
+                if masks.is_some() { "sparse" } else { "dense" }
+            ));
+            rs.next_step as usize
+        }
+    };
+
+    // Periodic checkpoints written so far (keep-last-K retention).
+    let mut kept: std::collections::VecDeque<String> = std::collections::VecDeque::new();
+
+    for step in start_step..cfg.train.steps {
+        let batch = batcher.next_batch();
+        let sw = Stopwatch::start();
+        let dense_phase = masks.is_none();
+        let snapshot_due = dense_phase
+            && !matches!(cfg.sparsity.kind, PatternKind::Dense)
+            && (step % cfg.train.snapshot_every == 0 || step + 1 == cfg.train.max_dense_steps);
+
+        let stats = backend.step(step, &batch, snapshot_due)?;
+        metrics.record(StepRecord {
+            step,
+            phase: if dense_phase { Phase::Dense } else { Phase::Sparse },
+            loss: stats.loss,
+            acc: stats.acc,
+            step_ms: sw.elapsed_ms(),
+        });
+
+        // Snapshot + transition check (Algorithm 2 lines 7–12).
+        if snapshot_due {
+            if let Some(scores) = backend.capture_scores()? {
+                let stable = detector.observe(&scores);
+                let min_ok = step >= cfg.train.min_dense_steps;
+                let forced = step + 1 >= cfg.train.max_dense_steps;
+                if transition_should_fire(cfg.sparsity.kind, stable, min_ok, forced) {
+                    // The dense→sparse flip shows up in trace exports as a
+                    // transition_step span wrapping the pattern generation.
+                    let _tr = crate::obs::span(crate::obs::SpanId::TransitionStep);
+                    let gen = {
+                        let _pg = crate::obs::span(crate::obs::SpanId::PatternGen);
+                        generate_masks_for_with(backend.exec(), &cfg, &scores)?
+                    };
+                    metrics.transition_step = Some(step);
+                    metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
+                    log(&format!(
+                        "transition at step {step}: densities {:?}",
+                        metrics.pattern_density
+                    ));
+                    backend.apply_masks(&gen)?;
+                    masks = Some(gen);
+                }
+            }
+        }
+
+        if verbose && step % 10 == 0 {
+            let r = metrics.records.last().expect("record pushed this step");
+            log(&format!(
+                "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
+                r.phase.name(),
+                r.loss,
+                r.acc,
+                r.step_ms
+            ));
+        }
+
+        // Crash-safe periodic checkpoint, written after the step fully
+        // completed (optimizer applied, transition decided) — a resumed
+        // run starts at `step + 1` with the exact state this one had.
+        if let (Some(every), Some(base)) = (cfg.train.checkpoint_every, ckpt_base) {
+            if (step + 1) % every == 0 {
+                if let Some(snap) = backend.snapshot() {
+                    let done = metrics.records.len();
+                    let path = format!("{base}.step{done:08}");
+                    Checkpoint {
+                        preset: m.preset.clone(),
+                        step: done as u64,
+                        tensors: snap.tensors,
+                        masks: masks.clone(),
+                        resume: Some(ResumeState {
+                            next_step: (step + 1) as u64,
+                            transition_step: metrics.transition_step,
+                            pattern_density: metrics.pattern_density.clone(),
+                            records: metrics.records.clone(),
+                            batcher_rng: batcher.rng_state(),
+                            detector: detector.state(),
+                            velocity: snap.velocity,
+                        }),
+                    }
+                    .save(&path)?;
+                    log(&format!("checkpoint {path}"));
+                    kept.push_back(path);
+                    while kept.len() > cfg.train.checkpoint_keep.max(1) {
+                        if let Some(old) = kept.pop_front() {
+                            // Retention is best-effort: a missing/locked old
+                            // file must not kill the run.
+                            let _ = std::fs::remove_file(&old);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let eval_acc = backend.evaluate(&batcher)?;
+    metrics.eval_accuracy = Some(eval_acc);
+    log(&format!("eval accuracy {eval_acc:.4}"));
+
+    let final_params = backend.final_params()?;
+    Ok(TrainOutcome { metrics, masks, final_params })
+}

@@ -2,15 +2,21 @@
 //! training orchestration of Algorithm 2 (dense MHA → Frobenius-distance
 //! transition → per-layer pattern generation → sparse MHA until
 //! convergence), plus pattern dispatch for the baseline policies.
+//!
+//! The control flow lives once, in `backend::run_training`, behind the
+//! [`TrainerBackend`] trait; `native` and `trainer` (PJRT) contribute the
+//! step math. `--backend` picks the impl.
 
+pub mod backend;
 pub mod checkpoint;
 pub mod native;
 pub mod phase;
 pub mod trainer;
 
-pub use native::NativeTrainer;
+pub use backend::{run_training, save_outcome_checkpoint, BackendSnapshot, StepStats, TrainerBackend};
+pub use native::{NativeBackend, NativeTrainer};
 pub use phase::TransitionDetector;
-pub use trainer::{TrainOutcome, Trainer};
+pub use trainer::{PjrtBackend, TrainOutcome, Trainer};
 
 /// Eval-set size shared by both trainer backends: `SPION_EVAL_BATCHES`
 /// env override, default 8, floored at 1 so accuracy is never 0/0.

@@ -1,16 +1,14 @@
-//! The rust-native three-phase trainer (Algorithm 2) — same phase
-//! structure as [`super::trainer::Trainer`], but every step runs the
-//! in-crate full-encoder forward/backward (`model::train`) instead of an
-//! AOT-compiled PJRT artifact. No `artifacts/` directory is required: with
-//! the vendored `xla` stub this is the path that makes `spion train` work
-//! end-to-end offline.
+//! The rust-native training backend (Algorithm 2) — same phase structure
+//! as the PJRT path, but every step runs the in-crate full-encoder
+//! forward/backward (`model::train`) instead of an AOT-compiled artifact.
+//! No `artifacts/` directory is required: with the vendored `xla` stub
+//! this is the path that makes `spion train` work end-to-end offline.
 //!
-//! Phase 1 (dense): dense MHA, snapshotting the per-layer batch- and
-//! head-averaged A^s. Phase boundary: the shared [`TransitionDetector`] +
-//! [`super::phase::transition_should_fire`] rule. Pattern generation: the
-//! same per-layer dispatch as the PJRT trainer. Phase 2 (sparse): the
-//! block-CSR kernels (fused/SIMD per the exec config) with the frozen
-//! masks, forward *and* backward.
+//! [`NativeBackend`] implements [`TrainerBackend`]: it owns parameters,
+//! the momentum-SGD optimizer and the per-sample buffer free-lists, and
+//! supplies the step math; the phase/transition/checkpoint/resume control
+//! flow lives in the shared driver ([`run_training`]). [`NativeTrainer`]
+//! is the stable façade over the pair (construct → run/run_resumed).
 //!
 //! Parallelism & determinism: batch samples fan out over the exec pool
 //! (`par_map_fold`), each with a serial inner kernel context; per-sample
@@ -27,26 +25,265 @@
 //! PJRT artifacts bake Adam, so the two backends share phases and kernels
 //! but not optimizer state — see DESIGN.md §Native training backend.
 
+use std::sync::Mutex;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentConfig, PatternKind};
-use crate::data::{batcher::Batcher, make_task};
+use crate::data::batcher::{Batch, Batcher};
 use crate::exec::Exec;
-use crate::metrics::{Phase, StepRecord, TrainMetrics};
 use crate::model::grad::{ModelGrads, SgdMomentum};
 use crate::model::train::{train_step_sample, TrainCache};
 use crate::model::{Encoder, ModelParams};
 use crate::pattern::BlockMask;
 use crate::tensor::Mat;
-use crate::util::Stopwatch;
 
-use super::checkpoint::{Checkpoint, ResumeState};
-use super::phase::{transition_should_fire, TransitionDetector};
-use super::trainer::{generate_masks_for_with, TrainOutcome};
+use super::backend::{run_training, save_outcome_checkpoint, BackendSnapshot, StepStats, TrainerBackend};
+use super::checkpoint::Checkpoint;
+use super::trainer::TrainOutcome;
 
+/// Shape validation shared by the façade and the backend — fail fast at
+/// construction, not at step 0.
+fn validate(exp: &ExperimentConfig) -> Result<()> {
+    let m = &exp.model;
+    if m.heads == 0 || m.d_model % m.heads != 0 {
+        return Err(anyhow!("d_model {} not divisible by heads {}", m.d_model, m.heads));
+    }
+    if !matches!(exp.sparsity.kind, PatternKind::Dense) {
+        let b = exp.sparsity.pattern.block;
+        if b == 0 || m.seq_len % b != 0 {
+            return Err(anyhow!(
+                "pattern block {b} does not divide seq_len {} (preset {})",
+                m.seq_len,
+                m.preset
+            ));
+        }
+    }
+    if m.batch == 0 {
+        return Err(anyhow!("batch must be ≥ 1"));
+    }
+    Ok(())
+}
+
+/// Accuracy over the fixed eval set (same stream the PJRT trainer
+/// evaluates on), through the rust-native encoder.
+fn evaluate_params(
+    exec: &Exec,
+    exp: &ExperimentConfig,
+    params: &ModelParams,
+    masks: Option<&[BlockMask]>,
+    batcher: &Batcher,
+) -> Result<f64> {
+    let m = &exp.model;
+    let eval_batches = super::eval_batches();
+    let mut enc = Encoder::new(params.clone(), m.heads).with_exec(exec.clone());
+    if let Some(ms) = masks {
+        enc = enc.with_masks(ms.to_vec())?;
+    }
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for batch in batcher.eval_set(eval_batches, exp.train.seed) {
+        let logits = enc.forward_batch(&batch.x, batch.batch);
+        for (i, &label) in batch.y.iter().enumerate() {
+            if crate::tensor::ops::argmax(logits.row(i)) == label as usize {
+                correct += 1;
+            }
+        }
+        total += batch.y.len();
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// The rust-native [`TrainerBackend`]: momentum-SGD steps over the pooled
+/// `train_step_sample` fan-out.
+pub struct NativeBackend {
+    exp: ExperimentConfig,
+    exec: Exec,
+    params: ModelParams,
+    opt: SgdMomentum,
+    /// Batch-gradient accumulator (zeroed per step, folded in sample order).
+    grads: ModelGrads,
+    masks: Option<Vec<BlockMask>>,
+    /// Batch-summed A^s retained by the last `snapshot_due` step.
+    score_acc: Option<Vec<Mat>>,
+    // Reusable per-sample buffers: free-lists shared across steps, so the
+    // steady-state loop allocates no ModelGrads after the first step and no
+    // sparse-phase TrainCache (block-CSR workspaces, slice staging) after
+    // the first sparse step. Which buffer a sample gets is irrelevant to
+    // numerics — ModelGrads are zeroed before use, TrainCaches fully
+    // overwritten, and the fold stays in sample order, so the trajectory
+    // remains bit-identical at any worker count.
+    grad_pool: Mutex<Vec<ModelGrads>>,
+    cache_pool: Mutex<Vec<TrainCache>>,
+}
+
+impl NativeBackend {
+    pub fn new(exp: ExperimentConfig) -> Result<Self> {
+        validate(&exp)?;
+        let exec = Exec::new(exp.exec);
+        let params = ModelParams::init_random(&exp.model, exp.train.seed);
+        let opt = SgdMomentum::new(&params, exp.train.lr as f32, exp.train.momentum as f32);
+        let grads = ModelGrads::zeros_like(&params);
+        let batch = exp.model.batch;
+        Ok(Self {
+            exp,
+            exec,
+            params,
+            opt,
+            grads,
+            masks: None,
+            score_acc: None,
+            grad_pool: Mutex::new(Vec::with_capacity(batch)),
+            cache_pool: Mutex::new(Vec::with_capacity(batch)),
+        })
+    }
+}
+
+impl TrainerBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn config(&self) -> &ExperimentConfig {
+        &self.exp
+    }
+
+    fn exec(&self) -> &Exec {
+        &self.exec
+    }
+
+    fn step(&mut self, _step: usize, batch: &Batch, snapshot_due: bool) -> Result<StepStats> {
+        let Self { exp, exec, params, opt, grads, masks, score_acc, grad_pool, cache_pool } = self;
+        let m = &exp.model;
+        let dh = m.d_model / m.heads;
+        *score_acc = None;
+
+        // Fan samples out over the pool; serial kernels inside each
+        // sample (the batch is the outer parallel axis). NOTE:
+        // benches/native_step.rs mirrors this pooled loop to measure
+        // the step the trainer actually runs — keep the two in sync.
+        // The ordered gradient fold runs on this thread *overlapped*
+        // with the still-running backward fan-out (`par_map_fold`): each
+        // sample's gradient is folded as soon as it and all earlier
+        // samples have landed, so the reduction no longer serializes
+        // behind the slowest shard — while the strict sample order
+        // keeps the batch gradient bit-identical at any worker count.
+        let inner = exec.serial_view();
+        let params_ref: &ModelParams = params;
+        let masks_ref = masks.as_deref();
+        let gp: &Mutex<Vec<ModelGrads>> = grad_pool;
+        let cp: &Mutex<Vec<TrainCache>> = cache_pool;
+        grads.zero();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut acc_scores: Option<Vec<Mat>> = None;
+        let step_span = crate::obs::span(crate::obs::SpanId::TrainStep);
+        exec.par_map_fold(
+            m.batch,
+            |b| {
+                let mut g = match gp.lock().unwrap_or_else(|e| e.into_inner()).pop() {
+                    Some(mut g) => {
+                        g.zero();
+                        g
+                    }
+                    None => ModelGrads::zeros_like(params_ref),
+                };
+                let mut cache = masks_ref.map(|ms| {
+                    cp.lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .pop()
+                        .unwrap_or_else(|| TrainCache::new(ms, m.heads, dh))
+                });
+                let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
+                let r = train_step_sample(
+                    &inner,
+                    params_ref,
+                    m.heads,
+                    masks_ref,
+                    toks,
+                    batch.y[b],
+                    snapshot_due,
+                    &mut g,
+                    cache.as_mut(),
+                );
+                (r.loss, r.correct, g, cache, r.scores)
+            },
+            |_, (loss, ok, g, cache, scores)| {
+                let _sp = crate::obs::span(crate::obs::SpanId::GradFold);
+                loss_sum += loss;
+                correct += ok as usize;
+                grads.add_assign(&g);
+                // Recycle for in-flight samples and the next step.
+                gp.lock().unwrap_or_else(|e| e.into_inner()).push(g);
+                if let Some(c) = cache {
+                    cp.lock().unwrap_or_else(|e| e.into_inner()).push(c);
+                }
+                if let Some(s) = scores {
+                    match &mut acc_scores {
+                        None => acc_scores = Some(s),
+                        Some(acc) => {
+                            for (a, b) in acc.iter_mut().zip(&s) {
+                                a.add_assign(b);
+                            }
+                        }
+                    }
+                }
+            },
+        );
+        grads.scale(1.0 / m.batch as f32);
+        {
+            let _sp = crate::obs::span(crate::obs::SpanId::Optimizer);
+            opt.step(params, grads);
+        }
+        drop(step_span);
+        *score_acc = acc_scores;
+        Ok(StepStats {
+            loss: (loss_sum / m.batch as f64) as f32,
+            acc: correct as f32 / m.batch as f32,
+        })
+    }
+
+    fn capture_scores(&mut self) -> Result<Option<Vec<Mat>>> {
+        let inv = 1.0 / self.exp.model.batch as f32;
+        Ok(self.score_acc.take().map(|mut scores| {
+            for s in &mut scores {
+                s.scale(inv);
+            }
+            scores
+        }))
+    }
+
+    fn apply_masks(&mut self, masks: &[BlockMask]) -> Result<()> {
+        self.masks = Some(masks.to_vec());
+        Ok(())
+    }
+
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        Some(BackendSnapshot {
+            tensors: self.params.to_flat(),
+            velocity: self.opt.velocity().slices().iter().map(|s| s.to_vec()).collect(),
+        })
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.params = ModelParams::from_checkpoint(ck, self.exp.model.layers)?;
+        restore_velocity(&mut self.opt, ck)
+    }
+
+    fn evaluate(&mut self, batcher: &Batcher) -> Result<f64> {
+        evaluate_params(&self.exec, &self.exp, &self.params, self.masks.as_deref(), batcher)
+    }
+
+    fn final_params(&self) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        Ok(self.params.to_flat())
+    }
+}
+
+/// Stable façade over [`NativeBackend`] + the shared driver — the
+/// construct-then-`run`/`run_resumed` API `main.rs`, the integration tests
+/// and the benches use.
 pub struct NativeTrainer {
     pub exp: ExperimentConfig,
-    exec: Exec,
     verbose: bool,
     /// Base path for periodic crash-safe checkpoints (written every
     /// `train.checkpoint_every` steps as `{base}.step{NNNNNNNN}`).
@@ -55,25 +292,8 @@ pub struct NativeTrainer {
 
 impl NativeTrainer {
     pub fn new(exp: ExperimentConfig) -> Result<Self> {
-        let m = &exp.model;
-        if m.heads == 0 || m.d_model % m.heads != 0 {
-            return Err(anyhow!("d_model {} not divisible by heads {}", m.d_model, m.heads));
-        }
-        if !matches!(exp.sparsity.kind, PatternKind::Dense) {
-            let b = exp.sparsity.pattern.block;
-            if b == 0 || m.seq_len % b != 0 {
-                return Err(anyhow!(
-                    "pattern block {b} does not divide seq_len {} (preset {})",
-                    m.seq_len,
-                    m.preset
-                ));
-            }
-        }
-        if m.batch == 0 {
-            return Err(anyhow!("batch must be ≥ 1"));
-        }
-        let exec = Exec::new(exp.exec);
-        Ok(Self { exp, exec, verbose: false, ckpt_base: None })
+        validate(&exp)?;
+        Ok(Self { exp, verbose: false, ckpt_base: None })
     }
 
     pub fn verbose(mut self, v: bool) -> Self {
@@ -87,12 +307,6 @@ impl NativeTrainer {
     pub fn checkpoint_to(mut self, base: impl Into<String>) -> Self {
         self.ckpt_base = Some(base.into());
         self
-    }
-
-    fn log(&self, msg: &str) {
-        if self.verbose {
-            println!("[native] {msg}");
-        }
     }
 
     /// Full Algorithm-2 run on the native engine. Returns metrics, the
@@ -113,294 +327,15 @@ impl NativeTrainer {
     }
 
     fn run_inner(&self, from: Option<&Checkpoint>) -> Result<TrainOutcome> {
-        let cfg = &self.exp;
-        let m = &cfg.model;
-        let task = make_task(cfg.task, m.seq_len, m.vocab, m.classes);
-        let mut batcher = Batcher::new(task, m.batch, cfg.train.seed);
-        let mut detector = TransitionDetector::new(cfg.train.transition_threshold);
-        let mut metrics = TrainMetrics::default();
-        let mut masks: Option<Vec<BlockMask>> = None;
-        let mut params;
-        let start_step;
-        match from {
-            None => {
-                params = ModelParams::init_random(m, cfg.train.seed);
-                start_step = 0;
-            }
-            Some(ck) => {
-                let rs = ck.resume.as_ref().ok_or_else(|| {
-                    anyhow!(
-                        "checkpoint has no resume section — only periodic checkpoints \
-                         (train.checkpoint_every / --checkpoint-every) are resumable"
-                    )
-                })?;
-                if ck.preset != m.preset {
-                    return Err(anyhow!(
-                        "checkpoint preset {:?} does not match configured preset {:?}",
-                        ck.preset,
-                        m.preset
-                    ));
-                }
-                if rs.next_step as usize > cfg.train.steps {
-                    return Err(anyhow!(
-                        "checkpoint resumes at step {} but the run is only {} steps",
-                        rs.next_step,
-                        cfg.train.steps
-                    ));
-                }
-                params = ModelParams::from_checkpoint(ck, m.layers)?;
-                batcher.restore_rng(&rs.batcher_rng);
-                detector.restore(&rs.detector);
-                metrics.records = rs.records.clone();
-                metrics.transition_step = rs.transition_step;
-                metrics.pattern_density = rs.pattern_density.clone();
-                masks = ck.masks.clone();
-                start_step = rs.next_step as usize;
-                crate::resil::stats().note_resume();
-                self.log(&format!(
-                    "resuming at step {start_step} ({} phase)",
-                    if masks.is_some() { "sparse" } else { "dense" }
-                ));
-            }
-        }
-        let mut opt =
-            SgdMomentum::new(&params, cfg.train.lr as f32, cfg.train.momentum as f32);
-        if let Some(ck) = from {
-            restore_velocity(&mut opt, ck)?;
-        }
-        // Periodic checkpoints written so far (keep-last-K retention).
-        let mut kept: std::collections::VecDeque<String> = std::collections::VecDeque::new();
-        let mut grads = ModelGrads::zeros_like(&params);
-        let dh = m.d_model / m.heads;
-        // Reusable per-sample buffers: free-lists shared across steps, so
-        // the steady-state loop allocates no ModelGrads after the first
-        // step and no sparse-phase TrainCache (block-CSR workspaces, slice
-        // staging) after the first sparse step. Which buffer a sample gets
-        // is irrelevant to numerics — ModelGrads are zeroed before use,
-        // TrainCaches fully overwritten, and the fold below stays in
-        // sample order, so the trajectory remains bit-identical at any
-        // worker count.
-        let grad_pool: std::sync::Mutex<Vec<ModelGrads>> =
-            std::sync::Mutex::new(Vec::with_capacity(m.batch));
-        let cache_pool: std::sync::Mutex<Vec<TrainCache>> =
-            std::sync::Mutex::new(Vec::with_capacity(m.batch));
-
-        for step in start_step..cfg.train.steps {
-            let batch = batcher.next_batch();
-            let sw = Stopwatch::start();
-            let dense_phase = masks.is_none();
-            let snapshot_due = dense_phase
-                && !matches!(cfg.sparsity.kind, PatternKind::Dense)
-                && (step % cfg.train.snapshot_every == 0
-                    || step + 1 == cfg.train.max_dense_steps);
-
-            // Fan samples out over the pool; serial kernels inside each
-            // sample (the batch is the outer parallel axis). NOTE:
-            // benches/native_step.rs mirrors this pooled loop to measure
-            // the step the trainer actually runs — keep the two in sync.
-            // The ordered gradient fold runs on this thread *overlapped*
-            // with the still-running backward fan-out (`par_map_fold`): each
-            // sample's gradient is folded as soon as it and all earlier
-            // samples have landed, so the reduction no longer serializes
-            // behind the slowest shard — while the strict sample order
-            // keeps the batch gradient bit-identical at any worker count.
-            let inner = self.exec.serial_view();
-            let params_ref = &params;
-            let masks_ref = masks.as_deref();
-            grads.zero();
-            let mut loss_sum = 0.0f64;
-            let mut correct = 0usize;
-            let mut score_acc: Option<Vec<Mat>> = None;
-            let step_span = crate::obs::span(crate::obs::SpanId::TrainStep);
-            self.exec.par_map_fold(
-                m.batch,
-                |b| {
-                    let mut g = match grad_pool.lock().unwrap_or_else(|e| e.into_inner()).pop() {
-                        Some(mut g) => {
-                            g.zero();
-                            g
-                        }
-                        None => ModelGrads::zeros_like(params_ref),
-                    };
-                    let mut cache = masks_ref.map(|ms| {
-                        cache_pool
-                            .lock()
-                            .unwrap_or_else(|e| e.into_inner())
-                            .pop()
-                            .unwrap_or_else(|| TrainCache::new(ms, m.heads, dh))
-                    });
-                    let toks = &batch.x[b * m.seq_len..(b + 1) * m.seq_len];
-                    let r = train_step_sample(
-                        &inner,
-                        params_ref,
-                        m.heads,
-                        masks_ref,
-                        toks,
-                        batch.y[b],
-                        snapshot_due,
-                        &mut g,
-                        cache.as_mut(),
-                    );
-                    (r.loss, r.correct, g, cache, r.scores)
-                },
-                |_, (loss, ok, g, cache, scores)| {
-                    let _sp = crate::obs::span(crate::obs::SpanId::GradFold);
-                    loss_sum += loss;
-                    correct += ok as usize;
-                    grads.add_assign(&g);
-                    // Recycle for in-flight samples and the next step.
-                    grad_pool.lock().unwrap_or_else(|e| e.into_inner()).push(g);
-                    if let Some(c) = cache {
-                        cache_pool.lock().unwrap_or_else(|e| e.into_inner()).push(c);
-                    }
-                    if let Some(s) = scores {
-                        match &mut score_acc {
-                            None => score_acc = Some(s),
-                            Some(acc) => {
-                                for (a, b) in acc.iter_mut().zip(&s) {
-                                    a.add_assign(b);
-                                }
-                            }
-                        }
-                    }
-                },
-            );
-            grads.scale(1.0 / m.batch as f32);
-            {
-                let _sp = crate::obs::span(crate::obs::SpanId::Optimizer);
-                opt.step(&mut params, &grads);
-            }
-            drop(step_span);
-
-            metrics.record(StepRecord {
-                step,
-                phase: if dense_phase { Phase::Dense } else { Phase::Sparse },
-                loss: (loss_sum / m.batch as f64) as f32,
-                acc: correct as f32 / m.batch as f32,
-                step_ms: sw.elapsed_ms(),
-            });
-
-            if let Some(mut scores) = score_acc {
-                for s in &mut scores {
-                    s.scale(1.0 / m.batch as f32);
-                }
-                let stable = detector.observe(&scores);
-                let min_ok = step >= cfg.train.min_dense_steps;
-                let forced = step + 1 >= cfg.train.max_dense_steps;
-                if transition_should_fire(cfg.sparsity.kind, stable, min_ok, forced) {
-                    // The dense→sparse flip shows up in trace exports as a
-                    // transition_step span wrapping the pattern generation.
-                    let _tr = crate::obs::span(crate::obs::SpanId::TransitionStep);
-                    let gen = {
-                        let _pg = crate::obs::span(crate::obs::SpanId::PatternGen);
-                        generate_masks_for_with(&self.exec, cfg, &scores)?
-                    };
-                    metrics.transition_step = Some(step);
-                    metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
-                    self.log(&format!(
-                        "transition at step {step}: densities {:?}",
-                        metrics.pattern_density
-                    ));
-                    masks = Some(gen);
-                }
-            }
-
-            if self.verbose && step % 10 == 0 {
-                let r = metrics.records.last().expect("record pushed this step");
-                self.log(&format!(
-                    "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
-                    r.phase.name(),
-                    r.loss,
-                    r.acc,
-                    r.step_ms
-                ));
-            }
-
-            // Crash-safe periodic checkpoint, written after the step fully
-            // completed (optimizer applied, transition decided) — a resumed
-            // run starts at `step + 1` with the exact state this one had.
-            if let (Some(every), Some(base)) = (cfg.train.checkpoint_every, &self.ckpt_base) {
-                if (step + 1) % every == 0 {
-                    let done = metrics.records.len();
-                    let path = format!("{base}.step{done:08}");
-                    Checkpoint {
-                        preset: m.preset.clone(),
-                        step: done as u64,
-                        tensors: params.to_flat(),
-                        masks: masks.clone(),
-                        resume: Some(ResumeState {
-                            next_step: (step + 1) as u64,
-                            transition_step: metrics.transition_step,
-                            pattern_density: metrics.pattern_density.clone(),
-                            records: metrics.records.clone(),
-                            batcher_rng: batcher.rng_state(),
-                            detector: detector.state(),
-                            velocity: opt.velocity().slices().iter().map(|s| s.to_vec()).collect(),
-                        }),
-                    }
-                    .save(&path)?;
-                    self.log(&format!("checkpoint {path}"));
-                    kept.push_back(path);
-                    while kept.len() > cfg.train.checkpoint_keep.max(1) {
-                        if let Some(old) = kept.pop_front() {
-                            // Retention is best-effort: a missing/locked old
-                            // file must not kill the run.
-                            let _ = std::fs::remove_file(&old);
-                        }
-                    }
-                }
-            }
-        }
-
-        let eval_acc = self.evaluate(&params, masks.as_deref(), &batcher)?;
-        metrics.eval_accuracy = Some(eval_acc);
-        self.log(&format!("eval accuracy {eval_acc:.4}"));
-
-        let final_params = params.to_flat();
-        Ok(TrainOutcome { metrics, masks, final_params })
-    }
-
-    /// Accuracy over the fixed eval set (same stream the PJRT trainer
-    /// evaluates on), through the rust-native encoder.
-    pub fn evaluate(
-        &self,
-        params: &ModelParams,
-        masks: Option<&[BlockMask]>,
-        batcher: &Batcher,
-    ) -> Result<f64> {
-        let m = &self.exp.model;
-        let eval_batches = super::eval_batches();
-        let mut enc =
-            Encoder::new(params.clone(), m.heads).with_exec(self.exec.clone());
-        if let Some(ms) = masks {
-            enc = enc.with_masks(ms.to_vec())?;
-        }
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for batch in batcher.eval_set(eval_batches, self.exp.train.seed) {
-            let logits = enc.forward_batch(&batch.x, batch.batch);
-            for (i, &label) in batch.y.iter().enumerate() {
-                if crate::tensor::ops::argmax(logits.row(i)) == label as usize {
-                    correct += 1;
-                }
-            }
-            total += batch.y.len();
-        }
-        Ok(correct as f64 / total.max(1) as f64)
+        let mut backend = NativeBackend::new(self.exp.clone())?;
+        run_training(&mut backend, self.verbose, self.ckpt_base.as_deref(), from)
     }
 
     /// Checkpoint with the trained per-layer masks embedded, so `spion
     /// serve` runs the *trained* sparsity pattern rather than regenerating
     /// one from synthetic scores.
     pub fn save_checkpoint(&self, outcome: &TrainOutcome, path: &str) -> Result<()> {
-        Checkpoint {
-            preset: self.exp.model.preset.clone(),
-            step: outcome.metrics.records.len() as u64,
-            tensors: outcome.final_params.clone(),
-            masks: outcome.masks.clone(),
-            resume: None,
-        }
-        .save(path)
+        save_outcome_checkpoint(&self.exp.model.preset, outcome, path)
     }
 }
 
@@ -435,6 +370,7 @@ mod tests {
     use super::*;
     use crate::config::types::SparsityConfig;
     use crate::config::{ModelConfig, TaskKind, TrainConfig};
+    use crate::metrics::Phase;
     use crate::pattern::SpionVariant;
 
     pub(crate) fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfig {
@@ -480,6 +416,10 @@ mod tests {
         let mut exp = micro_exp(PatternKind::Dense, 1, 1);
         exp.model.heads = 3; // 16 % 3 != 0
         assert!(NativeTrainer::new(exp).is_err());
+        // The backend itself enforces the same contract.
+        let mut exp = micro_exp(PatternKind::Dense, 1, 1);
+        exp.model.batch = 0;
+        assert!(NativeBackend::new(exp).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The three-phase SPION trainer (paper Algorithm 2 + Fig. 2), driving the
+//! The PJRT training backend (paper Algorithm 2 + Fig. 2), driving the
 //! AOT-compiled train-step artifacts through PJRT.
 //!
 //! Phase 1 (dense): run `dense_step`, snapshotting the per-layer
@@ -8,6 +8,12 @@
 //! Reformer LSH over A^s row profiles). Phase 2 (sparse): `sparse_step`
 //! with the frozen masks until the step budget ends.
 //!
+//! The phase/transition/checkpoint control flow itself lives in the shared
+//! driver (`coordinator::backend::run_training`); this module contributes
+//! [`PjrtBackend`] — the XLA step math behind the [`TrainerBackend`]
+//! trait — plus [`Trainer`], the stable construct-then-`run` façade, and
+//! the pure pattern-dispatch helpers both backends share.
+//!
 //! Baseline protocol note (DESIGN.md §3): BigBird/Reformer in the paper fix
 //! their pattern from step 0. We run every policy through the same
 //! three-phase loop — the fixed-pattern baselines simply transition at
@@ -15,23 +21,30 @@
 //! the warmup provides). This harmonization keeps a single code path and
 //! changes nothing about what Fig. 5/Table 2 measure (steady-state sparse
 //! throughput and final quality).
+//!
+//! [`TransitionDetector`]: super::phase::TransitionDetector
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentConfig, PatternKind};
-use crate::data::{batcher::Batcher, make_task};
+use crate::data::batcher::{Batch, Batcher};
 use crate::exec::Exec;
-use crate::metrics::{Phase, StepRecord, TrainMetrics};
+use crate::metrics::TrainMetrics;
 use crate::pattern::{bigbird, lsh, BlockMask};
 use crate::runtime::executor::lit;
-use crate::runtime::{ArtifactSet, Runtime};
+use crate::runtime::{ArtifactSet, Executable, Runtime};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
-use crate::util::Stopwatch;
 
+use super::backend::{
+    run_training, save_outcome_checkpoint, BackendSnapshot, StepStats, TrainerBackend,
+};
 use super::checkpoint::Checkpoint;
-use super::phase::TransitionDetector;
 
+/// Stable façade over [`PjrtBackend`] + the shared driver — the
+/// construct-then-`run` API `main.rs`, the e2e tests and the benches use.
 pub struct Trainer<'r> {
     rt: &'r Runtime,
     pub exp: ExperimentConfig,
@@ -72,152 +85,11 @@ impl<'r> Trainer<'r> {
         self
     }
 
-    fn log(&self, msg: &str) {
-        if self.verbose {
-            println!("[trainer] {msg}");
-        }
-    }
-
     /// Full Algorithm-2 run. Returns metrics, the generated masks (None for
     /// the dense baseline) and the final parameters.
     pub fn run(&self) -> Result<TrainOutcome> {
-        let m = &self.artifacts.manifest;
-        let cfg = &self.exp;
-        let init_exe = self.rt.load(&self.artifacts.path("init"))?;
-        let dense_exe = self.rt.load(&self.artifacts.path("dense_step"))?;
-
-        // --- init ---
-        let mut params = init_exe.run(&[lit::scalar_u32(cfg.train.seed as u32)])?;
-        if params.len() != m.param_count() {
-            return Err(anyhow!(
-                "init returned {} tensors, manifest says {}",
-                params.len(),
-                m.param_count()
-            ));
-        }
-        let mut adam_m = zeros_like_params(m)?;
-        let mut adam_v = zeros_like_params(m)?;
-
-        // --- data ---
-        let task = make_task(cfg.task, m.seq_len, m.vocab, m.classes);
-        let mut batcher = Batcher::new(task, m.batch, cfg.train.seed);
-
-        let mut detector = TransitionDetector::new(cfg.train.transition_threshold);
-        let mut metrics = TrainMetrics::default();
-        let mut masks: Option<Vec<BlockMask>> = None;
-        let mut masks_literal: Option<xla::Literal> = None;
-        #[allow(unused_assignments)]
-        let mut last_scores: Option<Vec<Mat>> = None;
-        let mut sparse_exe = None;
-
-        for step in 0..cfg.train.steps {
-            let batch = batcher.next_batch();
-            let x = lit::i32_vec(&batch.x, &[m.batch as i64, m.seq_len as i64])?;
-            let y = lit::i32_vec(&batch.y, &[m.batch as i64])?;
-            let step_lit = lit::scalar_i32(step as i32 + 1);
-            let lr = lit::scalar_f32(cfg.train.lr as f32);
-
-            let sw = Stopwatch::start();
-            if masks_literal.is_none() {
-                // ---- dense phase (Algorithm 2 lines 3–12) ----
-                let mut inputs = Vec::with_capacity(3 * params.len() + 4);
-                inputs.extend(params.iter().cloned());
-                inputs.extend(adam_m.iter().cloned());
-                inputs.extend(adam_v.iter().cloned());
-                inputs.extend([x, y, step_lit, lr]);
-                let mut out = dense_exe.run(&inputs)?;
-                let p = m.param_count();
-                let scores_lit = out.pop().ok_or_else(|| anyhow!("missing scores"))?;
-                let acc = lit::scalar_to_f32(&out.pop().expect("dense exe returns acc"))?;
-                let loss = lit::scalar_to_f32(&out.pop().expect("dense exe returns loss"))?;
-                adam_v = out.split_off(2 * p);
-                adam_m = out.split_off(p);
-                params = out;
-                metrics.record(StepRecord {
-                    step,
-                    phase: Phase::Dense,
-                    loss,
-                    acc,
-                    step_ms: sw.elapsed_ms(),
-                });
-
-                // Snapshot + transition check.
-                let snap_due = step % cfg.train.snapshot_every == 0;
-                if snap_due || step + 1 == cfg.train.max_dense_steps {
-                    let scores = split_scores(&scores_lit, m.layers, m.seq_len)?;
-                    let stable = detector.observe(&scores);
-                    last_scores = Some(scores);
-                    let min_ok = step >= cfg.train.min_dense_steps;
-                    let forced = step + 1 >= cfg.train.max_dense_steps;
-                    let fire = super::phase::transition_should_fire(
-                        cfg.sparsity.kind,
-                        stable,
-                        min_ok,
-                        forced,
-                    );
-                    if fire {
-                        let scores =
-                            last_scores.as_ref().expect("scores captured on snapshot step");
-                        let gen = self.generate_masks(scores)?;
-                        metrics.transition_step = Some(step);
-                        metrics.pattern_density = gen.iter().map(|g| g.density()).collect();
-                        self.log(&format!(
-                            "transition at step {step}: densities {:?}",
-                            metrics.pattern_density
-                        ));
-                        masks_literal = Some(masks_to_literal(&gen, m.layers, m.lb)?);
-                        masks = Some(gen);
-                        sparse_exe = Some(self.rt.load(&self.artifacts.path("sparse_step"))?);
-                    }
-                }
-            } else {
-                // ---- sparse phase (Algorithm 2 lines 13–16) ----
-                let exe = sparse_exe.as_ref().expect("sparse exe loaded at transition");
-                let mut inputs = Vec::with_capacity(3 * params.len() + 5);
-                inputs.extend(params.iter().cloned());
-                inputs.extend(adam_m.iter().cloned());
-                inputs.extend(adam_v.iter().cloned());
-                inputs.extend([
-                    x,
-                    y,
-                    step_lit,
-                    lr,
-                    masks_literal.as_ref().expect("masks set with sparse exe").clone(),
-                ]);
-                let mut out = exe.run(&inputs)?;
-                let p = m.param_count();
-                let acc = lit::scalar_to_f32(&out.pop().expect("sparse exe returns acc"))?;
-                let loss = lit::scalar_to_f32(&out.pop().expect("sparse exe returns loss"))?;
-                adam_v = out.split_off(2 * p);
-                adam_m = out.split_off(p);
-                params = out;
-                metrics.record(StepRecord {
-                    step,
-                    phase: Phase::Sparse,
-                    loss,
-                    acc,
-                    step_ms: sw.elapsed_ms(),
-                });
-            }
-            if self.verbose && step % 10 == 0 {
-                let r = metrics.records.last().expect("record pushed this step");
-                self.log(&format!(
-                    "step {step} [{}] loss {:.4} acc {:.3} ({:.0} ms)",
-                    r.phase.name(),
-                    r.loss,
-                    r.acc,
-                    r.step_ms
-                ));
-            }
-        }
-
-        // --- eval ---
-        let eval_acc = self.evaluate(&params, masks_literal.as_ref(), &batcher)?;
-        metrics.eval_accuracy = Some(eval_acc);
-        self.log(&format!("eval accuracy {eval_acc:.4}"));
-
-        let final_params = literals_to_host(&params, m)?;
-        Ok(TrainOutcome { metrics, masks, final_params })
+        let mut backend = PjrtBackend::new(self.rt, self.exp.clone())?;
+        run_training(&mut backend, self.verbose, None, None)
     }
 
     /// Accuracy over a fixed eval set via the fwd artifacts.
@@ -227,32 +99,7 @@ impl<'r> Trainer<'r> {
         masks: Option<&xla::Literal>,
         batcher: &Batcher,
     ) -> Result<f64> {
-        let m = &self.artifacts.manifest;
-        let eval_batches = super::eval_batches();
-        let exe = match masks {
-            Some(_) => self.rt.load(&self.artifacts.path("sparse_fwd"))?,
-            None => self.rt.load(&self.artifacts.path("dense_fwd"))?,
-        };
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for batch in batcher.eval_set(eval_batches, self.exp.train.seed) {
-            let x = lit::i32_vec(&batch.x, &[m.batch as i64, m.seq_len as i64])?;
-            let mut inputs: Vec<xla::Literal> = params.to_vec();
-            inputs.push(x);
-            if let Some(mk) = masks {
-                inputs.push(mk.clone());
-            }
-            let out = exe.run(&inputs)?;
-            let logits = lit::to_f32_vec(&out[0])?;
-            for (i, &label) in batch.y.iter().enumerate() {
-                let row = &logits[i * m.classes..(i + 1) * m.classes];
-                if crate::tensor::ops::argmax(row) == label as usize {
-                    correct += 1;
-                }
-            }
-            total += batch.y.len();
-        }
-        Ok(correct as f64 / total.max(1) as f64)
+        evaluate_with(self.rt, &self.artifacts, &self.exp, params, masks, batcher)
     }
 
     /// Per-layer pattern dispatch (pure; unit-tested without a runtime).
@@ -264,15 +111,218 @@ impl<'r> Trainer<'r> {
     }
 
     pub fn save_checkpoint(&self, outcome: &TrainOutcome, path: &str) -> Result<()> {
-        Checkpoint {
-            preset: self.exp.model.preset.clone(),
-            step: outcome.metrics.records.len() as u64,
-            tensors: outcome.final_params.clone(),
-            masks: outcome.masks.clone(),
-            resume: None,
-        }
-        .save(path)
+        save_outcome_checkpoint(&self.exp.model.preset, outcome, path)
     }
+}
+
+/// The PJRT [`TrainerBackend`]: parameters and Adam state live as XLA
+/// literals; each step is one AOT-compiled `dense_step`/`sparse_step`
+/// execution. Periodic checkpoints are unsupported ([`snapshot`] returns
+/// `None` — the Adam literals have no resume format), so the driver skips
+/// them; resume is rejected with a pointer at `--backend native`.
+///
+/// [`snapshot`]: TrainerBackend::snapshot
+pub struct PjrtBackend<'r> {
+    rt: &'r Runtime,
+    exp: ExperimentConfig,
+    artifacts: ArtifactSet,
+    exec: Exec,
+    params: Vec<xla::Literal>,
+    adam_m: Vec<xla::Literal>,
+    adam_v: Vec<xla::Literal>,
+    dense_exe: Arc<Executable>,
+    /// Loaded lazily at the transition (`apply_masks`).
+    sparse_exe: Option<Arc<Executable>>,
+    /// The (layers, lb, lb) mask literal every sparse step consumes.
+    masks_literal: Option<xla::Literal>,
+    /// A^s retained by the last `snapshot_due` dense step.
+    scores_lit: Option<xla::Literal>,
+}
+
+impl<'r> PjrtBackend<'r> {
+    pub fn new(rt: &'r Runtime, mut exp: ExperimentConfig) -> Result<Self> {
+        let artifacts = ArtifactSet::open(&exp.artifacts_dir, &exp.model.preset)?;
+        artifacts.manifest.check_against(&exp.model)?;
+        // Same artifact-baked override as `Trainer::new`; conditional, so
+        // the façade path (already overridden there) does not print twice.
+        let baked = artifacts.manifest.pattern_block;
+        if exp.sparsity.pattern.block != baked {
+            eprintln!(
+                "[trainer] note: pattern block {} overridden by artifact-baked block {baked}",
+                exp.sparsity.pattern.block
+            );
+            exp.sparsity.pattern.block = baked;
+        }
+        let exec = Exec::new(exp.exec);
+        let m = &artifacts.manifest;
+        let init_exe = rt.load(&artifacts.path("init"))?;
+        let dense_exe = rt.load(&artifacts.path("dense_step"))?;
+        let params = init_exe.run(&[lit::scalar_u32(exp.train.seed as u32)])?;
+        if params.len() != m.param_count() {
+            return Err(anyhow!(
+                "init returned {} tensors, manifest says {}",
+                params.len(),
+                m.param_count()
+            ));
+        }
+        let adam_m = zeros_like_params(m)?;
+        let adam_v = zeros_like_params(m)?;
+        Ok(Self {
+            rt,
+            exp,
+            artifacts,
+            exec,
+            params,
+            adam_m,
+            adam_v,
+            dense_exe,
+            sparse_exe: None,
+            masks_literal: None,
+            scores_lit: None,
+        })
+    }
+}
+
+impl TrainerBackend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "trainer"
+    }
+
+    fn config(&self) -> &ExperimentConfig {
+        &self.exp
+    }
+
+    fn exec(&self) -> &Exec {
+        &self.exec
+    }
+
+    fn step(&mut self, step: usize, batch: &Batch, snapshot_due: bool) -> Result<StepStats> {
+        let (mb, ms, p) = {
+            let m = &self.artifacts.manifest;
+            (m.batch as i64, m.seq_len as i64, m.param_count())
+        };
+        let x = lit::i32_vec(&batch.x, &[mb, ms])?;
+        let y = lit::i32_vec(&batch.y, &[mb])?;
+        let step_lit = lit::scalar_i32(step as i32 + 1);
+        let lr = lit::scalar_f32(self.exp.train.lr as f32);
+
+        if self.masks_literal.is_none() {
+            // ---- dense phase (Algorithm 2 lines 3–12) ----
+            let mut inputs = Vec::with_capacity(3 * self.params.len() + 4);
+            inputs.extend(self.params.iter().cloned());
+            inputs.extend(self.adam_m.iter().cloned());
+            inputs.extend(self.adam_v.iter().cloned());
+            inputs.extend([x, y, step_lit, lr]);
+            let mut out = self.dense_exe.run(&inputs)?;
+            let scores_lit = out.pop().ok_or_else(|| anyhow!("missing scores"))?;
+            let acc = lit::scalar_to_f32(&out.pop().expect("dense exe returns acc"))?;
+            let loss = lit::scalar_to_f32(&out.pop().expect("dense exe returns loss"))?;
+            self.adam_v = out.split_off(2 * p);
+            self.adam_m = out.split_off(p);
+            self.params = out;
+            // The artifact emits A^s every step; retain it only when the
+            // driver asked (a `capture_scores` call follows).
+            self.scores_lit = snapshot_due.then_some(scores_lit);
+            Ok(StepStats { loss, acc })
+        } else {
+            // ---- sparse phase (Algorithm 2 lines 13–16) ----
+            let exe =
+                self.sparse_exe.as_ref().expect("sparse exe loaded with masks").clone();
+            let mut inputs = Vec::with_capacity(3 * self.params.len() + 5);
+            inputs.extend(self.params.iter().cloned());
+            inputs.extend(self.adam_m.iter().cloned());
+            inputs.extend(self.adam_v.iter().cloned());
+            inputs.extend([
+                x,
+                y,
+                step_lit,
+                lr,
+                self.masks_literal.as_ref().expect("masks set with sparse exe").clone(),
+            ]);
+            let mut out = exe.run(&inputs)?;
+            let acc = lit::scalar_to_f32(&out.pop().expect("sparse exe returns acc"))?;
+            let loss = lit::scalar_to_f32(&out.pop().expect("sparse exe returns loss"))?;
+            self.adam_v = out.split_off(2 * p);
+            self.adam_m = out.split_off(p);
+            self.params = out;
+            Ok(StepStats { loss, acc })
+        }
+    }
+
+    fn capture_scores(&mut self) -> Result<Option<Vec<Mat>>> {
+        let (layers, l) = (self.artifacts.manifest.layers, self.artifacts.manifest.seq_len);
+        self.scores_lit.take().map(|s| split_scores(&s, layers, l)).transpose()
+    }
+
+    fn apply_masks(&mut self, masks: &[BlockMask]) -> Result<()> {
+        let (layers, lb) = (self.artifacts.manifest.layers, self.artifacts.manifest.lb);
+        self.masks_literal = Some(masks_to_literal(masks, layers, lb)?);
+        self.sparse_exe = Some(self.rt.load(&self.artifacts.path("sparse_step"))?);
+        Ok(())
+    }
+
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        // Adam state lives in device literals with no resume format — no
+        // periodic checkpoints on this backend.
+        None
+    }
+
+    fn restore(&mut self, _ck: &Checkpoint) -> Result<()> {
+        Err(anyhow!("the PJRT backend does not support checkpoint resume — use --backend native"))
+    }
+
+    fn evaluate(&mut self, batcher: &Batcher) -> Result<f64> {
+        evaluate_with(
+            self.rt,
+            &self.artifacts,
+            &self.exp,
+            &self.params,
+            self.masks_literal.as_ref(),
+            batcher,
+        )
+    }
+
+    fn final_params(&self) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        literals_to_host(&self.params, &self.artifacts.manifest)
+    }
+}
+
+/// Accuracy over a fixed eval set via the fwd artifacts (shared by the
+/// façade's public `evaluate` and the backend's trait impl).
+fn evaluate_with(
+    rt: &Runtime,
+    artifacts: &ArtifactSet,
+    exp: &ExperimentConfig,
+    params: &[xla::Literal],
+    masks: Option<&xla::Literal>,
+    batcher: &Batcher,
+) -> Result<f64> {
+    let m = &artifacts.manifest;
+    let eval_batches = super::eval_batches();
+    let exe = match masks {
+        Some(_) => rt.load(&artifacts.path("sparse_fwd"))?,
+        None => rt.load(&artifacts.path("dense_fwd"))?,
+    };
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for batch in batcher.eval_set(eval_batches, exp.train.seed) {
+        let x = lit::i32_vec(&batch.x, &[m.batch as i64, m.seq_len as i64])?;
+        let mut inputs: Vec<xla::Literal> = params.to_vec();
+        inputs.push(x);
+        if let Some(mk) = masks {
+            inputs.push(mk.clone());
+        }
+        let out = exe.run(&inputs)?;
+        let logits = lit::to_f32_vec(&out[0])?;
+        for (i, &label) in batch.y.iter().enumerate() {
+            let row = &logits[i * m.classes..(i + 1) * m.classes];
+            if crate::tensor::ops::argmax(row) == label as usize {
+                correct += 1;
+            }
+        }
+        total += batch.y.len();
+    }
+    Ok(correct as f64 / total.max(1) as f64)
 }
 
 /// Pattern dispatch shared by the trainer and the benches (serial context).
@@ -378,7 +428,7 @@ fn literals_to_host(
 mod tests {
     use super::*;
     use crate::config::types::{preset, SparsityConfig};
-    use crate::config::{TrainConfig};
+    use crate::config::TrainConfig;
     use crate::pattern::SpionVariant;
 
     fn mk_exp(kind: PatternKind) -> ExperimentConfig {

@@ -18,6 +18,10 @@ pub mod config;
 pub mod pattern;
 pub mod sparse;
 pub mod attention;
+// The model is on both the serve request path and the train step path:
+// checkpoint-loaded parameters flow through it, so the same no-unwrap rule
+// as coordinator/serve applies (tests opt back in).
+#[deny(clippy::unwrap_used)]
 pub mod model;
 pub mod data;
 pub mod runtime;

@@ -11,7 +11,10 @@
 use anyhow::Result;
 use spion::config::types::{preset, presets, ServeConfig, SparsityConfig};
 use spion::config::{ExecConfig, ExperimentConfig, PatternKind, TrainBackend, TrainConfig};
-use spion::coordinator::{NativeTrainer, TrainOutcome, Trainer};
+use spion::coordinator::{
+    run_training, save_outcome_checkpoint, NativeBackend, PjrtBackend, TrainOutcome,
+    TrainerBackend,
+};
 use spion::exec::Exec;
 use spion::runtime::Runtime;
 use spion::util::cli::Args;
@@ -258,38 +261,44 @@ fn run_train(args: &Args) -> Result<()> {
         exp.model.layers,
         exp.exec.resolved_workers()
     );
-    let result = match exp.train.backend {
-        TrainBackend::Native => {
-            // Fully offline: no artifacts directory, no PJRT — the rust
-            // full-encoder engine runs all three phases.
-            let resume_ck = args
+    let result = {
+        // Resume is a native-backend feature: the PJRT Adam state lives in
+        // device literals with no resume format.
+        let resume_ck = match exp.train.backend {
+            TrainBackend::Native => args
                 .get("resume")
                 .map(spion::coordinator::checkpoint::Checkpoint::load)
-                .transpose()?;
-            // Periodic checkpoints share the --checkpoint-out base; the
-            // final file keeps the bare name, mid-run ones get .stepNNNNNNNN.
-            let base = args.str_or("checkpoint-out", "spion.ckpt");
-            let trainer = NativeTrainer::new(exp)?.verbose(true).checkpoint_to(base);
-            let outcome = match &resume_ck {
-                Some(ck) => {
-                    println!("resuming from checkpoint at step {}", ck.step);
-                    trainer.run_resumed(ck)?
+                .transpose()?,
+            TrainBackend::Pjrt => {
+                if args.has("resume") {
+                    anyhow::bail!(
+                        "--resume is supported by the native backend only (pass --backend native)"
+                    );
                 }
-                None => trainer.run()?,
-            };
-            report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
-        }
-        TrainBackend::Pjrt => {
-            if args.has("resume") {
-                anyhow::bail!(
-                    "--resume is supported by the native backend only (pass --backend native)"
-                );
+                None
             }
-            let rt = Runtime::cpu()?;
-            let trainer = Trainer::new(&rt, exp)?.verbose(true);
-            let outcome = trainer.run()?;
-            report_train(args, &outcome, |o, path| trainer.save_checkpoint(o, path))
+        };
+        // Periodic checkpoints share the --checkpoint-out base; the final
+        // file keeps the bare name, mid-run ones get .stepNNNNNNNN.
+        let base = args.str_or("checkpoint-out", "spion.ckpt");
+        // One driver, one trait object: --backend picks the TrainerBackend
+        // impl; phases/transition/checkpointing are shared in run_training.
+        let rt;
+        let mut backend: Box<dyn TrainerBackend + '_> = match exp.train.backend {
+            TrainBackend::Native => Box::new(NativeBackend::new(exp)?),
+            TrainBackend::Pjrt => {
+                rt = Runtime::cpu()?;
+                Box::new(PjrtBackend::new(&rt, exp)?)
+            }
+        };
+        if let Some(ck) = &resume_ck {
+            println!("resuming from checkpoint at step {}", ck.step);
         }
+        let outcome = run_training(backend.as_mut(), true, Some(base.as_str()), resume_ck.as_ref())?;
+        // The backend may have adjusted the config at construction (PJRT
+        // bakes the pattern block), so read the preset back from it.
+        let preset = backend.config().model.preset.clone();
+        report_train(args, &outcome, |o, path| save_outcome_checkpoint(&preset, o, path))
     };
     if let Some(path) = &obs_cfg.trace_out {
         spion::obs::trace::write(path)?;

@@ -1,17 +1,19 @@
-//! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`],
-//! with either dense MHA or the block-sparse engine (Algorithm 5).
+//! Encoder forward pass (Algorithm 1, inference) over [`ModelParams`] —
+//! a thin stateful wrapper around the shared stage pipeline of
+//! [`super::layer`], run in `Infer` mode (dense MHA or the block-sparse
+//! engine of Algorithm 5, no activation caching).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::attention::{dense_mha, sparse_mha_with, MhaWorkspace};
+use crate::attention::MhaWorkspace;
 use crate::exec::Exec;
 use crate::pattern::BlockMask;
-use crate::tensor::ops::{add_bias, layernorm, mean_rows, relu};
 use crate::tensor::Mat;
 
-use super::{ModelParams, LN_EPS};
+use super::layer::{forward_pipeline, ForwardMode, LayerStages};
+use super::ModelParams;
 
 /// Cloneable so the serving layer can hand each pool worker its own
 /// instance. Weights are **shared**: `params` sits behind an `Arc`, so an
@@ -26,6 +28,9 @@ pub struct Encoder {
     /// Per-layer sparse MHA workspaces; None = dense attention.
     sparse: Option<Vec<MhaWorkspace>>,
     masks: Option<Vec<BlockMask>>,
+    /// Per-layer stage selection fed to the pipeline (recomputed when the
+    /// attention operator changes via [`Self::with_masks`]).
+    stages: Vec<LayerStages>,
     /// Execution context for the attention kernels (kernel selection +
     /// intra-request parallelism). Default: the process serial context,
     /// i.e. fused SIMD kernels, request-level parallelism only.
@@ -41,7 +46,8 @@ impl Encoder {
     /// one model).
     pub fn from_arc(params: Arc<ModelParams>, heads: usize) -> Self {
         assert_eq!(params.d_model() % heads, 0);
-        Self { params, heads, sparse: None, masks: None, exec: Exec::serial_ref().clone() }
+        let stages = LayerStages::plan(params.layers.len(), false);
+        Self { params, heads, sparse: None, masks: None, stages, exec: Exec::serial_ref().clone() }
     }
 
     pub fn params(&self) -> &ModelParams {
@@ -86,6 +92,7 @@ impl Encoder {
         let d = self.params.d_model();
         self.sparse = Some(masks.iter().map(|m| MhaWorkspace::new(m, self.heads, d)).collect());
         self.masks = Some(masks);
+        self.stages = LayerStages::plan(self.params.layers.len(), true);
         Ok(self)
     }
 
@@ -100,55 +107,35 @@ impl Encoder {
         self.sparse.is_some()
     }
 
-    /// Forward one sequence of tokens; returns (logits, per-layer A^s for
-    /// the dense path — empty when sparse).
-    pub fn forward(&mut self, tokens: &[i32]) -> (Vec<f32>, Vec<Mat>) {
-        let p: &ModelParams = &self.params;
-        let l = p.seq_len();
-        assert_eq!(tokens.len(), l, "expected {l} tokens");
-        let d = p.d_model();
-        // E = embed[x] + pos
-        let mut e = Mat::zeros(l, d);
-        for (i, &t) in tokens.iter().enumerate() {
-            let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
-            let prow = p.pos.row(i);
-            for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
-                *o = a + b;
-            }
-        }
-        let mut scores_out = Vec::new();
-        let exec = self.exec.clone();
-        for (n, lp) in p.layers.iter().enumerate() {
-            let x = layernorm(&e, &lp.ln1_g, &lp.ln1_b, LN_EPS);
-            let q = x.matmul(&lp.wq);
-            let k = x.matmul(&lp.wk);
-            let v = x.matmul(&lp.wv);
-            let a_dense;
-            let a: &Mat = match &mut self.sparse {
-                None => {
-                    let (a, s) = dense_mha(&q, &k, &v, self.heads);
-                    scores_out.push(s);
-                    a_dense = a;
-                    &a_dense
-                }
-                // Borrow of the workspace output — no per-layer allocation.
-                Some(ws) => sparse_mha_with(&exec, &q, &k, &v, &mut ws[n]),
-            };
-            let mut o = a.matmul(&lp.wo);
-            o.add_assign(&e);
-            let mut f = layernorm(&o, &lp.ln2_g, &lp.ln2_b, LN_EPS).matmul(&lp.wf);
-            add_bias(&mut f, &lp.bf);
-            relu(&mut f);
-            let mut e_new = f.matmul(&lp.we);
-            add_bias(&mut e_new, &lp.be);
-            e_new.add_assign(&o);
-            e = e_new;
-        }
-        let pooled = mean_rows(&e);
-        let pooled_mat = Mat::from_vec(1, d, pooled);
-        let mut logits = pooled_mat.matmul(&p.cls_w);
-        add_bias(&mut logits, &p.cls_b);
-        (logits.data, scores_out)
+    /// Forward one sequence of tokens; returns the classifier logits.
+    ///
+    /// This is the serve hot path: no score capture, no activation
+    /// caching, and (sparse) no steady-state allocation — the flood-fill
+    /// capture phase uses [`Self::forward_captured`] instead.
+    pub fn forward(&mut self, tokens: &[i32]) -> Vec<f32> {
+        self.run(tokens, None)
+    }
+
+    /// Forward one sequence capturing per-layer head-averaged attention
+    /// scores A^s on dense layers (empty when sparse) — the flood-fill
+    /// pattern-capture input. Costs one L×L matrix per dense layer, which
+    /// is why the serve path uses [`Self::forward`] instead.
+    pub fn forward_captured(&mut self, tokens: &[i32]) -> (Vec<f32>, Vec<Mat>) {
+        let mut scores = Vec::new();
+        let logits = self.run(tokens, Some(&mut scores));
+        (logits, scores)
+    }
+
+    fn run(&mut self, tokens: &[i32], capture: Option<&mut Vec<Mat>>) -> Vec<f32> {
+        let (logits, _pooled) = forward_pipeline(
+            &self.exec,
+            &self.params,
+            self.heads,
+            &self.stages,
+            tokens,
+            ForwardMode::Infer { sparse: self.sparse.as_mut(), capture },
+        );
+        logits
     }
 
     /// Forward a batch (row-major tokens, batch × L); returns logits
@@ -159,7 +146,7 @@ impl Encoder {
         let classes = self.params.classes();
         let mut out = Mat::zeros(batch, classes);
         for b in 0..batch {
-            let (logits, _) = self.forward(&tokens[b * l..(b + 1) * l]);
+            let logits = self.forward(&tokens[b * l..(b + 1) * l]);
             out.row_mut(b).copy_from_slice(&logits);
         }
         out
@@ -167,6 +154,7 @@ impl Encoder {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::model::params::ModelParams;
@@ -184,12 +172,34 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut enc = mk_encoder(&mut rng);
         let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
-        let (a, scores) = enc.forward(&toks);
-        let (b, _) = enc.forward(&toks);
+        let (a, scores) = enc.forward_captured(&toks);
+        let b = enc.forward(&toks);
         assert_eq!(a.len(), 4);
         assert_eq!(scores.len(), 2);
         assert_eq!(scores[0].rows, 16);
         assert_allclose(&a, &b, 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn capture_is_opt_in_and_bit_identical_to_plain_forward() {
+        // The serve hot path must not pay for score matrices it never
+        // reads — and opting in must not change a single logit bit.
+        let mut rng = Rng::new(7);
+        let mut enc = mk_encoder(&mut rng);
+        let toks: Vec<i32> = (0..16).map(|i| ((i * 3) % 12) as i32).collect();
+        let plain = enc.forward(&toks);
+        let (captured, scores) = enc.forward_captured(&toks);
+        assert_eq!(scores.len(), 2, "dense layers capture one A^s each");
+        for (p, c) in plain.iter().zip(&captured) {
+            assert_eq!(p.to_bits(), c.to_bits());
+        }
+        // Sparse encoders have no dense layers to capture from.
+        let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
+        let mut sp = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2)
+            .with_masks(vec![BlockMask::full(4, 4), BlockMask::full(4, 4)])
+            .unwrap();
+        let (_, sparse_scores) = sp.forward_captured(&toks);
+        assert!(sparse_scores.is_empty());
     }
 
     #[test]
@@ -198,11 +208,11 @@ mod tests {
         let flat = crate::model::params::tests::random_flat(12, 16, 8, 32, 2, 4, &mut rng);
         let toks: Vec<i32> = (0..16).map(|i| ((i * 5) % 12) as i32).collect();
         let mut dense = Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2);
-        let (ld, _) = dense.forward(&toks);
+        let ld = dense.forward(&toks);
         let full = vec![BlockMask::full(4, 4), BlockMask::full(4, 4)];
         let mut sparse =
             Encoder::new(ModelParams::from_flat(&flat, 2).unwrap(), 2).with_masks(full).unwrap();
-        let (ls, _) = sparse.forward(&toks);
+        let ls = sparse.forward(&toks);
         assert_allclose(&ld, &ls, 1e-4, 1e-5).unwrap();
     }
 
@@ -212,7 +222,7 @@ mod tests {
         let mut enc = mk_encoder(&mut rng);
         let toks: Vec<i32> = (0..32).map(|i| (i % 12) as i32).collect();
         let batch = enc.forward_batch(&toks, 2);
-        let (one, _) = enc.forward(&toks[16..32]);
+        let one = enc.forward(&toks[16..32]);
         assert_allclose(batch.row(1), &one, 1e-6, 1e-7).unwrap();
     }
 
@@ -256,7 +266,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut enc = mk_encoder(&mut rng);
         let toks: Vec<i32> = (0..16).map(|i| (i % 12) as i32).collect();
-        let (_, scores) = enc.forward(&toks);
+        let (_, scores) = enc.forward_captured(&toks);
         for s in &scores {
             for i in 0..s.rows {
                 let mass: f32 = s.row(i).iter().sum();

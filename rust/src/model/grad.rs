@@ -224,6 +224,7 @@ impl SgdMomentum {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::model::params::ModelParams;

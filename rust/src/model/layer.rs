@@ -1,0 +1,621 @@
+//! The single encoder-layer stage pipeline — **the only place in the crate
+//! that walks `LN → attention → residual → LN → FFN → residual`.**
+//!
+//! Before this module existed the layer loop was written twice — once in
+//! `encoder.rs` (serving) and once in `train.rs` (native training) — so
+//! every layer-level feature had to be built and parity-tested in both.
+//! [`forward_pipeline`] is now the shared implementation, parameterized by
+//! a [`ForwardMode`]:
+//!
+//! * `Infer` — minimal scratch. Sparse layers borrow their context out of
+//!   the per-encoder [`MhaWorkspace`]s (no steady-state allocation on the
+//!   serve path), activations are dropped as soon as the next stage has
+//!   consumed them, and A^s score capture is opt-in.
+//! * `Train` — every activation the fused backward needs is cached per
+//!   layer ([`LayerCache`]: LN stats, attention probabilities,
+//!   pre-activations), and sparse layers stage through the step-spanning
+//!   [`TrainCache`] so the sparse phase stays allocation-free.
+//!
+//! Both modes run the **same statements in the same order** for the math
+//! they share, so serve logits are bit-identical to the training forward at
+//! equal params/masks (witnessed by `tests/forward_parity.rs`).
+//!
+//! Per-layer heterogeneity is expressed as explicit stages rather than
+//! special cases at the call sites: [`AttnStage`] selects the attention
+//! operator per layer and [`FfnStage`] reserves the seam where the
+//! Spark-Transformer-style top-k sparse FFN will plug in.
+//!
+//! ```text
+//!           ┌───────────────── one EncoderLayer stage pipeline ─────────────────┐
+//! e ──► LN1 ──► Wq/Wk/Wv ──► AttnStage::{Dense, BlockSparse} ──► Wo ──► (+e)
+//!   ───► LN2 ──► FfnStage::{Dense, TopK(reserved)} ──► (+o) ──► e'
+//!           └──── Train mode taps every box into a LayerCache ────┘
+//! ```
+
+use crate::attention::dense::dense_attention_head;
+use crate::attention::sparse::{sparse_attention_head_with, TrainWorkspace};
+use crate::attention::{sparse_mha_with, MhaWorkspace};
+use crate::exec::Exec;
+use crate::pattern::BlockMask;
+use crate::tensor::ops::{add_bias, mean_rows, relu};
+use crate::tensor::Mat;
+
+use super::{ModelParams, LN_EPS};
+
+/// Attention operator of one encoder layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnStage {
+    /// Full softmax attention (phase 1 / the Original-Transformer baseline).
+    Dense,
+    /// Block-CSR sparse attention over a frozen per-layer mask (phase 3).
+    BlockSparse,
+}
+
+/// Feed-forward operator of one encoder layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnStage {
+    /// The standard two-matmul ReLU FFN.
+    Dense,
+    /// Reserved: top-k sparse FFN (Spark-Transformer style). Constructible
+    /// so configs and plans can carry it, but executing it is a panic until
+    /// the kernel lands — no silent fallback to dense.
+    TopK { k: usize },
+}
+
+/// The stage selection for one encoder layer. SPION's premise is per-layer
+/// specialization, so the pipeline takes one of these *per layer* — a plan
+/// may mix dense and sparse attention (and, later, FFN variants) freely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerStages {
+    pub attn: AttnStage,
+    pub ffn: FfnStage,
+}
+
+impl LayerStages {
+    /// The homogeneous plan both current callers use: every layer dense
+    /// (`sparse = false`) or every layer block-sparse (`sparse = true`),
+    /// always with the dense FFN.
+    pub fn plan(layers: usize, sparse: bool) -> Vec<LayerStages> {
+        let attn = if sparse { AttnStage::BlockSparse } else { AttnStage::Dense };
+        vec![LayerStages { attn, ffn: FfnStage::Dense }; layers]
+    }
+}
+
+/// Cached LayerNorm normalization state: `xhat = (x − μ)·inv` and
+/// `inv = 1/√(σ² + eps)` per row — exactly what [`layernorm_bwd`] needs.
+#[derive(Debug)]
+pub struct LnCache {
+    pub xhat: Mat,
+    pub inv: Vec<f32>,
+}
+
+impl LnCache {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { xhat: Mat::zeros(rows, cols), inv: vec![0.0f32; rows] }
+    }
+}
+
+/// Row-wise LayerNorm with learned scale/shift — the crate's **only**
+/// implementation (eps matches the jax default 1e-6 of the L2 model).
+/// With `cache = None` this is the plain inference forward; with `Some` it
+/// additionally records `xhat`/`inv` for the backward. The two paths keep
+/// their historical per-element expressions (`(x−μ)·r·γ + β` vs
+/// `xhat·γ + β` with `xhat = (x−μ)·r`), which associate identically —
+/// cached and uncached outputs are bit-equal.
+pub fn layernorm_fwd(
+    x: &Mat,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    cache: Option<&mut LnCache>,
+) -> Mat {
+    assert_eq!(gamma.len(), x.cols);
+    assert_eq!(beta.len(), x.cols);
+    let mut y = Mat::zeros(x.rows, x.cols);
+    let d = x.cols as f32;
+    match cache {
+        None => {
+            for i in 0..x.rows {
+                let row = x.row(i);
+                let mean = row.iter().sum::<f32>() / d;
+                let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d;
+                let r = 1.0 / (var + eps).sqrt();
+                let yrow = y.row_mut(i);
+                for j in 0..x.cols {
+                    yrow[j] = (row[j] - mean) * r * gamma[j] + beta[j];
+                }
+            }
+        }
+        Some(c) => {
+            assert_eq!((c.xhat.rows, c.xhat.cols), (x.rows, x.cols));
+            assert_eq!(c.inv.len(), x.rows);
+            for i in 0..x.rows {
+                let row = x.row(i);
+                let mean = row.iter().sum::<f32>() / d;
+                let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d;
+                let r = 1.0 / (var + eps).sqrt();
+                c.inv[i] = r;
+                let hrow = c.xhat.row_mut(i);
+                for (h, &v) in hrow.iter_mut().zip(row) {
+                    *h = (v - mean) * r;
+                }
+                let yrow = y.row_mut(i);
+                for j in 0..x.cols {
+                    yrow[j] = hrow[j] * gamma[j] + beta[j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// LayerNorm backward. `dy` is the output cotangent; `ln` comes from
+/// [`layernorm_fwd`] run with a cache. Accumulates into `dgamma`/`dbeta`,
+/// returns dx: `dx = inv · (g − mean(g) − xhat · mean(g ⊙ xhat))` with
+/// `g = dy ⊙ γ`.
+pub fn layernorm_bwd(
+    dy: &Mat,
+    ln: &LnCache,
+    gamma: &[f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) -> Mat {
+    let xhat = &ln.xhat;
+    let inv = &ln.inv;
+    assert_eq!((dy.rows, dy.cols), (xhat.rows, xhat.cols));
+    assert_eq!(gamma.len(), dy.cols);
+    let d = dy.cols as f32;
+    let mut dx = Mat::zeros(dy.rows, dy.cols);
+    for i in 0..dy.rows {
+        let dyrow = dy.row(i);
+        let hrow = xhat.row(i);
+        for j in 0..dy.cols {
+            dgamma[j] += dyrow[j] * hrow[j];
+            dbeta[j] += dyrow[j];
+        }
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        for j in 0..dy.cols {
+            let g = dyrow[j] * gamma[j];
+            s1 += g;
+            s2 += g * hrow[j];
+        }
+        let (m1, m2) = (s1 / d, s2 / d);
+        let r = inv[i];
+        let dxrow = dx.row_mut(i);
+        for j in 0..dy.cols {
+            let g = dyrow[j] * gamma[j];
+            dxrow[j] = r * (g - m1 - hrow[j] * m2);
+        }
+    }
+    dx
+}
+
+/// Step-spanning sparse-phase buffers for one training sample: the per-head
+/// block-CSR [`TrainWorkspace`]s of every layer (`fwd.s` holds the
+/// forward's probabilities until the reverse sweep consumes them) plus the
+/// per-head Q/K/V/dA column-slice staging matrices. Creating one of these
+/// is the *only* sparse-phase heap work — the native trainer keeps a
+/// free-list of them (the `ModelGrads` pattern), so after the first sparse
+/// step the block-sparse attention path allocates nothing: block-CSR
+/// storage, ColIndex caches, gradient buffers and slice staging are all
+/// reused, and the kernels' scratch lives in the per-worker arenas.
+/// Witnessed by the allocation-count test in `tests/backward_parity.rs`.
+#[derive(Debug)]
+pub struct TrainCache {
+    /// `layers[n][h]` — layer `n`, head `h`.
+    pub(crate) layers: Vec<Vec<TrainWorkspace>>,
+    pub(crate) qh: Mat,
+    pub(crate) kh: Mat,
+    pub(crate) vh: Mat,
+    pub(crate) dah: Mat,
+}
+
+impl TrainCache {
+    pub fn new(masks: &[BlockMask], heads: usize, head_dim: usize) -> Self {
+        assert!(heads > 0);
+        let l = masks.first().map_or(0, |m| m.seq_len());
+        Self {
+            layers: masks
+                .iter()
+                .map(|m| (0..heads).map(|_| TrainWorkspace::new(m, head_dim)).collect())
+                .collect(),
+            qh: Mat::zeros(l, head_dim),
+            kh: Mat::zeros(l, head_dim),
+            vh: Mat::zeros(l, head_dim),
+            dah: Mat::zeros(l, head_dim),
+        }
+    }
+
+    /// Cheap shape compatibility with a mask set: layer/head counts and
+    /// per-layer block counts. Runs per sample in the training hot loop.
+    pub fn shape_matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
+        self.layers.len() == masks.len()
+            && self.qh.cols == head_dim
+            && masks.first().map_or(true, |m| self.qh.rows == m.seq_len())
+            && self.layers.iter().zip(masks).all(|(ws, m)| {
+                ws.len() == heads
+                    && ws.iter().all(|w| {
+                        w.fwd.s.lb == m.lb
+                            && w.fwd.s.block == m.block
+                            && w.fwd.s.nnz_blocks() == m.nnz_blocks()
+                    })
+            })
+    }
+
+    /// Exact structural compatibility: on top of [`Self::shape_matches`],
+    /// every head's block-CSR structure is walked against the mask's
+    /// actual block placement — a cache built for a different pattern with
+    /// identical density is rejected. Allocation-free but O(layers × heads
+    /// × nnz_blocks); the hot loop runs it as a `debug_assert` only
+    /// (free-list sanity: masks freeze after the transition, so a pooled
+    /// cache always matches by construction).
+    pub fn matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
+        fn structure_matches(s: &crate::sparse::bcsr::Bcsr, m: &BlockMask) -> bool {
+            let mut blk = 0usize;
+            for i in 0..m.lb {
+                for j in m.row_blocks(i) {
+                    if blk >= s.col_idx.len() || s.col_idx[blk] != j {
+                        return false;
+                    }
+                    blk += 1;
+                }
+                if s.row_ptr[i + 1] != blk {
+                    return false;
+                }
+            }
+            true
+        }
+        self.shape_matches(masks, heads, head_dim)
+            && self
+                .layers
+                .iter()
+                .zip(masks)
+                .all(|(ws, m)| ws.iter().all(|w| structure_matches(&w.fwd.s, m)))
+    }
+}
+
+/// Per-layer attention state retained by the Train-mode forward sweep.
+pub(crate) enum AttnCache {
+    /// Per-head softmax probability matrices W (L×L each).
+    Dense(Vec<Mat>),
+    /// Sparse layers keep their state in the sample's [`TrainCache`]
+    /// (hoisted out of the per-layer-per-sample loop so the sparse phase
+    /// is steady-state allocation-free).
+    Sparse,
+}
+
+/// Everything the reverse sweep needs from one layer's forward.
+pub(crate) struct LayerCache {
+    /// LN1 output (attention input).
+    pub(crate) x: Mat,
+    pub(crate) ln1: LnCache,
+    pub(crate) q: Mat,
+    pub(crate) k: Mat,
+    pub(crate) v: Mat,
+    pub(crate) attn: AttnCache,
+    /// Concatenated head contexts.
+    pub(crate) a: Mat,
+    pub(crate) ln2: LnCache,
+    /// LN2 output (FFN input).
+    pub(crate) y: Mat,
+    /// FFN hidden after ReLU (doubles as the ReLU mask: f > 0).
+    pub(crate) f: Mat,
+}
+
+/// Mutable views into a [`TrainCache`], split so the pipeline can borrow
+/// the layer workspaces and the slice-staging buffers independently (the
+/// `dah` staging buffer stays with the backward, which owns the cache).
+pub(crate) struct SparseTrainScratch<'a> {
+    pub(crate) layers: &'a mut [Vec<TrainWorkspace>],
+    pub(crate) qh: &'a mut Mat,
+    pub(crate) kh: &'a mut Mat,
+    pub(crate) vh: &'a mut Mat,
+}
+
+/// Execution mode of [`forward_pipeline`] — *what state the forward keeps*,
+/// orthogonal to *which stages run* ([`LayerStages`]).
+pub(crate) enum ForwardMode<'a> {
+    /// Serving: no activation caching. `sparse` supplies the per-layer MHA
+    /// workspaces when any layer runs [`AttnStage::BlockSparse`] (the
+    /// context is borrowed out of them — zero steady-state allocation);
+    /// `capture` opts in to per-layer head-averaged A^s collection (dense
+    /// layers only — the flood-fill capture phase reads them, the serve
+    /// hot path passes `None` and skips the score work entirely).
+    Infer {
+        sparse: Option<&'a mut Vec<MhaWorkspace>>,
+        capture: Option<&'a mut Vec<Mat>>,
+    },
+    /// Training: push one [`LayerCache`] per layer into `caches` for the
+    /// reverse sweep; sparse layers stage through the [`TrainCache`] views
+    /// in `scratch`. `capture` collects head-averaged A^s on dense layers
+    /// (the transition detector's snapshot input).
+    Train {
+        scratch: Option<SparseTrainScratch<'a>>,
+        caches: &'a mut Vec<LayerCache>,
+        capture: Option<&'a mut Vec<Mat>>,
+    },
+}
+
+/// The unified encoder forward: embedding + positions, the per-layer stage
+/// pipeline, mean-pooled classifier head. Returns `(logits, pooled)` — the
+/// pooled vector is what the training backward needs for the classifier
+/// gradient; inference callers ignore it.
+///
+/// Span accounting matches the historical paths: Train mode records the
+/// `Embed`/`DenseAttnFwd` spans the trainer always had; Infer mode records
+/// none (the serve engine wraps the whole call in `EncoderFwd`).
+pub(crate) fn forward_pipeline(
+    exec: &Exec,
+    p: &ModelParams,
+    heads: usize,
+    stages: &[LayerStages],
+    tokens: &[i32],
+    mut mode: ForwardMode<'_>,
+) -> (Vec<f32>, Vec<f32>) {
+    let l = p.seq_len();
+    assert_eq!(tokens.len(), l, "expected {l} tokens");
+    let d = p.d_model();
+    assert_eq!(d % heads, 0);
+    assert_eq!(stages.len(), p.layers.len(), "one stage selection per layer");
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let is_train = matches!(mode, ForwardMode::Train { .. });
+
+    // E = embed[x] + pos (clamped token ids).
+    let mut e = Mat::zeros(l, d);
+    {
+        let _sp = is_train.then(|| crate::obs::span(crate::obs::SpanId::Embed));
+        for (i, &t) in tokens.iter().enumerate() {
+            let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
+            let prow = p.pos.row(i);
+            for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
+                *o = a + b;
+            }
+        }
+    }
+
+    for (n, lp) in p.layers.iter().enumerate() {
+        let st = stages[n];
+
+        // ---- LN1 + projections ----
+        let mut ln1 = is_train.then(|| LnCache::new(l, d));
+        let x = layernorm_fwd(&e, &lp.ln1_g, &lp.ln1_b, LN_EPS, ln1.as_mut());
+        let q = x.matmul(&lp.wq);
+        let k = x.matmul(&lp.wk);
+        let v = x.matmul(&lp.wv);
+
+        // ---- attention stage ----
+        // Train mode (and dense inference) own the context in `a_owned`;
+        // sparse inference borrows it from the per-layer workspace instead.
+        let mut a_owned: Option<Mat> = None;
+        let mut attn_cache: Option<AttnCache> = None;
+        let a_ref: &Mat = match st.attn {
+            AttnStage::Dense => {
+                let _sp = is_train.then(|| crate::obs::span(crate::obs::SpanId::DenseAttnFwd));
+                let capture = match &mut mode {
+                    ForwardMode::Infer { capture, .. } => capture.as_deref_mut(),
+                    ForwardMode::Train { capture, .. } => capture.as_deref_mut(),
+                };
+                let mut probs = is_train.then(|| Vec::with_capacity(heads));
+                let mut avg = capture.is_some().then(|| Mat::zeros(l, l));
+                let mut a = Mat::zeros(l, d);
+                // Per-head serial loop — the shared op order both historical
+                // paths used (the serve path's `dense_mha` ran its heads
+                // serially too), so logits stay bit-identical across modes
+                // and worker counts.
+                for h in 0..heads {
+                    let (c0, c1) = (h * dh, (h + 1) * dh);
+                    let (ctx, w) = dense_attention_head(
+                        &q.col_slice(c0, c1),
+                        &k.col_slice(c0, c1),
+                        &v.col_slice(c0, c1),
+                        scale,
+                    );
+                    a.set_col_slice(c0, &ctx);
+                    if let Some(avg) = &mut avg {
+                        avg.add_assign(&w);
+                    }
+                    if let Some(ps) = &mut probs {
+                        ps.push(w);
+                    }
+                }
+                if let (Some(out), Some(mut avg)) = (capture, avg) {
+                    avg.scale(1.0 / heads as f32);
+                    out.push(avg);
+                }
+                attn_cache = probs.map(AttnCache::Dense);
+                a_owned = Some(a);
+                a_owned.as_ref().expect("dense context just stored")
+            }
+            AttnStage::BlockSparse => match &mut mode {
+                ForwardMode::Infer { sparse, .. } => {
+                    let ws = sparse.as_mut().expect("block-sparse stage needs MHA workspaces");
+                    // Borrow of the workspace output — no per-layer allocation.
+                    sparse_mha_with(exec, &q, &k, &v, &mut ws[n])
+                }
+                ForwardMode::Train { scratch, .. } => {
+                    let sc =
+                        scratch.as_mut().expect("block-sparse stage needs a TrainCache");
+                    let mut a = Mat::zeros(l, d);
+                    for (h, hw) in sc.layers[n].iter_mut().enumerate() {
+                        let (c0, c1) = (h * dh, (h + 1) * dh);
+                        q.col_slice_into(c0, c1, sc.qh);
+                        k.col_slice_into(c0, c1, sc.kh);
+                        v.col_slice_into(c0, c1, sc.vh);
+                        sparse_attention_head_with(exec, sc.qh, sc.kh, sc.vh, scale, &mut hw.fwd);
+                        a.set_col_slice(c0, &hw.fwd.ctx);
+                    }
+                    attn_cache = Some(AttnCache::Sparse);
+                    a_owned = Some(a);
+                    a_owned.as_ref().expect("sparse context just stored")
+                }
+            },
+        };
+
+        // ---- residual + FFN stage ----
+        let mut o = a_ref.matmul(&lp.wo);
+        o.add_assign(&e);
+        let mut ln2 = is_train.then(|| LnCache::new(l, d));
+        let (y, f, e_new) = match st.ffn {
+            FfnStage::Dense => {
+                let y = layernorm_fwd(&o, &lp.ln2_g, &lp.ln2_b, LN_EPS, ln2.as_mut());
+                let mut f = y.matmul(&lp.wf);
+                add_bias(&mut f, &lp.bf);
+                relu(&mut f);
+                let mut e_new = f.matmul(&lp.we);
+                add_bias(&mut e_new, &lp.be);
+                e_new.add_assign(&o);
+                (y, f, e_new)
+            }
+            FfnStage::TopK { .. } => {
+                unimplemented!("FfnStage::TopK is reserved for the sparse-FFN roadmap item")
+            }
+        };
+
+        if let ForwardMode::Train { caches, .. } = &mut mode {
+            caches.push(LayerCache {
+                x,
+                ln1: ln1.expect("train mode caches LN1 stats"),
+                q,
+                k,
+                v,
+                attn: attn_cache.expect("train mode caches attention state"),
+                a: a_owned.expect("train mode owns the attention context"),
+                ln2: ln2.expect("train mode caches LN2 stats"),
+                y,
+                f,
+            });
+        }
+        e = e_new;
+    }
+
+    // ---- mean-pooled classifier head ----
+    let pooled = mean_rows(&e);
+    let pooled_mat = Mat::from_vec(1, d, pooled.clone());
+    let mut logits = pooled_mat.matmul(&p.cls_w);
+    add_bias(&mut logits, &p.cls_b);
+    (logits.data, pooled)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let x = Mat::random_normal(6, 32, 2.0, &mut rng);
+        let g = vec![1.0f32; 32];
+        let b = vec![0.0f32; 32];
+        let y = layernorm_fwd(&x, &g, &b, 1e-6, None);
+        for i in 0..y.rows {
+            let mean: f32 = y.row(i).iter().sum::<f32>() / 32.0;
+            let var: f32 = y.row(i).iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn cached_layernorm_is_bit_identical_to_uncached() {
+        // The satellite contract of the LN dedup: one implementation, and
+        // turning the stat cache on must not change a single output bit.
+        let mut rng = Rng::new(7);
+        let x = Mat::random_normal(5, 24, 1.7, &mut rng);
+        let g: Vec<f32> = (0..24).map(|_| 0.5 + rng.f32()).collect();
+        let b: Vec<f32> = (0..24).map(|_| rng.f32() - 0.5).collect();
+        let plain = layernorm_fwd(&x, &g, &b, 1e-6, None);
+        let mut cache = LnCache::new(5, 24);
+        let cached = layernorm_fwd(&x, &g, &b, 1e-6, Some(&mut cache));
+        for (a, c) in plain.data.iter().zip(&cached.data) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        // The cache actually carries the normalization state.
+        assert!(cache.inv.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_differences() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (4, 7);
+        let x = Mat::random_normal(rows, cols, 1.2, &mut rng);
+        let gamma: Vec<f32> = (0..cols).map(|_| 0.5 + rng.f32()).collect();
+        let beta: Vec<f32> = (0..cols).map(|_| rng.f32() - 0.5).collect();
+        let cot = Mat::random_normal(rows, cols, 1.0, &mut rng);
+        let loss = |x: &Mat, g: &[f32], b: &[f32]| -> f64 {
+            let mut c = LnCache::new(rows, cols);
+            let y = layernorm_fwd(x, g, b, LN_EPS, Some(&mut c));
+            y.data.iter().zip(&cot.data).map(|(a, c)| (*a as f64) * (*c as f64)).sum()
+        };
+        let mut ln = LnCache::new(rows, cols);
+        layernorm_fwd(&x, &gamma, &beta, LN_EPS, Some(&mut ln));
+        let mut dgamma = vec![0.0f32; cols];
+        let mut dbeta = vec![0.0f32; cols];
+        let dx = layernorm_bwd(&cot, &ln, &gamma, &mut dgamma, &mut dbeta);
+        let eps = 1e-2f32;
+        let rel = |fd: f64, an: f64| (fd - an).abs() / (1e-3 + fd.abs().max(an.abs()));
+        for idx in 0..rows * cols {
+            let (mut xp, mut xm) = (x.clone(), x.clone());
+            xp.data[idx] += eps;
+            xm.data[idx] -= eps;
+            let fd = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps as f64);
+            assert!(rel(fd, dx.data[idx] as f64) < 0.02, "dx[{idx}]: fd={fd} an={}", dx.data[idx]);
+        }
+        for j in 0..cols {
+            let (mut gp, mut gm) = (gamma.clone(), gamma.clone());
+            gp[j] += eps;
+            gm[j] -= eps;
+            let fd = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps as f64);
+            assert!(rel(fd, dgamma[j] as f64) < 0.02, "dgamma[{j}]");
+            let (mut bp, mut bm) = (beta.clone(), beta.clone());
+            bp[j] += eps;
+            bm[j] -= eps;
+            let fd = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps as f64);
+            assert!(rel(fd, dbeta[j] as f64) < 0.02, "dbeta[{j}]");
+        }
+    }
+
+    #[test]
+    fn plan_selects_stages_per_layer() {
+        let dense = LayerStages::plan(3, false);
+        assert_eq!(dense.len(), 3);
+        assert!(dense.iter().all(|s| s.attn == AttnStage::Dense && s.ffn == FfnStage::Dense));
+        let sparse = LayerStages::plan(2, true);
+        assert!(sparse.iter().all(|s| s.attn == AttnStage::BlockSparse));
+        // Heterogeneous plans are just vectors — per-layer mixing needs no
+        // special casing at the call sites.
+        let mut mixed = LayerStages::plan(2, false);
+        mixed[1].attn = AttnStage::BlockSparse;
+        assert_ne!(mixed[0], mixed[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved")]
+    fn topk_ffn_is_reserved_not_silently_dense() {
+        let m = crate::config::ModelConfig {
+            preset: "micro".into(),
+            seq_len: 8,
+            d_model: 6,
+            heads: 2,
+            layers: 1,
+            ffn_dim: 10,
+            vocab: 9,
+            classes: 3,
+            batch: 1,
+        };
+        let params = ModelParams::init_random(&m, 1);
+        let stages = vec![LayerStages { attn: AttnStage::Dense, ffn: FfnStage::TopK { k: 4 } }];
+        let toks = vec![0i32; 8];
+        forward_pipeline(
+            Exec::serial_ref(),
+            &params,
+            2,
+            &stages,
+            &toks,
+            ForwardMode::Infer { sparse: None, capture: None },
+        );
+    }
+}

@@ -6,13 +6,17 @@
 //! serving router uses, and it is cross-validated against the `dense_fwd`
 //! artifact in `rust/tests/e2e_tiny.rs`.
 //!
-//! `grad` + `train` extend the engine with the full-encoder backward and
-//! the native optimizer, so the three-phase trainer can run entirely in
-//! Rust (`spion train --backend native`) — no AOT artifacts, the vendored
+//! `layer` holds the single encoder-layer stage pipeline both paths share:
+//! `encoder` wraps it in `Infer` mode for serving, `grad` + `train` extend
+//! it with the full-encoder backward and the native optimizer (`Train`
+//! mode caches every activation the reverse sweep needs), so the
+//! three-phase trainer can run entirely in Rust
+//! (`spion train --backend native`) — no AOT artifacts, the vendored
 //! `xla` stub covers the whole stack.
 
 pub mod encoder;
 pub mod grad;
+pub mod layer;
 pub mod params;
 pub mod train;
 
@@ -24,5 +28,6 @@ pub(crate) const LN_EPS: f32 = 1e-6;
 
 pub use encoder::Encoder;
 pub use grad::{ModelGrads, SgdMomentum};
+pub use layer::{layernorm_fwd, AttnStage, FfnStage, LayerStages, LnCache};
 pub use params::ModelParams;
 pub use train::{train_step_sample, SampleResult, TrainCache};

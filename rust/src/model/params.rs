@@ -53,7 +53,7 @@ impl ModelParams {
             Ok(t.1.clone())
         };
         let mut it = tensors.iter();
-        let mut next = || it.next().unwrap();
+        let mut next = || it.next().expect("tensor count checked above");
         let embed = mat(next())?;
         let pos = mat(next())?;
         let mut layer_params = Vec::with_capacity(layers);
@@ -155,6 +155,7 @@ impl ModelParams {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 pub(crate) mod tests {
     use super::*;
     use crate::util::rng::Rng;

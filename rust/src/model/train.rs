@@ -1,15 +1,15 @@
-//! Full-encoder forward + backward in pure Rust — the native training
-//! backend's autograd core.
+//! Full-encoder backward in pure Rust — the native training backend's
+//! autograd core.
 //!
-//! Extends the attention-core training pass (`attention::sparse_attention_
-//! train_with`) to the whole Algorithm-1 encoder: embedding/positional
-//! input, per-layer LayerNorm → MHA (dense or block-sparse) → residual →
-//! LayerNorm → FFN → residual, mean-pooled classifier head and softmax
-//! cross-entropy.  One call to [`train_step_sample`] runs one sequence
-//! forward (caching every activation the reverse sweep needs), then
-//! backpropagates and *accumulates* parameter gradients into a
-//! [`ModelGrads`] — callers sum samples in index order and divide by the
-//! batch, which keeps the batch gradient bit-identical at any worker count.
+//! The forward sweep is the shared stage pipeline of [`super::layer`]
+//! (`forward_pipeline` in `Train` mode — the same code path serving runs,
+//! caching every activation the reverse sweep needs). This module owns the
+//! loss and the reverse sweep: one call to [`train_step_sample`] runs one
+//! sequence forward, computes softmax cross-entropy over the mean-pooled
+//! classifier head, then backpropagates and *accumulates* parameter
+//! gradients into a [`ModelGrads`] — callers sum samples in index order and
+//! divide by the batch, which keeps the batch gradient bit-identical at any
+//! worker count.
 //!
 //! Gradient data flow (reverse order):
 //! ```text
@@ -28,88 +28,23 @@
 //! `sparse::backward` — gradients never leave the forward's block
 //! structure, which is the paper's sparse-*training* claim.
 
-use crate::attention::dense::{dense_attention_backward_cached, dense_attention_head};
-use crate::attention::sparse::{sparse_attention_head_with, TrainWorkspace};
+use crate::attention::dense::dense_attention_backward_cached;
 use crate::exec::Exec;
 use crate::pattern::BlockMask;
-use crate::tensor::ops::{add_bias, argmax, mean_rows, relu};
+use crate::tensor::ops::argmax;
 use crate::tensor::Mat;
 
 use super::grad::ModelGrads;
-use super::{ModelParams, LN_EPS};
+use super::layer::{
+    forward_pipeline, layernorm_bwd, AttnCache, ForwardMode, LayerCache, LayerStages,
+    SparseTrainScratch,
+};
+use super::ModelParams;
 
-/// LayerNorm forward with cached normalization state: returns
-/// `(y, xhat, inv)` where `xhat = (x − μ)·inv` and `inv = 1/√(σ² + eps)`
-/// per row — exactly what the backward needs.
-pub fn layernorm_fwd_cached(
-    x: &Mat,
-    gamma: &[f32],
-    beta: &[f32],
-    eps: f32,
-) -> (Mat, Mat, Vec<f32>) {
-    assert_eq!(gamma.len(), x.cols);
-    assert_eq!(beta.len(), x.cols);
-    let mut y = Mat::zeros(x.rows, x.cols);
-    let mut xhat = Mat::zeros(x.rows, x.cols);
-    let mut inv = vec![0.0f32; x.rows];
-    let d = x.cols as f32;
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let mean = row.iter().sum::<f32>() / d;
-        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d;
-        let r = 1.0 / (var + eps).sqrt();
-        inv[i] = r;
-        let hrow = xhat.row_mut(i);
-        for (h, &v) in hrow.iter_mut().zip(row) {
-            *h = (v - mean) * r;
-        }
-        let yrow = y.row_mut(i);
-        for j in 0..x.cols {
-            yrow[j] = hrow[j] * gamma[j] + beta[j];
-        }
-    }
-    (y, xhat, inv)
-}
-
-/// LayerNorm backward. `dy` is the output cotangent; `xhat`/`inv` come from
-/// [`layernorm_fwd_cached`]. Accumulates into `dgamma`/`dbeta`, returns dx:
-/// `dx = inv · (g − mean(g) − xhat · mean(g ⊙ xhat))` with `g = dy ⊙ γ`.
-pub fn layernorm_bwd(
-    dy: &Mat,
-    xhat: &Mat,
-    inv: &[f32],
-    gamma: &[f32],
-    dgamma: &mut [f32],
-    dbeta: &mut [f32],
-) -> Mat {
-    assert_eq!((dy.rows, dy.cols), (xhat.rows, xhat.cols));
-    assert_eq!(gamma.len(), dy.cols);
-    let d = dy.cols as f32;
-    let mut dx = Mat::zeros(dy.rows, dy.cols);
-    for i in 0..dy.rows {
-        let dyrow = dy.row(i);
-        let hrow = xhat.row(i);
-        for j in 0..dy.cols {
-            dgamma[j] += dyrow[j] * hrow[j];
-            dbeta[j] += dyrow[j];
-        }
-        let mut s1 = 0.0f32;
-        let mut s2 = 0.0f32;
-        for j in 0..dy.cols {
-            let g = dyrow[j] * gamma[j];
-            s1 += g;
-            s2 += g * hrow[j];
-        }
-        let (m1, m2) = (s1 / d, s2 / d);
-        let r = inv[i];
-        let dxrow = dx.row_mut(i);
-        for j in 0..dy.cols {
-            let g = dyrow[j] * gamma[j];
-            dxrow[j] = r * (g - m1 - hrow[j] * m2);
-        }
-    }
-    dx
-}
+// Re-exported here because the step-spanning sparse workspaces are part of
+// the training API surface (free-list pooling in the native trainer) even
+// though the struct lives with the pipeline that fills it.
+pub use super::layer::TrainCache;
 
 /// `out[j] += Σ_i m[i][j]` — bias gradients.
 fn add_colsum(m: &Mat, out: &mut [f32]) {
@@ -121,117 +56,6 @@ fn add_colsum(m: &Mat, out: &mut [f32]) {
     }
 }
 
-/// Step-spanning sparse-phase buffers for one training sample: the per-head
-/// block-CSR [`TrainWorkspace`]s of every layer (`fwd.s` holds the
-/// forward's probabilities until the reverse sweep consumes them) plus the
-/// per-head Q/K/V/dA column-slice staging matrices. Creating one of these
-/// is the *only* sparse-phase heap work — the native trainer keeps a
-/// free-list of them (the `ModelGrads` pattern), so after the first sparse
-/// step the block-sparse attention path allocates nothing: block-CSR
-/// storage, ColIndex caches, gradient buffers and slice staging are all
-/// reused, and the kernels' scratch lives in the per-worker arenas.
-/// Witnessed by the allocation-count test in `tests/backward_parity.rs`.
-#[derive(Debug)]
-pub struct TrainCache {
-    /// `layers[n][h]` — layer `n`, head `h`.
-    layers: Vec<Vec<TrainWorkspace>>,
-    qh: Mat,
-    kh: Mat,
-    vh: Mat,
-    dah: Mat,
-}
-
-impl TrainCache {
-    pub fn new(masks: &[BlockMask], heads: usize, head_dim: usize) -> Self {
-        assert!(heads > 0);
-        let l = masks.first().map_or(0, |m| m.seq_len());
-        Self {
-            layers: masks
-                .iter()
-                .map(|m| (0..heads).map(|_| TrainWorkspace::new(m, head_dim)).collect())
-                .collect(),
-            qh: Mat::zeros(l, head_dim),
-            kh: Mat::zeros(l, head_dim),
-            vh: Mat::zeros(l, head_dim),
-            dah: Mat::zeros(l, head_dim),
-        }
-    }
-
-    /// Cheap shape compatibility with a mask set: layer/head counts and
-    /// per-layer block counts. Runs per sample in the training hot loop.
-    pub fn shape_matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
-        self.layers.len() == masks.len()
-            && self.qh.cols == head_dim
-            && masks.first().map_or(true, |m| self.qh.rows == m.seq_len())
-            && self.layers.iter().zip(masks).all(|(ws, m)| {
-                ws.len() == heads
-                    && ws.iter().all(|w| {
-                        w.fwd.s.lb == m.lb
-                            && w.fwd.s.block == m.block
-                            && w.fwd.s.nnz_blocks() == m.nnz_blocks()
-                    })
-            })
-    }
-
-    /// Exact structural compatibility: on top of [`Self::shape_matches`],
-    /// every head's block-CSR structure is walked against the mask's
-    /// actual block placement — a cache built for a different pattern with
-    /// identical density is rejected. Allocation-free but O(layers × heads
-    /// × nnz_blocks); the hot loop runs it as a `debug_assert` only
-    /// (free-list sanity: masks freeze after the transition, so a pooled
-    /// cache always matches by construction).
-    pub fn matches(&self, masks: &[BlockMask], heads: usize, head_dim: usize) -> bool {
-        fn structure_matches(s: &crate::sparse::bcsr::Bcsr, m: &BlockMask) -> bool {
-            let mut blk = 0usize;
-            for i in 0..m.lb {
-                for j in m.row_blocks(i) {
-                    if blk >= s.col_idx.len() || s.col_idx[blk] != j {
-                        return false;
-                    }
-                    blk += 1;
-                }
-                if s.row_ptr[i + 1] != blk {
-                    return false;
-                }
-            }
-            true
-        }
-        self.shape_matches(masks, heads, head_dim)
-            && self.layers.iter().zip(masks).all(|(ws, m)| {
-                ws.iter().all(|w| structure_matches(&w.fwd.s, m))
-            })
-    }
-}
-
-/// Per-layer attention state retained by the forward sweep.
-enum AttnCache {
-    /// Per-head softmax probability matrices W (L×L each).
-    Dense(Vec<Mat>),
-    /// Sparse layers keep their state in the sample's [`TrainCache`]
-    /// (hoisted out of the per-layer-per-sample loop so the sparse phase
-    /// is steady-state allocation-free).
-    Sparse,
-}
-
-struct LayerCache {
-    /// LN1 output (attention input).
-    x: Mat,
-    xhat1: Mat,
-    inv1: Vec<f32>,
-    q: Mat,
-    k: Mat,
-    v: Mat,
-    attn: AttnCache,
-    /// Concatenated head contexts.
-    a: Mat,
-    xhat2: Mat,
-    inv2: Vec<f32>,
-    /// LN2 output (FFN input).
-    y: Mat,
-    /// FFN hidden after ReLU (doubles as the ReLU mask: f > 0).
-    f: Mat,
-}
-
 /// What one training sample reports back to the step loop.
 pub struct SampleResult {
     /// Cross-entropy loss of this sample (natural log).
@@ -241,6 +65,10 @@ pub struct SampleResult {
     /// Per-layer head-averaged attention scores A^s — captured only on
     /// dense-phase snapshot steps (the transition detector's input).
     pub scores: Option<Vec<Mat>>,
+    /// Raw classifier logits of the forward pass — what serving would
+    /// return for the same tokens (cross-path parity witnesses compare
+    /// these bit-for-bit against `Encoder::forward`).
+    pub logits: Vec<f32>,
 }
 
 /// One full fwd+bwd pass over a single sequence, accumulating parameter
@@ -297,89 +125,38 @@ pub fn train_step_sample(
         None => (None, None, None, None, None),
     };
 
-    // ---- forward ----
-    let mut e = Mat::zeros(l, d);
-    {
-        let _sp = crate::obs::span(crate::obs::SpanId::Embed);
-        for (i, &t) in tokens.iter().enumerate() {
-            let trow = p.embed.row((t as usize).min(p.embed.rows - 1));
-            let prow = p.pos.row(i);
-            for (o, (&a, &b)) in e.row_mut(i).iter_mut().zip(trow.iter().zip(prow)) {
-                *o = a + b;
-            }
-        }
-    }
-    let mut scores_out: Option<Vec<Mat>> =
-        (capture_scores && masks.is_none()).then(Vec::new);
+    // ---- forward: the shared stage pipeline, Train mode ----
+    let stages = LayerStages::plan(p.layers.len(), masks.is_some());
+    let mut scores_out: Option<Vec<Mat>> = (capture_scores && masks.is_none()).then(Vec::new);
     let mut caches: Vec<LayerCache> = Vec::with_capacity(p.layers.len());
-    for (n, lp) in p.layers.iter().enumerate() {
-        let (x, xhat1, inv1) = layernorm_fwd_cached(&e, &lp.ln1_g, &lp.ln1_b, LN_EPS);
-        let q = x.matmul(&lp.wq);
-        let k = x.matmul(&lp.wk);
-        let v = x.matmul(&lp.wv);
-        let mut a = Mat::zeros(l, d);
-        let attn = match masks {
-            None => {
-                let _sp = crate::obs::span(crate::obs::SpanId::DenseAttnFwd);
-                let mut probs = Vec::with_capacity(heads);
-                let mut avg = scores_out.is_some().then(|| Mat::zeros(l, l));
-                for h in 0..heads {
-                    let (c0, c1) = (h * dh, (h + 1) * dh);
-                    let (ctx, w) = dense_attention_head(
-                        &q.col_slice(c0, c1),
-                        &k.col_slice(c0, c1),
-                        &v.col_slice(c0, c1),
-                        scale,
-                    );
-                    a.set_col_slice(c0, &ctx);
-                    if let Some(avg) = &mut avg {
-                        avg.add_assign(&w);
-                    }
-                    probs.push(w);
-                }
-                if let (Some(out), Some(mut avg)) = (&mut scores_out, avg) {
-                    avg.scale(1.0 / heads as f32);
-                    out.push(avg);
-                }
-                AttnCache::Dense(probs)
-            }
-            Some(_) => {
-                let ws = &mut ws_layers.as_mut().expect("sparse cache")[n];
-                let qh = &mut **qh_buf.as_mut().expect("sparse cache");
-                let kh = &mut **kh_buf.as_mut().expect("sparse cache");
-                let vh = &mut **vh_buf.as_mut().expect("sparse cache");
-                for (h, hw) in ws.iter_mut().enumerate() {
-                    let (c0, c1) = (h * dh, (h + 1) * dh);
-                    q.col_slice_into(c0, c1, qh);
-                    k.col_slice_into(c0, c1, kh);
-                    v.col_slice_into(c0, c1, vh);
-                    sparse_attention_head_with(exec, qh, kh, vh, scale, &mut hw.fwd);
-                    a.set_col_slice(c0, &hw.fwd.ctx);
-                }
-                AttnCache::Sparse
-            }
+    let (logits, pooled) = {
+        let scratch = match (&mut ws_layers, &mut qh_buf, &mut kh_buf, &mut vh_buf) {
+            (Some(layers), Some(qh), Some(kh), Some(vh)) => Some(SparseTrainScratch {
+                layers: layers.as_mut_slice(),
+                qh: &mut **qh,
+                kh: &mut **kh,
+                vh: &mut **vh,
+            }),
+            _ => None,
         };
-        let mut o = a.matmul(&lp.wo);
-        o.add_assign(&e);
-        let (y, xhat2, inv2) = layernorm_fwd_cached(&o, &lp.ln2_g, &lp.ln2_b, LN_EPS);
-        let mut f = y.matmul(&lp.wf);
-        add_bias(&mut f, &lp.bf);
-        relu(&mut f);
-        let mut e_new = f.matmul(&lp.we);
-        add_bias(&mut e_new, &lp.be);
-        e_new.add_assign(&o);
-        caches.push(LayerCache { x, xhat1, inv1, q, k, v, attn, a, xhat2, inv2, y, f });
-        e = e_new;
-    }
+        forward_pipeline(
+            exec,
+            p,
+            heads,
+            &stages,
+            tokens,
+            ForwardMode::Train {
+                scratch,
+                caches: &mut caches,
+                capture: scores_out.as_mut(),
+            },
+        )
+    };
 
     // ---- head + loss ----
     let classes = p.classes();
     let label_ix = (label as usize).min(classes - 1);
-    let pooled = mean_rows(&e);
-    let pooled_mat = Mat::from_vec(1, d, pooled.clone());
-    let mut logits = pooled_mat.matmul(&p.cls_w);
-    add_bias(&mut logits, &p.cls_b);
-    let lg = &logits.data;
+    let lg = &logits;
     let max = lg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let mut sum = 0.0f32;
     let mut probs = vec![0.0f32; classes];
@@ -425,7 +202,7 @@ pub fn train_step_sample(
     for (n, lp) in p.layers.iter().enumerate().rev() {
         let cache = &mut caches[n];
         let lg = &mut grads.layers[n];
-        let LayerCache { x, xhat1, inv1, q, k, v, attn, a, xhat2, inv2, y, f } = cache;
+        let LayerCache { x, ln1, q, k, v, attn, a, ln2, y, f } = cache;
 
         // e_new = f·We + be + o
         lg.we.add_assign(&f.matmul_tn(&de));
@@ -439,7 +216,7 @@ pub fn train_step_sample(
         lg.wf.add_assign(&y.matmul_tn(&df));
         add_colsum(&df, &mut lg.bf);
         let dy = df.matmul_nt(&lp.wf);
-        let mut d_o = layernorm_bwd(&dy, xhat2, inv2, &lp.ln2_g, &mut lg.ln2_g, &mut lg.ln2_b);
+        let mut d_o = layernorm_bwd(&dy, ln2, &lp.ln2_g, &mut lg.ln2_g, &mut lg.ln2_b);
         d_o.add_assign(&de); // residual: e_new = ffn_out + o
 
         // o = a·Wo + e
@@ -496,7 +273,7 @@ pub fn train_step_sample(
         let mut dx = dq.matmul_nt(&lp.wq);
         dx.add_assign(&dk.matmul_nt(&lp.wk));
         dx.add_assign(&dv.matmul_nt(&lp.wv));
-        let dxin = layernorm_bwd(&dx, xhat1, inv1, &lp.ln1_g, &mut lg.ln1_g, &mut lg.ln1_b);
+        let dxin = layernorm_bwd(&dx, ln1, &lp.ln1_g, &mut lg.ln1_g, &mut lg.ln1_b);
 
         // e feeds both LN1 and the attention residual: d e_n = do + dxin.
         d_o.add_assign(&dxin);
@@ -515,10 +292,11 @@ pub fn train_step_sample(
         }
     }
 
-    SampleResult { loss, correct, scores: scores_out }
+    SampleResult { loss, correct, scores: scores_out, logits }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
@@ -542,45 +320,6 @@ mod tests {
     fn micro_tokens(l: usize, vocab: usize, seed: u64) -> Vec<i32> {
         let mut rng = Rng::new(seed);
         (0..l).map(|_| rng.below(vocab) as i32).collect()
-    }
-
-    #[test]
-    fn layernorm_backward_matches_finite_differences() {
-        let mut rng = Rng::new(3);
-        let (rows, cols) = (4, 7);
-        let x = Mat::random_normal(rows, cols, 1.2, &mut rng);
-        let gamma: Vec<f32> = (0..cols).map(|_| 0.5 + rng.f32()).collect();
-        let beta: Vec<f32> = (0..cols).map(|_| rng.f32() - 0.5).collect();
-        let cot = Mat::random_normal(rows, cols, 1.0, &mut rng);
-        let loss = |x: &Mat, g: &[f32], b: &[f32]| -> f64 {
-            let (y, _, _) = layernorm_fwd_cached(x, g, b, LN_EPS);
-            y.data.iter().zip(&cot.data).map(|(a, c)| (*a as f64) * (*c as f64)).sum()
-        };
-        let (_, xhat, inv) = layernorm_fwd_cached(&x, &gamma, &beta, LN_EPS);
-        let mut dgamma = vec![0.0f32; cols];
-        let mut dbeta = vec![0.0f32; cols];
-        let dx = layernorm_bwd(&cot, &xhat, &inv, &gamma, &mut dgamma, &mut dbeta);
-        let eps = 1e-2f32;
-        let rel = |fd: f64, an: f64| (fd - an).abs() / (1e-3 + fd.abs().max(an.abs()));
-        for idx in 0..rows * cols {
-            let (mut xp, mut xm) = (x.clone(), x.clone());
-            xp.data[idx] += eps;
-            xm.data[idx] -= eps;
-            let fd = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps as f64);
-            assert!(rel(fd, dx.data[idx] as f64) < 0.02, "dx[{idx}]: fd={fd} an={}", dx.data[idx]);
-        }
-        for j in 0..cols {
-            let (mut gp, mut gm) = (gamma.clone(), gamma.clone());
-            gp[j] += eps;
-            gm[j] -= eps;
-            let fd = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps as f64);
-            assert!(rel(fd, dgamma[j] as f64) < 0.02, "dgamma[{j}]");
-            let (mut bp, mut bm) = (beta.clone(), beta.clone());
-            bp[j] += eps;
-            bm[j] -= eps;
-            let fd = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps as f64);
-            assert!(rel(fd, dbeta[j] as f64) < 0.02, "dbeta[{j}]");
-        }
     }
 
     #[test]
@@ -615,6 +354,7 @@ mod tests {
         let scores = r.scores.expect("dense snapshot captures scores");
         assert_eq!(scores.len(), m.layers);
         assert_eq!(scores[0].rows, m.seq_len);
+        assert_eq!(r.logits.len(), m.classes);
         // Head-averaged probs stay row-stochastic.
         for s in &scores {
             for i in 0..s.rows {

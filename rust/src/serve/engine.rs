@@ -504,7 +504,7 @@ fn serve_worker(
                     panic!("fault injected: worker-panic");
                 }
                 let _sp = obs::span(SpanId::EncoderFwd);
-                enc.forward(&sub.tokens).0
+                enc.forward(&sub.tokens)
             }));
             let logits = match outcome {
                 Ok(l) => l,

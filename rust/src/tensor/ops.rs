@@ -21,24 +21,8 @@ pub fn softmax_rows(m: &mut Mat) {
     }
 }
 
-/// Row-wise LayerNorm with learned scale/shift (eps matches jax default 1e-6
-/// used in the L2 model).
-pub fn layernorm(x: &Mat, gamma: &[f32], beta: &[f32], eps: f32) -> Mat {
-    assert_eq!(gamma.len(), x.cols);
-    assert_eq!(beta.len(), x.cols);
-    let mut out = Mat::zeros(x.rows, x.cols);
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let mean = row.iter().sum::<f32>() / x.cols as f32;
-        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
-        let inv = 1.0 / (var + eps).sqrt();
-        let orow = out.row_mut(i);
-        for j in 0..x.cols {
-            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
-        }
-    }
-    out
-}
+// LayerNorm lives in `model::layer::layernorm_fwd` — the single
+// implementation shared by inference and training (optional stat cache).
 
 pub fn relu(m: &mut Mat) {
     for v in &mut m.data {
@@ -86,7 +70,6 @@ pub fn argmax(xs: &[f32]) -> usize {
 mod tests {
     use super::*;
     use crate::util::quickcheck::{assert_allclose, QuickCheck};
-    use crate::util::rng::Rng;
 
     #[test]
     fn softmax_rows_sum_to_one() {
@@ -111,21 +94,6 @@ mod tests {
         softmax_rows(&mut a);
         softmax_rows(&mut b);
         assert_allclose(&a.data, &b.data, 1e-5, 1e-6).unwrap();
-    }
-
-    #[test]
-    fn layernorm_zero_mean_unit_var() {
-        let mut rng = Rng::new(4);
-        let x = Mat::random_normal(6, 32, 2.0, &mut rng);
-        let g = vec![1.0f32; 32];
-        let b = vec![0.0f32; 32];
-        let y = layernorm(&x, &g, &b, 1e-6);
-        for i in 0..y.rows {
-            let mean: f32 = y.row(i).iter().sum::<f32>() / 32.0;
-            let var: f32 = y.row(i).iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
-            assert!(mean.abs() < 1e-4, "mean {mean}");
-            assert!((var - 1.0).abs() < 1e-2, "var {var}");
-        }
     }
 
     #[test]

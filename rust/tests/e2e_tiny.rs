@@ -196,7 +196,7 @@ fn checkpoint_roundtrip_through_encoder() {
     let params = ModelParams::from_checkpoint(&ck, 2).unwrap();
     let mut enc = Encoder::new(params, 2);
     let toks: Vec<i32> = (0..128).map(|i| (i % 17) as i32).collect();
-    let (logits, _) = enc.forward(&toks);
+    let logits = enc.forward(&toks);
     assert_eq!(logits.len(), 10);
     assert!(logits.iter().all(|v| v.is_finite()));
     std::fs::remove_file(path).ok();

@@ -1,0 +1,229 @@
+//! Cross-path parity witnesses for the unified layer-stage pipeline.
+//!
+//! The serve path (`Encoder::forward`) and the train path
+//! (`train_step_sample`) both run `model::layer::forward_pipeline`; these
+//! tests pin the refactor's gate: logits bit-identical across the two
+//! paths (dense and block-sparse, at worker counts 1/2/4), captured A^s
+//! bit-identical across modes, and `SPIONRS1` periodic checkpoints written
+//! before the refactor-shaped trainer still load and continue
+//! bit-identically.
+
+use spion::config::types::SparsityConfig;
+use spion::config::{
+    ExperimentConfig, ModelConfig, PatternKind, TaskKind, TrainConfig,
+};
+use spion::coordinator::checkpoint::Checkpoint;
+use spion::coordinator::NativeTrainer;
+use spion::exec::{Exec, ExecConfig};
+use spion::model::{train_step_sample, Encoder, ModelGrads, ModelParams};
+use spion::pattern::{BlockMask, SpionVariant};
+use spion::util::rng::Rng;
+
+fn micro_model() -> ModelConfig {
+    ModelConfig {
+        preset: "micro".into(),
+        seq_len: 32,
+        d_model: 16,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 32,
+        vocab: 20,
+        classes: 10,
+        batch: 4,
+    }
+}
+
+fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfig {
+    let train = TrainConfig {
+        steps,
+        lr: 0.02,
+        min_dense_steps: 4,
+        max_dense_steps: 8,
+        snapshot_every: 2,
+        ..Default::default()
+    };
+    let mut sparsity = SparsityConfig::new(kind, 8, 0.7);
+    sparsity.pattern.filter = 3;
+    ExperimentConfig {
+        task: TaskKind::ListOps,
+        model: micro_model(),
+        train,
+        sparsity,
+        exec: ExecConfig::with_workers(workers),
+        serve: Default::default(),
+        obs: Default::default(),
+        resil: Default::default(),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn micro_tokens(l: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..l).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// Layer-wise block masks with realistic structure (diagonal + vertical),
+/// generated through the real pattern dispatch.
+fn micro_masks(m: &ModelConfig) -> Vec<BlockMask> {
+    let exp = micro_exp(PatternKind::Spion(SpionVariant::CF), 1, 1);
+    let mut rng = Rng::new(7);
+    let scores: Vec<_> = (0..m.layers)
+        .map(|i| {
+            spion::pattern::spion::synth_attention_scores(
+                m.seq_len,
+                1.0 - 0.5 * i as f32,
+                0.5 * i as f32,
+                &[m.seq_len / 3],
+                0.05,
+                &mut rng,
+            )
+        })
+        .collect();
+    let masks =
+        spion::coordinator::trainer::generate_masks_for(&exp, &scores).expect("mask generation");
+    assert!(masks.iter().any(|mk| mk.density() < 1.0), "masks should be sparse");
+    masks
+}
+
+/// Serve-path logits for `tokens` on a `workers`-wide exec.
+fn serve_logits(
+    params: &ModelParams,
+    heads: usize,
+    masks: Option<&[BlockMask]>,
+    tokens: &[i32],
+    workers: usize,
+) -> Vec<f32> {
+    let mut enc = Encoder::new(params.clone(), heads)
+        .with_exec(Exec::new(ExecConfig::with_workers(workers)));
+    if let Some(ms) = masks {
+        enc = enc.with_masks(ms.to_vec()).expect("masks fit the model");
+    }
+    enc.forward(tokens)
+}
+
+/// Train-path logits for the same tokens on the same exec width.
+fn train_logits(
+    params: &ModelParams,
+    heads: usize,
+    masks: Option<&[BlockMask]>,
+    tokens: &[i32],
+    workers: usize,
+) -> Vec<f32> {
+    let exec = Exec::new(ExecConfig::with_workers(workers));
+    let mut grads = ModelGrads::zeros_like(params);
+    train_step_sample(&exec, params, heads, masks, tokens, 0, false, &mut grads, None).logits
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: logit {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn dense_serve_and_train_logits_bit_identical_across_workers() {
+    let m = micro_model();
+    let params = ModelParams::init_random(&m, 42);
+    let toks = micro_tokens(m.seq_len, m.vocab, 3);
+    let reference = serve_logits(&params, m.heads, None, &toks, 1);
+    assert_eq!(reference.len(), m.classes);
+    for workers in [1, 2, 4] {
+        let serve = serve_logits(&params, m.heads, None, &toks, workers);
+        let train = train_logits(&params, m.heads, None, &toks, workers);
+        assert_bits_eq(&serve, &reference, &format!("dense serve w={workers}"));
+        assert_bits_eq(&train, &reference, &format!("dense train w={workers}"));
+    }
+}
+
+#[test]
+fn sparse_serve_and_train_logits_bit_identical_across_workers() {
+    let m = micro_model();
+    let params = ModelParams::init_random(&m, 42);
+    let toks = micro_tokens(m.seq_len, m.vocab, 3);
+    let masks = micro_masks(&m);
+    let reference = serve_logits(&params, m.heads, Some(&masks), &toks, 1);
+    for workers in [1, 2, 4] {
+        let serve = serve_logits(&params, m.heads, Some(&masks), &toks, workers);
+        let train = train_logits(&params, m.heads, Some(&masks), &toks, workers);
+        assert_bits_eq(&serve, &reference, &format!("sparse serve w={workers}"));
+        assert_bits_eq(&train, &reference, &format!("sparse train w={workers}"));
+    }
+}
+
+#[test]
+fn captured_scores_bit_identical_across_modes() {
+    // The transition detector's A^s must not depend on which mode captured
+    // it: `Encoder::forward_captured` (Infer) vs the train-path snapshot.
+    let m = micro_model();
+    let params = ModelParams::init_random(&m, 42);
+    let toks = micro_tokens(m.seq_len, m.vocab, 5);
+    let mut enc = Encoder::new(params.clone(), m.heads);
+    let (logits_cap, serve_scores) = enc.forward_captured(&toks);
+    assert_bits_eq(&logits_cap, &enc.forward(&toks), "captured vs plain forward");
+    let exec = Exec::new(ExecConfig::with_workers(1));
+    let mut grads = ModelGrads::zeros_like(&params);
+    let r = train_step_sample(&exec, &params, m.heads, None, &toks, 0, true, &mut grads, None);
+    let train_scores = r.scores.expect("dense snapshot captures scores");
+    assert_eq!(serve_scores.len(), m.layers);
+    assert_eq!(train_scores.len(), m.layers);
+    for (n, (a, b)) in serve_scores.iter().zip(&train_scores).enumerate() {
+        assert_eq!((a.rows, a.cols), (m.seq_len, m.seq_len));
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "layer {n} A^s element {i}");
+        }
+    }
+}
+
+#[test]
+fn resume_from_periodic_checkpoint_stays_bit_identical() {
+    // Format + trajectory stability: a SPIONRS1 periodic checkpoint written
+    // by the refactored trainer loads and continues to the exact golden
+    // trajectory (losses, accuracies, transition, masks, final params).
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let base = std::env::temp_dir()
+        .join("spion_forward_parity_resume.ckpt")
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string();
+    let kind = PatternKind::Spion(SpionVariant::CF);
+    let golden = NativeTrainer::new(micro_exp(kind, 12, 1))
+        .expect("valid micro config")
+        .run()
+        .expect("golden run");
+
+    let mut exp = micro_exp(kind, 12, 1);
+    exp.train.checkpoint_every = Some(6);
+    NativeTrainer::new(exp)
+        .expect("valid micro config")
+        .checkpoint_to(&base)
+        .run()
+        .expect("checkpointed run");
+
+    let ck_path = format!("{base}.step00000006");
+    let raw = std::fs::read(&ck_path).expect("periodic checkpoint on disk");
+    assert!(
+        raw.windows(8).any(|w| w == b"SPIONRS1"),
+        "periodic checkpoint carries a SPIONRS1 resume section"
+    );
+    let ck = Checkpoint::load(&ck_path).expect("checkpoint loads");
+    assert!(ck.resume.is_some());
+
+    let resumed = NativeTrainer::new(micro_exp(kind, 12, 1))
+        .expect("valid micro config")
+        .run_resumed(&ck)
+        .expect("resumed run");
+
+    assert_eq!(resumed.metrics.records.len(), golden.metrics.records.len());
+    for (a, b) in golden.metrics.records.iter().zip(&resumed.metrics.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}", a.step);
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "acc at step {}", a.step);
+    }
+    assert_eq!(resumed.metrics.transition_step, golden.metrics.transition_step);
+    assert_eq!(resumed.masks, golden.masks);
+    assert_eq!(resumed.final_params, golden.final_params);
+
+    for suffix in ["step00000006", "step00000012"] {
+        std::fs::remove_file(format!("{base}.{suffix}")).ok();
+    }
+}

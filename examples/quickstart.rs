@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         sparsity: SparsityConfig::for_model(PatternKind::Spion(SpionVariant::CF), task, &model),
         exec: Default::default(),
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),

@@ -172,6 +172,7 @@ fn main() -> Result<()> {
                 },
                 exec: Default::default(),
                 serve: Default::default(),
+                http: Default::default(),
                 obs: Default::default(),
                 resil: Default::default(),
                 artifacts_dir: "artifacts".into(),

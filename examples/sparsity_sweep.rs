@@ -61,6 +61,7 @@ fn main() -> Result<()> {
             },
             exec: spion::exec::ExecConfig::with_workers(args.usize_or("workers", 1)),
             serve: Default::default(),
+            http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
             artifacts_dir: args.str_or("artifacts", "artifacts"),

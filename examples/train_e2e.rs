@@ -66,6 +66,7 @@ fn main() -> Result<()> {
         sparsity,
         exec,
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),

@@ -4,6 +4,14 @@
 //! generator that never waits for responses, so overload actually builds
 //! up instead of self-throttling like a closed loop would).
 //!
+//! Two modes in one run:
+//!   1. in-process: paced `try_submit` directly against the engine;
+//!   2. over-the-socket: paced JSON `POST /v1/infer` through the HTTP
+//!      front door on 16 persistent keep-alive connections, sweeping
+//!      offered load × priority-class mix — per-class p50/p99 (from the
+//!      engine's per-class histograms, the same numbers /metrics exposes)
+//!      and the shed/preempt rates under class-aware overload.
+//!
 //! Reports throughput, p50/p99 response latency, and the rejection rate,
 //! as markdown + `results/serve_throughput.csv` + `BENCH_serve.json`.
 //!
@@ -14,11 +22,15 @@ mod common;
 
 use spion::config::ModelConfig;
 use spion::model::{Encoder, ModelParams};
+use spion::obs::prom::Sources;
 use spion::pattern::BlockMask;
-use spion::serve::{AdmissionError, Engine, ServeConfig, Ticket};
+use spion::serve::http::{api_router, HttpConfig, HttpServer};
+use spion::serve::{AdmissionError, Class, Engine, ServeConfig, Ticket};
 use spion::util::bench::Report;
 use spion::util::rng::Rng;
-use std::sync::atomic::Ordering;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// L=128 D=32 2-layer model with a diagonal block mask (the library's own
@@ -133,6 +145,227 @@ fn run_one(
     row
 }
 
+/// One row of the over-the-socket sweep: a class mix at an offered-load
+/// multiple, with per-class server-side latency and the shed breakdown.
+struct HttpRow {
+    mix: &'static str,
+    offered_x: f64,
+    offered_rps: f64,
+    sent: u64,
+    throughput_rps: f64,
+    /// Server-side latency per class, indexed by [`Class::index`]; NaN for
+    /// a class that served nothing in this cell.
+    p50_ms: [f64; Class::COUNT],
+    p99_ms: [f64; Class::COUNT],
+    /// (rejected + preempted + failed + shed) / (admitted + rejected).
+    shed_rate: f64,
+    preempted: u64,
+}
+
+/// Pick a class from cumulative mix weights (summing to 1).
+fn draw_class(mix: &[f64; Class::COUNT], rng: &mut Rng) -> Class {
+    let x = rng.below(1000) as f64 / 1000.0;
+    let mut acc = 0.0;
+    for c in Class::ALL {
+        acc += mix[c.index()];
+        if x < acc {
+            return c;
+        }
+    }
+    Class::BestEffort
+}
+
+/// Read one HTTP/1.1 response off the connection and discard it (the bench
+/// measures server-side latency from the engine histograms, not wire RTT).
+/// A clean EOF on a response boundary comes back as `UnexpectedEof`.
+fn discard_response(r: &mut BufReader<std::net::TcpStream>) -> std::io::Result<()> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server closed"));
+    }
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof in headers"));
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+}
+
+/// Per-connection pipeline cap: a writer that is this far ahead of the
+/// responses skips its slot (and the skip is reported) instead of growing
+/// the socket buffer without bound — open loop with bounded outstanding.
+const MAX_OUTSTANDING: u64 = 64;
+
+/// Open-loop offered load over the socket: `conns` persistent keep-alive
+/// connections, each with a paced writer (phase-offset so the aggregate
+/// rate is uniform) and an independent reader. Note the front door serves
+/// each connection serially (read → dispatch → respond), so per-connection
+/// overload queues in the socket buffer; class shedding and preemption
+/// still happen inside the engine where connections collide.
+fn run_one_http(
+    enc: &Encoder,
+    mix_name: &'static str,
+    mix: [f64; Class::COUNT],
+    offered_x: f64,
+    capacity_rps: f64,
+    window: Duration,
+    seed: u64,
+) -> HttpRow {
+    let conns: usize = 16;
+    let workers = 2;
+    let engine = Arc::new(
+        Engine::start(
+            enc.clone(),
+            ServeConfig { queue_depth: 8, max_batch: 1, workers, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    // One conn worker per persistent connection (a keep-alive connection
+    // holds its worker for its whole life), and no per-connection request
+    // cap — the pacing decides when the bench ends, not the server.
+    let hcfg =
+        HttpConfig { conn_workers: conns, keepalive_requests: 1_000_000, ..Default::default() };
+    let sources = Sources {
+        server: Some(engine.stats().clone()),
+        ops: Some(engine.op_tally()),
+        health: Some(engine.health()),
+    };
+    let srv = HttpServer::start(
+        "127.0.0.1:0",
+        &hcfg,
+        api_router(engine.clone(), sources, hcfg.class_share),
+    )
+    .unwrap();
+    let addr = srv.addr();
+    let offered_rps = offered_x * capacity_rps;
+    let global_interval = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+    let conn_interval = global_interval.mul_f64(conns as f64);
+
+    let sent_total = Arc::new(AtomicU64::new(0));
+    let skipped_total = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|i| {
+            let sent_total = sent_total.clone();
+            let skipped_total = skipped_total.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (0x9e37 + i as u64));
+                let stream = std::net::TcpStream::connect(addr).expect("connect bench conn");
+                stream.set_nodelay(true).ok();
+                let mut writer = stream.try_clone().expect("clone bench conn");
+                let mut reader = BufReader::new(stream);
+                let received = Arc::new(AtomicU64::new(0));
+                let recv_count = received.clone();
+                // The reader drains until the server closes the connection
+                // — which happens after the writer's half-close, once every
+                // pipelined request has been answered.
+                let rd = std::thread::spawn(move || {
+                    while discard_response(&mut reader).is_ok() {
+                        recv_count.fetch_add(1, Ordering::AcqRel);
+                    }
+                });
+                let start = Instant::now() + global_interval.mul_f64(i as f64);
+                let mut n = 0u64;
+                let mut sent = 0u64;
+                let mut skipped = 0u64;
+                while start.elapsed() < window {
+                    let next = start + conn_interval.mul_f64(n as f64);
+                    while Instant::now() < next {
+                        std::hint::spin_loop();
+                    }
+                    n += 1;
+                    if sent - received.load(Ordering::Acquire) >= MAX_OUTSTANDING {
+                        skipped += 1;
+                        continue;
+                    }
+                    let toks: Vec<String> =
+                        (0..128).map(|_| rng.below(20).to_string()).collect();
+                    let class = draw_class(&mix, &mut rng);
+                    let body = format!(
+                        "{{\"tokens\": [{}], \"class\": \"{}\"}}",
+                        toks.join(","),
+                        class.name()
+                    );
+                    let req = format!(
+                        "POST /v1/infer HTTP/1.1\r\nHost: bench\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    );
+                    if writer.write_all(req.as_bytes()).is_err() {
+                        break;
+                    }
+                    sent += 1;
+                }
+                // Half-close: the server drains the pipelined backlog,
+                // answers everything, then sees EOF and closes — which is
+                // what unblocks the reader. (Shutdown acts on the shared
+                // socket, so the clone works.)
+                let _ = writer.shutdown(std::net::Shutdown::Write);
+                let _ = rd.join();
+                drop(writer);
+                sent_total.fetch_add(sent, Ordering::Relaxed);
+                skipped_total.fetch_add(skipped, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("bench connection thread");
+    }
+    // Includes the post-window drain: `served` counts drained responses,
+    // so the denominator must cover the time they took.
+    let elapsed = t0.elapsed();
+    srv.stop();
+    engine.shutdown();
+
+    let stats = engine.stats();
+    let ld = Ordering::Relaxed;
+    let admitted = stats.admitted.load(ld);
+    let rejected = stats.rejected.load(ld);
+    // `failed` covers deadline expiries (and worker panics, zero here).
+    let dropped = rejected
+        + stats.preempted.load(ld)
+        + stats.failed.load(ld)
+        + stats.shed.load(ld);
+    let mut p50_ms = [f64::NAN; Class::COUNT];
+    let mut p99_ms = [f64::NAN; Class::COUNT];
+    for c in Class::ALL {
+        let snap = stats.class_latency[c.index()].snapshot();
+        if snap.count > 0 {
+            p50_ms[c.index()] = snap.percentile(0.50) as f64 / 1e6;
+            p99_ms[c.index()] = snap.percentile(0.99) as f64 / 1e6;
+        }
+    }
+    let skipped = skipped_total.load(ld);
+    if skipped > 0 {
+        println!(
+            "  [{mix_name} ×{offered_x:.1}] {skipped} paced slots skipped at the client \
+             (outstanding cap {MAX_OUTSTANDING}/conn) — offered rate is net of these"
+        );
+    }
+    HttpRow {
+        mix: mix_name,
+        offered_x,
+        offered_rps,
+        sent: sent_total.load(ld),
+        throughput_rps: stats.served.load(ld) as f64 / elapsed.as_secs_f64(),
+        p50_ms,
+        p99_ms,
+        shed_rate: dropped as f64 / (admitted + rejected).max(1) as f64,
+        preempted: stats.preempted.load(ld),
+    }
+}
+
 fn main() {
     let fast = std::env::var("SPION_BENCH_FAST").ok().as_deref() == Some("1");
     let window = if fast { Duration::from_millis(250) } else { Duration::from_secs(1) };
@@ -170,6 +403,57 @@ fn main() {
     report.print();
     report.save_csv("results/serve_throughput.csv");
 
+    // Over-the-socket open loop: offered load × class mix through the HTTP
+    // front door (fixed 2 engine workers, queue depth 8, 16 connections —
+    // small queue so class shedding and preemption actually trigger).
+    let mixes: [(&'static str, [f64; Class::COUNT]); 3] = [
+        ("interactive-heavy", [0.7, 0.2, 0.1]),
+        ("balanced", [0.34, 0.33, 0.33]),
+        ("batch-heavy", [0.2, 0.3, 0.5]),
+    ];
+    let capacity = calibrate_capacity_rps(&enc, 2, &mut rng);
+    let mut http_rows: Vec<HttpRow> = Vec::new();
+    for (i, &(name, mix)) in mixes.iter().enumerate() {
+        for &offered_x in &[0.5f64, 2.0, 4.0] {
+            http_rows.push(run_one_http(
+                &enc,
+                name,
+                mix,
+                offered_x,
+                capacity,
+                window,
+                1000 + i as u64,
+            ));
+        }
+    }
+
+    let fmt_ms = |x: f64| if x.is_nan() { "-".to_string() } else { format!("{x:.2} ms") };
+    let mut http_report = Report::new(
+        "HTTP front door: offered load × class mix (open loop, 16 keep-alive conns)",
+        &[
+            "mix", "offered ×cap", "sent", "served req/s", "p50 int", "p99 int", "p50 batch",
+            "p99 batch", "p50 be", "p99 be", "shed %", "preempted",
+        ],
+    );
+    for r in &http_rows {
+        http_report.row(vec![
+            r.mix.to_string(),
+            format!("{:.1}", r.offered_x),
+            r.sent.to_string(),
+            format!("{:.0}", r.throughput_rps),
+            fmt_ms(r.p50_ms[Class::Interactive.index()]),
+            fmt_ms(r.p99_ms[Class::Interactive.index()]),
+            fmt_ms(r.p50_ms[Class::Batch.index()]),
+            fmt_ms(r.p99_ms[Class::Batch.index()]),
+            fmt_ms(r.p50_ms[Class::BestEffort.index()]),
+            fmt_ms(r.p99_ms[Class::BestEffort.index()]),
+            format!("{:.1}", 100.0 * r.shed_rate),
+            r.preempted.to_string(),
+        ]);
+    }
+    http_report.print();
+    http_report.save_csv("results/serve_http_open_loop.csv");
+
     let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"provenance\": \"measured\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -183,6 +467,30 @@ fn main() {
             r.p99_ms,
             r.rejection_rate,
             if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"http_open_loop\": [\n");
+    let jf = |x: f64| if x.is_nan() { "null".to_string() } else { format!("{x:.3}") };
+    for (i, r) in http_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mix\": \"{}\", \"offered_x\": {:.1}, \"offered_rps\": {:.1}, \"sent\": {}, \"throughput_rps\": {:.1}, \
+             \"p50_ms\": {{\"interactive\": {}, \"batch\": {}, \"best_effort\": {}}}, \
+             \"p99_ms\": {{\"interactive\": {}, \"batch\": {}, \"best_effort\": {}}}, \
+             \"shed_rate\": {:.4}, \"preempted\": {}}}{}\n",
+            r.mix,
+            r.offered_x,
+            r.offered_rps,
+            r.sent,
+            r.throughput_rps,
+            jf(r.p50_ms[Class::Interactive.index()]),
+            jf(r.p50_ms[Class::Batch.index()]),
+            jf(r.p50_ms[Class::BestEffort.index()]),
+            jf(r.p99_ms[Class::Interactive.index()]),
+            jf(r.p99_ms[Class::Batch.index()]),
+            jf(r.p99_ms[Class::BestEffort.index()]),
+            r.shed_rate,
+            r.preempted,
+            if i + 1 == http_rows.len() { "" } else { "," }
         ));
     }
     json.push_str("  ]\n}\n");

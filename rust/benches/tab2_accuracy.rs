@@ -57,6 +57,7 @@ fn main() {
                     sparsity: SparsityConfig::for_model(kind, task, &model),
                     exec: Default::default(),
                     serve: Default::default(),
+                    http: Default::default(),
                     obs: Default::default(),
                     resil: Default::default(),
                     artifacts_dir: "artifacts".into(),

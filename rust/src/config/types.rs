@@ -11,7 +11,7 @@ use crate::pattern::SpionVariant;
 
 pub use crate::exec::ExecConfig;
 pub use crate::obs::ObsConfig;
-pub use crate::serve::ServeConfig;
+pub use crate::serve::{HttpConfig, ServeConfig};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
@@ -251,6 +251,10 @@ pub struct ExperimentConfig {
     /// Serving-engine knobs (`[serve]` in TOML, `spion serve` CLI flags):
     /// bounded admission depth, batch policy, worker widths.
     pub serve: ServeConfig,
+    /// HTTP front-door knobs (`[http]` in TOML, `--http-addr` on the
+    /// CLI): bind address, connection workers, protocol limits,
+    /// per-class queue shares.
+    pub http: HttpConfig,
     /// Observability knobs (`[obs]` in TOML, `--metrics-addr` /
     /// `--trace-out` / `--obs` on the CLI).
     pub obs: ObsConfig,
@@ -304,6 +308,7 @@ impl ExperimentConfig {
             }
         }
         self.serve.validate()?;
+        self.http.validate()?;
         // Validate the fault names/prob without arming the registry (a
         // bad `[resil]` section must fail the load, not half-arm).
         validate_resil(&self.resil)
@@ -524,6 +529,41 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
     }
     serve.validate()?;
 
+    let mut http = HttpConfig::default();
+    if let Some(h) = doc.get("http") {
+        if let Some(v) = h.get("addr") {
+            http.addr = Some(v.as_str().ok_or("http.addr must be a string")?.to_string());
+        }
+        for (key, field) in [
+            ("conn_workers", &mut http.conn_workers as &mut usize),
+            ("keepalive_requests", &mut http.keepalive_requests),
+            ("max_header_bytes", &mut http.max_header_bytes),
+            ("max_body_bytes", &mut http.max_body_bytes),
+        ] {
+            if let Some(v) = h.get(key) {
+                *field =
+                    v.as_usize().ok_or(format!("http.{key} must be a non-negative integer"))?;
+            }
+        }
+        if let Some(v) = h.get("idle_timeout_ms") {
+            http.idle_timeout_ms =
+                v.as_usize().ok_or("http.idle_timeout_ms must be a non-negative integer")? as u64;
+        }
+        // One share key per priority class; unset keys keep their default.
+        use crate::serve::Class;
+        for (key, class) in [
+            ("share_interactive", Class::Interactive),
+            ("share_batch", Class::Batch),
+            ("share_best_effort", Class::BestEffort),
+        ] {
+            if let Some(v) = h.get(key) {
+                http.class_share[class.index()] =
+                    v.as_float().ok_or(format!("http.{key} must be a number"))?;
+            }
+        }
+    }
+    http.validate()?;
+
     let mut obs = ObsConfig::default();
     if let Some(o) = doc.get("obs") {
         if let Some(v) = o.get("enabled") {
@@ -584,7 +624,8 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    let cfg = ExperimentConfig { task, model, train, sparsity, exec, serve, obs, resil, artifacts_dir };
+    let cfg =
+        ExperimentConfig { task, model, train, sparsity, exec, serve, http, obs, resil, artifacts_dir };
     cfg.validate()?;
     Ok(cfg)
 }
@@ -784,6 +825,50 @@ deadline_us = 250000
         let err = experiment_from_toml("preset = \"tiny\"\n[serve]\nmax_wait_us = 99000000")
             .unwrap_err();
         assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn http_section_from_toml() {
+        let cfg = experiment_from_toml(
+            r#"
+preset = "tiny"
+[http]
+addr = "127.0.0.1:9470"
+conn_workers = 8
+keepalive_requests = 64
+idle_timeout_ms = 2000
+max_header_bytes = 4096
+max_body_bytes = 65536
+share_interactive = 1.0
+share_batch = 0.8
+share_best_effort = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.http.addr.as_deref(), Some("127.0.0.1:9470"));
+        assert_eq!(cfg.http.conn_workers, 8);
+        assert_eq!(cfg.http.keepalive_requests, 64);
+        assert_eq!(cfg.http.idle_timeout_ms, 2000);
+        assert_eq!(cfg.http.max_header_bytes, 4096);
+        assert_eq!(cfg.http.max_body_bytes, 65536);
+        assert_eq!(cfg.http.class_share, [1.0, 0.8, 0.5]);
+        let d = experiment_from_toml("preset = \"tiny\"").unwrap();
+        assert_eq!(d.http, HttpConfig::default(), "no [http] section → defaults, addr None");
+        assert!(d.http.addr.is_none(), "front door is opt-in");
+    }
+
+    #[test]
+    fn http_section_validates() {
+        let err = experiment_from_toml("preset = \"tiny\"\n[http]\nkeepalive_requests = 0")
+            .unwrap_err();
+        assert!(err.contains("keepalive_requests"), "{err}");
+        let err = experiment_from_toml("preset = \"tiny\"\n[http]\nshare_batch = 1.5").unwrap_err();
+        assert!(err.contains("class_share"), "{err}");
+        let err =
+            experiment_from_toml("preset = \"tiny\"\n[http]\nshare_best_effort = 0.0").unwrap_err();
+        assert!(err.contains("class_share"), "{err}");
+        let err = experiment_from_toml("preset = \"tiny\"\n[http]\naddr = 9470").unwrap_err();
+        assert!(err.contains("http.addr"), "{err}");
     }
 
     #[test]

@@ -402,6 +402,7 @@ mod tests {
             sparsity,
             exec: crate::exec::ExecConfig::with_workers(workers),
             serve: Default::default(),
+            http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
             artifacts_dir: "artifacts".into(),

@@ -440,6 +440,7 @@ mod tests {
             sparsity: SparsityConfig::new(kind, 16, 0.9),
             exec: Default::default(),
             serve: Default::default(),
+            http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
             artifacts_dir: "artifacts".into(),

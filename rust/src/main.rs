@@ -62,7 +62,14 @@ fn print_help() {
          \x20           --max-batch N --max-wait-us N (batching window) --kernel-workers N\n\
          \x20           (per-worker sparse-kernel parallelism for big-L requests)\n\
          \x20           --deadline-us N (shed requests still queued past N µs; 0 = off)\n\
-         \x20           SIGTERM drains gracefully: stop admitting, finish in-flight,\n\
+         \x20           --http-addr A (HTTP/1.1 front door: POST /v1/infer + GET /metrics +\n\
+         \x20           /healthz on host:port, :0 = ephemeral; requests carry a priority\n\
+         \x20           class interactive|batch|best_effort and an optional deadline_us —\n\
+         \x20           the admission queue is EDF-ordered and sheds lowest class first)\n\
+         \x20           --conn-workers N --keepalive-requests N --idle-timeout-ms N\n\
+         \x20           --max-header-bytes N --max-body-bytes N ([http] protocol limits)\n\
+         \x20           --requests 0 --hold-ms N serves the front door with no synthetic load\n\
+         \x20           SIGTERM drains gracefully: stop accepting, finish in-flight,\n\
          \x20           resolve the backlog with typed errors, flush metrics\n\
          \x20 presets\n\n\
          RESILIENCE (`[resil]` in TOML or SPION_FAULTS env):\n\
@@ -104,6 +111,26 @@ fn serve_from_args(args: &Args, default: ServeConfig) -> Result<ServeConfig> {
         workers: args.usize_or("workers", default.workers),
         kernel_workers: args.usize_or("kernel-workers", default.kernel_workers),
         deadline_us: args.u64_or("deadline-us", default.deadline_us),
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+/// HTTP front-door config from the CLI flags over `default` (the `[http]`
+/// TOML section when `--config` was given, else `HttpConfig::default()`).
+/// `--http-addr` opts the front door in; class shares are TOML-only.
+fn http_from_args(
+    args: &Args,
+    default: spion::serve::HttpConfig,
+) -> Result<spion::serve::HttpConfig> {
+    let cfg = spion::serve::HttpConfig {
+        addr: args.get("http-addr").map(String::from).or(default.addr),
+        conn_workers: args.usize_or("conn-workers", default.conn_workers),
+        keepalive_requests: args.usize_or("keepalive-requests", default.keepalive_requests),
+        idle_timeout_ms: args.u64_or("idle-timeout-ms", default.idle_timeout_ms),
+        max_header_bytes: args.usize_or("max-header-bytes", default.max_header_bytes),
+        max_body_bytes: args.usize_or("max-body-bytes", default.max_body_bytes),
+        class_share: default.class_share,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -175,6 +202,8 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         }
         // CLI serve flags override the file's [serve] section.
         exp.serve = serve_from_args(args, exp.serve)?;
+        // …CLI http flags the file's [http] section…
+        exp.http = http_from_args(args, exp.http)?;
         // …and CLI obs flags the file's [obs] section.
         exp.obs = obs_from_args(args, exp.obs);
         if args.has("checkpoint-every") {
@@ -222,6 +251,7 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         sparsity,
         exec: exec_from_args(args),
         serve: serve_from_args(args, Default::default())?,
+        http: http_from_args(args, Default::default())?,
         obs: obs_from_args(args, Default::default()),
         resil: Default::default(),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
@@ -505,6 +535,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 sparsity: SparsityConfig::for_model(kind, task, &model),
                 exec: ecfg,
                 serve: Default::default(),
+                http: Default::default(),
                 obs: Default::default(),
                 resil: Default::default(),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
@@ -539,16 +570,36 @@ fn run_serve(args: &Args) -> Result<()> {
         if kcfg.fused && kcfg.simd { "+simd" } else { "" },
     );
     let engine = std::sync::Arc::new(Engine::start(encoder, scfg)?);
-    // /metrics endpoint: scrapes read atomics only, never the workers.
+    let sources = spion::obs::prom::Sources {
+        server: Some(engine.stats().clone()),
+        ops: Some(engine.op_tally()),
+        health: Some(engine.health()),
+    };
+    // [http] front door (`--http-addr` / TOML): /v1/infer + /metrics +
+    // /healthz over the shared HTTP/1.1 core.
+    let hcfg = http_from_args(
+        args,
+        file_exp.as_ref().map(|e| e.http.clone()).unwrap_or_default(),
+    )?;
+    let http_srv = match &hcfg.addr {
+        Some(addr) => {
+            let router =
+                spion::serve::http::api_router(engine.clone(), sources.clone(), hcfg.class_share);
+            let srv = spion::serve::http::HttpServer::start(addr, &hcfg, router)?;
+            // Tests and scripts parse this line to find an ephemeral port.
+            println!("http listening on http://{}", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    // --metrics-addr alias: observability-only listener (/metrics +
+    // /healthz, no inference surface). Scrapes read atomics only.
     let metrics_srv = match &ocfg.metrics_addr {
         Some(addr) => {
-            let srv = spion::obs::http::MetricsServer::start(
+            let srv = spion::serve::http::HttpServer::start(
                 addr,
-                spion::obs::prom::Sources {
-                    server: Some(engine.stats().clone()),
-                    ops: Some(engine.op_tally()),
-                    health: Some(engine.health()),
-                },
+                &hcfg,
+                spion::serve::http::metrics_router(sources.clone()),
             )?;
             // Tests and scripts parse this line to find an ephemeral port.
             println!("metrics listening on http://{}/metrics", srv.addr());
@@ -559,44 +610,48 @@ fn run_serve(args: &Args) -> Result<()> {
     // Drive a synthetic workload through concurrent submitters: each
     // thread queues its whole chunk first (blocking only on admission
     // space — backpressure, not latency), then waits the tickets.
+    // `--requests 0` skips the synthetic load entirely (front-door-only
+    // serving: clients arrive over `--http-addr`).
     let n = args.usize_or("requests", 64);
-    let conc = args.usize_or("concurrency", 4);
-    let gen = spion::data::make_task(task, model.seq_len, model.vocab, model.classes);
-    let mut batcher = spion::data::batcher::Batcher::new(gen, 1, 99);
-    let work: Vec<Vec<i32>> = (0..n).map(|_| batcher.next_batch().x).collect();
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for chunk in work.chunks(n.div_ceil(conc)) {
-        let engine = engine.clone();
-        let chunk = chunk.to_vec();
-        handles.push(std::thread::spawn(move || {
-            let tickets: Vec<_> =
-                chunk.into_iter().filter_map(|t| engine.submit(t).ok()).collect();
-            tickets.into_iter().filter(|t| t.wait().is_ok()).count()
-        }));
-    }
-    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
-    let elapsed = t0.elapsed();
+    let conc = args.usize_or("concurrency", 4).max(1);
     let stats = engine.stats();
-    println!(
-        "served {served}/{n} | mean latency {:.2} ms | max {:.2} ms | {:.1} req/s | mean batch {:.1} | rejected {} shed {} peak queue {}",
-        stats.mean_latency_ms(),
-        stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
-        stats.throughput_rps(elapsed),
-        stats.mean_batch(),
-        stats.rejected.load(std::sync::atomic::Ordering::Relaxed),
-        stats.shed.load(std::sync::atomic::Ordering::Relaxed),
-        stats.queue_peak.load(std::sync::atomic::Ordering::Relaxed),
-    );
-    let lat = stats.latency_histogram.snapshot();
-    let wait = stats.queue_wait_histogram.snapshot();
-    println!(
-        "latency p50 {:.2} ms | p90 {:.2} ms | p99 {:.2} ms | queue wait p99 {:.2} ms",
-        lat.percentile(0.50) as f64 / 1e6,
-        lat.percentile(0.90) as f64 / 1e6,
-        lat.percentile(0.99) as f64 / 1e6,
-        wait.percentile(0.99) as f64 / 1e6,
-    );
+    if n > 0 {
+        let gen = spion::data::make_task(task, model.seq_len, model.vocab, model.classes);
+        let mut batcher = spion::data::batcher::Batcher::new(gen, 1, 99);
+        let work: Vec<Vec<i32>> = (0..n).map(|_| batcher.next_batch().x).collect();
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for chunk in work.chunks(n.div_ceil(conc)) {
+            let engine = engine.clone();
+            let chunk = chunk.to_vec();
+            handles.push(std::thread::spawn(move || {
+                let tickets: Vec<_> =
+                    chunk.into_iter().filter_map(|t| engine.submit(t).ok()).collect();
+                tickets.into_iter().filter(|t| t.wait().is_ok()).count()
+            }));
+        }
+        let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let elapsed = t0.elapsed();
+        println!(
+            "served {served}/{n} | mean latency {:.2} ms | max {:.2} ms | {:.1} req/s | mean batch {:.1} | rejected {} shed {} peak queue {}",
+            stats.mean_latency_ms(),
+            stats.max_latency_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e3,
+            stats.throughput_rps(elapsed),
+            stats.mean_batch(),
+            stats.rejected.load(std::sync::atomic::Ordering::Relaxed),
+            stats.shed.load(std::sync::atomic::Ordering::Relaxed),
+            stats.queue_peak.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        let lat = stats.latency_histogram.snapshot();
+        let wait = stats.queue_wait_histogram.snapshot();
+        println!(
+            "latency p50 {:.2} ms | p90 {:.2} ms | p99 {:.2} ms | queue wait p99 {:.2} ms",
+            lat.percentile(0.50) as f64 / 1e6,
+            lat.percentile(0.90) as f64 / 1e6,
+            lat.percentile(0.99) as f64 / 1e6,
+            wait.percentile(0.99) as f64 / 1e6,
+        );
+    }
     // --hold-ms keeps the engine + metrics endpoint alive after the
     // synthetic workload, giving scrapers a deterministic window. The wait
     // is sliced so a SIGTERM turns into a prompt graceful drain: stop
@@ -617,17 +672,28 @@ fn run_serve(args: &Args) -> Result<()> {
             std::thread::sleep((deadline - now).min(std::time::Duration::from_millis(50)));
         }
     }
+    // Drain order: close the front door first (no new admissions over the
+    // socket; in-flight handlers finish and their tickets resolve), then
+    // drain the engine.
+    if let Some(srv) = http_srv {
+        srv.stop();
+    }
     engine.shutdown();
     // Conservation line (the chaos CI job greps it): after the drain every
-    // admitted ticket has resolved exactly once — served, shed, or failed.
+    // admitted ticket has resolved exactly once — served, shed, failed, or
+    // preempted by a higher class.
     {
         use std::sync::atomic::Ordering::Relaxed;
         let admitted = stats.admitted.load(Relaxed);
-        let (served, shed, failed) =
-            (stats.served.load(Relaxed), stats.shed.load(Relaxed), stats.failed.load(Relaxed));
+        let (served, shed, failed, preempted) = (
+            stats.served.load(Relaxed),
+            stats.shed.load(Relaxed),
+            stats.failed.load(Relaxed),
+            stats.preempted.load(Relaxed),
+        );
         println!(
-            "drain complete: {}/{admitted} admitted tickets resolved (served {served}, shed {shed}, failed {failed})",
-            served + shed + failed,
+            "drain complete: {}/{admitted} admitted tickets resolved (served {served}, shed {shed}, failed {failed}, preempted {preempted})",
+            served + shed + failed + preempted,
         );
     }
     drop(metrics_srv);

@@ -9,8 +9,10 @@
 //!   relaxed load when disabled and one `Instant::now` + four relaxed RMWs
 //!   when enabled; no allocation either way, so the zero-allocation sparse
 //!   phase witness stays valid with spans armed.
-//! * [`prom`] + [`http`] — Prometheus-text exposition of spans, ServerStats
-//!   and op tallies over a minimal `TcpListener` HTTP/1.0 endpoint.
+//! * [`prom`] — Prometheus-text exposition of spans, ServerStats and op
+//!   tallies; served over the shared HTTP/1.1 core in
+//!   [`crate::serve::http`] (`GET /metrics` on the front door, or the
+//!   `--metrics-addr` alias mounting only `/metrics` + `/healthz`).
 //! * [`trace`] — opt-in bounded event ring dumped as chrome://tracing JSON.
 //!
 //! Spans never touch model data, so enabling or disabling them cannot change
@@ -18,7 +20,6 @@
 //! enabled state).
 
 pub mod hist;
-pub mod http;
 pub mod prom;
 pub mod trace;
 

@@ -170,6 +170,53 @@ pub fn render(sources: &Sources) -> String {
             "Time from admission to batch dispatch.",
         );
         emit_summary(&mut out, "spion_queue_wait_seconds", "", &stats.queue_wait_histogram.snapshot());
+
+        // Per-class slices: counters first (all classes render even at 0,
+        // so dashboards and the overload smoke test see every family),
+        // then the per-class latency summary the HTTP front door feeds.
+        use crate::serve::Class;
+        let class_counters: [(&str, &[std::sync::atomic::AtomicU64; Class::COUNT], &str); 6] = [
+            ("admitted", &stats.class_admitted, "Requests admitted, by priority class."),
+            ("served", &stats.class_served, "Requests served to completion, by priority class."),
+            ("rejected", &stats.class_rejected, "Requests rejected at admission, by priority class."),
+            (
+                "preempted",
+                &stats.class_preempted,
+                "Admitted requests evicted by a higher-priority arrival (EDF shed).",
+            ),
+            (
+                "expired",
+                &stats.class_expired,
+                "Admitted requests whose deadline expired before execution.",
+            ),
+            ("shed", &stats.class_shed, "Admitted requests shed at shutdown, by priority class."),
+        ];
+        for (name, slots, help) in class_counters {
+            let full = format!("spion_serve_class_{name}_total");
+            help_line(&mut out, &full, "counter", help);
+            for c in Class::ALL {
+                let _ = writeln!(
+                    out,
+                    "{full}{{class=\"{}\"}} {}",
+                    c.name(),
+                    slots[c.index()].load(Ordering::Relaxed)
+                );
+            }
+        }
+        help_line(
+            &mut out,
+            "spion_http_request_seconds",
+            "summary",
+            "End-to-end request latency by priority class (admission to resolve).",
+        );
+        for c in Class::ALL {
+            emit_summary(
+                &mut out,
+                "spion_http_request_seconds",
+                &format!("class=\"{}\"", c.name()),
+                &stats.class_latency[c.index()].snapshot(),
+            );
+        }
     }
 
     if let Some(tally) = &sources.ops {
@@ -268,6 +315,23 @@ mod tests {
         health.store(crate::resil::HEALTH_DEGRADED, Ordering::Relaxed);
         let text = render(&Sources { health: Some(health), ..Default::default() });
         assert!(text.contains("spion_serve_health{state=\"degraded\"} 1"));
+    }
+
+    #[test]
+    fn per_class_families_render_with_server_source() {
+        let stats = Arc::new(crate::serve::ServerStats::default());
+        let idx = crate::serve::Class::Interactive.index();
+        stats.class_served[idx].fetch_add(2, Ordering::Relaxed);
+        stats.class_latency[idx].record_duration(std::time::Duration::from_micros(250));
+        let text = render(&Sources { server: Some(stats), ..Default::default() });
+        assert!(text.contains("spion_serve_class_served_total{class=\"interactive\"} 2"));
+        // Zero-valued classes still render — dashboards and the CI smoke
+        // test rely on every family being present.
+        assert!(text.contains("spion_serve_class_preempted_total{class=\"best_effort\"} 0"));
+        assert!(text.contains("spion_serve_class_shed_total{class=\"batch\"} 0"));
+        assert!(text.contains("spion_http_request_seconds{class=\"interactive\",quantile=\"0.5\"}"));
+        assert!(text.contains("spion_http_request_seconds_count{class=\"interactive\"} 1"));
+        assert!(text.contains("spion_http_request_seconds_count{class=\"batch\"} 0"));
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Request priority classes for the serving engine.
+//!
+//! Three classes order the EDF admission queue (see [`super::edf`]) and
+//! drive shed-lowest-first overload behavior: `interactive` (a user is
+//! watching), `batch` (a pipeline is waiting), `best_effort` (nobody is
+//! waiting — speculative or backfill traffic). Lower rank = higher
+//! priority. The wire format (`POST /v1/infer`) carries the class as the
+//! lowercase snake_case string; an absent field means `interactive`, the
+//! class a naive client should get.
+
+use std::fmt;
+
+/// Request priority class. `rank()` 0 is the most important; eviction
+/// under overload always takes the *highest* rank present in the queue,
+/// and only when the incoming request's rank is strictly lower.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Class {
+    /// A human is blocked on the response: never evicted by other classes.
+    #[default]
+    Interactive = 0,
+    /// Throughput traffic (offline scoring, pipelines): evicted only for
+    /// `interactive`.
+    Batch = 1,
+    /// Speculative/backfill traffic: first to shed under overload.
+    BestEffort = 2,
+}
+
+impl Class {
+    /// Number of classes — sizes the per-class counter arrays.
+    pub const COUNT: usize = 3;
+
+    /// All classes in priority order (best first).
+    pub const ALL: [Class; Self::COUNT] = [Class::Interactive, Class::Batch, Class::BestEffort];
+
+    /// Priority rank: 0 = most important. Total order, no ties.
+    pub fn rank(self) -> u8 {
+        self as u8
+    }
+
+    /// Dense index into per-class counter arrays (same value as `rank`).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Class::rank`]. Panics are impossible for ranks that
+    /// came out of `rank()`; out-of-range input clamps to `BestEffort`
+    /// (the defensive choice: an unknown rank is least important).
+    pub fn from_rank(rank: u8) -> Class {
+        match rank {
+            0 => Class::Interactive,
+            1 => Class::Batch,
+            _ => Class::BestEffort,
+        }
+    }
+
+    /// Wire name (`interactive` | `batch` | `best_effort`) — used in the
+    /// JSON request body and as the `class` label on /metrics families.
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Batch => "batch",
+            Class::BestEffort => "best_effort",
+        }
+    }
+
+    /// Parse the wire name. `None` for anything unrecognized — the HTTP
+    /// layer maps that to a 400, never to a silent default.
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "batch" => Some(Class::Batch),
+            "best_effort" => Some(Class::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Class {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for c in Class::ALL {
+            assert_eq!(Class::parse(c.name()), Some(c));
+            assert_eq!(Class::from_rank(c.rank()), c);
+            assert_eq!(c.index(), c.rank() as usize);
+        }
+        assert_eq!(Class::parse("Interactive"), None, "case-sensitive wire names");
+        assert_eq!(Class::parse("besteffort"), None);
+        assert_eq!(Class::parse(""), None);
+    }
+
+    #[test]
+    fn priority_order_is_total() {
+        assert!(Class::Interactive < Class::Batch);
+        assert!(Class::Batch < Class::BestEffort);
+        assert_eq!(Class::default(), Class::Interactive);
+        assert_eq!(Class::from_rank(200), Class::BestEffort, "unknown rank clamps low");
+    }
+}

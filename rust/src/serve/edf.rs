@@ -1,0 +1,424 @@
+//! Bounded EDF (earliest-deadline-first) admission queue with
+//! priority-class eviction — the scheduling upgrade over the FIFO
+//! [`super::queue::Bounded`] the engine used through PR 7.
+//!
+//! Ordering is a strict lexicographic key:
+//!
+//! 1. **class rank** — every `interactive` request dispatches before any
+//!    `batch` request, which dispatches before any `best_effort` one;
+//! 2. **deadline** — within a class, the request that expires soonest goes
+//!    first (EDF); requests without a deadline sort *after* all deadlined
+//!    siblings (an unconstrained request can always afford to wait);
+//! 3. **admission sequence** — FIFO tiebreak, which also makes the order
+//!    deterministic and total (no equal keys, so the `BTreeMap` never
+//!    overwrites an entry).
+//!
+//! Overload policy (*shed-lowest-class-first*): `try_push` on a full queue
+//! evicts the **worst** queued entry (max key = lowest class, latest
+//! deadline) — but only when the incoming request's class is *strictly*
+//! higher priority. The evicted value is handed back to the caller as
+//! [`EdfPush::Displaced`] so its ticket resolves with a typed `Preempted`
+//! error through the counted path; an incoming request that cannot displace
+//! anything is rejected with `Full` exactly like the FIFO queue. Two
+//! consequences worth stating: an `interactive` request can never be
+//! preempted (nothing outranks it), and a queue full of one class degrades
+//! to plain bounded-FIFO behavior for that class.
+//!
+//! Blocking (`push`) and batching (`pop_batch`) ends mirror
+//! [`super::queue::Bounded`], including the asymmetric close semantics:
+//! `pop_batch` returns `None` the moment the queue closes, leaving the
+//! backlog for [`EdfQueue::drain`] so shutdown resolves every entry
+//! explicitly.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::class::Class;
+use super::queue::TryPushError;
+
+/// Scheduling key. Smaller = dispatched sooner. `deadline: None` sorts
+/// after every `Some` within the same class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct EdfKey {
+    rank: u8,
+    deadline: Option<Instant>,
+    seq: u64,
+}
+
+impl Ord for EdfKey {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.rank
+            .cmp(&other.rank)
+            .then_with(|| match (self.deadline, other.deadline) {
+                (Some(a), Some(b)) => a.cmp(&b),
+                (Some(_), None) => CmpOrdering::Less,
+                (None, Some(_)) => CmpOrdering::Greater,
+                (None, None) => CmpOrdering::Equal,
+            })
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for EdfKey {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Outcome of a successful push.
+#[derive(Debug)]
+pub enum EdfPush<T> {
+    /// Enqueued into free capacity.
+    Admitted,
+    /// Enqueued by evicting the worst entry (its class and value returned
+    /// so the caller can resolve its ticket with `Preempted`). The queue
+    /// is still exactly at capacity.
+    Displaced(Class, T),
+}
+
+struct Inner<T> {
+    q: BTreeMap<EdfKey, T>,
+    /// Per-class occupancy — the class-share gate in `serve/http` reads
+    /// this without walking the tree.
+    counts: [usize; Class::COUNT],
+    seq: u64,
+    closed: bool,
+}
+
+impl<T> Inner<T> {
+    fn insert(&mut self, class: Class, deadline: Option<Instant>, v: T) {
+        let key = EdfKey { rank: class.rank(), deadline, seq: self.seq };
+        self.seq += 1;
+        self.counts[class.index()] += 1;
+        let clobbered = self.q.insert(key, v);
+        debug_assert!(clobbered.is_none(), "seq tiebreak makes keys unique");
+    }
+
+    /// Remove the worst (max-key) entry.
+    fn evict_worst(&mut self) -> Option<(Class, T)> {
+        let (key, v) = self.q.pop_last()?;
+        let class = Class::from_rank(key.rank);
+        self.counts[class.index()] -= 1;
+        Some((class, v))
+    }
+
+    /// Remove the best (min-key) entry.
+    fn pop_best(&mut self) -> Option<T> {
+        let (key, v) = self.q.pop_first()?;
+        self.counts[Class::from_rank(key.rank).index()] -= 1;
+        Some(v)
+    }
+
+    fn worst_rank(&self) -> Option<u8> {
+        self.q.last_key_value().map(|(k, _)| k.rank)
+    }
+}
+
+/// Bounded MPMC priority queue ordered (class, deadline, seq).
+pub struct EdfQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> EdfQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "EDF queue capacity must be ≥ 1");
+        Self {
+            inner: Mutex::new(Inner {
+                q: BTreeMap::new(),
+                counts: [0; Class::COUNT],
+                seq: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current occupancy of one class (gauge; racy by nature).
+    pub fn len_class(&self, class: Class) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).counts[class.index()]
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed
+    }
+
+    /// Non-blocking push. At capacity, evicts the worst entry iff `class`
+    /// strictly outranks it ([`EdfPush::Displaced`]); otherwise `Full`.
+    pub fn try_push(
+        &self,
+        class: Class,
+        deadline: Option<Instant>,
+        v: T,
+    ) -> Result<EdfPush<T>, TryPushError<T>> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.closed {
+            return Err(TryPushError::Closed(v));
+        }
+        if g.q.len() < self.cap {
+            g.insert(class, deadline, v);
+            drop(g);
+            self.not_empty.notify_one();
+            return Ok(EdfPush::Admitted);
+        }
+        match g.worst_rank() {
+            // Strictly-higher priority displaces the worst entry; equal or
+            // lower priority sheds the *incoming* request, so a class can
+            // never cannibalize itself and interactive is never evicted.
+            Some(worst) if class.rank() < worst => {
+                let (victim_class, victim) =
+                    g.evict_worst().unwrap_or_else(|| unreachable!("full queue has a worst entry"));
+                g.insert(class, deadline, v);
+                drop(g);
+                self.not_empty.notify_one();
+                Ok(EdfPush::Displaced(victim_class, victim))
+            }
+            _ => Err(TryPushError::Full(v)),
+        }
+    }
+
+    /// Blocking push: displaces immediately when allowed, otherwise waits
+    /// for space. Returns the value back if the queue closes first.
+    pub fn push(&self, class: Class, deadline: Option<Instant>, v: T) -> Result<EdfPush<T>, T> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if g.closed {
+                return Err(v);
+            }
+            if g.q.len() < self.cap {
+                g.insert(class, deadline, v);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(EdfPush::Admitted);
+            }
+            if g.worst_rank().is_some_and(|worst| class.rank() < worst) {
+                let (victim_class, victim) =
+                    g.evict_worst().unwrap_or_else(|| unreachable!("full queue has a worst entry"));
+                g.insert(class, deadline, v);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(EdfPush::Displaced(victim_class, victim));
+            }
+            // Park, then re-check everything: capacity, the close flag,
+            // and the worst rank may all have changed.
+            g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Dynamic batching pop in EDF order: block for the first entry, then
+    /// collect best-first until `max` entries or `max_wait` elapses.
+    /// Returns `None` as soon as the queue is closed, leaving the backlog
+    /// for [`Self::drain`] (same contract as `Bounded::pop_batch`).
+    pub fn pop_batch(&self, max: usize, max_wait: Duration) -> Option<Vec<T>> {
+        debug_assert!(max >= 1);
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let first = loop {
+            if g.closed {
+                return None;
+            }
+            if let Some(v) = g.pop_best() {
+                break v;
+            }
+            g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
+        };
+        self.not_full.notify_one();
+        let mut batch = Vec::with_capacity(max.min(64));
+        batch.push(first);
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max {
+            if let Some(v) = g.pop_best() {
+                batch.push(v);
+                self.not_full.notify_one();
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, timeout) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap_or_else(|e| e.into_inner());
+            g = g2;
+            if timeout.timed_out() && g.q.is_empty() {
+                break;
+            }
+        }
+        Some(batch)
+    }
+
+    /// Take everything queued, best-first (shutdown shedding). Wakes
+    /// blocked pushers so they observe the closed flag.
+    pub fn drain(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::with_capacity(g.q.len());
+        while let Some(v) = g.pop_best() {
+            out.push(v);
+        }
+        drop(g);
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Close the queue: pushes fail from now on, poppers wake. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn in_us(us: u64) -> Option<Instant> {
+        Some(Instant::now() + Duration::from_micros(us))
+    }
+
+    #[test]
+    fn pops_in_class_then_deadline_then_fifo_order() {
+        let q = EdfQueue::new(16);
+        assert!(q.try_push(Class::BestEffort, in_us(10), "be-early").is_ok());
+        assert!(q.try_push(Class::Batch, in_us(500_000), "batch-late").is_ok());
+        assert!(q.try_push(Class::Interactive, None, "int-nodl-a").is_ok());
+        assert!(q.try_push(Class::Interactive, in_us(900_000), "int-dl").is_ok());
+        assert!(q.try_push(Class::Interactive, None, "int-nodl-b").is_ok());
+        assert!(q.try_push(Class::Batch, in_us(100_000), "batch-early").is_ok());
+        let b = q.pop_batch(16, Duration::from_millis(1)).unwrap();
+        // interactive first (deadlined before no-deadline, then FIFO),
+        // then batch by deadline, then best_effort — regardless of the
+        // best_effort entry having the earliest absolute deadline.
+        assert_eq!(
+            b,
+            vec!["int-dl", "int-nodl-a", "int-nodl-b", "batch-early", "batch-late", "be-early"]
+        );
+    }
+
+    #[test]
+    fn full_queue_displaces_strictly_lower_class_only() {
+        let q = EdfQueue::new(2);
+        assert!(matches!(q.try_push(Class::BestEffort, None, 1), Ok(EdfPush::Admitted)));
+        assert!(matches!(q.try_push(Class::Batch, None, 2), Ok(EdfPush::Admitted)));
+        // Same class as the worst entry → incoming is shed, not a sibling.
+        assert!(matches!(q.try_push(Class::BestEffort, None, 3), Err(TryPushError::Full(3))));
+        // Strictly higher class → the best_effort entry is displaced.
+        match q.try_push(Class::Interactive, None, 4) {
+            Ok(EdfPush::Displaced(Class::BestEffort, 1)) => {}
+            other => panic!("expected Displaced(BestEffort, 1), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2, "displacement keeps the queue at capacity");
+        // Now full of {interactive, batch}: another interactive displaces
+        // the batch entry; the queue can end up all-interactive, at which
+        // point nothing can displace anything.
+        match q.try_push(Class::Interactive, None, 5) {
+            Ok(EdfPush::Displaced(Class::Batch, 2)) => {}
+            other => panic!("expected Displaced(Batch, 2), got {other:?}"),
+        }
+        assert!(matches!(q.try_push(Class::Interactive, None, 6), Err(TryPushError::Full(6))));
+        assert_eq!(q.len_class(Class::Interactive), 2);
+        assert_eq!(q.len_class(Class::BestEffort), 0);
+    }
+
+    #[test]
+    fn within_class_eviction_takes_latest_deadline() {
+        let q = EdfQueue::new(2);
+        q.try_push(Class::BestEffort, in_us(1_000), "soon").unwrap();
+        q.try_push(Class::BestEffort, in_us(900_000), "late").unwrap();
+        match q.try_push(Class::Interactive, None, "int") {
+            Ok(EdfPush::Displaced(Class::BestEffort, v)) => {
+                assert_eq!(v, "late", "the entry with the most slack is shed first")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_deadline_sheds_before_deadlined_within_class() {
+        let q = EdfQueue::new(2);
+        q.try_push(Class::BestEffort, in_us(900_000), "deadlined").unwrap();
+        q.try_push(Class::BestEffort, None, "unconstrained").unwrap();
+        match q.try_push(Class::Batch, None, "batch") {
+            Ok(EdfPush::Displaced(Class::BestEffort, v)) => assert_eq!(v, "unconstrained"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_semantics_match_bounded() {
+        let q = EdfQueue::new(8);
+        q.try_push(Class::Interactive, None, 1).unwrap();
+        q.try_push(Class::Batch, None, 2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(Class::Interactive, None, 3), Err(TryPushError::Closed(3))));
+        assert!(q.push(Class::Interactive, None, 4).is_err());
+        assert!(q.pop_batch(4, Duration::from_secs(30)).is_none(), "closed ⇒ None immediately");
+        assert_eq!(q.drain(), vec![1, 2], "backlog drains best-first");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.len_class(Class::Batch), 0);
+    }
+
+    #[test]
+    fn pop_batch_deadline_flushes_partial() {
+        let q = EdfQueue::new(4);
+        q.try_push(Class::Batch, None, 7).unwrap();
+        let b = q.pop_batch(8, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![7]);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space_and_unblocks_on_close() {
+        let q = Arc::new(EdfQueue::new(1));
+        q.try_push(Class::Interactive, None, 0).unwrap();
+        let q2 = q.clone();
+        // Same class ⇒ cannot displace ⇒ parks until the pop frees a slot.
+        let pusher = std::thread::spawn(move || q2.push(Class::Interactive, None, 1).is_ok());
+        let b = q.pop_batch(1, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![0]);
+        assert!(pusher.join().unwrap());
+        let q2 = q.clone();
+        let parked = std::thread::spawn(move || q2.push(Class::Interactive, None, 2));
+        q.close();
+        assert_eq!(parked.join().unwrap(), Err(2), "close hands the value back");
+    }
+
+    #[test]
+    fn class_counts_track_occupancy() {
+        let q = EdfQueue::new(8);
+        for _ in 0..3 {
+            q.try_push(Class::BestEffort, None, 0u32).unwrap();
+        }
+        q.try_push(Class::Interactive, None, 1).unwrap();
+        assert_eq!(q.len_class(Class::BestEffort), 3);
+        assert_eq!(q.len_class(Class::Interactive), 1);
+        assert_eq!(q.len_class(Class::Batch), 0);
+        assert_eq!(q.len(), 4);
+        let b = q.pop_batch(2, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(q.len_class(Class::Interactive), 0, "best-first pop took the interactive");
+        assert_eq!(q.len_class(Class::BestEffort), 2);
+    }
+}

@@ -1,12 +1,13 @@
-//! The serving engine: non-blocking ticketed admission, bounded queues,
-//! backpressure, and a pool of batched workers over an [`Encoder`].
+//! The serving engine: non-blocking ticketed admission, a bounded EDF
+//! admission queue, backpressure, and a pool of batched workers over an
+//! [`Encoder`].
 //!
 //! ## Topology
 //!
 //! ```text
-//! clients ──try_submit/submit──▶ [admission queue]   bounded: queue_depth
-//!                                      │ pop_batch (max_batch / max_wait)
-//!                                   router
+//! clients ──try_submit/submit──▶ [EDF admission queue] bounded: queue_depth
+//!                                      │ pop_batch (max_batch / max_wait,
+//!                                   router              best-first order)
 //!                                      │ push (blocks when workers lag)
 //!                                 [batch queue]      bounded: 2 × workers
 //!                                      │ pop
@@ -21,6 +22,22 @@
 //! waiting — it never blocks. The blocking variant [`Engine::submit`]
 //! waits for *queue space only*, never for the result; results travel
 //! through [`Ticket`]s.
+//!
+//! ## Scheduling (EDF + priority classes)
+//!
+//! The admission queue is no longer FIFO: it orders submissions by
+//! (priority [`Class`], deadline, admission sequence) — see
+//! [`super::edf`]. Each request carries a class and an optional
+//! per-request deadline stamped at admission ([`Engine::try_submit_classed`];
+//! the plain [`Engine::try_submit`] defaults to `interactive` with the
+//! config-wide `deadline_us`). Under overload the queue sheds
+//! lowest-class-first: a strictly-higher-priority arrival evicts the worst
+//! queued entry, whose ticket resolves with [`ServeError::Preempted`]
+//! through the counted path. Expired-at-dequeue requests are still shed
+//! before execution with [`ServeError::DeadlineExceeded`].
+//!
+//! Accounting conserves at all times:
+//! `admitted = served + shed + failed + preempted (+ in flight)`.
 //!
 //! ## Admission-time validation
 //!
@@ -60,6 +77,8 @@ use crate::obs::{self, Hist, SpanId};
 use crate::resil::{self, fault, FaultPoint, Health};
 use crate::tensor::ops::argmax;
 
+use super::class::Class;
+use super::edf::{EdfPush, EdfQueue};
 use super::queue::{Bounded, TryPushError};
 use super::ticket::{ticket, AdmissionError, Resolver, ServeError, Ticket};
 
@@ -149,9 +168,14 @@ impl ServeConfig {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Argmax of the logits — the predicted label, not the priority class.
     pub class: usize,
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// Admission → batch-dispatch wait, µs (queue time).
+    pub queue_us: u64,
+    /// Forward-pass execution time, µs.
+    pub exec_us: u64,
     pub batch_size: usize,
 }
 
@@ -171,8 +195,11 @@ pub struct ServerStats {
     pub shed: AtomicU64,
     /// Admitted tickets resolved with `WorkerFailed` (supervised worker
     /// panic) or `DeadlineExceeded` (expired before execution). Together
-    /// with `served` and `shed` this conserves `admitted`.
+    /// with `served`, `shed`, and `preempted` this conserves `admitted`.
     pub failed: AtomicU64,
+    /// Admitted tickets evicted from the full EDF queue by a
+    /// strictly-higher-priority arrival (resolved `Preempted`).
+    pub preempted: AtomicU64,
     /// Gauge: current admission-queue depth (approximate under races).
     pub queue_depth: AtomicU64,
     /// High-water mark of the admission queue (≤ configured
@@ -182,6 +209,20 @@ pub struct ServerStats {
     pub latency_histogram: Hist,
     /// Admission → batch-dispatch wait distribution, ns.
     pub queue_wait_histogram: Hist,
+    /// Per-class slices of the counters above, indexed by
+    /// [`Class::index`]. `/metrics` renders these as
+    /// `spion_serve_class_*_total{class=...}` families.
+    pub class_admitted: [AtomicU64; Class::COUNT],
+    pub class_served: [AtomicU64; Class::COUNT],
+    pub class_rejected: [AtomicU64; Class::COUNT],
+    pub class_preempted: [AtomicU64; Class::COUNT],
+    /// Per-class deadline expiries (shed at dequeue, `DeadlineExceeded`).
+    pub class_expired: [AtomicU64; Class::COUNT],
+    /// Per-class shutdown sheds (`ShuttingDown` backlog resolutions).
+    pub class_shed: [AtomicU64; Class::COUNT],
+    /// Per-class end-to-end latency distributions, ns — the source of
+    /// `spion_http_request_seconds{class,quantile}`.
+    pub class_latency: [Hist; Class::COUNT],
 }
 
 impl ServerStats {
@@ -213,15 +254,19 @@ impl ServerStats {
 struct Submission {
     id: u64,
     tokens: Vec<i32>,
+    /// Priority class — the first component of the EDF scheduling key and
+    /// the index for per-class accounting.
+    class: Class,
     submitted: Instant,
-    /// Expiry instant when `ServeConfig::deadline_us > 0`; a worker sheds
-    /// the request unexecuted once this passes.
+    /// Expiry instant (per-request `deadline_us`, falling back to the
+    /// config-wide default); a worker sheds the request unexecuted once
+    /// this passes, and the EDF queue orders by it within a class.
     deadline: Option<Instant>,
     resolver: Resolver,
 }
 
 struct Core {
-    admission: Bounded<Submission>,
+    admission: EdfQueue<Submission>,
     stats: Arc<ServerStats>,
     next_id: AtomicU64,
     /// Model contract for admission-time validation.
@@ -260,7 +305,7 @@ impl Engine {
         let stats = Arc::new(ServerStats::default());
         let health = resil::new_health();
         let core = Arc::new(Core {
-            admission: Bounded::new(cfg.queue_depth),
+            admission: EdfQueue::new(cfg.queue_depth),
             stats: stats.clone(),
             next_id: AtomicU64::new(0),
             seq_len: encoder.params().seq_len(),
@@ -298,6 +343,8 @@ impl Engine {
                             // silent drop guards.
                             for sub in batch {
                                 core.stats.shed.fetch_add(1, Ordering::Relaxed);
+                                core.stats.class_shed[sub.class.index()]
+                                    .fetch_add(1, Ordering::Relaxed);
                                 sub.resolver.resolve(Err(ServeError::ShuttingDown));
                             }
                             break;
@@ -307,6 +354,7 @@ impl Engine {
                     // an explicit resolution — nothing vanishes.
                     for sub in core.admission.drain() {
                         core.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        core.stats.class_shed[sub.class.index()].fetch_add(1, Ordering::Relaxed);
                         sub.resolver.resolve(Err(ServeError::ShuttingDown));
                     }
                     core.stats.note_queue_len(0);
@@ -358,6 +406,12 @@ impl Engine {
         self.core.admission.len()
     }
 
+    /// Current admission backlog for one priority class (gauge) — the
+    /// class-share overload gate in `serve/http` reads this.
+    pub fn queue_len_class(&self, class: Class) -> usize {
+        self.core.admission.len_class(class)
+    }
+
     /// The shared health cell (`/healthz`): `ok` while serving normally,
     /// `degraded` after a worker exhausts its respawn budget, `draining`
     /// once shutdown starts.
@@ -379,30 +433,70 @@ impl Engine {
         Ok(())
     }
 
-    fn submission(&self, tokens: Vec<i32>) -> (Submission, Ticket) {
+    fn submission(
+        &self,
+        tokens: Vec<i32>,
+        class: Class,
+        deadline_us: Option<u64>,
+    ) -> (Submission, Ticket) {
         let id = self.core.next_id.fetch_add(1, Ordering::Relaxed);
         let (tk, resolver) = ticket(id);
         let submitted = Instant::now();
-        let deadline = (self.cfg.deadline_us > 0)
-            .then(|| submitted + Duration::from_micros(self.cfg.deadline_us));
-        (Submission { id, tokens, submitted, deadline, resolver }, tk)
+        // Per-request deadline overrides the config-wide default; 0 (either
+        // way) means unconstrained. checked_add guards absurd values whose
+        // Instant arithmetic would overflow — treated as no deadline.
+        let eff_us = deadline_us.unwrap_or(self.cfg.deadline_us);
+        let deadline =
+            (eff_us > 0).then(|| submitted.checked_add(Duration::from_micros(eff_us))).flatten();
+        (Submission { id, tokens, class, submitted, deadline, resolver }, tk)
+    }
+
+    /// Bookkeeping shared by both admission paths once the EDF queue has
+    /// accepted the submission (possibly by displacing a victim).
+    fn note_admitted(&self, class: Class, push: EdfPush<Submission>) {
+        self.core.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        self.core.stats.class_admitted[class.index()].fetch_add(1, Ordering::Relaxed);
+        if let EdfPush::Displaced(victim_class, victim) = push {
+            // The victim was admitted earlier; it now resolves through the
+            // counted Preempted path — conservation holds.
+            self.core.stats.preempted.fetch_add(1, Ordering::Relaxed);
+            self.core.stats.class_preempted[victim_class.index()].fetch_add(1, Ordering::Relaxed);
+            victim.resolver.resolve(Err(ServeError::Preempted));
+        }
+        self.core.stats.note_queue_len(self.core.admission.len());
     }
 
     /// Non-blocking admission: validates, then either enqueues (returning
     /// the ticket) or rejects with a typed error. Never waits — under
-    /// overload this returns `QueueFull` immediately.
+    /// overload this returns `QueueFull` immediately. Defaults to
+    /// `interactive` with the config-wide deadline; the HTTP front door
+    /// uses [`Engine::try_submit_classed`] for per-request class/deadline.
     pub fn try_submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        self.try_submit_classed(tokens, Class::Interactive, None)
+    }
+
+    /// Non-blocking admission with an explicit priority class and optional
+    /// per-request deadline (µs from admission; `None` = config default,
+    /// `Some(0)` = explicitly unconstrained). On a full queue a strictly
+    /// lower-class entry is evicted to make room (its ticket resolves
+    /// [`ServeError::Preempted`]); otherwise `QueueFull`.
+    pub fn try_submit_classed(
+        &self,
+        tokens: Vec<i32>,
+        class: Class,
+        deadline_us: Option<u64>,
+    ) -> std::result::Result<Ticket, AdmissionError> {
         let _sp = obs::span(SpanId::Admission);
         self.validate(&tokens)?;
-        let (sub, tk) = self.submission(tokens);
-        match self.core.admission.try_push(sub) {
-            Ok(()) => {
-                self.core.stats.admitted.fetch_add(1, Ordering::Relaxed);
-                self.core.stats.note_queue_len(self.core.admission.len());
+        let (sub, tk) = self.submission(tokens, class, deadline_us);
+        match self.core.admission.try_push(class, sub.deadline, sub) {
+            Ok(push) => {
+                self.note_admitted(class, push);
                 Ok(tk)
             }
             Err(TryPushError::Full(sub)) => {
                 self.core.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                self.core.stats.class_rejected[class.index()].fetch_add(1, Ordering::Relaxed);
                 drop(sub.resolver); // resolves the (discarded) ticket
                 Err(AdmissionError::QueueFull)
             }
@@ -416,13 +510,24 @@ impl Engine {
     /// Blocking admission: waits for *queue space*, never for the result.
     /// Returns as soon as the request is queued.
     pub fn submit(&self, tokens: Vec<i32>) -> std::result::Result<Ticket, AdmissionError> {
+        self.submit_classed(tokens, Class::Interactive, None)
+    }
+
+    /// Blocking admission with an explicit class/deadline (see
+    /// [`Engine::try_submit_classed`]); displaces immediately when allowed,
+    /// otherwise parks until space frees or the engine shuts down.
+    pub fn submit_classed(
+        &self,
+        tokens: Vec<i32>,
+        class: Class,
+        deadline_us: Option<u64>,
+    ) -> std::result::Result<Ticket, AdmissionError> {
         let _sp = obs::span(SpanId::Admission);
         self.validate(&tokens)?;
-        let (sub, tk) = self.submission(tokens);
-        match self.core.admission.push(sub) {
-            Ok(()) => {
-                self.core.stats.admitted.fetch_add(1, Ordering::Relaxed);
-                self.core.stats.note_queue_len(self.core.admission.len());
+        let (sub, tk) = self.submission(tokens, class, deadline_us);
+        match self.core.admission.push(class, sub.deadline, sub) {
+            Ok(push) => {
+                self.note_admitted(class, push);
                 Ok(tk)
             }
             Err(sub) => {
@@ -496,9 +601,11 @@ fn serve_worker(
             if sub.deadline.is_some_and(|d| Instant::now() >= d) {
                 resil::stats().note_deadline_shed();
                 stats.failed.fetch_add(1, Ordering::Relaxed);
+                stats.class_expired[sub.class.index()].fetch_add(1, Ordering::Relaxed);
                 sub.resolver.resolve(Err(ServeError::DeadlineExceeded));
                 continue;
             }
+            let exec_start = Instant::now();
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 if fault::trip(FaultPoint::WorkerPanic) {
                     panic!("fault injected: worker-panic");
@@ -542,11 +649,17 @@ fn serve_worker(
                     continue;
                 }
             };
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            // Same dispatch instant as the histogram loop above, so the
+            // reported queue time matches the recorded distribution.
+            let queue_us = dispatched.saturating_duration_since(sub.submitted).as_micros() as u64;
             let latency = sub.submitted.elapsed();
             stats.served.fetch_add(1, Ordering::Relaxed);
+            stats.class_served[sub.class.index()].fetch_add(1, Ordering::Relaxed);
             stats.total_latency_us.fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
             stats.max_latency_us.fetch_max(latency.as_micros() as u64, Ordering::Relaxed);
             stats.latency_histogram.record_duration(latency);
+            stats.class_latency[sub.class.index()].record_duration(latency);
             obs::record(SpanId::Request, latency);
             let _sp = obs::span(SpanId::TicketResolve);
             sub.resolver.resolve(Ok(Response {
@@ -554,6 +667,8 @@ fn serve_worker(
                 class: argmax(&logits),
                 logits,
                 latency,
+                queue_us,
+                exec_us,
                 batch_size: bsz,
             }));
         }
@@ -757,6 +872,114 @@ mod tests {
         eng.shutdown();
         assert_eq!(eng.stats().served.load(Ordering::Relaxed), 0);
         assert_eq!(eng.stats().failed.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn classed_submission_tracks_per_class_counters() {
+        let eng = Engine::start(mk_encoder(false), ServeConfig::default()).unwrap();
+        let t = eng.try_submit_classed(toks(), Class::Batch, None).unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.logits.len(), 4);
+        let t = eng.submit_classed(toks(), Class::BestEffort, None).unwrap();
+        t.wait().unwrap();
+        eng.shutdown();
+        let s = eng.stats();
+        assert_eq!(s.class_admitted[Class::Batch.index()].load(Ordering::Relaxed), 1);
+        assert_eq!(s.class_served[Class::Batch.index()].load(Ordering::Relaxed), 1);
+        assert_eq!(s.class_admitted[Class::BestEffort.index()].load(Ordering::Relaxed), 1);
+        assert_eq!(s.class_served[Class::BestEffort.index()].load(Ordering::Relaxed), 1);
+        assert_eq!(s.class_admitted[Class::Interactive.index()].load(Ordering::Relaxed), 0);
+        assert_eq!(s.class_latency[Class::Batch.index()].snapshot().count, 1);
+        assert_eq!(s.preempted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_config_default() {
+        // Config default says 1 µs (everything expires); a per-request
+        // Some(0) opts back out and gets served.
+        let eng = Engine::start(
+            mk_encoder(false),
+            ServeConfig { deadline_us: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let unconstrained = eng.try_submit_classed(toks(), Class::Interactive, Some(0)).unwrap();
+        assert!(unconstrained.wait().is_ok(), "Some(0) disables the config deadline");
+        // And the reverse: no config deadline, 1 µs per-request — expires.
+        let eng2 = Engine::start(
+            mk_encoder(false),
+            ServeConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let doomed = eng2.try_submit_classed(toks(), Class::Interactive, Some(1)).unwrap();
+        assert_eq!(doomed.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        eng.shutdown();
+        eng2.shutdown();
+        assert_eq!(
+            eng2.stats().class_expired[Class::Interactive.index()].load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn served_responses_carry_queue_and_exec_timings() {
+        let eng = Engine::start(mk_encoder(true), ServeConfig::default()).unwrap();
+        let r = eng.try_submit(toks()).unwrap().wait().unwrap();
+        eng.shutdown();
+        // Timings are µs-truncated and the model is tiny, so only sanity
+        // bounds hold unconditionally: both components fit in the e2e
+        // latency (plus 2 µs truncation slack).
+        assert!(r.queue_us + r.exec_us <= r.latency.as_micros() as u64 + 2);
+    }
+
+    #[test]
+    fn overload_preempts_lower_classes_only_and_conserves() {
+        // Tiny queue + single worker: a tight two-phase burst (best_effort
+        // first, then interactive) overfills admission, so the interactive
+        // flood must displace queued best_effort entries. The exact counts
+        // are timing-dependent; the invariants are not: interactive is
+        // never preempted, every admitted ticket resolves exactly once,
+        // and the counters conserve admitted.
+        let eng = Engine::start(
+            mk_encoder(true),
+            ServeConfig { queue_depth: 2, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut tickets = Vec::new();
+        for _ in 0..24 {
+            if let Ok(t) = eng.try_submit_classed(toks(), Class::BestEffort, None) {
+                tickets.push(t);
+            }
+        }
+        for _ in 0..24 {
+            if let Ok(t) = eng.try_submit_classed(toks(), Class::Interactive, None) {
+                tickets.push(t);
+            }
+        }
+        let (mut served, mut preempted, mut shed) = (0u64, 0u64, 0u64);
+        for t in &tickets {
+            match t.wait() {
+                Ok(_) => served += 1,
+                Err(ServeError::Preempted) => preempted += 1,
+                Err(ServeError::ShuttingDown) => shed += 1,
+                Err(other) => panic!("unexpected resolution without faults: {other}"),
+            }
+        }
+        eng.shutdown();
+        let s = eng.stats();
+        assert_eq!(served + preempted + shed, tickets.len() as u64, "exactly-once resolution");
+        assert_eq!(s.admitted.load(Ordering::Relaxed), tickets.len() as u64);
+        assert_eq!(s.served.load(Ordering::Relaxed), served);
+        assert_eq!(s.preempted.load(Ordering::Relaxed), preempted);
+        assert_eq!(
+            s.class_preempted[Class::Interactive.index()].load(Ordering::Relaxed),
+            0,
+            "nothing outranks interactive"
+        );
+        let per_class_preempted: u64 = Class::ALL
+            .iter()
+            .map(|c| s.class_preempted[c.index()].load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per_class_preempted, preempted, "per-class slices sum to the total");
     }
 
     #[test]

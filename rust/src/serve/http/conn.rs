@@ -1,0 +1,387 @@
+//! HTTP/1.1 connection handling: an incremental request parser with
+//! Content-Length bodies, hard header/body size limits, and a response
+//! writer with explicit keep-alive control.
+//!
+//! Deliberately small: no chunked transfer encoding (a request with
+//! `Transfer-Encoding` is rejected 400 — every client this repo cares
+//! about, including curl with `-d`, sends Content-Length), no TLS, no
+//! HTTP/2. What *is* here is exact: requests are framed byte-precisely so
+//! keep-alive and pipelined requests on one connection never bleed into
+//! each other (the parse buffer carries unconsumed bytes forward), and
+//! every malformed input maps to a typed status — 400 (syntax), 408 (idle
+//! mid-request), 413 (body over limit), 431 (header block over limit) —
+//! instead of a hung or torn connection.
+//!
+//! Reads run on a short (250 ms) socket timeout slice so a parked
+//! keep-alive connection notices the server's stop flag promptly during
+//! graceful drain, while the *effective* idle timeout stays the configured
+//! one.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Per-connection protocol limits (from the `[http]` config table).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpLimits {
+    /// Max bytes of request line + headers (431 beyond).
+    pub max_header_bytes: usize,
+    /// Max Content-Length accepted (413 beyond).
+    pub max_body_bytes: usize,
+    /// Requests served per connection before the server closes it.
+    pub keepalive_requests: usize,
+    /// Connection closed after this long with no new request.
+    pub idle_timeout: Duration,
+}
+
+/// One parsed request. `body` is exactly Content-Length bytes.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path with any `?query` suffix stripped.
+    pub path: String,
+    /// `0` for HTTP/1.0, `1` for HTTP/1.1.
+    pub minor_version: u8,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The client's keep-alive preference: HTTP/1.1 defaults to persistent
+    /// unless `Connection: close`; HTTP/1.0 defaults to close unless
+    /// `Connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self.header("connection").map(str::trim);
+        match self.minor_version {
+            0 => conn.is_some_and(|c| c.eq_ignore_ascii_case("keep-alive")),
+            _ => !conn.is_some_and(|c| c.eq_ignore_ascii_case("close")),
+        }
+    }
+}
+
+/// One response to write. Bodies are bytes so /metrics text and JSON both
+/// fit without re-encoding.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Adds a `Retry-After: <secs>` header (overload 503s).
+    pub retry_after: Option<u32>,
+}
+
+impl HttpResponse {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain",
+            body: body.into().into_bytes(),
+            retry_after: None,
+        }
+    }
+
+    pub fn json(status: u16, body: String) -> Self {
+        Self { status, content_type: "application/json", body: body.into_bytes(), retry_after: None }
+    }
+
+    pub fn with_retry_after(mut self, secs: u32) -> Self {
+        self.retry_after = Some(secs);
+        self
+    }
+}
+
+/// Canonical reason phrases for every status this server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Why [`Conn::read_request`] returned no request.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Clean EOF on a request boundary — the client is done.
+    Eof,
+    /// No new request arrived within the idle timeout (clean close).
+    IdleTimeout,
+    /// The server's stop flag was raised between requests (drain).
+    Stopped,
+    /// Socket error (including EOF mid-request).
+    Io(std::io::Error),
+    /// Protocol violation: respond with `status` and close (framing can
+    /// no longer be trusted).
+    Bad { status: u16, reason: String },
+}
+
+fn bad(status: u16, reason: impl Into<String>) -> ParseError {
+    ParseError::Bad { status, reason: reason.into() }
+}
+
+/// Read-timeout slice: how often a blocked read wakes to poll the stop
+/// flag and the idle deadline.
+const READ_SLICE: Duration = Duration::from_millis(250);
+
+/// One live connection: the stream plus the unconsumed byte buffer that
+/// makes keep-alive and pipelining byte-exact.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    limits: HttpLimits,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, limits: HttpLimits) -> std::io::Result<Self> {
+        // Accepted sockets can inherit non-blocking on some platforms;
+        // force the blocking + sliced-timeout mode the parser assumes.
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(READ_SLICE))?;
+        stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+        Ok(Self { stream, buf: Vec::with_capacity(4096), limits })
+    }
+
+    /// Parse the next request off the connection. Blocks (in `READ_SLICE`
+    /// increments) until a full request, EOF, idle timeout, stop, or a
+    /// protocol error.
+    pub fn read_request(&mut self, stop: &AtomicBool) -> Result<HttpRequest, ParseError> {
+        let idle_start = Instant::now();
+        // Phase 1: accumulate until the header terminator.
+        let head_end = loop {
+            if let Some(pos) = find_header_end(&self.buf) {
+                break pos;
+            }
+            if self.buf.len() > self.limits.max_header_bytes {
+                return Err(bad(431, format!(
+                    "request head exceeds {} bytes",
+                    self.limits.max_header_bytes
+                )));
+            }
+            match self.fill(stop, idle_start, self.buf.is_empty())? {
+                0 => {
+                    return if self.buf.is_empty() {
+                        Err(ParseError::Eof)
+                    } else {
+                        Err(ParseError::Io(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "connection closed mid-request",
+                        )))
+                    };
+                }
+                _ => continue,
+            }
+        };
+
+        let (head_len, sep_len) = head_end;
+        let head = String::from_utf8_lossy(&self.buf[..head_len]).into_owned();
+        let mut lines = head.split("\r\n").flat_map(|l| l.split('\n'));
+
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ').filter(|p| !p.is_empty());
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("");
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || target.is_empty() {
+            return Err(bad(400, format!("malformed request line: {request_line:?}")));
+        }
+        let minor_version = match version {
+            "HTTP/1.1" => 1,
+            "HTTP/1.0" => 0,
+            other => return Err(bad(400, format!("unsupported protocol version: {other:?}"))),
+        };
+        let path = target.split('?').next().unwrap_or(target).to_string();
+
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once(':') else {
+                return Err(bad(400, format!("malformed header line: {line:?}")));
+            };
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+
+        let req_head = HttpRequest { method, path, minor_version, headers, body: Vec::new() };
+        if req_head.header("transfer-encoding").is_some() {
+            return Err(bad(400, "transfer-encoding is not supported; send Content-Length"));
+        }
+        let content_len = match req_head.header("content-length") {
+            None => 0,
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| bad(400, format!("invalid content-length: {v:?}")))?,
+        };
+        if content_len > self.limits.max_body_bytes {
+            return Err(bad(413, format!(
+                "body of {} bytes exceeds the {}-byte limit",
+                content_len, self.limits.max_body_bytes
+            )));
+        }
+
+        // Phase 2: accumulate the body.
+        let body_start = head_len + sep_len;
+        while self.buf.len() < body_start + content_len {
+            match self.fill(stop, idle_start, false)? {
+                0 => {
+                    return Err(ParseError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-body",
+                    )))
+                }
+                _ => continue,
+            }
+        }
+
+        // Consume exactly this request; pipelined bytes stay buffered.
+        let mut req = req_head;
+        req.body = self.buf[body_start..body_start + content_len].to_vec();
+        self.buf.drain(..body_start + content_len);
+        Ok(req)
+    }
+
+    /// One sliced read. `idle_ok`: between requests a timeout slice checks
+    /// the stop flag and the idle deadline instead of failing.
+    fn fill(
+        &mut self,
+        stop: &AtomicBool,
+        idle_start: Instant,
+        idle_ok: bool,
+    ) -> Result<usize, ParseError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(0),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(n);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if idle_ok && stop.load(Ordering::Relaxed) {
+                        return Err(ParseError::Stopped);
+                    }
+                    if idle_start.elapsed() >= self.limits.idle_timeout {
+                        return if idle_ok {
+                            Err(ParseError::IdleTimeout)
+                        } else {
+                            Err(bad(408, "request not completed within the idle timeout"))
+                        };
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(ParseError::Io(e)),
+            }
+        }
+    }
+
+    /// Write a response; `keep_alive` controls the Connection header (and
+    /// must match what the caller then does with the connection).
+    pub fn write_response(
+        &mut self,
+        resp: &HttpResponse,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            resp.status,
+            reason_phrase(resp.status),
+            resp.content_type,
+            resp.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        if let Some(secs) = resp.retry_after {
+            head.push_str(&format!("Retry-After: {secs}\r\n"));
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(&resp.body)?;
+        self.stream.flush()
+    }
+}
+
+/// Locate the end of the header block: `(head_len, separator_len)` where
+/// `head_len` excludes the blank-line separator. Accepts `\r\n\r\n` and
+/// the bare-`\n\n` that hand-rolled test clients send.
+fn find_header_end(buf: &[u8]) -> Option<(usize, usize)> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| (p, 4));
+    let lf = buf.windows(2).position(|w| w == b"\n\n").map(|p| (p, 2));
+    match (crlf, lf) {
+        (Some((a, la)), Some((b, lb))) => {
+            if a <= b {
+                Some((a, la))
+            } else {
+                Some((b, lb))
+            }
+        }
+        (one, other) => one.or(other),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_end_detection() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some((14, 4)));
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\n\nrest"), Some((14, 2)));
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n"), None);
+        // Earlier terminator wins when both appear.
+        assert_eq!(find_header_end(b"a\n\nb\r\n\r\n"), Some((1, 2)));
+    }
+
+    #[test]
+    fn keep_alive_defaults_follow_version() {
+        let mk = |minor, conn: Option<&str>| HttpRequest {
+            method: "GET".into(),
+            path: "/".into(),
+            minor_version: minor,
+            headers: conn.map(|c| ("Connection".to_string(), c.to_string())).into_iter().collect(),
+            body: Vec::new(),
+        };
+        assert!(mk(1, None).wants_keep_alive());
+        assert!(!mk(1, Some("close")).wants_keep_alive());
+        assert!(!mk(0, None).wants_keep_alive());
+        assert!(mk(0, Some("keep-alive")).wants_keep_alive());
+        assert!(mk(0, Some("Keep-Alive")).wants_keep_alive(), "token is case-insensitive");
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_statuses() {
+        for s in [200u16, 400, 404, 405, 408, 413, 431, 500, 503, 504] {
+            assert_ne!(reason_phrase(s), "Unknown", "status {s}");
+        }
+    }
+
+    #[test]
+    fn response_builders() {
+        let r = HttpResponse::json(503, "{}".into()).with_retry_after(1);
+        assert_eq!(r.status, 503);
+        assert_eq!(r.retry_after, Some(1));
+        let t = HttpResponse::text(200, "ok\n");
+        assert_eq!(t.content_type, "text/plain");
+        assert_eq!(t.body, b"ok\n");
+    }
+}

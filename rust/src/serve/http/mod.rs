@@ -1,0 +1,523 @@
+//! The HTTP/1.1 front door: a dependency-free network layer between the
+//! OS and the ticketed [`Engine`](crate::serve::Engine).
+//!
+//! ## Architecture
+//!
+//! ```text
+//! clients ──▶ TcpListener ──▶ acceptor thread ──▶ [conn queue] bounded
+//!                                                      │ pop
+//!                                  conn worker 0 … N-1 (exec::ThreadPool)
+//!                                        │ keep-alive loop per connection
+//!                                     Router ──▶ handlers
+//!                                        │
+//!                         POST /v1/infer ──▶ Engine::try_submit_classed
+//!                         GET  /metrics  ──▶ obs::prom::render
+//!                         GET  /healthz  ──▶ ok | degraded | draining
+//! ```
+//!
+//! Everything is `std::net` + the repo's own primitives (the vendored
+//! crate set has no tokio): a blocking acceptor thread feeds accepted
+//! sockets into a bounded [`Bounded<TcpStream>`] queue drained by
+//! `conn_workers` threads, each running the keep-alive loop in
+//! [`conn`]. When the connection queue is full the acceptor answers 503
+//! inline — bounded memory at any accept rate, same philosophy as the
+//! engine's admission queue.
+//!
+//! ## Wire format (`POST /v1/infer`)
+//!
+//! Request: `{"tokens": [1, 2, ...], "class": "interactive" |
+//! "batch" | "best_effort", "deadline_us": 2000}` — `class` defaults to
+//! `interactive`, `deadline_us` to the engine config's default (0 opts
+//! out explicitly). Response 200: `{"id", "prediction", "logits",
+//! "class", "queue_us", "exec_us", "latency_us", "batch_size"}`. Errors
+//! are JSON too: 400 `bad_request` (with a `reason`), 503 `queue_full` /
+//! `class_share_exceeded` / `draining` / `preempted`, 504
+//! `deadline_exceeded`, 500 `worker_failed`.
+//!
+//! ## Class shares
+//!
+//! The `[http] class_share` knobs gate admission *at the front door*:
+//! class `c` is turned away (503, counted in the engine's per-class
+//! rejected slice) once its queue occupancy reaches
+//! `share[c] × queue_depth`. This keeps lower classes from filling the
+//! queue in the first place; the EDF queue's preemption handles whatever
+//! still collides inside.
+
+pub mod conn;
+pub mod router;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::exec::ThreadPool;
+use crate::obs::prom::{render, Sources};
+use crate::resil;
+use crate::util::json::Json;
+
+use super::class::Class;
+use super::engine::Engine;
+use super::queue::Bounded;
+use super::ticket::{AdmissionError, ServeError};
+
+pub use conn::{Conn, HttpLimits, HttpRequest, HttpResponse, ParseError};
+pub use router::Router;
+
+/// The `[http]` config table: front-door address, connection workers,
+/// protocol limits, and per-class queue shares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpConfig {
+    /// Bind address for the front door (`host:port`; port 0 = ephemeral).
+    /// `None` disables the HTTP server (in-process serving only).
+    pub addr: Option<String>,
+    /// Connection-worker threads. `0` = one per core.
+    pub conn_workers: usize,
+    /// Requests served per connection before the server closes it.
+    pub keepalive_requests: usize,
+    /// Close a connection idle for this long between requests, ms.
+    pub idle_timeout_ms: u64,
+    /// Max bytes of request line + headers (431 beyond).
+    pub max_header_bytes: usize,
+    /// Max request body bytes (413 beyond).
+    pub max_body_bytes: usize,
+    /// Per-class admission-queue share, indexed by [`Class::index`]: class
+    /// `c` is 503'd at the front door once it occupies
+    /// `class_share[c] × queue_depth` slots. Interactive conventionally
+    /// 1.0 (never gated).
+    pub class_share: [f64; Class::COUNT],
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: None,
+            conn_workers: 4,
+            keepalive_requests: 256,
+            idle_timeout_ms: 5_000,
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            class_share: [1.0, 0.9, 0.75],
+        }
+    }
+}
+
+impl HttpConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.keepalive_requests == 0 {
+            return Err("http.keepalive_requests must be ≥ 1".into());
+        }
+        if self.idle_timeout_ms == 0 {
+            return Err("http.idle_timeout_ms must be ≥ 1 (0 would close every connection)".into());
+        }
+        if self.max_header_bytes < 256 {
+            return Err("http.max_header_bytes must be ≥ 256 (a request line barely fits)".into());
+        }
+        if self.max_body_bytes == 0 {
+            return Err("http.max_body_bytes must be ≥ 1".into());
+        }
+        for c in Class::ALL {
+            let s = self.class_share[c.index()];
+            if !(s > 0.0 && s <= 1.0) || !s.is_finite() {
+                return Err(format!(
+                    "http.class_share for {c} must be in (0, 1], got {s}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn limits(&self) -> HttpLimits {
+        HttpLimits {
+            max_header_bytes: self.max_header_bytes,
+            max_body_bytes: self.max_body_bytes,
+            keepalive_requests: self.keepalive_requests,
+            idle_timeout: Duration::from_millis(self.idle_timeout_ms),
+        }
+    }
+
+    /// `conn_workers` with `0` resolved to the core count.
+    pub fn resolved_conn_workers(&self) -> usize {
+        crate::exec::ExecConfig::with_workers(self.conn_workers).resolved_workers()
+    }
+}
+
+/// The running HTTP server: acceptor thread + conn-worker pool.
+/// [`HttpServer::stop`] is graceful: stop accepting, finish in-flight
+/// requests (keep-alive loops close after their current response), join.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conn_q: Arc<Bounded<TcpStream>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    pool: Option<ThreadPool>,
+}
+
+impl HttpServer {
+    /// Bind `addr` and start serving `router`. The listener is blocking;
+    /// `stop()` wakes it with a self-connection.
+    pub fn start(addr: &str, cfg: &HttpConfig, router: Router) -> std::io::Result<Self> {
+        if let Err(e) = cfg.validate() {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidInput, e));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let workers = cfg.resolved_conn_workers();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conn_q = Arc::new(Bounded::<TcpStream>::new(4 * workers));
+        let router = Arc::new(router);
+        let limits = cfg.limits();
+
+        let acceptor = {
+            let stop = stop.clone();
+            let conn_q = conn_q.clone();
+            std::thread::Builder::new()
+                .name("spion-http-accept".into())
+                .spawn(move || accept_loop(listener, conn_q, stop))?
+        };
+
+        let pool = ThreadPool::new(workers);
+        for _ in 0..workers {
+            let conn_q = conn_q.clone();
+            let router = router.clone();
+            let stop = stop.clone();
+            pool.submit(move |_wid| {
+                while let Some(stream) = conn_q.pop() {
+                    handle_connection(stream, &router, limits, &stop);
+                }
+            });
+        }
+
+        Ok(Self { addr: local, stop, conn_q, acceptor: Some(acceptor), pool: Some(pool) })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, let every in-flight request finish
+    /// (keep-alive loops close after their current response), join all
+    /// threads. Idempotent; also runs on drop.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a throwaway self-connection; the
+        // acceptor re-checks the flag per iteration.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // No new connections can arrive; close the queue so workers exit
+        // once the backlog (including any in-flight keep-alive loop, which
+        // polls the stop flag) drains.
+        self.conn_q.close();
+        self.pool.take(); // ThreadPool::drop joins the workers
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_q: Arc<Bounded<TcpStream>>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                // Transient accept failure (e.g. fd pressure): back off
+                // briefly instead of spinning hot.
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+        };
+        if stop.load(Ordering::Relaxed) {
+            // Raced with shutdown (possibly the wake-up self-connection).
+            return;
+        }
+        if let Err(e) = conn_q.try_push(stream) {
+            // Connection queue full (or closed): shed at the socket with a
+            // best-effort 503 so the client fails fast instead of hanging.
+            let stream = match e {
+                super::queue::TryPushError::Full(s) | super::queue::TryPushError::Closed(s) => s,
+            };
+            if let Ok(mut c) = Conn::new(
+                stream,
+                HttpLimits {
+                    max_header_bytes: 1024,
+                    max_body_bytes: 0,
+                    keepalive_requests: 1,
+                    idle_timeout: Duration::from_millis(100),
+                },
+            ) {
+                let resp = HttpResponse::json(
+                    503,
+                    error_json("overloaded", "connection queue full"),
+                )
+                .with_retry_after(1);
+                let _ = c.write_response(&resp, false);
+            }
+        }
+    }
+}
+
+/// Per-connection keep-alive loop: parse → dispatch → respond, until the
+/// client closes, a limit trips, or the server drains.
+fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    limits: HttpLimits,
+    stop: &AtomicBool,
+) {
+    let Ok(mut conn) = Conn::new(stream, limits) else {
+        return;
+    };
+    let mut served = 0usize;
+    loop {
+        match conn.read_request(stop) {
+            Ok(req) => {
+                served += 1;
+                let resp = router.dispatch(&req);
+                // Drain or the per-connection cap ⇒ announce close; the
+                // client's own preference is honored otherwise.
+                let keep_alive = req.wants_keep_alive()
+                    && served < limits.keepalive_requests
+                    && !stop.load(Ordering::Relaxed);
+                if conn.write_response(&resp, keep_alive).is_err() || !keep_alive {
+                    return;
+                }
+            }
+            Err(ParseError::Bad { status, reason }) => {
+                // Framing can't be trusted past a protocol error: answer
+                // and close.
+                let resp = HttpResponse::json(status, error_json("bad_request", &reason));
+                let _ = conn.write_response(&resp, false);
+                return;
+            }
+            Err(ParseError::Eof | ParseError::IdleTimeout | ParseError::Stopped) => return,
+            Err(ParseError::Io(_)) => return,
+        }
+    }
+}
+
+fn error_json(error: &str, reason: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::Str(error.to_string())),
+        ("reason", Json::Str(reason.to_string())),
+    ])
+    .to_string_pretty()
+}
+
+/// The full API router: `/v1/infer` + `/metrics` + `/healthz`.
+pub fn api_router(engine: Arc<Engine>, sources: Sources, shares: [f64; Class::COUNT]) -> Router {
+    let metrics_sources = sources.clone();
+    let health = sources.health.clone();
+    Router::new()
+        .post("/v1/infer", move |req| infer_handler(&engine, shares, req))
+        .get("/metrics", move |_| metrics_response(&metrics_sources))
+        .get("/healthz", move |_| healthz_response(health.as_ref()))
+}
+
+/// The `--metrics-addr` alias router: only `/metrics` + `/healthz` (no
+/// inference surface on the observability port).
+pub fn metrics_router(sources: Sources) -> Router {
+    let health = sources.health.clone();
+    Router::new()
+        .get("/metrics", move |_| metrics_response(&sources))
+        .get("/healthz", move |_| healthz_response(health.as_ref()))
+}
+
+fn metrics_response(sources: &Sources) -> HttpResponse {
+    HttpResponse {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: render(sources).into_bytes(),
+        retry_after: None,
+    }
+}
+
+fn healthz_response(health: Option<&resil::Health>) -> HttpResponse {
+    // Always HTTP 200: orchestrators key off the body, and a draining
+    // process is healthy enough to say so (same contract as the old
+    // obs::http listener).
+    let h = health.map(|h| h.load(Ordering::Relaxed)).unwrap_or(resil::HEALTH_OK);
+    HttpResponse::text(200, format!("{}\n", resil::health_name(h)))
+}
+
+/// Parse + admit + wait: the whole request path for `POST /v1/infer`.
+fn infer_handler(engine: &Engine, shares: [f64; Class::COUNT], req: &HttpRequest) -> HttpResponse {
+    let parsed = match parse_infer_body(&req.body) {
+        Ok(p) => p,
+        Err(reason) => return HttpResponse::json(400, error_json("bad_request", &reason)),
+    };
+    let (tokens, class, deadline_us) = parsed;
+
+    // Class-share gate: turn the class away before it can fill the queue.
+    let depth = engine.config().queue_depth;
+    let limit = ((shares[class.index()] * depth as f64).floor() as usize).clamp(1, depth);
+    if limit < depth && engine.queue_len_class(class) >= limit {
+        let stats = engine.stats();
+        stats.rejected.fetch_add(1, Ordering::Relaxed);
+        stats.class_rejected[class.index()].fetch_add(1, Ordering::Relaxed);
+        return HttpResponse::json(
+            503,
+            error_json("class_share_exceeded", &format!("class {class} is over its queue share")),
+        )
+        .with_retry_after(1);
+    }
+
+    let ticket = match engine.try_submit_classed(tokens, class, deadline_us) {
+        Ok(t) => t,
+        Err(AdmissionError::QueueFull) => {
+            return HttpResponse::json(503, error_json("queue_full", "admission queue full"))
+                .with_retry_after(1)
+        }
+        Err(AdmissionError::ShuttingDown) => {
+            return HttpResponse::json(503, error_json("draining", "engine is shutting down"))
+        }
+        Err(AdmissionError::BadRequest { reason }) => {
+            return HttpResponse::json(400, error_json("bad_request", &reason))
+        }
+    };
+
+    match ticket.wait() {
+        Ok(resp) => {
+            let body = Json::obj(vec![
+                ("id", Json::Num(resp.id as f64)),
+                ("prediction", Json::Num(resp.class as f64)),
+                ("logits", Json::arr_f32(&resp.logits)),
+                ("class", Json::Str(class.name().to_string())),
+                ("queue_us", Json::Num(resp.queue_us as f64)),
+                ("exec_us", Json::Num(resp.exec_us as f64)),
+                ("latency_us", Json::Num(resp.latency.as_micros() as f64)),
+                ("batch_size", Json::Num(resp.batch_size as f64)),
+            ]);
+            HttpResponse::json(200, body.to_string_pretty())
+        }
+        Err(ServeError::Preempted) => HttpResponse::json(
+            503,
+            error_json("preempted", "evicted by a higher-priority request"),
+        )
+        .with_retry_after(1),
+        Err(ServeError::DeadlineExceeded) => {
+            HttpResponse::json(504, error_json("deadline_exceeded", "deadline expired in queue"))
+        }
+        Err(ServeError::ShuttingDown) => {
+            HttpResponse::json(503, error_json("draining", "engine shut down before execution"))
+        }
+        Err(ServeError::WorkerFailed { reason }) => {
+            HttpResponse::json(500, error_json("worker_failed", &reason))
+        }
+    }
+}
+
+type InferBody = (Vec<i32>, Class, Option<u64>);
+
+/// Validate the infer wire format. Every rejection names the field and
+/// what was wrong with it — clients debug from the 400 body alone.
+fn parse_infer_body(body: &[u8]) -> Result<InferBody, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid utf-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body; expected a json object with a \"tokens\" array".into());
+    }
+    let v = Json::parse(text).map_err(|e| format!("invalid json: {e}"))?;
+    let tokens_v = v.get("tokens").ok_or_else(|| "missing required field \"tokens\"".to_string())?;
+    let arr = tokens_v.as_arr().ok_or_else(|| "\"tokens\" must be an array".to_string())?;
+    let mut tokens = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let x = t.as_f64().ok_or_else(|| format!("tokens[{i}] is not a number"))?;
+        if !x.is_finite() || x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+            return Err(format!("tokens[{i}] = {x} is not an i32 token id"));
+        }
+        tokens.push(x as i32);
+    }
+    let class = match v.get("class") {
+        None => Class::Interactive,
+        Some(c) => {
+            let s = c.as_str().ok_or_else(|| "\"class\" must be a string".to_string())?;
+            Class::parse(s).ok_or_else(|| {
+                format!(
+                    "unknown class {s:?}; expected \"interactive\", \"batch\" or \"best_effort\""
+                )
+            })?
+        }
+    };
+    let deadline_us = match v.get("deadline_us") {
+        None => None,
+        Some(d) => {
+            let x = d.as_f64().ok_or_else(|| "\"deadline_us\" must be a number".to_string())?;
+            if !x.is_finite() || x.fract() != 0.0 || x < 0.0 || x > 1e15 {
+                return Err(format!("\"deadline_us\" = {x} is not a non-negative integer"));
+            }
+            Some(x as u64)
+        }
+    };
+    Ok((tokens, class, deadline_us))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_body_parses_full_and_minimal_forms() {
+        let (toks, class, dl) =
+            parse_infer_body(br#"{"tokens": [0, 1, 2], "class": "batch", "deadline_us": 2500}"#)
+                .unwrap();
+        assert_eq!(toks, vec![0, 1, 2]);
+        assert_eq!(class, Class::Batch);
+        assert_eq!(dl, Some(2500));
+        let (toks, class, dl) = parse_infer_body(br#"{"tokens": []}"#).unwrap();
+        assert!(toks.is_empty());
+        assert_eq!(class, Class::Interactive, "class defaults to interactive");
+        assert_eq!(dl, None, "deadline defaults to the engine config");
+    }
+
+    #[test]
+    fn infer_body_rejections_are_descriptive() {
+        let cases: [(&[u8], &str); 7] = [
+            (b"", "empty body"),
+            (b"{nope", "invalid json"),
+            (br#"{"class": "batch"}"#, "missing required field"),
+            (br#"{"tokens": "abc"}"#, "must be an array"),
+            (br#"{"tokens": [1.5]}"#, "not an i32"),
+            (br#"{"tokens": [1], "class": "urgent"}"#, "unknown class"),
+            (br#"{"tokens": [1], "deadline_us": -5}"#, "non-negative"),
+        ];
+        for (body, needle) in cases {
+            let err = parse_infer_body(body).unwrap_err();
+            assert!(err.contains(needle), "body {body:?}: {err}");
+        }
+        assert!(!parse_infer_body(&[0xff, 0xfe]).unwrap_err().is_empty(), "non-utf8 rejected");
+    }
+
+    #[test]
+    fn config_validation_catches_degenerate_knobs() {
+        assert!(HttpConfig::default().validate().is_ok());
+        let bad = HttpConfig { keepalive_requests: 0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("keepalive"));
+        let bad = HttpConfig { max_header_bytes: 10, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("max_header_bytes"));
+        let bad = HttpConfig { class_share: [1.0, 0.5, 0.0], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("class_share"));
+        let bad = HttpConfig { class_share: [1.0, 1.5, 0.5], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("class_share"));
+    }
+
+    #[test]
+    fn error_json_is_parseable() {
+        let s = error_json("queue_full", "admission queue full");
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "queue_full");
+        assert!(v.get("reason").unwrap().as_str().unwrap().contains("queue"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Method + path dispatch over the shared HTTP/1.1 core.
+//!
+//! Exact-match routing (no wildcards — three endpoints don't need them)
+//! with correct negative responses: an unknown path is 404, a known path
+//! with the wrong method is 405. Handlers are `Send + Sync` closures
+//! shared across connection workers via `Arc`, so one `Router` serves
+//! every connection concurrently.
+
+use std::sync::Arc;
+
+use super::conn::{HttpRequest, HttpResponse};
+
+/// A request handler. Runs on a connection-worker thread; blocking (e.g.
+/// on a ticket wait) is fine — it occupies only that connection's worker.
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+struct Route {
+    method: &'static str,
+    path: String,
+    handler: Handler,
+}
+
+/// Exact-match method+path router.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get<F>(self, path: &str, f: F) -> Self
+    where
+        F: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        self.route("GET", path, f)
+    }
+
+    pub fn post<F>(self, path: &str, f: F) -> Self
+    where
+        F: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        self.route("POST", path, f)
+    }
+
+    fn route<F>(mut self, method: &'static str, path: &str, f: F) -> Self
+    where
+        F: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        self.routes.push(Route { method, path: path.to_string(), handler: Arc::new(f) });
+        self
+    }
+
+    /// Dispatch one request: 404 for an unknown path, 405 when the path
+    /// exists under a different method.
+    pub fn dispatch(&self, req: &HttpRequest) -> HttpResponse {
+        let mut path_seen = false;
+        for r in &self.routes {
+            if r.path != req.path {
+                continue;
+            }
+            if r.method == req.method {
+                return (r.handler)(req);
+            }
+            path_seen = true;
+        }
+        if path_seen {
+            HttpResponse::text(405, "method not allowed\n")
+        } else {
+            HttpResponse::text(404, "not found\n")
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, path: &str) -> HttpRequest {
+        HttpRequest {
+            method: method.into(),
+            path: path.into(),
+            minor_version: 1,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_method_and_path() {
+        let router = Router::new()
+            .get("/healthz", |_| HttpResponse::text(200, "ok\n"))
+            .post("/v1/infer", |r| HttpResponse::text(200, format!("{} bytes", r.body.len())));
+        assert_eq!(router.dispatch(&req("GET", "/healthz")).status, 200);
+        assert_eq!(router.dispatch(&req("POST", "/v1/infer")).status, 200);
+        assert_eq!(router.dispatch(&req("POST", "/healthz")).status, 405, "path, wrong method");
+        assert_eq!(router.dispatch(&req("GET", "/nope")).status, 404);
+        assert_eq!(router.dispatch(&req("DELETE", "/v1/infer")).status, 405);
+    }
+}

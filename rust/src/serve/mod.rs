@@ -15,16 +15,27 @@
 //! crate set has no tokio. `workers = 1, kernel_workers = 1` reproduces
 //! the historical single-worker server bit-for-bit.
 //!
+//! Scheduling: the admission queue is EDF-ordered ([`edf`]) over priority
+//! [`Class`]es, shedding lowest-class-first under overload; the network
+//! front door is the dependency-free HTTP/1.1 server in [`http`]
+//! (`POST /v1/infer`, `GET /metrics`, `GET /healthz`).
+//!
 //! [`InferenceServer`] / [`Client::infer`] remain as a thin blocking
 //! compatibility shim over the engine (`server.rs`).
 
 pub mod batcher;
+pub mod class;
+pub mod edf;
 pub mod engine;
+pub mod http;
 pub mod queue;
 pub mod server;
 pub mod ticket;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use class::Class;
+pub use edf::{EdfPush, EdfQueue};
 pub use engine::{Engine, Response, ServeConfig, ServerStats, MAX_WAIT_CAP_US, MAX_WORKER_RESPAWNS};
+pub use http::{HttpConfig, HttpServer};
 pub use server::{Client, InferenceServer};
 pub use ticket::{AdmissionError, ServeError, Ticket, TicketResult};

@@ -61,6 +61,11 @@ pub enum ServeError {
     /// The request's `deadline_us` expired before any worker could start
     /// it; it was shed without running the forward.
     DeadlineExceeded,
+    /// Admitted, then evicted from the full admission queue by a
+    /// strictly-higher-priority request (EDF shed-lowest-class-first).
+    /// The request was never executed; retrying later or at a higher
+    /// class may succeed.
+    Preempted,
 }
 
 impl fmt::Display for ServeError {
@@ -72,6 +77,9 @@ impl fmt::Display for ServeError {
             }
             Self::DeadlineExceeded => {
                 write!(f, "request deadline expired before execution (shed unexecuted)")
+            }
+            Self::Preempted => {
+                write!(f, "preempted by a higher-priority request while queued (overload shed)")
             }
         }
     }
@@ -204,6 +212,8 @@ mod tests {
             class: 0,
             logits: vec![0.0],
             latency: Duration::ZERO,
+            queue_us: 0,
+            exec_us: 0,
             batch_size: 1,
         }
     }
@@ -262,5 +272,6 @@ mod tests {
         let w = ServeError::WorkerFailed { reason: "index out of bounds".into() };
         assert!(w.to_string().contains("index out of bounds"));
         assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(ServeError::Preempted.to_string().contains("preempted"));
     }
 }

@@ -292,6 +292,7 @@ fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
         sparsity,
         exec: ExecConfig { workers, kernel, ..Default::default() },
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),

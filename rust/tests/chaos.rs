@@ -354,6 +354,7 @@ fn micro_exp(steps: usize, workers: usize) -> ExperimentConfig {
         sparsity,
         exec: ExecConfig::with_workers(workers),
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),

@@ -37,6 +37,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         sparsity: SparsityConfig::new(kind, 16, 0.9),
         exec: Default::default(),
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),

@@ -51,6 +51,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         sparsity,
         exec: ExecConfig::with_workers(workers),
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),

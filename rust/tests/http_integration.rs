@@ -1,0 +1,518 @@
+//! HTTP front-door integration: raw `TcpStream` exchanges against a live
+//! [`HttpServer`] (no HTTP client library anywhere), plus an end-to-end
+//! SIGTERM drain through the shipped binary.
+//!
+//! Covers the acceptance gates of the front-door PR: socket inference is
+//! bit-identical to in-process submission, keep-alive pipelining works on
+//! one connection, protocol limits answer with the right status codes,
+//! overload sheds strictly lowest-class-first (witnessed through the
+//! per-class /metrics counters), and a SIGTERM mid-flood drains with the
+//! conservation line intact.
+
+use spion::model::{Encoder, ModelParams};
+use spion::obs::prom::Sources;
+use spion::serve::http::{api_router, HttpConfig, HttpServer};
+use spion::serve::{Class, Engine, ServeConfig, ServeError};
+use spion::util::json::Json;
+use spion::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Mirror of the manifest layout at an arbitrary small shape (same
+/// builder as tests/serve_integration.rs).
+fn random_params_shaped(
+    rng: &mut Rng,
+    layers: usize,
+    vocab: usize,
+    l: usize,
+    d: usize,
+    ffn: usize,
+    classes: usize,
+) -> ModelParams {
+    let mut flat: Vec<(Vec<usize>, Vec<f32>)> = Vec::new();
+    let mut mat = |r: usize, c: usize, rng: &mut Rng| {
+        let mut data = vec![0.0f32; r * c];
+        rng.fill_normal(&mut data, 0.3);
+        (vec![r, c], data)
+    };
+    flat.push(mat(vocab, d, rng));
+    flat.push(mat(l, d, rng));
+    for _ in 0..layers {
+        flat.push((vec![d], vec![1.0; d]));
+        flat.push((vec![d], vec![0.0; d]));
+        for _ in 0..4 {
+            flat.push(mat(d, d, rng));
+        }
+        flat.push((vec![d], vec![1.0; d]));
+        flat.push((vec![d], vec![0.0; d]));
+        flat.push(mat(d, ffn, rng));
+        flat.push((vec![ffn], vec![0.0; ffn]));
+        flat.push(mat(ffn, d, rng));
+        flat.push((vec![d], vec![0.0; d]));
+    }
+    flat.push(mat(d, classes, rng));
+    flat.push((vec![classes], vec![0.0; classes]));
+    ModelParams::from_flat(&flat, layers).unwrap()
+}
+
+/// Fast model (L = 16) for request-path tests.
+fn small_encoder(rng: &mut Rng) -> Encoder {
+    Encoder::new(random_params_shaped(rng, 2, 12, 16, 8, 32, 4), 2)
+}
+
+fn small_toks() -> Vec<i32> {
+    (0..16).map(|i| (i % 12) as i32).collect()
+}
+
+/// Slow model (L = 128): one dense forward is orders of magnitude longer
+/// than a submission, so overload scenarios are controllable.
+fn big_encoder(rng: &mut Rng) -> Encoder {
+    Encoder::new(random_params_shaped(rng, 2, 20, 128, 32, 64, 4), 2)
+}
+
+fn big_toks(rng: &mut Rng) -> Vec<i32> {
+    (0..128).map(|_| rng.below(20) as i32).collect()
+}
+
+fn start_server(engine: &Arc<Engine>, cfg: &HttpConfig) -> HttpServer {
+    let sources = Sources {
+        server: Some(engine.stats().clone()),
+        ops: Some(engine.op_tally()),
+        health: Some(engine.health()),
+    };
+    let router = api_router(engine.clone(), sources, cfg.class_share);
+    HttpServer::start("127.0.0.1:0", cfg, router).expect("bind ephemeral front door")
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(addr).expect("connect front door");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    let r = BufReader::new(s.try_clone().expect("clone stream"));
+    (s, r)
+}
+
+fn write_infer(s: &mut TcpStream, body: &str) {
+    write!(
+        s,
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+}
+
+/// Read exactly one response off the stream: status, lowercased headers,
+/// Content-Length-delimited body.
+fn read_response(r: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    assert!(line.starts_with("HTTP/1.1 "), "status line: {line:?}");
+    let status: u16 =
+        line.split_whitespace().nth(1).expect("status code").parse().expect("numeric status");
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let t = h.trim_end().to_string();
+        if t.is_empty() {
+            break;
+        }
+        let (k, v) = t.split_once(':').expect("header colon");
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().expect("content-length"))
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("body");
+    (status, headers, body)
+}
+
+/// One-shot GET over its own connection.
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let (mut s, mut r) = connect(addr);
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut r);
+    (status, String::from_utf8(body).expect("utf-8 body"))
+}
+
+fn tokens_json(toks: &[i32]) -> String {
+    let items: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Pull one sample value out of a Prometheus exposition.
+fn metric_value(text: &str, line_prefix: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(line_prefix))
+        .unwrap_or_else(|| panic!("metric {line_prefix} missing from exposition"))
+        .rsplit_once(' ')
+        .expect("sample shape")
+        .1
+        .parse()
+        .expect("numeric sample")
+}
+
+#[test]
+fn socket_infer_is_bit_identical_to_in_process() {
+    let mut rng = Rng::new(31);
+    let engine = Arc::new(
+        Engine::start(
+            small_encoder(&mut rng),
+            ServeConfig { queue_depth: 32, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let srv = start_server(&engine, &HttpConfig::default());
+    let toks = small_toks();
+    let expect = engine.try_submit(toks.clone()).unwrap().wait().unwrap();
+
+    let (mut s, mut r) = connect(srv.addr());
+    write_infer(&mut s, &format!("{{\"tokens\": {}}}", tokens_json(&toks)));
+    let (status, _, body) = read_response(&mut r);
+    assert_eq!(status, 200, "infer body: {}", String::from_utf8_lossy(&body));
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).expect("response is json");
+    // The JSON float round-trip is exact: f32 → f64 is exact, and the
+    // emitter prints shortest-roundtrip f64 — so logits compare by bits.
+    let logits: Vec<f32> = v
+        .get("logits")
+        .and_then(|l| l.as_arr())
+        .expect("logits array")
+        .iter()
+        .map(|x| x.as_f64().expect("numeric logit") as f32)
+        .collect();
+    assert_eq!(logits.len(), expect.logits.len());
+    for (a, b) in logits.iter().zip(&expect.logits) {
+        assert_eq!(a.to_bits(), b.to_bits(), "socket logits diverge from in-process");
+    }
+    assert_eq!(
+        v.get("prediction").and_then(|p| p.as_f64()).expect("prediction") as usize,
+        expect.class
+    );
+    assert_eq!(v.get("class").and_then(|c| c.as_str()), Some("interactive"));
+    assert!(v.get("queue_us").and_then(|x| x.as_f64()).is_some(), "queue timing missing");
+    assert!(v.get("exec_us").and_then(|x| x.as_f64()).is_some(), "exec timing missing");
+
+    srv.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn keep_alive_pipelines_three_requests_on_one_connection() {
+    let mut rng = Rng::new(32);
+    let engine = Arc::new(
+        Engine::start(
+            small_encoder(&mut rng),
+            ServeConfig { queue_depth: 32, max_batch: 4, workers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let srv = start_server(&engine, &HttpConfig::default());
+    let (mut s, mut r) = connect(srv.addr());
+    // True pipelining: all three requests hit the wire before the first
+    // response is read — the parser must carry leftover buffered bytes
+    // across requests.
+    for _ in 0..3 {
+        write_infer(&mut s, &format!("{{\"tokens\": {}}}", tokens_json(&small_toks())));
+    }
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        let (status, headers, body) = read_response(&mut r);
+        assert_eq!(status, 200, "pipelined request {i}");
+        let conn = headers.iter().find(|(k, _)| k == "connection").map(|(_, v)| v.as_str());
+        assert_eq!(conn, Some("keep-alive"), "request {i} must keep the connection");
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        ids.push(v.get("id").and_then(|x| x.as_f64()).expect("id") as u64);
+    }
+    ids.dedup();
+    assert_eq!(ids.len(), 3, "each pipelined request got its own ticket");
+    assert_eq!(engine.stats().served.load(std::sync::atomic::Ordering::Relaxed), 3);
+    srv.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn oversized_body_gets_413_and_closes() {
+    let mut rng = Rng::new(33);
+    let engine = Arc::new(Engine::start(small_encoder(&mut rng), ServeConfig::default()).unwrap());
+    let cfg = HttpConfig { max_body_bytes: 64, ..Default::default() };
+    let srv = start_server(&engine, &cfg);
+    let (mut s, mut r) = connect(srv.addr());
+    // Declaring a body over the cap is rejected from the header alone —
+    // the payload never needs to be read.
+    let huge = "x".repeat(1024);
+    write_infer(&mut s, &huge);
+    let (status, headers, body) = read_response(&mut r);
+    assert_eq!(status, 413, "body: {}", String::from_utf8_lossy(&body));
+    let conn = headers.iter().find(|(k, _)| k == "connection").map(|(_, v)| v.as_str());
+    assert_eq!(conn, Some("close"), "framing is untrusted after a protocol error");
+    // The server closes without reading the oversized payload, which may
+    // surface client-side as a clean EOF or a reset — both prove the close.
+    let mut rest = Vec::new();
+    match r.read_to_end(&mut rest) {
+        Ok(_) => assert!(rest.is_empty(), "no bytes follow the 413"),
+        Err(e) => assert_eq!(e.kind(), std::io::ErrorKind::ConnectionReset, "unexpected: {e}"),
+    }
+    srv.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_typed_400s() {
+    let mut rng = Rng::new(34);
+    let engine = Arc::new(Engine::start(small_encoder(&mut rng), ServeConfig::default()).unwrap());
+    let srv = start_server(&engine, &HttpConfig::default());
+    // (body, expected reason fragment)
+    let cases = [
+        ("{nope", "invalid json"),
+        ("{\"class\": \"batch\"}", "missing required field"),
+        ("{\"tokens\": [1], \"class\": \"urgent\"}", "unknown class"),
+    ];
+    for (bad, needle) in cases {
+        let (mut s, mut r) = connect(srv.addr());
+        write_infer(&mut s, bad);
+        let (status, _, body) = read_response(&mut r);
+        assert_eq!(status, 400, "case {bad:?}");
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).expect("error body is json");
+        assert_eq!(v.get("error").and_then(|e| e.as_str()), Some("bad_request"));
+        let reason = v.get("reason").and_then(|x| x.as_str()).expect("typed reason");
+        assert!(reason.contains(needle), "case {bad:?}: reason {reason:?}");
+    }
+    // Unknown path and wrong method get the right negatives too.
+    let (status, _) = http_get(srv.addr(), "/nope");
+    assert_eq!(status, 404);
+    let (status, _) = http_get(srv.addr(), "/v1/infer");
+    assert_eq!(status, 405, "GET on a POST route");
+    srv.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn overload_sheds_best_effort_strictly_before_interactive() {
+    let mut rng = Rng::new(35);
+    let engine = Arc::new(
+        Engine::start(
+            big_encoder(&mut rng),
+            ServeConfig { queue_depth: 4, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let srv = start_server(&engine, &HttpConfig::default());
+
+    // Occupy the single worker and wait for the pop, so the queue below
+    // is stable while we fill it (one dense L=128 forward ≫ setup cost).
+    let busy = engine.try_submit(big_toks(&mut rng)).unwrap();
+    while engine.queue_len() > 0 {
+        std::thread::yield_now();
+    }
+    // Fill the queue with best-effort, then flood interactive: every
+    // interactive arrival must displace a queued best-effort entry.
+    let be: Vec<_> = (0..4)
+        .map(|_| engine.try_submit_classed(big_toks(&mut rng), Class::BestEffort, None).unwrap())
+        .collect();
+    let hi: Vec<_> = (0..4)
+        .map(|_| engine.try_submit_classed(big_toks(&mut rng), Class::Interactive, None).unwrap())
+        .collect();
+    let mut preempted = 0;
+    for t in &be {
+        match t.wait() {
+            Err(ServeError::Preempted) => preempted += 1,
+            other => panic!("best-effort must be preempted, got {other:?}"),
+        }
+    }
+    assert_eq!(preempted, 4, "every queued best-effort displaced");
+    assert!(busy.wait().is_ok());
+    for t in &hi {
+        assert!(t.wait().is_ok(), "interactive is never shed while lower classes queue");
+    }
+
+    // The shed order is witnessed over the socket: per-class counters in
+    // the Prometheus exposition.
+    let (status, metrics) = http_get(srv.addr(), "/metrics");
+    assert_eq!(status, 200);
+    let be_pre = metric_value(&metrics, "spion_serve_class_preempted_total{class=\"best_effort\"}");
+    let hi_pre = metric_value(&metrics, "spion_serve_class_preempted_total{class=\"interactive\"}");
+    assert_eq!(be_pre, 4.0, "best-effort preemptions visible in /metrics");
+    assert_eq!(hi_pre, 0.0, "interactive is never preempted");
+    let hi_served =
+        metric_value(&metrics, "spion_serve_class_served_total{class=\"interactive\"}");
+    assert_eq!(hi_served, 5.0, "busy + 4 displacing requests served");
+    // Per-class request-latency summary families render.
+    assert!(
+        metrics.contains("spion_http_request_seconds{class=\"interactive\",quantile=\"0.5\"}"),
+        "per-class latency summary missing"
+    );
+
+    // Exactly-once conservation across the whole flood.
+    use std::sync::atomic::Ordering::Relaxed;
+    let stats = engine.stats();
+    let admitted = stats.admitted.load(Relaxed);
+    let resolved = stats.served.load(Relaxed) + stats.preempted.load(Relaxed);
+    assert_eq!(admitted, resolved, "admitted = served + preempted");
+    srv.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn class_share_gate_turns_batch_away_at_the_door() {
+    let mut rng = Rng::new(36);
+    let engine = Arc::new(
+        Engine::start(
+            big_encoder(&mut rng),
+            ServeConfig { queue_depth: 8, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    // batch may hold at most floor(0.25 × 8) = 2 admission slots.
+    let cfg = HttpConfig { class_share: [1.0, 0.25, 0.25], ..Default::default() };
+    let srv = start_server(&engine, &cfg);
+    let busy = engine.try_submit(big_toks(&mut rng)).unwrap();
+    while engine.queue_len() > 0 {
+        std::thread::yield_now();
+    }
+    let queued: Vec<_> = (0..2)
+        .map(|_| engine.try_submit_classed(big_toks(&mut rng), Class::Batch, None).unwrap())
+        .collect();
+    // The third batch request arrives over the socket and must be turned
+    // away by the share gate even though the queue has free depth.
+    let (mut s, mut r) = connect(srv.addr());
+    write_infer(
+        &mut s,
+        &format!("{{\"tokens\": {}, \"class\": \"batch\"}}", tokens_json(&big_toks(&mut rng))),
+    );
+    let (status, headers, body) = read_response(&mut r);
+    assert_eq!(status, 503, "body: {}", String::from_utf8_lossy(&body));
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(v.get("error").and_then(|e| e.as_str()), Some("class_share_exceeded"));
+    assert!(
+        headers.iter().any(|(k, v)| k == "retry-after" && v == "1"),
+        "shed responses carry Retry-After"
+    );
+    assert!(busy.wait().is_ok());
+    for t in queued {
+        assert!(t.wait().is_ok());
+    }
+    srv.stop();
+    engine.shutdown();
+}
+
+/// End-to-end through the shipped binary: SIGTERM mid-flood drains
+/// gracefully and prints the conservation line.
+#[test]
+fn sigterm_mid_flood_drains_with_conservation() {
+    let dir = std::env::temp_dir().join(format!("spion-http-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("ck.bin");
+    let bin = env!("CARGO_BIN_EXE_spion");
+    let train = std::process::Command::new(bin)
+        .args(["train", "--preset", "tiny", "--backend", "native", "--steps", "2"])
+        .arg("--checkpoint-out")
+        .arg(&ck)
+        .output()
+        .expect("spawn train");
+    assert!(train.status.success(), "train failed:\n{}", String::from_utf8_lossy(&train.stderr));
+
+    let mut serve = std::process::Command::new(bin)
+        .args(["serve", "--preset", "tiny", "--checkpoint"])
+        .arg(&ck)
+        .args([
+            "--requests",
+            "0",
+            "--http-addr",
+            "127.0.0.1:0",
+            "--hold-ms",
+            "60000",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let stdout = serve.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut addr: Option<SocketAddr> = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+        if let Some(rest) = line.trim().strip_prefix("http listening on http://") {
+            addr = Some(rest.parse().expect("socket addr in banner"));
+        }
+        if line.starts_with("holding for") {
+            break;
+        }
+        line.clear();
+    }
+    let addr = addr.expect("serve never printed the http banner");
+
+    // tiny preset: L = 128, vocab 20.
+    let toks: Vec<i32> = (0..128).map(|i| (i % 20) as i32).collect();
+    let body = format!("{{\"tokens\": {}}}", tokens_json(&toks));
+    // A few synchronous requests guarantee admitted > 0 before the drain.
+    for _ in 0..2 {
+        let (mut s, mut r) = connect(addr);
+        write_infer(&mut s, &body);
+        let (status, _, _) = read_response(&mut r);
+        assert_eq!(status, 200, "warm-up infer failed");
+    }
+    // Flood from background threads with mixed classes while SIGTERM
+    // lands; responses and connection errors are both acceptable — the
+    // conservation line is the oracle.
+    let flood: Vec<_> = (0..4)
+        .map(|i| {
+            let class = if i % 2 == 0 { "interactive" } else { "best_effort" };
+            let body =
+                format!("{{\"tokens\": {}, \"class\": \"{class}\"}}", tokens_json(&toks));
+            std::thread::spawn(move || {
+                for _ in 0..8 {
+                    let Ok(mut s) = TcpStream::connect(addr) else { return };
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    if write!(
+                        s,
+                        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                        body.len()
+                    )
+                    .is_err()
+                    {
+                        return;
+                    }
+                    let mut sink = Vec::new();
+                    let _ = s.read_to_end(&mut sink);
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(100));
+    let kill = std::process::Command::new("kill")
+        .args(["-TERM", &serve.id().to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(kill.success(), "kill -TERM failed");
+    for h in flood {
+        let _ = h.join();
+    }
+
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    let status = serve.wait().expect("wait serve");
+    assert!(status.success(), "serve exited non-zero; tail:\n{rest}");
+    assert!(rest.contains("SIGTERM received"), "drain path not taken; tail:\n{rest}");
+    let drain = rest
+        .lines()
+        .find(|l| l.starts_with("drain complete:"))
+        .unwrap_or_else(|| panic!("conservation line missing; tail:\n{rest}"));
+    // "drain complete: R/A admitted tickets resolved (...)"
+    let frac = drain
+        .strip_prefix("drain complete: ")
+        .and_then(|s| s.split_whitespace().next())
+        .expect("resolved/admitted fraction");
+    let (resolved, admitted) = frac.split_once('/').expect("R/A shape");
+    let resolved: u64 = resolved.parse().unwrap();
+    let admitted: u64 = admitted.parse().unwrap();
+    assert!(admitted >= 2, "warm-up requests were admitted: {drain}");
+    assert_eq!(resolved, admitted, "every admitted ticket resolved exactly once: {drain}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

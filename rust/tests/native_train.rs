@@ -142,6 +142,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         sparsity,
         exec: spion::exec::ExecConfig::with_workers(workers),
         serve: Default::default(),
+        http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
         artifacts_dir: "artifacts".into(),
@@ -256,6 +257,7 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
             sparsity: SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 16, 0.9),
             exec: Default::default(),
             serve: Default::default(),
+            http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
             artifacts_dir: "artifacts".into(),

@@ -114,13 +114,14 @@ fn metrics_endpoint_serves_prometheus_text() {
         ServeConfig { queue_depth: 32, max_batch: 4, workers: 1, ..Default::default() },
     )
     .unwrap();
-    let srv = obs::http::MetricsServer::start(
+    let srv = spion::serve::http::HttpServer::start(
         "127.0.0.1:0",
-        obs::prom::Sources {
+        &spion::serve::http::HttpConfig::default(),
+        spion::serve::http::metrics_router(obs::prom::Sources {
             server: Some(engine.stats().clone()),
             ops: Some(engine.op_tally()),
             health: Some(engine.health()),
-        },
+        }),
     )
     .unwrap();
     let addr = srv.addr();
@@ -132,7 +133,7 @@ fn metrics_endpoint_serves_prometheus_text() {
 
     let resp = http_get(addr, "/metrics");
     let (head, body) = resp.split_once("\r\n\r\n").expect("header/body split");
-    assert!(head.starts_with("HTTP/1.0 200"), "bad status: {head}");
+    assert!(head.starts_with("HTTP/1.1 200"), "bad status: {head}");
     assert!(head.contains("text/plain"), "bad content type: {head}");
     for family in [
         "spion_obs_enabled",
@@ -171,16 +172,16 @@ fn metrics_endpoint_serves_prometheus_text() {
     }
 
     let health = http_get(addr, "/healthz");
-    assert!(health.starts_with("HTTP/1.0 200"));
+    assert!(health.starts_with("HTTP/1.1 200"));
     assert!(health.ends_with("ok\n"));
     let missing = http_get(addr, "/nope");
-    assert!(missing.starts_with("HTTP/1.0 404"));
+    assert!(missing.starts_with("HTTP/1.1 404"));
 
     // Shutdown flips the shared health cell to draining — /healthz and the
     // gauge follow, still HTTP 200 (orchestrators key off the body).
     engine.shutdown();
     let health = http_get(addr, "/healthz");
-    assert!(health.starts_with("HTTP/1.0 200"));
+    assert!(health.starts_with("HTTP/1.1 200"));
     assert!(health.ends_with("draining\n"), "post-shutdown health: {health}");
     let resp = http_get(addr, "/metrics");
     assert!(
@@ -264,7 +265,7 @@ fn serve_binary_exposes_metrics_and_trace() {
     assert!(workload_done, "serve never reached the hold window");
 
     let resp = http_get(addr, "/metrics");
-    assert!(resp.starts_with("HTTP/1.0 200"), "bad scrape: {resp}");
+    assert!(resp.starts_with("HTTP/1.1 200"), "bad scrape: {resp}");
     for family in
         ["spion_span_seconds", "spion_serve_served_total", "spion_request_latency_seconds"]
     {

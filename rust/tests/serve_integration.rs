@@ -337,6 +337,74 @@ fn big_l_kernel_parallelism_bit_identical_to_serial() {
 }
 
 #[test]
+fn preemption_resolves_a_blocked_wait_timeout_exactly_once() {
+    // Regression guard for the EDF shed path: a ticket evicted from the
+    // admission queue by a higher class must wake a client already parked
+    // in `wait_timeout` with the typed `Preempted` error — exactly once,
+    // not a timeout, not a hang, not a double resolve.
+    use spion::serve::{Class, ServeError};
+    let mut rng = Rng::new(26);
+    let engine = Engine::start(
+        big_encoder(&mut rng, false),
+        ServeConfig { queue_depth: 2, max_batch: 1, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    // Occupy the single worker, and wait for the pop so the queue is
+    // empty and stable: one dense L=128 forward is orders of magnitude
+    // longer than the submissions below.
+    let busy = engine.try_submit(big_toks(&mut rng)).unwrap();
+    while engine.queue_len_class(Class::Interactive) > 0 {
+        std::thread::yield_now();
+    }
+    // Two best-effort requests fill the queue; `victim` (lower seq) is
+    // evicted second, after `filler`.
+    let victim = engine.try_submit_classed(big_toks(&mut rng), Class::BestEffort, None).unwrap();
+    let filler = engine.try_submit_classed(big_toks(&mut rng), Class::BestEffort, None).unwrap();
+    // Park a client in a long timed wait on the victim before the
+    // preemption fires.
+    let waiter = std::thread::spawn(move || {
+        let first = victim.wait_timeout(Duration::from_secs(30));
+        // A resolved ticket stays resolved with the same outcome.
+        let again = victim.wait_timeout(Duration::ZERO);
+        (first, again)
+    });
+    for _ in 0..64 {
+        std::thread::yield_now(); // let the waiter actually park
+    }
+    // Interactive arrivals displace the queued best-effort entries
+    // (worst key first: filler, then victim).
+    let hi: Vec<_> = (0..2)
+        .map(|_| engine.try_submit_classed(big_toks(&mut rng), Class::Interactive, None).unwrap())
+        .collect();
+    let (first, again) = waiter.join().unwrap();
+    match first {
+        Some(Err(ServeError::Preempted)) => {}
+        other => panic!("victim must resolve Preempted, got {other:?}"),
+    }
+    match again {
+        Some(Err(ServeError::Preempted)) => {}
+        other => panic!("second wait must repeat the same resolution, got {other:?}"),
+    }
+    match filler.wait() {
+        Err(ServeError::Preempted) => {}
+        other => panic!("filler must resolve Preempted, got {other:?}"),
+    }
+    assert!(busy.wait().is_ok());
+    for t in hi {
+        assert!(t.wait().is_ok(), "displacing requests are served");
+    }
+    let stats = engine.stats();
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(stats.preempted.load(Relaxed), 2);
+    assert_eq!(stats.class_preempted[Class::BestEffort.index()].load(Relaxed), 2);
+    assert_eq!(stats.class_preempted[Class::Interactive.index()].load(Relaxed), 0);
+    engine.shutdown();
+    // Conservation: admitted = served + preempted, every ticket exactly once.
+    assert_eq!(stats.admitted.load(Relaxed), 5);
+    assert_eq!(stats.served.load(Relaxed), 3);
+}
+
+#[test]
 fn bad_requests_are_typed_and_do_not_kill_workers() {
     let mut rng = Rng::new(25);
     let engine = Engine::start(big_encoder(&mut rng, false), ServeConfig::default()).unwrap();

@@ -1,0 +1,222 @@
+//! Dist wire-protocol cost: what one multi-rank training step pays for
+//! serialization and the localhost socket hop, isolated from compute.
+//!
+//! Two axes per message shape:
+//! * **codec** — `encode` + `decode` only (pure CPU: framing, no
+//!   syscalls), the lower bound a smarter transport could not beat;
+//! * **socket** — `write_frame` on one end of a real localhost TCP pair,
+//!   `read_frame` (magic + size bound + CRC verify) on the other, acked
+//!   per frame — the path `coordinator/dist/` actually runs per step.
+//!
+//! Message shapes mirror a step at two scales: the Params broadcast
+//! (model-sized flat tensors, the dominant coordinator→rank payload) and
+//! the per-sample Grads reply (shard-sized, the dominant rank→coordinator
+//! payload), plus the Step/Heartbeat control frames as the latency floor.
+//!
+//! Writes `BENCH_dist.json`.
+//!
+//! Run: cargo bench --bench dist_step
+
+use spion::coordinator::dist::retry::Deadline;
+use spion::coordinator::dist::wire::{decode, encode, read_frame, write_frame, Message, SampleUpdate};
+use spion::util::bench::{bench, Report};
+use spion::util::rng::Rng;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+// Protocol kind bytes (DESIGN.md §2h wire table) — needed because the
+// codec bench feeds `decode` directly instead of reading a frame header.
+const KIND_PARAMS: u8 = 3;
+const KIND_STEP: u8 = 5;
+const KIND_GRADS: u8 = 6;
+const KIND_HEARTBEAT: u8 = 7;
+
+/// Flat manifest-order tensors totalling ~`total` f32 elements, split
+/// unevenly like a real parameter manifest (embeddings dominate).
+fn tensors(total: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<f32>)> {
+    let splits = [total / 2, total / 4, total / 8, total - total / 2 - total / 4 - total / 8];
+    splits
+        .iter()
+        .map(|&n| {
+            let v: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            (vec![n], v)
+        })
+        .collect()
+}
+
+fn params_msg(total: usize, rng: &mut Rng) -> Message {
+    Message::Params { step: 7, tensors: tensors(total, rng) }
+}
+
+fn grads_msg(samples: usize, grad_elems: usize, rng: &mut Rng) -> Message {
+    let samples = (0..samples)
+        .map(|_| SampleUpdate {
+            loss: 1.25,
+            correct: true,
+            grads: tensors(grad_elems, rng).into_iter().map(|(_, v)| v).collect(),
+            scores: None,
+        })
+        .collect();
+    Message::Grads { step: 7, attempt: 0, samples }
+}
+
+fn step_msg(seq_len: usize, batch: usize) -> Message {
+    Message::Step {
+        step: 7,
+        attempt: 0,
+        snapshot_due: false,
+        seq_len: seq_len as u32,
+        tokens: vec![3; seq_len * batch],
+        labels: vec![1; batch],
+    }
+}
+
+fn kind_of(msg: &Message) -> u8 {
+    match msg {
+        Message::Params { .. } => KIND_PARAMS,
+        Message::Step { .. } => KIND_STEP,
+        Message::Grads { .. } => KIND_GRADS,
+        Message::Heartbeat { .. } => KIND_HEARTBEAT,
+        other => panic!("bench does not cover {}", other.kind_name()),
+    }
+}
+
+struct Row {
+    name: String,
+    path: &'static str,
+    frame_bytes: usize,
+    mean_ms: f64,
+    p95_ms: f64,
+    mb_per_s: f64,
+}
+
+fn codec_row(name: &str, msg: &Message) -> Row {
+    let payload = encode(msg);
+    let kind = kind_of(msg);
+    let bytes = payload.len() + 13; // header (9) + CRC (4)
+    let stats = bench(&format!("codec {name}"), || {
+        let p = encode(msg);
+        let back = decode(kind, &p).expect("roundtrip decodes");
+        std::hint::black_box(back.kind_name());
+    });
+    Row {
+        name: name.to_string(),
+        path: "codec",
+        frame_bytes: bytes,
+        mean_ms: stats.mean_ms,
+        p95_ms: stats.p95_ms,
+        mb_per_s: bytes as f64 / 1e6 / (stats.mean_ms / 1e3),
+    }
+}
+
+/// One localhost TCP pair; a sink thread reads+verifies each frame and
+/// acks it, so a bench iteration spans serialize → syscalls → parse → CRC.
+struct SocketRig {
+    tx: TcpStream,
+    ack: mpsc::Receiver<()>,
+    sink: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SocketRig {
+    fn new() -> SocketRig {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind bench listener");
+        let addr = listener.local_addr().expect("listener addr");
+        let tx = TcpStream::connect(addr).expect("connect bench pair");
+        let (mut rx, _) = listener.accept().expect("accept bench pair");
+        let (ack_tx, ack) = mpsc::channel();
+        let sink = std::thread::spawn(move || loop {
+            match read_frame(&mut rx, Deadline::after_ms(30_000)) {
+                Ok(Message::Shutdown) | Err(_) => return,
+                Ok(_) => {
+                    if ack_tx.send(()).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+        SocketRig { tx, ack, sink: Some(sink) }
+    }
+
+    fn row(&mut self, name: &str, msg: &Message) -> Row {
+        let bytes = encode(msg).len() + 13;
+        let stats = bench(&format!("socket {name}"), || {
+            write_frame(&mut self.tx, msg, Deadline::after_ms(30_000)).expect("bench write");
+            self.ack.recv().expect("sink ack");
+        });
+        Row {
+            name: name.to_string(),
+            path: "socket",
+            frame_bytes: bytes,
+            mean_ms: stats.mean_ms,
+            p95_ms: stats.p95_ms,
+            mb_per_s: bytes as f64 / 1e6 / (stats.mean_ms / 1e3),
+        }
+    }
+}
+
+impl Drop for SocketRig {
+    fn drop(&mut self) {
+        let _ = write_frame(&mut self.tx, &Message::Shutdown, Deadline::after_ms(1_000));
+        if let Some(h) = self.sink.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    // ~micro (50k f32 ≈ 200 KB) and ~tiny (1M f32 ≈ 4 MB) parameter sets;
+    // grads shards at the micro scale for 2- and 8-sample shards.
+    let shapes: Vec<(String, Message)> = vec![
+        ("heartbeat".into(), Message::Heartbeat { step: 7 }),
+        ("step L=128 b=8".into(), step_msg(128, 8)),
+        ("params 50k f32".into(), params_msg(50_000, &mut rng)),
+        ("params 1M f32".into(), params_msg(1_000_000, &mut rng)),
+        ("grads 2×50k f32".into(), grads_msg(2, 50_000, &mut rng)),
+        ("grads 8×50k f32".into(), grads_msg(8, 50_000, &mut rng)),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, msg) in &shapes {
+        rows.push(codec_row(name, msg));
+    }
+    let mut rig = SocketRig::new();
+    for (name, msg) in &shapes {
+        rows.push(rig.row(name, msg));
+    }
+    drop(rig);
+
+    let mut report = Report::new(
+        "Dist wire cost per frame (codec vs localhost socket)",
+        &["message", "path", "frame bytes", "mean ms", "p95 ms", "MB/s"],
+    );
+    for r in &rows {
+        report.row(vec![
+            r.name.clone(),
+            r.path.to_string(),
+            r.frame_bytes.to_string(),
+            format!("{:.4}", r.mean_ms),
+            format!("{:.4}", r.p95_ms),
+            format!("{:.1}", r.mb_per_s),
+        ]);
+    }
+    report.print();
+
+    let mut json = String::from("{\n  \"dist_wire\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"message\": \"{}\", \"path\": \"{}\", \"frame_bytes\": {}, \"mean_ms\": {:.5}, \
+             \"p95_ms\": {:.5}, \"mb_per_s\": {:.1}}}{}\n",
+            r.name,
+            r.path,
+            r.frame_bytes,
+            r.mean_ms,
+            r.p95_ms,
+            r.mb_per_s,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_dist.json", &json).expect("writing BENCH_dist.json");
+    println!("wrote BENCH_dist.json");
+}

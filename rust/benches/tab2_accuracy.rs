@@ -60,6 +60,7 @@ fn main() {
                     http: Default::default(),
                     obs: Default::default(),
                     resil: Default::default(),
+                    dist: Default::default(),
                     artifacts_dir: "artifacts".into(),
                 };
                 let trainer = Trainer::new(&rt, exp).expect("trainer");

@@ -5,6 +5,6 @@ pub mod toml;
 pub mod types;
 
 pub use types::{
-    ExecConfig, ExperimentConfig, ModelConfig, PatternKind, ServeConfig, SparsityConfig,
-    TaskKind, TrainBackend, TrainConfig,
+    DistConfig, ExecConfig, ExperimentConfig, ModelConfig, PatternKind, RankMode, ServeConfig,
+    SparsityConfig, TaskKind, TrainBackend, TrainConfig,
 };

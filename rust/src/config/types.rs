@@ -238,6 +238,121 @@ impl SparsityConfig {
     }
 }
 
+/// How dist worker ranks are hosted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RankMode {
+    /// Re-exec the own binary per rank (`spion __rank …`) — the production
+    /// shape: a rank crash is a process exit the supervisor observes.
+    #[default]
+    Process,
+    /// Host ranks as in-process threads over real localhost sockets —
+    /// identical wire path, used by tests that need seeded fault injection
+    /// without coordinating child-process environments.
+    Thread,
+}
+
+impl RankMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankMode::Process => "process",
+            RankMode::Thread => "thread",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RankMode> {
+        match s.trim() {
+            "process" => Some(RankMode::Process),
+            "thread" => Some(RankMode::Thread),
+            _ => None,
+        }
+    }
+}
+
+/// `[dist]` config section: multi-rank data-parallel training
+/// (`spion train --ranks N`). Every socket operation in
+/// `coordinator/dist/` derives its deadline and retry budget from here —
+/// there are no unbounded blocking reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistConfig {
+    /// Worker ranks. 0 or 1 = single-process training (no dist layer);
+    /// honored from TOML or `--ranks`.
+    pub ranks: usize,
+    /// Rank hosting mode (`process` re-execs the binary, `thread` hosts
+    /// ranks in-process over the same sockets).
+    pub mode: RankMode,
+    /// A rank is declared dead when no frame (grads or heartbeat) arrives
+    /// for this long.
+    pub heartbeat_timeout_ms: u64,
+    /// Overall per-rank deadline for one step's results.
+    pub step_timeout_ms: u64,
+    /// Per-attempt connect/handshake deadline for a rank dialing the
+    /// coordinator.
+    pub connect_timeout_ms: u64,
+    /// Connect attempts before a rank gives up (exponential backoff
+    /// between attempts).
+    pub connect_retries: u32,
+    /// First backoff delay; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Backoff cap.
+    pub backoff_max_ms: u64,
+    /// Times one rank may be respawned before it is retired and the run
+    /// degrades to fewer ranks (mirrors serve's MAX_WORKER_RESPAWNS).
+    pub respawn_budget: u32,
+    /// Times one step may be replayed after rank failures before the run
+    /// errors out.
+    pub step_retries: u32,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 0,
+            mode: RankMode::Process,
+            heartbeat_timeout_ms: 2_000,
+            step_timeout_ms: 30_000,
+            connect_timeout_ms: 1_000,
+            connect_retries: 8,
+            backoff_base_ms: 10,
+            backoff_max_ms: 500,
+            respawn_budget: 2,
+            step_retries: 6,
+        }
+    }
+}
+
+impl DistConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ranks > crate::coordinator::dist::MAX_RANKS {
+            return Err(format!(
+                "dist.ranks {} exceeds the supported maximum {}",
+                self.ranks,
+                crate::coordinator::dist::MAX_RANKS
+            ));
+        }
+        for (name, v) in [
+            ("dist.heartbeat_timeout_ms", self.heartbeat_timeout_ms),
+            ("dist.step_timeout_ms", self.step_timeout_ms),
+            ("dist.connect_timeout_ms", self.connect_timeout_ms),
+            ("dist.backoff_base_ms", self.backoff_base_ms),
+            ("dist.backoff_max_ms", self.backoff_max_ms),
+        ] {
+            if v == 0 {
+                return Err(format!("{name} must be ≥ 1 (deadlines may not be unbounded)"));
+            }
+        }
+        if self.connect_retries == 0 {
+            return Err("dist.connect_retries must be ≥ 1".into());
+        }
+        if self.backoff_max_ms < self.backoff_base_ms {
+            return Err(format!(
+                "dist.backoff_max_ms ({}) below dist.backoff_base_ms ({})",
+                self.backoff_max_ms, self.backoff_base_ms
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub task: TaskKind,
@@ -261,6 +376,10 @@ pub struct ExperimentConfig {
     /// Fault-injection knobs (`[resil]` in TOML, `SPION_FAULT*` env) —
     /// disarmed by default; only chaos harnesses set these.
     pub resil: crate::resil::ResilConfig,
+    /// Multi-rank data-parallel training knobs (`[dist]` in TOML,
+    /// `--ranks` on the CLI). `ranks = 0` (the default) keeps training
+    /// single-process.
+    pub dist: DistConfig,
     pub artifacts_dir: String,
 }
 
@@ -309,6 +428,7 @@ impl ExperimentConfig {
         }
         self.serve.validate()?;
         self.http.validate()?;
+        self.dist.validate()?;
         // Validate the fault names/prob without arming the registry (a
         // bad `[resil]` section must fail the load, not half-arm).
         validate_resil(&self.resil)
@@ -619,13 +739,60 @@ pub fn experiment_from_toml(text: &str) -> Result<ExperimentConfig, String> {
         }
     }
 
+    let mut dist = DistConfig::default();
+    if let Some(d) = doc.get("dist") {
+        if let Some(v) = d.get("ranks") {
+            dist.ranks = v.as_usize().ok_or("dist.ranks must be a non-negative integer")?;
+        }
+        if let Some(v) = d.get("mode") {
+            let s = v.as_str().ok_or("dist.mode must be a string")?;
+            dist.mode = RankMode::parse(s)
+                .ok_or_else(|| format!("dist.mode {s:?} (expected \"process\" or \"thread\")"))?;
+        }
+        for (key, field) in [
+            ("heartbeat_timeout_ms", &mut dist.heartbeat_timeout_ms),
+            ("step_timeout_ms", &mut dist.step_timeout_ms),
+            ("connect_timeout_ms", &mut dist.connect_timeout_ms),
+            ("backoff_base_ms", &mut dist.backoff_base_ms),
+            ("backoff_max_ms", &mut dist.backoff_max_ms),
+        ] {
+            if let Some(v) = d.get(key) {
+                *field =
+                    v.as_usize().ok_or(format!("dist.{key} must be a non-negative integer"))?
+                        as u64;
+            }
+        }
+        for (key, field) in [
+            ("connect_retries", &mut dist.connect_retries),
+            ("respawn_budget", &mut dist.respawn_budget),
+            ("step_retries", &mut dist.step_retries),
+        ] {
+            if let Some(v) = d.get(key) {
+                *field =
+                    v.as_usize().ok_or(format!("dist.{key} must be a non-negative integer"))?
+                        as u32;
+            }
+        }
+    }
+
     let artifacts_dir = root
         .get("artifacts_dir")
         .and_then(|v| v.as_str().map(String::from))
         .unwrap_or_else(|| "artifacts".to_string());
 
-    let cfg =
-        ExperimentConfig { task, model, train, sparsity, exec, serve, http, obs, resil, artifacts_dir };
+    let cfg = ExperimentConfig {
+        task,
+        model,
+        train,
+        sparsity,
+        exec,
+        serve,
+        http,
+        obs,
+        resil,
+        dist,
+        artifacts_dir,
+    };
     cfg.validate()?;
     Ok(cfg)
 }

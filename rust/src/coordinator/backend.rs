@@ -186,6 +186,16 @@ pub fn run_training(
     // Periodic checkpoints written so far (keep-last-K retention).
     let mut kept: std::collections::VecDeque<String> = std::collections::VecDeque::new();
 
+    // A crash between the staged write and the atomic rename (the
+    // `ckpt-write` fault window) leaves a torn `{base}*.tmp` behind. It
+    // can never be *loaded* (load opens the renamed path), but sweep it
+    // so staging files don't accumulate across crash/resume cycles.
+    if let Some(base) = ckpt_base {
+        for stale in sweep_stale_tmp(base) {
+            log(&format!("removed stale checkpoint staging file {stale}"));
+        }
+    }
+
     for step in start_step..cfg.train.steps {
         let batch = batcher.next_batch();
         let sw = Stopwatch::start();
@@ -240,11 +250,21 @@ pub fn run_training(
             ));
         }
 
+        // SIGTERM (or a library shutdown request) is honored at the step
+        // boundary: the step above fully completed, so the checkpoint
+        // below resumes bit-identically.
+        let shutdown = crate::resil::shutdown_requested();
+
         // Crash-safe periodic checkpoint, written after the step fully
         // completed (optimizer applied, transition decided) — a resumed
         // run starts at `step + 1` with the exact state this one had.
-        if let (Some(every), Some(base)) = (cfg.train.checkpoint_every, ckpt_base) {
-            if (step + 1) % every == 0 {
+        // A shutdown request forces one final checkpoint regardless of
+        // the periodic cadence (including checkpoint_every = None).
+        let periodic_due =
+            cfg.train.checkpoint_every.is_some_and(|every| (step + 1) % every == 0);
+        let mut ckpt_written = false;
+        if let Some(base) = ckpt_base {
+            if periodic_due || shutdown {
                 if let Some(snap) = backend.snapshot() {
                     let done = metrics.records.len();
                     let path = format!("{base}.step{done:08}");
@@ -265,16 +285,39 @@ pub fn run_training(
                     }
                     .save(&path)?;
                     log(&format!("checkpoint {path}"));
+                    ckpt_written = true;
                     kept.push_back(path);
                     while kept.len() > cfg.train.checkpoint_keep.max(1) {
                         if let Some(old) = kept.pop_front() {
-                            // Retention is best-effort: a missing/locked old
-                            // file must not kill the run.
-                            let _ = std::fs::remove_file(&old);
+                            // Retention prunes oldest-first only, so the
+                            // newest valid checkpoint is never a delete
+                            // candidate. Best-effort, and `io-err` gates
+                            // the delete itself: a failed/injected delete
+                            // leaks the old file but must not kill the
+                            // run (or touch anything newer).
+                            if crate::resil::fault::trip(crate::resil::fault::FaultPoint::IoErr) {
+                                log(&format!("retention: injected io-err, keeping {old}"));
+                            } else {
+                                let _ = std::fs::remove_file(&old);
+                            }
                         }
                     }
                 }
             }
+        }
+
+        if shutdown {
+            let done = metrics.records.len();
+            if ckpt_written {
+                println!("[{name}] shutdown requested — resumable at step {done}");
+            } else {
+                println!(
+                    "[{name}] shutdown requested — stopping at step {done} \
+                     (no checkpoint base or backend snapshot; not resumable)"
+                );
+            }
+            let final_params = backend.final_params()?;
+            return Ok(TrainOutcome { metrics, masks, final_params });
         }
     }
 
@@ -284,4 +327,40 @@ pub fn run_training(
 
     let final_params = backend.final_params()?;
     Ok(TrainOutcome { metrics, masks, final_params })
+}
+
+/// Remove torn `{base}*.tmp` staging files from the checkpoint directory
+/// and return their names. `Checkpoint::load` never opens a `.tmp` path,
+/// so these are dead weight left by a crash inside the write window; the
+/// sweep is best-effort (an unreadable directory sweeps nothing).
+fn sweep_stale_tmp(base: &str) -> Vec<String> {
+    let p = std::path::Path::new(base);
+    let dir = match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let prefix = match p.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n.to_string(),
+        None => return Vec::new(),
+    };
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(_) => return Vec::new(),
+    };
+    let mut swept = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = match name.to_str() {
+            Some(n) => n,
+            None => continue,
+        };
+        if name.starts_with(&prefix)
+            && name.ends_with(".tmp")
+            && std::fs::remove_file(entry.path()).is_ok()
+        {
+            swept.push(entry.path().to_string_lossy().into_owned());
+        }
+    }
+    swept.sort();
+    swept
 }

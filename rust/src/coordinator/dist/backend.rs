@@ -1,0 +1,457 @@
+//! The coordinator: a [`TrainerBackend`] that farms each step's batch
+//! out to worker ranks and folds their per-sample results.
+//!
+//! [`DistBackend`] is authoritative for every piece of training state —
+//! parameters, optimizer velocity, captured scores, applied masks — so
+//! the shared `run_training` driver (phases, transition, periodic
+//! checkpoints, `--resume`) works unchanged at any rank count. Ranks are
+//! pure shard compute: each step they receive the current parameters and
+//! a contiguous sample range, and return per-sample gradients.
+//!
+//! **Determinism argument.** The single-process backend folds per-sample
+//! gradients in flat sample order (`grads.zero()`; `add_assign` sample
+//! 0, 1, …, B-1; `scale(1/B)`). f32 addition is non-associative, so an
+//! all-reduce of *pre-summed shard gradients* would not reproduce that
+//! fold bit-for-bit. This backend therefore ships per-sample gradients
+//! and folds them here, iterating ranks in rank order and samples in
+//! shard order — and because shards are contiguous ranges assigned in
+//! rank order, that double loop *is* the flat sample-order fold. The
+//! same holds for the loss/accuracy sums and the captured-score
+//! accumulation, so the full (step, phase, loss, acc) trajectory, masks
+//! and final params are bit-identical at 1, 2, … N ranks, including
+//! across deaths, respawns and degraded resharding.
+//!
+//! **Recovery.** A step is a barrier: if any rank dies mid-step
+//! (heartbeat/step timeout, EOF, corrupt frame, failed send), the
+//! optimizer has not been applied, so the coordinator declares the rank
+//! dead, lets the supervisor respawn or retire it, and replays the step
+//! — re-broadcasting parameters (which doubles as the respawned rank's
+//! state sync) with a bumped `attempt` tag so stale `Grads` frames from
+//! the previous attempt are discarded, not double-counted. Replays are
+//! bounded by `dist.step_retries`.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::batcher::{Batch, Batcher};
+use crate::exec::Exec;
+use crate::model::grad::{ModelGrads, SgdMomentum};
+use crate::model::ModelParams;
+use crate::pattern::BlockMask;
+use crate::tensor::Mat;
+
+use super::super::backend::{BackendSnapshot, StepStats, TrainerBackend};
+use super::super::checkpoint::Checkpoint;
+use super::super::native;
+use super::retry::Deadline;
+use super::supervisor::Supervisor;
+use super::wire::{self, Message, SampleUpdate, WireError};
+use super::{stats, MAX_RANKS};
+
+/// Contiguous shard ranges over `batch` samples for `n` ranks, in rank
+/// order — the first `batch % n` shards get one extra sample. The
+/// concatenation of the ranges is exactly `0..batch`, which is what
+/// makes the rank-ordered fold a flat sample-order fold.
+fn shard_ranges(batch: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.max(1);
+    let base = batch / n;
+    let rem = batch % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+pub struct DistBackend {
+    exp: ExperimentConfig,
+    /// Coordinator-side exec: pattern generation and eval (the driver's
+    /// layer-parallel work), not step math — that runs on the ranks.
+    exec: Exec,
+    params: ModelParams,
+    opt: SgdMomentum,
+    /// Batch-gradient accumulator, folded in global sample order.
+    grads: ModelGrads,
+    masks: Option<Vec<BlockMask>>,
+    score_acc: Option<Vec<Mat>>,
+    sup: Supervisor,
+    /// Ranks released (evaluate/Drop) — no further broadcasts.
+    released: bool,
+}
+
+impl DistBackend {
+    pub fn new(exp: ExperimentConfig) -> Result<Self> {
+        native::validate(&exp)?;
+        if exp.dist.ranks == 0 {
+            return Err(anyhow!("DistBackend requires dist.ranks >= 1"));
+        }
+        if exp.dist.ranks > MAX_RANKS {
+            return Err(anyhow!("dist.ranks {} exceeds MAX_RANKS {MAX_RANKS}", exp.dist.ranks));
+        }
+        let exec = Exec::new(exp.exec);
+        let params = ModelParams::init_random(&exp.model, exp.train.seed);
+        let opt = SgdMomentum::new(&params, exp.train.lr as f32, exp.train.momentum as f32);
+        let grads = ModelGrads::zeros_like(&params);
+        let mut sup = Supervisor::new(&exp)?;
+        // Spawn the fleet up front so step 0 starts with live ranks;
+        // stragglers are handled by the step-retry loop like any death.
+        sup.ensure_live()?;
+        Ok(Self {
+            exp,
+            exec,
+            params,
+            opt,
+            grads,
+            masks: None,
+            score_acc: None,
+            sup,
+            released: false,
+        })
+    }
+
+    /// Send everything rank `idx` needs for (`step`, `attempt`):
+    /// parameters (every attempt — the respawn state sync), masks (once
+    /// per connection) and its shard.
+    #[allow(clippy::too_many_arguments)]
+    fn send_step(
+        &mut self,
+        idx: usize,
+        tensors: &[(Vec<usize>, Vec<f32>)],
+        step: usize,
+        attempt: u32,
+        snapshot_due: bool,
+        batch: &Batch,
+        range: (usize, usize),
+    ) -> std::result::Result<(), WireError> {
+        let seq_len = self.exp.model.seq_len;
+        let needs_masks = self.masks.is_some() && !self.sup.slots[idx].has_masks;
+        let masks_msg =
+            if needs_masks { self.masks.as_ref().map(|m| Message::Masks { masks: m.clone() }) } else { None };
+        let slot = &mut self.sup.slots[idx];
+        let conn = slot.conn.as_mut().ok_or(WireError::Eof)?;
+        let d = Deadline::after_ms(self.exp.dist.step_timeout_ms);
+        wire::write_frame(
+            conn,
+            &Message::Params { step: step as u64, tensors: tensors.to_vec() },
+            d,
+        )?;
+        if let Some(msg) = masks_msg {
+            wire::write_frame(conn, &msg, d)?;
+            slot.has_masks = true;
+        }
+        let (s, e) = range;
+        wire::write_frame(
+            conn,
+            &Message::Step {
+                step: step as u64,
+                attempt,
+                snapshot_due,
+                seq_len: seq_len as u32,
+                tokens: batch.x[s * seq_len..e * seq_len].to_vec(),
+                labels: batch.y[s..e].to_vec(),
+            },
+            d,
+        )?;
+        Ok(())
+    }
+
+    /// Wait for rank `idx`'s `Grads` for (`step`, `attempt`) under the
+    /// dual deadline: a per-frame heartbeat deadline (refreshed by any
+    /// frame) and the overall step deadline. Heartbeats keep a slow rank
+    /// alive; silence or the step deadline kills it.
+    fn collect_rank(
+        &mut self,
+        idx: usize,
+        step: usize,
+        attempt: u32,
+        expect: usize,
+        sent_at: Instant,
+    ) -> std::result::Result<Vec<SampleUpdate>, String> {
+        let hb_ms = self.exp.dist.heartbeat_timeout_ms;
+        let step_deadline = Deadline::after_ms(self.exp.dist.step_timeout_ms);
+        let mut hb_deadline = Deadline::after_ms(hb_ms);
+        let rank_id = self.sup.slots[idx].rank_id as usize;
+        let conn = self.sup.slots[idx].conn.as_mut().ok_or("no connection")?;
+        let mut last_frame = Instant::now();
+        loop {
+            match wire::read_frame(conn, hb_deadline.min(step_deadline)) {
+                Ok(Message::Heartbeat { .. }) => {
+                    let age = last_frame.elapsed().as_millis() as u64;
+                    last_frame = Instant::now();
+                    stats().note_heartbeat(rank_id, age);
+                    hb_deadline = Deadline::after_ms(hb_ms);
+                }
+                Ok(Message::Grads { step: s, attempt: a, samples })
+                    if s == step as u64 && a == attempt =>
+                {
+                    if samples.len() != expect {
+                        return Err(format!(
+                            "rank returned {} samples for a {expect}-sample shard",
+                            samples.len()
+                        ));
+                    }
+                    if rank_id < MAX_RANKS {
+                        stats().step_latency[rank_id]
+                            .record(sent_at.elapsed().as_nanos() as u64);
+                    }
+                    return Ok(samples);
+                }
+                Ok(Message::Grads { .. }) => {
+                    // Stale echo from a previous attempt of this step —
+                    // discard; the frame we want is behind it.
+                    last_frame = Instant::now();
+                    hb_deadline = Deadline::after_ms(hb_ms);
+                }
+                Ok(other) => {
+                    return Err(format!("unexpected {} frame mid-step", other.kind_name()))
+                }
+                Err(WireError::Timeout) => {
+                    return Err(if step_deadline.expired() {
+                        format!("step deadline ({} ms) expired", self.exp.dist.step_timeout_ms)
+                    } else {
+                        format!("heartbeat deadline ({hb_ms} ms) expired")
+                    });
+                }
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+    }
+
+    /// Fold per-rank sample results in rank order — the flat
+    /// global-sample-order fold (see module docs) — then apply the
+    /// optimizer. Mirrors `NativeBackend::step`'s fold exactly.
+    fn fold_and_apply(&mut self, per_rank: Vec<Vec<SampleUpdate>>) -> Result<StepStats> {
+        let batch = self.exp.model.batch;
+        self.grads.zero();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut acc_scores: Option<Vec<Mat>> = None;
+        for samples in &per_rank {
+            for s in samples {
+                let _sp = crate::obs::span(crate::obs::SpanId::GradFold);
+                loss_sum += s.loss;
+                correct += s.correct as usize;
+                let mut dst = self.grads.slices_mut();
+                if dst.len() != s.grads.len() {
+                    return Err(anyhow!(
+                        "rank returned {} gradient slices, model has {}",
+                        s.grads.len(),
+                        dst.len()
+                    ));
+                }
+                for (d, src) in dst.iter_mut().zip(&s.grads) {
+                    if d.len() != src.len() {
+                        return Err(anyhow!(
+                            "gradient slice length mismatch ({} vs {})",
+                            src.len(),
+                            d.len()
+                        ));
+                    }
+                    // Elementwise += in slice order — bit-identical to
+                    // `ModelGrads::add_assign` on a local gradient.
+                    for (x, y) in d.iter_mut().zip(src) {
+                        *x += *y;
+                    }
+                }
+                if let Some(sc) = &s.scores {
+                    match &mut acc_scores {
+                        None => acc_scores = Some(sc.clone()),
+                        Some(acc) => {
+                            for (a, b) in acc.iter_mut().zip(sc) {
+                                a.add_assign(b);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.grads.scale(1.0 / batch as f32);
+        {
+            let _sp = crate::obs::span(crate::obs::SpanId::Optimizer);
+            self.opt.step(&mut self.params, &self.grads);
+        }
+        self.score_acc = acc_scores;
+        Ok(StepStats {
+            loss: (loss_sum / batch as f64) as f32,
+            acc: correct as f32 / batch as f32,
+        })
+    }
+
+    /// One-line end-of-run summary (the CI chaos job greps this).
+    pub fn summary_line(&self) -> String {
+        use std::sync::atomic::Ordering::Relaxed;
+        format!(
+            "dist summary: ranks {} live {} respawns {} retired {} step_retries {} net_retries {}",
+            stats().ranks_configured.load(Relaxed),
+            self.sup.live_indices().len(),
+            stats().rank_respawns.load(Relaxed),
+            stats().rank_retired.load(Relaxed),
+            stats().step_retries.load(Relaxed),
+            stats().net_retries.load(Relaxed),
+        )
+    }
+
+    fn release_ranks(&mut self) {
+        if !self.released {
+            self.sup.shutdown();
+            self.released = true;
+        }
+    }
+}
+
+impl TrainerBackend for DistBackend {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn config(&self) -> &ExperimentConfig {
+        &self.exp
+    }
+
+    fn exec(&self) -> &Exec {
+        &self.exec
+    }
+
+    fn step(&mut self, step: usize, batch: &Batch, snapshot_due: bool) -> Result<StepStats> {
+        if self.released {
+            return Err(anyhow!("dist backend already released its ranks"));
+        }
+        let retries = self.exp.dist.step_retries;
+        let mut last_err = String::new();
+        for attempt in 0..=retries {
+            if attempt > 0 {
+                stats().step_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            self.sup.ensure_live()?;
+            let live = self.sup.live_indices();
+            let connected: Vec<usize> =
+                live.iter().copied().filter(|&i| self.sup.slots[i].conn.is_some()).collect();
+            if connected.is_empty() {
+                last_err = "no connected ranks".into();
+                continue;
+            }
+            let ranges = shard_ranges(batch.batch, connected.len());
+            let tensors = self.params.to_flat();
+
+            // Broadcast phase: params (+ masks) + shard to every rank.
+            let mut failed = false;
+            let sent_at = Instant::now();
+            for (pos, &idx) in connected.iter().enumerate() {
+                if let Err(e) =
+                    self.send_step(idx, &tensors, step, attempt, snapshot_due, batch, ranges[pos])
+                {
+                    self.sup.declare_dead(idx, &format!("send failed: {e}"));
+                    last_err = format!("send to rank failed: {e}");
+                    failed = true;
+                    break;
+                }
+            }
+            if failed {
+                continue;
+            }
+
+            // Collect phase: rank order; any failure aborts the attempt
+            // (the optimizer has not run — replay is exact).
+            let mut per_rank: Vec<Vec<SampleUpdate>> = Vec::with_capacity(connected.len());
+            for (pos, &idx) in connected.iter().enumerate() {
+                let expect = ranges[pos].1 - ranges[pos].0;
+                match self.collect_rank(idx, step, attempt, expect, sent_at) {
+                    Ok(samples) => per_rank.push(samples),
+                    Err(why) => {
+                        self.sup.declare_dead(idx, &why);
+                        last_err = why;
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            if failed {
+                continue;
+            }
+            return self.fold_and_apply(per_rank);
+        }
+        Err(anyhow!(
+            "step {step}: {} replays exhausted (last failure: {last_err})",
+            retries
+        ))
+    }
+
+    fn capture_scores(&mut self) -> Result<Option<Vec<Mat>>> {
+        let inv = 1.0 / self.exp.model.batch as f32;
+        Ok(self.score_acc.take().map(|mut scores| {
+            for s in &mut scores {
+                s.scale(inv);
+            }
+            scores
+        }))
+    }
+
+    fn apply_masks(&mut self, masks: &[BlockMask]) -> Result<()> {
+        self.masks = Some(masks.to_vec());
+        // Every connection needs the new set before its next step.
+        for slot in &mut self.sup.slots {
+            slot.has_masks = false;
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        Some(BackendSnapshot {
+            tensors: self.params.to_flat(),
+            velocity: self.opt.velocity().slices().iter().map(|s| s.to_vec()).collect(),
+        })
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.params = ModelParams::from_checkpoint(ck, self.exp.model.layers)?;
+        native::restore_velocity(&mut self.opt, ck)
+    }
+
+    fn evaluate(&mut self, batcher: &Batcher) -> Result<f64> {
+        // Training is over when the driver evaluates — release the
+        // ranks first so they exit on a clean Shutdown frame instead of
+        // their idle deadlines while the (local) eval runs.
+        println!("[dist] {}", self.summary_line());
+        self.release_ranks();
+        native::evaluate_params(&self.exec, &self.exp, &self.params, self.masks.as_deref(), batcher)
+    }
+
+    fn final_params(&self) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        Ok(self.params.to_flat())
+    }
+}
+
+impl Drop for DistBackend {
+    fn drop(&mut self) {
+        self.release_ranks();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_the_batch_contiguously() {
+        for batch in [1usize, 2, 3, 7, 8, 16] {
+            for n in [1usize, 2, 3, 5] {
+                let r = shard_ranges(batch, n);
+                assert_eq!(r.len(), n);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[n - 1].1, batch);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous in rank order");
+                }
+                let sizes: Vec<usize> = r.iter().map(|(s, e)| e - s).collect();
+                let max = sizes.iter().max().copied().unwrap_or(0);
+                let min = sizes.iter().min().copied().unwrap_or(0);
+                assert!(max - min <= 1, "balanced shards: {sizes:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Multi-rank data-parallel training over local TCP (`spion train
+//! --ranks N`).
+//!
+//! Architecture — coordinator-authoritative, ranks near-stateless:
+//!
+//! - The **coordinator** runs in the training process as
+//!   [`DistBackend`], a [`TrainerBackend`](crate::coordinator::backend::TrainerBackend)
+//!   the shared `run_training` driver steps exactly like the native
+//!   backend. It owns the authoritative parameters, the momentum-SGD
+//!   optimizer, the captured scores and the applied masks — so
+//!   snapshot/restore/evaluate and `--resume` work unchanged at any rank
+//!   count.
+//! - **Worker ranks** (re-exec'd `spion __rank` processes, or in-process
+//!   threads for tests — [`RankMode`](crate::config::RankMode)) hold no
+//!   training state across steps: each step they receive the current
+//!   parameters, their contiguous shard of the batch, and compute
+//!   per-sample gradients through the same `train_step_sample` kernels
+//!   the native backend runs.
+//!
+//! Determinism: ranks return **per-sample** results and the coordinator
+//! folds them in rank order — which, because shards are contiguous
+//! sample ranges assigned in rank order, is exactly the flat
+//! global-sample-order fold of the single-process backend. f32 addition
+//! is non-associative, so folding pre-summed shard gradients would *not*
+//! be bit-identical; folding per-sample gradients in sample order is.
+//! The trajectory, captured masks and final params are therefore
+//! bit-identical at any rank count, across rank deaths, respawns and
+//! degraded resharding (tests/dist_train.rs holds the gate).
+//!
+//! Robustness: every socket operation carries an explicit deadline
+//! ([`retry::Deadline`]) and a bounded retry budget ([`retry::RetryPolicy`])
+//! — there are no unbounded blocking reads anywhere in this module. The
+//! [`supervisor`] declares a rank dead on heartbeat/step timeout, EOF or
+//! a corrupt frame, respawns it under a bounded budget, and the
+//! interrupted step is replayed by every rank from the step barrier
+//! (parameters are re-broadcast; the optimizer had not been applied, so
+//! replay is exact). Budget exhaustion retires the rank, reshards the
+//! batch over the survivors and flips training health to `degraded`.
+
+pub mod backend;
+pub mod rank;
+pub mod retry;
+pub mod supervisor;
+pub mod wire;
+
+pub use backend::DistBackend;
+pub use rank::{run_rank, ConnectPolicy};
+
+use crate::obs::Hist;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Hard ceiling on configured ranks (sizes the per-rank stat arrays).
+pub const MAX_RANKS: usize = 16;
+
+/// Wire protocol version, checked in the Hello/Welcome handshake.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Process-wide dist counters — the `spion_dist_*` Prometheus families.
+/// Static (like `resil::stats()`) so ranks, the supervisor and the
+/// metrics endpoint share one instance without plumbing.
+pub struct DistStats {
+    /// Ranks the run was configured with (0 = dist layer unused).
+    pub ranks_configured: AtomicU64,
+    /// Ranks currently live (connected, not retired).
+    pub ranks_live: AtomicU64,
+    /// Ranks declared dead (timeout, EOF, corrupt frame).
+    pub rank_deaths: AtomicU64,
+    /// Ranks respawned after a death.
+    pub rank_respawns: AtomicU64,
+    /// Ranks retired after respawn-budget exhaustion.
+    pub rank_retired: AtomicU64,
+    /// Steps replayed from the barrier after a rank failure.
+    pub step_retries: AtomicU64,
+    /// Network-level retry attempts (connect/backoff sleeps taken).
+    pub net_retries: AtomicU64,
+    /// Heartbeat frames observed by the coordinator.
+    pub heartbeats: AtomicU64,
+    /// Per-rank wall time from step send to grads receipt (ns).
+    pub step_latency: [Hist; MAX_RANKS],
+    /// Per-rank milliseconds since the last frame from that rank.
+    pub heartbeat_age_ms: [AtomicU64; MAX_RANKS],
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const HIST: Hist = Hist::new();
+
+static STATS: DistStats = DistStats {
+    ranks_configured: AtomicU64::new(0),
+    ranks_live: AtomicU64::new(0),
+    rank_deaths: AtomicU64::new(0),
+    rank_respawns: AtomicU64::new(0),
+    rank_retired: AtomicU64::new(0),
+    step_retries: AtomicU64::new(0),
+    net_retries: AtomicU64::new(0),
+    heartbeats: AtomicU64::new(0),
+    step_latency: [HIST; MAX_RANKS],
+    heartbeat_age_ms: [ZERO; MAX_RANKS],
+};
+
+/// The process-wide dist stats instance.
+pub fn stats() -> &'static DistStats {
+    &STATS
+}
+
+impl DistStats {
+    pub fn note_net_retry(&self) {
+        self.net_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a heartbeat from `rank`, with the observed gap since the
+    /// previous frame from that rank (the staleness gauge prom exports).
+    pub fn note_heartbeat(&self, rank: usize, age_ms: u64) {
+        self.heartbeats.fetch_add(1, Ordering::Relaxed);
+        if rank < MAX_RANKS {
+            self.heartbeat_age_ms[rank].store(age_ms, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_counters_are_monotonic() {
+        let before = stats().net_retries.load(Ordering::Relaxed);
+        stats().note_net_retry();
+        assert!(stats().net_retries.load(Ordering::Relaxed) > before);
+        stats().note_heartbeat(0, 17);
+        assert_eq!(stats().heartbeat_age_ms[0].load(Ordering::Relaxed), 17);
+        stats().step_latency[0].record(1_000);
+        assert!(stats().step_latency[0].snapshot().count >= 1);
+    }
+}

@@ -1,0 +1,322 @@
+//! The worker-rank side of the dist protocol: a near-stateless shard
+//! compute server.
+//!
+//! A rank connects to the coordinator (bounded retry + backoff), says
+//! `Hello`, receives a `Welcome` carrying everything it needs (model
+//! heads/layers, the exec kernel configuration — **the same kernel flags
+//! as the coordinator**, load-bearing for bit-identity — and the
+//! heartbeat interval), then loops: `Params` → rebuild parameters,
+//! `Masks` → enter the sparse phase, `Step` → compute per-sample
+//! gradients for its shard and reply `Grads`, `Shutdown` → exit.
+//!
+//! Ranks hold no training state across steps: parameters arrive fresh
+//! with every step, so a respawned rank needs no recovery protocol
+//! beyond the handshake — the next step's broadcast *is* the state sync.
+//!
+//! A background thread writes `Heartbeat` frames at a third of the
+//! coordinator's heartbeat timeout, so a rank grinding through a large
+//! shard is distinguishable from a dead one. All socket reads and writes
+//! run under explicit deadlines ([`IDLE_READ_FACTOR`] bounds even the
+//! idle wait for the next instruction — there is no unbounded read).
+//!
+//! Fault sites (`rank-kill`, `rank-slow`) live here, gated by
+//! `SPION_DIST_FAULT_RANK` so a chaos run can target one rank while the
+//! registry is armed process-wide (in thread mode the registry is shared
+//! with the coordinator; the gate is what keeps the blast radius to the
+//! chosen rank).
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::DistConfig;
+use crate::exec::Exec;
+use crate::model::grad::ModelGrads;
+use crate::model::train::{train_step_sample, TrainCache};
+use crate::model::ModelParams;
+use crate::pattern::BlockMask;
+use crate::resil::fault::{self, FaultPoint};
+
+use super::retry::{Deadline, RetryPolicy};
+use super::wire::{self, Message, SampleUpdate};
+use super::PROTO_VERSION;
+
+/// A rank's idle read deadline, in heartbeat intervals — bounds the wait
+/// for the next coordinator instruction (the coordinator may be folding,
+/// checkpointing or generating patterns between steps, but a coordinator
+/// quiet for this long is gone and the rank exits rather than blocking
+/// forever).
+pub const IDLE_READ_FACTOR: u32 = 20;
+
+/// How long the `rank-slow` fault stalls a rank before computing —
+/// chaos tests set `dist.step_timeout_ms` below this to turn the stall
+/// into an observed straggler death.
+pub const RANK_SLOW_STALL_MS: u64 = 750;
+
+/// Connect-phase knobs a rank needs before it has a `Welcome` (process
+/// mode receives these as `spion __rank` CLI flags; thread mode passes
+/// them straight from the coordinator's `DistConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct ConnectPolicy {
+    pub connect_timeout_ms: u64,
+    pub connect_retries: u32,
+    pub backoff_base_ms: u64,
+    pub backoff_max_ms: u64,
+}
+
+impl ConnectPolicy {
+    pub fn from_dist(cfg: &DistConfig) -> Self {
+        ConnectPolicy {
+            connect_timeout_ms: cfg.connect_timeout_ms,
+            connect_retries: cfg.connect_retries,
+            backoff_base_ms: cfg.backoff_base_ms,
+            backoff_max_ms: cfg.backoff_max_ms,
+        }
+    }
+}
+
+/// Is this rank the target of dist fault injection? With
+/// `SPION_DIST_FAULT_RANK` unset every rank is eligible; set, only the
+/// named rank trips the rank-level fault points (the registry itself
+/// stays armed — in thread mode it is shared with the coordinator and
+/// must not be disarmed per-rank).
+fn fault_allowed(rank_id: u32) -> bool {
+    match std::env::var("SPION_DIST_FAULT_RANK") {
+        Ok(v) => v.trim().parse::<u32>().map(|r| r == rank_id).unwrap_or(true),
+        Err(_) => true,
+    }
+}
+
+/// Run one worker rank to completion: connect, handshake, serve steps
+/// until `Shutdown` (or EOF — a vanished coordinator is an exit, not a
+/// hang). This is the entire rank lifecycle for both hosting modes;
+/// `spion __rank` calls it from `main`, thread mode from
+/// `std::thread::spawn`.
+pub fn run_rank(rank_id: u32, coord_addr: &str, policy: ConnectPolicy) -> Result<()> {
+    let connect_timeout = Duration::from_millis(policy.connect_timeout_ms.max(1));
+    let addr: std::net::SocketAddr =
+        coord_addr.parse().with_context(|| format!("bad coordinator address {coord_addr:?}"))?;
+
+    let retry = RetryPolicy::new(
+        policy.connect_retries,
+        policy.backoff_base_ms,
+        policy.backoff_max_ms,
+        rank_id as u64,
+    );
+    let mut stream = retry
+        .run(|_| TcpStream::connect_timeout(&addr, connect_timeout))
+        .with_context(|| format!("rank {rank_id}: connect to {addr} failed"))?;
+    stream.set_nodelay(true).ok();
+
+    // Handshake under the connect deadline.
+    let hs = Deadline::after_ms(policy.connect_timeout_ms);
+    wire::write_frame(&mut stream, &Message::Hello { rank_id, proto: PROTO_VERSION }, hs)
+        .map_err(|e| anyhow!("rank {rank_id}: hello failed: {e}"))?;
+    let (heads, layers, heartbeat_ms, exec_cfg) =
+        match wire::read_frame(&mut stream, Deadline::after_ms(policy.connect_timeout_ms)) {
+            Ok(Message::Welcome { heads, layers, heartbeat_ms, exec }) => {
+                (heads as usize, layers as usize, heartbeat_ms.max(1), exec)
+            }
+            Ok(other) => {
+                return Err(anyhow!("rank {rank_id}: expected welcome, got {}", other.kind_name()))
+            }
+            Err(e) => return Err(anyhow!("rank {rank_id}: handshake failed: {e}")),
+        };
+
+    let exec = Exec::new(exec_cfg);
+    let idle = Duration::from_millis(heartbeat_ms.saturating_mul(IDLE_READ_FACTOR as u64));
+
+    // Split the socket: this thread reads, the heartbeat thread and the
+    // grads replies share the write half behind one lock (frames are
+    // staged and written atomically, so serialization is all they need).
+    let writer = Arc::new(Mutex::new(stream.try_clone().context("clone rank socket")?));
+    let stop = Arc::new(AtomicBool::new(false));
+    let last_step = Arc::new(AtomicU64::new(0));
+    let hb = spawn_heartbeat(Arc::clone(&writer), Arc::clone(&stop), Arc::clone(&last_step), heartbeat_ms);
+
+    let result = rank_loop(
+        rank_id,
+        &mut stream,
+        &writer,
+        &last_step,
+        &exec,
+        heads,
+        layers,
+        idle,
+        heartbeat_ms,
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = hb.join();
+    result
+}
+
+fn spawn_heartbeat(
+    writer: Arc<Mutex<TcpStream>>,
+    stop: Arc<AtomicBool>,
+    last_step: Arc<AtomicU64>,
+    heartbeat_ms: u64,
+) -> std::thread::JoinHandle<()> {
+    let interval = Duration::from_millis((heartbeat_ms / 3).max(5));
+    std::thread::Builder::new()
+        .name("spion-rank-hb".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let step = last_step.load(Ordering::Relaxed);
+                let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                if wire::write_frame(&mut w, &Message::Heartbeat { step }, Deadline::after_ms(heartbeat_ms))
+                    .is_err()
+                {
+                    // The socket is gone; the main loop will observe the
+                    // same and exit. Nothing useful left to do here.
+                    return;
+                }
+            }
+        })
+        .expect("spawning the heartbeat thread cannot fail absent resource exhaustion")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_loop(
+    rank_id: u32,
+    stream: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    last_step: &AtomicU64,
+    exec: &Exec,
+    heads: usize,
+    layers: usize,
+    idle: Duration,
+    heartbeat_ms: u64,
+) -> Result<()> {
+    let mut params: Option<ModelParams> = None;
+    let mut masks: Option<Vec<BlockMask>> = None;
+    // Per-sample buffer free-lists, mirroring NativeBackend — reused
+    // across steps so the steady-state shard loop stays allocation-light.
+    let grad_pool: Mutex<Vec<ModelGrads>> = Mutex::new(Vec::new());
+    let mut cache_pool: Mutex<Vec<TrainCache>> = Mutex::new(Vec::new());
+    let write_deadline_ms = heartbeat_ms.saturating_mul(IDLE_READ_FACTOR as u64);
+
+    loop {
+        let msg = match wire::read_frame(stream, Deadline::after(idle)) {
+            Ok(m) => m,
+            // A vanished coordinator is a clean exit for the rank: the
+            // supervisor (or the operator) owns the error story.
+            Err(wire::WireError::Eof) => return Ok(()),
+            Err(e) => return Err(anyhow!("rank {rank_id}: read failed: {e}")),
+        };
+        match msg {
+            Message::Params { step, tensors } => {
+                last_step.store(step, Ordering::Relaxed);
+                params = Some(
+                    ModelParams::from_flat(&tensors, layers)
+                        .with_context(|| format!("rank {rank_id}: bad params broadcast"))?,
+                );
+            }
+            Message::Masks { masks: ms } => {
+                // New masks invalidate the pooled sparse workspaces.
+                cache_pool = Mutex::new(Vec::new());
+                masks = Some(ms);
+            }
+            Message::Step { step, attempt, snapshot_due, seq_len, tokens, labels } => {
+                last_step.store(step, Ordering::Relaxed);
+                if fault_allowed(rank_id) && fault::trip(FaultPoint::RankKill) {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    return Err(anyhow!("rank {rank_id}: rank-kill fault injected at step {step}"));
+                }
+                if fault_allowed(rank_id) && fault::trip(FaultPoint::RankSlow) {
+                    std::thread::sleep(Duration::from_millis(RANK_SLOW_STALL_MS));
+                }
+                let p = params
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("rank {rank_id}: step {step} before any params"))?;
+                let samples = compute_shard(
+                    exec,
+                    p,
+                    heads,
+                    masks.as_deref(),
+                    seq_len as usize,
+                    &tokens,
+                    &labels,
+                    snapshot_due,
+                    &grad_pool,
+                    &cache_pool,
+                );
+                let reply = Message::Grads { step, attempt, samples };
+                let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                wire::write_frame(&mut w, &reply, Deadline::after_ms(write_deadline_ms))
+                    .map_err(|e| anyhow!("rank {rank_id}: grads send failed: {e}"))?;
+            }
+            Message::Shutdown => return Ok(()),
+            other => {
+                return Err(anyhow!(
+                    "rank {rank_id}: unexpected {} frame from coordinator",
+                    other.kind_name()
+                ))
+            }
+        }
+    }
+}
+
+/// Compute one shard's per-sample results. Samples fan out over the
+/// rank's exec pool (order-preserving `par_map`), each computed with a
+/// serial inner kernel context — exactly how `NativeBackend::step` runs
+/// them, so every per-sample gradient is bit-identical to the
+/// single-process run regardless of rank count or rank worker count.
+#[allow(clippy::too_many_arguments)]
+fn compute_shard(
+    exec: &Exec,
+    params: &ModelParams,
+    heads: usize,
+    masks: Option<&[BlockMask]>,
+    seq_len: usize,
+    tokens: &[i32],
+    labels: &[i32],
+    snapshot_due: bool,
+    grad_pool: &Mutex<Vec<ModelGrads>>,
+    cache_pool: &Mutex<Vec<TrainCache>>,
+) -> Vec<SampleUpdate> {
+    let inner = exec.serial_view();
+    let dh = params.d_model() / heads.max(1);
+    exec.par_map(labels.len(), |b| {
+        let mut g = match grad_pool.lock().unwrap_or_else(|e| e.into_inner()).pop() {
+            Some(mut g) => {
+                g.zero();
+                g
+            }
+            None => ModelGrads::zeros_like(params),
+        };
+        let mut cache = masks.map(|ms| {
+            cache_pool
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop()
+                .unwrap_or_else(|| TrainCache::new(ms, heads, dh))
+        });
+        let toks = &tokens[b * seq_len..(b + 1) * seq_len];
+        let r = train_step_sample(
+            &inner,
+            params,
+            heads,
+            masks,
+            toks,
+            labels[b],
+            snapshot_due,
+            &mut g,
+            cache.as_mut(),
+        );
+        let grads = g.slices().iter().map(|s| s.to_vec()).collect();
+        grad_pool.lock().unwrap_or_else(|e| e.into_inner()).push(g);
+        if let Some(c) = cache {
+            cache_pool.lock().unwrap_or_else(|e| e.into_inner()).push(c);
+        }
+        SampleUpdate { loss: r.loss, correct: r.correct, grads, scores: r.scores }
+    })
+}

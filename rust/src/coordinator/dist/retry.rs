@@ -1,0 +1,167 @@
+//! Deadlines and bounded exponential backoff for every socket operation
+//! in the dist layer.
+//!
+//! The invariant the whole module leans on: **no unbounded blocking
+//! anywhere**. A [`Deadline`] converts "how much time is left" into the
+//! per-syscall read/write timeouts `wire` sets on the socket; a
+//! [`RetryPolicy`] bounds how often an operation is re-attempted and how
+//! long each backoff sleep is (exponential, capped, with deterministic
+//! jitter so colliding ranks de-synchronize without making test runs
+//! flaky).
+
+use std::time::{Duration, Instant};
+
+/// An absolute point in time budget for a multi-syscall operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    pub fn after(d: Duration) -> Self {
+        Deadline { at: Instant::now() + d }
+    }
+
+    pub fn after_ms(ms: u64) -> Self {
+        Self::after(Duration::from_millis(ms))
+    }
+
+    /// Time left, `None` once expired. Callers turn `None` into a typed
+    /// timeout error instead of issuing another syscall.
+    pub fn remaining(&self) -> Option<Duration> {
+        let now = Instant::now();
+        if now >= self.at {
+            None
+        } else {
+            Some(self.at - now)
+        }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.remaining().is_none()
+    }
+
+    /// The earlier of two deadlines (per-frame heartbeat deadline vs the
+    /// overall step deadline).
+    pub fn min(self, other: Deadline) -> Deadline {
+        if self.at <= other.at {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+/// Bounded exponential backoff: `base * 2^attempt`, capped at `max`,
+/// plus a small deterministic jitter derived from the attempt counter
+/// and a caller-supplied salt (a rank id) — bounded, reproducible,
+/// de-synchronized.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub attempts: u32,
+    pub base: Duration,
+    pub max: Duration,
+    pub salt: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(attempts: u32, base_ms: u64, max_ms: u64, salt: u64) -> Self {
+        RetryPolicy {
+            attempts: attempts.max(1),
+            base: Duration::from_millis(base_ms.max(1)),
+            max: Duration::from_millis(max_ms.max(1)),
+            salt,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (0-based; attempt 0 gets no
+    /// sleep — the first try is immediate).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let shift = (attempt - 1).min(16);
+        let exp = self.base.saturating_mul(1u32 << shift).min(self.max);
+        // Deterministic jitter in [0, exp/4]: SplitMix64 over (salt, attempt).
+        let mut z = self.salt.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(attempt as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let quarter = (exp.as_micros() as u64 / 4).max(1);
+        exp + Duration::from_micros(z % quarter)
+    }
+
+    /// Run `op` up to `attempts` times, sleeping the backoff between
+    /// tries and bumping the process-wide `net_retries` counter per
+    /// retry. Returns the last error if every attempt fails.
+    pub fn run<T, E>(&self, mut op: impl FnMut(u32) -> Result<T, E>) -> Result<T, E> {
+        let mut last: Option<E> = None;
+        for attempt in 0..self.attempts {
+            let pause = self.backoff(attempt);
+            if !pause.is_zero() {
+                super::stats().note_net_retry();
+                std::thread::sleep(pause);
+            }
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("attempts >= 1, so at least one op ran"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(d.expired());
+        assert!(d.remaining().is_none());
+        let far = Deadline::after_ms(60_000);
+        assert!(!far.expired());
+        assert!(far.min(d).expired(), "min picks the earlier deadline");
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_deterministic() {
+        let p = RetryPolicy::new(8, 10, 80, 7);
+        assert_eq!(p.backoff(0), Duration::ZERO, "first try is immediate");
+        let b1 = p.backoff(1);
+        let b2 = p.backoff(2);
+        let b3 = p.backoff(3);
+        assert!(b1 >= Duration::from_millis(10) && b1 < Duration::from_millis(13));
+        assert!(b2 >= Duration::from_millis(20) && b2 < Duration::from_millis(26));
+        assert!(b3 >= Duration::from_millis(40) && b3 < Duration::from_millis(51));
+        // Cap: attempt 7 would be 640ms uncapped.
+        assert!(p.backoff(7) < Duration::from_millis(101));
+        // Deterministic: same salt+attempt, same jitter.
+        assert_eq!(p.backoff(3), RetryPolicy::new(8, 10, 80, 7).backoff(3));
+    }
+
+    #[test]
+    fn run_retries_until_success_and_bounds_attempts() {
+        let p = RetryPolicy::new(4, 1, 2, 0);
+        let mut calls = 0u32;
+        let r: Result<u32, &str> = p.run(|a| {
+            calls += 1;
+            if a < 2 {
+                Err("not yet")
+            } else {
+                Ok(a)
+            }
+        });
+        assert_eq!(r, Ok(2));
+        assert_eq!(calls, 3);
+
+        let mut calls = 0u32;
+        let r: Result<(), &str> = p.run(|_| {
+            calls += 1;
+            Err("always")
+        });
+        assert_eq!(r, Err("always"));
+        assert_eq!(calls, 4, "bounded by the attempt budget");
+    }
+}

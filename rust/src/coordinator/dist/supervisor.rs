@@ -1,0 +1,334 @@
+//! Rank lifecycle supervision: spawn, handshake, liveness, bounded
+//! respawn, retirement.
+//!
+//! The supervisor owns one [`RankSlot`] per configured rank. A slot
+//! cycles through: *spawned* (child process or thread launched) →
+//! *connected* (Hello/Welcome handshake done) → *dead* (timeout, EOF,
+//! corrupt frame — [`Supervisor::declare_dead`]) → *respawned* (within
+//! the per-rank budget, mirroring the serve-worker `MAX_WORKER_RESPAWNS`
+//! design) → … → *retired* once the budget is spent. Retirement flips
+//! training health to `degraded` and the backend reshards the batch over
+//! the survivors — the run keeps going, bit-identically, on fewer ranks.
+//!
+//! Accepts and handshakes run under explicit deadlines (nonblocking
+//! accept + sleep slices — `TcpListener` has no native accept timeout),
+//! so a rank that launches but never says Hello erodes its budget
+//! instead of wedging the coordinator.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{DistConfig, ExperimentConfig, RankMode};
+use crate::resil::{set_train_health, HEALTH_DEGRADED};
+
+use super::rank::{run_rank, ConnectPolicy};
+use super::retry::Deadline;
+use super::wire::{self, Message};
+use super::{stats, PROTO_VERSION};
+
+/// How a spawned rank is hosted — owned so death handling can reap it.
+enum RankBody {
+    Process(std::process::Child),
+    /// The thread exits on socket shutdown/EOF by itself; the handle is
+    /// kept only so tests can observe it was real. Never blocking-joined
+    /// from the supervisor (a stalled rank would stall death handling).
+    Thread(#[allow(dead_code)] std::thread::JoinHandle<()>),
+}
+
+/// One configured rank's supervision state.
+pub struct RankSlot {
+    pub rank_id: u32,
+    /// Live, handshaken connection (None = needs spawn/handshake).
+    pub conn: Option<TcpStream>,
+    body: Option<RankBody>,
+    /// Completed respawns so far.
+    pub respawns: u32,
+    /// Budget spent: the rank is out of the run for good.
+    pub retired: bool,
+    /// Whether this connection has received the current mask set.
+    pub has_masks: bool,
+}
+
+pub struct Supervisor {
+    cfg: DistConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
+    /// Slots in rank-id order — the fold order. Never reordered.
+    pub slots: Vec<RankSlot>,
+    /// Welcome payload pieces (what a stateless rank needs).
+    heads: u32,
+    layers: u32,
+    exec_cfg: crate::exec::ExecConfig,
+}
+
+impl Supervisor {
+    pub fn new(exp: &ExperimentConfig) -> Result<Self> {
+        let cfg = exp.dist.clone();
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind coordinator listener")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr().context("coordinator listener addr")?;
+        let slots = (0..cfg.ranks)
+            .map(|i| RankSlot {
+                rank_id: i as u32,
+                conn: None,
+                body: None,
+                respawns: 0,
+                retired: false,
+                has_masks: false,
+            })
+            .collect();
+        stats().ranks_configured.store(cfg.ranks as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(Supervisor {
+            cfg,
+            listener,
+            addr,
+            slots,
+            heads: exp.model.heads as u32,
+            layers: exp.model.layers as u32,
+            exec_cfg: exp.exec,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Indices of slots still in the run (connected or awaiting respawn).
+    pub fn live_indices(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| !self.slots[i].retired).collect()
+    }
+
+    fn spawn(&mut self, idx: usize) -> Result<()> {
+        let rank_id = self.slots[idx].rank_id;
+        let body = match self.cfg.mode {
+            RankMode::Process => {
+                let exe = std::env::current_exe().context("resolve own binary for rank spawn")?;
+                let child = std::process::Command::new(exe)
+                    .arg("__rank")
+                    .arg("--rank-id")
+                    .arg(rank_id.to_string())
+                    .arg("--coord-addr")
+                    .arg(self.addr.to_string())
+                    .arg("--connect-timeout-ms")
+                    .arg(self.cfg.connect_timeout_ms.to_string())
+                    .arg("--connect-retries")
+                    .arg(self.cfg.connect_retries.to_string())
+                    .arg("--backoff-base-ms")
+                    .arg(self.cfg.backoff_base_ms.to_string())
+                    .arg("--backoff-max-ms")
+                    .arg(self.cfg.backoff_max_ms.to_string())
+                    .spawn()
+                    .with_context(|| format!("spawn rank {rank_id}"))?;
+                RankBody::Process(child)
+            }
+            RankMode::Thread => {
+                let policy = ConnectPolicy::from_dist(&self.cfg);
+                let addr = self.addr.to_string();
+                let handle = std::thread::Builder::new()
+                    .name(format!("spion-rank-{rank_id}"))
+                    .spawn(move || {
+                        if let Err(e) = run_rank(rank_id, &addr, policy) {
+                            eprintln!("[dist] rank {rank_id} exited: {e:#}");
+                        }
+                    })
+                    .with_context(|| format!("spawn rank thread {rank_id}"))?;
+                RankBody::Thread(handle)
+            }
+        };
+        self.slots[idx].body = Some(body);
+        Ok(())
+    }
+
+    /// Spawn every non-retired, unconnected slot and handshake the
+    /// incoming connections, all under one bounded deadline. Slots that
+    /// fail to connect in time are declared dead (eroding their budget);
+    /// the caller's step-retry loop decides whether to try again.
+    pub fn ensure_live(&mut self) -> Result<()> {
+        let mut waiting: Vec<usize> = Vec::new();
+        for i in 0..self.slots.len() {
+            if !self.slots[i].retired && self.slots[i].conn.is_none() {
+                if self.slots[i].body.is_none() {
+                    self.spawn(i)?;
+                }
+                waiting.push(i);
+            }
+        }
+        if waiting.is_empty() {
+            return Ok(());
+        }
+        // Budget: every configured connect attempt's timeout plus its
+        // worst-case backoff — bounded, never infinite.
+        let per_rank = self.cfg.connect_timeout_ms
+            + self.cfg.connect_retries as u64 * self.cfg.backoff_max_ms;
+        let deadline = Deadline::after_ms(per_rank.max(self.cfg.connect_timeout_ms * 2));
+        while !waiting.is_empty() && !deadline.expired() {
+            match self.listener.accept() {
+                Ok((mut conn, _peer)) => {
+                    conn.set_nonblocking(false).ok();
+                    conn.set_nodelay(true).ok();
+                    match self.handshake(&mut conn) {
+                        Ok(rank_id) => {
+                            if let Some(pos) =
+                                waiting.iter().position(|&i| self.slots[i].rank_id == rank_id)
+                            {
+                                let idx = waiting.swap_remove(pos);
+                                self.slots[idx].conn = Some(conn);
+                                self.slots[idx].has_masks = false;
+                            }
+                            // A Hello from a rank we are not waiting on
+                            // (stale respawn racing its own death) is
+                            // dropped: the conn closes, the rank exits.
+                        }
+                        Err(e) => {
+                            eprintln!("[dist] handshake rejected: {e:#}");
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("coordinator accept failed: {e}")),
+            }
+        }
+        for idx in waiting {
+            self.declare_dead(idx, "never completed the handshake");
+        }
+        if self.live_indices().is_empty() {
+            return Err(anyhow!(
+                "no live ranks: all {} rank(s) retired after exhausting their respawn budgets",
+                self.slots.len()
+            ));
+        }
+        self.update_live_gauge();
+        Ok(())
+    }
+
+    fn handshake(&self, conn: &mut TcpStream) -> Result<u32> {
+        let d = Deadline::after_ms(self.cfg.connect_timeout_ms);
+        let rank_id = match wire::read_frame(conn, d) {
+            Ok(Message::Hello { rank_id, proto }) => {
+                if proto != PROTO_VERSION {
+                    return Err(anyhow!(
+                        "rank {rank_id} speaks protocol {proto}, coordinator speaks {PROTO_VERSION}"
+                    ));
+                }
+                rank_id
+            }
+            Ok(other) => return Err(anyhow!("expected hello, got {}", other.kind_name())),
+            Err(e) => return Err(anyhow!("hello read failed: {e}")),
+        };
+        let welcome = Message::Welcome {
+            heads: self.heads,
+            layers: self.layers,
+            heartbeat_ms: self.cfg.heartbeat_timeout_ms,
+            exec: self.exec_cfg,
+        };
+        wire::write_frame(conn, &welcome, Deadline::after_ms(self.cfg.connect_timeout_ms))
+            .map_err(|e| anyhow!("welcome send failed: {e}"))?;
+        Ok(rank_id)
+    }
+
+    /// Take a rank out of the live set: drop (and shut down) its
+    /// connection, reap its body, and either queue a respawn (within
+    /// budget) or retire it — retirement degrades training health and
+    /// the caller reshards over the survivors.
+    pub fn declare_dead(&mut self, idx: usize, why: &str) {
+        if self.slots[idx].retired {
+            return;
+        }
+        let respawned = {
+            let slot = &mut self.slots[idx];
+            let rank_id = slot.rank_id;
+            stats().rank_deaths.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if let Some(conn) = slot.conn.take() {
+                let _ = conn.shutdown(std::net::Shutdown::Both);
+            }
+            if let Some(body) = slot.body.take() {
+                match body {
+                    RankBody::Process(mut child) => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                    RankBody::Thread(_handle) => {
+                        // Socket shutdown above unblocks the thread; it
+                        // exits on its own bounded deadlines. Detach.
+                    }
+                }
+            }
+            slot.has_masks = false;
+            if slot.respawns < self.cfg.respawn_budget {
+                slot.respawns += 1;
+                stats().rank_respawns.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                eprintln!(
+                    "[dist] rank {rank_id} dead ({why}) — respawn {}/{}",
+                    slot.respawns, self.cfg.respawn_budget
+                );
+                true
+            } else {
+                slot.retired = true;
+                stats().rank_retired.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                set_train_health(HEALTH_DEGRADED);
+                false
+            }
+        };
+        if !respawned {
+            eprintln!(
+                "[dist] rank {} dead ({why}) — respawn budget exhausted, retiring; \
+                 training degraded to {} rank(s)",
+                self.slots[idx].rank_id,
+                self.live_indices().len()
+            );
+        }
+        self.update_live_gauge();
+    }
+
+    fn update_live_gauge(&self) {
+        let live = self.slots.iter().filter(|s| !s.retired && s.conn.is_some()).count();
+        stats().ranks_live.store(live as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Graceful teardown: best-effort `Shutdown` frame to every live
+    /// rank, then close connections and reap children. Bounded — a rank
+    /// that ignores the frame is killed (process) or detached (thread).
+    pub fn shutdown(&mut self) {
+        for slot in &mut self.slots {
+            if let Some(mut conn) = slot.conn.take() {
+                let _ =
+                    wire::write_frame(&mut conn, &Message::Shutdown, Deadline::after_ms(200));
+                let _ = conn.shutdown(std::net::Shutdown::Both);
+            }
+            if let Some(body) = slot.body.take() {
+                match body {
+                    RankBody::Process(mut child) => {
+                        // Give the rank a moment to exit on the Shutdown
+                        // frame, then make sure.
+                        let deadline = Deadline::after_ms(500);
+                        loop {
+                            match child.try_wait() {
+                                Ok(Some(_)) => break,
+                                Ok(None) if deadline.expired() => {
+                                    let _ = child.kill();
+                                    let _ = child.wait();
+                                    break;
+                                }
+                                Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                    RankBody::Thread(_handle) => {}
+                }
+            }
+        }
+        self.update_live_gauge();
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -9,11 +9,13 @@
 
 pub mod backend;
 pub mod checkpoint;
+pub mod dist;
 pub mod native;
 pub mod phase;
 pub mod trainer;
 
 pub use backend::{run_training, save_outcome_checkpoint, BackendSnapshot, StepStats, TrainerBackend};
+pub use dist::DistBackend;
 pub use native::{NativeBackend, NativeTrainer};
 pub use phase::TransitionDetector;
 pub use trainer::{PjrtBackend, TrainOutcome, Trainer};

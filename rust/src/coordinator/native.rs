@@ -44,7 +44,7 @@ use super::trainer::TrainOutcome;
 
 /// Shape validation shared by the façade and the backend — fail fast at
 /// construction, not at step 0.
-fn validate(exp: &ExperimentConfig) -> Result<()> {
+pub(crate) fn validate(exp: &ExperimentConfig) -> Result<()> {
     let m = &exp.model;
     if m.heads == 0 || m.d_model % m.heads != 0 {
         return Err(anyhow!("d_model {} not divisible by heads {}", m.d_model, m.heads));
@@ -67,7 +67,7 @@ fn validate(exp: &ExperimentConfig) -> Result<()> {
 
 /// Accuracy over the fixed eval set (same stream the PJRT trainer
 /// evaluates on), through the rust-native encoder.
-fn evaluate_params(
+pub(crate) fn evaluate_params(
     exec: &Exec,
     exp: &ExperimentConfig,
     params: &ModelParams,
@@ -341,7 +341,7 @@ impl NativeTrainer {
 
 /// Copy a resume section's momentum buffer into a fresh optimizer; the
 /// slice layout must match the model exactly (manifest order).
-fn restore_velocity(opt: &mut SgdMomentum, ck: &Checkpoint) -> Result<()> {
+pub(crate) fn restore_velocity(opt: &mut SgdMomentum, ck: &Checkpoint) -> Result<()> {
     let rs = ck.resume.as_ref().expect("caller verified the resume section exists");
     let mut slices = opt.velocity_mut().slices_mut();
     if slices.len() != rs.velocity.len() {
@@ -405,6 +405,7 @@ mod tests {
             http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
+            dist: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

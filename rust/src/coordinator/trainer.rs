@@ -443,6 +443,7 @@ mod tests {
             http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
+            dist: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     }

@@ -34,4 +34,7 @@ pub mod coordinator;
 pub mod serve;
 pub mod metrics;
 pub mod obs;
+// The fault registry and health/shutdown flags sit on every robustness
+// path (train + serve + dist); same no-unwrap rule (tests opt back in).
+#[deny(clippy::unwrap_used)]
 pub mod resil;

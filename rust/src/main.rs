@@ -29,6 +29,9 @@ fn main() {
         "data" => run_data(&args),
         "serve" => run_serve(&args),
         "presets" => run_presets(&args),
+        // Hidden: worker-rank entry point for `spion train --ranks N`
+        // (process mode re-execs the current binary with this subcommand).
+        "__rank" => run_rank_cmd(&args),
         _ => {
             print_help();
             Ok(())
@@ -53,6 +56,13 @@ fn print_help() {
          \x20           --checkpoint-keep K   retain the last K periodic checkpoints (default 3)\n\
          \x20           --resume PATH         continue an interrupted run bit-identically\n\
          \x20           (native backend; restores optimizer momentum, RNG and detector state)\n\
+         \x20           --ranks N             multi-process data-parallel training (native\n\
+         \x20           backend): N worker ranks over local TCP, bit-identical to --ranks 0\n\
+         \x20           at any N; ranks are supervised — heartbeat/step timeouts, bounded\n\
+         \x20           respawn, degraded resharding ([dist] in TOML tunes the budgets)\n\
+         \x20           --rank-mode process|thread  rank isolation (thread = tests/CI)\n\
+         \x20           SIGTERM finishes the current step, writes a resumable checkpoint\n\
+         \x20           and exits 0 (\"resumable at step N\")\n\
          \x20 pattern   --variant cf --l 256 --block 16 --alpha 0.9\n\
          \x20 ops       --l 4096 --d 64 --density 0.1\n\
          \x20 data      --task listops --n 3\n\
@@ -73,9 +83,11 @@ fn print_help() {
          \x20           resolve the backlog with typed errors, flush metrics\n\
          \x20 presets\n\n\
          RESILIENCE (`[resil]` in TOML or SPION_FAULTS env):\n\
-         \x20 SPION_FAULTS=p1,p2     arm fault points (ckpt-write worker-panic queue-slow io-err)\n\
+         \x20 SPION_FAULTS=p1,p2     arm fault points (ckpt-write worker-panic queue-slow io-err\n\
+         \x20                        rank-kill conn-drop rank-slow)\n\
          \x20 SPION_FAULT_PROB=0.5   per-hit firing probability (seeded, deterministic)\n\
          \x20 SPION_FAULT_AFTER=N    ignore the first N-1 hits   SPION_FAULT_KILL=1 exit(42) on fire\n\
+         \x20 SPION_DIST_FAULT_RANK=I  restrict rank-level faults to worker rank I\n\
          GLOBAL OPTIONS:\n\
          \x20 --workers N        parallel execution workers (0 = all cores; default 1 = serial)\n\
          \x20 --chunk-blocks N   block rows per scheduling chunk (0 = auto)\n\
@@ -167,6 +179,30 @@ fn obs_from_args(args: &Args, d: spion::obs::ObsConfig) -> spion::obs::ObsConfig
     }
 }
 
+/// Distributed-training config from the CLI flags over `d` (a config
+/// file's `[dist]` section, or the disabled default). `--ranks 0` keeps
+/// the single-process path; timeouts/budgets are TOML-first with flag
+/// overrides for the chaos harness.
+fn dist_from_args(args: &Args, d: spion::config::DistConfig) -> Result<spion::config::DistConfig> {
+    let mode = match args.get("rank-mode") {
+        Some(m) => spion::config::RankMode::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown --rank-mode {m} (process|thread)"))?,
+        None => d.mode,
+    };
+    Ok(spion::config::DistConfig {
+        ranks: args.usize_or("ranks", d.ranks),
+        mode,
+        heartbeat_timeout_ms: args.u64_or("heartbeat-timeout-ms", d.heartbeat_timeout_ms),
+        step_timeout_ms: args.u64_or("step-timeout-ms", d.step_timeout_ms),
+        connect_timeout_ms: args.u64_or("connect-timeout-ms", d.connect_timeout_ms),
+        connect_retries: args.u64_or("connect-retries", d.connect_retries as u64) as u32,
+        backoff_base_ms: args.u64_or("backoff-base-ms", d.backoff_base_ms),
+        backoff_max_ms: args.u64_or("backoff-max-ms", d.backoff_max_ms),
+        respawn_budget: args.u64_or("respawn-budget", d.respawn_budget as u64) as u32,
+        step_retries: args.u64_or("step-retries", d.step_retries as u64) as u32,
+    })
+}
+
 /// Build an [`ExperimentConfig`] from CLI flags (or a `--config` TOML file).
 pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(path) = args.get("config") {
@@ -206,6 +242,8 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         exp.http = http_from_args(args, exp.http)?;
         // …and CLI obs flags the file's [obs] section.
         exp.obs = obs_from_args(args, exp.obs);
+        // CLI dist flags (--ranks et al.) override the file's [dist] section.
+        exp.dist = dist_from_args(args, exp.dist)?;
         if args.has("checkpoint-every") {
             exp.train.checkpoint_every = Some(args.usize_or("checkpoint-every", 1));
         }
@@ -254,6 +292,7 @@ pub fn experiment_from_args(args: &Args) -> Result<ExperimentConfig> {
         http: http_from_args(args, Default::default())?,
         obs: obs_from_args(args, Default::default()),
         resil: Default::default(),
+        dist: dist_from_args(args, Default::default())?,
         artifacts_dir: args.str_or("artifacts", "artifacts"),
     };
     exp.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -273,9 +312,35 @@ fn arm_faults(exp: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Hidden `spion __rank` entry point: one worker rank of a `--ranks N`
+/// run. The supervisor re-execs the current binary with these flags; a
+/// human never types them. All state arrives over the wire (Welcome
+/// carries the model shape + kernel config; Params re-broadcasts every
+/// step), so a respawned rank needs nothing but the coordinator address.
+fn run_rank_cmd(args: &Args) -> Result<()> {
+    use spion::coordinator::dist::ConnectPolicy;
+    let rank_id = args.u64_or("rank-id", 0) as u32;
+    let coord_addr = args
+        .get("coord-addr")
+        .ok_or_else(|| anyhow::anyhow!("__rank requires --coord-addr"))?;
+    let policy = ConnectPolicy {
+        connect_timeout_ms: args.u64_or("connect-timeout-ms", 1000),
+        connect_retries: args.u64_or("connect-retries", 8) as u32,
+        backoff_base_ms: args.u64_or("backoff-base-ms", 10),
+        backoff_max_ms: args.u64_or("backoff-max-ms", 500),
+    };
+    // Faults arm from the env only (the env is inherited from the
+    // coordinator; SPION_DIST_FAULT_RANK gates rank-level sites).
+    spion::resil::fault::arm_from_env().map_err(|e| anyhow::anyhow!(e))?;
+    spion::coordinator::dist::run_rank(rank_id, coord_addr, policy)
+}
+
 fn run_train(args: &Args) -> Result<()> {
     let exp = experiment_from_args(args)?;
     arm_faults(&exp)?;
+    // SIGTERM on train = finish the current step, write a resumable
+    // checkpoint, exit 0 (the handler only stores atomics).
+    install_sigterm_handler();
     let obs_cfg = exp.obs.clone();
     spion::obs::init(&obs_cfg);
     println!(
@@ -314,11 +379,19 @@ fn run_train(args: &Args) -> Result<()> {
         // One driver, one trait object: --backend picks the TrainerBackend
         // impl; phases/transition/checkpointing are shared in run_training.
         let rt;
-        let mut backend: Box<dyn TrainerBackend + '_> = match exp.train.backend {
-            TrainBackend::Native => Box::new(NativeBackend::new(exp)?),
-            TrainBackend::Pjrt => {
+        let mut backend: Box<dyn TrainerBackend + '_> = match (exp.train.backend, exp.dist.ranks) {
+            (TrainBackend::Native, 0) => Box::new(NativeBackend::new(exp)?),
+            // --ranks N: coordinator-authoritative multi-rank data parallel;
+            // bit-identical to the single-process native backend at any N.
+            (TrainBackend::Native, _) => {
+                Box::new(spion::coordinator::DistBackend::new(exp)?)
+            }
+            (TrainBackend::Pjrt, 0) => {
                 rt = Runtime::cpu()?;
                 Box::new(PjrtBackend::new(&rt, exp)?)
+            }
+            (TrainBackend::Pjrt, _) => {
+                anyhow::bail!("--ranks is supported by the native backend only")
             }
         };
         if let Some(ck) = &resume_ck {
@@ -452,7 +525,10 @@ static SIGTERM_RECEIVED: std::sync::atomic::AtomicBool =
 #[cfg(unix)]
 fn install_sigterm_handler() {
     extern "C" fn on_sigterm(_sig: i32) {
+        // Both are single atomic stores — async-signal-safe. The library
+        // flag lets run_training stop at the next step boundary.
         SIGTERM_RECEIVED.store(true, std::sync::atomic::Ordering::Relaxed);
+        spion::resil::request_shutdown();
     }
     extern "C" {
         fn signal(signum: i32, handler: usize) -> usize;
@@ -538,6 +614,7 @@ fn run_serve(args: &Args) -> Result<()> {
                 http: Default::default(),
                 obs: Default::default(),
                 resil: Default::default(),
+                dist: Default::default(),
                 artifacts_dir: args.str_or("artifacts", "artifacts"),
             };
             let mut rng = spion::util::rng::Rng::new(11);

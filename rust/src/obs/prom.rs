@@ -274,6 +274,105 @@ pub fn render(sources: &Sources) -> String {
         &r.checkpoint_write.snapshot(),
     );
 
+    // Distributed-training families: gated on ranks_configured > 0 so the
+    // page stays clean for single-process runs, but the gate itself (plus
+    // the train-health gauge below) always renders.
+    let d = crate::coordinator::dist::stats();
+    let ranks_configured = d.ranks_configured.load(Ordering::Relaxed);
+    help_line(
+        &mut out,
+        "spion_dist_ranks_configured",
+        "gauge",
+        "Worker ranks the run was configured with (0 = single-process).",
+    );
+    let _ = writeln!(out, "spion_dist_ranks_configured {ranks_configured}");
+    if ranks_configured > 0 {
+        help_line(
+            &mut out,
+            "spion_dist_ranks_live",
+            "gauge",
+            "Worker ranks currently connected and not retired.",
+        );
+        let _ = writeln!(out, "spion_dist_ranks_live {}", d.ranks_live.load(Ordering::Relaxed));
+        let dist_counters: [(&str, u64, &str); 6] = [
+            (
+                "rank_deaths",
+                d.rank_deaths.load(Ordering::Relaxed),
+                "Ranks declared dead (heartbeat/step timeout, EOF, corrupt frame).",
+            ),
+            (
+                "rank_respawns",
+                d.rank_respawns.load(Ordering::Relaxed),
+                "Ranks respawned after a death (bounded by dist.respawn_budget).",
+            ),
+            (
+                "rank_retired",
+                d.rank_retired.load(Ordering::Relaxed),
+                "Ranks retired after respawn-budget exhaustion (training degraded).",
+            ),
+            (
+                "step_retries",
+                d.step_retries.load(Ordering::Relaxed),
+                "Training steps replayed from the barrier after a rank failure.",
+            ),
+            (
+                "net_retries",
+                d.net_retries.load(Ordering::Relaxed),
+                "Network-level retry attempts (connect/backoff sleeps taken).",
+            ),
+            (
+                "heartbeats",
+                d.heartbeats.load(Ordering::Relaxed),
+                "Heartbeat frames observed by the coordinator.",
+            ),
+        ];
+        for (name, v, help) in dist_counters {
+            let full = format!("spion_dist_{name}_total");
+            help_line(&mut out, &full, "counter", help);
+            let _ = writeln!(out, "{full} {v}");
+        }
+        help_line(
+            &mut out,
+            "spion_dist_step_seconds",
+            "summary",
+            "Per-rank wall time from step send to gradient receipt.",
+        );
+        for rank in 0..ranks_configured.min(crate::coordinator::dist::MAX_RANKS as u64) {
+            let s = d.step_latency[rank as usize].snapshot();
+            if s.count == 0 {
+                continue;
+            }
+            emit_summary(&mut out, "spion_dist_step_seconds", &format!("rank=\"{rank}\""), &s);
+        }
+        help_line(
+            &mut out,
+            "spion_dist_heartbeat_age_ms",
+            "gauge",
+            "Milliseconds between the last two frames seen from each rank.",
+        );
+        for rank in 0..ranks_configured.min(crate::coordinator::dist::MAX_RANKS as u64) {
+            let _ = writeln!(
+                out,
+                "spion_dist_heartbeat_age_ms{{rank=\"{rank}\"}} {}",
+                d.heartbeat_age_ms[rank as usize].load(Ordering::Relaxed)
+            );
+        }
+    }
+    // Train-side health mirror of `spion_serve_health`: flipped to
+    // degraded when a rank exhausts its respawn budget and is retired.
+    let th = crate::resil::train_health();
+    help_line(
+        &mut out,
+        "spion_train_health",
+        "gauge",
+        "Training health: 0 = ok, 1 = degraded (rank retired, resharded).",
+    );
+    let _ = writeln!(
+        out,
+        "spion_train_health{{state=\"{}\"}} {th}",
+        crate::resil::health_name(th)
+    );
+
     if let Some(health) = &sources.health {
         let h = health.load(Ordering::Relaxed);
         help_line(
@@ -315,6 +414,34 @@ mod tests {
         health.store(crate::resil::HEALTH_DEGRADED, Ordering::Relaxed);
         let text = render(&Sources { health: Some(health), ..Default::default() });
         assert!(text.contains("spion_serve_health{state=\"degraded\"} 1"));
+    }
+
+    #[test]
+    fn dist_families_render_when_ranks_configured() {
+        let d = crate::coordinator::dist::stats();
+        // The gate gauge and train-health mirror render unconditionally.
+        let text = render(&Sources::default());
+        assert!(text.contains("spion_dist_ranks_configured"));
+        assert!(text.contains("spion_train_health{state=\""));
+        // Configure two ranks and exercise the counters: the full family
+        // set must render, including zero-valued counters and the
+        // per-rank gauges for every configured rank.
+        let prev = d.ranks_configured.swap(2, Ordering::Relaxed);
+        d.ranks_live.store(2, Ordering::Relaxed);
+        d.note_heartbeat(1, 42);
+        d.step_latency[0].record(1_500_000);
+        let text = render(&Sources::default());
+        d.ranks_configured.store(prev, Ordering::Relaxed);
+        assert!(text.contains("spion_dist_ranks_configured 2"));
+        assert!(text.contains("spion_dist_ranks_live 2"));
+        assert!(text.contains("spion_dist_rank_deaths_total"));
+        assert!(text.contains("spion_dist_rank_respawns_total"));
+        assert!(text.contains("spion_dist_rank_retired_total"));
+        assert!(text.contains("spion_dist_step_retries_total"));
+        assert!(text.contains("spion_dist_net_retries_total"));
+        assert!(text.contains("spion_dist_heartbeats_total"));
+        assert!(text.contains("spion_dist_step_seconds_count{rank=\"0\"}"));
+        assert!(text.contains("spion_dist_heartbeat_age_ms{rank=\"1\"} 42"));
     }
 
     #[test]

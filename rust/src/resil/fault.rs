@@ -33,18 +33,31 @@ pub const KILL_EXIT_CODE: i32 = 42;
 /// | `ckpt-write`   | `Checkpoint::save`, before rename | write error (tmp left)     |
 /// | `worker-panic` | serve worker, before forward      | panic (supervised)         |
 /// | `queue-slow`   | serve worker, batch start         | 2 ms stall                 |
-/// | `io-err`       | `Checkpoint::load`, after open    | read error                 |
+/// | `io-err`       | `Checkpoint::load`, after open; retention delete | read error / delete skipped |
+/// | `rank-kill`    | dist rank, on step receipt        | rank drops conn + exits    |
+/// | `conn-drop`    | dist wire, mid-frame write        | half a frame, then close   |
+/// | `rank-slow`    | dist rank, before step compute    | straggler stall            |
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultPoint {
     CkptWrite,
     WorkerPanic,
     QueueSlow,
     IoErr,
+    RankKill,
+    ConnDrop,
+    RankSlow,
 }
 
-pub const N_POINTS: usize = 4;
-pub const ALL_POINTS: [FaultPoint; N_POINTS] =
-    [FaultPoint::CkptWrite, FaultPoint::WorkerPanic, FaultPoint::QueueSlow, FaultPoint::IoErr];
+pub const N_POINTS: usize = 7;
+pub const ALL_POINTS: [FaultPoint; N_POINTS] = [
+    FaultPoint::CkptWrite,
+    FaultPoint::WorkerPanic,
+    FaultPoint::QueueSlow,
+    FaultPoint::IoErr,
+    FaultPoint::RankKill,
+    FaultPoint::ConnDrop,
+    FaultPoint::RankSlow,
+];
 
 impl FaultPoint {
     pub fn name(&self) -> &'static str {
@@ -53,6 +66,9 @@ impl FaultPoint {
             FaultPoint::WorkerPanic => "worker-panic",
             FaultPoint::QueueSlow => "queue-slow",
             FaultPoint::IoErr => "io-err",
+            FaultPoint::RankKill => "rank-kill",
+            FaultPoint::ConnDrop => "conn-drop",
+            FaultPoint::RankSlow => "rank-slow",
         }
     }
 
@@ -66,6 +82,9 @@ impl FaultPoint {
             FaultPoint::WorkerPanic => 1,
             FaultPoint::QueueSlow => 2,
             FaultPoint::IoErr => 3,
+            FaultPoint::RankKill => 4,
+            FaultPoint::ConnDrop => 5,
+            FaultPoint::RankSlow => 6,
         }
     }
 }

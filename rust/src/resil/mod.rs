@@ -44,6 +44,39 @@ pub fn new_health() -> Health {
     Arc::new(AtomicU8::new(HEALTH_OK))
 }
 
+/// Training-side health (the dist supervisor flips this to `degraded`
+/// when a rank's respawn budget is exhausted and the run continues on
+/// fewer ranks). Separate from the serve engine's per-instance `Health`
+/// cell because training has exactly one run per process.
+static TRAIN_HEALTH: AtomicU8 = AtomicU8::new(HEALTH_OK);
+
+pub fn train_health() -> u8 {
+    TRAIN_HEALTH.load(Ordering::Relaxed)
+}
+
+pub fn set_train_health(h: u8) {
+    TRAIN_HEALTH.store(h, Ordering::Relaxed);
+}
+
+/// Cooperative-shutdown flag shared between the binary's signal handler
+/// and library-side loops (`run_training` checks it after every completed
+/// step; a raw SIGTERM handler may only do async-signal-safe work, and a
+/// relaxed store is). Sticky until [`clear_shutdown`].
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::Relaxed);
+}
+
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::Relaxed)
+}
+
+/// Reset the flag (tests; also lets one process run train twice).
+pub fn clear_shutdown() {
+    SHUTDOWN.store(false, Ordering::Relaxed);
+}
+
 /// Process-wide monotonic resilience counters (the `spion_resil_*`
 /// Prometheus families).
 pub struct ResilStats {

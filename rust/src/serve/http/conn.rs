@@ -168,6 +168,16 @@ impl Conn {
             if let Some(pos) = find_header_end(&self.buf) {
                 break pos;
             }
+            // Slow-loris guard: a client trickling one byte per read keeps
+            // every `fill` successful, so the deadline check inside the
+            // timeout branch never runs — enforce it between reads too.
+            if idle_start.elapsed() >= self.limits.idle_timeout {
+                return if self.buf.is_empty() {
+                    Err(ParseError::IdleTimeout)
+                } else {
+                    Err(bad(408, "request head not completed within the idle timeout"))
+                };
+            }
             if self.buf.len() > self.limits.max_header_bytes {
                 return Err(bad(431, format!(
                     "request head exceeds {} bytes",
@@ -240,6 +250,11 @@ impl Conn {
         // Phase 2: accumulate the body.
         let body_start = head_len + sep_len;
         while self.buf.len() < body_start + content_len {
+            // Same slow-loris guard as the header loop: a trickled body
+            // must hit the 408, not pin the connection worker.
+            if idle_start.elapsed() >= self.limits.idle_timeout {
+                return Err(bad(408, "request body not completed within the idle timeout"));
+            }
             match self.fill(stop, idle_start, false)? {
                 0 => {
                     return Err(ParseError::Io(std::io::Error::new(

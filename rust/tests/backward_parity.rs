@@ -295,6 +295,7 @@ fn micro_exp(workers: usize, kernel: KernelConfig) -> ExperimentConfig {
         http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
+        dist: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -16,7 +16,14 @@
 //!   serving (respawn) until the budget is exhausted (degraded);
 //! * deadline shedding is reachable and counted when workers stall;
 //! * an interrupted-then-resumed training run is bit-identical to the
-//!   uninterrupted one.
+//!   uninterrupted one;
+//! * a shutdown request (the library face of SIGTERM) stops training at
+//!   the step boundary with a forced resumable checkpoint, and SIGTERM
+//!   to a real `spion train` process exits 0 with that checkpoint;
+//! * retention pruning under injected `io-err` deletes never touches the
+//!   newest valid checkpoint, and a torn `.tmp` staging file left by a
+//!   crash in the `ckpt-write` window is swept (never loaded) on the
+//!   next run.
 
 use spion::config::types::SparsityConfig;
 use spion::config::{ExperimentConfig, ModelConfig, PatternKind, TaskKind, TrainConfig};
@@ -357,6 +364,7 @@ fn micro_exp(steps: usize, workers: usize) -> ExperimentConfig {
         http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
+        dist: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -408,6 +416,213 @@ fn resumed_run_is_bit_identical_to_uninterrupted() {
 
     // Cleanup the retained periodic checkpoints.
     for done in [5usize, 10] {
+        std::fs::remove_file(format!("{base}.step{done:08}")).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graceful shutdown (SIGTERM): stop at the step boundary, resumable,
+// bit-identical.
+// ---------------------------------------------------------------------------
+
+/// RAII clear: a panicking assertion must not leave the process-global
+/// shutdown flag set for the next test (or the engine suites).
+struct ClearShutdown;
+
+impl Drop for ClearShutdown {
+    fn drop(&mut self) {
+        resil::clear_shutdown();
+    }
+}
+
+#[test]
+fn shutdown_request_stops_training_resumably_and_bit_identically() {
+    let _g = locked();
+    let golden = NativeTrainer::new(micro_exp(12, 2))
+        .expect("golden trainer")
+        .run()
+        .expect("golden run");
+
+    // Shutdown requested before the run starts: the driver honors it at
+    // the first step boundary — step 0 completes fully, a checkpoint is
+    // forced (checkpoint_every is None here), and the run returns early.
+    let base = tmp("shutdown.ckpt");
+    let _c = ClearShutdown;
+    resil::request_shutdown();
+    let interrupted = NativeTrainer::new(micro_exp(12, 2))
+        .expect("interrupted trainer")
+        .checkpoint_to(&base)
+        .run()
+        .expect("shutdown is a clean early return, not an error");
+    assert_eq!(interrupted.metrics.records.len(), 1, "stopped after the in-flight step");
+    let r = &interrupted.metrics.records[0];
+    let g = &golden.metrics.records[0];
+    assert_eq!(r.loss.to_bits(), g.loss.to_bits(), "the completed step matches the golden one");
+
+    resil::clear_shutdown();
+    let ck = Checkpoint::load(&format!("{base}.step00000001")).expect("forced final checkpoint");
+    assert!(ck.resume.is_some(), "the shutdown checkpoint carries a resume section");
+
+    let resumed = NativeTrainer::new(micro_exp(12, 2))
+        .expect("resumed trainer")
+        .run_resumed(&ck)
+        .expect("resumed run");
+    assert_eq!(resumed.metrics.records.len(), golden.metrics.records.len());
+    for (r, g) in resumed.metrics.records.iter().zip(&golden.metrics.records) {
+        assert_eq!(r.step, g.step);
+        assert_eq!(r.phase, g.phase, "phase diverged at step {}", g.step);
+        assert_eq!(r.loss.to_bits(), g.loss.to_bits(), "loss diverged at step {}", g.step);
+        assert_eq!(r.acc.to_bits(), g.acc.to_bits(), "acc diverged at step {}", g.step);
+    }
+    assert_eq!(resumed.metrics.transition_step, golden.metrics.transition_step);
+    assert_eq!(
+        resumed.metrics.eval_accuracy.map(f64::to_bits),
+        golden.metrics.eval_accuracy.map(f64::to_bits),
+        "eval accuracy diverged"
+    );
+    assert_eq!(resumed.masks, golden.masks);
+    assert_eq!(resumed.final_params, golden.final_params, "final parameters diverged");
+    std::fs::remove_file(format!("{base}.step00000001")).ok();
+}
+
+#[test]
+#[cfg(unix)]
+fn sigterm_train_process_writes_resumable_checkpoint_and_exits_zero() {
+    let _g = locked();
+    let base = tmp("sigterm.ckpt");
+    // A run long enough that SIGTERM always lands mid-training; the
+    // handler finishes the in-flight step and exits, so the child never
+    // actually runs the full 2000 steps.
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_spion"))
+        .args([
+            "train",
+            "--preset",
+            "tiny",
+            "--backend",
+            "native",
+            "--steps",
+            "2000",
+            "--workers",
+            "2",
+            "--checkpoint-out",
+            &base,
+        ])
+        .env("SPION_EVAL_BATCHES", "1")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn spion train");
+    // Give it time to install the handler and complete at least one step.
+    std::thread::sleep(Duration::from_millis(1500));
+    let kill = std::process::Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("run kill");
+    assert!(kill.success(), "SIGTERM delivered");
+
+    // Bounded wait: a hung child means the graceful path regressed.
+    let deadline = Instant::now() + Duration::from_secs(90);
+    let status = loop {
+        if let Some(st) = child.try_wait().expect("poll child") {
+            break st;
+        }
+        if Instant::now() >= deadline {
+            let _ = std::process::Command::new("kill")
+                .args(["-KILL", &child.id().to_string()])
+                .status();
+            panic!("spion train did not exit within 90 s of SIGTERM");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "SIGTERM exit is clean, got {status:?}");
+
+    let mut stdout = String::new();
+    use std::io::Read as _;
+    child
+        .stdout
+        .take()
+        .expect("piped stdout")
+        .read_to_string(&mut stdout)
+        .expect("read child stdout");
+    let step: usize = stdout
+        .lines()
+        .find_map(|l| l.split("resumable at step ").nth(1))
+        .expect("child printed the resumable line")
+        .trim()
+        .parse()
+        .expect("resumable line ends with the step count");
+    assert!(step >= 1, "at least the in-flight step completed");
+
+    let path = format!("{base}.step{step:08}");
+    let ck = Checkpoint::load(&path).expect("SIGTERM checkpoint loads");
+    assert_eq!(ck.step as usize, step);
+    assert!(ck.resume.is_some(), "SIGTERM checkpoint carries a resume section");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&base).ok(); // final outcome checkpoint from report_train
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint retention hardening: injected delete faults and torn
+// staging files never cost the newest valid checkpoint.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retention_io_err_never_removes_newest_checkpoint() {
+    let _g = locked();
+    let base = tmp("retain.ckpt");
+    let mut exp = micro_exp(12, 1);
+    exp.train.checkpoint_every = Some(2);
+    exp.train.checkpoint_keep = 2;
+    // io-err trips only reads and retention deletes — never the save
+    // path — so the run itself survives at prob 1: 6 checkpoints are
+    // written (steps 2..12) and all 4 prune attempts are injected
+    // failures that must leak the old file rather than kill the run.
+    {
+        let _d = arm(&["io-err"], 1.0, 0, 1);
+        NativeTrainer::new(exp)
+            .expect("trainer")
+            .checkpoint_to(&base)
+            .run()
+            .expect("run survives injected delete faults");
+        assert_eq!(fault::fired_count(FaultPoint::IoErr), 4, "one injection per prune attempt");
+    }
+    // Every checkpoint is still on disk — a failed delete never cascades
+    // into removing anything else — and the newest one is valid.
+    for done in [2usize, 4, 6, 8, 10, 12] {
+        let path = format!("{base}.step{done:08}");
+        assert!(std::path::Path::new(&path).exists(), "{path} was deleted");
+    }
+    let newest = Checkpoint::load(&format!("{base}.step00000012")).expect("newest checkpoint valid");
+    assert!(newest.resume.is_some());
+    for done in [2usize, 4, 6, 8, 10, 12] {
+        std::fs::remove_file(format!("{base}.step{done:08}")).ok();
+    }
+}
+
+#[test]
+fn torn_tmp_staging_file_is_swept_and_never_loaded() {
+    let _g = locked();
+    let base = tmp("torn.ckpt");
+    // A crash inside the ckpt-write window (tmp staged, rename skipped)
+    // leaves exactly this shape behind.
+    let torn = format!("{base}.step00000002.tmp");
+    std::fs::write(&torn, b"torn staging bytes, not a valid checkpoint").expect("plant torn tmp");
+
+    let mut exp = micro_exp(6, 1);
+    exp.train.checkpoint_every = Some(3);
+    let out = NativeTrainer::new(exp)
+        .expect("trainer")
+        .checkpoint_to(&base)
+        .run()
+        .expect("run with a stale tmp in the checkpoint dir");
+    assert!(!std::path::Path::new(&torn).exists(), "stale staging file swept at startup");
+    assert_eq!(out.metrics.records.len(), 6);
+
+    // The sweep only touched `.tmp` names: the real periodic checkpoints
+    // are intact and the garbage bytes never surfaced as a load.
+    let ck = Checkpoint::load(&format!("{base}.step00000003")).expect("real checkpoint intact");
+    assert!(ck.resume.is_some());
+    for done in [3usize, 6] {
         std::fs::remove_file(format!("{base}.step{done:08}")).ok();
     }
 }

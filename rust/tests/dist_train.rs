@@ -1,0 +1,361 @@
+//! Dist-backend gates — the ISSUE-10 acceptance suite.
+//!
+//! Holds the two hard invariants of `coordinator/dist/`:
+//!
+//! * **Determinism**: a multi-rank run (N ∈ {1, 2, 3}, thread mode over
+//!   real localhost sockets) produces a bit-identical trajectory —
+//!   per-step loss/acc bits, phase boundaries, transition step, captured
+//!   masks, final parameters, eval accuracy — to the single-process
+//!   native backend. This holds *across* rank deaths, respawns and
+//!   degraded resharding, because a step is a barrier: the optimizer is
+//!   only applied once every shard arrived, so a replayed step is exact.
+//! * **Supervision**: injected `rank-kill` / `conn-drop` / `rank-slow`
+//!   faults are observed as rank deaths, the supervisor respawns under
+//!   its budget (or retires the rank and degrades training health), and
+//!   the retry counters the Prometheus `spion_dist_*` families export
+//!   actually move.
+//!
+//! Like tests/chaos.rs this binary arms the process-global fault
+//! registry, so every test serializes on one gate and disarms via RAII.
+//! Rank-level faults are scoped to one rank with `SPION_DIST_FAULT_RANK`
+//! (in thread mode the registry is shared with the coordinator — the
+//! env gate is what keeps the blast radius to the chosen rank).
+
+use spion::config::types::SparsityConfig;
+use spion::config::{
+    DistConfig, ExperimentConfig, ModelConfig, PatternKind, RankMode, TaskKind, TrainConfig,
+};
+use spion::coordinator::dist::{self, DistBackend};
+use spion::coordinator::{run_training, NativeTrainer, TrainOutcome};
+use spion::exec::ExecConfig;
+use spion::pattern::SpionVariant;
+use spion::resil;
+use spion::resil::fault::{self, ResilConfig};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Every test takes this gate: the fault registry, the dist counters and
+/// the train-health flag are process-global, so tests must not overlap.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII disarm: a panicking assertion must not leave the registry armed
+/// for the next test.
+struct DisarmGuard;
+
+impl Drop for DisarmGuard {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn arm(points: &[&str], prob: f64, after: u64, seed: u64) -> DisarmGuard {
+    fault::arm(&ResilConfig {
+        faults: points.iter().map(|s| s.to_string()).collect(),
+        prob,
+        after,
+        seed,
+        kill: false,
+    })
+    .expect("valid arming config");
+    DisarmGuard
+}
+
+/// Scope `rank-kill`/`rank-slow` to one rank; unsets the env var on drop.
+struct TargetRankGuard;
+
+impl Drop for TargetRankGuard {
+    fn drop(&mut self) {
+        std::env::remove_var("SPION_DIST_FAULT_RANK");
+    }
+}
+
+fn target_rank(rank: u32) -> TargetRankGuard {
+    std::env::set_var("SPION_DIST_FAULT_RANK", rank.to_string());
+    TargetRankGuard
+}
+
+/// Restore the global train-health flag (a retirement test degrades it).
+struct HealthGuard;
+
+impl Drop for HealthGuard {
+    fn drop(&mut self) {
+        resil::set_train_health(resil::HEALTH_OK);
+    }
+}
+
+/// Cumulative dist counters at one instant; tests assert on deltas
+/// because the stats are process-global and never reset.
+#[derive(Clone, Copy)]
+struct Counters {
+    deaths: u64,
+    respawns: u64,
+    retired: u64,
+    step_retries: u64,
+}
+
+fn counters() -> Counters {
+    let s = dist::stats();
+    Counters {
+        deaths: s.rank_deaths.load(Relaxed),
+        respawns: s.rank_respawns.load(Relaxed),
+        retired: s.rank_retired.load(Relaxed),
+        step_retries: s.step_retries.load(Relaxed),
+    }
+}
+
+/// Same micro experiment as tests/chaos.rs, plus a `[dist]` section in
+/// thread mode (real localhost sockets, ranks hosted as threads so the
+/// seeded fault stream is shared and deterministic).
+fn micro_exp(steps: usize, ranks: usize) -> ExperimentConfig {
+    let model = ModelConfig {
+        preset: "micro".into(),
+        seq_len: 32,
+        d_model: 16,
+        heads: 2,
+        layers: 2,
+        ffn_dim: 32,
+        vocab: 20,
+        classes: 10,
+        batch: 4,
+    };
+    let train = TrainConfig {
+        steps,
+        lr: 0.02,
+        min_dense_steps: 4,
+        max_dense_steps: 8,
+        snapshot_every: 2,
+        ..Default::default()
+    };
+    let mut sparsity = SparsityConfig::new(PatternKind::Spion(SpionVariant::CF), 8, 0.7);
+    sparsity.pattern.filter = 3;
+    ExperimentConfig {
+        task: TaskKind::ListOps,
+        model,
+        train,
+        sparsity,
+        exec: ExecConfig::with_workers(1),
+        serve: Default::default(),
+        http: Default::default(),
+        obs: Default::default(),
+        resil: Default::default(),
+        dist: DistConfig {
+            ranks,
+            mode: RankMode::Thread,
+            heartbeat_timeout_ms: 2000,
+            step_timeout_ms: 10_000,
+            connect_timeout_ms: 2000,
+            connect_retries: 4,
+            backoff_base_ms: 5,
+            backoff_max_ms: 50,
+            respawn_budget: 2,
+            step_retries: 6,
+        },
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+/// The single-process native golden this suite compares everything to.
+fn golden(steps: usize) -> TrainOutcome {
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    NativeTrainer::new(micro_exp(steps, 0))
+        .expect("golden trainer")
+        .run()
+        .expect("golden run")
+}
+
+fn run_dist(exp: ExperimentConfig) -> TrainOutcome {
+    std::env::set_var("SPION_EVAL_BATCHES", "1");
+    let mut backend = DistBackend::new(exp).expect("dist backend starts");
+    run_training(&mut backend, false, None, None).expect("dist run completes")
+}
+
+/// Full bit-compare against the golden outcome (step_ms is wall time and
+/// legitimately differs; everything else must match exactly).
+fn assert_matches_golden(out: &TrainOutcome, golden: &TrainOutcome, label: &str) {
+    assert_eq!(
+        out.metrics.records.len(),
+        golden.metrics.records.len(),
+        "{label}: record count diverged"
+    );
+    for (r, g) in out.metrics.records.iter().zip(&golden.metrics.records) {
+        assert_eq!(r.step, g.step, "{label}: step index diverged");
+        assert_eq!(r.phase, g.phase, "{label}: phase diverged at step {}", g.step);
+        assert_eq!(
+            r.loss.to_bits(),
+            g.loss.to_bits(),
+            "{label}: loss diverged at step {}",
+            g.step
+        );
+        assert_eq!(
+            r.acc.to_bits(),
+            g.acc.to_bits(),
+            "{label}: acc diverged at step {}",
+            g.step
+        );
+    }
+    assert_eq!(
+        out.metrics.transition_step, golden.metrics.transition_step,
+        "{label}: transition step diverged"
+    );
+    assert_eq!(
+        out.metrics.eval_accuracy.map(f64::to_bits),
+        golden.metrics.eval_accuracy.map(f64::to_bits),
+        "{label}: eval accuracy diverged"
+    );
+    assert_eq!(out.masks, golden.masks, "{label}: masks diverged");
+    assert_eq!(out.final_params, golden.final_params, "{label}: final params diverged");
+}
+
+/// Watcher thread that disarms the registry as soon as the coordinator
+/// declares the first (post-baseline) rank death. A prob-1.0 stream
+/// would otherwise also kill every respawned incarnation; disarming from
+/// a side thread turns it into a fire-once injection. The race window is
+/// ~1 ms of polling against a respawn that needs a TCP connect plus a
+/// handshake roundtrip, so the respawned rank always runs disarmed.
+fn disarm_on_first_death(deaths_before: u64) -> std::thread::JoinHandle<bool> {
+    std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while Instant::now() < deadline {
+            if dist::stats().rank_deaths.load(Relaxed) > deaths_before {
+                fault::disarm();
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        false
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: N ranks ≡ single-process, bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thread_ranks_are_bit_identical_to_native_at_any_count() {
+    let _g = locked();
+    let golden = golden(12);
+    let before = counters();
+    for ranks in [1usize, 2, 3] {
+        let out = run_dist(micro_exp(12, ranks));
+        assert_matches_golden(&out, &golden, &format!("{ranks} rank(s)"));
+    }
+    let after = counters();
+    assert_eq!(after.deaths, before.deaths, "clean runs must not declare deaths");
+    assert_eq!(after.step_retries, before.step_retries, "clean runs must not replay steps");
+}
+
+// ---------------------------------------------------------------------------
+// rank-kill: one injected death → respawn → replay, still bit-identical.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_kill_respawns_and_replays_bit_identically() {
+    let _g = locked();
+    let golden = golden(12);
+    let _env = target_rank(1);
+    let before = counters();
+    // Rank 1 dies on its 3rd step receipt; the watcher disarms at the
+    // declared death so its respawned incarnation survives the replay.
+    let _d = arm(&["rank-kill"], 1.0, 3, 1);
+    let watcher = disarm_on_first_death(before.deaths);
+    let out = run_dist(micro_exp(12, 3));
+    assert!(watcher.join().expect("watcher thread"), "a rank death was observed");
+    let after = counters();
+    assert!(after.deaths > before.deaths, "rank-kill death was counted");
+    assert!(after.respawns > before.respawns, "respawn was counted");
+    assert_eq!(after.retired, before.retired, "budget was not exhausted");
+    assert!(after.step_retries > before.step_retries, "interrupted step was replayed");
+    assert_matches_golden(&out, &golden, "rank-kill + respawn");
+}
+
+// ---------------------------------------------------------------------------
+// Budget exhaustion: retire the rank, reshard over survivors, degrade
+// health — and *still* match the golden trajectory bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn budget_exhaustion_retires_rank_degrades_health_and_stays_deterministic() {
+    let _g = locked();
+    let golden = golden(10);
+    let _env = target_rank(1);
+    let _h = HealthGuard;
+    let mut exp = micro_exp(10, 3);
+    exp.dist.respawn_budget = 1;
+    let before = counters();
+    // No watcher: at prob 1 every rank-1 step receipt from the 3rd on
+    // fires, so the sequence is fully deterministic — incarnation 1 dies
+    // at hit 3, the respawned one at hit 4, the budget (1) is spent, and
+    // the rank is retired. Ranks 0 and 2 never trip (env gate).
+    let _d = arm(&["rank-kill"], 1.0, 3, 1);
+    let out = run_dist(exp);
+    let after = counters();
+    assert_eq!(after.deaths - before.deaths, 2, "exactly two deaths: original + respawn");
+    assert_eq!(after.respawns - before.respawns, 1, "one respawn before the budget ran out");
+    assert_eq!(after.retired - before.retired, 1, "rank 1 was retired");
+    assert_eq!(
+        resil::train_health(),
+        resil::HEALTH_DEGRADED,
+        "retirement degrades training health"
+    );
+    assert_matches_golden(&out, &golden, "degraded reshard over 2 survivors");
+}
+
+// ---------------------------------------------------------------------------
+// conn-drop: a torn frame (either direction) is a detected death, the
+// step replays from the barrier, trajectory unchanged.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conn_drop_is_survived_and_stays_bit_identical() {
+    let _g = locked();
+    let golden = golden(12);
+    let mut exp = micro_exp(12, 3);
+    // Margin for the cascade window between the first torn frame and the
+    // watcher's disarm (prob 1 means every write in that window fails).
+    exp.dist.respawn_budget = 5;
+    exp.dist.step_retries = 8;
+    let before = counters();
+    // after=10 skips the 6 handshake frames (3 Hello + 3 Welcome), so
+    // the first torn frame lands mid-step — a Params/Step/Grads or
+    // heartbeat write, whichever thread draws hit 10.
+    let _d = arm(&["conn-drop"], 1.0, 10, 1);
+    let watcher = disarm_on_first_death(before.deaths);
+    let out = run_dist(exp);
+    assert!(watcher.join().expect("watcher thread"), "a torn frame was observed as a death");
+    let after = counters();
+    assert!(after.deaths > before.deaths, "conn-drop death was counted");
+    assert!(after.step_retries > before.step_retries, "interrupted step was replayed");
+    assert_matches_golden(&out, &golden, "conn-drop + replay");
+}
+
+// ---------------------------------------------------------------------------
+// rank-slow: a stalled rank trips the *step* deadline (heartbeats keep
+// the liveness deadline fresh), is respawned, trajectory unchanged.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_slow_trips_step_deadline_and_stays_bit_identical() {
+    let _g = locked();
+    let golden = golden(10);
+    let _env = target_rank(2);
+    let mut exp = micro_exp(10, 3);
+    // The injected stall is 750 ms; a 300 ms step deadline makes the
+    // collect abandon the stalled rank while its heartbeat thread is
+    // still live — this is the deadline the heartbeat cannot mask.
+    exp.dist.step_timeout_ms = 300;
+    exp.dist.respawn_budget = 5;
+    let before = counters();
+    let _d = arm(&["rank-slow"], 1.0, 2, 1);
+    let watcher = disarm_on_first_death(before.deaths);
+    let out = run_dist(exp);
+    assert!(watcher.join().expect("watcher thread"), "the stall was observed as a death");
+    let after = counters();
+    assert!(after.deaths > before.deaths, "step-deadline death was counted");
+    assert!(after.step_retries > before.step_retries, "stalled step was replayed");
+    assert_matches_golden(&out, &golden, "rank-slow + step-deadline replay");
+}

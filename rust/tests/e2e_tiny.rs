@@ -40,6 +40,7 @@ fn tiny_exp(kind: PatternKind, steps: usize) -> ExperimentConfig {
         http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
+        dist: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

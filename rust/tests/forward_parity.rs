@@ -54,6 +54,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
+        dist: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }

@@ -516,3 +516,55 @@ fn sigterm_mid_flood_drains_with_conservation() {
 
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn slow_loris_gets_408_and_frees_the_only_conn_worker() {
+    let mut rng = Rng::new(77);
+    let engine = Arc::new(
+        Engine::start(
+            small_encoder(&mut rng),
+            ServeConfig { queue_depth: 8, max_batch: 1, workers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    // One connection worker and a short idle deadline: if the trickled
+    // request pinned the worker, the follow-up request below would hang.
+    let cfg = HttpConfig { conn_workers: 1, idle_timeout_ms: 600, ..Default::default() };
+    let srv = start_server(&engine, &cfg);
+
+    let (s, mut r) = connect(srv.addr());
+    // Trickle one header byte per 200 ms from a side thread — each sliced
+    // read on the server succeeds, so only the between-reads deadline
+    // check can fire. The main thread blocks reading the response so the
+    // 408 is consumed before any post-close write can trigger a reset.
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let trickler = {
+        let done = done.clone();
+        let mut s = s.try_clone().expect("clone trickle stream");
+        std::thread::spawn(move || {
+            for &b in b"GET /metrics HTTP/1.1\r\nHost: t".iter() {
+                if done.load(std::sync::atomic::Ordering::Relaxed) || s.write_all(&[b]).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        })
+    };
+    let (status, headers, body) = read_response(&mut r);
+    done.store(true, std::sync::atomic::Ordering::Relaxed);
+    trickler.join().expect("trickler thread");
+    assert_eq!(status, 408, "body: {}", String::from_utf8_lossy(&body));
+    let conn = headers.iter().find(|(k, _)| k == "connection").map(|(_, v)| v.as_str());
+    assert_eq!(conn, Some("close"), "a timed-out request closes the connection");
+
+    // The lone worker must be reclaimed: a fresh connection gets a full
+    // /metrics exposition instead of queueing behind the loris.
+    let (status, text) = http_get(srv.addr(), "/metrics");
+    assert_eq!(status, 200, "worker not reclaimed after the 408");
+    // No request ever completed admission, so the serve counters are
+    // all intact — the loris burned only the idle deadline.
+    assert_eq!(metric_value(&text, "spion_serve_served_total"), 0.0);
+
+    srv.stop();
+    engine.shutdown();
+}

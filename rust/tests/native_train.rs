@@ -145,6 +145,7 @@ fn micro_exp(kind: PatternKind, steps: usize, workers: usize) -> ExperimentConfi
         http: Default::default(),
         obs: Default::default(),
         resil: Default::default(),
+        dist: Default::default(),
         artifacts_dir: "artifacts".into(),
     }
 }
@@ -260,6 +261,7 @@ fn native_and_pjrt_loss_trajectories_agree_qualitatively() {
             http: Default::default(),
             obs: Default::default(),
             resil: Default::default(),
+            dist: Default::default(),
             artifacts_dir: "artifacts".into(),
         }
     };
